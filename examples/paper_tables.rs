@@ -1,0 +1,18 @@
+//! Regenerate every table and figure of the paper's evaluation into
+//! `results/` (the DESIGN.md §5 experiment index maps ids to artifacts).
+//!
+//! ```sh
+//! cargo run --release --example paper_tables
+//! ```
+
+fn main() -> anyhow::Result<()> {
+    let out = std::path::Path::new("results");
+    flashsampling::repro::run_all(out)?;
+    // Statistical verifications (real sampling, §4.6).
+    for id in flashsampling::repro::STATS {
+        let md = flashsampling::repro::run(id, out)?;
+        println!("=== {id} ===\n{md}");
+    }
+    println!("wrote results/*.md");
+    Ok(())
+}

@@ -1,0 +1,28 @@
+
+use flashsampling::coordinator::{Engine, EngineConfig, Request, SamplingParams};
+
+fn main() -> anyhow::Result<()> {
+    let mut engine = Engine::new("artifacts", EngineConfig::default())?;
+    for i in 0..8u64 {
+        engine.submit(Request {
+            id: i,
+            prompt: vec![1 + i as i32; 8],
+            params: SamplingParams { max_new_tokens: 200, ..Default::default() },
+        })?;
+    }
+    for _ in 0..2 { engine.step()?; } // prefill
+    let mut times = Vec::new();
+    for _ in 0..20 {
+        let t = std::time::Instant::now();
+        engine.step()?;
+        times.push(t.elapsed().as_micros() as u64);
+    }
+    println!("per-step us: {times:?}");
+    let n = 20u64;
+    let mut keys: Vec<_> = engine.metrics.counters.iter().collect();
+    keys.sort();
+    for (k, v) in keys {
+        if k.ends_with("_us") { println!("{k}: {} us/step(avg over bumps)", v / n); }
+    }
+    Ok(())
+}

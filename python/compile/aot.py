@@ -1,0 +1,362 @@
+"""AOT lowering: JAX/Pallas -> HLO text artifacts + manifest + weights.
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the `xla` crate's bundled
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs under artifacts/:
+  manifest.json            — artifact + weight registry (the Rust runtime's
+                             source of truth; schema documented below)
+  <name>.hlo.txt           — one XLA computation per (function, shape) pair
+  weights/<param>.bin      — raw little-endian f32 tensors, canonical order
+
+Manifest schema:
+  {
+    "model": {"vocab":…, "d_model":…, "n_layers":…, "n_heads":…, "ffn":…,
+              "max_seq":…, "param_order": [names…]},
+    "artifacts": [
+      {"name": str, "file": str, "kind": str,
+       "inputs":  [{"name": str, "shape": [ints], "dtype": "f32"|"i32"|"u32"}],
+       "outputs": [{"name": str, "shape": [ints], "dtype": …}],
+       "meta": {free-form ints/floats: B, D, V, tile_v, shard, n_shards, …}},
+      …],
+    "weights": [{"name": str, "file": str, "shape": [ints], "dtype": "f32"}]
+  }
+
+Python runs once at build time (`make artifacts`); nothing here is imported
+on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as model_lib
+from compile.kernels import flash_sampling as fs
+from compile.kernels import ref as kref
+
+# ---------------------------------------------------------------------------
+# Shape catalogue — the fixed-shape executables the coordinator can launch.
+# ---------------------------------------------------------------------------
+
+SERVE_CFG = model_lib.ModelConfig()
+
+# Decode batch buckets: the continuous batcher pads the running batch up to
+# the nearest bucket (vLLM uses CUDA-graph capture sizes the same way).
+DECODE_BUCKETS = (1, 2, 4, 8)
+PREFILL_T_BUCKETS = (16, 64)
+PREFILL_B = 4  # prefill executes fixed [PREFILL_B, T] prompt batches
+
+# Standalone LM-head sampling kernels at benchmark shapes (Rust microbench
+# uses these to compare fused vs baseline end-to-end through PJRT).
+BENCH_SHAPES = (
+    # (B, D, V, tile_v)
+    (1, 256, 2048, 512),
+    (4, 256, 2048, 512),
+    (16, 256, 2048, 512),
+    (4, 512, 8192, 1024),
+    (16, 512, 8192, 1024),
+)
+
+# Tensor-parallel shard kernels (vocab sharding) for the tp runtime.
+TP_DEGREES = (2, 4)
+TP_SHAPES = ((4, 256, 2048, 512),)
+
+
+def _dt(x) -> str:
+    return {np.dtype(np.float32): "f32", np.dtype(np.int32): "i32",
+            np.dtype(np.uint32): "u32"}[np.dtype(x)]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+class Builder:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.artifacts = []
+        os.makedirs(out_dir, exist_ok=True)
+        os.makedirs(os.path.join(out_dir, "weights"), exist_ok=True)
+
+    def add(self, name: str, kind: str, fn, specs: Sequence[jax.ShapeDtypeStruct],
+            input_names: Sequence[str], meta: dict):
+        """Lower `fn` at `specs`, write HLO text, record manifest entry.
+
+        keep_unused=True: the Rust runtime passes every input positionally
+        (the manifest ABI), so XLA must not prune parameters a particular
+        graph doesn't read (e.g. prefill never touches lm_head).
+        """
+        lowered = jax.jit(fn, keep_unused=True).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        out_tree = jax.eval_shape(fn, *specs)
+        outputs = []
+        for i, leaf in enumerate(jax.tree_util.tree_leaves(out_tree)):
+            outputs.append(
+                {"name": f"out{i}", "shape": list(leaf.shape), "dtype": _dt(leaf.dtype)}
+            )
+        self.artifacts.append(
+            {
+                "name": name,
+                "file": fname,
+                "kind": kind,
+                "inputs": [
+                    {"name": n, "shape": list(s.shape), "dtype": _dt(s.dtype)}
+                    for n, s in zip(input_names, specs)
+                ],
+                "outputs": outputs,
+                "meta": meta,
+            }
+        )
+        print(f"  [aot] {name}: {len(text)} chars, {len(specs)} inputs")
+
+
+def export_weights(builder: Builder, cfg: model_lib.ModelConfig, seed: int):
+    params = model_lib.init_params(cfg, seed)
+    entries = []
+    for name in cfg.param_order():
+        arr = np.asarray(params[name], np.float32)
+        fname = os.path.join("weights", name.replace("/", "_") + ".bin")
+        arr.tofile(os.path.join(builder.out_dir, fname))
+        entries.append(
+            {"name": name, "file": fname, "shape": list(arr.shape), "dtype": "f32"}
+        )
+    return params, entries
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def u32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.uint32)
+
+
+def build_sampler_artifacts(b: Builder):
+    """Standalone LM-head+sampling kernels at benchmark shapes."""
+    for (bsz, d, v, tile_v) in BENCH_SHAPES:
+        tag = f"b{bsz}_d{d}_v{v}"
+        meta = {"B": bsz, "D": d, "V": v, "tile_v": tile_v}
+
+        def fused(h, w, seed, step, tau, _tile_v=tile_v):
+            out = fs.flash_sample(h, w, seed, step[0], tau[0], tile_v=_tile_v)
+            return out.sample
+
+        def fused_logz(h, w, seed, step, tau, _tile_v=tile_v):
+            out = fs.flash_sample(
+                h, w, seed, step[0], tau[0], tile_v=_tile_v, want_log_z=True
+            )
+            return out.sample, out.log_z
+
+        def baseline(h, w, seed, step, tau):
+            return kref.multinomial_sample(h, w, seed, step[0], tau[0])
+
+        def gumbel_ref(h, w, seed, step, tau):
+            # FI2-style: materialized logits + Gumbel-Max (no fusion).
+            return kref.gumbel_max_sample(h, w, seed, step[0], tau[0])
+
+        def store_logits(h, w, seed, step, tau, _tile_v=tile_v):
+            s, logits = fs.flash_sample_store_logits(
+                h, w, seed, step[0], tau[0], tile_v=_tile_v
+            )
+            return s, logits
+
+        specs = [f32(bsz, d), f32(v, d), u32(2), u32(1), f32(1)]
+        names = ["h", "w", "seed", "step", "tau"]
+        b.add(f"flash_sample_{tag}", "flash_sample", fused, specs, names, meta)
+        b.add(f"flash_sample_logz_{tag}", "flash_sample_logz", fused_logz, specs,
+              names, meta)
+        b.add(f"baseline_multinomial_{tag}", "baseline_multinomial", baseline,
+              specs, names, meta)
+        b.add(f"baseline_gumbel_{tag}", "baseline_gumbel", gumbel_ref, specs,
+              names, meta)
+        if bsz <= 4:  # ablation artifact only at small B (logits output is big)
+            b.add(f"flash_sample_store_{tag}", "flash_sample_store", store_logits,
+                  specs, names, {**meta, "ablation": "logits_store"})
+
+
+def build_tp_artifacts(b: Builder):
+    """Per-rank vocab-shard kernels (Alg. I.4).  One artifact per TP degree;
+    the shard offset is a runtime input so all ranks share the executable."""
+    for (bsz, d, v, tile_v) in TP_SHAPES:
+        for n in TP_DEGREES:
+            vs = v // n
+            tag = f"b{bsz}_d{d}_v{v}_tp{n}"
+
+            def shard(h, w_shard, off, seed, step, tau, _tile_v=tile_v):
+                m, local, lmass = fs.shard_candidates(
+                    h, w_shard, off[0], seed, step[0], tau[0], tile_v=_tile_v
+                )
+                return m, local, lmass
+
+            b.add(
+                f"shard_sample_{tag}",
+                "shard_sample",
+                shard,
+                [f32(bsz, d), f32(vs, d), i32(1), u32(2), u32(1), f32(1)],
+                ["h", "w_shard", "shard_offset", "seed", "step", "tau"],
+                {"B": bsz, "D": d, "V": v, "V_shard": vs, "n_shards": n,
+                 "tile_v": tile_v},
+            )
+
+            def shard_logits(h, w_shard):
+                # The all-gather baseline's per-rank payload: the FULL local
+                # logits shard [B, V/n] (what FlashSampling's O(1) summaries
+                # replace).  Materialized deliberately.
+                return (jnp.matmul(h, w_shard.T),)
+
+            b.add(
+                f"shard_logits_{tag}",
+                "shard_logits",
+                shard_logits,
+                [f32(bsz, d), f32(vs, d)],
+                ["h", "w_shard"],
+                {"B": bsz, "D": d, "V": v, "V_shard": vs, "n_shards": n},
+            )
+
+
+def build_model_artifacts(b: Builder, cfg: model_lib.ModelConfig):
+    """The serving model: prefill, fused decode+sample, baseline decode."""
+    n_params = len(cfg.param_order())
+    shapes = cfg.param_shapes()
+    param_specs = [f32(*shapes[n]) for n in cfg.param_order()]
+    kv = f32(cfg.n_layers, 0, cfg.n_heads, cfg.max_seq, cfg.head_dim)  # B patched
+
+    def kv_spec(bsz):
+        return f32(cfg.n_layers, bsz, cfg.n_heads, cfg.max_seq, cfg.head_dim)
+
+    for bsz in DECODE_BUCKETS:
+        meta = {"B": bsz, "D": cfg.d_model, "V": cfg.vocab}
+
+        def fused(*args, _b=bsz):
+            params = dict(zip(cfg.param_order(), args[:n_params]))
+            kv_k, kv_v, pos, token, seed, step, tau = args[n_params:]
+            return model_lib.decode_and_sample(
+                cfg, params, kv_k, kv_v, pos, token, seed, step[0], tau[0]
+            )
+
+        def baseline(*args, _b=bsz):
+            params = dict(zip(cfg.param_order(), args[:n_params]))
+            kv_k, kv_v, pos, token, seed, step, tau = args[n_params:]
+            return model_lib.decode_and_sample_baseline(
+                cfg, params, kv_k, kv_v, pos, token, seed, step[0], tau[0]
+            )
+
+        specs = param_specs + [
+            kv_spec(bsz), kv_spec(bsz), i32(bsz), i32(bsz), u32(2), u32(1), f32(1)
+        ]
+        names = list(cfg.param_order()) + [
+            "kv_k", "kv_v", "pos", "token", "seed", "step", "tau"
+        ]
+        b.add(f"decode_sample_b{bsz}", "decode_sample", fused, specs, names, meta)
+        b.add(f"decode_baseline_b{bsz}", "decode_baseline", baseline, specs,
+              names, meta)
+
+    for t in PREFILL_T_BUCKETS:
+        def pre(*args, _t=t):
+            params = dict(zip(cfg.param_order(), args[:n_params]))
+            tokens, lengths = args[n_params:]
+            return model_lib.prefill(cfg, params, tokens, lengths)
+
+        b.add(
+            f"prefill_b{PREFILL_B}_t{t}",
+            "prefill",
+            pre,
+            param_specs + [i32(PREFILL_B, t), i32(PREFILL_B)],
+            list(cfg.param_order()) + ["tokens", "lengths"],
+            {"B": PREFILL_B, "T": t, "D": cfg.d_model, "V": cfg.vocab},
+        )
+
+    # First-token sampler (hidden -> token) shared across prefill buckets.
+    def first_token(hidden, lm_head, seed, step, tau):
+        return fs.flash_sample(hidden, lm_head, seed, step[0], tau[0]).sample
+
+    b.add(
+        f"sample_hidden_b{PREFILL_B}",
+        "sample_hidden",
+        first_token,
+        [f32(PREFILL_B, cfg.d_model), f32(cfg.vocab, cfg.d_model), u32(2),
+         u32(1), f32(1)],
+        ["hidden", "lm_head", "seed", "step", "tau"],
+        {"B": PREFILL_B, "D": cfg.d_model, "V": cfg.vocab},
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output dir")
+    ap.add_argument("--seed", type=int, default=0, help="weight init seed")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: samplers,tp,model")
+    args = ap.parse_args()
+
+    only = set(args.only.split(",")) if args.only else {"samplers", "tp", "model"}
+    b = Builder(args.out)
+    print(f"[aot] building artifacts in {args.out} (sections: {sorted(only)})")
+
+    _, weight_entries = export_weights(b, SERVE_CFG, args.seed)
+    if "samplers" in only:
+        build_sampler_artifacts(b)
+    if "tp" in only:
+        build_tp_artifacts(b)
+    if "model" in only:
+        build_model_artifacts(b, SERVE_CFG)
+
+    # --only partial builds merge into the existing manifest (keyed by
+    # artifact name) so a subset rebuild never drops other entries.
+    merged = {a["name"]: a for a in []}
+    manifest_path = os.path.join(args.out, "manifest.json")
+    if args.only and os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            old = json.load(f)
+        merged = {a["name"]: a for a in old.get("artifacts", [])}
+    for a in b.artifacts:
+        merged[a["name"]] = a
+    all_artifacts = sorted(merged.values(), key=lambda a: a["name"])
+
+    manifest = {
+        "model": {
+            "vocab": SERVE_CFG.vocab,
+            "d_model": SERVE_CFG.d_model,
+            "n_layers": SERVE_CFG.n_layers,
+            "n_heads": SERVE_CFG.n_heads,
+            "ffn": SERVE_CFG.ffn,
+            "max_seq": SERVE_CFG.max_seq,
+            "param_order": SERVE_CFG.param_order(),
+            "decode_buckets": list(DECODE_BUCKETS),
+            "prefill_t_buckets": list(PREFILL_T_BUCKETS),
+            "prefill_b": PREFILL_B,
+            "weight_seed": args.seed,
+        },
+        "artifacts": all_artifacts,
+        "weights": weight_entries,
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote manifest with {len(all_artifacts)} artifacts, "
+          f"{len(weight_entries)} weight tensors")
+
+
+if __name__ == "__main__":
+    main()

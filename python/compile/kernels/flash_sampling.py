@@ -1,0 +1,439 @@
+"""FlashSampling fused Pallas kernel (paper Algorithm 1).
+
+Stage 1 runs on a (batch-tile x vocab-tile) grid.  Each grid cell:
+  1. computes the logit tile Y[bt, vt] = H[bt, :] @ W[vt, :]^T on chip,
+     accumulating in f32 (paper Appendix C),
+  2. applies deterministic transforms (temperature, optional bias/mask),
+  3. draws position-indexed Gumbel noise with Philox4x32 (Appendix C/J),
+  4. reduces the tile to one (max perturbed score, global argmax) candidate
+     per row and writes only that candidate to the output buffers.
+
+Stage 2 is a tiny argmax over the [B, n_vocab_tiles] candidate buffer
+(Lemma D.5 makes this pathwise exact).  The full [B, V] logits tensor is
+never materialized — the HBM side of the kernel writes O(B * n_tiles).
+
+Hardware adaptation (DESIGN.md §8): the paper's CUDA threadblock/SMEM tiling
+becomes a Pallas grid over BlockSpecs; the HBM->VMEM pipeline plays the role
+of cp.async staging, the MXU does the f32-accumulated matmul, and the VPU
+does the epilogue (transform + Gumbel + argmax).  `interpret=True` is
+mandatory on this CPU-only box — real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute.
+
+Grouped outputs: with `want_lmass=True` the kernel additionally emits the
+per-tile log-mass L_t = logsumexp(Y[b, tile]) used by the grouped / online /
+distributed variants (Lemmas D.1-D.3) and by the optional log-normalizer
+output (Appendix L).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile import philox
+
+NEG_INF = float('-inf')
+
+# Default tile shapes.  On a real TPU the vocab tile is sized so that the
+# W tile (tile_v x D bf16) plus the H tile fits in VMEM with room for
+# double-buffering; see DESIGN.md §7 and `vmem_footprint_bytes` below.
+DEFAULT_TILE_V = 512
+DEFAULT_TILE_B = 8
+
+
+class FlashSampleOut(NamedTuple):
+    """Outputs of the fused two-stage sampler."""
+
+    sample: jax.Array  # [B] i32 — exact sample from Cat(softmax(transform(Y)))
+    max_score: jax.Array  # [B] f32 — winning perturbed score (diagnostic)
+    log_z: Optional[jax.Array]  # [B] f32 log-normalizer, if want_lmass
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def vmem_footprint_bytes(
+    tile_b: int, tile_v: int, d: int, in_dtype=jnp.bfloat16, buffers: int = 2
+) -> int:
+    """Estimated VMEM bytes for one grid cell (perf model, DESIGN.md §7).
+
+    W tile dominates: tile_v x D input-dtype elements; H tile is tile_b x D;
+    the f32 accumulator is tile_b x tile_v; candidate outputs are negligible.
+    `buffers=2` accounts for Pallas double-buffering of the streamed W tile.
+    """
+    itemsize = jnp.dtype(in_dtype).itemsize
+    w_tile = tile_v * d * itemsize * buffers
+    h_tile = tile_b * d * itemsize
+    acc = tile_b * tile_v * 4
+    epilogue = tile_b * tile_v * 4  # perturbed scores before the reduce
+    return w_tile + h_tile + acc + epilogue
+
+
+def _stage1_kernel(
+    h_ref,
+    w_ref,
+    seed_ref,
+    step_ref,
+    tau_ref,
+    bias_ref,
+    m_ref,
+    idx_ref,
+    lmass_ref,
+    logits_ref,
+    *,
+    vocab: int,
+    tile_v: int,
+    want_lmass: bool,
+    store_logits: bool,
+):
+    """One (batch-tile, vocab-tile) grid cell of Stage 1."""
+    vt = pl.program_id(1)
+    bt = pl.program_id(0)
+    tile_b = h_ref.shape[0]
+
+    # --- tiled matmul over D, f32 accumulation, kept on chip (Alg.1 line 1).
+    h = h_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    y = jax.lax.dot_general(
+        h,
+        w,
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # [tile_b, tile_v]
+
+    # --- deterministic transforms (Alg.1 line 3).
+    tau = tau_ref[0]
+    y = y / tau + bias_ref[...][None, :]
+
+    # Global coordinates of this tile's elements.
+    i_global = (vt * tile_v + jnp.arange(tile_v, dtype=jnp.int32))[None, :]
+    b_global = (bt * tile_b + jnp.arange(tile_b, dtype=jnp.int32))[:, None]
+    valid = i_global < vocab  # vocab padding never wins nor carries mass
+    y = jnp.where(valid, y, NEG_INF)
+
+    if store_logits:
+        # Logits-store ablation (paper Appendix K): one flag writes the
+        # [B, V] tile back to HBM with no other change to the kernel.
+        logits_ref[...] = y
+
+    # --- position-indexed Gumbel perturbation (Alg.1 lines 4-5).
+    g = philox.gumbel_at(
+        i_global.astype(jnp.uint32),
+        jnp.broadcast_to(b_global, (tile_b, tile_v)).astype(jnp.uint32),
+        step_ref[0],
+        seed_ref[0],
+        seed_ref[1],
+    )
+    s = jnp.where(valid, y + g, NEG_INF)
+
+    # --- tile-local reduction: one candidate per row (Alg.1 lines 7-9).
+    m_ref[...] = jnp.max(s, axis=1, keepdims=True)
+    local = jnp.argmax(s, axis=1).astype(jnp.int32)
+    idx_ref[...] = (vt * tile_v + local)[:, None]
+
+    if want_lmass:
+        # Group log-mass L_t = logsumexp(y) over the tile (Lemma D.1).
+        ymax = jnp.max(y, axis=1, keepdims=True)
+        safe = jnp.where(jnp.isfinite(ymax), ymax, 0.0)
+        lse = safe[:, 0] + jnp.log(jnp.sum(jnp.exp(y - safe), axis=1))
+        lmass_ref[...] = jnp.where(jnp.isfinite(ymax[:, 0]), lse, NEG_INF)[:, None]
+
+
+def stage1_candidates(
+    h,
+    w,
+    seed,
+    step=0,
+    temperature=1.0,
+    bias=None,
+    *,
+    tile_b: int = DEFAULT_TILE_B,
+    tile_v: int = DEFAULT_TILE_V,
+    want_lmass: bool = False,
+    store_logits: bool = False,
+    interpret: bool = True,
+):
+    """Run Stage 1: returns per-vocab-tile candidates.
+
+    Args:
+      h: [B, D] hidden states (any float dtype; accumulated in f32).
+      w: [V, D] LM-head weights.
+      seed: uint32[2] RNG key.
+      step: int32 decode step (fresh noise per autoregressive step).
+      temperature: softmax temperature tau > 0 (scalar or 0-d array).
+      bias: optional [V] additive logit bias (also used for -inf masking).
+
+    Returns:
+      (m [B, n_tiles] f32, idx [B, n_tiles] i32, lmass [B, n_tiles] f32|None,
+       logits [B, n_tiles*tile_v] f32|None)
+    """
+    batch, d = h.shape
+    vocab, d2 = w.shape
+    assert d == d2, (d, d2)
+    tile_b = min(tile_b, batch)
+    tile_v = min(tile_v, vocab)
+    nb = _ceil_div(batch, tile_b)
+    nv = _ceil_div(vocab, tile_v)
+
+    # Pad rows/vocab up to tile multiples.  Padded vocab entries are masked
+    # inside the kernel via the i_global < vocab predicate; padded batch rows
+    # are dropped after the call.
+    pb = nb * tile_b - batch
+    pv = nv * tile_v - vocab
+    if pb:
+        h = jnp.pad(h, ((0, pb), (0, 0)))
+    if pv:
+        w = jnp.pad(w, ((0, pv), (0, 0)))
+    if bias is None:
+        bias_arr = jnp.zeros((nv * tile_v,), jnp.float32)
+    else:
+        bias_arr = jnp.pad(bias.astype(jnp.float32), (0, pv))
+
+    seed = jnp.asarray(seed, jnp.uint32).reshape(2)
+    step_arr = jnp.asarray(step, jnp.uint32).reshape(1)
+    tau_arr = jnp.asarray(temperature, jnp.float32).reshape(1)
+
+    kernel = functools.partial(
+        _stage1_kernel,
+        vocab=vocab,
+        tile_v=tile_v,
+        want_lmass=want_lmass,
+        store_logits=store_logits,
+    )
+
+    out_shapes = [
+        jax.ShapeDtypeStruct((nb * tile_b, nv), jnp.float32),  # m
+        jax.ShapeDtypeStruct((nb * tile_b, nv), jnp.int32),  # idx
+        jax.ShapeDtypeStruct((nb * tile_b, nv), jnp.float32),  # lmass
+        jax.ShapeDtypeStruct((nb * tile_b, nv * tile_v), jnp.float32),  # logits
+    ]
+    out_specs = [
+        pl.BlockSpec((tile_b, 1), lambda bi, vi: (bi, vi)),
+        pl.BlockSpec((tile_b, 1), lambda bi, vi: (bi, vi)),
+        pl.BlockSpec((tile_b, 1), lambda bi, vi: (bi, vi)),
+        pl.BlockSpec((tile_b, tile_v), lambda bi, vi: (bi, vi)),
+    ]
+
+    m, idx, lmass, logits = pl.pallas_call(
+        kernel,
+        grid=(nb, nv),
+        in_specs=[
+            pl.BlockSpec((tile_b, d), lambda bi, vi: (bi, 0)),  # H row tile
+            pl.BlockSpec((tile_v, d), lambda bi, vi: (vi, 0)),  # W vocab tile
+            pl.BlockSpec((2,), lambda bi, vi: (0,)),  # seed
+            pl.BlockSpec((1,), lambda bi, vi: (0,)),  # step
+            pl.BlockSpec((1,), lambda bi, vi: (0,)),  # tau
+            pl.BlockSpec((tile_v,), lambda bi, vi: (vi,)),  # bias tile
+        ],
+        out_shape=out_shapes,
+        out_specs=out_specs,
+        interpret=interpret,
+    )(h, w, seed, step_arr, tau_arr, bias_arr)
+
+    m = m[:batch]
+    idx = idx[:batch]
+    lmass = lmass[:batch] if want_lmass else None
+    logits = logits[:batch, :vocab] if store_logits else None
+    return m, idx, lmass, logits
+
+
+def stage2_reduce(m, idx):
+    """Stage 2: argmax over the small candidate buffer (Alg.1 lines 17-19)."""
+    t_star = jnp.argmax(m, axis=1)
+    sample = jnp.take_along_axis(idx, t_star[:, None], axis=1)[:, 0]
+    best = jnp.take_along_axis(m, t_star[:, None], axis=1)[:, 0]
+    return sample.astype(jnp.int32), best
+
+
+def flash_sample(
+    h,
+    w,
+    seed,
+    step=0,
+    temperature=1.0,
+    bias=None,
+    *,
+    tile_b: int = DEFAULT_TILE_B,
+    tile_v: int = DEFAULT_TILE_V,
+    want_log_z: bool = False,
+    interpret: bool = True,
+) -> FlashSampleOut:
+    """Exact fused sampling from Cat(softmax(transform(H @ W^T))).
+
+    Pathwise identical to `ref.gumbel_max_sample` with the same seed/step
+    (Lemma D.5): the Philox streams are indexed by global (b, i), so every
+    tiling produces the same perturbed scores and hence the same argmax.
+    """
+    m, idx, lmass, _ = stage1_candidates(
+        h,
+        w,
+        seed,
+        step,
+        temperature,
+        bias,
+        tile_b=tile_b,
+        tile_v=tile_v,
+        want_lmass=want_log_z,
+        interpret=interpret,
+    )
+    sample, best = stage2_reduce(m, idx)
+    log_z = None
+    if want_log_z:
+        # logsumexp over the per-tile log-masses (Appendix L).
+        mx = jnp.max(lmass, axis=1, keepdims=True)
+        safe = jnp.where(jnp.isfinite(mx), mx, 0.0)
+        log_z = safe[:, 0] + jnp.log(jnp.sum(jnp.exp(lmass - safe), axis=1))
+    return FlashSampleOut(sample=sample, max_score=best, log_z=log_z)
+
+
+def flash_sample_store_logits(
+    h,
+    w,
+    seed,
+    step=0,
+    temperature=1.0,
+    *,
+    tile_b: int = DEFAULT_TILE_B,
+    tile_v: int = DEFAULT_TILE_V,
+    interpret: bool = True,
+):
+    """Appendix K ablation: identical kernel with the logits store enabled.
+
+    Returns (sample [B] i32, logits [B, V] f32).  Used to measure/emulate the
+    extra 2B/D HBM traffic of materializing Y with no other kernel change.
+    """
+    m, idx, _, logits = stage1_candidates(
+        h,
+        w,
+        seed,
+        step,
+        temperature,
+        tile_b=tile_b,
+        tile_v=tile_v,
+        store_logits=True,
+        interpret=interpret,
+    )
+    sample, _ = stage2_reduce(m, idx)
+    return sample, logits
+
+
+def shard_candidates(
+    h,
+    w_shard,
+    shard_offset,
+    seed,
+    step=0,
+    temperature=1.0,
+    *,
+    tile_b: int = DEFAULT_TILE_B,
+    tile_v: int = DEFAULT_TILE_V,
+    interpret: bool = True,
+):
+    """Per-rank kernel for the tensor-parallel variant (Alg. I.4 / §D.2).
+
+    The rank holds a vocabulary shard `w_shard` covering global indices
+    [shard_offset, shard_offset + V_shard).  Returns the rank-local summary
+    that is fanned out to peers — O(1) scalars per row, never the shard
+    logits:
+
+      m      [B] f32 — max perturbed score within the shard
+      idx    [B] i32 — *global* index attaining it
+      lmass  [B] f32 — shard log-mass L_k = logsumexp(shard logits)
+
+    Exactness: Philox positions are global (shard_offset + local i), so
+    max-merging (m, idx) across ranks is pathwise identical to a single-GPU
+    FlashSampling pass; alternatively the (local sample, lmass) pair supports
+    the distribution-level merge of Lemma D.2 with fresh outer Gumbels.
+    """
+    shard_offset = jnp.asarray(shard_offset, jnp.int32).reshape(())
+    vocab_shard = w_shard.shape[0]
+
+    # Reuse the stage-1 kernel with the global index shift folded into the
+    # Philox counter by offsetting i_global; implement by passing a bias of
+    # zeros and shifting indices post-hoc is NOT valid (RNG must see global
+    # positions), so we inline a shifted variant here.
+    batch, d = h.shape
+    tile_b = min(tile_b, batch)
+    tile_v = min(tile_v, vocab_shard)
+    nb = _ceil_div(batch, tile_b)
+    nv = _ceil_div(vocab_shard, tile_v)
+    pb = nb * tile_b - batch
+    pv = nv * tile_v - vocab_shard
+    if pb:
+        h = jnp.pad(h, ((0, pb), (0, 0)))
+    if pv:
+        w_shard = jnp.pad(w_shard, ((0, pv), (0, 0)))
+
+    seed = jnp.asarray(seed, jnp.uint32).reshape(2)
+    step_arr = jnp.asarray(step, jnp.uint32).reshape(1)
+    tau_arr = jnp.asarray(temperature, jnp.float32).reshape(1)
+    off_arr = jnp.asarray(shard_offset, jnp.int32).reshape(1)
+
+    def kernel(h_ref, w_ref, seed_ref, step_ref, tau_ref, off_ref, m_ref, idx_ref, lm_ref):
+        vt = pl.program_id(1)
+        bt = pl.program_id(0)
+        tb = h_ref.shape[0]
+        tv = w_ref.shape[0]
+        hh = h_ref[...].astype(jnp.float32)
+        ww = w_ref[...].astype(jnp.float32)
+        y = jax.lax.dot_general(
+            hh, ww, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        y = y / tau_ref[0]
+        i_local = (vt * tv + jnp.arange(tv, dtype=jnp.int32))[None, :]
+        i_global = i_local + off_ref[0]
+        b_global = (bt * tb + jnp.arange(tb, dtype=jnp.int32))[:, None]
+        valid = i_local < vocab_shard
+        y = jnp.where(valid, y, NEG_INF)
+        g = philox.gumbel_at(
+            i_global.astype(jnp.uint32),
+            jnp.broadcast_to(b_global, (tb, tv)).astype(jnp.uint32),
+            step_ref[0],
+            seed_ref[0],
+            seed_ref[1],
+        )
+        s = jnp.where(valid, y + g, NEG_INF)
+        m_ref[...] = jnp.max(s, axis=1, keepdims=True)
+        local = jnp.argmax(s, axis=1).astype(jnp.int32)
+        idx_ref[...] = (i_global[0, 0] + local)[:, None]
+        ymax = jnp.max(y, axis=1, keepdims=True)
+        safe = jnp.where(jnp.isfinite(ymax), ymax, 0.0)
+        lse = safe[:, 0] + jnp.log(jnp.sum(jnp.exp(y - safe), axis=1))
+        lm_ref[...] = jnp.where(jnp.isfinite(ymax[:, 0]), lse, NEG_INF)[:, None]
+
+    out_shapes = [
+        jax.ShapeDtypeStruct((nb * tile_b, nv), jnp.float32),
+        jax.ShapeDtypeStruct((nb * tile_b, nv), jnp.int32),
+        jax.ShapeDtypeStruct((nb * tile_b, nv), jnp.float32),
+    ]
+    spec_col = pl.BlockSpec((tile_b, 1), lambda bi, vi: (bi, vi))
+    m, idx, lm = pl.pallas_call(
+        kernel,
+        grid=(nb, nv),
+        in_specs=[
+            pl.BlockSpec((tile_b, d), lambda bi, vi: (bi, 0)),
+            pl.BlockSpec((tile_v, d), lambda bi, vi: (vi, 0)),
+            pl.BlockSpec((2,), lambda bi, vi: (0,)),
+            pl.BlockSpec((1,), lambda bi, vi: (0,)),
+            pl.BlockSpec((1,), lambda bi, vi: (0,)),
+            pl.BlockSpec((1,), lambda bi, vi: (0,)),
+        ],
+        out_shape=out_shapes,
+        out_specs=[spec_col, spec_col, spec_col],
+        interpret=interpret,
+    )(h, w_shard, seed, step_arr, tau_arr, off_arr)
+
+    m = m[:batch]
+    idx = idx[:batch]
+    lm = lm[:batch]
+    # Reduce this rank's tiles to the per-rank summary.
+    sample, best = stage2_reduce(m, idx)
+    mx = jnp.max(lm, axis=1, keepdims=True)
+    safe = jnp.where(jnp.isfinite(mx), mx, 0.0)
+    lmass = safe[:, 0] + jnp.log(jnp.sum(jnp.exp(lm - safe), axis=1))
+    return best, sample, lmass

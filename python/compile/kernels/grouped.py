@@ -1,0 +1,159 @@
+"""Group-Gumbel-Max variants (paper §D.1-D.4, Algorithms I.2-I.4).
+
+These are the *distribution-level* exact variants: the vocabulary is
+partitioned into groups (vocab tiles, streaming chunks, or tensor-parallel
+shards), each group yields an exact local sample plus its log-mass
+L_k = logsumexp(group logits), and a hierarchical factorization (Lemma D.2)
+or a binary merge rule (Lemma D.3) recombines them into an exact sample from
+the full categorical.
+
+They are used here as reference implementations (tested by chi-squared
+goodness-of-fit in python/tests/test_grouped.py) and as the specification for
+the Rust implementations in rust/src/sampling/{grouped.rs,online.rs,
+distributed.rs}, which run on the request path.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from compile import philox
+from compile.kernels import ref
+
+
+def _logsumexp(x, axis=None, keepdims=False):
+    m = jnp.max(x, axis=axis, keepdims=True)
+    safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    out = safe + jnp.log(jnp.sum(jnp.exp(x - safe), axis=axis, keepdims=True))
+    out = jnp.where(jnp.isfinite(m), out, -jnp.inf)
+    if not keepdims and axis is not None:
+        out = jnp.squeeze(out, axis=axis)
+    return out
+
+
+def parallel_group_sample(h, w, seed, step=0, group_size=64, temperature=1.0):
+    """Algorithm I.2: parallel Group-Gumbel-Max.
+
+    Each group k computes an exact local sample z_k (within-group Gumbel-Max)
+    and its log-mass L_k; an outer Gumbel-Max over {L_k} picks the winning
+    group (max-stability, Lemma D.1).  Exact by Lemma D.2.
+
+    Returns (sample [B] i32, log_z [B] f32).
+    """
+    y = ref.logits(h, w, temperature)
+    batch, vocab = y.shape
+    assert vocab % group_size == 0, "reference impl wants equal groups"
+    m = vocab // group_size
+    yg = y.reshape(batch, m, group_size)
+
+    # Within-group Gumbel-Max using globally indexed noise positions.
+    g = ref.gumbel_noise(batch, vocab, step, seed[0], seed[1]).reshape(
+        batch, m, group_size
+    )
+    local = jnp.argmax(yg + g, axis=2)  # [B, m]
+
+    # Group log-masses and the outer selection with *fresh* Gumbels
+    # (STREAM_GROUP_SELECT stream, counter i = group index).
+    lmass = _logsumexp(yg, axis=2)  # [B, m]
+    k = jnp.arange(m, dtype=jnp.uint32)[None, :]
+    b = jnp.arange(batch, dtype=jnp.uint32)[:, None]
+    g_outer = -jnp.log(
+        -jnp.log(
+            philox.uniform_at(
+                k, b, step, seed[0], seed[1], stream=philox.STREAM_GROUP_SELECT
+            )
+        )
+    )
+    k_star = jnp.argmax(lmass + g_outer, axis=1)  # [B]
+    z_local = jnp.take_along_axis(local, k_star[:, None], axis=1)[:, 0]
+    sample = k_star * group_size + z_local
+    log_z = _logsumexp(lmass, axis=1)
+    return sample.astype(jnp.int32), log_z
+
+
+def online_group_sample(h, w, seed, step=0, group_size=64, temperature=1.0):
+    """Algorithm I.3: streaming Group-Gumbel-Max with O(group) working memory.
+
+    Maintains a running (log-mass, sample) pair; each new group replaces the
+    running sample with probability exp(L_k - L_new) (binary merge rule,
+    Lemma D.3).  The merge Bernoulli consumes the STREAM_GROUP_SELECT stream
+    at counter i = group index, so the variate sequence is reproducible.
+
+    Vectorized over the batch; the group loop is a Python loop because this is
+    a reference oracle, not a performance path.
+    """
+    y = ref.logits(h, w, temperature)
+    batch, vocab = y.shape
+    assert vocab % group_size == 0
+    m = vocab // group_size
+    g = ref.gumbel_noise(batch, vocab, step, seed[0], seed[1])
+    b = jnp.arange(batch, dtype=jnp.uint32)
+
+    def group(k):
+        yk = y[:, k * group_size : (k + 1) * group_size]
+        gk = g[:, k * group_size : (k + 1) * group_size]
+        zk = jnp.argmax(yk + gk, axis=1) + k * group_size
+        lk = _logsumexp(yk, axis=1)
+        return zk, lk
+
+    z, lrun = group(0)
+    for k in range(1, m):
+        zk, lk = group(k)
+        lnew = jnp.logaddexp(lrun, lk)
+        p_replace = jnp.exp(lk - lnew)
+        u = philox.uniform_at(
+            jnp.uint32(k), b, step, seed[0], seed[1],
+            stream=philox.STREAM_GROUP_SELECT,
+        )
+        z = jnp.where(u < p_replace, zk, z)
+        lrun = lnew
+    return z.astype(jnp.int32), lrun
+
+
+def distributed_sample(shard_summaries, seed, step=0):
+    """Algorithm I.4 merge: exact sample over tensor-parallel shards.
+
+    Args:
+      shard_summaries: list over ranks of (local_sample [B] i32 *global*
+        indices, lmass [B] f32) as produced by
+        flash_sampling.shard_candidates (drop the pathwise max entry).
+      seed, step: RNG position for the outer rank selection (fresh Gumbels on
+        STREAM_GROUP_SELECT with counter i = rank).
+
+    Returns (sample [B] i32, log_z [B] f32).  Exact by Theorem D.4: the
+    communication is O(1) scalars per rank per row.
+    """
+    locals_ = jnp.stack([s for s, _ in shard_summaries], axis=1)  # [B, n]
+    lmass = jnp.stack([l for _, l in shard_summaries], axis=1)  # [B, n]
+    batch, n = lmass.shape
+    k = jnp.arange(n, dtype=jnp.uint32)[None, :]
+    b = jnp.arange(batch, dtype=jnp.uint32)[:, None]
+    g_outer = -jnp.log(
+        -jnp.log(
+            philox.uniform_at(
+                k, b, step, seed[0], seed[1], stream=philox.STREAM_GROUP_SELECT
+            )
+        )
+    )
+    k_star = jnp.argmax(lmass + g_outer, axis=1)
+    sample = jnp.take_along_axis(locals_, k_star[:, None], axis=1)[:, 0]
+    log_z = _logsumexp(lmass, axis=1)
+    return sample.astype(jnp.int32), log_z
+
+
+def distributed_sample_pathwise(shard_maxima):
+    """Pathwise tensor-parallel merge (paper §3.2 multi-GPU path).
+
+    Because every rank's Gumbel stream is indexed by *global* (b, i), the
+    rank-local (max perturbed score, argmax) summaries max-merge to exactly
+    the single-device FlashSampling result (Lemma D.5 applied to the shard
+    partition).  This is the P2P fan-out payload in Algorithm 1 lines 10-12.
+
+    Args:
+      shard_maxima: list over ranks of (m [B] f32, idx [B] i32 global).
+    Returns sample [B] i32, identical to single-rank flash_sample.
+    """
+    m = jnp.stack([mm for mm, _ in shard_maxima], axis=1)
+    idx = jnp.stack([ii for _, ii in shard_maxima], axis=1)
+    r_star = jnp.argmax(m, axis=1)
+    return jnp.take_along_axis(idx, r_star[:, None], axis=1)[:, 0].astype(jnp.int32)

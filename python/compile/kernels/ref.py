@@ -1,0 +1,128 @@
+"""Pure-jnp correctness oracles for FlashSampling.
+
+Every oracle materializes the full [B, V] logits tensor — exactly what the
+paper's baselines do (Algorithm A.1) and exactly what FlashSampling avoids.
+The fused Pallas kernel in `flash_sampling.py` must be *pathwise* identical
+to `gumbel_max_sample` (same seed => same sampled index, Lemma D.5) and
+*distributionally* identical to `multinomial_sample` (chi-squared tests).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from compile import philox
+
+
+def transform_logits(y, temperature=1.0, bias=None, mask=None):
+    """Deterministic logit transforms: temperature, additive bias, -inf mask.
+
+    Matches the paper's `transform(.)` in Algorithm 1 line 3.  `mask` is a
+    boolean array; False entries get probability zero (logit -> -inf).
+    """
+    y = y.astype(jnp.float32) / jnp.float32(temperature)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    if mask is not None:
+        y = jnp.where(mask, y, -jnp.inf)
+    return y
+
+
+def logits(h, w, temperature=1.0, bias=None, mask=None):
+    """Reference LM-head projection: Y = H W^T, f32 accumulation."""
+    y = jnp.matmul(h.astype(jnp.float32), w.astype(jnp.float32).T)
+    return transform_logits(y, temperature, bias, mask)
+
+
+def gumbel_noise(batch, vocab, step, seed_lo, seed_hi):
+    """[B, V] Gumbel noise at positions (b, i) — identical positions (and
+    therefore identical variates) to what the fused kernel draws."""
+    i = jnp.arange(vocab, dtype=jnp.uint32)[None, :]
+    b = jnp.arange(batch, dtype=jnp.uint32)[:, None]
+    return philox.gumbel_at(i, b, step, seed_lo, seed_hi)
+
+
+def gumbel_max_sample(h, w, seed, step=0, temperature=1.0, bias=None, mask=None):
+    """Monolithic Gumbel-Max over materialized logits (Algorithm I.1,
+    vectorized).  The pathwise ground truth for the fused kernel."""
+    y = logits(h, w, temperature, bias, mask)
+    g = gumbel_noise(y.shape[0], y.shape[1], step, seed[0], seed[1])
+    s = y + g
+    return jnp.argmax(s, axis=1).astype(jnp.int32)
+
+
+def perturbed_scores(h, w, seed, step=0, temperature=1.0, bias=None, mask=None):
+    """The full [B, V] perturbed-score matrix (for tile-decomposition tests)."""
+    y = logits(h, w, temperature, bias, mask)
+    g = gumbel_noise(y.shape[0], y.shape[1], step, seed[0], seed[1])
+    return y + g
+
+
+def softmax_probs(h, w, temperature=1.0, bias=None, mask=None):
+    """Exact categorical probabilities (for chi-squared goodness-of-fit)."""
+    y = logits(h, w, temperature, bias, mask)
+    m = jnp.max(y, axis=1, keepdims=True)
+    e = jnp.exp(y - m)
+    return e / jnp.sum(e, axis=1, keepdims=True)
+
+
+def multinomial_sample(h, w, seed, step=0, temperature=1.0, bias=None, mask=None):
+    """The paper's baseline pipeline (Algorithm A.1): materialize logits,
+    softmax with the max-shift identity, prefix-sum, inverse-CDF search.
+    Exact, but pays the logits round-trip + extra kernel chain.
+
+    Uses one uniform per row from the ROW_UNIFORM Philox stream, so baseline
+    and FlashSampling draws are independent (different domain separator).
+    """
+    y = logits(h, w, temperature, bias, mask)
+    batch = y.shape[0]
+    m = jnp.max(y, axis=1, keepdims=True)  # pass 1
+    e = jnp.exp(y - m)
+    z = jnp.sum(e, axis=1, keepdims=True)  # pass 2
+    p = e / z
+    c = jnp.cumsum(p, axis=1)  # prefix sum
+    b = jnp.arange(batch, dtype=jnp.uint32)
+    u = philox.uniform_at(jnp.uint32(0), b, step, seed[0], seed[1])
+    # min{ i : c_i >= u }  — counting search per row.
+    idx = jnp.sum((c < u[:, None]).astype(jnp.int32), axis=1)
+    return jnp.clip(idx, 0, y.shape[1] - 1).astype(jnp.int32)
+
+
+def log_z(h, w, temperature=1.0, bias=None, mask=None):
+    """Row log-normalizers log sum_j exp(l_j) (Appendix L optional output)."""
+    y = logits(h, w, temperature, bias, mask)
+    m = jnp.max(y, axis=1)
+    return m + jnp.log(jnp.sum(jnp.exp(y - m[:, None]), axis=1))
+
+
+def tile_candidates(h, w, seed, step, tile_v, temperature=1.0, bias=None, mask=None):
+    """Reference per-tile (max, argmax) candidates — what Stage 1 must emit.
+
+    Returns (m [B, n_tiles] f32, idx [B, n_tiles] i32 global indices).
+    """
+    s = perturbed_scores(h, w, seed, step, temperature, bias, mask)
+    batch, vocab = s.shape
+    n_tiles = -(-vocab // tile_v)
+    pad = n_tiles * tile_v - vocab
+    if pad:
+        s = jnp.pad(s, ((0, 0), (0, pad)), constant_values=-jnp.inf)
+    s = s.reshape(batch, n_tiles, tile_v)
+    m = jnp.max(s, axis=2)
+    local = jnp.argmax(s, axis=2)
+    idx = local + jnp.arange(n_tiles)[None, :] * tile_v
+    return m, idx.astype(jnp.int32)
+
+
+def group_log_masses(h, w, group_size, temperature=1.0, bias=None, mask=None):
+    """Group log-masses L_k = logsumexp over each vocabulary group (D.1)."""
+    y = logits(h, w, temperature, bias, mask)
+    batch, vocab = y.shape
+    n_groups = -(-vocab // group_size)
+    pad = n_groups * group_size - vocab
+    if pad:
+        y = jnp.pad(y, ((0, 0), (0, pad)), constant_values=-jnp.inf)
+    y = y.reshape(batch, n_groups, group_size)
+    m = jnp.max(y, axis=2)
+    safe_m = jnp.where(jnp.isfinite(m), m, 0.0)
+    lse = safe_m + jnp.log(jnp.sum(jnp.exp(y - safe_m[:, :, None]), axis=2))
+    return jnp.where(jnp.isfinite(m), lse, -jnp.inf)

@@ -1,0 +1,258 @@
+"""L2: the serving model — a small decoder-only transformer in JAX.
+
+This is the compute graph the Rust coordinator drives at decode time.  It is
+deliberately small (the box has no GPU; the paper's Qwen3/Llama models are
+substituted per DESIGN.md §2) but architecturally real: RMSNorm, RoPE
+multi-head attention with an in-graph KV cache, SwiGLU FFN, and an LM head
+whose sampling step is the FlashSampling Pallas kernel fused into the same
+HLO module — so the artifact the Rust side executes performs
+"decode step -> LM head -> exact sample" with no logits materialization and
+no host round-trip between projection and sampling.
+
+Everything here is build-time only.  `aot.py` lowers:
+  * prefill_T{T}:        tokens -> KV cache + last hidden
+  * decode_step:         (kv, pos, token) -> (kv', hidden)
+  * decode_and_sample:   decode_step + flash_sample fused
+  * decode_and_sample_baseline: decode_step + materialized multinomial
+  * lm heads / shard kernels at benchmark shapes
+
+Weights are generated deterministically from a seed and exported as raw
+binaries next to the HLO artifacts (manifest.json lists shapes); the Rust
+runtime loads them and passes them as runtime parameters, keeping HLO text
+small and the weight path dtype-exact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import flash_sampling as fs
+from compile.kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyperparameters for the tiny serving model."""
+
+    vocab: int = 2048
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 4
+    ffn: int = 512
+    max_seq: int = 256
+    rope_base: float = 10000.0
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_shapes(self) -> Dict[str, Tuple[int, ...]]:
+        """Flat name -> shape map; the manifest/weight-export contract."""
+        s: Dict[str, Tuple[int, ...]] = {"embed": (self.vocab, self.d_model)}
+        for l in range(self.n_layers):
+            p = f"layers.{l}."
+            s[p + "ln1"] = (self.d_model,)
+            s[p + "wq"] = (self.d_model, self.d_model)
+            s[p + "wk"] = (self.d_model, self.d_model)
+            s[p + "wv"] = (self.d_model, self.d_model)
+            s[p + "wo"] = (self.d_model, self.d_model)
+            s[p + "ln2"] = (self.d_model,)
+            s[p + "w_gate"] = (self.d_model, self.ffn)
+            s[p + "w_up"] = (self.d_model, self.ffn)
+            s[p + "w_down"] = (self.ffn, self.d_model)
+        s["final_norm"] = (self.d_model,)
+        s["lm_head"] = (self.vocab, self.d_model)
+        return s
+
+    def param_order(self):
+        """Canonical parameter ordering — the positional ABI shared with the
+        Rust runtime (artifacts take params in this exact order)."""
+        return sorted(self.param_shapes().keys())
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, jax.Array]:
+    """Deterministic scaled-normal init (fixed weights; the model is not
+    trained — §4.6's exactness claims are about sampling, not quality)."""
+    shapes = cfg.param_shapes()
+    params = {}
+    for name in cfg.param_order():
+        shape = shapes[name]
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), hash(name) & 0x7FFFFFFF)
+        if name.endswith(("ln1", "ln2", "final_norm")):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[-1] if len(shape) > 1 else shape[0]
+            params[name] = (
+                jax.random.normal(key, shape, jnp.float32) / np.sqrt(fan_in)
+            )
+    return params
+
+
+def rmsnorm(x, scale, eps=1e-5):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * scale
+
+
+def rope(x, positions, base):
+    """Rotary embedding. x: [..., T, H, Dh], positions: [..., T]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (base ** (jnp.arange(half, dtype=jnp.float32) / half))
+    theta = positions[..., None].astype(jnp.float32) * freqs  # [..., T, half]
+    cos = jnp.cos(theta)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(theta)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _attention_decode(q, k_cache, v_cache, pos):
+    """Single-position attention against the cache.
+
+    q: [B, H, Dh]; caches: [B, H, S, Dh]; pos: [B] current position (the new
+    token's K/V must already be written at index pos).
+    """
+    s = k_cache.shape[2]
+    scores = jnp.einsum("bhd,bhsd->bhs", q, k_cache) / np.sqrt(q.shape[-1])
+    span = jnp.arange(s)[None, None, :] <= pos[:, None, None]
+    scores = jnp.where(span, scores, -jnp.inf)
+    attn = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhs,bhsd->bhd", attn, v_cache)
+
+
+def decode_step(cfg: ModelConfig, params, kv_k, kv_v, pos, token):
+    """One autoregressive decode step.
+
+    Args:
+      kv_k, kv_v: [L, B, H, S, Dh] caches.
+      pos: [B] i32 — position of `token` in each sequence.
+      token: [B] i32 — current input token ids.
+
+    Returns (kv_k', kv_v', hidden [B, D]).
+    """
+    b = token.shape[0]
+    x = params["embed"][token]  # [B, D]
+    new_k, new_v = [], []
+    for l in range(cfg.n_layers):
+        p = f"layers.{l}."
+        h = rmsnorm(x, params[p + "ln1"])
+        q = (h @ params[p + "wq"]).reshape(b, cfg.n_heads, cfg.head_dim)
+        k = (h @ params[p + "wk"]).reshape(b, cfg.n_heads, cfg.head_dim)
+        v = (h @ params[p + "wv"]).reshape(b, cfg.n_heads, cfg.head_dim)
+        q = rope(q[:, None], pos[:, None], cfg.rope_base)[:, 0]
+        k = rope(k[:, None], pos[:, None], cfg.rope_base)[:, 0]
+
+        # Scatter this step's K/V into the cache at pos (per row).
+        # vmapped dynamic_update_slice lowers to a scatter that writes only
+        # B*H*Dh elements — a full-cache onehot blend here costs ~2x the
+        # whole cache in read+write traffic per layer and dominated the
+        # decode artifact's CPU time (EXPERIMENTS.md §Perf L2).
+        def put(cache, val):
+            # cache: [B, H, S, Dh]; val: [B, H, Dh]
+            def upd(c, v, p):
+                return jax.lax.dynamic_update_slice(
+                    c, v[:, None, :].astype(c.dtype), (0, p, 0)
+                )
+            return jax.vmap(upd)(cache, val, pos)
+
+        kc = put(kv_k[l], k)
+        vc = put(kv_v[l], v)
+        new_k.append(kc)
+        new_v.append(vc)
+
+        o = _attention_decode(q, kc, vc, pos).reshape(b, cfg.d_model)
+        x = x + o @ params[p + "wo"]
+        h2 = rmsnorm(x, params[p + "ln2"])
+        x = x + (
+            jax.nn.silu(h2 @ params[p + "w_gate"]) * (h2 @ params[p + "w_up"])
+        ) @ params[p + "w_down"]
+    hidden = rmsnorm(x, params["final_norm"])
+    return jnp.stack(new_k), jnp.stack(new_v), hidden
+
+
+def prefill(cfg: ModelConfig, params, tokens, lengths):
+    """Process a padded prompt batch, building the KV cache.
+
+    Args:
+      tokens: [B, T] i32, padded with anything beyond lengths.
+      lengths: [B] i32 true prompt lengths (>=1).
+
+    Returns (kv_k, kv_v [L, B, H, S, Dh], hidden [B, D] at the last real
+    position — the state from which the first output token is sampled).
+    """
+    b, t = tokens.shape
+    x = params["embed"][tokens]  # [B, T, D]
+    positions = jnp.arange(t)[None, :] * jnp.ones((b, 1), jnp.int32)
+    kmask = jnp.arange(t)[None, :] < lengths[:, None]  # [B, T] real tokens
+    causal = jnp.tril(jnp.ones((t, t), bool))
+    kv_k, kv_v = [], []
+    for l in range(cfg.n_layers):
+        p = f"layers.{l}."
+        h = rmsnorm(x, params[p + "ln1"])
+        q = (h @ params[p + "wq"]).reshape(b, t, cfg.n_heads, cfg.head_dim)
+        k = (h @ params[p + "wk"]).reshape(b, t, cfg.n_heads, cfg.head_dim)
+        v = (h @ params[p + "wv"]).reshape(b, t, cfg.n_heads, cfg.head_dim)
+        q = rope(q, positions, cfg.rope_base)
+        k = rope(k, positions, cfg.rope_base)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(cfg.head_dim)
+        mask = causal[None, None] & kmask[:, None, None, :]
+        scores = jnp.where(mask, scores, -jnp.inf)
+        attn = jax.nn.softmax(scores, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", attn, v).reshape(b, t, cfg.d_model)
+        x = x + o @ params[p + "wo"]
+        h2 = rmsnorm(x, params[p + "ln2"])
+        x = x + (
+            jax.nn.silu(h2 @ params[p + "w_gate"]) * (h2 @ params[p + "w_up"])
+        ) @ params[p + "w_down"]
+        # Cache layout: [B, H, S, Dh] with prompt K/V in slots [0, T).
+        kc = jnp.zeros((b, cfg.n_heads, cfg.max_seq, cfg.head_dim), jnp.float32)
+        vc = jnp.zeros_like(kc)
+        kc = kc.at[:, :, :t, :].set(jnp.transpose(k, (0, 2, 1, 3)))
+        vc = vc.at[:, :, :t, :].set(jnp.transpose(v, (0, 2, 1, 3)))
+        # Slots in [length, T) hold padded-token K/V, but they are never
+        # attended: prefill masks them via kmask, and decode overwrites slot
+        # `pos` before reading it (continuation starts at pos = length), so
+        # every slot <= pos is always real by the time it enters the span.
+        kv_k.append(kc)
+        kv_v.append(vc)
+    hidden_all = rmsnorm(x, params["final_norm"])  # [B, T, D]
+    last = jnp.take_along_axis(
+        hidden_all, (lengths - 1)[:, None, None].astype(jnp.int32), axis=1
+    )[:, 0]
+    return jnp.stack(kv_k), jnp.stack(kv_v), last
+
+
+def decode_and_sample(cfg: ModelConfig, params, kv_k, kv_v, pos, token, seed, step,
+                      temperature, tile_v=fs.DEFAULT_TILE_V):
+    """Fused decode step + FlashSampling LM head (the serving hot path)."""
+    kv_k, kv_v, hidden = decode_step(cfg, params, kv_k, kv_v, pos, token)
+    out = fs.flash_sample(
+        hidden, params["lm_head"], seed, step, temperature, tile_v=tile_v
+    )
+    return kv_k, kv_v, out.sample
+
+
+def decode_and_sample_baseline(cfg: ModelConfig, params, kv_k, kv_v, pos, token,
+                               seed, step, temperature):
+    """Decode step + the paper's baseline pipeline (materialized logits,
+    softmax, prefix-sum, inverse-CDF) — Algorithm A.1 as one artifact."""
+    kv_k, kv_v, hidden = decode_step(cfg, params, kv_k, kv_v, pos, token)
+    sample = kref.multinomial_sample(
+        hidden, params["lm_head"], seed, step, temperature
+    )
+    return kv_k, kv_v, sample
+
+
+def sample_from_hidden(cfg: ModelConfig, params, hidden, seed, step, temperature,
+                       tile_v=fs.DEFAULT_TILE_V):
+    """LM head + FlashSampling from a precomputed hidden state (used after
+    prefill to sample the first output token)."""
+    out = fs.flash_sample(
+        hidden, params["lm_head"], seed, step, temperature, tile_v=tile_v
+    )
+    return out.sample

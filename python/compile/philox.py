@@ -1,0 +1,136 @@
+"""Counter-based Philox4x32-10 RNG, implemented in pure jnp uint32 ops.
+
+FlashSampling requires every Gumbel variate to be a deterministic function of
+a key and the *logical output position* (b, i) (paper Appendix C: "RNG streams
+are indexed by the logical output position (b, i) using a counter-based RNG
+(e.g. Philox)").  Position-indexed RNG is what makes the fused tiled kernel
+*pathwise* exact: any tiling of the vocabulary sees the same perturbed scores,
+so the tile-wise reduction (Lemma D.5) returns the identical sample.
+
+This module implements Philox4x32 with 10 rounds (Salmon et al., SC'11) using
+only 32-bit integer ops so it lowers cleanly inside Pallas interpret-mode
+kernels and through StableHLO -> XLA CPU without requiring x64 mode.  The
+identical algorithm is implemented in Rust (`rust/src/sampling/philox.rs`);
+cross-language test vectors live in `python/tests/test_philox.py` and
+`rust/src/sampling/philox.rs::tests`.
+
+Counter layout for FlashSampling draws (one 128-bit counter per draw):
+
+    ctr = (i, b, stream, step)    key = (seed_lo, seed_hi)
+
+  * i       vocabulary index (column) of the perturbed logit
+  * b       row (batch element)
+  * stream  domain separator: 0 = Gumbel epilogue, 1 = baseline row uniforms,
+            2 = outer group/rank selection, 3 = reserved
+  * step    decode step, so each autoregressive step draws fresh noise
+
+The first output word x0 is mapped to the open interval (0, 1) via
+u = (x0 + 1) / (2^32 + 1)  (paper Appendix J) and then g = -log(-log u).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# Philox4x32 round constants (Salmon et al. 2011).
+PHILOX_M0 = np.uint32(0xD2511F53)
+PHILOX_M1 = np.uint32(0xCD9E8D57)
+PHILOX_W0 = np.uint32(0x9E3779B9)  # golden-ratio key bump
+PHILOX_W1 = np.uint32(0xBB67AE85)  # sqrt(3)-1 key bump
+
+# Stream domain separators (must match rust/src/sampling/philox.rs).
+STREAM_GUMBEL = 0
+STREAM_ROW_UNIFORM = 1
+STREAM_GROUP_SELECT = 2
+
+
+def _u32(x):
+    return jnp.asarray(x, dtype=jnp.uint32)
+
+
+def _mulhilo32(a, b):
+    """Full 32x32 -> 64-bit product as (hi, lo) uint32 words.
+
+    Implemented with 16-bit limbs so no 64-bit integer type is needed (jax
+    runs in the default 32-bit mode and Pallas interpret handles u32 natively).
+    """
+    a = _u32(a)
+    b = _u32(b)
+    mask = np.uint32(0xFFFF)
+    al = a & mask
+    ah = a >> 16
+    bl = b & mask
+    bh = b >> 16
+    # Partial products; each fits in 32 bits (16x16 -> <=32 bits).
+    ll = al * bl
+    lh = al * bh
+    hl = ah * bl
+    hh = ah * bh
+    # Carry assembly: mid accumulates bits [16, 48) of the product.
+    mid = (ll >> 16) + (lh & mask) + (hl & mask)
+    lo = (ll & mask) | (mid << 16)
+    hi = hh + (lh >> 16) + (hl >> 16) + (mid >> 16)
+    return hi, lo
+
+
+def _philox_round(c0, c1, c2, c3, k0, k1):
+    hi0, lo0 = _mulhilo32(PHILOX_M0, c0)
+    hi1, lo1 = _mulhilo32(PHILOX_M1, c2)
+    n0 = hi1 ^ c1 ^ k0
+    n1 = lo1
+    n2 = hi0 ^ c3 ^ k1
+    n3 = lo0
+    return n0, n1, n2, n3
+
+
+def philox4x32(c0, c1, c2, c3, k0, k1, rounds: int = 10):
+    """Philox4x32 block cipher: 128-bit counter -> 128-bit random output.
+
+    All inputs may be arrays (broadcast together); returns 4 uint32 arrays.
+    """
+    c0, c1, c2, c3 = _u32(c0), _u32(c1), _u32(c2), _u32(c3)
+    k0, k1 = _u32(k0), _u32(k1)
+    c0, c1, c2, c3 = jnp.broadcast_arrays(c0, c1, c2, c3)
+    for r in range(rounds):
+        c0, c1, c2, c3 = _philox_round(c0, c1, c2, c3, k0, k1)
+        if r + 1 < rounds:
+            k0 = k0 + PHILOX_W0
+            k1 = k1 + PHILOX_W1
+    return c0, c1, c2, c3
+
+
+def uniform_open01(x0):
+    """Map a uint32 word to the open interval (0, 1).
+
+    The paper's fallback u = (r+1)/(2^32+1) (Appendix J) is only open in
+    exact arithmetic: in FP32 any r >= 2^32 - 2^8 rounds to u = 1.0 and the
+    Gumbel transform blows up.  We therefore use a top-23-bit mapping
+    u = (r>>9 + 0.5) * 2^-23: (r>>9) + 0.5 needs at most 24 mantissa bits so
+    it is exactly representable in FP32, confining u to [2^-24, 1 - 2^-24] —
+    satisfying the same "avoid u = 0 or u = 1" requirement the appendix
+    states.  The Rust runtime uses the identical mapping
+    (rust/src/sampling/philox.rs).
+    """
+    x0 = _u32(x0)
+    return ((x0 >> np.uint32(9)).astype(jnp.float32) + np.float32(0.5)) * np.float32(
+        1.0 / 8388608.0
+    )
+
+
+def gumbel_at(i, b, step, seed_lo, seed_hi):
+    """Standard Gumbel(0,1) noise for logical position (b, i) at decode `step`.
+
+    Deterministic in (i, b, step, seed); independent across distinct counters.
+    FP32 throughout (paper Appendix C: noise generated in FP32).
+    """
+    x0, _, _, _ = philox4x32(i, b, STREAM_GUMBEL, step, seed_lo, seed_hi)
+    u = uniform_open01(x0)
+    return -jnp.log(-jnp.log(u))
+
+
+def uniform_at(i, b, step, seed_lo, seed_hi, stream=STREAM_ROW_UNIFORM):
+    """Uniform(0,1) draw for position (b, i); used by the baseline sampler
+    (inverse-CDF search) and the grouped outer selection."""
+    x0, _, _, _ = philox4x32(i, b, stream, step, seed_lo, seed_hi)
+    return uniform_open01(x0)

@@ -1,0 +1,7 @@
+"""pytest configuration: make `compile.*` importable when running from the
+python/ directory (the Makefile does `cd python && pytest tests/ -q`)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))

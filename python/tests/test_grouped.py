@@ -1,0 +1,187 @@
+"""Grouped / online / distributed Gumbel-Max exactness (paper §D.1-D.4).
+
+Lemma D.2 (group factorization), Lemma D.3 (binary merge) and Theorem D.4
+(hierarchical exactness) are distribution-level statements; we verify them
+with chi-squared goodness-of-fit plus structural checks (log-mass
+bookkeeping, pathwise shard merging).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from scipy import stats
+
+from compile.kernels import flash_sampling as fs
+from compile.kernels import grouped, ref
+
+V, D, ROWS = 256, 32, 50
+SEED = (77, 88)
+
+
+def _setup(key=1, scale=0.5):
+    kh, kw = jax.random.split(jax.random.PRNGKey(key))
+    h1 = jax.random.normal(kh, (1, D), jnp.float32)
+    w = jax.random.normal(kw, (V, D), jnp.float32) * scale
+    h = jnp.tile(h1, (ROWS, 1))
+    probs = np.asarray(ref.softmax_probs(h1, w))[0]
+    return h, w, probs
+
+
+def _chisq(samples, probs):
+    counts = np.bincount(samples, minlength=len(probs))
+    expected = probs * len(samples)
+    order = np.argsort(expected)
+    exp_s, cnt_s = expected[order], counts[order]
+    bins_e, bins_c, acc_e, acc_c = [], [], 0.0, 0.0
+    for e, c in zip(exp_s, cnt_s):
+        acc_e += e
+        acc_c += c
+        if acc_e >= 5:
+            bins_e.append(acc_e)
+            bins_c.append(acc_c)
+            acc_e = acc_c = 0.0
+    if acc_e:
+        bins_e[-1] += acc_e
+        bins_c[-1] += acc_c
+    be, bc = np.asarray(bins_e), np.asarray(bins_c)
+    chi2 = ((bc - be) ** 2 / be).sum()
+    return stats.chi2.sf(chi2, df=len(be) - 1)
+
+
+def _collect(fn, n=8000):
+    out, step = [], 0
+    while len(out) * ROWS < n:
+        out.append(np.asarray(fn(step)))
+        step += 1
+    return np.concatenate(out)[:n]
+
+
+class TestParallelGroupGumbelMax:
+    def test_distribution_exact(self):
+        h, w, probs = _setup()
+        samples = _collect(
+            lambda s: grouped.parallel_group_sample(h, w, SEED, step=s,
+                                                    group_size=32)[0]
+        )
+        p = _chisq(samples, probs)
+        assert p > 0.001, f"Alg I.2 rejected: p={p}"
+
+    def test_log_z_exact(self):
+        h, w, _ = _setup()
+        _, lz = grouped.parallel_group_sample(h, w, SEED, group_size=64)
+        np.testing.assert_allclose(
+            np.asarray(lz), np.asarray(ref.log_z(h, w)), rtol=1e-5
+        )
+
+    def test_group_size_invariance_of_distribution(self):
+        # Different groupings are different factorizations of the SAME
+        # categorical: each must pass GoF against the same probs.
+        h, w, probs = _setup(key=2)
+        for gs in (16, 64, 128):
+            samples = _collect(
+                lambda s, gs=gs: grouped.parallel_group_sample(
+                    h, w, SEED, step=s, group_size=gs
+                )[0],
+                n=6000,
+            )
+            p = _chisq(samples, probs)
+            assert p > 0.001, f"group_size={gs}: p={p}"
+
+
+class TestOnlineGroupGumbelMax:
+    def test_distribution_exact(self):
+        h, w, probs = _setup(key=3)
+        samples = _collect(
+            lambda s: grouped.online_group_sample(h, w, SEED, step=s,
+                                                  group_size=64)[0]
+        )
+        p = _chisq(samples, probs)
+        assert p > 0.001, f"Alg I.3 rejected: p={p}"
+
+    def test_running_log_mass_is_exact(self):
+        h, w, _ = _setup(key=4)
+        _, lrun = grouped.online_group_sample(h, w, SEED, group_size=32)
+        np.testing.assert_allclose(
+            np.asarray(lrun), np.asarray(ref.log_z(h, w)), rtol=1e-5
+        )
+
+    def test_single_group_degenerates_to_gumbel_max(self):
+        h, w, _ = _setup(key=5)
+        z, _ = grouped.online_group_sample(h, w, SEED, group_size=V)
+        expect = ref.gumbel_max_sample(h, w, SEED)
+        np.testing.assert_array_equal(np.asarray(z), np.asarray(expect))
+
+
+class TestDistributedSampling:
+    def _shards(self, h, w, n, step=0):
+        vs = V // n
+        out = []
+        for r in range(n):
+            m, s, lm = fs.shard_candidates(
+                h, w[r * vs : (r + 1) * vs], r * vs, SEED, step=step, tile_v=64
+            )
+            out.append((m, s, lm))
+        return out
+
+    def test_pathwise_merge_equals_single_rank(self):
+        h, w, _ = _setup(key=6)
+        for n in (2, 4, 8):
+            shards = self._shards(h, w, n, step=5)
+            got = grouped.distributed_sample_pathwise(
+                [(m, s) for m, s, _ in shards]
+            )
+            expect = ref.gumbel_max_sample(h, w, SEED, step=5)
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(expect))
+
+    def test_distribution_level_merge_exact(self):
+        h, w, probs = _setup(key=7)
+
+        def draw(step):
+            shards = self._shards(h, w, 4, step=step)
+            z, _ = grouped.distributed_sample(
+                [(s, lm) for _, s, lm in shards], SEED, step=step
+            )
+            return z
+
+        samples = _collect(draw, n=6000)
+        p = _chisq(samples, probs)
+        assert p > 0.001, f"Alg I.4 rejected: p={p}"
+
+    def test_communication_payload_is_o1_per_rank(self):
+        # Structural: the shard summary is 3 scalars per row per rank,
+        # independent of shard vocabulary size.
+        h, w, _ = _setup(key=8)
+        m, s, lm = fs.shard_candidates(h, w[:128], 0, SEED, tile_v=32)
+        assert m.shape == (ROWS,) and s.shape == (ROWS,) and lm.shape == (ROWS,)
+
+    def test_log_z_from_shard_masses(self):
+        h, w, _ = _setup(key=9)
+        shards = self._shards(h, w, 4)
+        _, lz = grouped.distributed_sample(
+            [(s, lm) for _, s, lm in shards], SEED
+        )
+        np.testing.assert_allclose(
+            np.asarray(lz), np.asarray(ref.log_z(h, w)), rtol=1e-5
+        )
+
+
+class TestGroupLogMasses:
+    def test_masses_factorize(self):
+        """sum_k exp(L_k) == Z regardless of grouping (Lemma D.1)."""
+        h, w, _ = _setup(key=10)
+        z = np.asarray(ref.log_z(h, w))
+        for gs in (8, 32, 128):
+            lm = np.asarray(ref.group_log_masses(h, w, gs))
+            np.testing.assert_allclose(
+                np.log(np.exp(lm - lm.max(1, keepdims=True)).sum(1))
+                + lm.max(1),
+                z,
+                rtol=1e-5,
+            )
+
+    def test_zero_mass_group_is_neg_inf(self):
+        h, w, _ = _setup(key=11)
+        bias = jnp.full((V,), -jnp.inf).at[:64].set(0.0)  # only group 0 lives
+        lm = np.asarray(ref.group_log_masses(h, w, 64, bias=bias))
+        assert np.isfinite(lm[:, 0]).all()
+        assert np.isneginf(lm[:, 1:]).all()

@@ -1,0 +1,155 @@
+"""L2 model tests: shapes, prefill/decode consistency, fused sampling path."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels import ref
+
+CFG = M.ModelConfig(vocab=128, d_model=32, n_layers=2, n_heads=2, ffn=64,
+                    max_seq=32)
+SEED = (10, 20)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, seed=0)
+
+
+def _empty_kv(b):
+    shape = (CFG.n_layers, b, CFG.n_heads, CFG.max_seq, CFG.head_dim)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
+
+
+class TestShapes:
+    def test_param_shapes_cover_order(self):
+        shapes = CFG.param_shapes()
+        assert set(CFG.param_order()) == set(shapes)
+        assert CFG.param_order() == sorted(CFG.param_order())
+
+    def test_decode_step_shapes(self, params):
+        b = 3
+        kv_k, kv_v = _empty_kv(b)
+        tok = jnp.array([1, 2, 3], jnp.int32)
+        pos = jnp.zeros(b, jnp.int32)
+        nk, nv, hidden = M.decode_step(CFG, params, kv_k, kv_v, pos, tok)
+        assert nk.shape == kv_k.shape and nv.shape == kv_v.shape
+        assert hidden.shape == (b, CFG.d_model)
+
+    def test_prefill_shapes(self, params):
+        b, t = 2, 8
+        toks = jnp.ones((b, t), jnp.int32)
+        lens = jnp.array([5, 8], jnp.int32)
+        kv_k, kv_v, h = M.prefill(CFG, params, toks, lens)
+        assert kv_k.shape == (CFG.n_layers, b, CFG.n_heads, CFG.max_seq,
+                              CFG.head_dim)
+        assert h.shape == (b, CFG.d_model)
+
+
+class TestPrefillDecodeConsistency:
+    def test_decode_continues_prefill(self, params):
+        """Hidden state from (prefill T tokens, then decode token T) must
+        match (prefill T+1 tokens) — the cache handoff is seamless."""
+        toks = jnp.array([[3, 14, 15, 9, 2, 6]], jnp.int32)
+        t = toks.shape[1]
+        kv_k, kv_v, _ = M.prefill(CFG, params, toks[:, : t - 1],
+                                  jnp.array([t - 1], jnp.int32))
+        _, _, h_dec = M.decode_step(
+            CFG, params, kv_k, kv_v, jnp.array([t - 1], jnp.int32), toks[:, -1]
+        )
+        _, _, h_full = M.prefill(CFG, params, toks, jnp.array([t], jnp.int32))
+        np.testing.assert_allclose(
+            np.asarray(h_dec), np.asarray(h_full), rtol=2e-4, atol=2e-5
+        )
+
+    def test_padded_prefill_matches_exact_prefill(self, params):
+        """Rows padded beyond their length must produce the same last-token
+        hidden as an unpadded run (padding is fully masked)."""
+        toks = jnp.array([[5, 6, 7, 0, 0, 0, 0, 0]], jnp.int32)
+        _, _, h_pad = M.prefill(CFG, params, toks, jnp.array([3], jnp.int32))
+        _, _, h_exact = M.prefill(CFG, params, toks[:, :3],
+                                  jnp.array([3], jnp.int32))
+        np.testing.assert_allclose(
+            np.asarray(h_pad), np.asarray(h_exact), rtol=2e-4, atol=2e-5
+        )
+
+    def test_multistep_decode_matches_prefill(self, params):
+        toks = jnp.array([[1, 2, 3, 4, 5]], jnp.int32)
+        kv_k, kv_v, _ = M.prefill(CFG, params, toks[:, :2],
+                                  jnp.array([2], jnp.int32))
+        for i in range(2, 5):
+            kv_k, kv_v, h = M.decode_step(
+                CFG, params, kv_k, kv_v, jnp.array([i], jnp.int32), toks[:, i]
+            )
+        _, _, h_full = M.prefill(CFG, params, toks, jnp.array([5], jnp.int32))
+        np.testing.assert_allclose(
+            np.asarray(h), np.asarray(h_full), rtol=2e-4, atol=2e-5
+        )
+
+
+class TestFusedServingPath:
+    def test_decode_and_sample_matches_oracle(self, params):
+        """The fused decode+sample artifact must equal: decode_step hidden ->
+        monolithic Gumbel-Max (pathwise, Lemma D.5 through the whole graph)."""
+        b = 2
+        kv_k, kv_v = _empty_kv(b)
+        tok = jnp.array([7, 9], jnp.int32)
+        pos = jnp.zeros(b, jnp.int32)
+        nk, nv, sample = M.decode_and_sample(
+            CFG, params, kv_k, kv_v, pos, tok, SEED, step=4, temperature=1.0
+        )
+        _, _, hidden = M.decode_step(CFG, params, kv_k, kv_v, pos, tok)
+        expect = ref.gumbel_max_sample(hidden, params["lm_head"], SEED, step=4)
+        np.testing.assert_array_equal(np.asarray(sample), np.asarray(expect))
+
+    def test_baseline_artifact_samples_valid_tokens(self, params):
+        b = 2
+        kv_k, kv_v = _empty_kv(b)
+        tok = jnp.array([1, 2], jnp.int32)
+        pos = jnp.zeros(b, jnp.int32)
+        _, _, sample = M.decode_and_sample_baseline(
+            CFG, params, kv_k, kv_v, pos, tok, SEED, step=0, temperature=1.0
+        )
+        s = np.asarray(sample)
+        assert ((s >= 0) & (s < CFG.vocab)).all()
+
+    def test_sample_from_hidden_matches_flash(self, params):
+        h = jax.random.normal(jax.random.PRNGKey(2), (4, CFG.d_model))
+        s = M.sample_from_hidden(CFG, params, h, SEED, step=1, temperature=0.8)
+        expect = ref.gumbel_max_sample(
+            h, params["lm_head"], SEED, step=1, temperature=0.8
+        )
+        np.testing.assert_array_equal(np.asarray(s), np.asarray(expect))
+
+    def test_deterministic_given_seed(self, params):
+        b = 2
+        kv_k, kv_v = _empty_kv(b)
+        tok = jnp.array([5, 6], jnp.int32)
+        pos = jnp.zeros(b, jnp.int32)
+        s1 = M.decode_and_sample(CFG, params, kv_k, kv_v, pos, tok, SEED, 0, 1.0)[2]
+        s2 = M.decode_and_sample(CFG, params, kv_k, kv_v, pos, tok, SEED, 0, 1.0)[2]
+        np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+
+
+class TestNumerics:
+    def test_rmsnorm_unit_scale(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (4, 32)) * 7.0
+        y = np.asarray(M.rmsnorm(x, jnp.ones(32)))
+        np.testing.assert_allclose((y ** 2).mean(axis=-1), 1.0, rtol=1e-3)
+
+    def test_rope_preserves_norm(self):
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 3, 4, 16))
+        pos = jnp.arange(3)[None, :] * jnp.ones((2, 1), jnp.int32)
+        y = M.rope(x, pos, 10000.0)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(y), axis=-1),
+            np.linalg.norm(np.asarray(x), axis=-1),
+            rtol=1e-5,
+        )
+
+    def test_rope_position_zero_is_identity(self):
+        x = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 2, 8))
+        y = M.rope(x, jnp.zeros((1, 1), jnp.int32), 10000.0)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=1e-6)

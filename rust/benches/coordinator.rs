@@ -1,0 +1,67 @@
+//! Coordinator hot-path benchmarks: scheduler planning, KV-cache
+//! bookkeeping, workload generation — the L3 costs that must stay far
+//! below a decode step (the paper's L3 must not become the bottleneck).
+
+use flashsampling::benchutil::{bench, black_box};
+use flashsampling::coordinator::request::{Request, SamplingParams, SeqState, Sequence};
+use flashsampling::coordinator::scheduler::{plan, SchedulerConfig};
+use flashsampling::kvcache::{KvCacheConfig, KvCacheManager};
+use flashsampling::workload::WorkloadGen;
+
+fn seqs(n: usize, state: SeqState) -> Vec<Sequence> {
+    (0..n)
+        .map(|i| {
+            let mut s = Sequence::new(Request {
+                id: i as u64,
+                prompt: vec![1; 16],
+                params: SamplingParams::default(),
+            });
+            s.state = state;
+            s
+        })
+        .collect()
+}
+
+fn main() {
+    println!("## coordinator — scheduler + KV cache hot paths\n");
+    let cfg = SchedulerConfig {
+        decode_buckets: vec![1, 2, 4, 8],
+        prefill_t_buckets: vec![16, 64],
+        prefill_b: 4,
+        max_concurrency: 8,
+    };
+    let waiting = seqs(32, SeqState::Waiting);
+    let running = seqs(8, SeqState::Running);
+    bench("scheduler/plan/32waiting_8running", || {
+        black_box(plan(&cfg, &waiting, &running, |_| true));
+    });
+    let no_waiting: Vec<Sequence> = Vec::new();
+    bench("scheduler/plan/decode_only", || {
+        black_box(plan(&cfg, &no_waiting, &running, |_| true));
+    });
+
+    bench("kvcache/register_release_seq64toks", || {
+        let mut m = KvCacheManager::new(KvCacheConfig { block_size: 16, num_blocks: 512 });
+        for id in 0..32u64 {
+            m.register(id, 64).unwrap();
+        }
+        for id in 0..32u64 {
+            m.release(id).unwrap();
+        }
+        black_box(m.free_blocks());
+    });
+    bench("kvcache/append_token_x256", || {
+        let mut m = KvCacheManager::new(KvCacheConfig { block_size: 16, num_blocks: 512 });
+        m.register(0, 16).unwrap();
+        for _ in 0..256 {
+            m.append_token(0).unwrap();
+        }
+        m.release(0).unwrap();
+        black_box(m.free_blocks());
+    });
+
+    bench("workload/generate_poisson_x256", || {
+        let g = WorkloadGen::new(3, 8.0, 2048);
+        black_box(g.generate(256));
+    });
+}

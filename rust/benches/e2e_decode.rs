@@ -1,0 +1,75 @@
+//! End-to-end decode-step benchmarks through PJRT: the fused
+//! decode+FlashSampling artifact vs the baseline decode+multinomial
+//! artifact, and the standalone LM-head kernels — the measured counterpart
+//! of the paper's Table 4 comparison on this testbed.
+//!
+//! Requires `make artifacts`; prints a SKIP note otherwise.
+
+use flashsampling::benchutil::{bench_slow, black_box};
+use flashsampling::coordinator::{Engine, EngineConfig, Request, SamplingParams};
+use flashsampling::runtime::{Runtime, Tensor};
+use flashsampling::sampling::Key;
+
+fn main() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("SKIP: artifacts/ missing — run `make artifacts` first");
+        return;
+    }
+    println!("## e2e_decode — PJRT artifact timings (CPU backend)\n");
+    let rt = Runtime::new(&dir).unwrap();
+    let key = Key::from_seed(7);
+
+    // Standalone LM-head kernels: fused vs baselines at each bench shape.
+    for spec in rt.manifest().by_kind("flash_sample") {
+        let (b, d, v) = (
+            spec.meta_usize("B").unwrap(),
+            spec.meta_usize("D").unwrap(),
+            spec.meta_usize("V").unwrap(),
+        );
+        let tag = format!("b{b}_d{d}_v{v}");
+        let h = Tensor::F32(vec![0.1; b * d], vec![b, d]);
+        let w = Tensor::F32(vec![0.01; v * d], vec![v, d]);
+        let inputs = [h, w, Tensor::seed(key), Tensor::scalar_u32(0),
+                      Tensor::scalar_f32(1.0)];
+        for kind in ["flash_sample", "baseline_multinomial", "baseline_gumbel"] {
+            let name = format!("{kind}_{tag}");
+            if rt.manifest().find(&name).is_err() {
+                continue;
+            }
+            rt.run(&name, &inputs).unwrap(); // compile+warm
+            bench_slow(&format!("lmhead/{name}"), || {
+                black_box(rt.run(&name, &inputs).unwrap());
+            });
+        }
+    }
+
+    // Whole serving decode steps: fused vs baseline engine.
+    for baseline in [false, true] {
+        let mut engine = Engine::new(
+            &dir,
+            EngineConfig { baseline_sampler: baseline, ..Default::default() },
+        )
+        .unwrap();
+        for i in 0..8u64 {
+            engine
+                .submit(Request {
+                    id: i,
+                    prompt: vec![1 + i as i32; 8],
+                    params: SamplingParams {
+                        max_new_tokens: 200, // keep decoding through the bench window
+                        ..Default::default()
+                    },
+                })
+                .unwrap();
+        }
+        // Prefill everything first.
+        for _ in 0..2 {
+            engine.step().unwrap();
+        }
+        let label = if baseline { "baseline_multinomial" } else { "flashsampling" };
+        bench_slow(&format!("engine_decode_step/b8/{label}"), || {
+            black_box(engine.step().unwrap());
+        });
+    }
+}

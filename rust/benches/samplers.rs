@@ -1,0 +1,67 @@
+//! Native sampler benchmarks (the Rust half of Tables 4/5's comparison).
+//!
+//! Measures the per-row cost of the paper's algorithm chain on this CPU:
+//! fused-style streaming Gumbel-Max vs the materialized-logits baseline vs
+//! the grouped/online/distributed variants, across vocabulary sizes, plus
+//! the Gumbel-Top-k extension (Appendix D.6).
+
+use flashsampling::benchutil::{bench, black_box};
+use flashsampling::sampling::{
+    distributed, grouped, gumbel, multinomial, online, philox, topk, Key,
+    Transform,
+};
+
+fn toy_logits(v: usize, seed: u64) -> Vec<f32> {
+    let key = Key::from_seed(seed);
+    (0..v)
+        .map(|i| 3.0 * (philox::uniform_at(key, i as u32, 0, 3, 0) - 0.5))
+        .collect()
+}
+
+fn main() {
+    let key = Key::new(11, 22);
+    let t = Transform::default();
+    println!("## samplers — per-row cost across vocabulary sizes\n");
+    for v in [2_048usize, 32_768, 151_936] {
+        let logits = toy_logits(v, 9);
+        let mut step = 0u32;
+        bench(&format!("gumbel_max/streaming/V={v}"), || {
+            step = step.wrapping_add(1);
+            black_box(gumbel::sample_row(&logits, &t, key, 0, step));
+        });
+        bench(&format!("gumbel_max/tiled_2048/V={v}"), || {
+            step = step.wrapping_add(1);
+            black_box(gumbel::sample_row_tiled(&logits, &t, key, 0, step, 2048));
+        });
+        bench(&format!("multinomial_baseline/V={v}"), || {
+            step = step.wrapping_add(1);
+            black_box(multinomial::sample_row(&logits, &t, key, 0, step));
+        });
+        bench(&format!("grouped_I2/g=2048/V={v}"), || {
+            step = step.wrapping_add(1);
+            black_box(grouped::sample_row(&logits, 2048, &t, key, 0, step));
+        });
+        bench(&format!("online_I3/g=2048/V={v}"), || {
+            step = step.wrapping_add(1);
+            black_box(online::sample_row(&logits, 2048, &t, key, 0, step));
+        });
+        bench(&format!("topk8_tiled/V={v}"), || {
+            step = step.wrapping_add(1);
+            black_box(topk::topk_tiled(&logits, &t, key, 0, step, 8, 2048));
+        });
+        // Distributed merge cost (the leader-side work per row at TP=8).
+        let shards: Vec<distributed::ShardSummary> = (0..8)
+            .map(|r| {
+                let vs = v / 8;
+                distributed::shard_summary(
+                    r as u32, &logits[r as usize * vs..(r as usize + 1) * vs],
+                    r as usize * vs, &t, key, 0, 0,
+                )
+            })
+            .collect();
+        bench(&format!("distributed_merge/tp8/V={v}"), || {
+            black_box(distributed::merge_pathwise(&shards));
+            black_box(distributed::merge_by_mass(&shards, key, 0, 0));
+        });
+    }
+}

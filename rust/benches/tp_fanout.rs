@@ -1,0 +1,64 @@
+//! Tensor-parallel communication benches: the per-step leader cost of the
+//! P2P fan-out merge vs assembling an all-gathered logits tensor and
+//! running the separate sampler — the structural comparison behind Table 6
+//! and Figure 3 (timing on real NVLink is modeled in gpusim).
+
+use flashsampling::benchutil::{bench, black_box};
+use flashsampling::sampling::{
+    distributed, gumbel, multinomial, philox, Key, Transform,
+};
+
+fn main() {
+    println!("## tp_fanout — leader-side merge cost vs all-gather sampling\n");
+    let key = Key::new(5, 6);
+    let t = Transform::default();
+    let b = 16usize;
+    for v in [32_768usize, 131_072] {
+        for n in [2usize, 4, 8] {
+            // FlashSampling path: merge n per-rank summaries per row.
+            let summaries: Vec<Vec<distributed::ShardSummary>> = (0..b)
+                .map(|row| {
+                    (0..n)
+                        .map(|r| distributed::ShardSummary {
+                            rank: r as u32,
+                            max_score: (row * 31 + r) as f32 * 0.01,
+                            local_sample: (r * v / n) as u32,
+                            log_mass: -(r as f32),
+                        })
+                        .collect()
+                })
+                .collect();
+            bench(&format!("fanout_merge/B={b}/V={v}/tp{n}"), || {
+                for row in &summaries {
+                    black_box(distributed::merge_pathwise(row));
+                }
+            });
+
+            // Baseline path: assemble [B, V] from shards + full sampler pass.
+            let shard: Vec<f32> = (0..b * v / n)
+                .map(|i| philox::uniform_at(key, i as u32, 0, 3, 0))
+                .collect();
+            bench(&format!("allgather_assemble/B={b}/V={v}/tp{n}"), || {
+                let vs = v / n;
+                let mut logits = vec![0.0f32; b * v];
+                for r in 0..n {
+                    for row in 0..b {
+                        logits[row * v + r * vs..row * v + (r + 1) * vs]
+                            .copy_from_slice(&shard[row * vs..(row + 1) * vs]);
+                    }
+                }
+                black_box(logits.len());
+            });
+        }
+        // Leader sampling over materialized logits (paid only by baselines).
+        let logits: Vec<f32> = (0..b * v)
+            .map(|i| philox::uniform_at(key, i as u32, 1, 3, 0))
+            .collect();
+        bench(&format!("leader_gumbel_full/B={b}/V={v}"), || {
+            black_box(gumbel::sample_batch(&logits, v, &t, key, 0));
+        });
+        bench(&format!("leader_multinomial_full/B={b}/V={v}"), || {
+            black_box(multinomial::sample_batch(&logits, v, &t, key, 0));
+        });
+    }
+}

@@ -1,0 +1,80 @@
+//! Minimal benchmarking harness (offline substitute for `criterion`).
+//!
+//! Criterion-style protocol: warmup, then N timed samples of adaptive
+//! iteration count, reporting min / median / p95.  Used by the files under
+//! `rust/benches/` (registered with `harness = false`).
+
+use std::time::{Duration, Instant};
+
+/// One benchmark result.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub median: Duration,
+    pub min: Duration,
+    pub p95: Duration,
+    pub iters_per_sample: u64,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "{:<52} time: [{:>10.3?} {:>10.3?} {:>10.3?}]  ({} iters/sample)",
+            self.name, self.min, self.median, self.p95, self.iters_per_sample
+        );
+    }
+}
+
+/// Benchmark `f`, returning per-iteration statistics.
+///
+/// Adaptive: picks an iteration count so one sample takes ~`target_sample`,
+/// then collects `samples` samples.
+pub fn bench_with(
+    name: &str,
+    samples: usize,
+    target_sample: Duration,
+    mut f: impl FnMut(),
+) -> BenchResult {
+    // Warmup + calibration.
+    f();
+    let t0 = Instant::now();
+    f();
+    let one = t0.elapsed().max(Duration::from_nanos(50));
+    let iters = (target_sample.as_nanos() / one.as_nanos()).clamp(1, 1_000_000) as u64;
+
+    let mut per_iter: Vec<Duration> = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        per_iter.push(t0.elapsed() / iters as u32);
+    }
+    per_iter.sort();
+    let r = BenchResult {
+        name: name.to_string(),
+        min: per_iter[0],
+        median: per_iter[per_iter.len() / 2],
+        p95: per_iter[((per_iter.len() as f64 * 0.95) as usize).min(per_iter.len() - 1)],
+        iters_per_sample: iters,
+    };
+    r.print();
+    r
+}
+
+/// Default protocol: 20 samples of ~20 ms each.
+pub fn bench(name: &str, f: impl FnMut()) -> BenchResult {
+    bench_with(name, 20, Duration::from_millis(20), f)
+}
+
+/// Quick protocol for expensive bodies (PJRT executions): 10 samples,
+/// 1 iteration each.
+pub fn bench_slow(name: &str, f: impl FnMut()) -> BenchResult {
+    bench_with(name, 10, Duration::from_millis(1), f)
+}
+
+/// Black-box to stop the optimizer from deleting the benchmarked work.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}

@@ -1,0 +1,173 @@
+//! Typed configuration: defaults < config file < CLI overrides.
+//!
+//! The config file is a flat `key = value` format (a strict INI subset —
+//! the offline image has no TOML crate; see Cargo.toml).  Every knob of the
+//! serving stack lives here so deployments are reproducible from one file,
+//! e.g.:
+//!
+//! ```text
+//! # flashsampling.conf
+//! artifacts_dir = artifacts
+//! max_concurrency = 8
+//! kv_blocks = 512
+//! kv_block_size = 16
+//! seed = 42
+//! baseline_sampler = false
+//! temperature = 1.0
+//! max_new_tokens = 64
+//! request_rate = 8.0
+//! num_requests = 64
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::EngineConfig;
+
+/// Full launcher configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Config {
+    pub artifacts_dir: PathBuf,
+    pub max_concurrency: usize,
+    pub kv_blocks: usize,
+    pub kv_block_size: usize,
+    pub seed: u64,
+    pub baseline_sampler: bool,
+    pub temperature: f32,
+    pub max_new_tokens: usize,
+    /// Open-loop arrival rate (req/s) for `serve`.
+    pub request_rate: f64,
+    pub num_requests: usize,
+    /// Output directory for `repro`.
+    pub out_dir: PathBuf,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: "artifacts".into(),
+            max_concurrency: 8,
+            kv_blocks: 512,
+            kv_block_size: 16,
+            seed: 42,
+            baseline_sampler: false,
+            temperature: 1.0,
+            max_new_tokens: 32,
+            request_rate: 8.0,
+            num_requests: 32,
+            out_dir: "results".into(),
+        }
+    }
+}
+
+impl Config {
+    /// Parse a flat `key = value` file over the defaults.
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let mut cfg = Self::default();
+        cfg.apply_pairs(parse_pairs(&text)?)?;
+        Ok(cfg)
+    }
+
+    /// Apply `key=value` CLI overrides (e.g. `--set seed=7`).
+    pub fn apply_pairs(&mut self, pairs: BTreeMap<String, String>) -> Result<()> {
+        for (k, v) in pairs {
+            match k.as_str() {
+                "artifacts_dir" => self.artifacts_dir = v.into(),
+                "max_concurrency" => self.max_concurrency = v.parse()?,
+                "kv_blocks" => self.kv_blocks = v.parse()?,
+                "kv_block_size" => self.kv_block_size = v.parse()?,
+                "seed" => self.seed = v.parse()?,
+                "baseline_sampler" => self.baseline_sampler = v.parse()?,
+                "temperature" => self.temperature = v.parse()?,
+                "max_new_tokens" => self.max_new_tokens = v.parse()?,
+                "request_rate" => self.request_rate = v.parse()?,
+                "num_requests" => self.num_requests = v.parse()?,
+                "out_dir" => self.out_dir = v.into(),
+                other => bail!("unknown config key '{other}'"),
+            }
+        }
+        if self.temperature <= 0.0 {
+            bail!("temperature must be > 0");
+        }
+        if self.max_concurrency == 0 {
+            bail!("max_concurrency must be >= 1");
+        }
+        Ok(())
+    }
+
+    pub fn engine_config(&self) -> EngineConfig {
+        EngineConfig {
+            max_concurrency: self.max_concurrency,
+            kv_blocks: self.kv_blocks,
+            kv_block_size: self.kv_block_size,
+            seed: self.seed,
+            baseline_sampler: self.baseline_sampler,
+        }
+    }
+}
+
+/// Parse `key = value` lines; `#` comments and blank lines ignored.
+pub fn parse_pairs(text: &str) -> Result<BTreeMap<String, String>> {
+    let mut out = BTreeMap::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let Some((k, v)) = line.split_once('=') else {
+            bail!("line {}: expected 'key = value', got '{line}'", lineno + 1);
+        };
+        out.insert(k.trim().to_string(), v.trim().to_string());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = Config::default();
+        assert!(c.temperature > 0.0);
+        assert!(c.max_concurrency >= 1);
+    }
+
+    #[test]
+    fn parse_pairs_handles_comments_and_spacing() {
+        let p = parse_pairs("a = 1\n# comment\n\n b=2  # trailing\n").unwrap();
+        assert_eq!(p["a"], "1");
+        assert_eq!(p["b"], "2");
+        assert!(parse_pairs("no equals here").is_err());
+    }
+
+    #[test]
+    fn overrides_apply_and_validate() {
+        let mut c = Config::default();
+        c.apply_pairs(parse_pairs("seed = 7\nbaseline_sampler = true").unwrap())
+            .unwrap();
+        assert_eq!(c.seed, 7);
+        assert!(c.baseline_sampler);
+        assert!(c
+            .apply_pairs(parse_pairs("bogus_key = 1").unwrap())
+            .is_err());
+        assert!(c
+            .apply_pairs(parse_pairs("temperature = 0").unwrap())
+            .is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let path = std::env::temp_dir().join("fs_config_test.conf");
+        std::fs::write(&path, "max_concurrency = 4\nrequest_rate = 2.5\n").unwrap();
+        let c = Config::from_file(&path).unwrap();
+        assert_eq!(c.max_concurrency, 4);
+        assert!((c.request_rate - 2.5).abs() < 1e-9);
+        // engine config mirrors the fields
+        assert_eq!(c.engine_config().max_concurrency, 4);
+    }
+}

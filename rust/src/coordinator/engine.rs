@@ -1,0 +1,518 @@
+//! The serving engine: continuous batching over AOT decode/prefill
+//! executables with the FlashSampling LM head fused in.
+//!
+//! One `Engine` owns a PJRT runtime, the cached weight literals, the paged
+//! KV accounting, and the waiting/running sequence sets.  `step()` executes
+//! exactly one scheduler plan (a prefill batch or a decode batch) — the
+//! granularity at which vLLM's engine loop operates — and `serve()` replays
+//! an open-loop workload against the wall clock, producing the §4.5-style
+//! TPOT/TTFT metrics.
+//!
+//! The decode hot path never touches Python and never materializes logits:
+//! `decode_sample_b{B}` runs (transformer step → LM-head matmul → fused
+//! Gumbel epilogue → tile reduction) inside a single XLA executable.
+
+use std::collections::VecDeque;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::request::{Completion, FinishReason, Request, SeqKv, SeqState, Sequence};
+use super::scheduler::{plan, Plan, SchedulerConfig};
+use crate::kvcache::{KvCacheConfig, KvCacheManager};
+use crate::metrics::ServingMetrics;
+use crate::runtime::{Runtime, Tensor};
+use crate::sampling::Key;
+use crate::workload::RequestSpec;
+
+/// Engine configuration.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Upper bound on concurrently decoding sequences.
+    pub max_concurrency: usize,
+    /// Paged-KV accounting pool (blocks of `kv_block_size` tokens).
+    pub kv_blocks: usize,
+    pub kv_block_size: usize,
+    /// RNG seed for the whole serving session.
+    pub seed: u64,
+    /// Use the baseline (materialized-logits multinomial) decode artifact
+    /// instead of FlashSampling — the paper's §4.5 A/B switch.
+    pub baseline_sampler: bool,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self {
+            max_concurrency: 8,
+            kv_blocks: 512,
+            kv_block_size: 16,
+            seed: 0xF1A5_4_5A3,
+            baseline_sampler: false,
+        }
+    }
+}
+
+/// Steady-state decode fast path: when consecutive decode steps run the
+/// SAME sequence set in the same bucket, the batch KV cache stays as the
+/// previous step's output literals — no gather from per-sequence storage,
+/// no host->literal conversion, no scatter back (≈19 ms/step saved on this
+/// testbed, EXPERIMENTS.md §Perf L3).  The per-sequence `SeqKv` copies are
+/// synchronized lazily whenever the batch composition changes.
+struct DecodeCache {
+    seq_ids: Vec<u64>,
+    b_bucket: usize,
+    kv_k: xla::Literal,
+    kv_v: xla::Literal,
+}
+
+/// The serving engine (single-threaded; see `crate::tp` for the
+/// multi-rank orchestrator).
+pub struct Engine {
+    rt: Runtime,
+    cfg: EngineConfig,
+    sched: SchedulerConfig,
+    /// Weight literals in canonical order (uploaded once).
+    params_lit: Vec<xla::Literal>,
+    /// Index of "lm_head" within the canonical order (first-token sampling).
+    lm_head_idx: usize,
+    kvmgr: KvCacheManager,
+    waiting: VecDeque<Sequence>,
+    running: Vec<Sequence>,
+    /// Monotonic decode-step counter — the Philox `step` input, so every
+    /// scheduler iteration draws fresh noise.
+    step_counter: u32,
+    key: Key,
+    decode_cache: Option<DecodeCache>,
+    pub metrics: ServingMetrics,
+}
+
+impl Engine {
+    pub fn new(artifacts_dir: impl AsRef<Path>, cfg: EngineConfig) -> Result<Self> {
+        let rt = Runtime::new(artifacts_dir)?;
+        let model = rt.manifest().model.clone();
+        let params = rt.params_in_order()?;
+        let params_lit: Vec<xla::Literal> = params
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let lm_head_idx = model
+            .param_order
+            .iter()
+            .position(|n| n == "lm_head")
+            .context("lm_head missing from param order")?;
+        let sched = SchedulerConfig {
+            decode_buckets: model.decode_buckets.clone(),
+            prefill_t_buckets: model.prefill_t_buckets.clone(),
+            prefill_b: model.prefill_b,
+            max_concurrency: cfg.max_concurrency,
+        };
+        let kvmgr = KvCacheManager::new(KvCacheConfig {
+            block_size: cfg.kv_block_size,
+            num_blocks: cfg.kv_blocks,
+        });
+        let key = Key::from_seed(cfg.seed);
+        Ok(Self {
+            rt,
+            cfg,
+            sched,
+            params_lit,
+            lm_head_idx,
+            kvmgr,
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+            step_counter: 0,
+            key,
+            decode_cache: None,
+            metrics: ServingMetrics::default(),
+        })
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    fn model(&self) -> &crate::runtime::ModelInfo {
+        &self.rt.manifest().model
+    }
+
+    /// Per-sequence KV block length `[L, H, S, Dh]`.
+    fn kv_len(&self) -> usize {
+        let m = self.model();
+        m.n_layers * m.n_heads * m.max_seq * m.head_dim()
+    }
+
+    /// Submit a request (validated against model limits).
+    pub fn submit(&mut self, req: Request) -> Result<()> {
+        let m = self.model();
+        if req.prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        let max_t = *m.prefill_t_buckets.last().unwrap();
+        if req.prompt.len() > max_t {
+            bail!(
+                "prompt of {} tokens exceeds the largest prefill bucket {max_t}",
+                req.prompt.len()
+            );
+        }
+        if req.prompt.len() + req.params.max_new_tokens > m.max_seq {
+            bail!(
+                "prompt {} + budget {} exceeds max_seq {}",
+                req.prompt.len(),
+                req.params.max_new_tokens,
+                m.max_seq
+            );
+        }
+        if req.prompt.iter().any(|&t| t < 0 || t as usize >= m.vocab) {
+            bail!("prompt token out of vocab range");
+        }
+        self.waiting.push_back(Sequence::new(req));
+        Ok(())
+    }
+
+    pub fn pending(&self) -> usize {
+        self.waiting.len() + self.running.len()
+    }
+
+    /// One scheduler iteration.  Returns completions finished this step.
+    pub fn step(&mut self) -> Result<Vec<Completion>> {
+        let t0 = Instant::now();
+        let waiting: Vec<Sequence> = self.waiting.iter().cloned().collect();
+        let p = plan(&self.sched, &waiting, &self.running, |tokens| {
+            self.kvmgr.can_allocate(tokens)
+        });
+        let out = match p {
+            Plan::Prefill { seq_ids, t_bucket } => self.do_prefill(&seq_ids, t_bucket),
+            Plan::Decode { seq_ids, b_bucket } => self.do_decode(&seq_ids, b_bucket),
+            Plan::Idle => Ok(Vec::new()),
+        };
+        self.metrics.bump("step_total_us", t0.elapsed().as_micros() as u64);
+        out
+    }
+
+    /// Drain everything currently submitted.
+    pub fn run_to_completion(&mut self) -> Result<Vec<Completion>> {
+        let mut done = Vec::new();
+        while self.pending() > 0 {
+            let before = self.pending();
+            done.extend(self.step()?);
+            if self.pending() == before && done.is_empty() && self.running.is_empty()
+            {
+                // Waiting sequences that can never be admitted => reject.
+                if let Some(seq) = self.waiting.pop_front() {
+                    done.push(seq.into_completion(FinishReason::Rejected));
+                    continue;
+                }
+                break;
+            }
+        }
+        Ok(done)
+    }
+
+    /// Open-loop serve: admit requests at their arrival offsets (wall
+    /// clock), run until all complete.  Returns per-run metrics.
+    pub fn serve(&mut self, mut specs: Vec<RequestSpec>) -> Result<Vec<Completion>> {
+        specs.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+        let start = Instant::now();
+        let mut next = 0usize;
+        let mut done = Vec::new();
+        while next < specs.len() || self.pending() > 0 {
+            // Admit everything that has arrived by now.
+            let now = start.elapsed().as_secs_f64();
+            while next < specs.len() && specs[next].arrival_s <= now {
+                let s = &specs[next];
+                self.submit(Request {
+                    id: s.id,
+                    prompt: s.prompt.clone(),
+                    params: super::request::SamplingParams {
+                        temperature: s.temperature,
+                        max_new_tokens: s.max_new_tokens,
+                        eos_token: None,
+                    },
+                })?;
+                next += 1;
+            }
+            if self.pending() == 0 {
+                // Nothing in flight: sleep until the next arrival.
+                if next < specs.len() {
+                    let wait = specs[next].arrival_s - start.elapsed().as_secs_f64();
+                    if wait > 0.0 {
+                        std::thread::sleep(std::time::Duration::from_secs_f64(
+                            wait.min(0.05),
+                        ));
+                    }
+                }
+                continue;
+            }
+            done.extend(self.step()?);
+        }
+        self.metrics.wall = start.elapsed();
+        for c in &done {
+            if let Some(t) = c.timing.ttft {
+                self.metrics.ttft.push(t);
+            }
+            if let Some(t) = c.timing.tpot() {
+                self.metrics.tpot.push(t);
+            }
+        }
+        self.metrics.requests_completed += done.len() as u64;
+        Ok(done)
+    }
+
+    // --- prefill ---------------------------------------------------------
+
+    fn do_prefill(&mut self, seq_ids: &[u64], t_bucket: usize) -> Result<Vec<Completion>> {
+        let m = self.model().clone();
+        let b = m.prefill_b;
+        // Pull the chosen sequences out of the waiting queue (keep order).
+        let mut seqs: Vec<Sequence> = Vec::with_capacity(seq_ids.len());
+        for id in seq_ids {
+            let idx = self
+                .waiting
+                .iter()
+                .position(|s| s.id == *id)
+                .context("planned sequence vanished")?;
+            seqs.push(self.waiting.remove(idx).unwrap());
+        }
+
+        // Register KV accounting now that admission is final.
+        for s in &seqs {
+            self.kvmgr.register(s.id, s.context_len())?;
+        }
+
+        // Pack the padded token matrix [B, T] + lengths [B].
+        let mut tokens = vec![0i32; b * t_bucket];
+        let mut lengths = vec![1i32; b]; // pad rows: length 1 of token 0
+        for (row, s) in seqs.iter().enumerate() {
+            lengths[row] = s.prompt.len() as i32;
+            tokens[row * t_bucket..row * t_bucket + s.prompt.len()]
+                .copy_from_slice(&s.prompt);
+        }
+        let pad_rows = b - seqs.len();
+        self.metrics.bump("prefill_pad_rows", pad_rows as u64);
+
+        let name = format!("prefill_b{b}_t{t_bucket}");
+        let exe = self.rt.load(&name)?;
+        let tok_lit = Tensor::I32(tokens, vec![b, t_bucket]).to_literal()?;
+        let len_lit = Tensor::I32(lengths, vec![b]).to_literal()?;
+        let mut lits: Vec<&xla::Literal> = self.params_lit.iter().collect();
+        lits.push(&tok_lit);
+        lits.push(&len_lit);
+        let out = exe.run_literals(&lits)?;
+        let kv_k = out[0].as_f32()?;
+        let kv_v = out[1].as_f32()?;
+        let hidden = out[2].clone();
+
+        // First output token comes from the prefill hidden state through the
+        // fused FlashSampling LM head.
+        let sample_name = format!("sample_hidden_b{b}");
+        let sampler = self.rt.load(&sample_name)?;
+        let hid_lit = hidden.to_literal()?;
+        let seed_lit = Tensor::seed(self.key).to_literal()?;
+        let step_lit = Tensor::scalar_u32(self.bump_step()).to_literal()?;
+        let tau = seqs.first().map(|s| s.params.temperature).unwrap_or(1.0);
+        let tau_lit = Tensor::scalar_f32(tau).to_literal()?;
+        let first = sampler.run_literals(&[
+            &hid_lit,
+            &self.params_lit[self.lm_head_idx],
+            &seed_lit,
+            &step_lit,
+            &tau_lit,
+        ])?;
+        let first_tokens = first[0].as_i32()?.to_vec();
+
+        // Slice each row's KV out of the [L, B, H, S, Dh] batch tensors.
+        let row_len = m.n_heads * m.max_seq * m.head_dim();
+        let now = Instant::now();
+        let mut completions = Vec::new();
+        for (row, mut s) in seqs.into_iter().enumerate() {
+            let mut k = vec![0.0f32; self.kv_len()];
+            let mut v = vec![0.0f32; self.kv_len()];
+            for l in 0..m.n_layers {
+                let src = (l * b + row) * row_len;
+                let dst = l * row_len;
+                k[dst..dst + row_len].copy_from_slice(&kv_k[src..src + row_len]);
+                v[dst..dst + row_len].copy_from_slice(&kv_v[src..src + row_len]);
+            }
+            s.kv = Some(SeqKv { k, v });
+            s.generated.push(first_tokens[row]);
+            s.state = SeqState::Running;
+            s.first_token_at = Some(now);
+            s.last_token_at = Some(now);
+            s.timing.ttft = Some(now - s.arrived);
+            self.kvmgr.append_token(s.id)?;
+            self.metrics.tokens_generated += 1;
+            self.metrics.prefill_tokens += s.prompt.len() as u64;
+            if let Some(reason) = s.finished() {
+                self.kvmgr.release(s.id)?;
+                completions.push(s.into_completion(reason));
+            } else {
+                self.running.push(s);
+            }
+        }
+        Ok(completions)
+    }
+
+    // --- decode ----------------------------------------------------------
+
+    /// Pull the cached batch KV back into per-sequence storage (lazy sync
+    /// when the batch composition changes).  Sequences that finished since
+    /// the cache was taken are skipped — their blocks are already released.
+    fn sync_cache_to_seqs(&mut self) -> Result<()> {
+        let Some(cache) = self.decode_cache.take() else {
+            return Ok(());
+        };
+        let m = self.model().clone();
+        let row_len = m.n_heads * m.max_seq * m.head_dim();
+        let kvk = Tensor::from_literal(&cache.kv_k)?;
+        let kvv = Tensor::from_literal(&cache.kv_v)?;
+        let (kvk, kvv) = (kvk.as_f32()?, kvv.as_f32()?);
+        let b = cache.b_bucket;
+        for (slot, id) in cache.seq_ids.iter().enumerate() {
+            let Some(seq) = self.running.iter_mut().find(|s| s.id == *id) else {
+                continue;
+            };
+            let kv = seq.kv.as_mut().context("running sequence without KV")?;
+            for l in 0..m.n_layers {
+                let src = (l * b + slot) * row_len;
+                let dst = l * row_len;
+                kv.k[dst..dst + row_len].copy_from_slice(&kvk[src..src + row_len]);
+                kv.v[dst..dst + row_len].copy_from_slice(&kvv[src..src + row_len]);
+            }
+        }
+        Ok(())
+    }
+
+    fn do_decode(&mut self, seq_ids: &[u64], b_bucket: usize) -> Result<Vec<Completion>> {
+        let m = self.model().clone();
+        let row_len = m.n_heads * m.max_seq * m.head_dim();
+        let kv_batch_len = m.n_layers * b_bucket * row_len;
+
+        // Steady-state fast path: same batch as last step => reuse the
+        // previous output literals as this step's KV inputs directly.
+        let cache_hit = self
+            .decode_cache
+            .as_ref()
+            .is_some_and(|c| c.seq_ids == seq_ids && c.b_bucket == b_bucket);
+        if !cache_hit {
+            self.sync_cache_to_seqs()?;
+        }
+
+        let t_gather = Instant::now();
+        let rows: Vec<usize> = seq_ids
+            .iter()
+            .map(|id| {
+                self.running
+                    .iter()
+                    .position(|s| s.id == *id)
+                    .context("planned sequence vanished")
+            })
+            .collect::<Result<_>>()?;
+
+        let mut pos = vec![0i32; b_bucket];
+        let mut tok = vec![0i32; b_bucket];
+        for (slot, &ri) in rows.iter().enumerate() {
+            let s = &self.running[ri];
+            pos[slot] = s.next_pos() as i32;
+            tok[slot] = s.input_token();
+        }
+
+        let (kvk_lit, kvv_lit) = if cache_hit {
+            self.metrics.bump("decode_cache_hits", 1);
+            let c = self.decode_cache.take().unwrap();
+            (c.kv_k, c.kv_v)
+        } else {
+            let mut kv_k = vec![0.0f32; kv_batch_len];
+            let mut kv_v = vec![0.0f32; kv_batch_len];
+            for (slot, &ri) in rows.iter().enumerate() {
+                let s = &self.running[ri];
+                let kv = s.kv.as_ref().context("running sequence without KV")?;
+                for l in 0..m.n_layers {
+                    let dst = (l * b_bucket + slot) * row_len;
+                    let src = l * row_len;
+                    kv_k[dst..dst + row_len]
+                        .copy_from_slice(&kv.k[src..src + row_len]);
+                    kv_v[dst..dst + row_len]
+                        .copy_from_slice(&kv.v[src..src + row_len]);
+                }
+            }
+            let kv_shape =
+                vec![m.n_layers, b_bucket, m.n_heads, m.max_seq, m.head_dim()];
+            (
+                Tensor::F32(kv_k, kv_shape.clone()).to_literal()?,
+                Tensor::F32(kv_v, kv_shape).to_literal()?,
+            )
+        };
+        self.metrics.bump("decode_pad_rows", (b_bucket - rows.len()) as u64);
+        self.metrics.decode_batch_sizes.push(rows.len());
+        self.metrics.bump("decode_gather_us", t_gather.elapsed().as_micros() as u64);
+
+        let kind = if self.cfg.baseline_sampler { "decode_baseline" } else { "decode_sample" };
+        let name = format!("{kind}_b{b_bucket}");
+        let exe = self.rt.load(&name)?;
+        let t_lit = Instant::now();
+        let pos_lit = Tensor::I32(pos, vec![b_bucket]).to_literal()?;
+        let tok_lit = Tensor::I32(tok, vec![b_bucket]).to_literal()?;
+        let seed_lit = Tensor::seed(self.key).to_literal()?;
+        let step_lit = Tensor::scalar_u32(self.bump_step()).to_literal()?;
+        let tau = self.running[rows[0]].params.temperature;
+        let tau_lit = Tensor::scalar_f32(tau).to_literal()?;
+
+        let mut lits: Vec<&xla::Literal> = self.params_lit.iter().collect();
+        lits.extend([&kvk_lit, &kvv_lit, &pos_lit, &tok_lit, &seed_lit, &step_lit,
+                     &tau_lit]);
+        self.metrics.bump("decode_lit_us", t_lit.elapsed().as_micros() as u64);
+        let t_exec = Instant::now();
+        let mut out = exe.run_literals_raw(&lits)?;
+        self.metrics.bump("decode_exec_us", t_exec.elapsed().as_micros() as u64);
+        anyhow::ensure!(out.len() == 3, "decode artifact returned {} outputs", out.len());
+        let sample_lit = out.pop().unwrap();
+        let new_v = out.pop().unwrap();
+        let new_k = out.pop().unwrap();
+        let samples = Tensor::from_literal(&sample_lit)?.as_i32()?.to_vec();
+
+        // The new KV lives on as next step's input (lazy per-seq sync).
+        self.decode_cache = Some(DecodeCache {
+            seq_ids: seq_ids.to_vec(),
+            b_bucket,
+            kv_k: new_k,
+            kv_v: new_v,
+        });
+
+        // Token bookkeeping + completions.
+        let now = Instant::now();
+        let mut finished: Vec<(usize, FinishReason)> = Vec::new();
+        for (slot, &ri) in rows.iter().enumerate() {
+            let s = &mut self.running[ri];
+            s.generated.push(samples[slot]);
+            if let Some(prev) = s.last_token_at {
+                s.timing.token_latencies.push(now - prev);
+            }
+            s.last_token_at = Some(now);
+            self.metrics.tokens_generated += 1;
+            if let Some(reason) = s.finished() {
+                finished.push((ri, reason));
+            } else if !self.kvmgr.append_token(s.id)? {
+                // KV pool exhausted: preempt (release blocks, back to queue).
+                self.metrics.bump("preempted", 1);
+                finished.push((ri, FinishReason::MaxTokens));
+            }
+        }
+
+        // Remove finished rows (descending index to keep positions stable).
+        finished.sort_by(|a, b| b.0.cmp(&a.0));
+        let mut completions = Vec::new();
+        for (ri, reason) in finished {
+            let s = self.running.remove(ri);
+            self.kvmgr.release(s.id)?;
+            completions.push(s.into_completion(reason));
+        }
+        Ok(completions)
+    }
+
+    fn bump_step(&mut self) -> u32 {
+        let s = self.step_counter;
+        self.step_counter += 1;
+        s
+    }
+}

@@ -1,0 +1,16 @@
+//! L3 coordinator — the paper's serving-stack integration (§4.5).
+//!
+//! A vLLM-shaped engine: request admission → continuous batcher →
+//! prefill/decode scheduler → PJRT execution of fused decode+sample
+//! artifacts → TPOT/TTFT metrics.  The FlashSampling contribution is wired
+//! in as a first-class feature: the decode artifact's LM head *is* the
+//! fused kernel, and `EngineConfig::baseline_sampler` flips the A/B switch
+//! to the materialized-logits baseline the paper compares against.
+
+pub mod engine;
+pub mod request;
+pub mod scheduler;
+
+pub use engine::{Engine, EngineConfig};
+pub use request::{Completion, FinishReason, Request, SamplingParams, Sequence};
+pub use scheduler::{Plan, SchedulerConfig};

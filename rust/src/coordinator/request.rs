@@ -1,0 +1,198 @@
+//! Request/sequence types — the coordinator's state machine currency.
+
+use std::time::Instant;
+
+use crate::metrics::RequestTiming;
+
+/// Per-request sampling configuration (vLLM `SamplingParams` analogue).
+#[derive(Clone, Debug)]
+pub struct SamplingParams {
+    /// Softmax temperature (tau > 0). Sequences batch together only with
+    /// equal temperature because the fused artifact takes one tau per batch.
+    pub temperature: f32,
+    /// Maximum number of generated tokens.
+    pub max_new_tokens: usize,
+    /// Optional stop token.
+    pub eos_token: Option<i32>,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        Self { temperature: 1.0, max_new_tokens: 32, eos_token: None }
+    }
+}
+
+/// An incoming generation request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub params: SamplingParams,
+}
+
+/// Why a sequence stopped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    MaxTokens,
+    EosToken,
+    /// Dropped because the prompt can never fit (prompt + budget > max_seq).
+    Rejected,
+}
+
+/// A finished generation.
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub id: u64,
+    pub prompt_len: usize,
+    pub tokens: Vec<i32>,
+    pub finish: FinishReason,
+    pub timing: RequestTiming,
+}
+
+/// Lifecycle state of a sequence inside the engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SeqState {
+    /// Admitted, prompt not yet prefetched into the KV cache.
+    Waiting,
+    /// KV cache holds the prompt; decoding.
+    Running,
+    /// Preempted under memory pressure; must re-prefill.
+    Preempted,
+}
+
+/// Per-sequence KV storage: dense `[L, H, S, Dh]` f32 blocks for K and V.
+///
+/// (The paged `kvcache::KvCacheManager` tracks the *logical* block
+/// accounting; this is the physical storage the dense AOT artifacts consume
+/// — see DESIGN.md §2.)
+#[derive(Clone, Debug)]
+pub struct SeqKv {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+/// A live sequence.
+#[derive(Clone, Debug)]
+pub struct Sequence {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub generated: Vec<i32>,
+    pub params: SamplingParams,
+    pub state: SeqState,
+    pub kv: Option<SeqKv>,
+    pub arrived: Instant,
+    pub first_token_at: Option<Instant>,
+    pub last_token_at: Option<Instant>,
+    pub timing: RequestTiming,
+}
+
+impl Sequence {
+    pub fn new(req: Request) -> Self {
+        Self {
+            id: req.id,
+            prompt: req.prompt,
+            generated: Vec::new(),
+            params: req.params,
+            state: SeqState::Waiting,
+            kv: None,
+            arrived: Instant::now(),
+            first_token_at: None,
+            last_token_at: None,
+            timing: RequestTiming::default(),
+        }
+    }
+
+    /// Total tokens resident in the KV cache (prompt + generated).
+    pub fn context_len(&self) -> usize {
+        self.prompt.len() + self.generated.len()
+    }
+
+    /// Position at which the *next* token will be written.
+    pub fn next_pos(&self) -> usize {
+        self.context_len() - 1
+    }
+
+    /// The token to feed into the next decode step.
+    pub fn input_token(&self) -> i32 {
+        *self.generated.last().unwrap_or_else(|| {
+            self.prompt.last().expect("prompt must be non-empty")
+        })
+    }
+
+    /// Has the sequence hit a stop condition?
+    pub fn finished(&self) -> Option<FinishReason> {
+        if let (Some(eos), Some(&last)) =
+            (self.params.eos_token, self.generated.last())
+        {
+            if last == eos {
+                return Some(FinishReason::EosToken);
+            }
+        }
+        if self.generated.len() >= self.params.max_new_tokens {
+            return Some(FinishReason::MaxTokens);
+        }
+        None
+    }
+
+    pub fn into_completion(self, finish: FinishReason) -> Completion {
+        Completion {
+            id: self.id,
+            prompt_len: self.prompt.len(),
+            tokens: self.generated,
+            finish,
+            timing: self.timing,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(prompt: Vec<i32>, max_new: usize) -> Request {
+        Request {
+            id: 1,
+            prompt,
+            params: SamplingParams {
+                max_new_tokens: max_new,
+                ..Default::default()
+            },
+        }
+    }
+
+    #[test]
+    fn positions_and_inputs() {
+        let mut s = Sequence::new(req(vec![5, 6, 7], 4));
+        assert_eq!(s.context_len(), 3);
+        assert_eq!(s.next_pos(), 2);
+        assert_eq!(s.input_token(), 7);
+        s.generated.push(42);
+        assert_eq!(s.context_len(), 4);
+        assert_eq!(s.next_pos(), 3);
+        assert_eq!(s.input_token(), 42);
+    }
+
+    #[test]
+    fn finish_conditions() {
+        let mut s = Sequence::new(req(vec![1], 2));
+        assert_eq!(s.finished(), None);
+        s.generated.push(9);
+        assert_eq!(s.finished(), None);
+        s.generated.push(9);
+        assert_eq!(s.finished(), Some(FinishReason::MaxTokens));
+
+        let mut s = Sequence::new(Request {
+            id: 2,
+            prompt: vec![1],
+            params: SamplingParams {
+                max_new_tokens: 100,
+                eos_token: Some(0),
+                ..Default::default()
+            },
+        });
+        s.generated.push(3);
+        assert_eq!(s.finished(), None);
+        s.generated.push(0);
+        assert_eq!(s.finished(), Some(FinishReason::EosToken));
+    }
+}

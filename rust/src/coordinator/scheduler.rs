@@ -1,0 +1,237 @@
+//! Prefill/decode scheduler: each engine iteration plans ONE batch —
+//! continuous batching over fixed-shape executables.
+//!
+//! Policy (vLLM-v1-like, prefill-prioritized):
+//!   1. If waiting sequences exist and KV blocks are available, plan a
+//!      prefill batch: up to `prefill_b` prompts that fit the smallest
+//!      viable T bucket, grouped by temperature.
+//!   2. Otherwise plan a decode batch: up to the largest decode bucket of
+//!      running sequences, FCFS, grouped by temperature (the fused artifact
+//!      takes one tau per batch).
+//!
+//! Fixed-shape executables mean the batch is padded up to a bucket —
+//! exactly how GPU serving stacks pad to CUDA-graph capture sizes; padding
+//! waste is surfaced in metrics as `pad_slots`.
+
+use super::request::{SeqState, Sequence};
+
+/// What the engine should execute next.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Plan {
+    /// Prefill these waiting sequences (indices into the waiting queue)
+    /// using the `t_bucket` prefill artifact.
+    Prefill { seq_ids: Vec<u64>, t_bucket: usize },
+    /// Decode these running sequences using the `b_bucket` artifact.
+    Decode { seq_ids: Vec<u64>, b_bucket: usize },
+    /// Nothing to do.
+    Idle,
+}
+
+/// Scheduler configuration derived from the artifact manifest.
+#[derive(Clone, Debug)]
+pub struct SchedulerConfig {
+    /// Available decode batch buckets, ascending (e.g. [1, 2, 4, 8]).
+    pub decode_buckets: Vec<usize>,
+    /// Available prefill T buckets, ascending (e.g. [16, 64]).
+    pub prefill_t_buckets: Vec<usize>,
+    /// Prefill batch size (fixed per artifact).
+    pub prefill_b: usize,
+    /// Upper bound on concurrently running sequences.
+    pub max_concurrency: usize,
+}
+
+/// Pick the smallest bucket >= n (or the largest available if n exceeds all).
+pub fn pick_bucket(buckets: &[usize], n: usize) -> usize {
+    buckets
+        .iter()
+        .copied()
+        .find(|&b| b >= n)
+        .unwrap_or_else(|| *buckets.last().expect("no buckets"))
+}
+
+/// Plan the next engine iteration.
+///
+/// `can_admit(tokens)` reports whether the KV manager can hold a new
+/// sequence of that many tokens (admission control).
+pub fn plan(
+    cfg: &SchedulerConfig,
+    waiting: &[Sequence],
+    running: &[Sequence],
+    can_admit: impl Fn(usize) -> bool,
+) -> Plan {
+    // --- Prefill-priority: batch waiting prompts while capacity allows.
+    if running.len() < cfg.max_concurrency {
+        let headroom = cfg.max_concurrency - running.len();
+        let max_t = *cfg.prefill_t_buckets.last().unwrap();
+        // FCFS scan: take same-temperature prompts that fit the cache.
+        let mut chosen: Vec<&Sequence> = Vec::new();
+        for s in waiting.iter().filter(|s| s.state == SeqState::Waiting) {
+            if s.prompt.len() > max_t || !can_admit(s.context_len()) {
+                continue;
+            }
+            if let Some(first) = chosen.first() {
+                if s.params.temperature != first.params.temperature {
+                    continue; // one tau per fused batch
+                }
+            }
+            chosen.push(s);
+            if chosen.len() == cfg.prefill_b.min(headroom) {
+                break;
+            }
+        }
+        if !chosen.is_empty() {
+            let longest = chosen.iter().map(|s| s.prompt.len()).max().unwrap();
+            return Plan::Prefill {
+                seq_ids: chosen.iter().map(|s| s.id).collect(),
+                t_bucket: pick_bucket(&cfg.prefill_t_buckets, longest),
+            };
+        }
+    }
+
+    // --- Decode: FCFS over running sequences, grouped by temperature.
+    let decodable: Vec<&Sequence> = running
+        .iter()
+        .filter(|s| s.state == SeqState::Running)
+        .collect();
+    if decodable.is_empty() {
+        return Plan::Idle;
+    }
+    let tau = decodable[0].params.temperature;
+    let max_b = *cfg.decode_buckets.last().unwrap();
+    let group: Vec<u64> = decodable
+        .iter()
+        .filter(|s| s.params.temperature == tau)
+        .take(max_b)
+        .map(|s| s.id)
+        .collect();
+    let bucket = pick_bucket(&cfg.decode_buckets, group.len());
+    Plan::Decode { seq_ids: group, b_bucket: bucket }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::{Request, SamplingParams};
+
+    fn cfg() -> SchedulerConfig {
+        SchedulerConfig {
+            decode_buckets: vec![1, 2, 4, 8],
+            prefill_t_buckets: vec![16, 64],
+            prefill_b: 4,
+            max_concurrency: 8,
+        }
+    }
+
+    fn seq(id: u64, prompt_len: usize, tau: f32, state: SeqState) -> Sequence {
+        let mut s = Sequence::new(Request {
+            id,
+            prompt: vec![1; prompt_len],
+            params: SamplingParams { temperature: tau, ..Default::default() },
+        });
+        s.state = state;
+        s
+    }
+
+    #[test]
+    fn bucket_selection() {
+        assert_eq!(pick_bucket(&[1, 2, 4, 8], 1), 1);
+        assert_eq!(pick_bucket(&[1, 2, 4, 8], 3), 4);
+        assert_eq!(pick_bucket(&[1, 2, 4, 8], 8), 8);
+        assert_eq!(pick_bucket(&[1, 2, 4, 8], 20), 8); // clamp to largest
+    }
+
+    #[test]
+    fn prefill_takes_priority() {
+        let waiting = vec![seq(1, 10, 1.0, SeqState::Waiting)];
+        let running = vec![seq(2, 5, 1.0, SeqState::Running)];
+        let p = plan(&cfg(), &waiting, &running, |_| true);
+        assert_eq!(
+            p,
+            Plan::Prefill { seq_ids: vec![1], t_bucket: 16 }
+        );
+    }
+
+    #[test]
+    fn prefill_t_bucket_fits_longest() {
+        let waiting = vec![
+            seq(1, 10, 1.0, SeqState::Waiting),
+            seq(2, 40, 1.0, SeqState::Waiting),
+        ];
+        match plan(&cfg(), &waiting, &[], |_| true) {
+            Plan::Prefill { seq_ids, t_bucket } => {
+                assert_eq!(seq_ids, vec![1, 2]);
+                assert_eq!(t_bucket, 64);
+            }
+            p => panic!("expected prefill, got {p:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_prompt_skipped() {
+        let waiting = vec![
+            seq(1, 100, 1.0, SeqState::Waiting), // > max T bucket
+            seq(2, 10, 1.0, SeqState::Waiting),
+        ];
+        match plan(&cfg(), &waiting, &[], |_| true) {
+            Plan::Prefill { seq_ids, .. } => assert_eq!(seq_ids, vec![2]),
+            p => panic!("{p:?}"),
+        }
+    }
+
+    #[test]
+    fn admission_control_blocks_prefill() {
+        let waiting = vec![seq(1, 10, 1.0, SeqState::Waiting)];
+        let running = vec![seq(2, 5, 1.0, SeqState::Running)];
+        let p = plan(&cfg(), &waiting, &running, |_| false);
+        assert_eq!(
+            p,
+            Plan::Decode { seq_ids: vec![2], b_bucket: 1 }
+        );
+    }
+
+    #[test]
+    fn decode_groups_by_temperature() {
+        let running = vec![
+            seq(1, 5, 1.0, SeqState::Running),
+            seq(2, 5, 0.7, SeqState::Running),
+            seq(3, 5, 1.0, SeqState::Running),
+        ];
+        match plan(&cfg(), &[], &running, |_| true) {
+            Plan::Decode { seq_ids, b_bucket } => {
+                assert_eq!(seq_ids, vec![1, 3]); // same tau as head
+                assert_eq!(b_bucket, 2);
+            }
+            p => panic!("{p:?}"),
+        }
+    }
+
+    #[test]
+    fn decode_respects_largest_bucket() {
+        let running: Vec<Sequence> =
+            (0..12).map(|i| seq(i, 5, 1.0, SeqState::Running)).collect();
+        match plan(&cfg(), &[], &running, |_| true) {
+            Plan::Decode { seq_ids, b_bucket } => {
+                assert_eq!(seq_ids.len(), 8);
+                assert_eq!(b_bucket, 8);
+            }
+            p => panic!("{p:?}"),
+        }
+    }
+
+    #[test]
+    fn max_concurrency_caps_prefill() {
+        let waiting = vec![seq(10, 4, 1.0, SeqState::Waiting)];
+        let running: Vec<Sequence> =
+            (0..8).map(|i| seq(i, 5, 1.0, SeqState::Running)).collect();
+        // at capacity: no prefill even though prompts wait
+        match plan(&cfg(), &waiting, &running, |_| true) {
+            Plan::Decode { .. } => {}
+            p => panic!("{p:?}"),
+        }
+    }
+
+    #[test]
+    fn idle_when_empty() {
+        assert_eq!(plan(&cfg(), &[], &[], |_| true), Plan::Idle);
+    }
+}

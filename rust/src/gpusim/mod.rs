@@ -1,0 +1,88 @@
+//! Analytical GPU performance simulator.
+//!
+//! The paper's evaluation hardware (H100/H200/B200/B300, NVLink meshes) is
+//! not available here, so every table and figure is regenerated through an
+//! analytical model of the same quantities the paper's own §3.3 cost model
+//! and §4.4 analysis reason about:
+//!
+//! * **IO model** ([`iomodel`]) — the paper's equations verbatim:
+//!   M_baseline = VD + DB + 2VB + B, M_fused = VD + DB + B, predicted
+//!   speedup ≈ 1 + 2B/D, logits-store overhead 2B/D (Table 9).
+//! * **Kernel-chain model** ([`kernelchain`]) — runtime = per-kernel launch
+//!   overhead + max(traffic / effective bandwidth, flops / effective
+//!   compute).  Baselines pay a *chain* of sampling kernels over
+//!   materialized logits; FlashSampling pays one fused kernel + a tiny
+//!   reduction.  This reproduces the §4.4 finding that kernel elimination,
+//!   not raw traffic, dominates the speedup (Tables 1, 4, 5; Figures 2, 4).
+//! * **Interconnect model** ([`interconnect`]) — all-gather vs overlapped
+//!   P2P fan-out across TP ranks (Table 6, Figure 3).
+//! * **Roofline** ([`roofline`]) — achieved-vs-peak bandwidth and FLOPs
+//!   (Figure 6).
+//! * **TPOT model** ([`tpot`]) — whole-decode-step composition for the
+//!   vLLM-scale models (Tables 7, 8; Figure 5).
+//!
+//! Calibration targets the paper's *shape* (who wins, by what factor, where
+//! the crossovers are), not its absolute microseconds — see EXPERIMENTS.md
+//! for side-by-side numbers.
+
+pub mod interconnect;
+pub mod iomodel;
+pub mod kernelchain;
+pub mod roofline;
+pub mod specs;
+pub mod tpot;
+
+pub use specs::GpuSpec;
+
+/// A sampling method under comparison (the paper's four lines).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    FlashSampling,
+    /// torch.compiled softmax+multinomial chain (Alg. A.1).
+    Multinomial,
+    /// FlashInfer top-k/top-p sampling kernel over materialized logits.
+    Fi1,
+    /// FlashInfer Gumbel-Max over materialized logits.
+    Fi2,
+}
+
+impl Method {
+    pub fn name(self) -> &'static str {
+        match self {
+            Method::FlashSampling => "FlashSampling",
+            Method::Multinomial => "Multinomial",
+            Method::Fi1 => "FI1",
+            Method::Fi2 => "FI2",
+        }
+    }
+
+    pub const ALL: [Method; 4] =
+        [Method::FlashSampling, Method::Multinomial, Method::Fi1, Method::Fi2];
+
+    pub const BASELINES: [Method; 3] =
+        [Method::Multinomial, Method::Fi1, Method::Fi2];
+}
+
+/// Workload shape of one kernel microbenchmark point.
+#[derive(Clone, Copy, Debug)]
+pub struct Workload {
+    pub batch: usize,
+    pub d: usize,
+    pub vocab: usize,
+}
+
+impl Workload {
+    pub fn new(batch: usize, d: usize, vocab: usize) -> Self {
+        Self { batch, d, vocab }
+    }
+
+    /// The paper's small config (Qwen3-8B-like): D=4096, V=151936.
+    pub fn small(batch: usize) -> Self {
+        Self::new(batch, 4096, 151_936)
+    }
+
+    /// The paper's large config (Llama3-70B-like): D=8192, V=128256.
+    pub fn large(batch: usize) -> Self {
+        Self::new(batch, 8192, 128_256)
+    }
+}

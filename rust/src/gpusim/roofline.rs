@@ -1,0 +1,116 @@
+//! Roofline + bandwidth-utilization analysis — Figure 6.
+//!
+//! The LM-head GEMM's arithmetic intensity is ≈ B flops/byte (weights
+//! dominate traffic), so the batch sweep walks along the roofline's
+//! memory-bound slope toward the ridge at AI ≈ ops:byte (281 on B200).
+//! FlashSampling sits above the baselines on both panels because it moves
+//! less data and spends no time in separate kernels.
+
+use super::kernelchain::{chain, ChainCost};
+use super::specs::GpuSpec;
+use super::{Method, Workload};
+
+/// One roofline point.
+#[derive(Clone, Copy, Debug)]
+pub struct RooflinePoint {
+    pub batch: usize,
+    /// Arithmetic intensity, flops per HBM byte.
+    pub intensity: f64,
+    /// Achieved compute, FLOP/s.
+    pub achieved_flops: f64,
+    /// Achieved HBM bandwidth / peak.
+    pub bw_utilization: f64,
+    /// Fraction of the roofline bound actually attained.
+    pub roofline_fraction: f64,
+}
+
+/// Roofline ceiling at a given intensity.
+pub fn roofline_bound(gpu: &GpuSpec, intensity: f64) -> f64 {
+    (intensity * gpu.hbm_bw).min(gpu.bf16_flops)
+}
+
+fn point(gpu: &GpuSpec, cost: &ChainCost, batch: usize) -> RooflinePoint {
+    let t = cost.total();
+    let flops = cost.total_flops();
+    let bytes = cost.total_traffic();
+    let intensity = flops / bytes;
+    let achieved = flops / t;
+    RooflinePoint {
+        batch,
+        intensity,
+        achieved_flops: achieved,
+        bw_utilization: (bytes / t) / gpu.hbm_bw,
+        roofline_fraction: achieved / roofline_bound(gpu, intensity),
+    }
+}
+
+/// Sweep the batch axis for one method (Figure 6 series).
+pub fn sweep(gpu: &GpuSpec, method: Method, w_of: impl Fn(usize) -> Workload,
+             batches: &[usize]) -> Vec<RooflinePoint> {
+    batches
+        .iter()
+        .map(|&b| point(gpu, &chain(gpu, method, w_of(b), false), b))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::specs::B200;
+
+    const BATCHES: [usize; 9] = [1, 2, 4, 8, 16, 32, 64, 128, 256];
+
+    #[test]
+    fn intensity_tracks_batch() {
+        // AI ≈ B for the LM-head GEMM (paper Appendix H).
+        let pts = sweep(&B200, Method::FlashSampling, Workload::small, &BATCHES);
+        for p in &pts {
+            assert!(
+                (p.intensity / p.batch as f64 - 1.0).abs() < 0.3,
+                "B={}: AI={}",
+                p.batch,
+                p.intensity
+            );
+        }
+    }
+
+    #[test]
+    fn memory_bound_slope_then_flattening() {
+        let pts = sweep(&B200, Method::FlashSampling, Workload::small, &BATCHES);
+        // Achieved flops grow ~linearly while memory-bound...
+        let r = pts[4].achieved_flops / pts[0].achieved_flops;
+        assert!(r > 10.0, "B=16/B=1 achieved ratio {r}");
+        // ...but flatten well below the compute ceiling near the ridge
+        // (paper: "performance flattens below the compute ceiling").
+        let last = pts.last().unwrap();
+        assert!(last.achieved_flops < 0.6 * B200.bf16_flops);
+    }
+
+    #[test]
+    fn flashsampling_dominates_bandwidth_utilization() {
+        // Figure 6 right: FS achieves the highest BW utilization in the
+        // decode regime.
+        for &b in &[1usize, 8, 64] {
+            let fs = sweep(&B200, Method::FlashSampling, Workload::small, &[b])[0];
+            for m in Method::BASELINES {
+                let base = sweep(&B200, m, Workload::small, &[b])[0];
+                assert!(
+                    fs.bw_utilization > base.bw_utilization,
+                    "B={b} vs {m:?}: {} !> {}",
+                    fs.bw_utilization,
+                    base.bw_utilization
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn utilization_is_physical() {
+        for m in Method::ALL {
+            for p in sweep(&B200, m, Workload::small, &BATCHES) {
+                assert!(p.bw_utilization > 0.0 && p.bw_utilization <= 1.0);
+                assert!(p.roofline_fraction > 0.0 && p.roofline_fraction <= 1.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,126 @@
+//! GPU specifications (paper Table 3) + microarchitectural constants used
+//! by the kernel-chain model.
+
+/// Datacenter GPU spec (paper Table 3, dense BF16).
+#[derive(Clone, Copy, Debug)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    pub hbm_gb: f64,
+    /// HBM bandwidth, bytes/s.
+    pub hbm_bw: f64,
+    /// Peak dense BF16, FLOP/s.
+    pub bf16_flops: f64,
+    /// Per-kernel launch/dispatch overhead, seconds.  Hopper/Blackwell
+    /// kernel launches cost ~3-5 µs through the torch dispatcher even under
+    /// torch.compile (CUDA-graphless mode); this constant is what makes
+    /// multi-kernel sampler chains expensive at small batch — the §4.4
+    /// observation.
+    pub launch_overhead: f64,
+    /// Fraction of peak HBM bandwidth a large streaming kernel achieves.
+    pub bw_efficiency: f64,
+    /// NVLink per-direction bandwidth per GPU, bytes/s (for TP models).
+    pub nvlink_bw: f64,
+    /// Base latency of a collective operation (all-gather) at TP=2, s.
+    pub collective_latency: f64,
+}
+
+impl GpuSpec {
+    /// ops:byte ratio (Table 3 row) — the roofline ridge point.
+    pub fn ops_per_byte(&self) -> f64 {
+        self.bf16_flops / self.hbm_bw
+    }
+}
+
+/// H100 SXM (Hopper).
+pub const H100: GpuSpec = GpuSpec {
+    name: "H100",
+    hbm_gb: 80.0,
+    hbm_bw: 3.35e12,
+    bf16_flops: 989e12,
+    launch_overhead: 4.0e-6,
+    bw_efficiency: 0.83,
+    nvlink_bw: 450e9,
+    collective_latency: 12.0e-6,
+};
+
+/// H200 (Hopper, HBM3e).
+pub const H200: GpuSpec = GpuSpec {
+    name: "H200",
+    hbm_gb: 141.0,
+    hbm_bw: 4.8e12,
+    bf16_flops: 989e12,
+    launch_overhead: 4.0e-6,
+    bw_efficiency: 0.83,
+    nvlink_bw: 450e9,
+    collective_latency: 12.0e-6,
+};
+
+/// B200 (Blackwell).
+pub const B200: GpuSpec = GpuSpec {
+    name: "B200",
+    hbm_gb: 192.0,
+    hbm_bw: 8.0e12,
+    bf16_flops: 2250e12,
+    launch_overhead: 4.0e-6,
+    bw_efficiency: 0.85,
+    nvlink_bw: 900e9,
+    collective_latency: 10.0e-6,
+};
+
+/// B300 (Blackwell Ultra).
+pub const B300: GpuSpec = GpuSpec {
+    name: "B300",
+    hbm_gb: 288.0,
+    hbm_bw: 8.0e12,
+    bf16_flops: 2250e12,
+    launch_overhead: 4.2e-6,
+    bw_efficiency: 0.85,
+    nvlink_bw: 900e9,
+    collective_latency: 10.0e-6,
+};
+
+/// RTX 3090 (the paper's §4.4 profiling box for Figure 4).
+pub const RTX3090: GpuSpec = GpuSpec {
+    name: "RTX3090",
+    hbm_gb: 24.0,
+    hbm_bw: 0.936e12,
+    bf16_flops: 71e12, // with FP32 accumulate halved in practice; dense
+    launch_overhead: 5.0e-6,
+    bw_efficiency: 0.80,
+    nvlink_bw: 56e9,
+    collective_latency: 20.0e-6,
+};
+
+/// The paper's four datacenter GPUs (Tables 4-5 columns).
+pub const DATACENTER: [GpuSpec; 4] = [H100, H200, B200, B300];
+
+pub fn by_name(name: &str) -> Option<GpuSpec> {
+    match name {
+        "H100" => Some(H100),
+        "H200" => Some(H200),
+        "B200" => Some(B200),
+        "B300" => Some(B300),
+        "RTX3090" => Some(RTX3090),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ops_byte_ratios_match_table3() {
+        // Paper Table 3: H100 295, H200 206, B200/B300 281.
+        assert!((H100.ops_per_byte() - 295.0).abs() < 1.0);
+        assert!((H200.ops_per_byte() - 206.0).abs() < 1.0);
+        assert!((B200.ops_per_byte() - 281.0).abs() < 1.0);
+        assert!((B300.ops_per_byte() - 281.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(by_name("B200").unwrap().name, "B200");
+        assert!(by_name("TPUv4").is_none());
+    }
+}

@@ -1,0 +1,188 @@
+//! Block allocator + per-sequence block table (the paged-cache substrate).
+
+use anyhow::{bail, Result};
+
+/// Physical block identifier.
+pub type BlockId = u32;
+
+/// Free-list allocator over a fixed pool of refcounted blocks.
+#[derive(Debug)]
+pub struct BlockAllocator {
+    free: Vec<BlockId>,
+    refcount: Vec<u32>,
+}
+
+impl BlockAllocator {
+    pub fn new(num_blocks: usize) -> Self {
+        Self {
+            // LIFO free list: recently freed blocks are reused first (cache
+            // locality on a real device; deterministic here).
+            free: (0..num_blocks as BlockId).rev().collect(),
+            refcount: vec![0; num_blocks],
+        }
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.refcount.len()
+    }
+
+    /// Allocate one block (refcount = 1).
+    pub fn allocate(&mut self) -> Result<BlockId> {
+        let Some(b) = self.free.pop() else {
+            bail!("KV cache exhausted: 0 free of {}", self.refcount.len());
+        };
+        debug_assert_eq!(self.refcount[b as usize], 0);
+        self.refcount[b as usize] = 1;
+        Ok(b)
+    }
+
+    /// Allocate `n` blocks atomically (all or nothing).
+    pub fn allocate_many(&mut self, n: usize) -> Result<Vec<BlockId>> {
+        if self.free.len() < n {
+            bail!(
+                "KV cache exhausted: need {n} blocks, {} free of {}",
+                self.free.len(),
+                self.refcount.len()
+            );
+        }
+        Ok((0..n).map(|_| self.allocate().unwrap()).collect())
+    }
+
+    /// Increment a block's refcount (copy-on-write fork).
+    pub fn add_ref(&mut self, b: BlockId) -> Result<()> {
+        let rc = &mut self.refcount[b as usize];
+        if *rc == 0 {
+            bail!("add_ref on free block {b}");
+        }
+        *rc += 1;
+        Ok(())
+    }
+
+    /// Decrement a block's refcount, returning it to the pool at zero.
+    pub fn free(&mut self, b: BlockId) -> Result<()> {
+        let rc = &mut self.refcount[b as usize];
+        if *rc == 0 {
+            bail!("double free of block {b}");
+        }
+        *rc -= 1;
+        if *rc == 0 {
+            self.free.push(b);
+        }
+        Ok(())
+    }
+
+    pub fn refcount(&self, b: BlockId) -> u32 {
+        self.refcount[b as usize]
+    }
+}
+
+/// One sequence's ordered block list + logical token length.
+#[derive(Clone, Debug)]
+pub struct BlockTable {
+    block_size: usize,
+    blocks: Vec<BlockId>,
+    len: usize,
+}
+
+impl BlockTable {
+    pub fn new(block_size: usize) -> Self {
+        Self { block_size, blocks: Vec::new(), len: 0 }
+    }
+
+    pub fn push(&mut self, b: BlockId) {
+        self.blocks.push(b);
+    }
+
+    pub fn blocks(&self) -> &[BlockId] {
+        &self.blocks
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Logical token count stored.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub(crate) fn set_len(&mut self, len: usize) {
+        debug_assert!(len <= self.blocks.len() * self.block_size);
+        self.len = len;
+    }
+
+    /// Map a logical token position to (block, offset) — what a paged
+    /// attention kernel would consume.
+    pub fn locate(&self, pos: usize) -> Option<(BlockId, usize)> {
+        if pos >= self.len {
+            return None;
+        }
+        Some((self.blocks[pos / self.block_size], pos % self.block_size))
+    }
+
+    /// Slack capacity in the last block.
+    pub fn tail_capacity(&self) -> usize {
+        self.blocks.len() * self.block_size - self.len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifo_reuse() {
+        let mut a = BlockAllocator::new(4);
+        let b0 = a.allocate().unwrap();
+        let b1 = a.allocate().unwrap();
+        a.free(b0).unwrap();
+        let b2 = a.allocate().unwrap();
+        assert_eq!(b0, b2); // most-recently-freed reused first
+        assert_ne!(b1, b2);
+    }
+
+    #[test]
+    fn refcounting() {
+        let mut a = BlockAllocator::new(2);
+        let b = a.allocate().unwrap();
+        a.add_ref(b).unwrap();
+        a.free(b).unwrap();
+        assert_eq!(a.free_blocks(), 1); // still one ref
+        a.free(b).unwrap();
+        assert_eq!(a.free_blocks(), 2);
+        assert!(a.free(b).is_err()); // double free detected
+        assert!(a.add_ref(b).is_err()); // ref on free block detected
+    }
+
+    #[test]
+    fn allocate_many_is_atomic() {
+        let mut a = BlockAllocator::new(3);
+        assert!(a.allocate_many(4).is_err());
+        assert_eq!(a.free_blocks(), 3); // nothing leaked by the failed call
+        let v = a.allocate_many(3).unwrap();
+        assert_eq!(v.len(), 3);
+        assert_eq!(a.free_blocks(), 0);
+    }
+
+    #[test]
+    fn locate_maps_positions() {
+        let mut t = BlockTable::new(4);
+        t.push(7);
+        t.push(9);
+        t.set_len(6);
+        assert_eq!(t.locate(0), Some((7, 0)));
+        assert_eq!(t.locate(3), Some((7, 3)));
+        assert_eq!(t.locate(4), Some((9, 0)));
+        assert_eq!(t.locate(5), Some((9, 1)));
+        assert_eq!(t.locate(6), None); // beyond len
+        assert_eq!(t.tail_capacity(), 2);
+    }
+}

@@ -1,0 +1,36 @@
+//! # FlashSampling
+//!
+//! Reproduction of *FlashSampling: Fast and Memory-Efficient Exact Sampling*
+//! (CS.LG 2026) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1** — the fused tiled Gumbel-Max kernel lives in
+//!   `python/compile/kernels/flash_sampling.py` (Pallas, AOT-lowered).
+//! * **L2** — the serving model (tiny transformer + FlashSampling LM head)
+//!   lives in `python/compile/model.py` (JAX, AOT-lowered).
+//! * **L3** — this crate: the serving coordinator (continuous batching,
+//!   paged KV cache, prefill/decode scheduling), the PJRT runtime that
+//!   executes the AOT artifacts, native exact samplers mirroring the paper's
+//!   algorithms, the simulated tensor-parallel runtime, and the analytical
+//!   GPU performance model that regenerates every table and figure of the
+//!   paper's evaluation (see `DESIGN.md` for the experiment index).
+//!
+//! Python never runs on the request path: `make artifacts` lowers the JAX
+//! graphs to HLO text once; the coordinator loads and executes them through
+//! the PJRT C API (`xla` crate).
+
+pub mod benchutil;
+pub mod config;
+pub mod coordinator;
+pub mod gpusim;
+pub mod json;
+pub mod kvcache;
+pub mod metrics;
+pub mod repro;
+pub mod runtime;
+pub mod sampling;
+pub mod testutil;
+pub mod tp;
+pub mod workload;
+
+/// Crate-wide result type (library errors carry context via `anyhow`).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,248 @@
+//! FlashSampling launcher CLI.
+//!
+//! ```text
+//! flashsampling serve   [--config F] [--set k=v]...   open-loop serving run
+//! flashsampling repro   <id|all|stats> [--out DIR]    regenerate paper tables
+//! flashsampling bench-kernel [--set k=v]...           PJRT kernel A/B timing
+//! flashsampling selfcheck [--set k=v]...              load artifacts, smoke-run
+//! ```
+//!
+//! (Arg parsing is hand-rolled: the offline image carries no clap.)
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use flashsampling::config::{parse_pairs, Config};
+use flashsampling::coordinator::Engine;
+use flashsampling::runtime::{Runtime, Tensor};
+use flashsampling::sampling::Key;
+use flashsampling::workload::WorkloadGen;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: flashsampling <serve|repro|bench-kernel|selfcheck> [args]\n\
+         \n\
+         serve        --config FILE | --set key=value ...\n\
+         repro        <table1|table4|...|fig6|chisq|e2e-quality|all|stats> [--out DIR]\n\
+         bench-kernel [--set key=value ...]\n\
+         selfcheck    [--set key=value ...]"
+    );
+    std::process::exit(2);
+}
+
+fn parse_overrides(args: &[String]) -> Result<(Config, Vec<String>)> {
+    let mut cfg = Config::default();
+    let mut pairs = BTreeMap::new();
+    let mut positional = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--config" => {
+                let path = args.get(i + 1).context("--config needs a path")?;
+                cfg = Config::from_file(std::path::Path::new(path))?;
+                i += 2;
+            }
+            "--set" => {
+                let kv = args.get(i + 1).context("--set needs key=value")?;
+                for (k, v) in parse_pairs(kv)? {
+                    pairs.insert(k, v);
+                }
+                i += 2;
+            }
+            "--out" => {
+                let dir = args.get(i + 1).context("--out needs a dir")?;
+                pairs.insert("out_dir".into(), dir.clone());
+                i += 2;
+            }
+            other if other.starts_with("--") => bail!("unknown flag {other}"),
+            other => {
+                positional.push(other.to_string());
+                i += 1;
+            }
+        }
+    }
+    cfg.apply_pairs(pairs)?;
+    Ok((cfg, positional))
+}
+
+fn cmd_serve(cfg: &Config) -> Result<()> {
+    let mut engine = Engine::new(&cfg.artifacts_dir, cfg.engine_config())?;
+    let vocab = engine.runtime().manifest().model.vocab;
+    let mut gen = WorkloadGen::new(cfg.seed, cfg.request_rate, vocab);
+    gen.temperature = cfg.temperature;
+    gen.prompt_len = flashsampling::workload::LengthDist::Uniform(8, 48);
+    gen.output_len = flashsampling::workload::LengthDist::Fixed(cfg.max_new_tokens);
+    let reqs = gen.generate(cfg.num_requests);
+    println!(
+        "[serve] {} requests, Poisson rate {}/s, sampler = {}",
+        reqs.len(),
+        cfg.request_rate,
+        if cfg.baseline_sampler { "baseline multinomial" } else { "FlashSampling" }
+    );
+    let done = engine.serve(reqs)?;
+    let m = &engine.metrics;
+    println!(
+        "[serve] completed {} requests | {} tokens | wall {:.2}s | {:.1} tok/s",
+        done.len(),
+        m.tokens_generated,
+        m.wall.as_secs_f64(),
+        m.throughput_tps()
+    );
+    println!(
+        "[serve] median TTFT {:.1} ms | median TPOT {:.2} ms | mean batch {:.2}",
+        m.median_ttft().map(|d| d.as_secs_f64() * 1e3).unwrap_or(f64::NAN),
+        m.median_tpot().map(|d| d.as_secs_f64() * 1e3).unwrap_or(f64::NAN),
+        m.mean_batch()
+    );
+    for (k, v) in &m.counters {
+        println!("[serve] counter {k} = {v}");
+    }
+    Ok(())
+}
+
+fn cmd_repro(cfg: &Config, what: &str) -> Result<()> {
+    match what {
+        "all" => flashsampling::repro::run_all(&cfg.out_dir)?,
+        "stats" => {
+            for id in flashsampling::repro::STATS {
+                let md = flashsampling::repro::run(id, &cfg.out_dir)?;
+                println!("=== {id} ===\n{md}");
+            }
+        }
+        id => {
+            let md = flashsampling::repro::run(id, &cfg.out_dir)?;
+            println!("{md}");
+        }
+    }
+    println!("[repro] wrote results under {}", cfg.out_dir.display());
+    Ok(())
+}
+
+/// A/B the fused vs baseline LM-head artifacts through PJRT with wall-clock
+/// timing (the measurable half of the paper's microbenchmarks; the modeled
+/// half lives in `repro`).
+fn cmd_bench_kernel(cfg: &Config) -> Result<()> {
+    let rt = Runtime::new(&cfg.artifacts_dir)?;
+    let key = Key::from_seed(cfg.seed);
+    println!("| artifact | B | D | V | median µs over 30 reps |");
+    println!("|---|---|---|---|---|");
+    let mut specs: Vec<_> = rt
+        .manifest()
+        .artifacts
+        .iter()
+        .filter(|a| {
+            matches!(a.kind.as_str(),
+                "flash_sample" | "baseline_multinomial" | "baseline_gumbel")
+        })
+        .cloned()
+        .collect();
+    specs.sort_by(|a, b| a.name.cmp(&b.name));
+    for spec in specs {
+        let b = spec.meta_usize("B")?;
+        let d = spec.meta_usize("D")?;
+        let v = spec.meta_usize("V")?;
+        let h = Tensor::F32(vec![0.1; b * d], vec![b, d]);
+        let w = Tensor::F32(vec![0.01; v * d], vec![v, d]);
+        let inputs = [h, w, Tensor::seed(key), Tensor::scalar_u32(0),
+                      Tensor::scalar_f32(cfg.temperature)];
+        // warmup
+        for _ in 0..3 {
+            rt.run(&spec.name, &inputs)?;
+        }
+        let mut times: Vec<f64> = (0..30)
+            .map(|_| {
+                rt.run_timed(&spec.name, &inputs)
+                    .map(|(_, dt)| dt.as_secs_f64() * 1e6)
+            })
+            .collect::<Result<_>>()?;
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        println!("| {} | {b} | {d} | {v} | {:.0} |", spec.name, times[times.len() / 2]);
+    }
+    Ok(())
+}
+
+fn cmd_selfcheck(cfg: &Config) -> Result<()> {
+    let rt = Runtime::new(&cfg.artifacts_dir)?;
+    println!(
+        "[selfcheck] platform {} | {} artifacts | {} weight tensors",
+        rt.platform(),
+        rt.manifest().artifacts.len(),
+        rt.manifest().weights.len()
+    );
+    let m = &rt.manifest().model;
+    println!(
+        "[selfcheck] model: vocab={} d={} layers={} heads={} max_seq={}",
+        m.vocab, m.d_model, m.n_layers, m.n_heads, m.max_seq
+    );
+    // Compile + run one fused sampler and verify against the Rust oracle.
+    let spec = rt
+        .manifest()
+        .by_kind("flash_sample")
+        .first()
+        .context("no flash_sample artifact")?
+        .name
+        .clone();
+    let a = rt.manifest().find(&spec)?.clone();
+    let (b, d, v) = (
+        a.meta_usize("B")?,
+        a.meta_usize("D")?,
+        a.meta_usize("V")?,
+    );
+    let h: Vec<f32> = (0..b * d).map(|i| ((i % 13) as f32 - 6.0) * 0.05).collect();
+    let w: Vec<f32> = (0..v * d).map(|i| ((i % 17) as f32 - 8.0) * 0.01).collect();
+    let key = Key::from_seed(cfg.seed);
+    let out = rt.run(
+        &spec,
+        &[
+            Tensor::F32(h.clone(), vec![b, d]),
+            Tensor::F32(w.clone(), vec![v, d]),
+            Tensor::seed(key),
+            Tensor::scalar_u32(0),
+            Tensor::scalar_f32(1.0),
+        ],
+    )?;
+    let got = out[0].as_i32()?;
+    // Native oracle.
+    let mut logits = vec![0.0f32; b * v];
+    for bi in 0..b {
+        for vi in 0..v {
+            let mut acc = 0.0;
+            for di in 0..d {
+                acc += h[bi * d + di] * w[vi * d + di];
+            }
+            logits[bi * v + vi] = acc;
+        }
+    }
+    let expect = flashsampling::sampling::gumbel::sample_batch(
+        &logits,
+        v,
+        &flashsampling::sampling::Transform::default(),
+        key,
+        0,
+    );
+    for (bi, e) in expect.iter().enumerate() {
+        anyhow::ensure!(
+            got[bi] as u32 == e.unwrap().index,
+            "selfcheck MISMATCH at row {bi}"
+        );
+    }
+    println!("[selfcheck] {spec}: fused XLA kernel == native Gumbel-Max OK");
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else { usage() };
+    let (cfg, positional) = parse_overrides(&args[1..])?;
+    match cmd.as_str() {
+        "serve" => cmd_serve(&cfg),
+        "repro" => {
+            let what = positional.first().map(|s| s.as_str()).unwrap_or("all");
+            cmd_repro(&cfg, what)
+        }
+        "bench-kernel" => cmd_bench_kernel(&cfg),
+        "selfcheck" => cmd_selfcheck(&cfg),
+        _ => usage(),
+    }
+}

@@ -1,0 +1,192 @@
+//! Serving metrics: counters, streaming histograms, TPOT/TTFT trackers.
+//!
+//! TPOT (time per output token) is the paper's end-to-end headline metric
+//! (§4.5, Tables 7-8).  The tracker records per-token decode latencies per
+//! request and reports medians the way `vllm bench sweep serve` does.
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+/// Fixed-boundary streaming histogram (log-spaced buckets, microseconds).
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    /// Bucket upper bounds in µs (last bucket is +inf).
+    bounds: Vec<u64>,
+    counts: Vec<u64>,
+    /// All raw samples (µs) — kept for exact quantiles; decode workloads
+    /// are small enough that exactness beats streaming approximation.
+    samples: Vec<u64>,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        // 1µs .. ~67s, x2 per bucket.
+        let bounds: Vec<u64> = (0..26).map(|i| 1u64 << i).collect();
+        let n = bounds.len() + 1;
+        Self { bounds, counts: vec![0; n], samples: Vec::new() }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn record(&mut self, d: Duration) {
+        let us = d.as_micros() as u64;
+        let idx = self.bounds.partition_point(|&b| b < us);
+        self.counts[idx] += 1;
+        self.samples.push(us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.samples.len() as u64
+    }
+
+    /// Exact quantile (0.0..=1.0) in microseconds.
+    pub fn quantile(&self, q: f64) -> Option<u64> {
+        if self.samples.is_empty() {
+            return None;
+        }
+        let mut s = self.samples.clone();
+        s.sort_unstable();
+        let idx = ((s.len() - 1) as f64 * q).round() as usize;
+        Some(s[idx])
+    }
+
+    pub fn median_us(&self) -> Option<u64> {
+        self.quantile(0.5)
+    }
+
+    pub fn mean_us(&self) -> Option<f64> {
+        if self.samples.is_empty() {
+            return None;
+        }
+        Some(self.samples.iter().sum::<u64>() as f64 / self.samples.len() as f64)
+    }
+}
+
+/// Per-request decode timing: TTFT + per-token latencies.
+#[derive(Clone, Debug, Default)]
+pub struct RequestTiming {
+    /// Time to first token.
+    pub ttft: Option<Duration>,
+    /// Inter-token latencies (one per generated token after the first).
+    pub token_latencies: Vec<Duration>,
+}
+
+impl RequestTiming {
+    /// Mean time per output token for this request (vLLM's TPOT definition:
+    /// decode-phase latency / decode tokens, excluding the first token).
+    pub fn tpot(&self) -> Option<Duration> {
+        if self.token_latencies.is_empty() {
+            return None;
+        }
+        let total: Duration = self.token_latencies.iter().sum();
+        Some(total / self.token_latencies.len() as u32)
+    }
+}
+
+/// Aggregated serving metrics for one benchmark run.
+#[derive(Clone, Debug, Default)]
+pub struct ServingMetrics {
+    pub requests_completed: u64,
+    pub tokens_generated: u64,
+    pub prefill_tokens: u64,
+    pub ttft: Vec<Duration>,
+    pub tpot: Vec<Duration>,
+    /// Per-step decode batch sizes (batch-efficiency diagnostics).
+    pub decode_batch_sizes: Vec<usize>,
+    /// Wall-clock span of the run.
+    pub wall: Duration,
+    /// Named counters (preemptions, bucket padding waste, ...).
+    pub counters: HashMap<String, u64>,
+}
+
+impl ServingMetrics {
+    pub fn bump(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_default() += by;
+    }
+
+    pub fn median_tpot(&self) -> Option<Duration> {
+        median(&self.tpot)
+    }
+
+    pub fn median_ttft(&self) -> Option<Duration> {
+        median(&self.ttft)
+    }
+
+    /// Decode throughput in tokens/s over the run.
+    pub fn throughput_tps(&self) -> f64 {
+        if self.wall.is_zero() {
+            return 0.0;
+        }
+        self.tokens_generated as f64 / self.wall.as_secs_f64()
+    }
+
+    /// Mean scheduled batch size (padding efficiency indicator).
+    pub fn mean_batch(&self) -> f64 {
+        if self.decode_batch_sizes.is_empty() {
+            return 0.0;
+        }
+        self.decode_batch_sizes.iter().sum::<usize>() as f64
+            / self.decode_batch_sizes.len() as f64
+    }
+}
+
+fn median(xs: &[Duration]) -> Option<Duration> {
+    if xs.is_empty() {
+        return None;
+    }
+    let mut v = xs.to_vec();
+    v.sort_unstable();
+    Some(v[v.len() / 2])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles() {
+        let mut h = LatencyHistogram::default();
+        for us in [100u64, 200, 300, 400, 500] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.median_us(), Some(300));
+        assert_eq!(h.quantile(0.0), Some(100));
+        assert_eq!(h.quantile(1.0), Some(500));
+        assert!((h.mean_us().unwrap() - 300.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_histogram_is_none() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.median_us(), None);
+        assert_eq!(h.mean_us(), None);
+    }
+
+    #[test]
+    fn tpot_excludes_first_token() {
+        let t = RequestTiming {
+            ttft: Some(Duration::from_millis(50)),
+            token_latencies: vec![
+                Duration::from_millis(10),
+                Duration::from_millis(20),
+            ],
+        };
+        assert_eq!(t.tpot(), Some(Duration::from_millis(15)));
+        let empty = RequestTiming::default();
+        assert_eq!(empty.tpot(), None);
+    }
+
+    #[test]
+    fn serving_metrics_aggregation() {
+        let mut m = ServingMetrics::default();
+        m.tokens_generated = 100;
+        m.wall = Duration::from_secs(2);
+        assert!((m.throughput_tps() - 50.0).abs() < 1e-9);
+        m.bump("preempted", 1);
+        m.bump("preempted", 2);
+        assert_eq!(m.counters["preempted"], 3);
+        m.decode_batch_sizes = vec![2, 4, 6];
+        assert!((m.mean_batch() - 4.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,290 @@
+//! Artifact manifest — the Rust runtime's source of truth about what
+//! `make artifacts` produced (see python/compile/aot.py for the schema).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::{self, Value};
+
+/// Element dtype of an artifact input/output or weight tensor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            "u32" => DType::U32,
+            _ => bail!("unknown dtype '{s}'"),
+        })
+    }
+
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+}
+
+/// One tensor slot (input or output) of an artifact.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elem_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        Ok(Self {
+            name: v.req("name")?.as_str()?.to_string(),
+            shape: v.req("shape")?.as_shape()?,
+            dtype: DType::parse(v.req("dtype")?.as_str()?)?,
+        })
+    }
+}
+
+/// One AOT-compiled computation.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// HLO text file, relative to the artifacts dir.
+    pub file: String,
+    /// Artifact family: "flash_sample", "decode_sample", "prefill", ...
+    pub kind: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Free-form integers: B, D, V, tile_v, n_shards, ...
+    pub meta: BTreeMap<String, i64>,
+}
+
+impl ArtifactSpec {
+    pub fn meta_usize(&self, key: &str) -> Result<usize> {
+        self.meta
+            .get(key)
+            .copied()
+            .with_context(|| format!("artifact {}: missing meta '{key}'", self.name))
+            .map(|v| v as usize)
+    }
+}
+
+/// One exported weight tensor.
+#[derive(Clone, Debug)]
+pub struct WeightSpec {
+    pub name: String,
+    pub file: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+/// The serving-model hyperparameters baked into the artifacts.
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub ffn: usize,
+    pub max_seq: usize,
+    pub param_order: Vec<String>,
+    pub decode_buckets: Vec<usize>,
+    pub prefill_t_buckets: Vec<usize>,
+    pub prefill_b: usize,
+}
+
+impl ModelInfo {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+}
+
+/// Parsed manifest.json plus its base directory.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelInfo,
+    pub artifacts: Vec<ArtifactSpec>,
+    pub weights: Vec<WeightSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = json::parse(&text).context("parsing manifest.json")?;
+
+        let m = v.req("model")?;
+        let model = ModelInfo {
+            vocab: m.req("vocab")?.as_usize()?,
+            d_model: m.req("d_model")?.as_usize()?,
+            n_layers: m.req("n_layers")?.as_usize()?,
+            n_heads: m.req("n_heads")?.as_usize()?,
+            ffn: m.req("ffn")?.as_usize()?,
+            max_seq: m.req("max_seq")?.as_usize()?,
+            param_order: m
+                .req("param_order")?
+                .as_arr()?
+                .iter()
+                .map(|s| s.as_str().map(String::from))
+                .collect::<Result<_>>()?,
+            decode_buckets: m.req("decode_buckets")?.as_shape()?,
+            prefill_t_buckets: m.req("prefill_t_buckets")?.as_shape()?,
+            prefill_b: m.req("prefill_b")?.as_usize()?,
+        };
+
+        let mut artifacts = Vec::new();
+        for a in v.req("artifacts")?.as_arr()? {
+            let mut meta = BTreeMap::new();
+            if let Ok(obj) = a.req("meta")?.as_obj() {
+                for (k, val) in obj {
+                    if let Ok(n) = val.as_f64() {
+                        meta.insert(k.clone(), n as i64);
+                    }
+                }
+            }
+            artifacts.push(ArtifactSpec {
+                name: a.req("name")?.as_str()?.to_string(),
+                file: a.req("file")?.as_str()?.to_string(),
+                kind: a.req("kind")?.as_str()?.to_string(),
+                inputs: a
+                    .req("inputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<_>>()?,
+                outputs: a
+                    .req("outputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<_>>()?,
+                meta,
+            });
+        }
+
+        let mut weights = Vec::new();
+        for w in v.req("weights")?.as_arr()? {
+            weights.push(WeightSpec {
+                name: w.req("name")?.as_str()?.to_string(),
+                file: w.req("file")?.as_str()?.to_string(),
+                shape: w.req("shape")?.as_shape()?,
+                dtype: DType::parse(w.req("dtype")?.as_str()?)?,
+            });
+        }
+
+        Ok(Self { dir, model, artifacts, weights })
+    }
+
+    pub fn find(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))
+    }
+
+    /// All artifacts of a kind, e.g. every "decode_sample" bucket.
+    pub fn by_kind(&self, kind: &str) -> Vec<&ArtifactSpec> {
+        self.artifacts.iter().filter(|a| a.kind == kind).collect()
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+
+    /// Load a weight tensor as raw f32 (little-endian .bin, canonical order).
+    pub fn load_weight(&self, w: &WeightSpec) -> Result<Vec<f32>> {
+        let path = self.dir.join(&w.file);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading weight {}", path.display()))?;
+        let expect = w.shape.iter().product::<usize>() * 4;
+        if bytes.len() != expect {
+            bail!(
+                "weight {}: file has {} bytes, shape {:?} needs {}",
+                w.name,
+                bytes.len(),
+                w.shape,
+                expect
+            );
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fixture(dir: &Path) {
+        std::fs::create_dir_all(dir.join("weights")).unwrap();
+        let manifest = r#"{
+          "model": {"vocab": 2048, "d_model": 256, "n_layers": 4,
+                    "n_heads": 4, "ffn": 512, "max_seq": 256,
+                    "param_order": ["embed", "lm_head"],
+                    "decode_buckets": [1, 2, 4, 8],
+                    "prefill_t_buckets": [16, 64], "prefill_b": 4,
+                    "weight_seed": 0},
+          "artifacts": [
+            {"name": "flash_sample_b4_d256_v2048",
+             "file": "flash_sample_b4_d256_v2048.hlo.txt",
+             "kind": "flash_sample",
+             "inputs": [{"name": "h", "shape": [4, 256], "dtype": "f32"},
+                        {"name": "seed", "shape": [2], "dtype": "u32"}],
+             "outputs": [{"name": "out0", "shape": [4], "dtype": "i32"}],
+             "meta": {"B": 4, "D": 256, "V": 2048, "tile_v": 512}}
+          ],
+          "weights": [
+            {"name": "embed", "file": "weights/embed.bin",
+             "shape": [2, 3], "dtype": "f32"}
+          ]
+        }"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        let data: Vec<u8> = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]
+            .iter()
+            .flat_map(|f| f.to_le_bytes())
+            .collect();
+        std::fs::write(dir.join("weights/embed.bin"), data).unwrap();
+    }
+
+    #[test]
+    fn loads_fixture_manifest() {
+        let dir = std::env::temp_dir().join("fs_manifest_test");
+        write_fixture(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model.vocab, 2048);
+        assert_eq!(m.model.decode_buckets, vec![1, 2, 4, 8]);
+        let a = m.find("flash_sample_b4_d256_v2048").unwrap();
+        assert_eq!(a.meta_usize("tile_v").unwrap(), 512);
+        assert_eq!(a.inputs[0].elem_count(), 1024);
+        assert_eq!(a.inputs[1].dtype, DType::U32);
+        assert_eq!(m.by_kind("flash_sample").len(), 1);
+        assert!(m.find("nope").is_err());
+    }
+
+    #[test]
+    fn loads_weight_and_validates_size() {
+        let dir = std::env::temp_dir().join("fs_manifest_test2");
+        write_fixture(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        let w = m.weights.iter().find(|w| w.name == "embed").unwrap();
+        assert_eq!(m.load_weight(w).unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        // corrupt size
+        std::fs::write(dir.join("weights/embed.bin"), [0u8; 7]).unwrap();
+        assert!(m.load_weight(w).is_err());
+    }
+}

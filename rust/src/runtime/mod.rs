@@ -1,0 +1,230 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute many.
+//!
+//! This is the L3 side of the AOT bridge (see `python/compile/aot.py`).
+//! HLO **text** is the interchange format — jax >= 0.5 serialized protos use
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (gotcha documented in /opt/xla-example/README.md).
+//!
+//! The runtime is deliberately single-threaded per instance (PJRT wrapper
+//! types are not `Send`); the TP orchestrator creates one `Runtime` per rank
+//! thread, mirroring one-process-per-GPU deployments.
+
+pub mod manifest;
+pub mod tensor;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+pub use manifest::{ArtifactSpec, DType, Manifest, ModelInfo, TensorSpec, WeightSpec};
+pub use tensor::Tensor;
+
+/// Cumulative execution statistics for one artifact.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub total: Duration,
+    pub compile_time: Duration,
+}
+
+/// A compiled artifact handle (executable + its manifest spec).
+pub struct Executable {
+    spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with shape/dtype-validated inputs; returns host tensors.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        anyhow::ensure!(
+            inputs.len() == self.spec.inputs.len(),
+            "artifact {}: got {} inputs, expected {}",
+            self.spec.name,
+            inputs.len(),
+            self.spec.inputs.len()
+        );
+        for (t, spec) in inputs.iter().zip(&self.spec.inputs) {
+            t.check(spec)
+                .with_context(|| format!("artifact {}", self.spec.name))?;
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.spec.name))?;
+        // AOT lowering uses return_tuple=True: one tuple literal out.
+        let out = result[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        let parts = out.to_tuple().context("untupling result")?;
+        parts.iter().map(Tensor::from_literal).collect()
+    }
+
+    pub fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    /// Execute with pre-converted literals (hot-path variant: the engine
+    /// caches the model parameters as literals once and reuses them every
+    /// step instead of re-converting ~40 weight tensors per call).
+    ///
+    /// Shape validation is skipped — callers own the ABI contract.
+    pub fn run_literals(&self, literals: &[&xla::Literal]) -> Result<Vec<Tensor>> {
+        anyhow::ensure!(
+            literals.len() == self.spec.inputs.len(),
+            "artifact {}: got {} literals, expected {}",
+            self.spec.name,
+            literals.len(),
+            self.spec.inputs.len()
+        );
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(literals)
+            .with_context(|| format!("executing {}", self.spec.name))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        let parts = out.to_tuple().context("untupling result")?;
+        parts.iter().map(Tensor::from_literal).collect()
+    }
+
+    /// Like [`Executable::run_literals`] but returns the raw output
+    /// literals without converting them to host tensors.  The serving
+    /// engine uses this to keep the KV cache as device-adjacent literals
+    /// across decode steps (EXPERIMENTS.md §Perf L3: avoids ~19 ms/step of
+    /// host<->literal copies in steady state).
+    pub fn run_literals_raw(
+        &self,
+        literals: &[&xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        anyhow::ensure!(
+            literals.len() == self.spec.inputs.len(),
+            "artifact {}: got {} literals, expected {}",
+            self.spec.name,
+            literals.len(),
+            self.spec.inputs.len()
+        );
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(literals)
+            .with_context(|| format!("executing {}", self.spec.name))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        out.to_tuple().context("untupling result")
+    }
+}
+
+/// The artifact runtime: PJRT CPU client + lazily compiled executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+    stats: RefCell<HashMap<String, ExecStats>>,
+}
+
+impl Runtime {
+    /// Create a runtime over `<artifacts_dir>/manifest.json`.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Get (compiling on first use) the executable for `name`.
+    pub fn load(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.find(name)?.clone();
+        let path = self.manifest.hlo_path(&spec);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        let compile_time = t0.elapsed();
+        self.stats.borrow_mut().entry(name.to_string()).or_default().compile_time =
+            compile_time;
+        let handle = Rc::new(Executable { spec, exe });
+        self.cache.borrow_mut().insert(name.to_string(), handle.clone());
+        Ok(handle)
+    }
+
+    /// Execute artifact `name`, recording wall time in the stats table.
+    pub fn run(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        Ok(self.run_timed(name, inputs)?.0)
+    }
+
+    /// Execute and also return wall time (bench harness hook).
+    pub fn run_timed(
+        &self,
+        name: &str,
+        inputs: &[Tensor],
+    ) -> Result<(Vec<Tensor>, Duration)> {
+        let exe = self.load(name)?;
+        let t0 = Instant::now();
+        let out = exe.run(inputs)?;
+        let dt = t0.elapsed();
+        let mut stats = self.stats.borrow_mut();
+        let s = stats.entry(name.to_string()).or_default();
+        s.calls += 1;
+        s.total += dt;
+        Ok((out, dt))
+    }
+
+    /// Snapshot of per-artifact execution statistics.
+    pub fn stats(&self) -> HashMap<String, ExecStats> {
+        self.stats.borrow().clone()
+    }
+
+    /// Load every weight tensor into a name -> Tensor map (f32).
+    pub fn load_weights(&self) -> Result<HashMap<String, Tensor>> {
+        let mut out = HashMap::new();
+        for w in &self.manifest.weights {
+            let data = self.manifest.load_weight(w)?;
+            out.insert(w.name.clone(), Tensor::F32(data, w.shape.clone()));
+        }
+        Ok(out)
+    }
+
+    /// The model parameters in canonical (positional-ABI) order.
+    pub fn params_in_order(&self) -> Result<Vec<Tensor>> {
+        let mut weights = self.load_weights()?;
+        self.manifest
+            .model
+            .param_order
+            .iter()
+            .map(|name| {
+                weights
+                    .remove(name)
+                    .with_context(|| format!("weight '{name}' missing"))
+            })
+            .collect()
+    }
+}

@@ -1,0 +1,178 @@
+//! Host-side tensors and conversion to/from XLA literals.
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{DType, TensorSpec};
+
+/// A host tensor: flat data + shape.  The coordinator's working currency —
+/// cheap to build, validated against `TensorSpec`s before execution.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+    U32(Vec<u32>, Vec<usize>),
+}
+
+impl Tensor {
+    pub fn scalar_f32(v: f32) -> Self {
+        Tensor::F32(vec![v], vec![1])
+    }
+
+    pub fn scalar_u32(v: u32) -> Self {
+        Tensor::U32(vec![v], vec![1])
+    }
+
+    /// RNG key input: `\[seed_lo, seed_hi\]` as a u32 pair.
+    pub fn seed(key: crate::sampling::Key) -> Self {
+        Tensor::U32(vec![key.lo, key.hi], vec![2])
+    }
+
+    pub fn zeros_f32(shape: &[usize]) -> Self {
+        Tensor::F32(vec![0.0; shape.iter().product()], shape.to_vec())
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32(_, s) | Tensor::I32(_, s) | Tensor::U32(_, s) => s,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Tensor::F32(..) => DType::F32,
+            Tensor::I32(..) => DType::I32,
+            Tensor::U32(..) => DType::U32,
+        }
+    }
+
+    pub fn elem_count(&self) -> usize {
+        match self {
+            Tensor::F32(d, _) => d.len(),
+            Tensor::I32(d, _) => d.len(),
+            Tensor::U32(d, _) => d.len(),
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32(d, _) => Ok(d),
+            t => bail!("expected f32 tensor, got {:?}", t.dtype()),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32(d, _) => Ok(d),
+            t => bail!("expected i32 tensor, got {:?}", t.dtype()),
+        }
+    }
+
+    pub fn as_u32(&self) -> Result<&[u32]> {
+        match self {
+            Tensor::U32(d, _) => Ok(d),
+            t => bail!("expected u32 tensor, got {:?}", t.dtype()),
+        }
+    }
+
+    /// Validate against an artifact slot spec (shape + dtype).
+    pub fn check(&self, spec: &TensorSpec) -> Result<()> {
+        if self.dtype() != spec.dtype {
+            bail!(
+                "input '{}': dtype {:?} != expected {:?}",
+                spec.name,
+                self.dtype(),
+                spec.dtype
+            );
+        }
+        if self.shape() != spec.shape.as_slice() {
+            bail!(
+                "input '{}': shape {:?} != expected {:?}",
+                spec.name,
+                self.shape(),
+                spec.shape
+            );
+        }
+        Ok(())
+    }
+
+    /// Convert to an XLA literal.
+    ///
+    /// Uses `create_from_shape_and_untyped_data` so the host data is copied
+    /// exactly ONCE — the earlier `vec1(..).reshape(..)` path copied twice
+    /// (literal creation + reshape materialization), which showed up as
+    /// ~13 ms/step of KV-cache conversion in the decode hot path
+    /// (EXPERIMENTS.md §Perf L3).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        fn bytes<T>(d: &[T]) -> &[u8] {
+            // SAFETY: plain-old-data element types, read-only view.
+            unsafe {
+                std::slice::from_raw_parts(
+                    d.as_ptr() as *const u8,
+                    std::mem::size_of_val(d),
+                )
+            }
+        }
+        let (ty, data): (xla::ElementType, &[u8]) = match self {
+            Tensor::F32(d, _) => (xla::ElementType::F32, bytes(d)),
+            Tensor::I32(d, _) => (xla::ElementType::S32, bytes(d)),
+            Tensor::U32(d, _) => (xla::ElementType::U32, bytes(d)),
+        };
+        xla::Literal::create_from_shape_and_untyped_data(ty, self.shape(), data)
+            .context("creating literal")
+    }
+
+    /// Convert back from an XLA literal.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape().context("literal shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        use xla::ElementType as ET;
+        Ok(match shape.ty() {
+            ET::F32 => Tensor::F32(lit.to_vec::<f32>()?, dims),
+            ET::S32 => Tensor::I32(lit.to_vec::<i32>()?, dims),
+            ET::U32 => Tensor::U32(lit.to_vec::<u32>()?, dims),
+            ty => bail!("unsupported output element type {ty:?}"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::TensorSpec;
+
+    #[test]
+    fn check_validates_shape_and_dtype() {
+        let spec = TensorSpec {
+            name: "h".into(),
+            shape: vec![2, 3],
+            dtype: DType::F32,
+        };
+        let good = Tensor::F32(vec![0.0; 6], vec![2, 3]);
+        assert!(good.check(&spec).is_ok());
+        let bad_shape = Tensor::F32(vec![0.0; 6], vec![3, 2]);
+        assert!(bad_shape.check(&spec).is_err());
+        let bad_dtype = Tensor::I32(vec![0; 6], vec![2, 3]);
+        assert!(bad_dtype.check(&spec).is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let t = Tensor::F32(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], vec![2, 3]);
+        let back = Tensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(t, back);
+        let t = Tensor::I32(vec![-1, 2, -3], vec![3]);
+        let back = Tensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(t, back);
+        let t = Tensor::U32(vec![7, 8], vec![2]);
+        let back = Tensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn seed_tensor_layout() {
+        let k = crate::sampling::Key::new(0xAB, 0xCD);
+        let t = Tensor::seed(k);
+        assert_eq!(t.as_u32().unwrap(), &[0xAB, 0xCD]);
+        assert_eq!(t.shape(), &[2]);
+    }
+}

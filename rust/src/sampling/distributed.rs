@@ -1,0 +1,228 @@
+//! Distributed FlashSampling merge for tensor-parallel vocabularies
+//! (paper Algorithm I.4, §D.2).
+//!
+//! Each rank holds a vocabulary shard and reports an O(1)-per-row summary;
+//! the coordinator merges them.  Two exact merge modes:
+//!
+//! * **Pathwise** (`merge_pathwise`) — ranks report `(max perturbed score,
+//!   global argmax)`; because Philox positions are global, a max-merge is
+//!   bit-identical to a single-device FlashSampling pass (Lemma D.5 over
+//!   the shard partition).  This is the per-tile P2P fan-out payload of
+//!   Algorithm 1's multi-GPU path.
+//! * **Distributional** (`merge_by_mass`) — ranks report `(local exact
+//!   sample, shard log-mass)`; the coordinator runs an outer Gumbel-Max over
+//!   shard masses with fresh Gumbels (Algorithm I.4 line 3).  Exact by
+//!   Theorem D.4; requires only the shard masses, not shard maxima.
+
+use super::philox::{self, Key};
+
+/// One rank's per-row summary (the wire format of the simulated NVLink
+/// fan-out in `crate::tp`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ShardSummary {
+    /// Rank id (= group index k in the hierarchical factorization).
+    pub rank: u32,
+    /// Max perturbed score within the shard (pathwise payload).
+    pub max_score: f32,
+    /// Global vocab index attaining `max_score` — also the rank's exact
+    /// local sample (Gumbel-Max within the shard).
+    pub local_sample: u32,
+    /// Shard log-mass L_k = logsumexp(shard logits).
+    pub log_mass: f32,
+}
+
+/// Pathwise merge: argmax over shard maxima (identical to single-rank).
+///
+/// Returns `None` on empty input.  Tie-break: lowest rank first, matching
+/// the monolithic scan's first-index preference.
+pub fn merge_pathwise(summaries: &[ShardSummary]) -> Option<ShardSummary> {
+    summaries
+        .iter()
+        .copied()
+        .reduce(|a, b| if b.max_score > a.max_score { b } else { a })
+}
+
+/// Distribution-level merge: outer Gumbel-Max over shard log-masses with
+/// fresh Gumbels on the GROUP_SELECT stream (counter = rank id).
+///
+/// Zero-mass shards (log_mass = -inf) never win (§D.1).
+pub fn merge_by_mass(
+    summaries: &[ShardSummary],
+    key: Key,
+    row: u32,
+    step: u32,
+) -> Option<ShardSummary> {
+    summaries
+        .iter()
+        .filter(|s| s.log_mass > f32::NEG_INFINITY)
+        .map(|&s| {
+            let g = philox::gumbel_group_select(key, s.rank, row, step);
+            (s.log_mass + g, s)
+        })
+        .reduce(|a, b| if b.0 > a.0 { b } else { a })
+        .map(|(_, s)| s)
+}
+
+/// log_Z over all shards (Appendix L, from the same O(n) summaries).
+pub fn log_z(summaries: &[ShardSummary]) -> f32 {
+    let masses: Vec<f32> = summaries.iter().map(|s| s.log_mass).collect();
+    super::log_sum_exp(&masses)
+}
+
+/// Compute one rank's summary from its shard logits, Rust-native (the AOT
+/// shard kernel computes the same thing on the XLA side).
+///
+/// `shard_offset` is the shard's starting global vocab index.
+pub fn shard_summary(
+    rank: u32,
+    shard_logits: &[f32],
+    shard_offset: usize,
+    transform: &super::Transform,
+    key: Key,
+    row: u32,
+    step: u32,
+) -> ShardSummary {
+    let mut best = f32::NEG_INFINITY;
+    let mut best_i = shard_offset as u32;
+    let mut transformed = Vec::with_capacity(shard_logits.len());
+    for (j, &l) in shard_logits.iter().enumerate() {
+        let i = shard_offset + j;
+        let y = transform.apply(l, i);
+        transformed.push(y);
+        if y == f32::NEG_INFINITY {
+            continue;
+        }
+        let s = y + philox::gumbel_at(key, i as u32, row, step);
+        if s > best {
+            best = s;
+            best_i = i as u32;
+        }
+    }
+    ShardSummary {
+        rank,
+        max_score: best,
+        local_sample: best_i,
+        log_mass: super::log_sum_exp(&transformed),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::{gumbel, log_sum_exp, Transform};
+    use crate::testutil;
+
+    fn toy_logits(n: usize, seed: u64) -> Vec<f32> {
+        let key = Key::from_seed(seed ^ 0xD157);
+        (0..n)
+            .map(|i| 3.0 * (philox::uniform_at(key, i as u32, 0, 3, 0) - 0.5))
+            .collect()
+    }
+
+    fn shards(l: &[f32], n_ranks: usize, key: Key, row: u32, step: u32) -> Vec<ShardSummary> {
+        let t = Transform::default();
+        let vs = l.len() / n_ranks;
+        (0..n_ranks)
+            .map(|r| {
+                shard_summary(
+                    r as u32,
+                    &l[r * vs..(r + 1) * vs],
+                    r * vs,
+                    &t,
+                    key,
+                    row,
+                    step,
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn pathwise_merge_equals_single_rank() {
+        let l = toy_logits(512, 3);
+        let key = Key::new(8, 9);
+        for n in [2usize, 4, 8] {
+            for step in 0..10 {
+                let mono = gumbel::sample_row(&l, &Transform::default(), key, 0, step)
+                    .unwrap();
+                let merged = merge_pathwise(&shards(&l, n, key, 0, step)).unwrap();
+                assert_eq!(merged.local_sample, mono.index, "n={n} step={step}");
+                assert_eq!(merged.max_score, mono.score);
+            }
+        }
+    }
+
+    #[test]
+    fn log_z_from_shards_is_exact() {
+        let l = toy_logits(256, 4);
+        let s = shards(&l, 4, Key::new(1, 1), 0, 0);
+        assert!((log_z(&s) - log_sum_exp(&l)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn zero_mass_shard_never_wins_mass_merge() {
+        let s = vec![
+            ShardSummary { rank: 0, max_score: 1.0, local_sample: 3, log_mass: 0.0 },
+            ShardSummary {
+                rank: 1,
+                max_score: f32::NEG_INFINITY,
+                local_sample: 99,
+                log_mass: f32::NEG_INFINITY,
+            },
+        ];
+        for step in 0..50 {
+            let w = merge_by_mass(&s, Key::new(5, 5), 0, step).unwrap();
+            assert_eq!(w.rank, 0);
+        }
+    }
+
+    /// Chi-squared: the distributional merge produces the exact categorical.
+    #[test]
+    fn mass_merge_distribution_exact() {
+        let v = 64;
+        let l = toy_logits(v, 11);
+        let t = Transform::default();
+        let p = super::super::multinomial::probs(&l, &t);
+        let n = 40_000u32;
+        let key = Key::new(0xC0, 0xDE);
+        let mut counts = vec![0u64; v];
+        for step in 0..n {
+            let s = shards(&l, 4, key, 0, step);
+            let w = merge_by_mass(&s, key, 0, step).unwrap();
+            counts[w.local_sample as usize] += 1;
+        }
+        let pval = super::super::stats::chi_squared_pvalue(&counts, &p, n as u64);
+        assert!(pval > 1e-3, "Alg I.4 GoF rejected: p={pval}");
+    }
+
+    /// Pathwise merge is shard-count invariant (Lemma D.5).
+    #[test]
+    fn prop_pathwise_shard_invariance() {
+        testutil::cases(64, 0x81, |g| {
+            let n_ranks = 1usize << g.u32_in(1, 3); // 2, 4, 8
+            let seed = g.u64();
+            let step = g.u32_in(0, 500);
+            let l = toy_logits(512, seed);
+            let key = Key::from_seed(seed);
+            let mono = gumbel::sample_row(&l, &Transform::default(), key, 0, step)
+                .unwrap();
+            let merged = merge_pathwise(&shards(&l, n_ranks, key, 0, step)).unwrap();
+            assert_eq!(merged.local_sample, mono.index);
+        });
+    }
+
+    /// The payload is O(1) per rank: merging loses no exactness however
+    /// the vocab splits (log_Z bookkeeping check).
+    #[test]
+    fn prop_mass_bookkeeping() {
+        testutil::cases(64, 0x82, |g| {
+            let n_ranks = g.usize_in(1, 8);
+            let seed = g.u64();
+            let l = toy_logits(504, seed);
+            let vs = l.len() / n_ranks;
+            let l = &l[..vs * n_ranks];
+            let s = shards(l, n_ranks, Key::from_seed(seed), 0, 0);
+            assert!((log_z(&s) - log_sum_exp(l)).abs() < 1e-3);
+        });
+    }
+}

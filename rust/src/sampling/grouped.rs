@@ -1,0 +1,211 @@
+//! Parallel Group-Gumbel-Max (paper Algorithm I.2, Lemmas D.1-D.2).
+//!
+//! Partition the vocabulary into groups; each group yields an exact local
+//! sample plus its log-mass L_k = logsumexp(group logits); an outer
+//! Gumbel-Max over {L_k} (fresh Gumbels, max-stability) picks the winning
+//! group.  Exact in distribution by hierarchical factorization.
+
+use super::philox::{self, Key};
+use super::{log_sum_exp, Transform};
+
+/// Per-group summary: what each "threadblock" (or rank) reports upward.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GroupSummary {
+    /// Exact local sample, as a *global* vocabulary index.
+    pub local_sample: u32,
+    /// Group log-mass L_k = logsumexp over the group's transformed logits.
+    pub log_mass: f32,
+}
+
+/// Compute one group's summary (lines 2-4 of Alg. I.2).
+///
+/// `base` is the group's starting global vocab index; Gumbel positions are
+/// global so local samples are reproducible across regroupings.
+/// Returns `None` for a zero-mass group (skipped per §D.1).
+pub fn group_summary(
+    logits: &[f32],
+    base: usize,
+    transform: &Transform,
+    key: Key,
+    row: u32,
+    step: u32,
+) -> Option<GroupSummary> {
+    let mut best = f32::NEG_INFINITY;
+    let mut best_i: i64 = -1;
+    let mut transformed = Vec::with_capacity(logits.len());
+    for (j, &l) in logits.iter().enumerate() {
+        let i = base + j;
+        let y = transform.apply(l, i);
+        transformed.push(y);
+        if y == f32::NEG_INFINITY {
+            continue;
+        }
+        let s = y + philox::gumbel_at(key, i as u32, row, step);
+        if s > best {
+            best = s;
+            best_i = i as i64;
+        }
+    }
+    (best_i >= 0).then(|| GroupSummary {
+        local_sample: best_i as u32,
+        log_mass: log_sum_exp(&transformed),
+    })
+}
+
+/// Outer selection (lines 6-7): Gumbel-Max over group log-masses with fresh
+/// Gumbels on the GROUP_SELECT stream, counter = group index `k`.
+///
+/// `summaries` are (group index, summary) pairs for nonzero-mass groups.
+pub fn select_group(
+    summaries: &[(u32, GroupSummary)],
+    key: Key,
+    row: u32,
+    step: u32,
+) -> Option<(u32, GroupSummary)> {
+    summaries
+        .iter()
+        .map(|&(k, s)| {
+            let g = philox::gumbel_group_select(key, k, row, step);
+            (s.log_mass + g, k, s)
+        })
+        .reduce(|a, b| if b.0 > a.0 { b } else { a })
+        .map(|(_, k, s)| (k, s))
+}
+
+/// Full Algorithm I.2 over one row: group, summarize, select.
+///
+/// Returns (sample, log_Z) — log_Z is the optional log-normalizer output
+/// (Appendix L), free as a byproduct of the group masses.
+pub fn sample_row(
+    logits: &[f32],
+    group_size: usize,
+    transform: &Transform,
+    key: Key,
+    row: u32,
+    step: u32,
+) -> Option<(u32, f32)> {
+    assert!(group_size > 0);
+    let mut summaries = Vec::with_capacity(logits.len().div_ceil(group_size));
+    for (k, chunk) in logits.chunks(group_size).enumerate() {
+        if let Some(s) =
+            group_summary(chunk, k * group_size, transform, key, row, step)
+        {
+            summaries.push((k as u32, s));
+        }
+    }
+    let masses: Vec<f32> = summaries.iter().map(|(_, s)| s.log_mass).collect();
+    let log_z = log_sum_exp(&masses);
+    select_group(&summaries, key, row, step).map(|(_, s)| (s.local_sample, log_z))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil;
+
+    fn toy_logits(n: usize, seed: u64) -> Vec<f32> {
+        let key = Key::from_seed(seed ^ 0x5EED);
+        (0..n)
+            .map(|i| 3.0 * (philox::uniform_at(key, i as u32, 0, 3, 0) - 0.5))
+            .collect()
+    }
+
+    #[test]
+    fn log_z_is_grouping_invariant() {
+        let l = toy_logits(256, 7);
+        let t = Transform::default();
+        let key = Key::new(1, 2);
+        let reference = log_sum_exp(&l);
+        for gs in [1usize, 8, 17, 64, 256, 999] {
+            let (_, lz) = sample_row(&l, gs, &t, key, 0, 0).unwrap();
+            assert!(
+                (lz - reference).abs() < 1e-4,
+                "gs={gs}: {lz} vs {reference}"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_mass_groups_are_skipped() {
+        let l = vec![0.0f32; 64];
+        let mut bias = vec![f32::NEG_INFINITY; 64];
+        for i in 0..16 {
+            bias[i] = 0.0; // only group 0 alive (group_size 16)
+        }
+        let t = Transform { temperature: 1.0, bias: Some(bias) };
+        for step in 0..30 {
+            let (s, _) = sample_row(&l, 16, &t, Key::new(4, 4), 0, step).unwrap();
+            assert!((s as usize) < 16);
+        }
+    }
+
+    #[test]
+    fn all_zero_mass_returns_none() {
+        let l = vec![0.0f32; 32];
+        let t = Transform { temperature: 1.0, bias: Some(vec![f32::NEG_INFINITY; 32]) };
+        assert!(sample_row(&l, 8, &t, Key::new(1, 1), 0, 0).is_none());
+    }
+
+    #[test]
+    fn peaked_group_always_wins() {
+        let mut l = vec![-20.0f32; 128];
+        l[70] = 20.0;
+        let t = Transform::default();
+        for step in 0..40 {
+            let (s, _) = sample_row(&l, 32, &t, Key::new(9, 1), 0, step).unwrap();
+            assert_eq!(s, 70);
+        }
+    }
+
+    /// Chi-squared GoF for Alg. I.2 against exact probabilities — the Rust
+    /// half of the paper's §4.6 kernel-level verification.
+    #[test]
+    fn distribution_is_exact_chi_squared() {
+        let v = 64;
+        let l = toy_logits(v, 42);
+        let t = Transform::default();
+        let p = super::super::multinomial::probs(&l, &t);
+        let n = 40_000u32;
+        let mut counts = vec![0u64; v];
+        let key = Key::new(0xAA, 0xBB);
+        for step in 0..n {
+            let (s, _) = sample_row(&l, 16, &t, key, 0, step).unwrap();
+            counts[s as usize] += 1;
+        }
+        let pval = super::super::stats::chi_squared_pvalue(&counts, &p, n as u64);
+        assert!(pval > 1e-3, "Alg I.2 GoF rejected: p={pval}");
+    }
+
+    /// Group-size invariance of log_Z (Lemma D.1 factorization).
+    #[test]
+    fn prop_log_z_invariant() {
+        testutil::cases(96, 0x61, |g| {
+            let n = g.usize_in(1, 200);
+            let gs = g.usize_in(1, 64);
+            let seed = g.u64();
+            let l = toy_logits(n, seed);
+            let t = Transform::default();
+            let (_, lz) = sample_row(&l, gs, &t, Key::from_seed(seed), 0, 0).unwrap();
+            assert!((lz - log_sum_exp(&l)).abs() < 1e-3);
+        });
+    }
+
+    /// Samples always land in a nonzero-mass category.
+    #[test]
+    fn prop_sample_in_support() {
+        testutil::cases(96, 0x62, |g| {
+            let n = g.usize_in(2, 128);
+            let gs = g.usize_in(1, 40);
+            let seed = g.u64();
+            let lo = g.usize_in(0, 64).min(n - 1);
+            let l = toy_logits(n, seed);
+            let mut bias = vec![0.0f32; n];
+            for b in bias.iter_mut().take(lo) {
+                *b = f32::NEG_INFINITY;
+            }
+            let t = Transform { temperature: 1.0, bias: Some(bias) };
+            let (s, _) = sample_row(&l, gs, &t, Key::from_seed(seed), 0, 1).unwrap();
+            assert!((s as usize) >= lo && (s as usize) < n);
+        });
+    }
+}

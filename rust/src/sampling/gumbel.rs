@@ -1,0 +1,206 @@
+//! Streaming Gumbel-Max sampler (paper Algorithm I.1).
+//!
+//! One pass over the logits, keeping only `(best score, best index)` — the
+//! online-normalizer-style state that makes epilogue fusion practical
+//! (paper §3.1).  With the shared Philox streams this is *pathwise*
+//! identical to the Pallas kernel's output for the same `(seed, step)`.
+
+use super::philox::{self, Key};
+use super::Transform;
+
+/// Result of a Gumbel-Max pass over one row.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GumbelMax {
+    /// The exact sample: argmax_i (logit_i + g_i).
+    pub index: u32,
+    /// The winning perturbed score max_i (logit_i + g_i).
+    pub score: f32,
+}
+
+/// Streaming Gumbel-Max over one row of logits (Alg. I.1).
+///
+/// `row` is the batch index b (selects the Philox stream); `step` the decode
+/// step.  Returns `None` if every transformed logit is `-inf` (undefined
+/// target distribution — the caller must treat this as an error).
+pub fn sample_row(
+    logits: &[f32],
+    transform: &Transform,
+    key: Key,
+    row: u32,
+    step: u32,
+) -> Option<GumbelMax> {
+    // Chunked: generate Gumbels for a tile of positions at once (lets the
+    // Philox pipelines overlap — §Perf L3), then reduce the tile.
+    const CHUNK: usize = 512;
+    let mut noise = [0.0f32; CHUNK];
+    let mut best = f32::NEG_INFINITY;
+    let mut best_i: i64 = -1;
+    let mut base = 0usize;
+    for chunk in logits.chunks(CHUNK) {
+        philox::gumbel_row(key, row, step, base as u32, &mut noise[..chunk.len()]);
+        for (j, &l) in chunk.iter().enumerate() {
+            let i = base + j;
+            let y = transform.apply(l, i);
+            if y == f32::NEG_INFINITY {
+                continue; // zero-mass category: can never win
+            }
+            let s = y + noise[j];
+            if s > best {
+                best = s;
+                best_i = i as i64;
+            }
+        }
+        base += chunk.len();
+    }
+    (best_i >= 0).then(|| GumbelMax { index: best_i as u32, score: best })
+}
+
+/// Gumbel-Max over a batch of rows `[B, V]` (row-major).
+pub fn sample_batch(
+    logits: &[f32],
+    vocab: usize,
+    transform: &Transform,
+    key: Key,
+    step: u32,
+) -> Vec<Option<GumbelMax>> {
+    assert_eq!(logits.len() % vocab, 0);
+    logits
+        .chunks_exact(vocab)
+        .enumerate()
+        .map(|(b, row)| sample_row(row, transform, key, b as u32, step))
+        .collect()
+}
+
+/// Tile-decomposed Gumbel-Max: Stage 1 + Stage 2 of Algorithm 1, on the CPU.
+///
+/// Splits the row into `tile_v`-sized vocabulary tiles, reduces each tile to
+/// a local `(max, argmax)` candidate, then argmaxes over candidates.  By
+/// Lemma D.5 this returns the identical sample to [`sample_row`] — asserted
+/// by proptest in this module's tests.  (This is the reference model of the
+/// fused kernel's two-stage structure, used by the TP orchestrator to merge
+/// per-rank candidates.)
+pub fn sample_row_tiled(
+    logits: &[f32],
+    transform: &Transform,
+    key: Key,
+    row: u32,
+    step: u32,
+    tile_v: usize,
+) -> Option<GumbelMax> {
+    assert!(tile_v > 0);
+    let mut candidates: Vec<GumbelMax> = Vec::with_capacity(logits.len().div_ceil(tile_v));
+    for (t, tile) in logits.chunks(tile_v).enumerate() {
+        let base = t * tile_v;
+        let mut best = f32::NEG_INFINITY;
+        let mut best_i: i64 = -1;
+        for (j, &l) in tile.iter().enumerate() {
+            let i = base + j;
+            let y = transform.apply(l, i);
+            if y == f32::NEG_INFINITY {
+                continue;
+            }
+            let s = y + philox::gumbel_at(key, i as u32, row, step);
+            if s > best {
+                best = s;
+                best_i = i as i64;
+            }
+        }
+        if best_i >= 0 {
+            candidates.push(GumbelMax { index: best_i as u32, score: best });
+        }
+    }
+    // Stage 2: argmax over the candidate buffer (first max wins, matching
+    // the monolithic scan's first-index tie-break).
+    candidates
+        .into_iter()
+        .reduce(|a, b| if b.score > a.score { b } else { a })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil;
+
+    fn toy_logits(n: usize, seed: u64) -> Vec<f32> {
+        // Deterministic pseudo-logits via Philox itself (any values work).
+        let key = Key::from_seed(seed ^ 0xABCD);
+        (0..n)
+            .map(|i| 3.0 * (philox::uniform_at(key, i as u32, 0, 3, 0) - 0.5))
+            .collect()
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let l = toy_logits(100, 1);
+        let t = Transform::default();
+        let a = sample_row(&l, &t, Key::new(1, 2), 0, 0).unwrap();
+        let b = sample_row(&l, &t, Key::new(1, 2), 0, 0).unwrap();
+        assert_eq!(a, b);
+        let c = sample_row(&l, &t, Key::new(1, 3), 0, 0).unwrap();
+        // different key virtually surely differs somewhere over repeats
+        let _ = c;
+    }
+
+    #[test]
+    fn all_masked_returns_none() {
+        let l = vec![1.0f32; 8];
+        let t = Transform { temperature: 1.0, bias: Some(vec![f32::NEG_INFINITY; 8]) };
+        assert!(sample_row(&l, &t, Key::new(0, 0), 0, 0).is_none());
+    }
+
+    #[test]
+    fn mask_restricts_support() {
+        let l = toy_logits(64, 2);
+        let mut bias = vec![f32::NEG_INFINITY; 64];
+        for i in 10..20 {
+            bias[i] = 0.0;
+        }
+        let t = Transform { temperature: 1.0, bias: Some(bias) };
+        for step in 0..50 {
+            let s = sample_row(&l, &t, Key::new(7, 8), 0, step).unwrap();
+            assert!((10..20).contains(&(s.index as usize)));
+        }
+    }
+
+    #[test]
+    fn rows_draw_distinct_streams() {
+        let l = toy_logits(512, 3);
+        let t = Transform::default();
+        let k = Key::new(5, 5);
+        let a = sample_row(&l, &t, k, 0, 0).unwrap();
+        let b = sample_row(&l, &t, k, 1, 0).unwrap();
+        // scores essentially never equal across independent streams
+        assert_ne!(a.score, b.score);
+    }
+
+    /// Lemma D.5: tiled two-stage == monolithic, for any tiling (property).
+    #[test]
+    fn prop_tile_decomposition_is_exact() {
+        testutil::cases(128, 0xD5, |g| {
+            let n = g.usize_in(1, 400);
+            let tile_v = g.usize_in(1, 96);
+            let seed = g.u64();
+            let step = g.u32_in(0, 1000);
+            let l = toy_logits(n, seed);
+            let t = Transform::default();
+            let key = Key::from_seed(seed);
+            let mono = sample_row(&l, &t, key, 0, step);
+            let tiled = sample_row_tiled(&l, &t, key, 0, step, tile_v);
+            assert_eq!(mono, tiled);
+        });
+    }
+
+    /// Temperature never changes the support, only the distribution.
+    #[test]
+    fn prop_temperature_keeps_index_in_range() {
+        testutil::cases(64, 0x7A0, |g| {
+            let n = g.usize_in(2, 200);
+            let tau = g.f32_in(0.05, 5.0);
+            let seed = g.u64();
+            let l = toy_logits(n, seed);
+            let t = Transform::with_temperature(tau);
+            let s = sample_row(&l, &t, Key::from_seed(seed), 0, 0).unwrap();
+            assert!((s.index as usize) < n);
+        });
+    }
+}

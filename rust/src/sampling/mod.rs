@@ -1,0 +1,119 @@
+//! Exact categorical samplers — native Rust mirrors of the paper's
+//! algorithms, sharing Philox streams with the Pallas kernel.
+//!
+//! | Paper | Module |
+//! |---|---|
+//! | Alg. I.1 streaming Gumbel-Max | [`gumbel`] |
+//! | Alg. A.1 materialized-logits baseline | [`multinomial`] |
+//! | Alg. I.2 parallel Group-Gumbel-Max | [`grouped`] |
+//! | Alg. I.3 online merge (Lemma D.3) | [`online`] |
+//! | Alg. I.4 distributed tensor-parallel merge | [`distributed`] |
+//! | Gumbel-Top-k candidate reduction (App. D.6) | [`topk`] |
+//! | chi-squared GoF + paired bootstrap (§4.6) | [`stats`] |
+//!
+//! These run on the L3 request path (e.g. the TP orchestrator's rank merge)
+//! and in tests/benches; the heavy fused path is the AOT Pallas kernel.
+
+pub mod distributed;
+pub mod grouped;
+pub mod gumbel;
+pub mod multinomial;
+pub mod online;
+pub mod philox;
+pub mod stats;
+pub mod topk;
+
+pub use philox::Key;
+
+/// Numerically stable log(sum(exp(xs))) over a slice.
+///
+/// Returns `-inf` for empty/all-`-inf` input (a zero-mass group, §D.1).
+pub fn log_sum_exp(xs: &[f32]) -> f32 {
+    let m = xs.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    if !m.is_finite() {
+        return f32::NEG_INFINITY;
+    }
+    let s: f32 = xs.iter().map(|&x| (x - m).exp()).sum();
+    m + s.ln()
+}
+
+/// log(e^a + e^b) without overflow; the online merge's running-mass update.
+pub fn log_add_exp(a: f32, b: f32) -> f32 {
+    if a == f32::NEG_INFINITY {
+        return b;
+    }
+    if b == f32::NEG_INFINITY {
+        return a;
+    }
+    let (hi, lo) = if a >= b { (a, b) } else { (b, a) };
+    hi + (lo - hi).exp().ln_1p()
+}
+
+/// Deterministic logit transforms (Alg. 1 line 3): temperature scaling,
+/// optional additive bias, `-inf` masking handled via the bias path.
+#[derive(Clone, Debug)]
+pub struct Transform {
+    /// Softmax temperature tau > 0.
+    pub temperature: f32,
+    /// Optional per-vocab additive bias; `-inf` entries ban tokens.
+    pub bias: Option<Vec<f32>>,
+}
+
+impl Default for Transform {
+    fn default() -> Self {
+        Self { temperature: 1.0, bias: None }
+    }
+}
+
+impl Transform {
+    pub fn with_temperature(temperature: f32) -> Self {
+        Self { temperature, bias: None }
+    }
+
+    /// Apply to one logit at vocab index `i`.
+    #[inline(always)]
+    pub fn apply(&self, logit: f32, i: usize) -> f32 {
+        let mut y = logit / self.temperature;
+        if let Some(b) = &self.bias {
+            y += b[i];
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_sum_exp_matches_naive() {
+        let xs = [0.1f32, -2.0, 3.5, 1.0];
+        let naive: f32 = xs.iter().map(|x| x.exp()).sum::<f32>().ln();
+        assert!((log_sum_exp(&xs) - naive).abs() < 1e-6);
+    }
+
+    #[test]
+    fn log_sum_exp_handles_extremes() {
+        assert_eq!(log_sum_exp(&[]), f32::NEG_INFINITY);
+        assert_eq!(log_sum_exp(&[f32::NEG_INFINITY; 3]), f32::NEG_INFINITY);
+        // No overflow at large magnitudes.
+        let big = log_sum_exp(&[1000.0, 1000.0]);
+        assert!((big - (1000.0 + 2f32.ln())).abs() < 1e-3);
+    }
+
+    #[test]
+    fn log_add_exp_agrees_with_log_sum_exp() {
+        for (a, b) in [(0.0f32, 1.0f32), (-5.0, 3.0), (100.0, 99.0)] {
+            assert!((log_add_exp(a, b) - log_sum_exp(&[a, b])).abs() < 1e-5);
+        }
+        assert_eq!(log_add_exp(f32::NEG_INFINITY, 2.0), 2.0);
+        assert_eq!(log_add_exp(2.0, f32::NEG_INFINITY), 2.0);
+    }
+
+    #[test]
+    fn transform_applies_temperature_and_bias() {
+        let t = Transform { temperature: 2.0, bias: Some(vec![0.0, -f32::INFINITY]) };
+        assert_eq!(t.apply(4.0, 0), 2.0);
+        assert_eq!(t.apply(4.0, 1), f32::NEG_INFINITY);
+    }
+}

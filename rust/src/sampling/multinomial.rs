@@ -1,0 +1,163 @@
+//! Materialized-logits baseline sampler (paper Algorithm A.1).
+//!
+//! The kernel chain the paper's baselines pay for: max pass, exp-sum pass,
+//! normalized probabilities, prefix sum, inverse-CDF search.  Exact, but it
+//! touches the logits row multiple times — this cost asymmetry (vs. the
+//! single fused pass) is exactly what `gpusim::kernel_chain` models and
+//! Table 1 / Figure 4 report.
+
+use super::philox::{self, Key};
+use super::Transform;
+
+/// Full baseline pipeline over one row (Alg. A.1 lines 1-9).
+///
+/// Draws the row uniform from the ROW_UNIFORM Philox stream at counter
+/// (i=0, b=row) — the same stream the baseline AOT artifact uses, so the
+/// Rust and XLA baselines are pathwise comparable.
+///
+/// Returns `None` when the row has no finite transformed logit.
+pub fn sample_row(
+    logits: &[f32],
+    transform: &Transform,
+    key: Key,
+    row: u32,
+    step: u32,
+) -> Option<u32> {
+    // Pass 1: max over transformed logits.
+    let mut m = f32::NEG_INFINITY;
+    for (i, &l) in logits.iter().enumerate() {
+        m = m.max(transform.apply(l, i));
+    }
+    if m == f32::NEG_INFINITY {
+        return None;
+    }
+    // Pass 2: normalizer.
+    let mut z = 0.0f64;
+    for (i, &l) in logits.iter().enumerate() {
+        z += ((transform.apply(l, i) - m) as f64).exp();
+    }
+    // Prefix-sum + inverse-CDF search (merged loop; the paper's Alg. A.1
+    // materializes p and c as separate kernels — the traffic model accounts
+    // for those passes, the arithmetic here is equivalent).
+    let u = philox::uniform_at(key, 0, row, philox::STREAM_ROW_UNIFORM, step) as f64;
+    let target = u * z;
+    let mut acc = 0.0f64;
+    let mut last_alive = None;
+    for (i, &l) in logits.iter().enumerate() {
+        let y = transform.apply(l, i);
+        if y == f32::NEG_INFINITY {
+            continue;
+        }
+        acc += ((y - m) as f64).exp();
+        last_alive = Some(i as u32);
+        if acc >= target {
+            return Some(i as u32);
+        }
+    }
+    last_alive // fp slack: clamp to the last nonzero-mass category
+}
+
+/// Baseline over a `[B, V]` row-major batch.
+pub fn sample_batch(
+    logits: &[f32],
+    vocab: usize,
+    transform: &Transform,
+    key: Key,
+    step: u32,
+) -> Vec<Option<u32>> {
+    assert_eq!(logits.len() % vocab, 0);
+    logits
+        .chunks_exact(vocab)
+        .enumerate()
+        .map(|(b, row)| sample_row(row, transform, key, b as u32, step))
+        .collect()
+}
+
+/// Exact categorical probabilities for a row (the chi-squared oracle).
+pub fn probs(logits: &[f32], transform: &Transform) -> Vec<f64> {
+    let mut m = f32::NEG_INFINITY;
+    for (i, &l) in logits.iter().enumerate() {
+        m = m.max(transform.apply(l, i));
+    }
+    let e: Vec<f64> = logits
+        .iter()
+        .enumerate()
+        .map(|(i, &l)| {
+            let y = transform.apply(l, i);
+            if y == f32::NEG_INFINITY { 0.0 } else { ((y - m) as f64).exp() }
+        })
+        .collect();
+    let z: f64 = e.iter().sum();
+    e.into_iter().map(|x| x / z).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil;
+
+    #[test]
+    fn samples_in_range_and_deterministic() {
+        let l: Vec<f32> = (0..100).map(|i| ((i * 37) % 11) as f32 / 3.0).collect();
+        let t = Transform::default();
+        let a = sample_row(&l, &t, Key::new(3, 4), 0, 0).unwrap();
+        let b = sample_row(&l, &t, Key::new(3, 4), 0, 0).unwrap();
+        assert_eq!(a, b);
+        assert!((a as usize) < 100);
+    }
+
+    #[test]
+    fn respects_mask() {
+        let l = vec![0.0f32; 32];
+        let mut bias = vec![f32::NEG_INFINITY; 32];
+        bias[5] = 0.0;
+        let t = Transform { temperature: 1.0, bias: Some(bias) };
+        for step in 0..20 {
+            assert_eq!(sample_row(&l, &t, Key::new(1, 1), 0, step), Some(5));
+        }
+    }
+
+    #[test]
+    fn all_masked_is_none() {
+        let l = vec![0.0f32; 8];
+        let t = Transform { temperature: 1.0, bias: Some(vec![f32::NEG_INFINITY; 8]) };
+        assert_eq!(sample_row(&l, &t, Key::new(1, 1), 0, 0), None);
+    }
+
+    #[test]
+    fn probs_sum_to_one() {
+        let l: Vec<f32> = (0..64).map(|i| (i as f32).sin()).collect();
+        let p = probs(&l, &Transform::default());
+        let s: f64 = p.iter().sum();
+        assert!((s - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn peaked_distribution_sampled_correctly() {
+        let mut l = vec![-10.0f32; 50];
+        l[17] = 10.0; // ~e^20 more likely than anything else
+        for step in 0..50 {
+            assert_eq!(
+                sample_row(&l, &Transform::default(), Key::new(2, 2), 0, step),
+                Some(17)
+            );
+        }
+    }
+
+    #[test]
+    fn prop_always_returns_valid_index() {
+        testutil::cases(128, 0xA1, |g| {
+            let n = g.usize_in(1, 300);
+            let seed = g.u64();
+            let tau = g.f32_in(0.1, 4.0);
+            let step = g.u32_in(0, 100);
+            let key = Key::from_seed(seed);
+            let l: Vec<f32> = (0..n)
+                .map(|i| 4.0 * (philox::uniform_at(key, i as u32, 1, 3, 0) - 0.5))
+                .collect();
+            let t = Transform::with_temperature(tau);
+            let s = sample_row(&l, &t, key, 0, step).unwrap();
+            assert!((s as usize) < n);
+        });
+    }
+}

@@ -1,0 +1,206 @@
+//! Online (streaming) Group-Gumbel-Max (paper Algorithm I.3, Lemma D.3).
+//!
+//! Streams groups one at a time keeping O(group) working memory: a running
+//! log-mass and a running sample.  Each new nonzero-mass group replaces the
+//! running sample with probability exp(L_k - L_new) — the binary merge rule,
+//! exact by induction (Theorem D.4).
+
+use super::grouped::GroupSummary;
+use super::philox::{self, Key};
+use super::{log_add_exp, Transform};
+
+/// Running state of the online sampler: (L_run, z) of Algorithm I.3.
+#[derive(Clone, Copy, Debug)]
+pub struct OnlineState {
+    /// Running log-mass of everything streamed so far.
+    pub log_mass: f32,
+    /// Current sample (global vocab index), exact for the streamed prefix.
+    pub sample: u32,
+    groups_seen: u32,
+}
+
+impl OnlineState {
+    /// Initialize from the first nonzero-mass group.
+    pub fn new(first: GroupSummary) -> Self {
+        Self {
+            log_mass: first.log_mass,
+            sample: first.local_sample,
+            groups_seen: 1,
+        }
+    }
+
+    /// Merge the next group (Alg. I.3 lines 8-15).
+    ///
+    /// The replace-Bernoulli consumes the GROUP_SELECT stream at counter
+    /// i = `group_index`, so merges are reproducible and independent of the
+    /// Gumbels used inside groups.
+    pub fn merge(
+        &mut self,
+        next: GroupSummary,
+        group_index: u32,
+        key: Key,
+        row: u32,
+        step: u32,
+    ) {
+        let l_new = log_add_exp(self.log_mass, next.log_mass);
+        // p_replace = exp(L_k - L_new) = 1 / (1 + exp(L_run - L_k))
+        let p_replace = (next.log_mass - l_new).exp();
+        let u = philox::uniform_at(
+            key,
+            group_index,
+            row,
+            philox::STREAM_GROUP_SELECT,
+            step,
+        );
+        if u < p_replace {
+            self.sample = next.local_sample;
+        }
+        self.log_mass = l_new;
+        self.groups_seen += 1;
+    }
+
+    /// Number of groups merged so far.
+    pub fn groups_seen(&self) -> u32 {
+        self.groups_seen
+    }
+}
+
+/// Full Algorithm I.3 over one row: stream `group_size` chunks.
+///
+/// Returns (sample, log_Z).  Working memory is O(group_size) — the whole
+/// point of the online variant ("when memory is the primary constraint").
+pub fn sample_row(
+    logits: &[f32],
+    group_size: usize,
+    transform: &Transform,
+    key: Key,
+    row: u32,
+    step: u32,
+) -> Option<(u32, f32)> {
+    assert!(group_size > 0);
+    let mut state: Option<OnlineState> = None;
+    for (k, chunk) in logits.chunks(group_size).enumerate() {
+        let base = k * group_size;
+        let Some(summary) =
+            super::grouped::group_summary(chunk, base, transform, key, row, step)
+        else {
+            continue; // zero-mass group: skip (§D.1)
+        };
+        match &mut state {
+            None => state = Some(OnlineState::new(summary)),
+            Some(s) => s.merge(summary, k as u32, key, row, step),
+        }
+    }
+    state.map(|s| (s.sample, s.log_mass))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::log_sum_exp;
+    use crate::testutil;
+
+    fn toy_logits(n: usize, seed: u64) -> Vec<f32> {
+        let key = Key::from_seed(seed ^ 0x0411_13E5);
+        (0..n)
+            .map(|i| 3.0 * (philox::uniform_at(key, i as u32, 0, 3, 0) - 0.5))
+            .collect()
+    }
+
+    #[test]
+    fn running_mass_is_exact() {
+        let l = toy_logits(200, 1);
+        let t = Transform::default();
+        let (_, lz) = sample_row(&l, 33, &t, Key::new(2, 3), 0, 0).unwrap();
+        assert!((lz - log_sum_exp(&l)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn zero_mass_groups_skipped_mid_stream() {
+        let l = vec![0.0f32; 96];
+        let mut bias = vec![0.0f32; 96];
+        for b in bias[32..64].iter_mut() {
+            *b = f32::NEG_INFINITY; // middle group dead
+        }
+        let t = Transform { temperature: 1.0, bias: Some(bias) };
+        for step in 0..30 {
+            let (s, _) = sample_row(&l, 32, &t, Key::new(6, 6), 0, step).unwrap();
+            assert!(!(32..64).contains(&(s as usize)));
+        }
+    }
+
+    #[test]
+    fn chi_squared_distribution_exact() {
+        let v = 48;
+        let l = toy_logits(v, 9);
+        let t = Transform::default();
+        let p = super::super::multinomial::probs(&l, &t);
+        let n = 40_000u32;
+        let mut counts = vec![0u64; v];
+        let key = Key::new(0x11, 0x22);
+        for step in 0..n {
+            let (s, _) = sample_row(&l, 16, &t, key, 0, step).unwrap();
+            counts[s as usize] += 1;
+        }
+        let pval = super::super::stats::chi_squared_pvalue(&counts, &p, n as u64);
+        assert!(pval > 1e-3, "Alg I.3 GoF rejected: p={pval}");
+    }
+
+    #[test]
+    fn merge_probability_extremes() {
+        // A group with -inf mass never replaces; an overwhelming one always.
+        let mut st = OnlineState::new(GroupSummary { local_sample: 1, log_mass: 0.0 });
+        st.merge(
+            GroupSummary { local_sample: 99, log_mass: f32::NEG_INFINITY },
+            1, Key::new(0, 0), 0, 0,
+        );
+        assert_eq!(st.sample, 1);
+        st.merge(
+            GroupSummary { local_sample: 42, log_mass: 60.0 },
+            2, Key::new(0, 0), 0, 0,
+        );
+        assert_eq!(st.sample, 42); // p_replace ≈ 1 - e^-60
+    }
+
+    /// log_Z bookkeeping is exact for any grouping/stream order.
+    #[test]
+    fn prop_mass_bookkeeping_invariant() {
+        testutil::cases(96, 0x71, |g| {
+            let n = g.usize_in(1, 256);
+            let gs = g.usize_in(1, 50);
+            let seed = g.u64();
+            let l = toy_logits(n, seed);
+            let t = Transform::default();
+            let (_, lz) = sample_row(&l, gs, &t, Key::from_seed(seed), 0, 0).unwrap();
+            assert!((lz - log_sum_exp(&l)).abs() < 1e-3);
+        });
+    }
+
+    /// groups_seen counts exactly the streamed groups.
+    #[test]
+    fn prop_groups_seen_counts() {
+        testutil::cases(64, 0x72, |g| {
+            let n = g.usize_in(1, 200);
+            let gs = g.usize_in(1, 64);
+            let seed = g.u64();
+            let l = toy_logits(n, seed);
+            let t = Transform::default();
+            let key = Key::from_seed(seed);
+            let mut state: Option<OnlineState> = None;
+            for (k, chunk) in l.chunks(gs).enumerate() {
+                if let Some(s) = super::super::grouped::group_summary(
+                    chunk, k * gs, &t, key, 0, 0,
+                ) {
+                    match &mut state {
+                        None => state = Some(OnlineState::new(s)),
+                        Some(st) => st.merge(s, k as u32, key, 0, 0),
+                    }
+                }
+            }
+            assert_eq!(
+                state.unwrap().groups_seen() as usize,
+                l.chunks(gs).count()
+            );
+        });
+    }
+}

@@ -1,0 +1,294 @@
+//! Statistical verification machinery for §4.6: chi-squared goodness-of-fit
+//! (kernel level) and paired bootstrap (end-to-end level).
+//!
+//! Self-contained implementations (no external stats crate): the chi-squared
+//! survival function goes through the regularized upper incomplete gamma
+//! function Q(df/2, x/2), computed by series/continued-fraction (Numerical
+//! Recipes style), accurate to ~1e-10 over the ranges we use.
+
+use super::philox::{self, Key};
+
+/// ln Γ(x) via the Lanczos approximation (g = 7, n = 9 coefficients).
+pub fn ln_gamma(x: f64) -> f64 {
+    const COEF: [f64; 9] = [
+        0.999_999_999_999_809_93,
+        676.520_368_121_885_1,
+        -1_259.139_216_722_402_8,
+        771.323_428_777_653_13,
+        -176.615_029_162_140_6,
+        12.507_343_278_686_905,
+        -0.138_571_095_265_720_12,
+        9.984_369_578_019_571_6e-6,
+        1.505_632_735_149_311_6e-7,
+    ];
+    if x < 0.5 {
+        // reflection formula
+        let pi = std::f64::consts::PI;
+        return (pi / (pi * x).sin()).ln() - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = COEF[0];
+    let t = x + 7.5;
+    for (i, &c) in COEF.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+/// Regularized lower incomplete gamma P(a, x), by series expansion
+/// (converges fast for x < a + 1).
+fn gamma_p_series(a: f64, x: f64) -> f64 {
+    let mut sum = 1.0 / a;
+    let mut term = sum;
+    let mut n = a;
+    for _ in 0..500 {
+        n += 1.0;
+        term *= x / n;
+        sum += term;
+        if term.abs() < sum.abs() * 1e-15 {
+            break;
+        }
+    }
+    sum * (-x + a * x.ln() - ln_gamma(a)).exp()
+}
+
+/// Regularized upper incomplete gamma Q(a, x), by continued fraction
+/// (converges fast for x > a + 1).
+fn gamma_q_cf(a: f64, x: f64) -> f64 {
+    let tiny = 1e-300;
+    let mut b = x + 1.0 - a;
+    let mut c = 1.0 / tiny;
+    let mut d = 1.0 / b;
+    let mut h = d;
+    for i in 1..500 {
+        let an = -(i as f64) * (i as f64 - a);
+        b += 2.0;
+        d = an * d + b;
+        if d.abs() < tiny {
+            d = tiny;
+        }
+        c = b + an / c;
+        if c.abs() < tiny {
+            c = tiny;
+        }
+        d = 1.0 / d;
+        let del = d * c;
+        h *= del;
+        if (del - 1.0).abs() < 1e-15 {
+            break;
+        }
+    }
+    (-x + a * x.ln() - ln_gamma(a)).exp() * h
+}
+
+/// Chi-squared survival function: P(X >= chi2) for X ~ ChiSq(df).
+pub fn chi2_sf(chi2: f64, df: f64) -> f64 {
+    if chi2 <= 0.0 {
+        return 1.0;
+    }
+    let a = df / 2.0;
+    let x = chi2 / 2.0;
+    if x < a + 1.0 {
+        1.0 - gamma_p_series(a, x)
+    } else {
+        gamma_q_cf(a, x)
+    }
+    .clamp(0.0, 1.0)
+}
+
+/// Chi-squared goodness-of-fit p-value of observed `counts` against
+/// `probs`, merging small-expectation bins (E >= 5 validity rule), same
+/// protocol as python/tests/test_distribution.py and the paper's §4.6.
+pub fn chi_squared_pvalue(counts: &[u64], probs: &[f64], n: u64) -> f64 {
+    assert_eq!(counts.len(), probs.len());
+    let mut order: Vec<usize> = (0..probs.len()).collect();
+    order.sort_by(|&a, &b| probs[a].partial_cmp(&probs[b]).unwrap());
+    let mut bins: Vec<(f64, f64)> = Vec::new();
+    let (mut acc_e, mut acc_c) = (0.0f64, 0.0f64);
+    for &i in &order {
+        acc_e += probs[i] * n as f64;
+        acc_c += counts[i] as f64;
+        if acc_e >= 5.0 {
+            bins.push((acc_e, acc_c));
+            acc_e = 0.0;
+            acc_c = 0.0;
+        }
+    }
+    if acc_e > 0.0 {
+        if let Some(last) = bins.last_mut() {
+            last.0 += acc_e;
+            last.1 += acc_c;
+        } else {
+            bins.push((acc_e, acc_c));
+        }
+    }
+    if bins.len() < 2 {
+        return 1.0;
+    }
+    let chi2: f64 = bins.iter().map(|&(e, c)| (c - e) * (c - e) / e).sum();
+    chi2_sf(chi2, (bins.len() - 1) as f64)
+}
+
+/// Paired bootstrap test for a difference in paired binary outcomes
+/// (the paper's §4.6 end-to-end check: per-question accuracy of
+/// FlashSampling vs baseline decode, p = 0.776 ⇒ no significant delta).
+///
+/// Returns the two-sided p-value for H0: mean(a - b) = 0.
+pub fn paired_bootstrap_pvalue(
+    a: &[f64],
+    b: &[f64],
+    resamples: u32,
+    seed: u64,
+) -> f64 {
+    assert_eq!(a.len(), b.len());
+    assert!(!a.is_empty());
+    let n = a.len();
+    let diffs: Vec<f64> = a.iter().zip(b).map(|(x, y)| x - y).collect();
+    let observed: f64 = diffs.iter().sum::<f64>() / n as f64;
+    // Bootstrap under the null: center the differences, resample with
+    // replacement, count |mean*| >= |observed|.
+    let centered: Vec<f64> = diffs.iter().map(|d| d - observed).collect();
+    let key = Key::from_seed(seed);
+    let mut extreme = 0u32;
+    for r in 0..resamples {
+        let mut s = 0.0f64;
+        for j in 0..n {
+            // index from the Philox stream: counter (j, r)
+            let u = philox::uniform_at(key, j as u32, r, 3, 0) as f64;
+            let idx = ((u * n as f64) as usize).min(n - 1);
+            s += centered[idx];
+        }
+        if (s / n as f64).abs() >= observed.abs() {
+            extreme += 1;
+        }
+    }
+    // add-one smoothing keeps p > 0 (standard bootstrap practice)
+    (extreme as f64 + 1.0) / (resamples as f64 + 1.0)
+}
+
+/// Welford online mean/variance — used by benchmark harnesses.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RunningStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl RunningStats {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ln_gamma_known_values() {
+        // Γ(1) = 1, Γ(2) = 1, Γ(5) = 24, Γ(0.5) = sqrt(pi)
+        assert!((ln_gamma(1.0)).abs() < 1e-10);
+        assert!((ln_gamma(2.0)).abs() < 1e-10);
+        assert!((ln_gamma(5.0) - 24f64.ln()).abs() < 1e-10);
+        assert!((ln_gamma(0.5) - std::f64::consts::PI.sqrt().ln()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn chi2_sf_known_values() {
+        // From standard tables: P(X >= 3.841 | df=1) = 0.05
+        assert!((chi2_sf(3.841, 1.0) - 0.05).abs() < 1e-3);
+        // P(X >= 18.307 | df=10) = 0.05
+        assert!((chi2_sf(18.307, 10.0) - 0.05).abs() < 1e-3);
+        // P(X >= df | large df) ~ 0.5-ish; check monotonicity instead
+        assert!(chi2_sf(5.0, 10.0) > chi2_sf(15.0, 10.0));
+        assert!((chi2_sf(0.0, 5.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn chi_squared_accepts_exact_counts() {
+        let probs = vec![0.25f64; 4];
+        let counts = vec![250u64, 251, 249, 250];
+        let p = chi_squared_pvalue(&counts, &probs, 1000);
+        assert!(p > 0.9, "p={p}");
+    }
+
+    #[test]
+    fn chi_squared_rejects_biased_counts() {
+        let probs = vec![0.25f64; 4];
+        let counts = vec![400u64, 200, 200, 200];
+        let p = chi_squared_pvalue(&counts, &probs, 1000);
+        assert!(p < 1e-6, "p={p}");
+    }
+
+    #[test]
+    fn chi_squared_merges_tiny_bins() {
+        // Many near-zero-probability bins must not blow up the statistic.
+        let mut probs = vec![1e-6f64; 1000];
+        probs[0] = 1.0 - 999e-6;
+        let mut counts = vec![0u64; 1000];
+        counts[0] = 10_000;
+        let p = chi_squared_pvalue(&counts, &probs, 10_000);
+        assert!(p > 0.01, "p={p}");
+    }
+
+    #[test]
+    fn paired_bootstrap_null_not_rejected() {
+        // identical accuracy vectors -> observed diff 0 -> p ~ 1
+        let a: Vec<f64> = (0..500).map(|i| ((i * 7) % 10 < 9) as u8 as f64).collect();
+        let p = paired_bootstrap_pvalue(&a, &a.clone(), 2000, 42);
+        assert!(p > 0.9, "p={p}");
+    }
+
+    #[test]
+    fn paired_bootstrap_detects_large_difference() {
+        let a = vec![1.0f64; 300];
+        let b = vec![0.0f64; 300];
+        let p = paired_bootstrap_pvalue(&a, &b, 2000, 42);
+        assert!(p < 0.01, "p={p}");
+    }
+
+    #[test]
+    fn paired_bootstrap_small_noise_not_significant() {
+        // a and b agree on 97% of items, disagreements balanced
+        let mut a = vec![1.0f64; 400];
+        let mut b = vec![1.0f64; 400];
+        for i in 0..6 {
+            a[i] = 0.0;
+        }
+        for i in 6..12 {
+            b[i] = 0.0;
+        }
+        let p = paired_bootstrap_pvalue(&a, &b, 2000, 7);
+        assert!(p > 0.5, "p={p}");
+    }
+
+    #[test]
+    fn running_stats() {
+        let mut s = RunningStats::default();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.push(x);
+        }
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.var() - 32.0 / 7.0).abs() < 1e-12);
+        assert_eq!(s.count(), 8);
+    }
+}

@@ -1,0 +1,110 @@
+//! Minimal property-testing harness (offline substitute for `proptest`).
+//!
+//! Drives randomized test cases from the crate's own Philox streams so every
+//! failure is reproducible from `(seed, case)` — the panic message names the
+//! failing case.  Used by unit tests and benches; deliberately tiny.
+
+use crate::sampling::philox::{self, Key};
+
+/// Deterministic per-case value generator.
+pub struct Gen {
+    key: Key,
+    case: u32,
+    ctr: u32,
+}
+
+impl Gen {
+    pub fn new(seed: u64, case: u32) -> Self {
+        Self { key: Key::from_seed(seed), case, ctr: 0 }
+    }
+
+    fn next_u32(&mut self) -> u32 {
+        let out = philox::philox4x32_10(
+            [self.ctr, self.case, 0xFEED, 0],
+            [self.key.lo, self.key.hi],
+        )[0];
+        self.ctr += 1;
+        out
+    }
+
+    /// Uniform u64.
+    pub fn u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform u32 in [lo, hi] inclusive.
+    pub fn u32_in(&mut self, lo: u32, hi: u32) -> u32 {
+        assert!(lo <= hi);
+        lo + (self.next_u32() as u64 % (hi as u64 - lo as u64 + 1)) as u32
+    }
+
+    /// Uniform usize in [lo, hi] inclusive.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.u32_in(lo as u32, hi as u32) as usize
+    }
+
+    /// Uniform f32 in [lo, hi).
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + philox::uniform_open01(self.next_u32()) * (hi - lo)
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_in(0, xs.len() - 1)]
+    }
+
+    /// Bernoulli(p).
+    pub fn bool(&mut self, p: f32) -> bool {
+        philox::uniform_open01(self.next_u32()) < p
+    }
+}
+
+/// Run `n` randomized cases; panics identify the failing case id so it can
+/// be replayed with `Gen::new(seed, case)`.
+pub fn cases(n: u32, seed: u64, f: impl Fn(&mut Gen)) {
+    for case in 0..n {
+        let mut g = Gen::new(seed, case);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut g)
+        }));
+        if let Err(e) = result {
+            eprintln!("property failed at seed={seed:#x} case={case}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gen_is_deterministic() {
+        let mut a = Gen::new(1, 2);
+        let mut b = Gen::new(1, 2);
+        for _ in 0..10 {
+            assert_eq!(a.u64(), b.u64());
+        }
+    }
+
+    #[test]
+    fn ranges_respected() {
+        let mut g = Gen::new(3, 4);
+        for _ in 0..1000 {
+            let x = g.u32_in(5, 9);
+            assert!((5..=9).contains(&x));
+            let f = g.f32_in(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn cases_run_all() {
+        use std::sync::atomic::{AtomicU32, Ordering};
+        let count = AtomicU32::new(0);
+        cases(17, 0, |_| {
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 17);
+    }
+}

@@ -1,0 +1,31 @@
+//! Simulated tensor-parallel runtime (paper §3.2 multi-GPU path, §D.2).
+//!
+//! The LM-head weight is sharded across `n` ranks along the vocabulary
+//! dimension (Megatron column-parallel).  Each rank is a *thread* with its
+//! own PJRT runtime (mirroring one-process-per-GPU), executing the
+//! per-shard fused kernel; an interconnect layer carries messages between
+//! ranks and counts every byte on the wire.
+//!
+//! Two communication strategies are implemented, exactly the paper's
+//! comparison:
+//!
+//! * [`Strategy::AllGatherMultinomial`] / [`Strategy::AllGatherGumbel`] —
+//!   the baselines: every rank ships its FULL
+//!   local logits shard `[B, V/n]` to the leader, which materializes
+//!   `[B, V]` and runs a separate sampling pass (Alg. A.1 / I.1).
+//! * [`Strategy::P2pFanout`] — FlashSampling: every rank ships its O(1)
+//!   per-row summary (max score, argmax, log-mass = 12 bytes/row), the
+//!   leader max-merges (pathwise, Lemma D.5) or mass-merges (Alg. I.4).
+//!
+//! On this CPU testbed the *timing* benefit of overlap can't be observed
+//! (there is no independent NVLink engine to overlap with), so the measured
+//! quantities are the structural ones the paper's cost model uses — bytes
+//! on wire, message counts, serialized-vs-overlappable phases — and
+//! `gpusim::interconnect` converts them into predicted multi-GPU runtimes
+//! (Figure 3 / Table 6).
+
+pub mod interconnect;
+pub mod orchestrator;
+
+pub use interconnect::{Interconnect, LinkStats};
+pub use orchestrator::{Strategy, TpConfig, TpOrchestrator, TpStepResult};

@@ -1,0 +1,264 @@
+//! TP orchestrator: leader + n rank threads decoding one vocab shard each.
+//!
+//! Mirrors the deployment the paper targets: rank r holds LM-head rows
+//! `[r·V/n, (r+1)·V/n)`; at each decode step the leader broadcasts the
+//! hidden states, every rank runs its fused shard kernel, and summaries (or
+//! full shard logits, for the baseline) come back over the interconnect.
+
+use std::sync::mpsc::{channel, Sender};
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use super::interconnect::{Interconnect, Message};
+use crate::runtime::{Runtime, Tensor};
+use crate::sampling::{distributed, gumbel, multinomial, Key, Transform};
+
+/// Communication strategy (the paper's comparison axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    /// FlashSampling P2P fan-out of O(1)-per-row summaries.
+    P2pFanout,
+    /// Baseline: all-gather full shard logits, then sample on the leader
+    /// with the materialized-logits pipeline (Alg. A.1).
+    AllGatherMultinomial,
+    /// Baseline: all-gather, then Gumbel-Max on materialized logits (FI2).
+    AllGatherGumbel,
+}
+
+/// Orchestrator configuration.
+#[derive(Clone, Debug)]
+pub struct TpConfig {
+    pub artifacts_dir: std::path::PathBuf,
+    /// Tensor-parallel degree; must match a `shard_sample_*_tp{n}` artifact.
+    pub n_ranks: usize,
+    pub batch: usize,
+    pub d_model: usize,
+    pub vocab: usize,
+    pub seed: u64,
+}
+
+/// One decode step's outcome.
+#[derive(Clone, Debug)]
+pub struct TpStepResult {
+    pub samples: Vec<i32>,
+    /// Log-normalizers (fan-out path only; free from shard masses).
+    pub log_z: Option<Vec<f32>>,
+    /// Bytes that crossed the interconnect this step.
+    pub wire_bytes: u64,
+}
+
+enum Work {
+    Step { h: Vec<f32>, seed: Key, step: u32, tau: f32, strategy: Strategy },
+    Shutdown,
+}
+
+/// Leader handle over the rank threads.
+pub struct TpOrchestrator {
+    cfg: TpConfig,
+    ranks: Vec<(Sender<Work>, JoinHandle<Result<()>>)>,
+    fabric: Interconnect,
+    bytes_before: u64,
+    key: Key,
+}
+
+impl TpOrchestrator {
+    /// Spawn rank threads.  `w` is the full LM-head weight `[V, D]`
+    /// row-major; each rank receives its contiguous shard.
+    pub fn new(cfg: TpConfig, w: &[f32]) -> Result<Self> {
+        anyhow::ensure!(
+            cfg.vocab % cfg.n_ranks == 0,
+            "vocab {} not divisible by {} ranks",
+            cfg.vocab,
+            cfg.n_ranks
+        );
+        anyhow::ensure!(w.len() == cfg.vocab * cfg.d_model, "bad weight size");
+        let vs = cfg.vocab / cfg.n_ranks;
+        let fabric = Interconnect::new(cfg.n_ranks);
+        let sample_artifact = format!(
+            "shard_sample_b{}_d{}_v{}_tp{}",
+            cfg.batch, cfg.d_model, cfg.vocab, cfg.n_ranks
+        );
+        let logits_artifact = format!(
+            "shard_logits_b{}_d{}_v{}_tp{}",
+            cfg.batch, cfg.d_model, cfg.vocab, cfg.n_ranks
+        );
+
+        let mut ranks = Vec::with_capacity(cfg.n_ranks);
+        for r in 0..cfg.n_ranks {
+            let (tx, rx) = channel::<Work>();
+            let link = fabric.link(r as u32);
+            let shard = w[r * vs * cfg.d_model..(r + 1) * vs * cfg.d_model].to_vec();
+            let dir = cfg.artifacts_dir.clone();
+            let (sa, la) = (sample_artifact.clone(), logits_artifact.clone());
+            let (b, d) = (cfg.batch, cfg.d_model);
+            let offset = (r * vs) as i32;
+            let handle = std::thread::spawn(move || -> Result<()> {
+                // One PJRT runtime per rank thread (one-process-per-GPU).
+                let rt = Runtime::new(&dir)?;
+                let sample_exe = rt.load(&sa)?;
+                let logits_exe = rt.load(&la)?;
+                // The shard weight is uploaded once and reused every step.
+                let w_lit = Tensor::F32(shard, vec![vs, d]).to_literal()?;
+                let off_lit = Tensor::I32(vec![offset], vec![1]).to_literal()?;
+                while let Ok(work) = rx.recv() {
+                    match work {
+                        Work::Shutdown => break,
+                        Work::Step { h, seed, step, tau, strategy } => {
+                            let h_lit = Tensor::F32(h, vec![b, d]).to_literal()?;
+                            match strategy {
+                                Strategy::P2pFanout => {
+                                    let seed_lit = Tensor::seed(seed).to_literal()?;
+                                    let step_lit =
+                                        Tensor::scalar_u32(step).to_literal()?;
+                                    let tau_lit =
+                                        Tensor::scalar_f32(tau).to_literal()?;
+                                    let out = sample_exe.run_literals(&[
+                                        &h_lit, &w_lit, &off_lit, &seed_lit,
+                                        &step_lit, &tau_lit,
+                                    ])?;
+                                    let m = out[0].as_f32()?;
+                                    let idx = out[1].as_i32()?;
+                                    let lm = out[2].as_f32()?;
+                                    let rows = (0..b)
+                                        .map(|i| (m[i], idx[i], lm[i]))
+                                        .collect();
+                                    link.send(Message::Summaries {
+                                        rank: r as u32,
+                                        rows,
+                                    });
+                                }
+                                Strategy::AllGatherMultinomial
+                                | Strategy::AllGatherGumbel => {
+                                    let out =
+                                        logits_exe.run_literals(&[&h_lit, &w_lit])?;
+                                    link.send(Message::LogitsShard {
+                                        rank: r as u32,
+                                        batch: b,
+                                        data: out[0].as_f32()?.to_vec(),
+                                    });
+                                }
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            });
+            ranks.push((tx, handle));
+        }
+        let key = Key::from_seed(cfg.seed);
+        Ok(Self { cfg, ranks, fabric, bytes_before: 0, key })
+    }
+
+    pub fn n_ranks(&self) -> usize {
+        self.cfg.n_ranks
+    }
+
+    /// Run one decode step over all ranks with the given strategy.
+    pub fn step(
+        &mut self,
+        h: &[f32],
+        step: u32,
+        tau: f32,
+        strategy: Strategy,
+    ) -> Result<TpStepResult> {
+        anyhow::ensure!(h.len() == self.cfg.batch * self.cfg.d_model);
+        self.bytes_before = self.fabric.total_bytes();
+        for (tx, _) in &self.ranks {
+            tx.send(Work::Step {
+                h: h.to_vec(),
+                seed: self.key,
+                step,
+                tau,
+                strategy,
+            })
+            .context("rank channel closed")?;
+        }
+        // Cross-rank barrier: collect all rank messages (Alg. 1 line 15).
+        let msgs = self.fabric.gather(self.cfg.n_ranks);
+        let wire_bytes = self.fabric.total_bytes() - self.bytes_before;
+        let b = self.cfg.batch;
+        let vs = self.cfg.vocab / self.cfg.n_ranks;
+
+        match strategy {
+            Strategy::P2pFanout => {
+                // Per-row pathwise merge over rank summaries (Lemma D.5).
+                let mut per_rank = vec![Vec::new(); self.cfg.n_ranks];
+                for msg in msgs {
+                    if let Message::Summaries { rank, rows } = msg {
+                        per_rank[rank as usize] = rows;
+                    }
+                }
+                let mut samples = Vec::with_capacity(b);
+                let mut log_z = Vec::with_capacity(b);
+                for row in 0..b {
+                    let summaries: Vec<distributed::ShardSummary> = per_rank
+                        .iter()
+                        .enumerate()
+                        .map(|(rk, rows)| distributed::ShardSummary {
+                            rank: rk as u32,
+                            max_score: rows[row].0,
+                            local_sample: rows[row].1 as u32,
+                            log_mass: rows[row].2,
+                        })
+                        .collect();
+                    let win = distributed::merge_pathwise(&summaries)
+                        .context("no shard summaries")?;
+                    samples.push(win.local_sample as i32);
+                    log_z.push(distributed::log_z(&summaries));
+                }
+                Ok(TpStepResult { samples, log_z: Some(log_z), wire_bytes })
+            }
+            Strategy::AllGatherMultinomial | Strategy::AllGatherGumbel => {
+                // Materialize the full [B, V] logits on the leader...
+                let mut logits = vec![0.0f32; b * self.cfg.vocab];
+                for msg in msgs {
+                    if let Message::LogitsShard { rank, data, .. } = msg {
+                        let base = rank as usize * vs;
+                        for row in 0..b {
+                            logits[row * self.cfg.vocab + base
+                                ..row * self.cfg.vocab + base + vs]
+                                .copy_from_slice(&data[row * vs..(row + 1) * vs]);
+                        }
+                    }
+                }
+                // ...then run the separate sampling pass (the extra kernels
+                // the baseline pays for).
+                let t = Transform::with_temperature(tau);
+                let samples = if strategy == Strategy::AllGatherGumbel {
+                    gumbel::sample_batch(&logits, self.cfg.vocab, &t, self.key, step)
+                        .into_iter()
+                        .map(|s| s.context("empty row").map(|g| g.index as i32))
+                        .collect::<Result<Vec<i32>>>()?
+                } else {
+                    multinomial::sample_batch(
+                        &logits,
+                        self.cfg.vocab,
+                        &t,
+                        self.key,
+                        step,
+                    )
+                    .into_iter()
+                    .map(|s| s.context("empty row").map(|x| x as i32))
+                    .collect::<Result<Vec<i32>>>()?
+                };
+                Ok(TpStepResult { samples, log_z: None, wire_bytes })
+            }
+        }
+    }
+
+    /// Interconnect statistics since construction.
+    pub fn link_stats(&self) -> Vec<super::LinkStats> {
+        self.fabric.stats()
+    }
+
+    pub fn shutdown(mut self) -> Result<()> {
+        for (tx, _) in &self.ranks {
+            let _ = tx.send(Work::Shutdown);
+        }
+        for (_, handle) in self.ranks.drain(..) {
+            handle.join().map_err(|_| anyhow::anyhow!("rank panicked"))??;
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,207 @@
+//! Workload generation: Poisson open-loop arrivals + prompt/output length
+//! distributions, mirroring the paper's §4.5 protocol (`vllm bench sweep
+//! serve` with `--request-rate=B` Poisson arrivals and AIME-style
+//! long-generation prompts).
+
+use crate::sampling::philox::{self, Key};
+
+/// One synthetic request: arrival offset + prompt + output budget.
+#[derive(Clone, Debug)]
+pub struct RequestSpec {
+    pub id: u64,
+    /// Arrival time offset from run start, seconds.
+    pub arrival_s: f64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub temperature: f32,
+}
+
+/// Length distribution of prompts/outputs.
+#[derive(Clone, Copy, Debug)]
+pub enum LengthDist {
+    /// Fixed length.
+    Fixed(usize),
+    /// Uniform in [lo, hi].
+    Uniform(usize, usize),
+    /// AIME-like: short prompt, long reasoning output (the paper's §4.5
+    /// dataset shape): prompt Uniform(lo,hi), used for outputs too.
+    Aime,
+}
+
+impl LengthDist {
+    fn draw(self, u: f32) -> usize {
+        match self {
+            LengthDist::Fixed(n) => n,
+            LengthDist::Uniform(lo, hi) => {
+                lo + ((hi - lo + 1) as f32 * u) as usize
+            }
+            // AIME problems: prompts ~40-120 tokens.
+            LengthDist::Aime => 40 + (81.0 * u) as usize,
+        }
+    }
+}
+
+/// Open-loop Poisson workload generator (deterministic via Philox).
+#[derive(Clone, Debug)]
+pub struct WorkloadGen {
+    pub key: Key,
+    /// Mean request rate (req/s).  The paper sets rate = concurrency B.
+    pub rate: f64,
+    pub prompt_len: LengthDist,
+    pub output_len: LengthDist,
+    pub vocab: usize,
+    pub temperature: f32,
+}
+
+impl WorkloadGen {
+    pub fn new(seed: u64, rate: f64, vocab: usize) -> Self {
+        Self {
+            key: Key::from_seed(seed),
+            rate,
+            prompt_len: LengthDist::Aime,
+            output_len: LengthDist::Uniform(32, 96),
+            vocab,
+            temperature: 1.0,
+        }
+    }
+
+    fn u(&self, stream: u32, i: u32, b: u32) -> f32 {
+        philox::uniform_at(self.key, i, b, stream, 0)
+    }
+
+    /// Generate `n` requests with exponential inter-arrival gaps
+    /// (a Poisson process at `self.rate`).
+    pub fn generate(&self, n: usize) -> Vec<RequestSpec> {
+        let mut out = Vec::with_capacity(n);
+        let mut t = 0.0f64;
+        for i in 0..n as u32 {
+            // Exponential gap: -ln(u)/rate.
+            let gap = -(self.u(10, i, 0) as f64).ln() / self.rate;
+            t += gap;
+            let plen = self.prompt_len.draw(self.u(11, i, 0)).max(1);
+            let olen = self.output_len.draw(self.u(12, i, 0)).max(1);
+            let prompt: Vec<i32> = (0..plen as u32)
+                .map(|j| {
+                    (self.u(13, i, j) * self.vocab as f32) as i32
+                        % self.vocab as i32
+                })
+                .collect();
+            out.push(RequestSpec {
+                id: i as u64,
+                arrival_s: t,
+                prompt,
+                max_new_tokens: olen,
+                temperature: self.temperature,
+            });
+        }
+        out
+    }
+}
+
+/// A recorded trace (for replay in benches): (arrival_s, prompt_len,
+/// output_len) triples, serialized as CSV.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub entries: Vec<(f64, usize, usize)>,
+}
+
+impl Trace {
+    pub fn from_requests(reqs: &[RequestSpec]) -> Self {
+        Self {
+            entries: reqs
+                .iter()
+                .map(|r| (r.arrival_s, r.prompt.len(), r.max_new_tokens))
+                .collect(),
+        }
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("arrival_s,prompt_len,output_len\n");
+        for (a, p, o) in &self.entries {
+            s.push_str(&format!("{a:.6},{p},{o}\n"));
+        }
+        s
+    }
+
+    pub fn from_csv(text: &str) -> anyhow::Result<Self> {
+        let mut entries = Vec::new();
+        for line in text.lines().skip(1) {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let mut it = line.split(',');
+            let a: f64 = it.next().unwrap_or("").trim().parse()?;
+            let p: usize = it.next().unwrap_or("").trim().parse()?;
+            let o: usize = it.next().unwrap_or("").trim().parse()?;
+            entries.push((a, p, o));
+        }
+        Ok(Self { entries })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_is_calibrated() {
+        let g = WorkloadGen::new(7, 20.0, 2048);
+        let reqs = g.generate(4000);
+        let span = reqs.last().unwrap().arrival_s;
+        let observed_rate = reqs.len() as f64 / span;
+        assert!(
+            (observed_rate - 20.0).abs() / 20.0 < 0.08,
+            "rate {observed_rate}"
+        );
+        // arrivals strictly increasing
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival_s > w[0].arrival_s);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = WorkloadGen::new(1, 5.0, 128).generate(50);
+        let b = WorkloadGen::new(1, 5.0, 128).generate(50);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival_s, y.arrival_s);
+            assert_eq!(x.prompt, y.prompt);
+        }
+        let c = WorkloadGen::new(2, 5.0, 128).generate(50);
+        assert_ne!(a[0].prompt, c[0].prompt);
+    }
+
+    #[test]
+    fn tokens_in_vocab_range() {
+        let g = WorkloadGen::new(3, 1.0, 100);
+        for r in g.generate(200) {
+            assert!(!r.prompt.is_empty());
+            assert!(r.prompt.iter().all(|&t| (0..100).contains(&t)));
+            assert!(r.max_new_tokens >= 1);
+        }
+    }
+
+    #[test]
+    fn length_dists() {
+        assert_eq!(LengthDist::Fixed(7).draw(0.9), 7);
+        for u in [0.0f32, 0.5, 0.999] {
+            let v = LengthDist::Uniform(10, 20).draw(u);
+            assert!((10..=20).contains(&v));
+            let a = LengthDist::Aime.draw(u);
+            assert!((40..=121).contains(&a));
+        }
+    }
+
+    #[test]
+    fn trace_csv_roundtrip() {
+        let g = WorkloadGen::new(5, 2.0, 64);
+        let t = Trace::from_requests(&g.generate(20));
+        let back = Trace::from_csv(&t.to_csv()).unwrap();
+        assert_eq!(t.entries.len(), back.entries.len());
+        for (a, b) in t.entries.iter().zip(&back.entries) {
+            assert!((a.0 - b.0).abs() < 1e-5);
+            assert_eq!(a.1, b.1);
+            assert_eq!(a.2, b.2);
+        }
+    }
+}

@@ -1,0 +1,255 @@
+//! End-to-end serving integration: the engine drives real AOT artifacts
+//! (prefill → fused decode+sample → completion) through PJRT.
+//!
+//! Requires `make artifacts`; tests no-op (pass) with a note otherwise.
+
+use flashsampling::coordinator::{
+    Engine, EngineConfig, FinishReason, Request, SamplingParams,
+};
+use flashsampling::workload::WorkloadGen;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("NOTE: artifacts/ missing; run `make artifacts`");
+        None
+    }
+}
+
+fn engine(cfg: EngineConfig) -> Option<Engine> {
+    artifacts_dir().map(|d| Engine::new(d, cfg).unwrap())
+}
+
+fn simple_request(id: u64, prompt: Vec<i32>, max_new: usize) -> Request {
+    Request {
+        id,
+        prompt,
+        params: SamplingParams { max_new_tokens: max_new, ..Default::default() },
+    }
+}
+
+#[test]
+fn single_request_completes() {
+    let Some(mut e) = engine(EngineConfig::default()) else { return };
+    e.submit(simple_request(1, vec![3, 14, 15, 9], 8)).unwrap();
+    let done = e.run_to_completion().unwrap();
+    assert_eq!(done.len(), 1);
+    let c = &done[0];
+    assert_eq!(c.id, 1);
+    assert_eq!(c.tokens.len(), 8);
+    assert_eq!(c.finish, FinishReason::MaxTokens);
+    let vocab = e.runtime().manifest().model.vocab as i32;
+    assert!(c.tokens.iter().all(|&t| (0..vocab).contains(&t)));
+    assert!(c.timing.ttft.is_some());
+    assert_eq!(c.timing.token_latencies.len(), 7); // 8 tokens, 7 gaps
+}
+
+#[test]
+fn batch_of_requests_all_complete() {
+    let Some(mut e) = engine(EngineConfig::default()) else { return };
+    for i in 0..6 {
+        e.submit(simple_request(i, vec![1 + i as i32, 2, 3], 5 + i as usize))
+            .unwrap();
+    }
+    let done = e.run_to_completion().unwrap();
+    assert_eq!(done.len(), 6);
+    for c in &done {
+        assert_eq!(c.tokens.len(), 5 + c.id as usize);
+    }
+    assert_eq!(e.metrics.tokens_generated as usize, (5..=10).sum::<usize>());
+}
+
+#[test]
+fn deterministic_across_engines_same_seed() {
+    let Some(mut a) = engine(EngineConfig::default()) else { return };
+    let Some(mut b) = engine(EngineConfig::default()) else { return };
+    for e in [&mut a, &mut b] {
+        e.submit(simple_request(1, vec![7, 8, 9], 6)).unwrap();
+        e.submit(simple_request(2, vec![10, 11], 6)).unwrap();
+    }
+    let mut da = a.run_to_completion().unwrap();
+    let mut db = b.run_to_completion().unwrap();
+    da.sort_by_key(|c| c.id);
+    db.sort_by_key(|c| c.id);
+    for (x, y) in da.iter().zip(&db) {
+        assert_eq!(x.tokens, y.tokens, "same seed must reproduce exactly");
+    }
+}
+
+#[test]
+fn different_seed_changes_samples() {
+    let Some(mut a) = engine(EngineConfig::default()) else { return };
+    let Some(mut b) = engine(EngineConfig { seed: 999, ..Default::default() })
+    else {
+        return;
+    };
+    for e in [&mut a, &mut b] {
+        e.submit(simple_request(1, vec![7, 8, 9], 12)).unwrap();
+    }
+    let da = a.run_to_completion().unwrap();
+    let db = b.run_to_completion().unwrap();
+    assert_ne!(da[0].tokens, db[0].tokens);
+}
+
+#[test]
+fn baseline_sampler_ab_switch_works() {
+    // The §4.5 A/B: same engine semantics with the baseline decode artifact.
+    let Some(mut e) = engine(EngineConfig {
+        baseline_sampler: true,
+        ..Default::default()
+    }) else {
+        return;
+    };
+    e.submit(simple_request(1, vec![5, 6], 6)).unwrap();
+    let done = e.run_to_completion().unwrap();
+    assert_eq!(done[0].tokens.len(), 6);
+}
+
+#[test]
+fn eos_token_stops_generation() {
+    let Some(mut e) = engine(EngineConfig::default()) else { return };
+    e.submit(Request {
+        id: 1,
+        prompt: vec![4, 2],
+        params: SamplingParams {
+            max_new_tokens: 4,
+            eos_token: None,
+            ..Default::default()
+        },
+    })
+    .unwrap();
+    let done = e.run_to_completion().unwrap();
+    let first = done[0].tokens[0];
+    // Re-run with the known first sample as EOS: must stop after 1 token.
+    let Some(mut e2) = engine(EngineConfig::default()) else { return };
+    e2.submit(Request {
+        id: 1,
+        prompt: vec![4, 2],
+        params: SamplingParams {
+            max_new_tokens: 4,
+            eos_token: Some(first),
+            ..Default::default()
+        },
+    })
+    .unwrap();
+    let done2 = e2.run_to_completion().unwrap();
+    assert_eq!(done2[0].tokens, vec![first]);
+    assert_eq!(done2[0].finish, FinishReason::EosToken);
+}
+
+#[test]
+fn submit_validation() {
+    let Some(mut e) = engine(EngineConfig::default()) else { return };
+    assert!(e.submit(simple_request(1, vec![], 4)).is_err()); // empty
+    assert!(e.submit(simple_request(2, vec![1; 100], 4)).is_err()); // > T bucket
+    assert!(e.submit(simple_request(3, vec![99999], 4)).is_err()); // OOV
+    assert!(e.submit(simple_request(4, vec![1; 64], 400)).is_err()); // > max_seq
+}
+
+#[test]
+fn serve_open_loop_reports_metrics() {
+    let Some(mut e) = engine(EngineConfig::default()) else { return };
+    let vocab = e.runtime().manifest().model.vocab;
+    let mut gen = WorkloadGen::new(42, 200.0, vocab);
+    gen.prompt_len = flashsampling::workload::LengthDist::Uniform(4, 12);
+    gen.output_len = flashsampling::workload::LengthDist::Uniform(3, 8);
+    let reqs = gen.generate(12);
+    let done = e.serve(reqs).unwrap();
+    assert_eq!(done.len(), 12);
+    assert_eq!(e.metrics.requests_completed, 12);
+    assert!(e.metrics.median_tpot().is_some());
+    assert!(e.metrics.median_ttft().is_some());
+    assert!(e.metrics.throughput_tps() > 0.0);
+    assert!(e.metrics.mean_batch() >= 1.0);
+}
+
+#[test]
+fn temperature_grouping_separates_batches() {
+    let Some(mut e) = engine(EngineConfig::default()) else { return };
+    e.submit(Request {
+        id: 1,
+        prompt: vec![1, 2],
+        params: SamplingParams { temperature: 1.0, max_new_tokens: 3, eos_token: None },
+    })
+    .unwrap();
+    e.submit(Request {
+        id: 2,
+        prompt: vec![3, 4],
+        params: SamplingParams { temperature: 0.5, max_new_tokens: 3, eos_token: None },
+    })
+    .unwrap();
+    let done = e.run_to_completion().unwrap();
+    assert_eq!(done.len(), 2);
+    for c in &done {
+        assert_eq!(c.tokens.len(), 3);
+    }
+}
+
+#[test]
+fn kv_exhaustion_preempts_without_corruption() {
+    // A pool of 3 blocks x 16 tokens can hold ~1 sequence; submitting 3
+    // forces the scheduler through the preemption/serialization path.
+    let Some(mut e) = engine(EngineConfig {
+        kv_blocks: 3,
+        kv_block_size: 16,
+        ..Default::default()
+    }) else {
+        return;
+    };
+    for i in 0..3 {
+        e.submit(simple_request(i, vec![2 + i as i32; 6], 6)).unwrap();
+    }
+    let done = e.run_to_completion().unwrap();
+    // Everyone eventually completes (or is cleanly rejected), nothing hangs.
+    assert_eq!(done.len(), 3);
+    for c in &done {
+        assert!(
+            c.finish == FinishReason::MaxTokens
+                || c.finish == FinishReason::Rejected,
+            "{:?}",
+            c.finish
+        );
+    }
+}
+
+#[test]
+fn batch_composition_change_preserves_kv_state() {
+    // Regression for the device-resident KV cache (§Perf L3): when one
+    // sequence finishes mid-batch, the survivors' KV must be synced from
+    // the cached literals before the next (smaller) batch is gathered.
+    let Some(mut e) = engine(EngineConfig::default()) else { return };
+    // Two sequences with different budgets: #1 finishes first.
+    e.submit(simple_request(1, vec![5, 6, 7], 2)).unwrap();
+    e.submit(simple_request(2, vec![8, 9], 8)).unwrap();
+    let done = e.run_to_completion().unwrap();
+    assert_eq!(done.len(), 2);
+
+    // The long request's tokens must match a run where it was alone with
+    // the same engine seed *after* the short one left... that exact replay
+    // isn't expected (batch slots differ); instead assert determinism of
+    // the mixed run itself:
+    let Some(mut e2) = engine(EngineConfig::default()) else { return };
+    e2.submit(simple_request(1, vec![5, 6, 7], 2)).unwrap();
+    e2.submit(simple_request(2, vec![8, 9], 8)).unwrap();
+    let mut d1 = done;
+    let mut d2 = e2.run_to_completion().unwrap();
+    d1.sort_by_key(|c| c.id);
+    d2.sort_by_key(|c| c.id);
+    for (a, b) in d1.iter().zip(&d2) {
+        assert_eq!(a.tokens, b.tokens);
+    }
+}
+
+#[test]
+fn decode_cache_fast_path_engages() {
+    let Some(mut e) = engine(EngineConfig::default()) else { return };
+    for i in 0..4 {
+        e.submit(simple_request(i, vec![1 + i as i32; 4], 12)).unwrap();
+    }
+    e.run_to_completion().unwrap();
+    // Steady-state steps after the first decode reuse the cached KV.
+    let hits = e.metrics.counters.get("decode_cache_hits").copied().unwrap_or(0);
+    assert!(hits >= 8, "cache hits = {hits}");
+}

@@ -1,0 +1,158 @@
+//! Tensor-parallel integration: rank threads + interconnect + merge
+//! against the single-device fused kernel and a native oracle.
+//!
+//! Requires `make artifacts`.
+
+use flashsampling::runtime::{Runtime, Tensor};
+use flashsampling::sampling::philox::{self, Key};
+use flashsampling::tp::{Strategy, TpConfig, TpOrchestrator};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("NOTE: artifacts/ missing; run `make artifacts`");
+        None
+    }
+}
+
+fn randn(n: usize, seed: u64, scale: f32) -> Vec<f32> {
+    let key = Key::from_seed(seed);
+    (0..n)
+        .map(|i| {
+            let s: f32 = (0..4)
+                .map(|j| philox::uniform_at(key, i as u32, j, 3, 1))
+                .sum();
+            (s - 2.0) * scale * 1.7320508
+        })
+        .collect()
+}
+
+const SEED: u64 = 0xABCD_1234;
+const B: usize = 4;
+const D: usize = 256;
+const V: usize = 2048;
+
+fn orchestrator(n: usize, w: &[f32]) -> Option<TpOrchestrator> {
+    let dir = artifacts_dir()?;
+    Some(
+        TpOrchestrator::new(
+            TpConfig {
+                artifacts_dir: dir,
+                n_ranks: n,
+                batch: B,
+                d_model: D,
+                vocab: V,
+                seed: SEED,
+            },
+            w,
+        )
+        .unwrap(),
+    )
+}
+
+#[test]
+fn fanout_matches_single_device_kernel() {
+    let Some(dir) = artifacts_dir() else { return };
+    let w = randn(V * D, 2, 0.05);
+    let h = randn(B * D, 1, 0.5);
+
+    // Single-device fused sample through PJRT.
+    let rt = Runtime::new(&dir).unwrap();
+    let single = rt
+        .run(
+            "flash_sample_b4_d256_v2048",
+            &[
+                Tensor::F32(h.clone(), vec![B, D]),
+                Tensor::F32(w.clone(), vec![V, D]),
+                Tensor::seed(Key::from_seed(SEED)),
+                Tensor::scalar_u32(3),
+                Tensor::scalar_f32(1.0),
+            ],
+        )
+        .unwrap();
+    let expect = single[0].as_i32().unwrap().to_vec();
+
+    for n in [2usize, 4] {
+        let mut orch = orchestrator(n, &w).unwrap();
+        let out = orch.step(&h, 3, 1.0, Strategy::P2pFanout).unwrap();
+        assert_eq!(out.samples, expect, "TP{n} fan-out != single device");
+        assert!(out.log_z.is_some());
+        orch.shutdown().unwrap();
+    }
+}
+
+#[test]
+fn allgather_baselines_produce_valid_samples() {
+    let w = randn(V * D, 4, 0.05);
+    let h = randn(B * D, 3, 0.5);
+    let Some(mut orch) = orchestrator(2, &w) else { return };
+    for strategy in [Strategy::AllGatherMultinomial, Strategy::AllGatherGumbel] {
+        let out = orch.step(&h, 0, 1.0, strategy).unwrap();
+        assert_eq!(out.samples.len(), B);
+        assert!(out.samples.iter().all(|&s| (0..V as i32).contains(&s)));
+    }
+    orch.shutdown().unwrap();
+}
+
+#[test]
+fn allgather_gumbel_matches_fanout_pathwise() {
+    // Same Philox streams => the all-gather+GumbelMax baseline and the
+    // fan-out merge pick the SAME index (both compute argmax of the same
+    // perturbed scores). Distinct code paths, identical samples.
+    let w = randn(V * D, 6, 0.05);
+    let h = randn(B * D, 5, 0.5);
+    let Some(mut orch) = orchestrator(2, &w) else { return };
+    let a = orch.step(&h, 7, 1.0, Strategy::P2pFanout).unwrap();
+    let b = orch.step(&h, 7, 1.0, Strategy::AllGatherGumbel).unwrap();
+    assert_eq!(a.samples, b.samples);
+    orch.shutdown().unwrap();
+}
+
+#[test]
+fn wire_bytes_scale_as_paper_claims() {
+    let w = randn(V * D, 8, 0.05);
+    let h = randn(B * D, 7, 0.5);
+    let Some(mut orch) = orchestrator(4, &w) else { return };
+
+    let fanout = orch.step(&h, 0, 1.0, Strategy::P2pFanout).unwrap();
+    let gather = orch.step(&h, 1, 1.0, Strategy::AllGatherGumbel).unwrap();
+
+    // Fan-out: n ranks x B rows x 12 bytes.
+    assert_eq!(fanout.wire_bytes, (4 * B * 12) as u64);
+    // All-gather: n ranks x B x (V/n) x 4 bytes = B*V*4 total.
+    assert_eq!(gather.wire_bytes, (B * V * 4) as u64);
+    // The paper's point: the ratio is O(V / n_scalars), huge.
+    assert!(gather.wire_bytes > 100 * fanout.wire_bytes);
+    orch.shutdown().unwrap();
+}
+
+#[test]
+fn steps_are_deterministic_and_fresh() {
+    let w = randn(V * D, 10, 0.05);
+    let h = randn(B * D, 9, 0.5);
+    let Some(mut orch) = orchestrator(2, &w) else { return };
+    let a1 = orch.step(&h, 5, 1.0, Strategy::P2pFanout).unwrap();
+    let a2 = orch.step(&h, 5, 1.0, Strategy::P2pFanout).unwrap();
+    assert_eq!(a1.samples, a2.samples); // same step => same draw
+    let b = orch.step(&h, 6, 1.0, Strategy::P2pFanout).unwrap();
+    assert_ne!(a1.samples, b.samples); // fresh noise per step
+    orch.shutdown().unwrap();
+}
+
+#[test]
+fn link_stats_accumulate_per_rank() {
+    let w = randn(V * D, 12, 0.05);
+    let h = randn(B * D, 11, 0.5);
+    let Some(mut orch) = orchestrator(2, &w) else { return };
+    orch.step(&h, 0, 1.0, Strategy::P2pFanout).unwrap();
+    orch.step(&h, 1, 1.0, Strategy::P2pFanout).unwrap();
+    let stats = orch.link_stats();
+    assert_eq!(stats.len(), 2);
+    for s in stats {
+        assert_eq!(s.messages, 2);
+        assert_eq!(s.bytes, (2 * B * 12) as u64);
+    }
+    orch.shutdown().unwrap();
+}
