@@ -1,0 +1,265 @@
+//! Offline substitute for the `anyhow` crate — the API-compatible subset
+//! this repository uses (the container image carries no crates.io registry,
+//! so external dependencies are vendored as minimal reimplementations; see
+//! the workspace `Cargo.toml`).
+//!
+//! Supported surface:
+//!
+//! * [`Error`] — an opaque, `Send + Sync` error value carrying a message
+//!   and a chain of context strings.
+//! * [`Result<T>`](Result) — `Result<T, Error>`.
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — message/format-style
+//!   constructors.
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`, matching anyhow's semantics (the new message becomes the
+//!   outermost description; prior descriptions surface via `Debug`).
+//!
+//! Like the real crate, `Error` deliberately does **not** implement
+//! `std::error::Error`: that is what keeps the blanket
+//! `From<E: std::error::Error>` conversion (which powers `?`) coherent.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` — the crate-wide result type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An opaque error: outermost message plus the chain of causes beneath it.
+pub struct Error {
+    /// Outermost description (most recently attached context, or the root
+    /// message when no context has been added).
+    msg: String,
+    /// Underlying descriptions, outermost-first (the `Caused by:` chain).
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self { msg: message.to_string(), chain: Vec::new() }
+    }
+
+    /// Create an error from anything implementing `std::error::Error`,
+    /// capturing its source chain as context lines.
+    pub fn new<E>(error: E) -> Self
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        let mut chain = Vec::new();
+        let mut source = error.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Self { msg: error.to_string(), chain }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        let mut chain = Vec::with_capacity(self.chain.len() + 1);
+        chain.push(self.msg);
+        chain.extend(self.chain);
+        Self { msg: context.to_string(), chain }
+    }
+
+    /// The `Caused by:` descriptions, outermost-first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The root (innermost) description.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().unwrap_or(&self.msg)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if !self.chain.is_empty() {
+            f.write_str("\n\nCaused by:")?;
+            for (i, c) in self.chain.iter().enumerate() {
+                write!(f, "\n    {i}: {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(error: E) -> Self {
+        Error::new(error)
+    }
+}
+
+/// Context attachment for fallible values, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    /// Wrap the error with a fixed message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    /// Wrap the error with a lazily evaluated message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E> Context<T> for Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::new(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Result<T, Error> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any printable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!(
+                "condition failed: `{}`",
+                stringify!($cond)
+            ));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "no such file")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<u32> {
+            let n: u32 = "12".parse()?;
+            Ok(n)
+        }
+        assert_eq!(inner().unwrap(), 12);
+
+        fn failing() -> Result<u32> {
+            let n: u32 = "nope".parse()?;
+            Ok(n)
+        }
+        assert!(failing().is_err());
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading manifest").unwrap_err();
+        assert_eq!(e.to_string(), "reading manifest");
+        assert_eq!(e.root_cause(), "no such file");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing key '{}'", "vocab")).unwrap_err();
+        assert_eq!(e.to_string(), "missing key 'vocab'");
+
+        // Context on an already-anyhow Result stacks.
+        let r: Result<()> = Err(anyhow!("inner"));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer");
+        assert_eq!(e.chain().collect::<Vec<_>>(), vec!["inner"]);
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+        let v = 7;
+        let e = anyhow!("value {v} and {}", 8);
+        assert_eq!(e.to_string(), "value 7 and 8");
+
+        fn bails() -> Result<()> {
+            bail!("gone {}", "wrong");
+        }
+        assert_eq!(bails().unwrap_err().to_string(), "gone wrong");
+
+        fn ensures(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            ensure!(x != 3);
+            Ok(x)
+        }
+        assert_eq!(ensures(2).unwrap(), 2);
+        assert_eq!(ensures(12).unwrap_err().to_string(), "x too big: 12");
+        assert!(ensures(3).unwrap_err().to_string().contains("x != 3"));
+    }
+
+    #[test]
+    fn debug_prints_cause_chain() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("step A").unwrap_err().context("step B");
+        let dbg = format!("{e:?}");
+        assert!(dbg.starts_with("step B"));
+        assert!(dbg.contains("Caused by:"));
+        assert!(dbg.contains("step A"));
+        assert!(dbg.contains("no such file"));
+    }
+
+    #[test]
+    fn error_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Error>();
+    }
+}

@@ -1,0 +1,339 @@
+//! Host-side stub of the `xla` crate (xla-rs PJRT bindings).
+//!
+//! The FlashSampling L3 runtime executes AOT-lowered HLO artifacts through
+//! the PJRT C API via the real `xla` crate.  That crate links a multi-GB
+//! native `xla_extension`, which this offline image does not carry, so the
+//! workspace substitutes this stub exposing the exact API subset the
+//! repository uses:
+//!
+//! * [`Literal`] — **fully functional** host tensors (create from untyped
+//!   bytes, read back typed vectors, shape/dtype introspection).  Unit
+//!   tests of the `Tensor` conversion layer run against this for real.
+//! * [`PjRtClient`] / [`PjRtLoadedExecutable`] / [`HloModuleProto`] —
+//!   type-correct stubs whose constructors return [`Error::PjrtUnavailable`]
+//!   at **runtime**.  Integration tests and examples detect the missing
+//!   `artifacts/` directory first, so the default `cargo test` never hits
+//!   these paths.
+//!
+//! Swapping in the real backend requires no source change: `[patch]` this
+//! crate with xla-rs and build with `--features pjrt` (see README §PJRT).
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Stub error type, mirroring the shape of xla-rs's `Error`.
+#[derive(Clone, Debug)]
+pub enum Error {
+    /// The operation needs a live PJRT plugin, which this stub does not
+    /// link.
+    PjrtUnavailable(&'static str),
+    /// Malformed usage of the host-literal layer.
+    Usage(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::PjrtUnavailable(what) => write!(
+                f,
+                "{what}: PJRT runtime unavailable ({}); AOT artifact \
+                 execution needs the real xla-rs crate patched into the \
+                 workspace — see README.md, section PJRT",
+                if cfg!(feature = "pjrt") {
+                    "`pjrt` feature enabled, but this build still carries \
+                     the host stub"
+                } else {
+                    "built without the `pjrt` feature"
+                }
+            ),
+            Error::Usage(msg) => f.write_str(msg),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Result alias matching xla-rs.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element dtypes (subset of xla-rs's `ElementType`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S8,
+    S16,
+    S32,
+    S64,
+    U8,
+    U16,
+    U32,
+    U64,
+    F16,
+    Bf16,
+    F32,
+    F64,
+}
+
+impl ElementType {
+    /// Bytes per element.
+    pub fn size_bytes(self) -> usize {
+        match self {
+            ElementType::Pred | ElementType::S8 | ElementType::U8 => 1,
+            ElementType::S16 | ElementType::U16 | ElementType::F16 | ElementType::Bf16 => 2,
+            ElementType::S32 | ElementType::U32 | ElementType::F32 => 4,
+            ElementType::S64 | ElementType::U64 | ElementType::F64 => 8,
+        }
+    }
+}
+
+/// Marker for element types the host literal layer can read back.
+pub trait NativeType: Copy {
+    /// The XLA dtype this Rust type stores.
+    const TY: ElementType;
+    /// Decode one element from little-endian bytes.
+    fn read_le(bytes: &[u8]) -> Self;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn read_le(b: &[u8]) -> Self {
+        f32::from_le_bytes([b[0], b[1], b[2], b[3]])
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn read_le(b: &[u8]) -> Self {
+        i32::from_le_bytes([b[0], b[1], b[2], b[3]])
+    }
+}
+
+impl NativeType for u32 {
+    const TY: ElementType = ElementType::U32;
+    fn read_le(b: &[u8]) -> Self {
+        u32::from_le_bytes([b[0], b[1], b[2], b[3]])
+    }
+}
+
+/// Array shape: dtype + dimensions (xla-rs `ArrayShape` subset).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArrayShape {
+    ty: ElementType,
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().map(|&d| d as usize).product()
+    }
+}
+
+/// A host tensor value (or tuple of them) — xla-rs `Literal` subset.
+#[derive(Clone, Debug)]
+pub enum Literal {
+    /// Dense array: shape + raw little-endian bytes.
+    Array { shape: ArrayShape, data: Vec<u8> },
+    /// Tuple of literals (what tupled executions return).
+    Tuple(Vec<Literal>),
+}
+
+impl Literal {
+    /// Build an array literal from raw bytes (`create_from_shape_and_...`
+    /// in xla-rs; same name kept so call sites are identical).
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        untyped_data: &[u8],
+    ) -> Result<Literal> {
+        let expect: usize = dims.iter().product::<usize>() * ty.size_bytes();
+        if untyped_data.len() != expect {
+            return Err(Error::Usage(format!(
+                "literal data has {} bytes, shape {dims:?} of {ty:?} needs {expect}",
+                untyped_data.len()
+            )));
+        }
+        Ok(Literal::Array {
+            shape: ArrayShape { ty, dims: dims.iter().map(|&d| d as i64).collect() },
+            data: untyped_data.to_vec(),
+        })
+    }
+
+    /// Shape of an array literal (error on tuples, like xla-rs).
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match self {
+            Literal::Array { shape, .. } => Ok(shape.clone()),
+            Literal::Tuple(_) => {
+                Err(Error::Usage("array_shape() on a tuple literal".into()))
+            }
+        }
+    }
+
+    /// Read the array back as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        match self {
+            Literal::Tuple(_) => Err(Error::Usage("to_vec() on a tuple literal".into())),
+            Literal::Array { shape, data } => {
+                if shape.ty != T::TY {
+                    return Err(Error::Usage(format!(
+                        "to_vec: literal is {:?}, requested {:?}",
+                        shape.ty,
+                        T::TY
+                    )));
+                }
+                let n = shape.ty.size_bytes();
+                Ok(data.chunks_exact(n).map(T::read_le).collect())
+            }
+        }
+    }
+
+    /// Destructure a tuple literal.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match self {
+            Literal::Tuple(parts) => Ok(parts.clone()),
+            Literal::Array { .. } => {
+                Err(Error::Usage("to_tuple() on an array literal".into()))
+            }
+        }
+    }
+}
+
+/// Parsed HLO module (stub: parsing needs the native extension).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::PjrtUnavailable("parsing HLO text"))
+    }
+}
+
+/// An XLA computation handle (stub).
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        // Unreachable in the stub: `HloModuleProto` cannot be constructed.
+        XlaComputation { _private: () }
+    }
+}
+
+/// A device-resident execution result (stub).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::PjrtUnavailable("fetching execution result"))
+    }
+}
+
+/// A compiled executable (stub).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with owned or borrowed literal arguments (both
+    /// `execute::<Literal>` and `execute::<&Literal>` type-check, as with
+    /// xla-rs).
+    pub fn execute<L: Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::PjrtUnavailable("executing artifact"))
+    }
+}
+
+/// A PJRT client (stub: construction reports the missing backend).
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::PjrtUnavailable("creating PJRT CPU client"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::PjrtUnavailable("compiling computation"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let data: Vec<u8> = [1.0f32, -2.5, 3.25]
+            .iter()
+            .flat_map(|f| f.to_le_bytes())
+            .collect();
+        let lit = Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[3],
+            &data,
+        )
+        .unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, -2.5, 3.25]);
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[3]);
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert_eq!(shape.element_count(), 3);
+    }
+
+    #[test]
+    fn literal_validates_size_and_type() {
+        assert!(Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[2, 2],
+            &[0u8; 15],
+        )
+        .is_err());
+        let lit = Literal::create_from_shape_and_untyped_data(
+            ElementType::S32,
+            &[1],
+            &7i32.to_le_bytes(),
+        )
+        .unwrap();
+        assert!(lit.to_vec::<f32>().is_err());
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn tuple_literals_destructure() {
+        let a = Literal::create_from_shape_and_untyped_data(
+            ElementType::U32,
+            &[1],
+            &5u32.to_le_bytes(),
+        )
+        .unwrap();
+        let t = Literal::Tuple(vec![a.clone()]);
+        assert_eq!(t.to_tuple().unwrap().len(), 1);
+        assert!(t.array_shape().is_err());
+        assert!(a.to_tuple().is_err());
+    }
+
+    #[test]
+    fn pjrt_paths_report_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("PJRT runtime unavailable"));
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}

@@ -1,19 +1,43 @@
-//! Native sampler benchmarks (the Rust half of Tables 4/5's comparison).
+//! Native sampler benchmarks (the Rust half of Tables 4/5's comparison),
+//! driven entirely through the `ExactSampler` registry.
 //!
-//! Measures the per-row cost of the paper's algorithm chain on this CPU:
-//! fused-style streaming Gumbel-Max vs the materialized-logits baseline vs
-//! the grouped/online/distributed variants, across vocabulary sizes, plus
-//! the Gumbel-Top-k extension (Appendix D.6).
+//! Measures per-token sampling cost across a batch × vocabulary grid for
+//! every registered paper sampler (selected by config string, never by
+//! hard-coded call sites), plus the tiled-gumbel variant.  Each row is the
+//! sampler's FULL per-row pipeline — for `distributed` that includes
+//! computing every shard summary, not just the O(ranks) leader merge (the
+//! leader-merge-only cost is measured in `benches/tp_fanout.rs`).  Besides
+//! the console lines, writes the machine-readable `BENCH_samplers.json`
+//! (override the path with the `BENCH_OUT` environment variable) — the
+//! seed of the repo's perf trajectory.
 
-use flashsampling::benchutil::{bench, black_box};
-use flashsampling::sampling::{
-    distributed, grouped, gumbel, multinomial, online, philox, topk, Key,
-    Transform,
+use flashsampling::benchutil::{
+    bench_with, black_box, json_object, json_str, write_bench_report,
 };
+#[allow(unused_imports)]
+use flashsampling::sampling::ExactSampler;
+use flashsampling::sampling::{build_sampler, philox, Key, Transform};
+use std::time::Duration;
 
-fn toy_logits(v: usize, seed: u64) -> Vec<f32> {
+/// The benchmarked sampler specs: all six registry names (default
+/// parameters) plus the tiled fused-kernel-shaped gumbel variant.
+const SPECS: [&str; 7] = [
+    "gumbel",
+    "gumbel:tile=2048",
+    "multinomial",
+    "grouped:group=2048",
+    "online:group=2048",
+    "distributed:ranks=8",
+    "topk:k=8,tile=2048",
+];
+
+/// Batch × vocabulary grid (paper-shaped vocabulary sizes).
+const BATCHES: [usize; 2] = [1, 8];
+const VOCABS: [usize; 3] = [2_048, 32_768, 151_936];
+
+fn toy_logits(n: usize, seed: u64) -> Vec<f32> {
     let key = Key::from_seed(seed);
-    (0..v)
+    (0..n)
         .map(|i| 3.0 * (philox::uniform_at(key, i as u32, 0, 3, 0) - 0.5))
         .collect()
 }
@@ -21,47 +45,51 @@ fn toy_logits(v: usize, seed: u64) -> Vec<f32> {
 fn main() {
     let key = Key::new(11, 22);
     let t = Transform::default();
-    println!("## samplers — per-row cost across vocabulary sizes\n");
-    for v in [2_048usize, 32_768, 151_936] {
-        let logits = toy_logits(v, 9);
-        let mut step = 0u32;
-        bench(&format!("gumbel_max/streaming/V={v}"), || {
-            step = step.wrapping_add(1);
-            black_box(gumbel::sample_row(&logits, &t, key, 0, step));
-        });
-        bench(&format!("gumbel_max/tiled_2048/V={v}"), || {
-            step = step.wrapping_add(1);
-            black_box(gumbel::sample_row_tiled(&logits, &t, key, 0, step, 2048));
-        });
-        bench(&format!("multinomial_baseline/V={v}"), || {
-            step = step.wrapping_add(1);
-            black_box(multinomial::sample_row(&logits, &t, key, 0, step));
-        });
-        bench(&format!("grouped_I2/g=2048/V={v}"), || {
-            step = step.wrapping_add(1);
-            black_box(grouped::sample_row(&logits, 2048, &t, key, 0, step));
-        });
-        bench(&format!("online_I3/g=2048/V={v}"), || {
-            step = step.wrapping_add(1);
-            black_box(online::sample_row(&logits, 2048, &t, key, 0, step));
-        });
-        bench(&format!("topk8_tiled/V={v}"), || {
-            step = step.wrapping_add(1);
-            black_box(topk::topk_tiled(&logits, &t, key, 0, step, 8, 2048));
-        });
-        // Distributed merge cost (the leader-side work per row at TP=8).
-        let shards: Vec<distributed::ShardSummary> = (0..8)
-            .map(|r| {
-                let vs = v / 8;
-                distributed::shard_summary(
-                    r as u32, &logits[r as usize * vs..(r as usize + 1) * vs],
-                    r as usize * vs, &t, key, 0, 0,
-                )
-            })
-            .collect();
-        bench(&format!("distributed_merge/tp8/V={v}"), || {
-            black_box(distributed::merge_pathwise(&shards));
-            black_box(distributed::merge_by_mass(&shards, key, 0, 0));
-        });
+    println!("## samplers — ns/token across the batch x vocab grid (via the ExactSampler registry)\n");
+
+    let mut records: Vec<String> = Vec::new();
+    for &vocab in &VOCABS {
+        for &batch in &BATCHES {
+            let logits = toy_logits(batch * vocab, 9);
+            for spec in SPECS {
+                let sampler = build_sampler(spec).expect("bench spec is valid");
+                let mut step = 0u32;
+                let label = format!("{spec}/B={batch}/V={vocab}");
+                let result =
+                    bench_with(&label, 15, Duration::from_millis(10), || {
+                        step = step.wrapping_add(1);
+                        black_box(sampler.sample_batch(
+                            &logits, vocab, &t, key, step,
+                        ));
+                    });
+                // One benched call samples `batch` tokens.
+                let ns_per_token =
+                    result.median.as_nanos() as f64 / batch as f64;
+                let mut fields = vec![
+                    ("sampler", json_str(sampler.name())),
+                    ("spec", json_str(spec)),
+                    ("batch", batch.to_string()),
+                    ("vocab", vocab.to_string()),
+                    ("ns_per_token", format!("{ns_per_token:.1}")),
+                ];
+                for (k, v) in result.json_fields() {
+                    fields.push((k, v));
+                }
+                records.push(json_object(&fields));
+            }
+        }
     }
+
+    let out = std::env::var("BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_samplers.json".to_string());
+    let path = std::path::PathBuf::from(out);
+    write_bench_report(&path, "samplers", &records).expect("writing report");
+    println!(
+        "\nwrote {} ({} records: {} specs x {} batches x {} vocabs)",
+        path.display(),
+        records.len(),
+        SPECS.len(),
+        BATCHES.len(),
+        VOCABS.len()
+    );
 }

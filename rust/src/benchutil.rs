@@ -3,7 +3,13 @@
 //! Criterion-style protocol: warmup, then N timed samples of adaptive
 //! iteration count, reporting min / median / p95.  Used by the files under
 //! `rust/benches/` (registered with `harness = false`).
+//!
+//! Besides the human-readable console lines, benches emit machine-readable
+//! `BENCH_<name>.json` reports through [`write_bench_report`] — the repo's
+//! perf-trajectory format (one file per bench target, an array of flat
+//! records, stable keys) consumed by tooling and tracked across PRs.
 
+use std::path::Path;
 use std::time::{Duration, Instant};
 
 /// One benchmark result.
@@ -73,8 +79,137 @@ pub fn bench_slow(name: &str, f: impl FnMut()) -> BenchResult {
     bench_with(name, 10, Duration::from_millis(1), f)
 }
 
+impl BenchResult {
+    /// The timing fields of this result as JSON `(key, value)` pairs
+    /// (nanosecond units), for embedding into a bench report record.
+    pub fn json_fields(&self) -> Vec<(&'static str, String)> {
+        vec![
+            ("median_ns", (self.median.as_nanos() as u64).to_string()),
+            ("min_ns", (self.min.as_nanos() as u64).to_string()),
+            ("p95_ns", (self.p95.as_nanos() as u64).to_string()),
+            ("iters_per_sample", self.iters_per_sample.to_string()),
+        ]
+    }
+}
+
 /// Black-box to stop the optimizer from deleting the benchmarked work.
 #[inline]
 pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
+}
+
+// --- machine-readable reports (BENCH_*.json) -----------------------------
+
+/// Escape a string for inclusion inside a JSON string literal.
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Quote a string as a JSON string literal.
+pub fn json_str(s: &str) -> String {
+    format!("\"{}\"", json_escape(s))
+}
+
+/// Serialize `(key, value)` pairs as one JSON object.  Values are emitted
+/// verbatim — quote strings with [`json_str`], format numbers directly.
+pub fn json_object(fields: &[(&str, String)]) -> String {
+    let body: Vec<String> = fields
+        .iter()
+        .map(|(k, v)| format!("{}: {v}", json_str(k)))
+        .collect();
+    format!("{{{}}}", body.join(", "))
+}
+
+/// Write a `BENCH_<bench>.json` report: a versioned envelope around an
+/// array of flat per-measurement records (each an output of
+/// [`json_object`]).
+pub fn write_bench_report(
+    path: &Path,
+    bench: &str,
+    records: &[String],
+) -> std::io::Result<()> {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str(&format!("  \"bench\": {},\n", json_str(bench)));
+    out.push_str("  \"schema_version\": 1,\n");
+    out.push_str("  \"results\": [\n");
+    for (i, r) in records.iter().enumerate() {
+        out.push_str("    ");
+        out.push_str(r);
+        if i + 1 < records.len() {
+            out.push(',');
+        }
+        out.push('\n');
+    }
+    out.push_str("  ]\n}\n");
+    std::fs::write(path, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_escaping() {
+        assert_eq!(json_escape("plain"), "plain");
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(json_str("x"), "\"x\"");
+    }
+
+    #[test]
+    fn json_object_renders_flat_records() {
+        let o = json_object(&[
+            ("sampler", json_str("gumbel")),
+            ("vocab", "2048".to_string()),
+            ("ns_per_token", "12.5".to_string()),
+        ]);
+        assert_eq!(
+            o,
+            r#"{"sampler": "gumbel", "vocab": 2048, "ns_per_token": 12.5}"#
+        );
+    }
+
+    #[test]
+    fn bench_report_roundtrips_through_json_parser() {
+        let path = std::env::temp_dir().join("fs_bench_report_test.json");
+        let records = vec![
+            json_object(&[("name", json_str("a")), ("v", "1".into())]),
+            json_object(&[("name", json_str("b")), ("v", "2".into())]),
+        ];
+        write_bench_report(&path, "samplers", &records).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = crate::json::parse(&text).unwrap();
+        assert_eq!(v.req("bench").unwrap().as_str().unwrap(), "samplers");
+        let results = v.req("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(results[1].req("v").unwrap().as_usize().unwrap(), 2);
+    }
+
+    #[test]
+    fn bench_result_json_fields() {
+        let r = BenchResult {
+            name: "x".into(),
+            median: Duration::from_nanos(1500),
+            min: Duration::from_nanos(1000),
+            p95: Duration::from_nanos(2000),
+            iters_per_sample: 10,
+        };
+        let fields = r.json_fields();
+        assert_eq!(fields[0], ("median_ns", "1500".to_string()));
+        assert_eq!(fields[3], ("iters_per_sample", "10".to_string()));
+    }
 }

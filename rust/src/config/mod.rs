@@ -13,6 +13,7 @@
 //! kv_block_size = 16
 //! seed = 42
 //! baseline_sampler = false
+//! sampler = gumbel        # ExactSampler registry spec (see sampling docs)
 //! temperature = 1.0
 //! max_new_tokens = 64
 //! request_rate = 8.0
@@ -35,6 +36,9 @@ pub struct Config {
     pub kv_block_size: usize,
     pub seed: u64,
     pub baseline_sampler: bool,
+    /// `ExactSampler` registry spec selecting the decode sampler
+    /// (`"gumbel"` = fused FlashSampling, `"multinomial"` = baseline).
+    pub sampler: String,
     pub temperature: f32,
     pub max_new_tokens: usize,
     /// Open-loop arrival rate (req/s) for `serve`.
@@ -53,6 +57,7 @@ impl Default for Config {
             kv_block_size: 16,
             seed: 42,
             baseline_sampler: false,
+            sampler: "gumbel".to_string(),
             temperature: 1.0,
             max_new_tokens: 32,
             request_rate: 8.0,
@@ -82,6 +87,16 @@ impl Config {
                 "kv_block_size" => self.kv_block_size = v.parse()?,
                 "seed" => self.seed = v.parse()?,
                 "baseline_sampler" => self.baseline_sampler = v.parse()?,
+                "sampler" => {
+                    // Validate at parse time, with the engine's constraint
+                    // (only artifact-backed specs are servable).
+                    let mut probe = self.engine_config();
+                    probe.sampler = v.clone();
+                    probe
+                        .validate_sampler()
+                        .with_context(|| format!("config key 'sampler' = '{v}'"))?;
+                    self.sampler = v;
+                }
                 "temperature" => self.temperature = v.parse()?,
                 "max_new_tokens" => self.max_new_tokens = v.parse()?,
                 "request_rate" => self.request_rate = v.parse()?,
@@ -106,6 +121,7 @@ impl Config {
             kv_block_size: self.kv_block_size,
             seed: self.seed,
             baseline_sampler: self.baseline_sampler,
+            sampler: self.sampler.clone(),
         }
     }
 }
@@ -158,6 +174,33 @@ mod tests {
         assert!(c
             .apply_pairs(parse_pairs("temperature = 0").unwrap())
             .is_err());
+    }
+
+    #[test]
+    fn sampler_key_is_registry_validated() {
+        let mut c = Config::default();
+        assert_eq!(c.sampler, "gumbel");
+        c.apply_pairs(parse_pairs("sampler = gumbel:tile=2048").unwrap())
+            .unwrap();
+        assert_eq!(c.sampler, "gumbel:tile=2048");
+        assert_eq!(c.engine_config().sampler, "gumbel:tile=2048");
+        // Unknown sampler names and malformed params fail at parse time.
+        assert!(c
+            .apply_pairs(parse_pairs("sampler = frobnicate").unwrap())
+            .is_err());
+        assert!(c
+            .apply_pairs(parse_pairs("sampler = gumbel:bogus=1").unwrap())
+            .is_err());
+        // Host-side samplers are valid registry specs but not servable by
+        // the decode artifacts: rejected here, not at serve time.
+        assert!(c
+            .apply_pairs(parse_pairs("sampler = grouped:group=64").unwrap())
+            .is_err());
+        // A failed apply must not clobber the previous value.
+        assert_eq!(c.sampler, "gumbel:tile=2048");
+        // The baseline artifact can be selected by spec alone.
+        c.apply_pairs(parse_pairs("sampler = multinomial").unwrap()).unwrap();
+        assert!(c.engine_config().uses_baseline_artifact());
     }
 
     #[test]

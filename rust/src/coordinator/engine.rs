@@ -37,8 +37,18 @@ pub struct EngineConfig {
     /// RNG seed for the whole serving session.
     pub seed: u64,
     /// Use the baseline (materialized-logits multinomial) decode artifact
-    /// instead of FlashSampling — the paper's §4.5 A/B switch.
+    /// instead of FlashSampling — the paper's §4.5 A/B switch.  Shorthand
+    /// for `sampler = "multinomial"`; either setting flips the artifact.
     pub baseline_sampler: bool,
+    /// `ExactSampler` registry spec selecting the decode sampling
+    /// algorithm (`crate::sampling::build_sampler` grammar).  The decode
+    /// path is implemented by AOT artifacts, of which there are two:
+    /// `"gumbel"` maps to the fused FlashSampling decode artifact and
+    /// `"multinomial"` to the baseline decode artifact.  Any other
+    /// registry sampler (grouped/online/distributed/topk — host-side
+    /// algorithms used by the TP leader, benches, and repro tables) is
+    /// rejected at engine construction rather than silently substituted.
+    pub sampler: String,
 }
 
 impl Default for EngineConfig {
@@ -49,7 +59,38 @@ impl Default for EngineConfig {
             kv_block_size: 16,
             seed: 0xF1A5_4_5A3,
             baseline_sampler: false,
+            sampler: "gumbel".to_string(),
         }
+    }
+}
+
+impl EngineConfig {
+    /// Does this configuration select the baseline (materialized-logits)
+    /// decode artifact?
+    pub fn uses_baseline_artifact(&self) -> bool {
+        self.baseline_sampler || self.sampler_name() == "multinomial"
+    }
+
+    /// Registry name of the configured sampler spec (grammar not checked).
+    fn sampler_name(&self) -> &str {
+        self.sampler.split(':').next().unwrap_or("").trim()
+    }
+
+    /// Validate the sampler spec: registry grammar, plus the engine's own
+    /// constraint that the decode path can actually honor it.
+    pub fn validate_sampler(&self) -> Result<()> {
+        crate::sampling::build_sampler(&self.sampler)
+            .context("EngineConfig::sampler")?;
+        let name = self.sampler_name();
+        anyhow::ensure!(
+            name == "gumbel" || name == "multinomial",
+            "EngineConfig::sampler = '{}': the decode path runs inside AOT \
+             artifacts, which exist only for 'gumbel' (fused FlashSampling) \
+             and 'multinomial' (baseline); '{name}' is a host-side sampler \
+             (TP leader / benches / repro)",
+            self.sampler
+        );
+        Ok(())
     }
 }
 
@@ -89,6 +130,8 @@ pub struct Engine {
 
 impl Engine {
     pub fn new(artifacts_dir: impl AsRef<Path>, cfg: EngineConfig) -> Result<Self> {
+        // Fail fast on sampler specs the decode artifacts cannot honor.
+        cfg.validate_sampler()?;
         let rt = Runtime::new(artifacts_dir)?;
         let model = rt.manifest().model.clone();
         let params = rt.params_in_order()?;
@@ -447,7 +490,11 @@ impl Engine {
         self.metrics.decode_batch_sizes.push(rows.len());
         self.metrics.bump("decode_gather_us", t_gather.elapsed().as_micros() as u64);
 
-        let kind = if self.cfg.baseline_sampler { "decode_baseline" } else { "decode_sample" };
+        let kind = if self.cfg.uses_baseline_artifact() {
+            "decode_baseline"
+        } else {
+            "decode_sample"
+        };
         let name = format!("{kind}_b{b_bucket}");
         let exe = self.rt.load(&name)?;
         let t_lit = Instant::now();

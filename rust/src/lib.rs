@@ -17,6 +17,25 @@
 //! Python never runs on the request path: `make artifacts` lowers the JAX
 //! graphs to HLO text once; the coordinator loads and executes them through
 //! the PJRT C API (`xla` crate).
+//!
+//! # Build features
+//!
+//! * **default** — CPU-only: the workspace's `crates/xla` host stub stands
+//!   in for the PJRT bindings.  Everything that does not execute AOT
+//!   artifacts (all native samplers, the scheduler/KV machinery, the GPU
+//!   simulator, the repro tables) works; artifact execution returns a
+//!   "PJRT unavailable" error and the integration tests skip.
+//! * **`pjrt`** (non-default) — the seam for the real runtime: build with
+//!   `--features pjrt` and a `[patch]` of `xla` onto the real xla-rs crate
+//!   (see README.md, section PJRT).
+//!
+//! # Sampler selection
+//!
+//! All six paper samplers implement [`sampling::ExactSampler`] and are
+//! constructed from config strings via [`sampling::build_sampler`] — the
+//! coordinator (the `sampler` key of [`coordinator::EngineConfig`]), the
+//! TP orchestrator ([`tp::Strategy::leader_sampler_spec`]), the benches,
+//! and the repro tables all select algorithms through that one registry.
 
 pub mod benchutil;
 pub mod config;

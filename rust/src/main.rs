@@ -74,11 +74,15 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
     gen.prompt_len = flashsampling::workload::LengthDist::Uniform(8, 48);
     gen.output_len = flashsampling::workload::LengthDist::Fixed(cfg.max_new_tokens);
     let reqs = gen.generate(cfg.num_requests);
+    let sampler_desc = if cfg.engine_config().uses_baseline_artifact() {
+        "baseline multinomial (decode_baseline artifact)".to_string()
+    } else {
+        format!("FlashSampling (decode_sample artifact, spec `{}`)", cfg.sampler)
+    };
     println!(
-        "[serve] {} requests, Poisson rate {}/s, sampler = {}",
+        "[serve] {} requests, Poisson rate {}/s, sampler = {sampler_desc}",
         reqs.len(),
         cfg.request_rate,
-        if cfg.baseline_sampler { "baseline multinomial" } else { "FlashSampling" }
     );
     let done = engine.serve(reqs)?;
     let m = &engine.metrics;

@@ -5,7 +5,8 @@
 //!   chi-squared goodness-of-fit against the exact categorical.  Run over
 //!   the native Rust Gumbel-Max (pathwise identical to the Pallas kernel —
 //!   see tests/integration_runtime.rs) and the grouped/online/distributed
-//!   variants.
+//!   variants, each selected through the `ExactSampler` registry by config
+//!   string (DESIGN.md §5).
 //! * `e2e_quality` — the paper's end-to-end protocol shape: decode N
 //!   prompts with FlashSampling and with the baseline sampler through the
 //!   real serving engine, score each completion with a deterministic
@@ -15,9 +16,10 @@
 use anyhow::Result;
 
 use crate::coordinator::{Engine, EngineConfig, Request, SamplingParams};
+#[allow(unused_imports)]
+use crate::sampling::ExactSampler;
 use crate::sampling::{
-    distributed, grouped, gumbel, multinomial, online, philox, stats, Key,
-    Transform,
+    build_sampler, multinomial, philox, stats, Key, RowCtx, Transform,
 };
 
 const V: usize = 512;
@@ -39,60 +41,30 @@ pub fn chisq() -> Result<String> {
 
     let mut md = String::from(
         "## §4.6 kernel-level verification — chi-squared GoF (V=512, 10k samples)\n\n\
-         |sampler | p-value | verdict |\n|---|---|---|\n",
+         |sampler | spec | p-value | verdict |\n|---|---|---|---|\n",
     );
-    let samplers: Vec<(&str, Box<dyn Fn(u32) -> u32>)> = vec![
-        (
-            "FlashSampling (tiled Gumbel-Max, tile_v=64)",
-            Box::new(|s| {
-                gumbel::sample_row_tiled(&logits, &t, key, 0, s, 64)
-                    .unwrap()
-                    .index
-            }),
-        ),
-        (
-            "Baseline multinomial (Alg. A.1)",
-            Box::new(|s| multinomial::sample_row(&logits, &t, key, 0, s).unwrap()),
-        ),
-        (
-            "Group-Gumbel-Max (Alg. I.2, g=64)",
-            Box::new(|s| grouped::sample_row(&logits, 64, &t, key, 0, s).unwrap().0),
-        ),
-        (
-            "Online Group-Gumbel-Max (Alg. I.3, g=64)",
-            Box::new(|s| online::sample_row(&logits, 64, &t, key, 0, s).unwrap().0),
-        ),
-        (
-            "Distributed merge (Alg. I.4, 4 shards)",
-            Box::new(|s| {
-                let vs = V / 4;
-                let shards: Vec<_> = (0..4)
-                    .map(|r| {
-                        distributed::shard_summary(
-                            r as u32,
-                            &logits[r * vs..(r + 1) * vs],
-                            r * vs,
-                            &t,
-                            key,
-                            0,
-                            s,
-                        )
-                    })
-                    .collect();
-                distributed::merge_by_mass(&shards, key, 0, s)
-                    .unwrap()
-                    .local_sample
-            }),
-        ),
+    // Every sampler under test is selected through the ExactSampler
+    // registry by config string — the experiment definition is pure data.
+    let cases: [(&str, &str); 5] = [
+        ("FlashSampling (tiled Gumbel-Max, tile_v=64)", "gumbel:tile=64"),
+        ("Baseline multinomial (Alg. A.1)", "multinomial"),
+        ("Group-Gumbel-Max (Alg. I.2, g=64)", "grouped:group=64"),
+        ("Online Group-Gumbel-Max (Alg. I.3, g=64)", "online:group=64"),
+        ("Distributed merge (Alg. I.4, 4 shards)", "distributed:ranks=4"),
     ];
-    for (name, f) in samplers {
+    for (name, spec) in cases {
+        let sampler = build_sampler(spec)?;
         let mut counts = vec![0u64; V];
         for s in 0..N_SAMPLES {
-            counts[f(s) as usize] += 1;
+            let ctx = RowCtx { transform: &t, key, row: 0, step: s };
+            let d = sampler
+                .sample_row(&logits, ctx)
+                .expect("chisq fixture has full support");
+            counts[d.index as usize] += 1;
         }
         let p = stats::chi_squared_pvalue(&counts, &probs, N_SAMPLES as u64);
         let verdict = if p > 0.001 { "exact (not rejected)" } else { "REJECTED" };
-        md.push_str(&format!("| {name} | {p:.4} | {verdict} |\n"));
+        md.push_str(&format!("| {name} | `{spec}` | {p:.4} | {verdict} |\n"));
     }
     Ok(md)
 }

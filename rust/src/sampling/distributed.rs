@@ -15,6 +15,10 @@
 //!   Theorem D.4; requires only the shard masses, not shard maxima.
 
 use super::philox::{self, Key};
+use super::{Draw, ExactSampler, RowCtx};
+
+/// Default tensor-parallel degree of the registry's `distributed` spec.
+pub const DEFAULT_RANKS: usize = 8;
 
 /// One rank's per-row summary (the wire format of the simulated NVLink
 /// fan-out in `crate::tp`).
@@ -106,6 +110,53 @@ pub fn shard_summary(
     }
 }
 
+/// [`ExactSampler`] adapter over Algorithm I.4 — registry name
+/// `distributed`.  Shards the row into `n_ranks` contiguous vocabulary
+/// shards, computes each rank's O(1) summary, and runs the distributional
+/// (mass) merge on the leader.  Spec example: `"distributed:ranks=4"`.
+#[derive(Clone, Copy, Debug)]
+pub struct DistributedSampler {
+    /// Simulated tensor-parallel degree (number of vocabulary shards).
+    pub n_ranks: usize,
+}
+
+impl Default for DistributedSampler {
+    fn default() -> Self {
+        Self { n_ranks: DEFAULT_RANKS }
+    }
+}
+
+impl ExactSampler for DistributedSampler {
+    fn name(&self) -> &'static str {
+        "distributed"
+    }
+
+    fn sample_row(&self, logits: &[f32], ctx: RowCtx<'_>) -> Option<Draw> {
+        // Contiguous shards of ceil(V / n) positions (the last may be
+        // short) — global Philox positions keep shard samples reproducible
+        // across regroupings, exactly like the rank kernels.
+        let vs = logits.len().div_ceil(self.n_ranks).max(1);
+        let summaries: Vec<ShardSummary> = logits
+            .chunks(vs)
+            .enumerate()
+            .map(|(r, shard)| {
+                shard_summary(
+                    r as u32,
+                    shard,
+                    r * vs,
+                    ctx.transform,
+                    ctx.key,
+                    ctx.row,
+                    ctx.step,
+                )
+            })
+            .collect();
+        let lz = log_z(&summaries);
+        merge_by_mass(&summaries, ctx.key, ctx.row, ctx.step)
+            .map(|w| Draw { index: w.local_sample, log_z: Some(lz) })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -173,6 +224,24 @@ mod tests {
         for step in 0..50 {
             let w = merge_by_mass(&s, Key::new(5, 5), 0, step).unwrap();
             assert_eq!(w.rank, 0);
+        }
+    }
+
+    /// The trait adapter's shard/merge pipeline is pathwise identical to
+    /// assembling the shard summaries by hand.
+    #[test]
+    fn trait_adapter_matches_manual_merge() {
+        let l = toy_logits(512, 13);
+        let key = Key::new(31, 32);
+        let t = Transform::default();
+        let sampler = DistributedSampler { n_ranks: 4 };
+        for step in 0..20 {
+            let ctx = RowCtx { transform: &t, key, row: 0, step };
+            let via_trait = sampler.sample_row(&l, ctx).unwrap();
+            let s = shards(&l, 4, key, 0, step);
+            let manual = merge_by_mass(&s, key, 0, step).unwrap();
+            assert_eq!(via_trait.index, manual.local_sample);
+            assert_eq!(via_trait.log_z, Some(log_z(&s)));
         }
     }
 

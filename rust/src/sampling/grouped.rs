@@ -6,7 +6,11 @@
 //! group.  Exact in distribution by hierarchical factorization.
 
 use super::philox::{self, Key};
-use super::{log_sum_exp, Transform};
+use super::{log_sum_exp, Draw, ExactSampler, RowCtx, Transform};
+
+/// Default group size of the registry's `grouped`/`online` specs — matches
+/// the fused kernel's vocabulary tile (`gpusim::kernelchain::FUSED_TILE_V`).
+pub const DEFAULT_GROUP: usize = 2048;
 
 /// Per-group summary: what each "threadblock" (or rank) reports upward.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -98,6 +102,38 @@ pub fn sample_row(
     select_group(&summaries, key, row, step).map(|(_, s)| (s.local_sample, log_z))
 }
 
+/// [`ExactSampler`] adapter over Algorithm I.2 — registry name `grouped`.
+/// Spec example: `"grouped:group=64"`.
+#[derive(Clone, Copy, Debug)]
+pub struct GroupedSampler {
+    /// Vocabulary positions per group (the "threadblock" width).
+    pub group_size: usize,
+}
+
+impl Default for GroupedSampler {
+    fn default() -> Self {
+        Self { group_size: DEFAULT_GROUP }
+    }
+}
+
+impl ExactSampler for GroupedSampler {
+    fn name(&self) -> &'static str {
+        "grouped"
+    }
+
+    fn sample_row(&self, logits: &[f32], ctx: RowCtx<'_>) -> Option<Draw> {
+        sample_row(
+            logits,
+            self.group_size,
+            ctx.transform,
+            ctx.key,
+            ctx.row,
+            ctx.step,
+        )
+        .map(|(index, log_z)| Draw { index, log_z: Some(log_z) })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -144,6 +180,49 @@ mod tests {
         let l = vec![0.0f32; 32];
         let t = Transform { temperature: 1.0, bias: Some(vec![f32::NEG_INFINITY; 32]) };
         assert!(sample_row(&l, 8, &t, Key::new(1, 1), 0, 0).is_none());
+    }
+
+    /// Degenerate inputs: an empty row has no groups at all (not even a
+    /// zero-mass one) and must sample to `None` without panicking; an empty
+    /// group summary is likewise `None`.
+    #[test]
+    fn empty_row_and_empty_group_are_none() {
+        let t = Transform::default();
+        assert_eq!(sample_row(&[], 8, &t, Key::new(1, 1), 0, 0), None);
+        assert_eq!(group_summary(&[], 0, &t, Key::new(1, 1), 0, 0), None);
+        assert_eq!(select_group(&[], Key::new(1, 1), 0, 0), None);
+    }
+
+    /// A zero-mass group yields no summary, and its log-mass never enters
+    /// log_Z: masking half the vocabulary leaves log_Z equal to the live
+    /// half's logsumexp exactly.
+    #[test]
+    fn zero_mass_groups_excluded_from_log_z() {
+        let l = toy_logits(64, 3);
+        let mut bias = vec![0.0f32; 64];
+        for b in bias[32..].iter_mut() {
+            *b = f32::NEG_INFINITY;
+        }
+        let t = Transform { temperature: 1.0, bias: Some(bias) };
+        let (_, lz) = sample_row(&l, 16, &t, Key::new(2, 2), 0, 0).unwrap();
+        assert!((lz - log_sum_exp(&l[..32])).abs() < 1e-4);
+    }
+
+    /// The trait adapter draws from the same Philox streams as the module
+    /// function (pathwise identity across the `ExactSampler` boundary).
+    #[test]
+    fn trait_adapter_matches_module_fn() {
+        let l = toy_logits(200, 5);
+        let t = Transform::default();
+        let key = Key::new(11, 12);
+        let s = GroupedSampler { group_size: 48 };
+        for step in 0..20 {
+            let ctx = RowCtx { transform: &t, key, row: 3, step };
+            let via_trait = s.sample_row(&l, ctx).unwrap();
+            let (idx, lz) = sample_row(&l, 48, &t, key, 3, step).unwrap();
+            assert_eq!(via_trait.index, idx);
+            assert_eq!(via_trait.log_z, Some(lz));
+        }
     }
 
     #[test]

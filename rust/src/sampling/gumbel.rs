@@ -6,7 +6,7 @@
 //! identical to the Pallas kernel's output for the same `(seed, step)`.
 
 use super::philox::{self, Key};
-use super::Transform;
+use super::{Draw, ExactSampler, RowCtx, Transform};
 
 /// Result of a Gumbel-Max pass over one row.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -114,6 +114,39 @@ pub fn sample_row_tiled(
     candidates
         .into_iter()
         .reduce(|a, b| if b.score > a.score { b } else { a })
+}
+
+/// [`ExactSampler`] adapter over Algorithm I.1 — registry name `gumbel`.
+///
+/// `tile_v = None` runs the monolithic streaming scan ([`sample_row`]);
+/// `tile_v = Some(t)` runs the two-stage tile decomposition
+/// ([`sample_row_tiled`]), which by Lemma D.5 returns the identical sample.
+/// Spec examples: `"gumbel"`, `"gumbel:tile=2048"`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GumbelMaxSampler {
+    /// Vocabulary tile size; `None` = monolithic streaming scan.
+    pub tile_v: Option<usize>,
+}
+
+impl ExactSampler for GumbelMaxSampler {
+    fn name(&self) -> &'static str {
+        "gumbel"
+    }
+
+    fn sample_row(&self, logits: &[f32], ctx: RowCtx<'_>) -> Option<Draw> {
+        let result = match self.tile_v {
+            Some(t) => sample_row_tiled(
+                logits,
+                ctx.transform,
+                ctx.key,
+                ctx.row,
+                ctx.step,
+                t,
+            ),
+            None => sample_row(logits, ctx.transform, ctx.key, ctx.row, ctx.step),
+        };
+        result.map(|g| Draw { index: g.index, log_z: None })
+    }
 }
 
 #[cfg(test)]

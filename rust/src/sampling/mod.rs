@@ -1,18 +1,57 @@
 //! Exact categorical samplers — native Rust mirrors of the paper's
 //! algorithms, sharing Philox streams with the Pallas kernel.
 //!
-//! | Paper | Module |
-//! |---|---|
-//! | Alg. I.1 streaming Gumbel-Max | [`gumbel`] |
-//! | Alg. A.1 materialized-logits baseline | [`multinomial`] |
-//! | Alg. I.2 parallel Group-Gumbel-Max | [`grouped`] |
-//! | Alg. I.3 online merge (Lemma D.3) | [`online`] |
-//! | Alg. I.4 distributed tensor-parallel merge | [`distributed`] |
-//! | Gumbel-Top-k candidate reduction (App. D.6) | [`topk`] |
-//! | chi-squared GoF + paired bootstrap (§4.6) | [`stats`] |
+//! | Paper | Module | Registry name |
+//! |---|---|---|
+//! | Alg. I.1 streaming Gumbel-Max | [`gumbel`] | `gumbel` |
+//! | Alg. A.1 materialized-logits baseline | [`multinomial`] | `multinomial` |
+//! | Alg. I.2 parallel Group-Gumbel-Max | [`grouped`] | `grouped` |
+//! | Alg. I.3 online merge (Lemma D.3) | [`online`] | `online` |
+//! | Alg. I.4 distributed tensor-parallel merge | [`distributed`] | `distributed` |
+//! | Gumbel-Top-k candidate reduction (App. D.6) | [`topk`] | `topk` |
+//! | chi-squared GoF + paired bootstrap (§4.6) | [`stats`] | — |
 //!
 //! These run on the L3 request path (e.g. the TP orchestrator's rank merge)
 //! and in tests/benches; the heavy fused path is the AOT Pallas kernel.
+//!
+//! # The `ExactSampler` trait and registry
+//!
+//! Every paper sampler is also exposed behind the common [`ExactSampler`]
+//! trait, constructed from a **config string** via [`build_sampler`] — the
+//! single seam through which the coordinator, the TP orchestrator, the
+//! benches, and the repro tables select sampling algorithms (no hard-coded
+//! call sites).  Spec grammar:
+//!
+//! ```text
+//!   <name>                      e.g.  "gumbel"
+//!   <name>:<k>=<v>[,<k>=<v>]*   e.g.  "grouped:group=64"
+//!                                     "topk:k=8,p=0.95,tile=2048"
+//! ```
+//!
+//! Recognised parameters: `tile` ([`gumbel`], [`topk`]), `group`
+//! ([`grouped`], [`online`]), `ranks` ([`distributed`]), `k` and `p`
+//! ([`topk`]).  Unknown names or parameters are errors, so config typos
+//! fail fast.
+//!
+//! Exactness contract across the trait boundary: a sampler built from a
+//! spec draws from exactly the same Philox streams as the underlying
+//! module functions, so results are pathwise reproducible from
+//! `(spec, seed, row, step)` — asserted by `tests/sampler_trait.rs`.
+//!
+//! ```
+//! use flashsampling::sampling::{
+//!     build_sampler, ExactSampler, Key, RowCtx, Transform,
+//! };
+//!
+//! let sampler = build_sampler("grouped:group=4").unwrap();
+//! let logits = [0.5f32, -1.0, 2.0, 0.0, 1.5, -0.5, 0.25, 1.0];
+//! let t = Transform::default();
+//! let ctx = RowCtx { transform: &t, key: Key::from_seed(7), row: 0, step: 0 };
+//! let draw = sampler.sample_row(&logits, ctx).unwrap();
+//! assert!((draw.index as usize) < logits.len());
+//! // Group-structured samplers return log Z for free (Appendix L).
+//! assert!(draw.log_z.is_some());
+//! ```
 
 pub mod distributed;
 pub mod grouped;
@@ -23,11 +62,24 @@ pub mod philox;
 pub mod stats;
 pub mod topk;
 
+use anyhow::{bail, Context, Result};
+
 pub use philox::Key;
 
 /// Numerically stable log(sum(exp(xs))) over a slice.
 ///
-/// Returns `-inf` for empty/all-`-inf` input (a zero-mass group, §D.1).
+/// Returns `-inf` for empty/all-`-inf` input (a zero-mass group, §D.1):
+///
+/// ```
+/// use flashsampling::sampling::log_sum_exp;
+///
+/// // Empty slice and all-masked groups both carry zero mass.
+/// assert_eq!(log_sum_exp(&[]), f32::NEG_INFINITY);
+/// assert_eq!(log_sum_exp(&[f32::NEG_INFINITY; 3]), f32::NEG_INFINITY);
+/// // No overflow at large magnitudes.
+/// let z = log_sum_exp(&[1000.0, 1000.0]);
+/// assert!((z - (1000.0 + 2f32.ln())).abs() < 1e-3);
+/// ```
 pub fn log_sum_exp(xs: &[f32]) -> f32 {
     let m = xs.iter().copied().fold(f32::NEG_INFINITY, f32::max);
     if !m.is_finite() {
@@ -38,6 +90,21 @@ pub fn log_sum_exp(xs: &[f32]) -> f32 {
 }
 
 /// log(e^a + e^b) without overflow; the online merge's running-mass update.
+///
+/// `-inf` operands act as the additive identity (zero mass), so streaming a
+/// dead group leaves the running mass untouched:
+///
+/// ```
+/// use flashsampling::sampling::log_add_exp;
+///
+/// assert_eq!(log_add_exp(f32::NEG_INFINITY, 2.0), 2.0);
+/// assert_eq!(log_add_exp(2.0, f32::NEG_INFINITY), 2.0);
+/// assert_eq!(
+///     log_add_exp(f32::NEG_INFINITY, f32::NEG_INFINITY),
+///     f32::NEG_INFINITY
+/// );
+/// assert!((log_add_exp(0.0, 0.0) - 2f32.ln()).abs() < 1e-6);
+/// ```
 pub fn log_add_exp(a: f32, b: f32) -> f32 {
     if a == f32::NEG_INFINITY {
         return b;
@@ -81,6 +148,216 @@ impl Transform {
     }
 }
 
+// --- the unified sampler trait -------------------------------------------
+
+/// Per-row sampling context handed across the [`ExactSampler`] boundary.
+///
+/// Bundles the deterministic inputs of one draw: the logit transform and
+/// the Philox coordinates `(key, row, step)`.  Two calls with equal context
+/// and equal logits return the identical sample, whatever the algorithm.
+#[derive(Clone, Copy, Debug)]
+pub struct RowCtx<'a> {
+    /// Logit transform (temperature, bias/masking).
+    pub transform: &'a Transform,
+    /// RNG key (the `seed` input of every artifact).
+    pub key: Key,
+    /// Batch row index b — selects the Philox stream.
+    pub row: u32,
+    /// Decode step — fresh noise per scheduler iteration.
+    pub step: u32,
+}
+
+/// One exact draw plus optional free byproducts.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Draw {
+    /// Sampled vocabulary index.
+    pub index: u32,
+    /// log-normalizer log Z when the algorithm computes it as a byproduct
+    /// of its group masses (Appendix L); `None` for single-pass samplers.
+    pub log_z: Option<f32>,
+}
+
+/// A sampler that draws *exactly* from the transformed categorical
+/// distribution (or a documented candidate-reduced variant, for
+/// [`topk`]), deterministically in the Philox coordinates.
+///
+/// Implementations are thin adapters over the per-algorithm module
+/// functions; construct them by config string through [`build_sampler`].
+pub trait ExactSampler: Send + Sync {
+    /// Registry name (`"gumbel"`, `"multinomial"`, ...).
+    fn name(&self) -> &'static str;
+
+    /// Draw one token from a row of logits.
+    ///
+    /// Returns `None` when every transformed logit is `-inf` (zero-mass
+    /// target distribution — the caller must treat this as an error).
+    fn sample_row(&self, logits: &[f32], ctx: RowCtx<'_>) -> Option<Draw>;
+
+    /// Draw one token per row of a `[B, V]` row-major batch; row `b` uses
+    /// Philox stream `b` (so batching never changes any row's sample).
+    fn sample_batch(
+        &self,
+        logits: &[f32],
+        vocab: usize,
+        transform: &Transform,
+        key: Key,
+        step: u32,
+    ) -> Vec<Option<Draw>> {
+        assert!(vocab > 0, "vocab must be positive");
+        assert_eq!(logits.len() % vocab, 0);
+        logits
+            .chunks_exact(vocab)
+            .enumerate()
+            .map(|(b, row)| {
+                self.sample_row(
+                    row,
+                    RowCtx { transform, key, row: b as u32, step },
+                )
+            })
+            .collect()
+    }
+}
+
+// --- the name-keyed registry ---------------------------------------------
+
+/// The six paper samplers, in paper order — every name accepted by
+/// [`build_sampler`].
+pub const SAMPLER_NAMES: [&str; 6] =
+    ["gumbel", "multinomial", "grouped", "online", "distributed", "topk"];
+
+/// Key/value parameters parsed from a sampler spec string.
+struct SpecParams<'a> {
+    spec: &'a str,
+    pairs: Vec<(&'a str, &'a str)>,
+}
+
+impl<'a> SpecParams<'a> {
+    fn parse(spec: &'a str, params: Option<&'a str>) -> Result<Self> {
+        let mut pairs: Vec<(&str, &str)> = Vec::new();
+        if let Some(p) = params {
+            for item in p.split(',') {
+                let (k, v) = item.split_once('=').with_context(|| {
+                    format!("sampler spec '{spec}': expected key=value, got '{item}'")
+                })?;
+                let (k, v) = (k.trim(), v.trim());
+                if pairs.iter().any(|(seen, _)| *seen == k) {
+                    bail!("sampler spec '{spec}': duplicate parameter '{k}'");
+                }
+                pairs.push((k, v));
+            }
+        }
+        Ok(Self { spec, pairs })
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.pairs.iter().find(|(k, _)| *k == key) {
+            None => Ok(default),
+            Some((_, v)) => {
+                let n: usize = v.parse().with_context(|| {
+                    format!("sampler spec '{}': bad {key}='{v}'", self.spec)
+                })?;
+                if n == 0 {
+                    bail!("sampler spec '{}': {key} must be >= 1", self.spec);
+                }
+                Ok(n)
+            }
+        }
+    }
+
+    fn get_f32(&self, key: &str, default: f32) -> Result<f32> {
+        match self.pairs.iter().find(|(k, _)| *k == key) {
+            None => Ok(default),
+            Some((_, v)) => v.parse().with_context(|| {
+                format!("sampler spec '{}': bad {key}='{v}'", self.spec)
+            }),
+        }
+    }
+
+    /// Reject parameters no arm consumed (typo safety).
+    fn check_known(&self, known: &[&str]) -> Result<()> {
+        for (k, _) in &self.pairs {
+            if !known.contains(k) {
+                bail!(
+                    "sampler spec '{}': unknown parameter '{k}' (known: {})",
+                    self.spec,
+                    known.join(", ")
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Build an [`ExactSampler`] from a config string (see the module docs for
+/// the grammar).  This is the only constructor the serving stack uses —
+/// sampler selection is always data, never code.
+pub fn build_sampler(spec: &str) -> Result<Box<dyn ExactSampler>> {
+    let spec = spec.trim();
+    let (name, params) = match spec.split_once(':') {
+        Some((n, p)) => (n.trim(), Some(p)),
+        None => (spec, None),
+    };
+    let p = SpecParams::parse(spec, params)?;
+    let sampler: Box<dyn ExactSampler> = match name {
+        "gumbel" => {
+            p.check_known(&["tile"])?;
+            let tile = match p.pairs.iter().any(|(k, _)| *k == "tile") {
+                true => Some(p.get_usize("tile", 0)?),
+                false => None,
+            };
+            Box::new(gumbel::GumbelMaxSampler { tile_v: tile })
+        }
+        "multinomial" => {
+            p.check_known(&[])?;
+            Box::new(multinomial::MultinomialSampler)
+        }
+        "grouped" => {
+            p.check_known(&["group"])?;
+            Box::new(grouped::GroupedSampler {
+                group_size: p.get_usize("group", grouped::DEFAULT_GROUP)?,
+            })
+        }
+        "online" => {
+            p.check_known(&["group"])?;
+            Box::new(online::OnlineSampler {
+                group_size: p.get_usize("group", grouped::DEFAULT_GROUP)?,
+            })
+        }
+        "distributed" => {
+            p.check_known(&["ranks"])?;
+            Box::new(distributed::DistributedSampler {
+                n_ranks: p.get_usize("ranks", distributed::DEFAULT_RANKS)?,
+            })
+        }
+        "topk" => {
+            p.check_known(&["k", "p", "tile"])?;
+            let top_p = p.get_f32("p", 1.0)?;
+            if !(top_p > 0.0 && top_p <= 1.0) {
+                bail!("sampler spec '{spec}': p must be in (0, 1], got {top_p}");
+            }
+            Box::new(topk::GumbelTopKSampler {
+                k: p.get_usize("k", topk::DEFAULT_K)?,
+                top_p,
+                tile_v: p.get_usize("tile", topk::DEFAULT_TILE_V)?,
+            })
+        }
+        other => bail!(
+            "unknown sampler '{other}' (known: {})",
+            SAMPLER_NAMES.join(", ")
+        ),
+    };
+    Ok(sampler)
+}
+
+/// One default-configured instance of every registered sampler, in
+/// [`SAMPLER_NAMES`] order — the bench/report iteration set.
+pub fn default_samplers() -> Vec<Box<dyn ExactSampler>> {
+    SAMPLER_NAMES
+        .iter()
+        .map(|n| build_sampler(n).expect("default sampler specs are valid"))
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -115,5 +392,73 @@ mod tests {
         let t = Transform { temperature: 2.0, bias: Some(vec![0.0, -f32::INFINITY]) };
         assert_eq!(t.apply(4.0, 0), 2.0);
         assert_eq!(t.apply(4.0, 1), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn registry_builds_every_name() {
+        for name in SAMPLER_NAMES {
+            let s = build_sampler(name).unwrap();
+            assert_eq!(s.name(), name);
+        }
+        assert_eq!(default_samplers().len(), SAMPLER_NAMES.len());
+    }
+
+    #[test]
+    fn registry_parses_parameters() {
+        assert!(build_sampler("grouped:group=64").is_ok());
+        assert!(build_sampler("online:group=17").is_ok());
+        assert!(build_sampler("distributed:ranks=4").is_ok());
+        assert!(build_sampler("topk:k=4,p=0.9,tile=128").is_ok());
+        assert!(build_sampler("gumbel:tile=2048").is_ok());
+        assert!(build_sampler(" gumbel ").is_ok()); // whitespace-tolerant
+    }
+
+    #[test]
+    fn registry_rejects_bad_specs() {
+        assert!(build_sampler("nope").is_err());
+        assert!(build_sampler("gumbel:wat=1").is_err()); // unknown param
+        assert!(build_sampler("grouped:group=0").is_err()); // zero-sized
+        assert!(build_sampler("grouped:group=abc").is_err()); // non-numeric
+        assert!(build_sampler("topk:k").is_err()); // missing '='
+        assert!(build_sampler("multinomial:x=1").is_err()); // takes none
+        assert!(build_sampler("grouped:group=8,group=64").is_err()); // dup
+        assert!(build_sampler("topk:p=nan").is_err()); // out-of-range mass
+        assert!(build_sampler("topk:p=0").is_err());
+        assert!(build_sampler("topk:p=1.5").is_err());
+        assert!(build_sampler("topk:p=1.0").is_ok());
+    }
+
+    #[test]
+    fn zero_mass_rows_return_none_for_all_samplers() {
+        let logits = vec![1.0f32; 32];
+        let t = Transform {
+            temperature: 1.0,
+            bias: Some(vec![f32::NEG_INFINITY; 32]),
+        };
+        for s in default_samplers() {
+            let ctx = RowCtx { transform: &t, key: Key::new(3, 4), row: 0, step: 0 };
+            assert_eq!(s.sample_row(&logits, ctx), None, "{}", s.name());
+        }
+    }
+
+    #[test]
+    fn sample_batch_rows_are_independent_of_batching() {
+        let key = Key::new(9, 1);
+        let t = Transform::default();
+        let vocab = 64usize;
+        let logits: Vec<f32> = (0..3 * vocab)
+            .map(|i| philox::uniform_at(key, i as u32, 7, 3, 0) - 0.5)
+            .collect();
+        for s in default_samplers() {
+            let batched = s.sample_batch(&logits, vocab, &t, key, 5);
+            assert_eq!(batched.len(), 3, "{}", s.name());
+            for (b, row) in logits.chunks_exact(vocab).enumerate() {
+                let solo = s.sample_row(
+                    row,
+                    RowCtx { transform: &t, key, row: b as u32, step: 5 },
+                );
+                assert_eq!(batched[b], solo, "{} row {b}", s.name());
+            }
+        }
     }
 }

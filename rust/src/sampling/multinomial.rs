@@ -7,7 +7,7 @@
 //! Table 1 / Figure 4 report.
 
 use super::philox::{self, Key};
-use super::Transform;
+use super::{Draw, ExactSampler, RowCtx, Transform};
 
 /// Full baseline pipeline over one row (Alg. A.1 lines 1-9).
 ///
@@ -89,6 +89,22 @@ pub fn probs(logits: &[f32], transform: &Transform) -> Vec<f64> {
         .collect();
     let z: f64 = e.iter().sum();
     e.into_iter().map(|x| x / z).collect()
+}
+
+/// [`ExactSampler`] adapter over Algorithm A.1 — registry name
+/// `multinomial` (the materialized-logits baseline; no parameters).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MultinomialSampler;
+
+impl ExactSampler for MultinomialSampler {
+    fn name(&self) -> &'static str {
+        "multinomial"
+    }
+
+    fn sample_row(&self, logits: &[f32], ctx: RowCtx<'_>) -> Option<Draw> {
+        sample_row(logits, ctx.transform, ctx.key, ctx.row, ctx.step)
+            .map(|index| Draw { index, log_z: None })
+    }
 }
 
 #[cfg(test)]

@@ -7,7 +7,7 @@
 
 use super::grouped::GroupSummary;
 use super::philox::{self, Key};
-use super::{log_add_exp, Transform};
+use super::{log_add_exp, Draw, ExactSampler, RowCtx, Transform};
 
 /// Running state of the online sampler: (L_run, z) of Algorithm I.3.
 #[derive(Clone, Copy, Debug)]
@@ -94,6 +94,38 @@ pub fn sample_row(
     state.map(|s| (s.sample, s.log_mass))
 }
 
+/// [`ExactSampler`] adapter over Algorithm I.3 — registry name `online`.
+/// Spec example: `"online:group=64"`.
+#[derive(Clone, Copy, Debug)]
+pub struct OnlineSampler {
+    /// Vocabulary positions streamed per group (the working-set bound).
+    pub group_size: usize,
+}
+
+impl Default for OnlineSampler {
+    fn default() -> Self {
+        Self { group_size: super::grouped::DEFAULT_GROUP }
+    }
+}
+
+impl ExactSampler for OnlineSampler {
+    fn name(&self) -> &'static str {
+        "online"
+    }
+
+    fn sample_row(&self, logits: &[f32], ctx: RowCtx<'_>) -> Option<Draw> {
+        sample_row(
+            logits,
+            self.group_size,
+            ctx.transform,
+            ctx.key,
+            ctx.row,
+            ctx.step,
+        )
+        .map(|(index, log_z)| Draw { index, log_z: Some(log_z) })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -144,6 +176,54 @@ mod tests {
         }
         let pval = super::super::stats::chi_squared_pvalue(&counts, &p, n as u64);
         assert!(pval > 1e-3, "Alg I.3 GoF rejected: p={pval}");
+    }
+
+    /// Degenerate inputs: an empty stream has no groups to initialize the
+    /// state from, and an all-masked stream skips every group — both `None`.
+    #[test]
+    fn empty_and_all_masked_streams_are_none() {
+        let t = Transform::default();
+        assert_eq!(sample_row(&[], 8, &t, Key::new(1, 1), 0, 0), None);
+        let l = vec![0.0f32; 48];
+        let masked = Transform {
+            temperature: 1.0,
+            bias: Some(vec![f32::NEG_INFINITY; 48]),
+        };
+        assert_eq!(sample_row(&l, 16, &masked, Key::new(1, 1), 0, 0), None);
+    }
+
+    /// A zero-mass *leading* group must not initialize the running state:
+    /// the stream starts at the first live group and stays exact.
+    #[test]
+    fn zero_mass_leading_group_skipped() {
+        let l = vec![0.0f32; 96];
+        let mut bias = vec![0.0f32; 96];
+        for b in bias[..32].iter_mut() {
+            *b = f32::NEG_INFINITY; // first group dead
+        }
+        let t = Transform { temperature: 1.0, bias: Some(bias) };
+        for step in 0..30 {
+            let (s, lz) = sample_row(&l, 32, &t, Key::new(8, 8), 0, step).unwrap();
+            assert!((32..96).contains(&(s as usize)), "step {step}: {s}");
+            assert!((lz - log_sum_exp(&l[32..])).abs() < 1e-4);
+        }
+    }
+
+    /// The trait adapter draws from the same Philox streams as the module
+    /// function (pathwise identity across the `ExactSampler` boundary).
+    #[test]
+    fn trait_adapter_matches_module_fn() {
+        let l = toy_logits(180, 6);
+        let t = Transform::default();
+        let key = Key::new(21, 22);
+        let s = OnlineSampler { group_size: 40 };
+        for step in 0..20 {
+            let ctx = RowCtx { transform: &t, key, row: 1, step };
+            let via_trait = s.sample_row(&l, ctx).unwrap();
+            let (idx, lz) = sample_row(&l, 40, &t, key, 1, step).unwrap();
+            assert_eq!(via_trait.index, idx);
+            assert_eq!(via_trait.log_z, Some(lz));
+        }
     }
 
     #[test]

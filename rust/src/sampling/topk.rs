@@ -9,7 +9,13 @@
 //! use, §D.6).
 
 use super::philox::{self, Key};
-use super::Transform;
+use super::{Draw, ExactSampler, RowCtx, Transform};
+
+/// Default candidate-set size of the registry's `topk` spec.
+pub const DEFAULT_K: usize = 8;
+/// Default vocabulary tile of the registry's `topk` spec (matches the
+/// fused kernel's tile).
+pub const DEFAULT_TILE_V: usize = 2048;
 
 /// A perturbed-score candidate (global index + score + raw logit).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -156,6 +162,50 @@ pub fn sample_from_candidates(
     kept.last().map(|&i| items[i].index)
 }
 
+/// [`ExactSampler`] adapter over the Gumbel-Top-k candidate reduction
+/// (Appendix D.6) — registry name `topk`.
+///
+/// Unlike the other five samplers this draws from the *k-candidate
+/// truncated* distribution (optionally nucleus-truncated further by
+/// `top_p`), which is the documented semantics of the top-k-then-top-p
+/// strategy — exact over the reduced support, not over the full
+/// categorical.  Spec example: `"topk:k=8,p=0.95,tile=2048"`.
+#[derive(Clone, Copy, Debug)]
+pub struct GumbelTopKSampler {
+    /// Candidates kept per row (k >= 1).
+    pub k: usize,
+    /// Nucleus mass applied over the candidate set (1.0 = keep all).
+    pub top_p: f32,
+    /// Stage-1 vocabulary tile size.
+    pub tile_v: usize,
+}
+
+impl Default for GumbelTopKSampler {
+    fn default() -> Self {
+        Self { k: DEFAULT_K, top_p: 1.0, tile_v: DEFAULT_TILE_V }
+    }
+}
+
+impl ExactSampler for GumbelTopKSampler {
+    fn name(&self) -> &'static str {
+        "topk"
+    }
+
+    fn sample_row(&self, logits: &[f32], ctx: RowCtx<'_>) -> Option<Draw> {
+        let tk = topk_tiled(
+            logits,
+            ctx.transform,
+            ctx.key,
+            ctx.row,
+            ctx.step,
+            self.k,
+            self.tile_v,
+        );
+        sample_from_candidates(&tk, self.top_p, ctx.key, ctx.row, ctx.step)
+            .map(|index| Draw { index, log_z: None })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -210,6 +260,52 @@ mod tests {
             .max_by(|a, b| a.logit.partial_cmp(&b.logit).unwrap())
             .unwrap();
         assert_eq!(s, best.index);
+    }
+
+    /// Single-element vocabulary: the only candidate must always win, for
+    /// any k, any top_p, and any tiling — and an all-masked single element
+    /// yields no sample at all.
+    #[test]
+    fn single_element_vocab() {
+        let l = [0.75f32];
+        let t = Transform::default();
+        let key = Key::new(40, 41);
+        for k in [1usize, 2, 8] {
+            for tile in [1usize, 7, 2048] {
+                let tk = topk_tiled(&l, &t, key, 0, 0, k, tile);
+                assert_eq!(tk.items().len(), 1, "k={k} tile={tile}");
+                assert_eq!(tk.items()[0].index, 0);
+                for p in [1e-9f32, 0.5, 1.0] {
+                    let s = sample_from_candidates(&tk, p, key, 0, 0);
+                    assert_eq!(s, Some(0), "k={k} tile={tile} p={p}");
+                }
+            }
+        }
+        let masked = Transform {
+            temperature: 1.0,
+            bias: Some(vec![f32::NEG_INFINITY]),
+        };
+        let tk = topk_monolithic(&l, &masked, key, 0, 0, 4);
+        assert!(tk.items().is_empty());
+        assert_eq!(sample_from_candidates(&tk, 1.0, key, 0, 0), None);
+    }
+
+    /// The trait adapter draws from the same Philox streams as the module
+    /// functions (pathwise identity across the `ExactSampler` boundary).
+    #[test]
+    fn trait_adapter_matches_module_fns() {
+        let l = toy_logits(300, 9);
+        let t = Transform::default();
+        let key = Key::new(50, 51);
+        let s = GumbelTopKSampler { k: 8, top_p: 0.9, tile_v: 64 };
+        for step in 0..20 {
+            let ctx = RowCtx { transform: &t, key, row: 2, step };
+            let via_trait = s.sample_row(&l, ctx).unwrap();
+            let tk = topk_tiled(&l, &t, key, 2, step, 8, 64);
+            let manual = sample_from_candidates(&tk, 0.9, key, 2, step).unwrap();
+            assert_eq!(via_trait.index, manual);
+            assert_eq!(via_trait.log_z, None);
+        }
     }
 
     /// Tile decomposition of Gumbel-Top-k is exact for any tiling.

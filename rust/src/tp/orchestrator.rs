@@ -12,7 +12,9 @@ use anyhow::{Context, Result};
 
 use super::interconnect::{Interconnect, Message};
 use crate::runtime::{Runtime, Tensor};
-use crate::sampling::{distributed, gumbel, multinomial, Key, Transform};
+#[allow(unused_imports)]
+use crate::sampling::ExactSampler;
+use crate::sampling::{build_sampler, distributed, Key, Transform};
 
 /// Communication strategy (the paper's comparison axis).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -24,6 +26,19 @@ pub enum Strategy {
     AllGatherMultinomial,
     /// Baseline: all-gather, then Gumbel-Max on materialized logits (FI2).
     AllGatherGumbel,
+}
+
+impl Strategy {
+    /// `ExactSampler` registry spec of the leader-side sampling pass this
+    /// strategy runs over materialized logits; `None` for the fan-out
+    /// path, which merges per-rank summaries instead of re-sampling.
+    pub fn leader_sampler_spec(self) -> Option<&'static str> {
+        match self {
+            Strategy::P2pFanout => None,
+            Strategy::AllGatherMultinomial => Some("multinomial"),
+            Strategy::AllGatherGumbel => Some("gumbel"),
+        }
+    }
 }
 
 /// Orchestrator configuration.
@@ -223,25 +238,18 @@ impl TpOrchestrator {
                     }
                 }
                 // ...then run the separate sampling pass (the extra kernels
-                // the baseline pays for).
+                // the baseline pays for), selected by registry spec — the
+                // same seam the benches and repro tables use.
+                let spec = strategy
+                    .leader_sampler_spec()
+                    .context("all-gather strategy without a leader sampler")?;
+                let sampler = build_sampler(spec)?;
                 let t = Transform::with_temperature(tau);
-                let samples = if strategy == Strategy::AllGatherGumbel {
-                    gumbel::sample_batch(&logits, self.cfg.vocab, &t, self.key, step)
-                        .into_iter()
-                        .map(|s| s.context("empty row").map(|g| g.index as i32))
-                        .collect::<Result<Vec<i32>>>()?
-                } else {
-                    multinomial::sample_batch(
-                        &logits,
-                        self.cfg.vocab,
-                        &t,
-                        self.key,
-                        step,
-                    )
+                let samples = sampler
+                    .sample_batch(&logits, self.cfg.vocab, &t, self.key, step)
                     .into_iter()
-                    .map(|s| s.context("empty row").map(|x| x as i32))
-                    .collect::<Result<Vec<i32>>>()?
-                };
+                    .map(|d| d.context("empty row").map(|d| d.index as i32))
+                    .collect::<Result<Vec<i32>>>()?;
                 Ok(TpStepResult { samples, log_z: None, wire_bytes })
             }
         }
