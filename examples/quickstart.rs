@@ -30,8 +30,8 @@ fn main() -> anyhow::Result<()> {
             Tensor::F32(h.clone(), vec![b, d]),
             Tensor::F32(w.clone(), vec![v, d]),
             Tensor::seed(key),
-            Tensor::scalar_u32(0),   // decode step
-            Tensor::scalar_f32(0.8), // temperature
+            Tensor::scalar_u32(0),            // decode step
+            Tensor::F32(vec![0.8; b], vec![b]), // per-row temperature (ABI v2)
         ],
     )?;
     let samples = out[0].as_i32()?;

@@ -10,21 +10,28 @@
 //! ```
 
 use flashsampling::coordinator::{Engine, EngineConfig};
+use flashsampling::sampling::SamplerSpec;
 use flashsampling::workload::{LengthDist, WorkloadGen};
 
 fn run(baseline: bool, concurrency: usize, n_requests: usize) -> anyhow::Result<()> {
     let mut engine = Engine::new(
         "artifacts",
         EngineConfig {
-            baseline_sampler: baseline,
+            sampler: if baseline {
+                SamplerSpec::Multinomial
+            } else {
+                SamplerSpec::default()
+            },
             max_concurrency: concurrency,
             ..Default::default()
         },
     )?;
     let vocab = engine.runtime().manifest().model.vocab;
     // Poisson arrivals at rate = concurrency (the paper's protocol:
-    // --request-rate=B with --max-concurrency=B).
+    // --request-rate=B with --max-concurrency=B), from a mixed-temperature
+    // client population (per-row tau batches them together).
     let mut gen = WorkloadGen::new(42, concurrency as f64, vocab);
+    gen.temperature_choices = vec![0.5, 0.7, 1.0, 1.3];
     gen.prompt_len = LengthDist::Uniform(8, 48);
     gen.output_len = LengthDist::Uniform(16, 48);
     let reqs = gen.generate(n_requests);

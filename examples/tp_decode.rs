@@ -45,7 +45,8 @@ fn main() -> anyhow::Result<()> {
             (Strategy::AllGatherGumbel, "all-gather + Gumbel-Max"),
             (Strategy::AllGatherMultinomial, "all-gather + multinomial"),
         ] {
-            let out = orch.step(&h, 0, 1.0, strategy)?;
+            // tau: [B] — uniform here; per-row in mixed-client serving.
+            let out = orch.step(&h, 0, &vec![1.0; b], strategy)?;
             println!(
                 "  {name:<32} samples {:?}  wire bytes {:>8}",
                 out.samples, out.wire_bytes

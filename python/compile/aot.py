@@ -13,6 +13,7 @@ Outputs under artifacts/:
 
 Manifest schema:
   {
+    "version": ABI version int (2 = per-row tau; see TAU_ABI_VERSION),
     "model": {"vocab":…, "d_model":…, "n_layers":…, "n_heads":…, "ffn":…,
               "max_seq":…, "param_order": [names…]},
     "artifacts": [
@@ -49,6 +50,12 @@ from compile.kernels import ref as kref
 # ---------------------------------------------------------------------------
 
 SERVE_CFG = model_lib.ModelConfig()
+
+# Artifact ABI version, mirrored by rust/src/runtime/manifest.rs
+# (TAU_ABI_VERSION).  v2: every sampling artifact takes `tau` as a [B]
+# per-row temperature vector instead of a scalar — the change that lets the
+# scheduler coalesce mixed-temperature requests into one batch.
+TAU_ABI_VERSION = 2
 
 # Decode batch buckets: the continuous batcher pads the running batch up to
 # the nearest bucket (vLLM uses CUDA-graph capture sizes the same way).
@@ -159,30 +166,31 @@ def build_sampler_artifacts(b: Builder):
         tag = f"b{bsz}_d{d}_v{v}"
         meta = {"B": bsz, "D": d, "V": v, "tile_v": tile_v}
 
+        # tau is a [B] per-row vector everywhere (ABI v2).
         def fused(h, w, seed, step, tau, _tile_v=tile_v):
-            out = fs.flash_sample(h, w, seed, step[0], tau[0], tile_v=_tile_v)
+            out = fs.flash_sample(h, w, seed, step[0], tau, tile_v=_tile_v)
             return out.sample
 
         def fused_logz(h, w, seed, step, tau, _tile_v=tile_v):
             out = fs.flash_sample(
-                h, w, seed, step[0], tau[0], tile_v=_tile_v, want_log_z=True
+                h, w, seed, step[0], tau, tile_v=_tile_v, want_log_z=True
             )
             return out.sample, out.log_z
 
         def baseline(h, w, seed, step, tau):
-            return kref.multinomial_sample(h, w, seed, step[0], tau[0])
+            return kref.multinomial_sample(h, w, seed, step[0], tau)
 
         def gumbel_ref(h, w, seed, step, tau):
             # FI2-style: materialized logits + Gumbel-Max (no fusion).
-            return kref.gumbel_max_sample(h, w, seed, step[0], tau[0])
+            return kref.gumbel_max_sample(h, w, seed, step[0], tau)
 
         def store_logits(h, w, seed, step, tau, _tile_v=tile_v):
             s, logits = fs.flash_sample_store_logits(
-                h, w, seed, step[0], tau[0], tile_v=_tile_v
+                h, w, seed, step[0], tau, tile_v=_tile_v
             )
             return s, logits
 
-        specs = [f32(bsz, d), f32(v, d), u32(2), u32(1), f32(1)]
+        specs = [f32(bsz, d), f32(v, d), u32(2), u32(1), f32(bsz)]
         names = ["h", "w", "seed", "step", "tau"]
         b.add(f"flash_sample_{tag}", "flash_sample", fused, specs, names, meta)
         b.add(f"flash_sample_logz_{tag}", "flash_sample_logz", fused_logz, specs,
@@ -206,7 +214,7 @@ def build_tp_artifacts(b: Builder):
 
             def shard(h, w_shard, off, seed, step, tau, _tile_v=tile_v):
                 m, local, lmass = fs.shard_candidates(
-                    h, w_shard, off[0], seed, step[0], tau[0], tile_v=_tile_v
+                    h, w_shard, off[0], seed, step[0], tau, tile_v=_tile_v
                 )
                 return m, local, lmass
 
@@ -214,7 +222,7 @@ def build_tp_artifacts(b: Builder):
                 f"shard_sample_{tag}",
                 "shard_sample",
                 shard,
-                [f32(bsz, d), f32(vs, d), i32(1), u32(2), u32(1), f32(1)],
+                [f32(bsz, d), f32(vs, d), i32(1), u32(2), u32(1), f32(bsz)],
                 ["h", "w_shard", "shard_offset", "seed", "step", "tau"],
                 {"B": bsz, "D": d, "V": v, "V_shard": vs, "n_shards": n,
                  "tile_v": tile_v},
@@ -253,18 +261,19 @@ def build_model_artifacts(b: Builder, cfg: model_lib.ModelConfig):
             params = dict(zip(cfg.param_order(), args[:n_params]))
             kv_k, kv_v, pos, token, seed, step, tau = args[n_params:]
             return model_lib.decode_and_sample(
-                cfg, params, kv_k, kv_v, pos, token, seed, step[0], tau[0]
+                cfg, params, kv_k, kv_v, pos, token, seed, step[0], tau
             )
 
         def baseline(*args, _b=bsz):
             params = dict(zip(cfg.param_order(), args[:n_params]))
             kv_k, kv_v, pos, token, seed, step, tau = args[n_params:]
             return model_lib.decode_and_sample_baseline(
-                cfg, params, kv_k, kv_v, pos, token, seed, step[0], tau[0]
+                cfg, params, kv_k, kv_v, pos, token, seed, step[0], tau
             )
 
         specs = param_specs + [
-            kv_spec(bsz), kv_spec(bsz), i32(bsz), i32(bsz), u32(2), u32(1), f32(1)
+            kv_spec(bsz), kv_spec(bsz), i32(bsz), i32(bsz), u32(2), u32(1),
+            f32(bsz)
         ]
         names = list(cfg.param_order()) + [
             "kv_k", "kv_v", "pos", "token", "seed", "step", "tau"
@@ -289,15 +298,17 @@ def build_model_artifacts(b: Builder, cfg: model_lib.ModelConfig):
         )
 
     # First-token sampler (hidden -> token) shared across prefill buckets.
+    # tau: [B] — each prompt's own temperature (the prefill first-token
+    # bug fix rides on this).
     def first_token(hidden, lm_head, seed, step, tau):
-        return fs.flash_sample(hidden, lm_head, seed, step[0], tau[0]).sample
+        return fs.flash_sample(hidden, lm_head, seed, step[0], tau).sample
 
     b.add(
         f"sample_hidden_b{PREFILL_B}",
         "sample_hidden",
         first_token,
         [f32(PREFILL_B, cfg.d_model), f32(cfg.vocab, cfg.d_model), u32(2),
-         u32(1), f32(1)],
+         u32(1), f32(PREFILL_B)],
         ["hidden", "lm_head", "seed", "step", "tau"],
         {"B": PREFILL_B, "D": cfg.d_model, "V": cfg.vocab},
     )
@@ -336,6 +347,7 @@ def main():
     all_artifacts = sorted(merged.values(), key=lambda a: a["name"])
 
     manifest = {
+        "version": TAU_ABI_VERSION,
         "model": {
             "vocab": SERVE_CFG.vocab,
             "d_model": SERVE_CFG.d_model,

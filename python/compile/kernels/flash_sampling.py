@@ -107,8 +107,10 @@ def _stage1_kernel(
     )  # [tile_b, tile_v]
 
     # --- deterministic transforms (Alg.1 line 3).
-    tau = tau_ref[0]
-    y = y / tau + bias_ref[...][None, :]
+    # tau is per-row (the tau: [B] ABI): this tile sees its batch-tile's
+    # slice, broadcast over the vocab axis.
+    tau = tau_ref[...]
+    y = y / tau[:, None] + bias_ref[...][None, :]
 
     # Global coordinates of this tile's elements.
     i_global = (vt * tile_v + jnp.arange(tile_v, dtype=jnp.int32))[None, :]
@@ -165,7 +167,8 @@ def stage1_candidates(
       w: [V, D] LM-head weights.
       seed: uint32[2] RNG key.
       step: int32 decode step (fresh noise per autoregressive step).
-      temperature: softmax temperature tau > 0 (scalar or 0-d array).
+      temperature: softmax temperature(s) tau > 0 — a scalar (uniform batch)
+        or a [B] vector (per-row tau, the ABI v2 form); scalars broadcast.
       bias: optional [V] additive logit bias (also used for -inf masking).
 
     Returns:
@@ -196,7 +199,13 @@ def stage1_candidates(
 
     seed = jnp.asarray(seed, jnp.uint32).reshape(2)
     step_arr = jnp.asarray(step, jnp.uint32).reshape(1)
-    tau_arr = jnp.asarray(temperature, jnp.float32).reshape(1)
+    # tau: [B] — broadcast scalars, then pad rows at tau=1 (padded rows are
+    # dropped after the call; tau=1 just keeps the division well-defined).
+    tau_arr = jnp.broadcast_to(
+        jnp.asarray(temperature, jnp.float32).reshape(-1), (batch,)
+    )
+    if pb:
+        tau_arr = jnp.pad(tau_arr, (0, pb), constant_values=1.0)
 
     kernel = functools.partial(
         _stage1_kernel,
@@ -227,7 +236,7 @@ def stage1_candidates(
             pl.BlockSpec((tile_v, d), lambda bi, vi: (vi, 0)),  # W vocab tile
             pl.BlockSpec((2,), lambda bi, vi: (0,)),  # seed
             pl.BlockSpec((1,), lambda bi, vi: (0,)),  # step
-            pl.BlockSpec((1,), lambda bi, vi: (0,)),  # tau
+            pl.BlockSpec((tile_b,), lambda bi, vi: (bi,)),  # tau row tile
             pl.BlockSpec((tile_v,), lambda bi, vi: (vi,)),  # bias tile
         ],
         out_shape=out_shapes,
@@ -371,7 +380,12 @@ def shard_candidates(
 
     seed = jnp.asarray(seed, jnp.uint32).reshape(2)
     step_arr = jnp.asarray(step, jnp.uint32).reshape(1)
-    tau_arr = jnp.asarray(temperature, jnp.float32).reshape(1)
+    # tau: [B] per-row, padded like the batch rows (see stage1_candidates).
+    tau_arr = jnp.broadcast_to(
+        jnp.asarray(temperature, jnp.float32).reshape(-1), (batch,)
+    )
+    if pb:
+        tau_arr = jnp.pad(tau_arr, (0, pb), constant_values=1.0)
     off_arr = jnp.asarray(shard_offset, jnp.int32).reshape(1)
 
     def kernel(h_ref, w_ref, seed_ref, step_ref, tau_ref, off_ref, m_ref, idx_ref, lm_ref):
@@ -384,7 +398,7 @@ def shard_candidates(
         y = jax.lax.dot_general(
             hh, ww, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         )
-        y = y / tau_ref[0]
+        y = y / tau_ref[...][:, None]
         i_local = (vt * tv + jnp.arange(tv, dtype=jnp.int32))[None, :]
         i_global = i_local + off_ref[0]
         b_global = (bt * tb + jnp.arange(tb, dtype=jnp.int32))[:, None]
@@ -420,7 +434,7 @@ def shard_candidates(
             pl.BlockSpec((tile_v, d), lambda bi, vi: (vi, 0)),
             pl.BlockSpec((2,), lambda bi, vi: (0,)),
             pl.BlockSpec((1,), lambda bi, vi: (0,)),
-            pl.BlockSpec((1,), lambda bi, vi: (0,)),
+            pl.BlockSpec((tile_b,), lambda bi, vi: (bi,)),  # tau row tile
             pl.BlockSpec((1,), lambda bi, vi: (0,)),
         ],
         out_shape=out_shapes,

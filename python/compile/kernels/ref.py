@@ -19,8 +19,13 @@ def transform_logits(y, temperature=1.0, bias=None, mask=None):
 
     Matches the paper's `transform(.)` in Algorithm 1 line 3.  `mask` is a
     boolean array; False entries get probability zero (logit -> -inf).
+    `temperature` is a scalar (uniform) or a [B] vector applied per row —
+    the oracle side of the tau: [B] ABI.
     """
-    y = y.astype(jnp.float32) / jnp.float32(temperature)
+    tau = jnp.asarray(temperature, jnp.float32)
+    if tau.ndim == 1:
+        tau = tau[:, None]  # [B] -> broadcast over the vocab axis
+    y = y.astype(jnp.float32) / tau
     if bias is not None:
         y = y + bias.astype(jnp.float32)
     if mask is not None:

@@ -229,7 +229,11 @@ def prefill(cfg: ModelConfig, params, tokens, lengths):
 
 def decode_and_sample(cfg: ModelConfig, params, kv_k, kv_v, pos, token, seed, step,
                       temperature, tile_v=fs.DEFAULT_TILE_V):
-    """Fused decode step + FlashSampling LM head (the serving hot path)."""
+    """Fused decode step + FlashSampling LM head (the serving hot path).
+
+    `temperature` is a [B] per-row vector (scalars broadcast) — the
+    tau: [B] ABI that lets mixed-temperature requests share a batch.
+    """
     kv_k, kv_v, hidden = decode_step(cfg, params, kv_k, kv_v, pos, token)
     out = fs.flash_sample(
         hidden, params["lm_head"], seed, step, temperature, tile_v=tile_v
@@ -251,7 +255,7 @@ def decode_and_sample_baseline(cfg: ModelConfig, params, kv_k, kv_v, pos, token,
 def sample_from_hidden(cfg: ModelConfig, params, hidden, seed, step, temperature,
                        tile_v=fs.DEFAULT_TILE_V):
     """LM head + FlashSampling from a precomputed hidden state (used after
-    prefill to sample the first output token)."""
+    prefill to sample the first output token; `temperature` is per-row)."""
     out = fs.flash_sample(
         hidden, params["lm_head"], seed, step, temperature, tile_v=tile_v
     )

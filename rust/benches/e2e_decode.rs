@@ -8,7 +8,7 @@
 use flashsampling::benchutil::{bench_slow, black_box};
 use flashsampling::coordinator::{Engine, EngineConfig, Request, SamplingParams};
 use flashsampling::runtime::{Runtime, Tensor};
-use flashsampling::sampling::Key;
+use flashsampling::sampling::{Key, SamplerSpec};
 
 fn main() {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -31,7 +31,7 @@ fn main() {
         let h = Tensor::F32(vec![0.1; b * d], vec![b, d]);
         let w = Tensor::F32(vec![0.01; v * d], vec![v, d]);
         let inputs = [h, w, Tensor::seed(key), Tensor::scalar_u32(0),
-                      Tensor::scalar_f32(1.0)];
+                      Tensor::F32(vec![1.0; b], vec![b])];
         for kind in ["flash_sample", "baseline_multinomial", "baseline_gumbel"] {
             let name = format!("{kind}_{tag}");
             if rt.manifest().find(&name).is_err() {
@@ -45,12 +45,11 @@ fn main() {
     }
 
     // Whole serving decode steps: fused vs baseline engine.
-    for baseline in [false, true] {
-        let mut engine = Engine::new(
-            &dir,
-            EngineConfig { baseline_sampler: baseline, ..Default::default() },
-        )
-        .unwrap();
+    for sampler in [SamplerSpec::default(), SamplerSpec::Multinomial] {
+        let baseline = sampler.uses_baseline_artifact();
+        let mut engine =
+            Engine::new(&dir, EngineConfig { sampler, ..Default::default() })
+                .unwrap();
         for i in 0..8u64 {
             engine
                 .submit(Request {

@@ -1,9 +1,11 @@
 //! Native sampler benchmarks (the Rust half of Tables 4/5's comparison),
-//! driven entirely through the `ExactSampler` registry.
+//! driven entirely through typed `SamplerSpec` selection.
 //!
 //! Measures per-token sampling cost across a batch × vocabulary grid for
-//! every registered paper sampler (selected by config string, never by
-//! hard-coded call sites), plus the tiled-gumbel variant.  Each row is the
+//! every registered paper sampler (specs parsed once, never hard-coded
+//! call sites) in two modes — `uniform` (`sample_batch`, one shared
+//! transform) and `per_row` (`sample_batch_rows`, mixed per-row
+//! temperatures) — plus the tiled-gumbel variant.  Each row is the
 //! sampler's FULL per-row pipeline — for `distributed` that includes
 //! computing every shard summary, not just the O(ranks) leader merge (the
 //! leader-merge-only cost is measured in `benches/tp_fanout.rs`).  Besides
@@ -16,7 +18,7 @@ use flashsampling::benchutil::{
 };
 #[allow(unused_imports)]
 use flashsampling::sampling::ExactSampler;
-use flashsampling::sampling::{build_sampler, philox, Key, Transform};
+use flashsampling::sampling::{philox, Key, RowCtx, SamplerSpec, Transform};
 use std::time::Duration;
 
 /// The benchmarked sampler specs: all six registry names (default
@@ -42,32 +44,38 @@ fn toy_logits(n: usize, seed: u64) -> Vec<f32> {
         .collect()
 }
 
-fn main() {
-    let key = Key::new(11, 22);
-    let t = Transform::default();
-    println!("## samplers — ns/token across the batch x vocab grid (via the ExactSampler registry)\n");
-
-    let mut records: Vec<String> = Vec::new();
+/// One full VOCABS x BATCHES x SPECS sweep.  `sample` runs the benched
+/// body for one (sampler, logits grid cell, step); everything else —
+/// record schema, timing config, labels — is shared so the uniform and
+/// per-row modes stay comparable by construction.
+fn run_grid(
+    mode: &str,
+    records: &mut Vec<String>,
+    sample: impl Fn(&dyn ExactSampler, &[f32], usize, usize, u32),
+) {
     for &vocab in &VOCABS {
         for &batch in &BATCHES {
             let logits = toy_logits(batch * vocab, 9);
-            for spec in SPECS {
-                let sampler = build_sampler(spec).expect("bench spec is valid");
+            for spec_str in SPECS {
+                // Config strings parse once into the typed SamplerSpec; the
+                // canonical Display form is what lands in the report.
+                let spec: SamplerSpec =
+                    spec_str.parse().expect("bench spec is valid");
+                let sampler = spec.build().expect("bench spec builds");
                 let mut step = 0u32;
-                let label = format!("{spec}/B={batch}/V={vocab}");
+                let label = format!("{spec}/B={batch}/V={vocab}/{mode}");
                 let result =
                     bench_with(&label, 15, Duration::from_millis(10), || {
                         step = step.wrapping_add(1);
-                        black_box(sampler.sample_batch(
-                            &logits, vocab, &t, key, step,
-                        ));
+                        sample(sampler.as_ref(), &logits, vocab, batch, step);
                     });
                 // One benched call samples `batch` tokens.
                 let ns_per_token =
                     result.median.as_nanos() as f64 / batch as f64;
                 let mut fields = vec![
                     ("sampler", json_str(sampler.name())),
-                    ("spec", json_str(spec)),
+                    ("spec", json_str(&spec.to_string())),
+                    ("mode", json_str(mode)),
                     ("batch", batch.to_string()),
                     ("vocab", vocab.to_string()),
                     ("ns_per_token", format!("{ns_per_token:.1}")),
@@ -79,13 +87,42 @@ fn main() {
             }
         }
     }
+}
+
+fn main() {
+    let key = Key::new(11, 22);
+    let t = Transform::default();
+    let mut records: Vec<String> = Vec::new();
+
+    println!("## samplers — ns/token across the batch x vocab grid (typed SamplerSpec selection)\n");
+    run_grid("uniform", &mut records, |s, logits, vocab, _batch, step| {
+        black_box(s.sample_batch(logits, vocab, &t, key, step));
+    });
+
+    // Per-row API: the same grid through sample_batch_rows with one
+    // transform per row (mixed temperatures) — the entry point the
+    // coalescing scheduler relies on.  The benched body includes building
+    // the per-row contexts, which IS the per-row API's real per-call cost;
+    // it must stay in the noise relative to the uniform path.
+    println!("\n## samplers/per-row — heterogeneous batches via sample_batch_rows\n");
+    run_grid("per_row", &mut records, |s, logits, vocab, batch, step| {
+        let transforms: Vec<Transform> = (0..batch)
+            .map(|b| Transform::with_temperature(0.5 + 0.25 * b as f32))
+            .collect();
+        let ctxs: Vec<RowCtx<'_>> = transforms
+            .iter()
+            .enumerate()
+            .map(|(b, tr)| RowCtx { transform: tr, key, row: b as u32, step })
+            .collect();
+        black_box(s.sample_batch_rows(logits, vocab, &ctxs));
+    });
 
     let out = std::env::var("BENCH_OUT")
         .unwrap_or_else(|_| "BENCH_samplers.json".to_string());
     let path = std::path::PathBuf::from(out);
     write_bench_report(&path, "samplers", &records).expect("writing report");
     println!(
-        "\nwrote {} ({} records: {} specs x {} batches x {} vocabs)",
+        "\nwrote {} ({} records: {} specs x {} batches x {} vocabs x 2 modes)",
         path.display(),
         records.len(),
         SPECS.len(),

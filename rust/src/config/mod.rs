@@ -12,8 +12,7 @@
 //! kv_blocks = 512
 //! kv_block_size = 16
 //! seed = 42
-//! baseline_sampler = false
-//! sampler = gumbel        # ExactSampler registry spec (see sampling docs)
+//! sampler = gumbel        # typed SamplerSpec grammar (see sampling docs)
 //! temperature = 1.0
 //! max_new_tokens = 64
 //! request_rate = 8.0
@@ -26,6 +25,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::EngineConfig;
+use crate::sampling::SamplerSpec;
 
 /// Full launcher configuration.
 #[derive(Clone, Debug, PartialEq)]
@@ -35,11 +35,22 @@ pub struct Config {
     pub kv_blocks: usize,
     pub kv_block_size: usize,
     pub seed: u64,
-    pub baseline_sampler: bool,
-    /// `ExactSampler` registry spec selecting the decode sampler
-    /// (`"gumbel"` = fused FlashSampling, `"multinomial"` = baseline).
-    pub sampler: String,
+    /// Typed sampler selection (`SamplerSpec::Gumbel { .. }` = fused
+    /// FlashSampling, `SamplerSpec::Multinomial` = baseline artifact).
+    /// Parsed once from the `sampler` config key.
+    pub sampler: SamplerSpec,
+    /// Deprecated `baseline_sampler` key.  `true` forces the baseline
+    /// artifact regardless of `sampler` — exactly the old independent
+    /// bool's `bool || spec` semantics, so key order never matters and
+    /// `false` never clobbers an explicit `sampler`.  Resolved into the
+    /// typed spec by [`Config::engine_config`].
+    pub baseline_override: bool,
     pub temperature: f32,
+    /// Non-empty: `serve` draws each request's temperature uniformly from
+    /// this set (comma-separated in the config file) — the mixed-client
+    /// workload the per-row tau ABI exists for.  Empty: uniform
+    /// `temperature`.
+    pub temperature_choices: Vec<f32>,
     pub max_new_tokens: usize,
     /// Open-loop arrival rate (req/s) for `serve`.
     pub request_rate: f64,
@@ -56,9 +67,10 @@ impl Default for Config {
             kv_blocks: 512,
             kv_block_size: 16,
             seed: 42,
-            baseline_sampler: false,
-            sampler: "gumbel".to_string(),
+            sampler: SamplerSpec::default(),
+            baseline_override: false,
             temperature: 1.0,
+            temperature_choices: Vec::new(),
             max_new_tokens: 32,
             request_rate: 8.0,
             num_requests: 32,
@@ -86,18 +98,31 @@ impl Config {
                 "kv_blocks" => self.kv_blocks = v.parse()?,
                 "kv_block_size" => self.kv_block_size = v.parse()?,
                 "seed" => self.seed = v.parse()?,
-                "baseline_sampler" => self.baseline_sampler = v.parse()?,
+                // Deprecated: pre-typed boolean A/B switch, preserved
+                // with its original `bool || spec` semantics (see the
+                // `baseline_override` field docs).
+                "baseline_sampler" => self.baseline_override = v.parse()?,
                 "sampler" => {
-                    // Validate at parse time, with the engine's constraint
-                    // (only artifact-backed specs are servable).
+                    // Parse ONCE at the config boundary, with the engine's
+                    // constraint (only artifact-backed specs are servable).
+                    let spec: SamplerSpec = v
+                        .parse()
+                        .with_context(|| format!("config key 'sampler' = '{v}'"))?;
                     let mut probe = self.engine_config();
-                    probe.sampler = v.clone();
+                    probe.sampler = spec.clone();
                     probe
                         .validate_sampler()
                         .with_context(|| format!("config key 'sampler' = '{v}'"))?;
-                    self.sampler = v;
+                    self.sampler = spec;
                 }
                 "temperature" => self.temperature = v.parse()?,
+                "temperature_choices" => {
+                    self.temperature_choices = v
+                        .split(',')
+                        .filter(|s| !s.trim().is_empty())
+                        .map(|s| s.trim().parse::<f32>().map_err(Into::into))
+                        .collect::<Result<Vec<f32>>>()?;
+                }
                 "max_new_tokens" => self.max_new_tokens = v.parse()?,
                 "request_rate" => self.request_rate = v.parse()?,
                 "num_requests" => self.num_requests = v.parse()?,
@@ -105,8 +130,11 @@ impl Config {
                 other => bail!("unknown config key '{other}'"),
             }
         }
-        if self.temperature <= 0.0 {
-            bail!("temperature must be > 0");
+        if !(self.temperature > 0.0 && self.temperature.is_finite()) {
+            bail!("temperature must be finite and > 0");
+        }
+        if self.temperature_choices.iter().any(|&t| t <= 0.0 || !t.is_finite()) {
+            bail!("temperature_choices must all be finite and > 0");
         }
         if self.max_concurrency == 0 {
             bail!("max_concurrency must be >= 1");
@@ -120,8 +148,13 @@ impl Config {
             kv_blocks: self.kv_blocks,
             kv_block_size: self.kv_block_size,
             seed: self.seed,
-            baseline_sampler: self.baseline_sampler,
-            sampler: self.sampler.clone(),
+            // The deprecated bool forces the baseline artifact; otherwise
+            // the typed spec stands (the old `bool || spec` A/B rule).
+            sampler: if self.baseline_override {
+                SamplerSpec::Multinomial
+            } else {
+                self.sampler.clone()
+            },
         }
     }
 }
@@ -167,23 +200,54 @@ mod tests {
         c.apply_pairs(parse_pairs("seed = 7\nbaseline_sampler = true").unwrap())
             .unwrap();
         assert_eq!(c.seed, 7);
-        assert!(c.baseline_sampler);
+        // The deprecated key resolves at engine_config() time, `bool ||
+        // spec` — it never rewrites the typed sampler field.
+        assert_eq!(c.sampler, SamplerSpec::default());
+        assert!(c.engine_config().uses_baseline_artifact());
+        c.apply_pairs(parse_pairs("baseline_sampler = false").unwrap())
+            .unwrap();
+        assert!(!c.engine_config().uses_baseline_artifact());
+        // `false` must NOT clobber an explicitly configured spec, in
+        // either direction and in any key order (it was an independent
+        // bool before the typed redesign).
+        c.apply_pairs(parse_pairs("sampler = gumbel:tile=512").unwrap())
+            .unwrap();
+        c.apply_pairs(parse_pairs("baseline_sampler = false").unwrap())
+            .unwrap();
+        assert_eq!(c.sampler, SamplerSpec::Gumbel { tile: Some(512) });
+        c.apply_pairs(parse_pairs("sampler = multinomial").unwrap()).unwrap();
+        c.apply_pairs(parse_pairs("baseline_sampler = false").unwrap())
+            .unwrap();
+        assert!(c.engine_config().uses_baseline_artifact(), "explicit spec stands");
+        // ...while `true` forces the baseline over any fused spec.
+        c.apply_pairs(parse_pairs("sampler = gumbel:tile=512").unwrap())
+            .unwrap();
+        c.apply_pairs(parse_pairs("baseline_sampler = true").unwrap())
+            .unwrap();
+        assert!(c.engine_config().uses_baseline_artifact());
+        assert_eq!(c.sampler, SamplerSpec::Gumbel { tile: Some(512) });
         assert!(c
             .apply_pairs(parse_pairs("bogus_key = 1").unwrap())
             .is_err());
         assert!(c
             .apply_pairs(parse_pairs("temperature = 0").unwrap())
             .is_err());
+        assert!(c
+            .apply_pairs(parse_pairs("temperature = nan").unwrap())
+            .is_err());
+        assert!(c
+            .apply_pairs(parse_pairs("temperature = inf").unwrap())
+            .is_err());
     }
 
     #[test]
     fn sampler_key_is_registry_validated() {
         let mut c = Config::default();
-        assert_eq!(c.sampler, "gumbel");
+        assert_eq!(c.sampler, SamplerSpec::default());
         c.apply_pairs(parse_pairs("sampler = gumbel:tile=2048").unwrap())
             .unwrap();
-        assert_eq!(c.sampler, "gumbel:tile=2048");
-        assert_eq!(c.engine_config().sampler, "gumbel:tile=2048");
+        assert_eq!(c.sampler, SamplerSpec::Gumbel { tile: Some(2048) });
+        assert_eq!(c.engine_config().sampler.to_string(), "gumbel:tile=2048");
         // Unknown sampler names and malformed params fail at parse time.
         assert!(c
             .apply_pairs(parse_pairs("sampler = frobnicate").unwrap())
@@ -197,10 +261,29 @@ mod tests {
             .apply_pairs(parse_pairs("sampler = grouped:group=64").unwrap())
             .is_err());
         // A failed apply must not clobber the previous value.
-        assert_eq!(c.sampler, "gumbel:tile=2048");
+        assert_eq!(c.sampler, SamplerSpec::Gumbel { tile: Some(2048) });
         // The baseline artifact can be selected by spec alone.
         c.apply_pairs(parse_pairs("sampler = multinomial").unwrap()).unwrap();
         assert!(c.engine_config().uses_baseline_artifact());
+    }
+
+    #[test]
+    fn temperature_choices_parse_and_validate() {
+        let mut c = Config::default();
+        c.apply_pairs(parse_pairs("temperature_choices = 0.5, 1.0,2.0").unwrap())
+            .unwrap();
+        assert_eq!(c.temperature_choices, vec![0.5, 1.0, 2.0]);
+        assert!(c
+            .apply_pairs(parse_pairs("temperature_choices = 0.5,0").unwrap())
+            .is_err());
+        assert!(c
+            .apply_pairs(parse_pairs("temperature_choices = abc").unwrap())
+            .is_err());
+        // Empty value clears the set (back to uniform `temperature`).
+        c.apply_pairs(parse_pairs("temperature_choices = 1.5").unwrap())
+            .unwrap();
+        c.apply_pairs(parse_pairs("temperature_choices =").unwrap()).unwrap();
+        assert!(c.temperature_choices.is_empty());
     }
 
     #[test]

@@ -23,7 +23,7 @@ use super::scheduler::{plan, Plan, SchedulerConfig};
 use crate::kvcache::{KvCacheConfig, KvCacheManager};
 use crate::metrics::ServingMetrics;
 use crate::runtime::{Runtime, Tensor};
-use crate::sampling::Key;
+use crate::sampling::{Key, SamplerSpec};
 use crate::workload::RequestSpec;
 
 /// Engine configuration.
@@ -36,19 +36,16 @@ pub struct EngineConfig {
     pub kv_block_size: usize,
     /// RNG seed for the whole serving session.
     pub seed: u64,
-    /// Use the baseline (materialized-logits multinomial) decode artifact
-    /// instead of FlashSampling — the paper's §4.5 A/B switch.  Shorthand
-    /// for `sampler = "multinomial"`; either setting flips the artifact.
-    pub baseline_sampler: bool,
-    /// `ExactSampler` registry spec selecting the decode sampling
-    /// algorithm (`crate::sampling::build_sampler` grammar).  The decode
-    /// path is implemented by AOT artifacts, of which there are two:
-    /// `"gumbel"` maps to the fused FlashSampling decode artifact and
-    /// `"multinomial"` to the baseline decode artifact.  Any other
-    /// registry sampler (grouped/online/distributed/topk — host-side
-    /// algorithms used by the TP leader, benches, and repro tables) is
-    /// rejected at engine construction rather than silently substituted.
-    pub sampler: String,
+    /// Typed sampler selection — the one source of truth for which decode
+    /// artifact family runs.  The decode path is implemented by AOT
+    /// artifacts, of which there are two: [`SamplerSpec::Gumbel`] maps to
+    /// the fused FlashSampling decode artifact and
+    /// [`SamplerSpec::Multinomial`] to the baseline decode artifact (the
+    /// paper's §4.5 A/B switch).  Any other spec (grouped / online /
+    /// distributed / topk — host-side algorithms used by the TP leader,
+    /// benches, and repro tables) is rejected at engine construction
+    /// rather than silently substituted.
+    pub sampler: SamplerSpec,
 }
 
 impl Default for EngineConfig {
@@ -58,8 +55,7 @@ impl Default for EngineConfig {
             kv_blocks: 512,
             kv_block_size: 16,
             seed: 0xF1A5_4_5A3,
-            baseline_sampler: false,
-            sampler: "gumbel".to_string(),
+            sampler: SamplerSpec::default(),
         }
     }
 }
@@ -68,27 +64,21 @@ impl EngineConfig {
     /// Does this configuration select the baseline (materialized-logits)
     /// decode artifact?
     pub fn uses_baseline_artifact(&self) -> bool {
-        self.baseline_sampler || self.sampler_name() == "multinomial"
+        self.sampler.uses_baseline_artifact()
     }
 
-    /// Registry name of the configured sampler spec (grammar not checked).
-    fn sampler_name(&self) -> &str {
-        self.sampler.split(':').next().unwrap_or("").trim()
-    }
-
-    /// Validate the sampler spec: registry grammar, plus the engine's own
+    /// Validate the sampler spec: parameter ranges, plus the engine's own
     /// constraint that the decode path can actually honor it.
     pub fn validate_sampler(&self) -> Result<()> {
-        crate::sampling::build_sampler(&self.sampler)
-            .context("EngineConfig::sampler")?;
-        let name = self.sampler_name();
+        self.sampler.validate().context("EngineConfig::sampler")?;
         anyhow::ensure!(
-            name == "gumbel" || name == "multinomial",
+            self.sampler.is_artifact_backed(),
             "EngineConfig::sampler = '{}': the decode path runs inside AOT \
              artifacts, which exist only for 'gumbel' (fused FlashSampling) \
-             and 'multinomial' (baseline); '{name}' is a host-side sampler \
+             and 'multinomial' (baseline); '{}' is a host-side sampler \
              (TP leader / benches / repro)",
-            self.sampler
+            self.sampler,
+            self.sampler.name()
         );
         Ok(())
     }
@@ -132,6 +122,8 @@ impl Engine {
     pub fn new(artifacts_dir: impl AsRef<Path>, cfg: EngineConfig) -> Result<Self> {
         // Fail fast on sampler specs the decode artifacts cannot honor.
         cfg.validate_sampler()?;
+        // Runtime::new refuses scalar-tau (v1) artifact sets, so the
+        // per-row tau vectors below always match the executables.
         let rt = Runtime::new(artifacts_dir)?;
         let model = rt.manifest().model.clone();
         let params = rt.params_in_order()?;
@@ -185,9 +177,24 @@ impl Engine {
         m.n_layers * m.n_heads * m.max_seq * m.head_dim()
     }
 
-    /// Submit a request (validated against model limits).
+    /// Submit a request (validated against model limits and the decode
+    /// artifacts' capabilities).
     pub fn submit(&mut self, req: Request) -> Result<()> {
         let m = self.model();
+        req.params.validate(m.vocab)?;
+        // Reject params the fused ABI cannot honor rather than silently
+        // ignoring them; host-side paths (`sample_batch_rows`) carry the
+        // full set, the artifacts carry per-row tau + stop handling.
+        let missing = req.params.artifact_unsupported();
+        if !missing.is_empty() {
+            bail!(
+                "request {}: the decode artifacts (ABI v{}) carry per-row \
+                 temperature only; unsupported params: {}",
+                req.id,
+                crate::runtime::TAU_ABI_VERSION,
+                missing.join(", ")
+            );
+        }
         if req.prompt.is_empty() {
             bail!("empty prompt");
         }
@@ -270,7 +277,7 @@ impl Engine {
                     params: super::request::SamplingParams {
                         temperature: s.temperature,
                         max_new_tokens: s.max_new_tokens,
-                        eos_token: None,
+                        ..Default::default()
                     },
                 })?;
                 next += 1;
@@ -353,8 +360,12 @@ impl Engine {
         let hid_lit = hidden.to_literal()?;
         let seed_lit = Tensor::seed(self.key).to_literal()?;
         let step_lit = Tensor::scalar_u32(self.bump_step()).to_literal()?;
-        let tau = seqs.first().map(|s| s.params.temperature).unwrap_or(1.0);
-        let tau_lit = Tensor::scalar_f32(tau).to_literal()?;
+        // Per-row tau (ABI v2): each prompt's own temperature; pad rows
+        // sample at tau = 1 and are discarded below.
+        let taus: Vec<f32> = (0..b)
+            .map(|row| seqs.get(row).map_or(1.0, |s| s.params.temperature))
+            .collect();
+        let tau_lit = Tensor::F32(taus, vec![b]).to_literal()?;
         let first = sampler.run_literals(&[
             &hid_lit,
             &self.params_lit[self.lm_head_idx],
@@ -502,8 +513,12 @@ impl Engine {
         let tok_lit = Tensor::I32(tok, vec![b_bucket]).to_literal()?;
         let seed_lit = Tensor::seed(self.key).to_literal()?;
         let step_lit = Tensor::scalar_u32(self.bump_step()).to_literal()?;
-        let tau = self.running[rows[0]].params.temperature;
-        let tau_lit = Tensor::scalar_f32(tau).to_literal()?;
+        // Per-row tau (ABI v2): heterogeneous temperatures share the batch.
+        let mut taus = vec![1.0f32; b_bucket];
+        for (slot, &ri) in rows.iter().enumerate() {
+            taus[slot] = self.running[ri].params.temperature;
+        }
+        let tau_lit = Tensor::F32(taus, vec![b_bucket]).to_literal()?;
 
         let mut lits: Vec<&xla::Literal> = self.params_lit.iter().collect();
         lits.extend([&kvk_lit, &kvv_lit, &pos_lit, &tok_lit, &seed_lit, &step_lit,

@@ -4,8 +4,11 @@
 //! prefill/decode scheduler → PJRT execution of fused decode+sample
 //! artifacts → TPOT/TTFT metrics.  The FlashSampling contribution is wired
 //! in as a first-class feature: the decode artifact's LM head *is* the
-//! fused kernel, and `EngineConfig::baseline_sampler` flips the A/B switch
-//! to the materialized-logits baseline the paper compares against.
+//! fused kernel, and `EngineConfig::sampler` (a typed `SamplerSpec`) flips
+//! the A/B switch to the materialized-logits baseline the paper compares
+//! against.  Per-request `SamplingParams` carry temperature per row into
+//! the artifacts (`tau: [B]`, ABI v2), so sampling parameters never
+//! fragment batches.
 
 pub mod engine;
 pub mod request;

@@ -2,23 +2,166 @@
 
 use std::time::Instant;
 
+use anyhow::{bail, Result};
+
 use crate::metrics::RequestTiming;
+use crate::sampling::{Key, Transform};
 
 /// Per-request sampling configuration (vLLM `SamplingParams` analogue).
-#[derive(Clone, Debug)]
+///
+/// Temperature is carried per row through the artifact ABI (`tau: [B]`,
+/// DESIGN.md §4), so requests with different temperatures batch together
+/// freely.  The remaining knobs are honored by the host-side sampling
+/// paths (`ExactSampler::sample_batch_rows` with [`SamplingParams::transform`]
+/// / `Transform::truncated`); the fused decode artifacts do not carry them
+/// yet, and [`SamplingParams::artifact_unsupported`] names what a given
+/// request would need so the engine can reject instead of silently
+/// ignoring.
+#[derive(Clone, Debug, PartialEq)]
 pub struct SamplingParams {
-    /// Softmax temperature (tau > 0). Sequences batch together only with
-    /// equal temperature because the fused artifact takes one tau per batch.
+    /// Softmax temperature (tau > 0).
     pub temperature: f32,
+    /// Keep only the `k` highest-probability tokens (App. D.6).
+    pub top_k: Option<usize>,
+    /// Nucleus mass in (0, 1]; applied after `top_k` (vLLM order).
+    pub top_p: Option<f32>,
+    /// Additive per-token logit bias as `(token, bias)` pairs;
+    /// `-inf` bias bans the token.
+    ///
+    /// Convention: the bias adds to the **temperature-scaled** logit
+    /// (`logit / tau + bias`), matching the paper's Alg. 1 transform and
+    /// the fused kernel's epilogue — NOT vLLM/OpenAI, which bias the raw
+    /// logit before scaling.  To port a vLLM-style bias, divide it by the
+    /// request temperature.
+    pub logit_bias: Vec<(i32, f32)>,
+    /// Tokens excluded from sampling entirely (bias `-inf` shorthand).
+    pub banned_tokens: Vec<i32>,
+    /// Per-request RNG seed overriding the engine session key.  Consumed
+    /// via [`SamplingParams::row_key`] when building the per-row sampling
+    /// context (host-side paths; the fused artifacts take one session
+    /// seed, so the engine rejects it at submit).
+    pub seed: Option<u64>,
     /// Maximum number of generated tokens.
     pub max_new_tokens: usize,
-    /// Optional stop token.
-    pub eos_token: Option<i32>,
+    /// Generation stops when any of these tokens is sampled
+    /// (vLLM `stop_token_ids`).
+    pub stop_tokens: Vec<i32>,
 }
 
 impl Default for SamplingParams {
     fn default() -> Self {
-        Self { temperature: 1.0, max_new_tokens: 32, eos_token: None }
+        Self {
+            temperature: 1.0,
+            top_k: None,
+            top_p: None,
+            logit_bias: Vec::new(),
+            banned_tokens: Vec::new(),
+            seed: None,
+            max_new_tokens: 32,
+            stop_tokens: Vec::new(),
+        }
+    }
+}
+
+impl SamplingParams {
+    /// Shorthand for the common single-stop-token configuration.
+    pub fn with_eos(eos: i32) -> Self {
+        Self { stop_tokens: vec![eos], ..Default::default() }
+    }
+
+    /// Range-check every field against the model's vocabulary.
+    pub fn validate(&self, vocab: usize) -> Result<()> {
+        if !(self.temperature > 0.0 && self.temperature.is_finite()) {
+            bail!("temperature must be finite and > 0, got {}", self.temperature);
+        }
+        if self.top_k == Some(0) {
+            bail!("top_k must be >= 1");
+        }
+        if let Some(p) = self.top_p {
+            if !(p > 0.0 && p <= 1.0) {
+                bail!("top_p must be in (0, 1], got {p}");
+            }
+        }
+        if self.max_new_tokens == 0 {
+            bail!("max_new_tokens must be >= 1");
+        }
+        let in_vocab = |t: i32| t >= 0 && (t as usize) < vocab;
+        for &(t, b) in &self.logit_bias {
+            if !in_vocab(t) {
+                bail!("logit_bias token {t} out of vocab range 0..{vocab}");
+            }
+            // -inf is the ban idiom; NaN and +inf poison the softmax and
+            // the nucleus cumsum (NaN never compares >= p).
+            if b.is_nan() || b == f32::INFINITY {
+                bail!("logit_bias for token {t} must be finite or -inf, got {b}");
+            }
+        }
+        if let Some(&t) = self.banned_tokens.iter().find(|&&t| !in_vocab(t)) {
+            bail!("banned token {t} out of vocab range 0..{vocab}");
+        }
+        if let Some(&t) = self.stop_tokens.iter().find(|&&t| !in_vocab(t)) {
+            bail!("stop token {t} out of vocab range 0..{vocab}");
+        }
+        Ok(())
+    }
+
+    /// The deterministic logit transform these params describe, before
+    /// top-k/top-p truncation (that part needs the row's logits — see
+    /// `Transform::truncated`).
+    ///
+    /// Out-of-vocab bias/ban entries are skipped rather than panicking —
+    /// [`SamplingParams::validate`] is where they are reported as errors.
+    pub fn transform(&self, vocab: usize) -> Transform {
+        let mut bias: Option<Vec<f32>> = None;
+        if !self.logit_bias.is_empty() || !self.banned_tokens.is_empty() {
+            let mut b = vec![0.0f32; vocab];
+            for &(t, v) in &self.logit_bias {
+                if let Some(slot) = usize::try_from(t).ok().and_then(|i| b.get_mut(i)) {
+                    *slot += v;
+                }
+            }
+            for &t in &self.banned_tokens {
+                if let Some(slot) = usize::try_from(t).ok().and_then(|i| b.get_mut(i)) {
+                    *slot = f32::NEG_INFINITY;
+                }
+            }
+            bias = Some(b);
+        }
+        Transform { temperature: self.temperature, bias }
+    }
+
+    /// The Philox key this request samples under: the per-request
+    /// [`seed`](Self::seed) when set, else the session key.  Host-side
+    /// batch paths put this in the row's `RowCtx`, decoupling the
+    /// request's randomness from the session key.  Note the stream is
+    /// still indexed by the `RowCtx` row (the batch slot) and step, so
+    /// reproducing a seeded draw requires the same slot and step — the
+    /// seed does not make draws placement-invariant.
+    pub fn row_key(&self, session: Key) -> Key {
+        self.seed.map(Key::from_seed).unwrap_or(session)
+    }
+
+    /// Fields the fused decode artifacts cannot honor (ABI v2 carries
+    /// per-row `tau` only); empty means the request is fully servable by
+    /// the artifact path.
+    pub fn artifact_unsupported(&self) -> Vec<&'static str> {
+        let mut missing = Vec::new();
+        if self.top_k.is_some() {
+            missing.push("top_k");
+        }
+        if self.top_p.is_some() {
+            missing.push("top_p");
+        }
+        if !self.logit_bias.is_empty() {
+            missing.push("logit_bias");
+        }
+        if !self.banned_tokens.is_empty() {
+            missing.push("banned_tokens");
+        }
+        if self.seed.is_some() {
+            missing.push("seed");
+        }
+        missing
     }
 }
 
@@ -34,7 +177,9 @@ pub struct Request {
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FinishReason {
     MaxTokens,
-    EosToken,
+    /// One of the request's `stop_tokens` was sampled (the pre-redesign
+    /// single `eos_token` generalized; vLLM `stop_token_ids` semantics).
+    StopToken,
     /// Dropped because the prompt can never fit (prompt + budget > max_seq).
     Rejected,
 }
@@ -121,11 +266,9 @@ impl Sequence {
 
     /// Has the sequence hit a stop condition?
     pub fn finished(&self) -> Option<FinishReason> {
-        if let (Some(eos), Some(&last)) =
-            (self.params.eos_token, self.generated.last())
-        {
-            if last == eos {
-                return Some(FinishReason::EosToken);
+        if let Some(&last) = self.generated.last() {
+            if self.params.stop_tokens.contains(&last) {
+                return Some(FinishReason::StopToken);
             }
         }
         if self.generated.len() >= self.params.max_new_tokens {
@@ -186,13 +329,94 @@ mod tests {
             prompt: vec![1],
             params: SamplingParams {
                 max_new_tokens: 100,
-                eos_token: Some(0),
+                stop_tokens: vec![0, 7],
                 ..Default::default()
             },
         });
         s.generated.push(3);
         assert_eq!(s.finished(), None);
-        s.generated.push(0);
-        assert_eq!(s.finished(), Some(FinishReason::EosToken));
+        s.generated.push(7); // any stop token ends generation
+        assert_eq!(s.finished(), Some(FinishReason::StopToken));
+        s.generated[1] = 0;
+        assert_eq!(s.finished(), Some(FinishReason::StopToken));
+    }
+
+    #[test]
+    fn params_validation_catches_bad_fields() {
+        let v = 128usize;
+        assert!(SamplingParams::default().validate(v).is_ok());
+        let bad = [
+            SamplingParams { temperature: 0.0, ..Default::default() },
+            SamplingParams { temperature: f32::NAN, ..Default::default() },
+            SamplingParams { top_k: Some(0), ..Default::default() },
+            SamplingParams { top_p: Some(0.0), ..Default::default() },
+            SamplingParams { top_p: Some(1.5), ..Default::default() },
+            SamplingParams { max_new_tokens: 0, ..Default::default() },
+            SamplingParams { logit_bias: vec![(200, 1.0)], ..Default::default() },
+            SamplingParams {
+                logit_bias: vec![(1, f32::NAN)],
+                ..Default::default()
+            },
+            SamplingParams {
+                logit_bias: vec![(1, f32::INFINITY)],
+                ..Default::default()
+            },
+            SamplingParams { banned_tokens: vec![-1], ..Default::default() },
+            SamplingParams { stop_tokens: vec![128], ..Default::default() },
+        ];
+        for (i, p) in bad.iter().enumerate() {
+            assert!(p.validate(v).is_err(), "case {i} should fail");
+        }
+        let rich = SamplingParams {
+            temperature: 0.7,
+            top_k: Some(16),
+            top_p: Some(0.95),
+            logit_bias: vec![(3, -1.0), (4, f32::NEG_INFINITY)],
+            banned_tokens: vec![5],
+            seed: Some(9),
+            stop_tokens: vec![0],
+            ..Default::default()
+        };
+        assert!(rich.validate(v).is_ok());
+        assert_eq!(
+            rich.artifact_unsupported(),
+            vec!["top_k", "top_p", "logit_bias", "banned_tokens", "seed"]
+        );
+        assert!(SamplingParams::default().artifact_unsupported().is_empty());
+    }
+
+    #[test]
+    fn params_transform_builds_bias_vector() {
+        let p = SamplingParams {
+            temperature: 2.0,
+            logit_bias: vec![(1, 0.5), (1, 0.25)], // additive accumulation
+            banned_tokens: vec![3],
+            ..Default::default()
+        };
+        let t = p.transform(4);
+        assert_eq!(t.temperature, 2.0);
+        let b = t.bias.as_ref().unwrap();
+        assert_eq!(b[0], 0.0);
+        assert_eq!(b[1], 0.75);
+        assert_eq!(b[3], f32::NEG_INFINITY);
+        // No bias fields => no bias vector allocated.
+        assert!(SamplingParams::default().transform(4).bias.is_none());
+        // Out-of-vocab entries (caught by validate()) must not panic here.
+        let bad = SamplingParams {
+            logit_bias: vec![(-1, 1.0), (99, 1.0)],
+            banned_tokens: vec![-5, 77],
+            ..Default::default()
+        };
+        let t = bad.transform(4);
+        assert_eq!(t.bias.as_ref().unwrap(), &vec![0.0f32; 4]);
+    }
+
+    #[test]
+    fn row_key_prefers_per_request_seed() {
+        let session = Key::new(1, 2);
+        assert_eq!(SamplingParams::default().row_key(session), session);
+        let seeded = SamplingParams { seed: Some(0xBEEF), ..Default::default() };
+        assert_eq!(seeded.row_key(session), Key::from_seed(0xBEEF));
+        assert_ne!(seeded.row_key(session), session);
     }
 }

@@ -4,10 +4,14 @@
 //! Policy (vLLM-v1-like, prefill-prioritized):
 //!   1. If waiting sequences exist and KV blocks are available, plan a
 //!      prefill batch: up to `prefill_b` prompts that fit the smallest
-//!      viable T bucket, grouped by temperature.
+//!      viable T bucket.
 //!   2. Otherwise plan a decode batch: up to the largest decode bucket of
-//!      running sequences, FCFS, grouped by temperature (the fused artifact
-//!      takes one tau per batch).
+//!      running sequences, FCFS.
+//!
+//! Sampling parameters never fragment batches: the artifact ABI carries
+//! per-row temperature (`tau: [B]`, DESIGN.md §4), so mixed-temperature
+//! requests coalesce into full buckets — decode occupancy no longer drops
+//! when clients disagree about tau.
 //!
 //! Fixed-shape executables mean the batch is padded up to a bucket —
 //! exactly how GPU serving stacks pad to CUDA-graph capture sizes; padding
@@ -63,16 +67,12 @@ pub fn plan(
     if running.len() < cfg.max_concurrency {
         let headroom = cfg.max_concurrency - running.len();
         let max_t = *cfg.prefill_t_buckets.last().unwrap();
-        // FCFS scan: take same-temperature prompts that fit the cache.
+        // FCFS scan: take prompts that fit the cache (temperature is
+        // per-row in the artifact ABI, so no grouping constraint).
         let mut chosen: Vec<&Sequence> = Vec::new();
         for s in waiting.iter().filter(|s| s.state == SeqState::Waiting) {
             if s.prompt.len() > max_t || !can_admit(s.context_len()) {
                 continue;
-            }
-            if let Some(first) = chosen.first() {
-                if s.params.temperature != first.params.temperature {
-                    continue; // one tau per fused batch
-                }
             }
             chosen.push(s);
             if chosen.len() == cfg.prefill_b.min(headroom) {
@@ -88,7 +88,7 @@ pub fn plan(
         }
     }
 
-    // --- Decode: FCFS over running sequences, grouped by temperature.
+    // --- Decode: FCFS over running sequences, whatever their params.
     let decodable: Vec<&Sequence> = running
         .iter()
         .filter(|s| s.state == SeqState::Running)
@@ -96,14 +96,8 @@ pub fn plan(
     if decodable.is_empty() {
         return Plan::Idle;
     }
-    let tau = decodable[0].params.temperature;
     let max_b = *cfg.decode_buckets.last().unwrap();
-    let group: Vec<u64> = decodable
-        .iter()
-        .filter(|s| s.params.temperature == tau)
-        .take(max_b)
-        .map(|s| s.id)
-        .collect();
+    let group: Vec<u64> = decodable.iter().take(max_b).map(|s| s.id).collect();
     let bucket = pick_bucket(&cfg.decode_buckets, group.len());
     Plan::Decode { seq_ids: group, b_bucket: bucket }
 }
@@ -190,7 +184,9 @@ mod tests {
     }
 
     #[test]
-    fn decode_groups_by_temperature() {
+    fn mixed_temperatures_share_one_decode_bucket() {
+        // Pre-redesign this planned [1, 3] (tau grouping) and left row 2 for
+        // a second, padded batch; with the tau: [B] ABI everything coalesces.
         let running = vec![
             seq(1, 5, 1.0, SeqState::Running),
             seq(2, 5, 0.7, SeqState::Running),
@@ -198,8 +194,43 @@ mod tests {
         ];
         match plan(&cfg(), &[], &running, |_| true) {
             Plan::Decode { seq_ids, b_bucket } => {
-                assert_eq!(seq_ids, vec![1, 3]); // same tau as head
-                assert_eq!(b_bucket, 2);
+                assert_eq!(seq_ids, vec![1, 2, 3]); // FCFS, tau-blind
+                assert_eq!(b_bucket, 4);
+            }
+            p => panic!("{p:?}"),
+        }
+    }
+
+    #[test]
+    fn mixed_temperature_occupancy_is_full() {
+        // 8 running sequences at 4 distinct temperatures fill the largest
+        // bucket with zero pad rows — the occupancy win the redesign buys.
+        // (Temperature grouping would have planned a fragmented 2-row batch
+        // with 6 of 8 slots padded: 4 batches to cover one decode round.)
+        let running: Vec<Sequence> = (0..8)
+            .map(|i| seq(i, 5, 0.25 * (1 + i % 4) as f32, SeqState::Running))
+            .collect();
+        match plan(&cfg(), &[], &running, |_| true) {
+            Plan::Decode { seq_ids, b_bucket } => {
+                assert_eq!(seq_ids.len(), 8);
+                assert_eq!(b_bucket, 8);
+                assert_eq!(b_bucket - seq_ids.len(), 0); // decode_pad_rows = 0
+            }
+            p => panic!("{p:?}"),
+        }
+    }
+
+    #[test]
+    fn mixed_temperature_prefill_batches_together() {
+        let waiting = vec![
+            seq(1, 10, 1.0, SeqState::Waiting),
+            seq(2, 10, 0.5, SeqState::Waiting),
+            seq(3, 10, 2.0, SeqState::Waiting),
+        ];
+        match plan(&cfg(), &waiting, &[], |_| true) {
+            Plan::Prefill { seq_ids, t_bucket } => {
+                assert_eq!(seq_ids, vec![1, 2, 3]);
+                assert_eq!(t_bucket, 16);
             }
             p => panic!("{p:?}"),
         }

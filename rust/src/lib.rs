@@ -32,10 +32,13 @@
 //! # Sampler selection
 //!
 //! All six paper samplers implement [`sampling::ExactSampler`] and are
-//! constructed from config strings via [`sampling::build_sampler`] — the
-//! coordinator (the `sampler` key of [`coordinator::EngineConfig`]), the
-//! TP orchestrator ([`tp::Strategy::leader_sampler_spec`]), the benches,
-//! and the repro tables all select algorithms through that one registry.
+//! selected by the typed [`sampling::SamplerSpec`] (config strings parse
+//! once at the boundary; [`sampling::build_sampler`] is the string shim) —
+//! the coordinator ([`coordinator::EngineConfig::sampler`]), the TP
+//! orchestrator ([`tp::Strategy::leader_sampler_spec`]), the benches, and
+//! the repro tables all select algorithms through that one seam.  Per-row
+//! sampling parameters travel via [`coordinator::SamplingParams`] and the
+//! `ExactSampler::sample_batch_rows` entry point.
 
 pub mod benchutil;
 pub mod config;

@@ -24,7 +24,7 @@ fn usage() -> ! {
         "usage: flashsampling <serve|repro|bench-kernel|selfcheck> [args]\n\
          \n\
          serve        --config FILE | --set key=value ...\n\
-         repro        <table1|table4|...|fig6|chisq|e2e-quality|all|stats> [--out DIR]\n\
+         repro        <table1|table4|...|fig6|chisq|hetero-chisq|e2e-quality|all|stats> [--out DIR]\n\
          bench-kernel [--set key=value ...]\n\
          selfcheck    [--set key=value ...]"
     );
@@ -71,6 +71,7 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
     let vocab = engine.runtime().manifest().model.vocab;
     let mut gen = WorkloadGen::new(cfg.seed, cfg.request_rate, vocab);
     gen.temperature = cfg.temperature;
+    gen.temperature_choices = cfg.temperature_choices.clone();
     gen.prompt_len = flashsampling::workload::LengthDist::Uniform(8, 48);
     gen.output_len = flashsampling::workload::LengthDist::Fixed(cfg.max_new_tokens);
     let reqs = gen.generate(cfg.num_requests);
@@ -148,8 +149,9 @@ fn cmd_bench_kernel(cfg: &Config) -> Result<()> {
         let v = spec.meta_usize("V")?;
         let h = Tensor::F32(vec![0.1; b * d], vec![b, d]);
         let w = Tensor::F32(vec![0.01; v * d], vec![v, d]);
+        // tau: [B] (ABI v2) — uniform here, per-row in the engine.
         let inputs = [h, w, Tensor::seed(key), Tensor::scalar_u32(0),
-                      Tensor::scalar_f32(cfg.temperature)];
+                      Tensor::F32(vec![cfg.temperature; b], vec![b])];
         // warmup
         for _ in 0..3 {
             rt.run(&spec.name, &inputs)?;
@@ -203,7 +205,7 @@ fn cmd_selfcheck(cfg: &Config) -> Result<()> {
             Tensor::F32(w.clone(), vec![v, d]),
             Tensor::seed(key),
             Tensor::scalar_u32(0),
-            Tensor::scalar_f32(1.0),
+            Tensor::F32(vec![1.0; b], vec![b]),
         ],
     )?;
     let got = out[0].as_i32()?;

@@ -5,8 +5,11 @@
 //!   chi-squared goodness-of-fit against the exact categorical.  Run over
 //!   the native Rust Gumbel-Max (pathwise identical to the Pallas kernel —
 //!   see tests/integration_runtime.rs) and the grouped/online/distributed
-//!   variants, each selected through the `ExactSampler` registry by config
-//!   string (DESIGN.md §5).
+//!   variants, each selected through a typed `SamplerSpec` (DESIGN.md §5).
+//! * `hetero-chisq` — the redesign's heterogeneous-batch protocol: one
+//!   batch whose rows carry different `SamplingParams` (tau / top-k /
+//!   top-p), sampled via `sample_batch_rows`; every row must match its own
+//!   target distribution (DESIGN.md §3 per-row contract).
 //! * `e2e_quality` — the paper's end-to-end protocol shape: decode N
 //!   prompts with FlashSampling and with the baseline sampler through the
 //!   real serving engine, score each completion with a deterministic
@@ -19,7 +22,7 @@ use crate::coordinator::{Engine, EngineConfig, Request, SamplingParams};
 #[allow(unused_imports)]
 use crate::sampling::ExactSampler;
 use crate::sampling::{
-    build_sampler, multinomial, philox, stats, Key, RowCtx, Transform,
+    multinomial, philox, stats, Key, RowCtx, SamplerSpec, Transform,
 };
 
 const V: usize = 512;
@@ -43,17 +46,27 @@ pub fn chisq() -> Result<String> {
         "## §4.6 kernel-level verification — chi-squared GoF (V=512, 10k samples)\n\n\
          |sampler | spec | p-value | verdict |\n|---|---|---|---|\n",
     );
-    // Every sampler under test is selected through the ExactSampler
-    // registry by config string — the experiment definition is pure data.
-    let cases: [(&str, &str); 5] = [
-        ("FlashSampling (tiled Gumbel-Max, tile_v=64)", "gumbel:tile=64"),
-        ("Baseline multinomial (Alg. A.1)", "multinomial"),
-        ("Group-Gumbel-Max (Alg. I.2, g=64)", "grouped:group=64"),
-        ("Online Group-Gumbel-Max (Alg. I.3, g=64)", "online:group=64"),
-        ("Distributed merge (Alg. I.4, 4 shards)", "distributed:ranks=4"),
+    // Every sampler under test is selected through a typed SamplerSpec —
+    // the experiment definition is pure data (Display renders the spec
+    // column, so the table shows exactly what was constructed).
+    let cases: [(&str, SamplerSpec); 5] = [
+        (
+            "FlashSampling (tiled Gumbel-Max, tile_v=64)",
+            SamplerSpec::Gumbel { tile: Some(64) },
+        ),
+        ("Baseline multinomial (Alg. A.1)", SamplerSpec::Multinomial),
+        ("Group-Gumbel-Max (Alg. I.2, g=64)", SamplerSpec::Grouped { group: 64 }),
+        (
+            "Online Group-Gumbel-Max (Alg. I.3, g=64)",
+            SamplerSpec::Online { group: 64 },
+        ),
+        (
+            "Distributed merge (Alg. I.4, 4 shards)",
+            SamplerSpec::Distributed { ranks: 4 },
+        ),
     ];
     for (name, spec) in cases {
-        let sampler = build_sampler(spec)?;
+        let sampler = spec.build()?;
         let mut counts = vec![0u64; V];
         for s in 0..N_SAMPLES {
             let ctx = RowCtx { transform: &t, key, row: 0, step: s };
@@ -65,6 +78,150 @@ pub fn chisq() -> Result<String> {
         let p = stats::chi_squared_pvalue(&counts, &probs, N_SAMPLES as u64);
         let verdict = if p > 0.001 { "exact (not rejected)" } else { "REJECTED" };
         md.push_str(&format!("| {name} | `{spec}` | {p:.4} | {verdict} |\n"));
+    }
+    Ok(md)
+}
+
+/// Heterogeneous-batch chi-squared GoF: one batch whose rows carry
+/// different `SamplingParams` (temperature, top-k, top-p, and a
+/// per-request seed), sampled through the per-row batch entry point
+/// (`ExactSampler::sample_batch_rows`).
+///
+/// The claim under test is the redesign's exactness contract: coalescing
+/// rows with different parameters into one batch (what the scheduler now
+/// does for mixed-temperature traffic) leaves every row drawing from its
+/// OWN target distribution — each row must pass GoF against the
+/// distribution implied by its own params.
+/// Independent GoF oracle: the target distribution implied by a row's
+/// `SamplingParams`, computed directly from probabilities (f64 softmax,
+/// sort, top-k count, renormalized-nucleus prefix) — deliberately NOT via
+/// `Transform::truncated`, so a keep-set bug in the truncation code would
+/// make the chi-squared reject instead of silently matching itself.
+fn target_probs(logits: &[f32], params: &SamplingParams) -> Vec<f64> {
+    let base = params.transform(logits.len());
+    let probs = multinomial::probs(logits, &base);
+    if params.top_k.is_none() && params.top_p.is_none() {
+        return probs;
+    }
+    let mut order: Vec<usize> =
+        (0..probs.len()).filter(|&i| probs[i] > 0.0).collect();
+    order.sort_by(|&a, &b| {
+        probs[b]
+            .partial_cmp(&probs[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    if let Some(k) = params.top_k {
+        order.truncate(k.max(1));
+    }
+    if let Some(p) = params.top_p {
+        // Smallest prefix whose renormalized survivor mass reaches p.  The
+        // prefix is taken over the oracle's OWN ordering, but the boundary
+        // accumulation deliberately mirrors `Transform::truncated`'s
+        // arithmetic (f32 log-normalizer, f64 cumsum of f32 differences):
+        // a cum ≈ p knife-edge must not make the oracle keep one more/less
+        // token than the sampler and fail an exact sampler's GoF.
+        let ys: Vec<f32> =
+            order.iter().map(|&i| base.apply(logits[i], i)).collect();
+        let z = crate::sampling::log_sum_exp(&ys);
+        let mut cum = 0.0f64;
+        let mut keep = 0usize;
+        for &y in &ys {
+            keep += 1;
+            cum += ((y - z) as f64).exp();
+            if cum >= p as f64 {
+                break;
+            }
+        }
+        order.truncate(keep.max(1));
+    }
+    let mass: f64 = order.iter().map(|&i| probs[i]).sum();
+    let mut out = vec![0.0f64; probs.len()];
+    for &i in &order {
+        out[i] = probs[i] / mass;
+    }
+    out
+}
+
+pub fn hetero_chisq() -> Result<String> {
+    let logits = toy_logits(V, 42);
+    let key = Key::new(0x61, 0x62);
+    // Seven rows, seven parameterizations (mixed tau, with and without
+    // top-k/top-p, one per-request seed override).
+    let rows: [(&str, SamplingParams); 7] = [
+        ("tau=0.5", SamplingParams { temperature: 0.5, ..Default::default() }),
+        ("tau=1.0", SamplingParams::default()),
+        ("tau=2.0", SamplingParams { temperature: 2.0, ..Default::default() }),
+        (
+            "tau=1.0 top_k=32",
+            SamplingParams { top_k: Some(32), ..Default::default() },
+        ),
+        (
+            "tau=0.7 top_k=64",
+            SamplingParams {
+                temperature: 0.7,
+                top_k: Some(64),
+                ..Default::default()
+            },
+        ),
+        (
+            "tau=1.5 top_p=0.9",
+            SamplingParams {
+                temperature: 1.5,
+                top_p: Some(0.9),
+                ..Default::default()
+            },
+        ),
+        (
+            "tau=1.0 seed=0xD00D",
+            SamplingParams { seed: Some(0xD00D), ..Default::default() },
+        ),
+    ];
+    // Shared logits per row; per-row transform folds tau + truncation.
+    let transforms: Vec<Transform> = rows
+        .iter()
+        .map(|(_, p)| p.transform(V).truncated(&logits, p.top_k, p.top_p))
+        .collect();
+    let batch_logits: Vec<f32> = logits.repeat(rows.len());
+
+    let sampler = SamplerSpec::default().build()?;
+    let mut counts = vec![vec![0u64; V]; rows.len()];
+    for s in 0..N_SAMPLES {
+        // Per-row key via SamplingParams::row_key: the seeded row draws
+        // from its own Philox key, the rest from the session key.
+        let ctxs: Vec<RowCtx<'_>> = transforms
+            .iter()
+            .enumerate()
+            .map(|(b, t)| RowCtx {
+                transform: t,
+                key: rows[b].1.row_key(key),
+                row: b as u32,
+                step: s,
+            })
+            .collect();
+        for (b, d) in sampler
+            .sample_batch_rows(&batch_logits, V, &ctxs)
+            .into_iter()
+            .enumerate()
+        {
+            let d = d.expect("hetero fixture keeps every row live");
+            counts[b][d.index as usize] += 1;
+        }
+    }
+
+    let mut md = String::from(
+        "## Heterogeneous-batch verification — per-row chi-squared GoF \
+         (one batch, mixed params incl. a per-request seed, V=512, \
+         10k samples/row)\n\n\
+         | row | params | p-value | verdict |\n|---|---|---|---|\n",
+    );
+    for (b, (name, params)) in rows.iter().enumerate() {
+        // Expected distribution from the independent oracle, not from the
+        // transform the sampler itself consumed.
+        let probs = target_probs(&logits, params);
+        let p = stats::chi_squared_pvalue(&counts[b], &probs, N_SAMPLES as u64);
+        let verdict = if p > 0.001 { "exact (not rejected)" } else { "REJECTED" };
+        md.push_str(&format!("| {b} | {name} | {p:.4} | {verdict} |\n"));
     }
     Ok(md)
 }
@@ -100,11 +257,9 @@ pub fn e2e_quality(artifacts_dir: Option<&std::path::Path>) -> Result<String> {
     }
 
     let mut outcomes = Vec::new();
-    for baseline in [false, true] {
-        let mut engine = Engine::new(
-            &dir,
-            EngineConfig { baseline_sampler: baseline, ..Default::default() },
-        )?;
+    for sampler in [SamplerSpec::default(), SamplerSpec::Multinomial] {
+        let mut engine =
+            Engine::new(&dir, EngineConfig { sampler, ..Default::default() })?;
         for s in &specs {
             engine.submit(Request {
                 id: s.id,
@@ -153,5 +308,12 @@ mod tests {
         let md = super::chisq().unwrap();
         assert!(!md.contains("REJECTED"), "{md}");
         assert_eq!(md.matches("exact (not rejected)").count(), 5);
+    }
+
+    #[test]
+    fn hetero_chisq_every_row_matches_its_own_distribution() {
+        let md = super::hetero_chisq().unwrap();
+        assert!(!md.contains("REJECTED"), "{md}");
+        assert_eq!(md.matches("exact (not rejected)").count(), 7);
     }
 }

@@ -8,6 +8,11 @@ use anyhow::{bail, Context, Result};
 
 use crate::json::{self, Value};
 
+/// The artifact ABI version this runtime speaks.  v2 introduced the
+/// per-row temperature vector (`tau: [B]` instead of a scalar) across
+/// every sampling artifact; manifests without a `version` key are v1.
+pub const TAU_ABI_VERSION: u32 = 2;
+
 /// Element dtype of an artifact input/output or weight tensor.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DType {
@@ -111,6 +116,8 @@ impl ModelInfo {
 #[derive(Clone, Debug)]
 pub struct Manifest {
     pub dir: PathBuf,
+    /// Artifact ABI version (see [`TAU_ABI_VERSION`]); 1 if absent.
+    pub abi_version: u32,
     pub model: ModelInfo,
     pub artifacts: Vec<ArtifactSpec>,
     pub weights: Vec<WeightSpec>,
@@ -124,6 +131,12 @@ impl Manifest {
         let text = std::fs::read_to_string(&path)
             .with_context(|| format!("reading {}", path.display()))?;
         let v = json::parse(&text).context("parsing manifest.json")?;
+
+        // Pre-versioning manifests (scalar-tau artifacts) carry no key.
+        let abi_version = match v.get("version") {
+            Some(n) => n.as_usize()? as u32,
+            None => 1,
+        };
 
         let m = v.req("model")?;
         let model = ModelInfo {
@@ -184,7 +197,22 @@ impl Manifest {
             });
         }
 
-        Ok(Self { dir, model, artifacts, weights })
+        Ok(Self { dir, abi_version, model, artifacts, weights })
+    }
+
+    /// Refuse artifact sets whose tau ABI doesn't match this runtime.
+    /// `Runtime::new` calls this, so every artifact consumer is covered;
+    /// a v1 (scalar-tau) set would otherwise mis-consume the `tau: [B]`
+    /// vector silently.
+    pub fn ensure_tau_abi(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.abi_version == TAU_ABI_VERSION,
+            "artifact manifest has ABI v{} but this runtime speaks v{} \
+             (tau: [B] per-row temperature) — re-run `make artifacts`",
+            self.abi_version,
+            TAU_ABI_VERSION
+        );
+        Ok(())
     }
 
     pub fn find(&self, name: &str) -> Result<&ArtifactSpec> {
@@ -233,6 +261,7 @@ mod tests {
     fn write_fixture(dir: &Path) {
         std::fs::create_dir_all(dir.join("weights")).unwrap();
         let manifest = r#"{
+          "version": 2,
           "model": {"vocab": 2048, "d_model": 256, "n_layers": 4,
                     "n_heads": 4, "ffn": 512, "max_seq": 256,
                     "param_order": ["embed", "lm_head"],
@@ -266,6 +295,7 @@ mod tests {
         let dir = std::env::temp_dir().join("fs_manifest_test");
         write_fixture(&dir);
         let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.abi_version, TAU_ABI_VERSION);
         assert_eq!(m.model.vocab, 2048);
         assert_eq!(m.model.decode_buckets, vec![1, 2, 4, 8]);
         let a = m.find("flash_sample_b4_d256_v2048").unwrap();
@@ -274,6 +304,20 @@ mod tests {
         assert_eq!(a.inputs[1].dtype, DType::U32);
         assert_eq!(m.by_kind("flash_sample").len(), 1);
         assert!(m.find("nope").is_err());
+    }
+
+    #[test]
+    fn versionless_manifest_defaults_to_abi_v1() {
+        let dir = std::env::temp_dir().join("fs_manifest_test_v1");
+        write_fixture(&dir);
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, text.replace("\"version\": 2,", "")).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.abi_version, 1);
+        // ...and every tau-feeding consumer must refuse it.
+        let err = m.ensure_tau_abi().unwrap_err();
+        assert!(err.to_string().contains("re-run `make artifacts`"), "{err}");
     }
 
     #[test]

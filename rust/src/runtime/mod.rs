@@ -20,7 +20,10 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-pub use manifest::{ArtifactSpec, DType, Manifest, ModelInfo, TensorSpec, WeightSpec};
+pub use manifest::{
+    ArtifactSpec, DType, Manifest, ModelInfo, TensorSpec, WeightSpec,
+    TAU_ABI_VERSION,
+};
 pub use tensor::Tensor;
 
 /// Cumulative execution statistics for one artifact.
@@ -132,8 +135,13 @@ pub struct Runtime {
 
 impl Runtime {
     /// Create a runtime over `<artifacts_dir>/manifest.json`.
+    ///
+    /// Refuses artifact sets whose tau ABI predates this runtime (see
+    /// [`manifest::TAU_ABI_VERSION`]) so no consumer can feed `tau: [B]`
+    /// literals into scalar-tau executables.
     pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
         let manifest = Manifest::load(artifacts_dir)?;
+        manifest.ensure_tau_abi()?;
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         Ok(Self {
             client,

@@ -14,13 +14,16 @@
 //! These run on the L3 request path (e.g. the TP orchestrator's rank merge)
 //! and in tests/benches; the heavy fused path is the AOT Pallas kernel.
 //!
-//! # The `ExactSampler` trait and registry
+//! # The `ExactSampler` trait and the typed `SamplerSpec`
 //!
 //! Every paper sampler is also exposed behind the common [`ExactSampler`]
-//! trait, constructed from a **config string** via [`build_sampler`] — the
-//! single seam through which the coordinator, the TP orchestrator, the
-//! benches, and the repro tables select sampling algorithms (no hard-coded
-//! call sites).  Spec grammar:
+//! trait, selected by a typed [`SamplerSpec`] — the single seam through
+//! which the coordinator, the TP orchestrator, the benches, and the repro
+//! tables select sampling algorithms (no hard-coded call sites).  Config
+//! strings are parsed **once** at the system boundary
+//! (`SamplerSpec::from_str`) and rendered back canonically
+//! (`SamplerSpec::to_string`); [`build_sampler`] survives as a thin
+//! parse-then-build shim for string call sites.  Spec grammar:
 //!
 //! ```text
 //!   <name>                      e.g.  "gumbel"
@@ -59,12 +62,14 @@ pub mod gumbel;
 pub mod multinomial;
 pub mod online;
 pub mod philox;
+pub mod spec;
 pub mod stats;
 pub mod topk;
 
-use anyhow::{bail, Context, Result};
+use anyhow::Result;
 
 pub use philox::Key;
+pub use spec::SamplerSpec;
 
 /// Numerically stable log(sum(exp(xs))) over a slice.
 ///
@@ -146,6 +151,79 @@ impl Transform {
         }
         y
     }
+
+    /// Fold top-k / top-p truncation of `logits` into the bias, returning a
+    /// new transform with the complement of the keep set masked to `-inf`.
+    ///
+    /// Masking-then-renormalizing **is** top-k / nucleus sampling (the
+    /// truncated categorical is the renormalized restriction), so any exact
+    /// sampler run under the returned transform draws exactly from the
+    /// truncated distribution — this is how per-row `top_k`/`top_p` from
+    /// `SamplingParams` reach the host-side samplers (App. D.6).  `top_p`
+    /// applies after `top_k` (the vLLM/FlashInfer order); ties at the
+    /// boundary break by lower vocab index.
+    pub fn truncated(
+        &self,
+        logits: &[f32],
+        top_k: Option<usize>,
+        top_p: Option<f32>,
+    ) -> Transform {
+        if top_k.is_none() && top_p.is_none() {
+            return self.clone();
+        }
+        // Transform once (O(V)), then rank live categories by the cached
+        // value, descending — this runs per row per decode step on host
+        // paths, so: top-k alone partitions in O(V) (the keep SET needs no
+        // internal order), and only a nucleus pass sorts — the k survivors
+        // if top-k ran first, the full live set otherwise.
+        let y: Vec<f32> = logits
+            .iter()
+            .enumerate()
+            .map(|(i, &l)| self.apply(l, i))
+            .collect();
+        let cmp = |a: &usize, b: &usize| {
+            y[*b].partial_cmp(&y[*a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(b))
+        };
+        let mut order: Vec<usize> =
+            (0..y.len()).filter(|&i| y[i] > f32::NEG_INFINITY).collect();
+        if let Some(k) = top_k {
+            let k = k.max(1);
+            if k < order.len() {
+                // Total order (ties break by index) => deterministic set.
+                order.select_nth_unstable_by(k - 1, cmp);
+                order.truncate(k);
+            }
+        }
+        if top_p.is_some() {
+            order.sort_by(cmp);
+        }
+        let n_keep = match top_p {
+            None => order.len(),
+            Some(p) => {
+                // Nucleus over the (possibly k-truncated) survivors: keep
+                // the smallest prefix whose renormalized mass reaches p.
+                let ys: Vec<f32> = order.iter().map(|&i| y[i]).collect();
+                let z = log_sum_exp(&ys);
+                let mut cum = 0.0f64;
+                let mut keep = 0usize;
+                for &yv in &ys {
+                    keep += 1;
+                    cum += ((yv - z) as f64).exp();
+                    if cum >= p as f64 {
+                        break;
+                    }
+                }
+                keep.max(1)
+            }
+        };
+        let mut bias = vec![f32::NEG_INFINITY; logits.len()];
+        for &i in &order[..n_keep.min(order.len())] {
+            bias[i] = self.bias.as_ref().map_or(0.0, |b| b[i]);
+        }
+        Transform { temperature: self.temperature, bias: Some(bias) }
+    }
 }
 
 // --- the unified sampler trait -------------------------------------------
@@ -216,137 +294,50 @@ pub trait ExactSampler: Send + Sync {
             })
             .collect()
     }
+
+    /// Per-row-parameterized batch entry point: row `b` of the `[B, V]`
+    /// matrix samples under `ctxs[b]` — its own transform (temperature /
+    /// bias / truncation mask) and its own key.
+    ///
+    /// This is how heterogeneous batches sample **exactly**: each row keeps
+    /// the Philox coordinates it would have alone (`ctxs[b].row`, `step`),
+    /// so mixing rows with different `SamplingParams` in one batch never
+    /// changes any row's draw — the property that lets the scheduler
+    /// coalesce mixed-temperature requests into full buckets.
+    fn sample_batch_rows(
+        &self,
+        logits: &[f32],
+        vocab: usize,
+        ctxs: &[RowCtx<'_>],
+    ) -> Vec<Option<Draw>> {
+        assert!(vocab > 0, "vocab must be positive");
+        assert_eq!(
+            logits.len(),
+            vocab * ctxs.len(),
+            "logits [B, V] must match the per-row context count"
+        );
+        logits
+            .chunks_exact(vocab)
+            .zip(ctxs)
+            .map(|(row, ctx)| self.sample_row(row, *ctx))
+            .collect()
+    }
 }
 
 // --- the name-keyed registry ---------------------------------------------
 
 /// The six paper samplers, in paper order — every name accepted by
-/// [`build_sampler`].
+/// [`SamplerSpec`] / [`build_sampler`].
 pub const SAMPLER_NAMES: [&str; 6] =
     ["gumbel", "multinomial", "grouped", "online", "distributed", "topk"];
 
-/// Key/value parameters parsed from a sampler spec string.
-struct SpecParams<'a> {
-    spec: &'a str,
-    pairs: Vec<(&'a str, &'a str)>,
-}
-
-impl<'a> SpecParams<'a> {
-    fn parse(spec: &'a str, params: Option<&'a str>) -> Result<Self> {
-        let mut pairs: Vec<(&str, &str)> = Vec::new();
-        if let Some(p) = params {
-            for item in p.split(',') {
-                let (k, v) = item.split_once('=').with_context(|| {
-                    format!("sampler spec '{spec}': expected key=value, got '{item}'")
-                })?;
-                let (k, v) = (k.trim(), v.trim());
-                if pairs.iter().any(|(seen, _)| *seen == k) {
-                    bail!("sampler spec '{spec}': duplicate parameter '{k}'");
-                }
-                pairs.push((k, v));
-            }
-        }
-        Ok(Self { spec, pairs })
-    }
-
-    fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
-        match self.pairs.iter().find(|(k, _)| *k == key) {
-            None => Ok(default),
-            Some((_, v)) => {
-                let n: usize = v.parse().with_context(|| {
-                    format!("sampler spec '{}': bad {key}='{v}'", self.spec)
-                })?;
-                if n == 0 {
-                    bail!("sampler spec '{}': {key} must be >= 1", self.spec);
-                }
-                Ok(n)
-            }
-        }
-    }
-
-    fn get_f32(&self, key: &str, default: f32) -> Result<f32> {
-        match self.pairs.iter().find(|(k, _)| *k == key) {
-            None => Ok(default),
-            Some((_, v)) => v.parse().with_context(|| {
-                format!("sampler spec '{}': bad {key}='{v}'", self.spec)
-            }),
-        }
-    }
-
-    /// Reject parameters no arm consumed (typo safety).
-    fn check_known(&self, known: &[&str]) -> Result<()> {
-        for (k, _) in &self.pairs {
-            if !known.contains(k) {
-                bail!(
-                    "sampler spec '{}': unknown parameter '{k}' (known: {})",
-                    self.spec,
-                    known.join(", ")
-                );
-            }
-        }
-        Ok(())
-    }
-}
-
-/// Build an [`ExactSampler`] from a config string (see the module docs for
-/// the grammar).  This is the only constructor the serving stack uses —
-/// sampler selection is always data, never code.
+/// Build an [`ExactSampler`] from a config string — the back-compat shim
+/// over the typed path: `spec.parse::<SamplerSpec>()?.build()`.  Legacy
+/// strings (`"grouped:group=64"`, ...) construct identical samplers to the
+/// pre-typed registry; typed call sites should hold a [`SamplerSpec`] and
+/// call [`SamplerSpec::build`] directly.
 pub fn build_sampler(spec: &str) -> Result<Box<dyn ExactSampler>> {
-    let spec = spec.trim();
-    let (name, params) = match spec.split_once(':') {
-        Some((n, p)) => (n.trim(), Some(p)),
-        None => (spec, None),
-    };
-    let p = SpecParams::parse(spec, params)?;
-    let sampler: Box<dyn ExactSampler> = match name {
-        "gumbel" => {
-            p.check_known(&["tile"])?;
-            let tile = match p.pairs.iter().any(|(k, _)| *k == "tile") {
-                true => Some(p.get_usize("tile", 0)?),
-                false => None,
-            };
-            Box::new(gumbel::GumbelMaxSampler { tile_v: tile })
-        }
-        "multinomial" => {
-            p.check_known(&[])?;
-            Box::new(multinomial::MultinomialSampler)
-        }
-        "grouped" => {
-            p.check_known(&["group"])?;
-            Box::new(grouped::GroupedSampler {
-                group_size: p.get_usize("group", grouped::DEFAULT_GROUP)?,
-            })
-        }
-        "online" => {
-            p.check_known(&["group"])?;
-            Box::new(online::OnlineSampler {
-                group_size: p.get_usize("group", grouped::DEFAULT_GROUP)?,
-            })
-        }
-        "distributed" => {
-            p.check_known(&["ranks"])?;
-            Box::new(distributed::DistributedSampler {
-                n_ranks: p.get_usize("ranks", distributed::DEFAULT_RANKS)?,
-            })
-        }
-        "topk" => {
-            p.check_known(&["k", "p", "tile"])?;
-            let top_p = p.get_f32("p", 1.0)?;
-            if !(top_p > 0.0 && top_p <= 1.0) {
-                bail!("sampler spec '{spec}': p must be in (0, 1], got {top_p}");
-            }
-            Box::new(topk::GumbelTopKSampler {
-                k: p.get_usize("k", topk::DEFAULT_K)?,
-                top_p,
-                tile_v: p.get_usize("tile", topk::DEFAULT_TILE_V)?,
-            })
-        }
-        other => bail!(
-            "unknown sampler '{other}' (known: {})",
-            SAMPLER_NAMES.join(", ")
-        ),
-    };
-    Ok(sampler)
+    spec.parse::<SamplerSpec>()?.build()
 }
 
 /// One default-configured instance of every registered sampler, in
@@ -438,6 +429,97 @@ mod tests {
         for s in default_samplers() {
             let ctx = RowCtx { transform: &t, key: Key::new(3, 4), row: 0, step: 0 };
             assert_eq!(s.sample_row(&logits, ctx), None, "{}", s.name());
+        }
+    }
+
+    #[test]
+    fn truncated_transform_masks_exactly_topk() {
+        let logits = vec![3.0f32, 1.0, 2.0, 0.0, -1.0];
+        let t = Transform::default().truncated(&logits, Some(2), None);
+        let bias = t.bias.as_ref().unwrap();
+        // Keep set = indices of the 2 largest logits {0, 2}.
+        assert_eq!(bias[0], 0.0);
+        assert_eq!(bias[2], 0.0);
+        for i in [1usize, 3, 4] {
+            assert_eq!(bias[i], f32::NEG_INFINITY, "index {i}");
+        }
+        // No truncation requested => transform unchanged (no bias).
+        assert!(Transform::default().truncated(&logits, None, None).bias.is_none());
+    }
+
+    #[test]
+    fn truncated_transform_nucleus_keeps_minimal_prefix() {
+        // Probs ~ [0.64, 0.24, 0.09, 0.03]; p=0.8 keeps the top two.
+        let logits = vec![3.0f32, 2.0, 1.0, 0.0];
+        let t = Transform::default().truncated(&logits, None, Some(0.8));
+        let bias = t.bias.as_ref().unwrap();
+        assert_eq!(bias[0], 0.0);
+        assert_eq!(bias[1], 0.0);
+        assert_eq!(bias[2], f32::NEG_INFINITY);
+        assert_eq!(bias[3], f32::NEG_INFINITY);
+        // p=1.0 keeps everything live.
+        let t = Transform::default().truncated(&logits, None, Some(1.0));
+        assert!(t.bias.as_ref().unwrap().iter().all(|&b| b == 0.0));
+        // The first survivor is always kept, even under a tiny p.
+        let t = Transform::default().truncated(&logits, None, Some(1e-6));
+        assert_eq!(t.bias.as_ref().unwrap()[0], 0.0);
+    }
+
+    #[test]
+    fn truncated_transform_preserves_base_bias_and_temperature() {
+        let logits = vec![0.0f32, 5.0, 1.0, 2.0];
+        // Base masks index 1 (the would-be argmax); truncation ranks the
+        // survivors only, under the base temperature.
+        let mut bias = vec![0.5f32; 4];
+        bias[1] = f32::NEG_INFINITY;
+        let base = Transform { temperature: 2.0, bias: Some(bias) };
+        let t = base.truncated(&logits, Some(1), None);
+        assert_eq!(t.temperature, 2.0);
+        let tb = t.bias.as_ref().unwrap();
+        assert_eq!(tb[3], 0.5); // survivor keeps the base bias value
+        for i in [0usize, 1, 2] {
+            assert_eq!(tb[i], f32::NEG_INFINITY, "index {i}");
+        }
+    }
+
+    #[test]
+    fn sample_batch_rows_matches_homogeneous_path_per_row() {
+        // A heterogeneous batch where every row happens to use the same
+        // transform must reproduce sample_batch exactly; rows with their own
+        // transforms must match their solo sample_row draws.
+        let key = Key::new(21, 4);
+        let vocab = 96usize;
+        let logits: Vec<f32> = (0..3 * vocab)
+            .map(|i| philox::uniform_at(key, i as u32, 8, 3, 0) - 0.5)
+            .collect();
+        let transforms = [
+            Transform::with_temperature(0.5),
+            Transform::with_temperature(1.0),
+            Transform::with_temperature(2.0),
+        ];
+        for s in default_samplers() {
+            let ctxs: Vec<RowCtx<'_>> = transforms
+                .iter()
+                .enumerate()
+                .map(|(b, t)| RowCtx { transform: t, key, row: b as u32, step: 3 })
+                .collect();
+            let hetero = s.sample_batch_rows(&logits, vocab, &ctxs);
+            assert_eq!(hetero.len(), 3, "{}", s.name());
+            for (b, row) in logits.chunks_exact(vocab).enumerate() {
+                let solo = s.sample_row(row, ctxs[b]);
+                assert_eq!(hetero[b], solo, "{} row {b}", s.name());
+            }
+            // Homogeneous contexts reduce to sample_batch.
+            let t = Transform::default();
+            let ctxs: Vec<RowCtx<'_>> = (0..3)
+                .map(|b| RowCtx { transform: &t, key, row: b as u32, step: 3 })
+                .collect();
+            assert_eq!(
+                s.sample_batch_rows(&logits, vocab, &ctxs),
+                s.sample_batch(&logits, vocab, &t, key, 3),
+                "{}",
+                s.name()
+            );
         }
     }
 

@@ -1,0 +1,329 @@
+//! Typed sampler specifications — the parse-once form of the registry's
+//! config-string grammar.
+//!
+//! A [`SamplerSpec`] is the single currency for sampler selection across
+//! the serving stack: `EngineConfig`, the launcher `Config`, the TP
+//! orchestrator strategies, the repro tables, and the benches all carry
+//! this enum instead of raw strings.  Strings appear only at the system
+//! boundary (config files, CLI `--set`), where they are parsed exactly
+//! once via [`FromStr`]; [`fmt::Display`] renders the canonical string
+//! back, and the two round-trip: `spec.to_string().parse() == spec` for
+//! every valid spec.
+//!
+//! The legacy entry point [`crate::sampling::build_sampler`] remains as a
+//! thin shim (`parse` + [`SamplerSpec::build`]) so existing config strings
+//! like `"grouped:group=64"` keep constructing identical samplers.
+
+use std::fmt;
+use std::str::FromStr;
+
+use anyhow::{bail, Context, Error, Result};
+
+use super::{distributed, grouped, gumbel, multinomial, online, topk, ExactSampler};
+
+/// Typed selection of one of the six paper samplers plus its parameters.
+///
+/// Parameter fields mirror the config-string grammar documented in the
+/// [`crate::sampling`] module docs; defaults match what the bare registry
+/// names construct.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SamplerSpec {
+    /// Alg. I.1 streaming Gumbel-Max; `tile = Some(t)` selects the
+    /// two-stage tile decomposition (Lemma D.5).
+    Gumbel { tile: Option<usize> },
+    /// Alg. A.1 materialized-logits baseline.
+    Multinomial,
+    /// Alg. I.2 parallel Group-Gumbel-Max.
+    Grouped { group: usize },
+    /// Alg. I.3 online merge (Lemma D.3).
+    Online { group: usize },
+    /// Alg. I.4 distributed tensor-parallel merge.
+    Distributed { ranks: usize },
+    /// Gumbel-Top-k candidate reduction (App. D.6), with nucleus mass
+    /// `top_p` applied on the reduced candidate set.
+    TopK { k: usize, top_p: f32, tile: usize },
+}
+
+impl Default for SamplerSpec {
+    /// The fused FlashSampling path (`"gumbel"`).
+    fn default() -> Self {
+        SamplerSpec::Gumbel { tile: None }
+    }
+}
+
+impl SamplerSpec {
+    /// Registry name (the string grammar's `<name>` head).
+    pub fn name(&self) -> &'static str {
+        match self {
+            SamplerSpec::Gumbel { .. } => "gumbel",
+            SamplerSpec::Multinomial => "multinomial",
+            SamplerSpec::Grouped { .. } => "grouped",
+            SamplerSpec::Online { .. } => "online",
+            SamplerSpec::Distributed { .. } => "distributed",
+            SamplerSpec::TopK { .. } => "topk",
+        }
+    }
+
+    /// Check parameter ranges (the constructors of this enum are public,
+    /// so a hand-built spec may carry values the parser would reject).
+    pub fn validate(&self) -> Result<()> {
+        match *self {
+            SamplerSpec::Gumbel { tile: Some(0) } => {
+                bail!("sampler spec 'gumbel': tile must be >= 1")
+            }
+            SamplerSpec::Grouped { group: 0 } | SamplerSpec::Online { group: 0 } => {
+                bail!("sampler spec '{}': group must be >= 1", self.name())
+            }
+            SamplerSpec::Distributed { ranks: 0 } => {
+                bail!("sampler spec 'distributed': ranks must be >= 1")
+            }
+            SamplerSpec::TopK { k, top_p, tile } => {
+                if k == 0 || tile == 0 {
+                    bail!("sampler spec 'topk': k and tile must be >= 1");
+                }
+                if !(top_p > 0.0 && top_p <= 1.0) {
+                    bail!("sampler spec 'topk': p must be in (0, 1], got {top_p}");
+                }
+                Ok(())
+            }
+            _ => Ok(()),
+        }
+    }
+
+    /// Construct the boxed [`ExactSampler`] this spec describes.
+    pub fn build(&self) -> Result<Box<dyn ExactSampler>> {
+        self.validate()?;
+        Ok(match *self {
+            SamplerSpec::Gumbel { tile } => {
+                Box::new(gumbel::GumbelMaxSampler { tile_v: tile })
+            }
+            SamplerSpec::Multinomial => Box::new(multinomial::MultinomialSampler),
+            SamplerSpec::Grouped { group } => {
+                Box::new(grouped::GroupedSampler { group_size: group })
+            }
+            SamplerSpec::Online { group } => {
+                Box::new(online::OnlineSampler { group_size: group })
+            }
+            SamplerSpec::Distributed { ranks } => {
+                Box::new(distributed::DistributedSampler { n_ranks: ranks })
+            }
+            SamplerSpec::TopK { k, top_p, tile } => {
+                Box::new(topk::GumbelTopKSampler { k, top_p, tile_v: tile })
+            }
+        })
+    }
+
+    /// Is this spec served by an AOT decode artifact?  Only the fused
+    /// FlashSampling path (`gumbel`) and the materialized-logits baseline
+    /// (`multinomial`) have `decode_*` executables; the other four are
+    /// host-side algorithms (TP leader, benches, repro).
+    pub fn is_artifact_backed(&self) -> bool {
+        matches!(self, SamplerSpec::Gumbel { .. } | SamplerSpec::Multinomial)
+    }
+
+    /// Does this spec select the baseline (materialized-logits) decode
+    /// artifact — the paper's §4.5 A/B switch?
+    pub fn uses_baseline_artifact(&self) -> bool {
+        matches!(self, SamplerSpec::Multinomial)
+    }
+}
+
+impl fmt::Display for SamplerSpec {
+    /// Canonical config-string form; [`FromStr`] inverts it exactly.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            SamplerSpec::Gumbel { tile: None } => write!(f, "gumbel"),
+            SamplerSpec::Gumbel { tile: Some(t) } => write!(f, "gumbel:tile={t}"),
+            SamplerSpec::Multinomial => write!(f, "multinomial"),
+            SamplerSpec::Grouped { group } => write!(f, "grouped:group={group}"),
+            SamplerSpec::Online { group } => write!(f, "online:group={group}"),
+            SamplerSpec::Distributed { ranks } => {
+                write!(f, "distributed:ranks={ranks}")
+            }
+            SamplerSpec::TopK { k, top_p, tile } => {
+                write!(f, "topk:k={k},p={top_p},tile={tile}")
+            }
+        }
+    }
+}
+
+/// Key/value parameters split out of a sampler spec string.
+struct SpecParams<'a> {
+    spec: &'a str,
+    pairs: Vec<(&'a str, &'a str)>,
+}
+
+impl<'a> SpecParams<'a> {
+    fn parse(spec: &'a str, params: Option<&'a str>) -> Result<Self> {
+        let mut pairs: Vec<(&str, &str)> = Vec::new();
+        if let Some(p) = params {
+            for item in p.split(',') {
+                let (k, v) = item.split_once('=').with_context(|| {
+                    format!("sampler spec '{spec}': expected key=value, got '{item}'")
+                })?;
+                let (k, v) = (k.trim(), v.trim());
+                if pairs.iter().any(|(seen, _)| *seen == k) {
+                    bail!("sampler spec '{spec}': duplicate parameter '{k}'");
+                }
+                pairs.push((k, v));
+            }
+        }
+        Ok(Self { spec, pairs })
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.pairs.iter().any(|(k, _)| *k == key)
+    }
+
+    /// Range checks (e.g. zero rejection) live in [`SamplerSpec::validate`],
+    /// the single enforcement point shared with hand-built specs.
+    fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.pairs.iter().find(|(k, _)| *k == key) {
+            None => Ok(default),
+            Some((_, v)) => v.parse().with_context(|| {
+                format!("sampler spec '{}': bad {key}='{v}'", self.spec)
+            }),
+        }
+    }
+
+    fn get_f32(&self, key: &str, default: f32) -> Result<f32> {
+        match self.pairs.iter().find(|(k, _)| *k == key) {
+            None => Ok(default),
+            Some((_, v)) => v.parse().with_context(|| {
+                format!("sampler spec '{}': bad {key}='{v}'", self.spec)
+            }),
+        }
+    }
+
+    /// Reject parameters no arm consumed (typo safety).
+    fn check_known(&self, known: &[&str]) -> Result<()> {
+        for (k, _) in &self.pairs {
+            if !known.contains(k) {
+                bail!(
+                    "sampler spec '{}': unknown parameter '{k}' (known: {})",
+                    self.spec,
+                    known.join(", ")
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+impl FromStr for SamplerSpec {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        let spec = s.trim();
+        let (name, params) = match spec.split_once(':') {
+            Some((n, p)) => (n.trim(), Some(p)),
+            None => (spec, None),
+        };
+        let p = SpecParams::parse(spec, params)?;
+        let parsed = match name {
+            "gumbel" => {
+                p.check_known(&["tile"])?;
+                let tile = if p.has("tile") {
+                    Some(p.get_usize("tile", 0)?)
+                } else {
+                    None
+                };
+                SamplerSpec::Gumbel { tile }
+            }
+            "multinomial" => {
+                p.check_known(&[])?;
+                SamplerSpec::Multinomial
+            }
+            "grouped" => {
+                p.check_known(&["group"])?;
+                SamplerSpec::Grouped {
+                    group: p.get_usize("group", grouped::DEFAULT_GROUP)?,
+                }
+            }
+            "online" => {
+                p.check_known(&["group"])?;
+                SamplerSpec::Online {
+                    group: p.get_usize("group", grouped::DEFAULT_GROUP)?,
+                }
+            }
+            "distributed" => {
+                p.check_known(&["ranks"])?;
+                SamplerSpec::Distributed {
+                    ranks: p.get_usize("ranks", distributed::DEFAULT_RANKS)?,
+                }
+            }
+            "topk" => {
+                p.check_known(&["k", "p", "tile"])?;
+                SamplerSpec::TopK {
+                    k: p.get_usize("k", topk::DEFAULT_K)?,
+                    top_p: p.get_f32("p", 1.0)?,
+                    tile: p.get_usize("tile", topk::DEFAULT_TILE_V)?,
+                }
+            }
+            other => bail!(
+                "unknown sampler '{other}' (known: {})",
+                super::SAMPLER_NAMES.join(", ")
+            ),
+        };
+        parsed.validate()?;
+        Ok(parsed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_display_roundtrip_is_identity() {
+        // Every shape of spec, bare names included: parse -> Display ->
+        // parse lands on the same typed value (the acceptance criterion).
+        for s in [
+            "gumbel",
+            "gumbel:tile=2048",
+            "multinomial",
+            "grouped:group=64",
+            "grouped",
+            "online:group=17",
+            "distributed:ranks=4",
+            "topk",
+            "topk:k=4,p=0.9",
+            "topk:k=8,p=0.95,tile=128",
+        ] {
+            let a: SamplerSpec = s.parse().unwrap();
+            let b: SamplerSpec = a.to_string().parse().unwrap();
+            assert_eq!(a, b, "round-trip broke for '{s}' -> '{a}'");
+        }
+    }
+
+    #[test]
+    fn display_is_canonical() {
+        let a: SamplerSpec = " grouped : group = 64 ".parse().unwrap();
+        assert_eq!(a.to_string(), "grouped:group=64");
+        assert_eq!(SamplerSpec::default().to_string(), "gumbel");
+        // Bare names render their defaults explicitly once parameters exist.
+        let t: SamplerSpec = "topk".parse().unwrap();
+        assert_eq!(t.to_string(), "topk:k=8,p=1,tile=2048");
+    }
+
+    #[test]
+    fn artifact_backed_classification() {
+        assert!(SamplerSpec::default().is_artifact_backed());
+        assert!(SamplerSpec::Multinomial.is_artifact_backed());
+        assert!(SamplerSpec::Multinomial.uses_baseline_artifact());
+        assert!(!SamplerSpec::default().uses_baseline_artifact());
+        assert!(!SamplerSpec::Grouped { group: 64 }.is_artifact_backed());
+        assert!(!SamplerSpec::TopK { k: 8, top_p: 1.0, tile: 2048 }
+            .is_artifact_backed());
+    }
+
+    #[test]
+    fn hand_built_specs_are_validated_at_build() {
+        assert!(SamplerSpec::Grouped { group: 0 }.build().is_err());
+        assert!(SamplerSpec::Distributed { ranks: 0 }.build().is_err());
+        assert!(SamplerSpec::TopK { k: 0, top_p: 1.0, tile: 1 }.build().is_err());
+        assert!(SamplerSpec::TopK { k: 1, top_p: 0.0, tile: 1 }.build().is_err());
+        assert!(SamplerSpec::Gumbel { tile: Some(0) }.build().is_err());
+        assert!(SamplerSpec::Gumbel { tile: None }.build().is_ok());
+    }
+}

@@ -14,7 +14,7 @@ use super::interconnect::{Interconnect, Message};
 use crate::runtime::{Runtime, Tensor};
 #[allow(unused_imports)]
 use crate::sampling::ExactSampler;
-use crate::sampling::{build_sampler, distributed, Key, Transform};
+use crate::sampling::{distributed, Key, RowCtx, SamplerSpec, Transform};
 
 /// Communication strategy (the paper's comparison axis).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -29,14 +29,14 @@ pub enum Strategy {
 }
 
 impl Strategy {
-    /// `ExactSampler` registry spec of the leader-side sampling pass this
+    /// Typed [`SamplerSpec`] of the leader-side sampling pass this
     /// strategy runs over materialized logits; `None` for the fan-out
     /// path, which merges per-rank summaries instead of re-sampling.
-    pub fn leader_sampler_spec(self) -> Option<&'static str> {
+    pub fn leader_sampler_spec(self) -> Option<SamplerSpec> {
         match self {
             Strategy::P2pFanout => None,
-            Strategy::AllGatherMultinomial => Some("multinomial"),
-            Strategy::AllGatherGumbel => Some("gumbel"),
+            Strategy::AllGatherMultinomial => Some(SamplerSpec::Multinomial),
+            Strategy::AllGatherGumbel => Some(SamplerSpec::default()),
         }
     }
 }
@@ -64,7 +64,7 @@ pub struct TpStepResult {
 }
 
 enum Work {
-    Step { h: Vec<f32>, seed: Key, step: u32, tau: f32, strategy: Strategy },
+    Step { h: Vec<f32>, seed: Key, step: u32, tau: Vec<f32>, strategy: Strategy },
     Shutdown,
 }
 
@@ -88,6 +88,7 @@ impl TpOrchestrator {
             cfg.n_ranks
         );
         anyhow::ensure!(w.len() == cfg.vocab * cfg.d_model, "bad weight size");
+        // (Each rank's Runtime::new refuses scalar-tau v1 artifact sets.)
         let vs = cfg.vocab / cfg.n_ranks;
         let fabric = Interconnect::new(cfg.n_ranks);
         let sample_artifact = format!(
@@ -126,8 +127,10 @@ impl TpOrchestrator {
                                     let seed_lit = Tensor::seed(seed).to_literal()?;
                                     let step_lit =
                                         Tensor::scalar_u32(step).to_literal()?;
-                                    let tau_lit =
-                                        Tensor::scalar_f32(tau).to_literal()?;
+                                    // tau: [B] — per-row temperatures
+                                    // shared by every rank (ABI v2).
+                                    let tau_lit = Tensor::F32(tau, vec![b])
+                                        .to_literal()?;
                                     let out = sample_exe.run_literals(&[
                                         &h_lit, &w_lit, &off_lit, &seed_lit,
                                         &step_lit, &tau_lit,
@@ -170,21 +173,30 @@ impl TpOrchestrator {
     }
 
     /// Run one decode step over all ranks with the given strategy.
+    ///
+    /// `tau` carries one temperature per batch row (the `tau: [B]` ABI) —
+    /// heterogeneous-temperature batches are first-class on the TP path.
     pub fn step(
         &mut self,
         h: &[f32],
         step: u32,
-        tau: f32,
+        tau: &[f32],
         strategy: Strategy,
     ) -> Result<TpStepResult> {
         anyhow::ensure!(h.len() == self.cfg.batch * self.cfg.d_model);
+        anyhow::ensure!(
+            tau.len() == self.cfg.batch,
+            "tau has {} entries for batch {}",
+            tau.len(),
+            self.cfg.batch
+        );
         self.bytes_before = self.fabric.total_bytes();
         for (tx, _) in &self.ranks {
             tx.send(Work::Step {
                 h: h.to_vec(),
                 seed: self.key,
                 step,
-                tau,
+                tau: tau.to_vec(),
                 strategy,
             })
             .context("rank channel closed")?;
@@ -238,15 +250,27 @@ impl TpOrchestrator {
                     }
                 }
                 // ...then run the separate sampling pass (the extra kernels
-                // the baseline pays for), selected by registry spec — the
-                // same seam the benches and repro tables use.
+                // the baseline pays for), selected by typed spec — the
+                // same seam the benches and repro tables use.  Per-row
+                // transforms keep heterogeneous tau exact on this path too.
                 let spec = strategy
                     .leader_sampler_spec()
                     .context("all-gather strategy without a leader sampler")?;
-                let sampler = build_sampler(spec)?;
-                let t = Transform::with_temperature(tau);
+                let sampler = spec.build()?;
+                let transforms: Vec<Transform> =
+                    tau.iter().map(|&t| Transform::with_temperature(t)).collect();
+                let ctxs: Vec<RowCtx<'_>> = transforms
+                    .iter()
+                    .enumerate()
+                    .map(|(row, t)| RowCtx {
+                        transform: t,
+                        key: self.key,
+                        row: row as u32,
+                        step,
+                    })
+                    .collect();
                 let samples = sampler
-                    .sample_batch(&logits, self.cfg.vocab, &t, self.key, step)
+                    .sample_batch_rows(&logits, self.cfg.vocab, &ctxs)
                     .into_iter()
                     .map(|d| d.context("empty row").map(|d| d.index as i32))
                     .collect::<Result<Vec<i32>>>()?;

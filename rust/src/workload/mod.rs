@@ -51,6 +51,10 @@ pub struct WorkloadGen {
     pub output_len: LengthDist,
     pub vocab: usize,
     pub temperature: f32,
+    /// Non-empty: each request draws its temperature uniformly from this
+    /// set instead of using `temperature` — models a mixed client
+    /// population (the workload the per-row tau ABI exists for).
+    pub temperature_choices: Vec<f32>,
 }
 
 impl WorkloadGen {
@@ -62,6 +66,7 @@ impl WorkloadGen {
             output_len: LengthDist::Uniform(32, 96),
             vocab,
             temperature: 1.0,
+            temperature_choices: Vec::new(),
         }
     }
 
@@ -86,12 +91,19 @@ impl WorkloadGen {
                         % self.vocab as i32
                 })
                 .collect();
+            let temperature = if self.temperature_choices.is_empty() {
+                self.temperature
+            } else {
+                let n = self.temperature_choices.len();
+                let j = ((self.u(14, i, 0) * n as f32) as usize).min(n - 1);
+                self.temperature_choices[j]
+            };
             out.push(RequestSpec {
                 id: i as u64,
                 arrival_s: t,
                 prompt,
                 max_new_tokens: olen,
-                temperature: self.temperature,
+                temperature,
             });
         }
         out
@@ -189,6 +201,23 @@ mod tests {
             assert!((10..=20).contains(&v));
             let a = LengthDist::Aime.draw(u);
             assert!((40..=121).contains(&a));
+        }
+    }
+
+    #[test]
+    fn temperature_choices_mix_the_population() {
+        let mut g = WorkloadGen::new(11, 5.0, 128);
+        g.temperature_choices = vec![0.5, 1.0, 2.0];
+        let reqs = g.generate(120);
+        for r in &reqs {
+            assert!(g.temperature_choices.contains(&r.temperature));
+        }
+        // All three temperatures appear (deterministically, given the seed).
+        for want in &g.temperature_choices {
+            assert!(
+                reqs.iter().any(|r| r.temperature == *want),
+                "temperature {want} never drawn"
+            );
         }
     }
 

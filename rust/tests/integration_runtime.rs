@@ -71,7 +71,7 @@ fn flash_sample_artifact_matches_rust_gumbel_pathwise() {
                 Tensor::F32(w.clone(), vec![v, d]),
                 Tensor::seed(SEED),
                 Tensor::scalar_u32(7), // step
-                Tensor::scalar_f32(1.0),
+                Tensor::F32(vec![1.0; b], vec![b]), // tau: [B] (ABI v2)
             ],
         )
         .unwrap();
@@ -104,7 +104,7 @@ fn flash_sample_temperature_path_matches() {
                     Tensor::F32(w.clone(), vec![v, d]),
                     Tensor::seed(SEED),
                     Tensor::scalar_u32(0),
-                    Tensor::scalar_f32(tau),
+                    Tensor::F32(vec![tau; b], vec![b]),
                 ],
             )
             .unwrap();
@@ -115,6 +115,48 @@ fn flash_sample_temperature_path_matches() {
         for (bi, e) in expect.iter().enumerate() {
             assert_eq!(got[bi] as u32, e.unwrap().index, "tau={tau} row {bi}");
         }
+    }
+}
+
+#[test]
+fn flash_sample_per_row_tau_matches_rust_per_row() {
+    // The tau: [B] ABI: every row of one kernel launch samples at its own
+    // temperature, pathwise identical to the Rust sampler run row-by-row
+    // with the matching transform.
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(dir).unwrap();
+    let (b, d, v) = (4usize, 256usize, 2048usize);
+    let h = randn(b * d, 15, 0.5);
+    let w = randn(v * d, 16, 0.05);
+    let taus = [0.5f32, 1.0, 2.0, 4.0];
+    let out = rt
+        .run(
+            "flash_sample_b4_d256_v2048",
+            &[
+                Tensor::F32(h.clone(), vec![b, d]),
+                Tensor::F32(w.clone(), vec![v, d]),
+                Tensor::seed(SEED),
+                Tensor::scalar_u32(2),
+                Tensor::F32(taus.to_vec(), vec![b]),
+            ],
+        )
+        .unwrap();
+    let got = out[0].as_i32().unwrap();
+    let logits = matmul_bt(&h, &w, b, d, v);
+    for (bi, &tau) in taus.iter().enumerate() {
+        let t = Transform::with_temperature(tau);
+        let expect = gumbel::sample_row(
+            &logits[bi * v..(bi + 1) * v],
+            &t,
+            SEED,
+            bi as u32,
+            2,
+        )
+        .unwrap();
+        assert_eq!(
+            got[bi] as u32, expect.index,
+            "row {bi} (tau={tau}): fused kernel diverged from per-row oracle"
+        );
     }
 }
 
@@ -133,7 +175,7 @@ fn flash_sample_logz_matches_rust_lse() {
                 Tensor::F32(w.clone(), vec![v, d]),
                 Tensor::seed(SEED),
                 Tensor::scalar_u32(0),
-                Tensor::scalar_f32(1.0),
+                Tensor::F32(vec![1.0; b], vec![b]),
             ],
         )
         .unwrap();
@@ -164,7 +206,7 @@ fn baseline_gumbel_artifact_matches_rust() {
                 Tensor::F32(w.clone(), vec![v, d]),
                 Tensor::seed(SEED),
                 Tensor::scalar_u32(3),
-                Tensor::scalar_f32(1.0),
+                Tensor::F32(vec![1.0; b], vec![b]),
             ],
         )
         .unwrap();
@@ -188,7 +230,7 @@ fn baseline_multinomial_artifact_is_valid_and_deterministic() {
         Tensor::F32(w.clone(), vec![v, d]),
         Tensor::seed(SEED),
         Tensor::scalar_u32(0),
-        Tensor::scalar_f32(1.0),
+        Tensor::F32(vec![1.0; b], vec![b]),
     ];
     let a = rt.run("baseline_multinomial_b4_d256_v2048", &inputs).unwrap();
     let b2 = rt.run("baseline_multinomial_b4_d256_v2048", &inputs).unwrap();
@@ -230,7 +272,7 @@ fn shard_artifacts_merge_to_single_device_sample() {
                     Tensor::I32(vec![(r * vs) as i32], vec![1]),
                     Tensor::seed(SEED),
                     Tensor::scalar_u32(step),
-                    Tensor::scalar_f32(1.0),
+                    Tensor::F32(vec![1.0; b], vec![b]),
                 ],
             )
             .unwrap();
@@ -250,7 +292,7 @@ fn shard_artifacts_merge_to_single_device_sample() {
                 Tensor::F32(w.clone(), vec![v, d]),
                 Tensor::seed(SEED),
                 Tensor::scalar_u32(step),
-                Tensor::scalar_f32(1.0),
+                Tensor::F32(vec![1.0; b], vec![b]),
             ],
         )
         .unwrap();
@@ -293,7 +335,7 @@ fn logits_store_ablation_artifact_runs() {
                 Tensor::F32(w.clone(), vec![v, d]),
                 Tensor::seed(SEED),
                 Tensor::scalar_u32(0),
-                Tensor::scalar_f32(1.0),
+                Tensor::F32(vec![1.0; b], vec![b]),
             ],
         )
         .unwrap();
@@ -318,7 +360,7 @@ fn logits_store_ablation_artifact_runs() {
                 Tensor::F32(w, vec![v, d]),
                 Tensor::seed(SEED),
                 Tensor::scalar_u32(0),
-                Tensor::scalar_f32(1.0),
+                Tensor::F32(vec![1.0; b], vec![b]),
             ],
         )
         .unwrap();

@@ -6,6 +6,7 @@
 use flashsampling::coordinator::{
     Engine, EngineConfig, FinishReason, Request, SamplingParams,
 };
+use flashsampling::sampling::SamplerSpec;
 use flashsampling::workload::WorkloadGen;
 
 fn artifacts_dir() -> Option<std::path::PathBuf> {
@@ -97,7 +98,7 @@ fn different_seed_changes_samples() {
 fn baseline_sampler_ab_switch_works() {
     // The §4.5 A/B: same engine semantics with the baseline decode artifact.
     let Some(mut e) = engine(EngineConfig {
-        baseline_sampler: true,
+        sampler: SamplerSpec::Multinomial,
         ..Default::default()
     }) else {
         return;
@@ -113,30 +114,25 @@ fn eos_token_stops_generation() {
     e.submit(Request {
         id: 1,
         prompt: vec![4, 2],
-        params: SamplingParams {
-            max_new_tokens: 4,
-            eos_token: None,
-            ..Default::default()
-        },
+        params: SamplingParams { max_new_tokens: 4, ..Default::default() },
     })
     .unwrap();
     let done = e.run_to_completion().unwrap();
     let first = done[0].tokens[0];
-    // Re-run with the known first sample as EOS: must stop after 1 token.
+    // Re-run with the known first sample as a stop token: one token only.
     let Some(mut e2) = engine(EngineConfig::default()) else { return };
     e2.submit(Request {
         id: 1,
         prompt: vec![4, 2],
         params: SamplingParams {
             max_new_tokens: 4,
-            eos_token: Some(first),
-            ..Default::default()
+            ..SamplingParams::with_eos(first)
         },
     })
     .unwrap();
     let done2 = e2.run_to_completion().unwrap();
     assert_eq!(done2[0].tokens, vec![first]);
-    assert_eq!(done2[0].finish, FinishReason::EosToken);
+    assert_eq!(done2[0].finish, FinishReason::StopToken);
 }
 
 #[test]
@@ -166,25 +162,113 @@ fn serve_open_loop_reports_metrics() {
 }
 
 #[test]
-fn temperature_grouping_separates_batches() {
+fn mixed_temperatures_complete_in_one_engine() {
     let Some(mut e) = engine(EngineConfig::default()) else { return };
-    e.submit(Request {
-        id: 1,
-        prompt: vec![1, 2],
-        params: SamplingParams { temperature: 1.0, max_new_tokens: 3, eos_token: None },
-    })
-    .unwrap();
-    e.submit(Request {
-        id: 2,
-        prompt: vec![3, 4],
-        params: SamplingParams { temperature: 0.5, max_new_tokens: 3, eos_token: None },
-    })
-    .unwrap();
+    for (id, tau) in [(1u64, 1.0f32), (2, 0.5)] {
+        e.submit(Request {
+            id,
+            prompt: vec![id as i32, id as i32 + 1],
+            params: SamplingParams {
+                temperature: tau,
+                max_new_tokens: 3,
+                ..Default::default()
+            },
+        })
+        .unwrap();
+    }
     let done = e.run_to_completion().unwrap();
     assert_eq!(done.len(), 2);
     for c in &done {
         assert_eq!(c.tokens.len(), 3);
     }
+}
+
+#[test]
+fn mixed_temperatures_fill_one_decode_bucket() {
+    // The occupancy claim of the tau: [B] redesign: 8 requests at 4 distinct
+    // temperatures decode as ONE full bucket per step — zero pad rows, mean
+    // decode batch 8.  (The pre-redesign scheduler fragmented this into 4
+    // two-row batches per decode round.)
+    let Some(mut e) = engine(EngineConfig::default()) else { return };
+    for i in 0..8u64 {
+        e.submit(Request {
+            id: i,
+            prompt: vec![1 + i as i32; 4],
+            params: SamplingParams {
+                temperature: 0.25 * (1 + i % 4) as f32,
+                max_new_tokens: 6,
+                ..Default::default()
+            },
+        })
+        .unwrap();
+    }
+    let done = e.run_to_completion().unwrap();
+    assert_eq!(done.len(), 8);
+    let pad = e.metrics.counters.get("decode_pad_rows").copied().unwrap_or(0);
+    assert_eq!(pad, 0, "mixed-temperature decode left pad rows");
+    assert_eq!(e.metrics.mean_batch(), 8.0, "decode buckets not full");
+}
+
+#[test]
+fn prefill_applies_per_row_temperature() {
+    // Regression for the first-token bug where `do_prefill` stretched
+    // `seqs.first()`'s temperature over the whole batch: in a mixed-tau
+    // prefill batch, each row's first token must be pathwise identical to
+    // the same row of a batch that uniformly uses THAT row's temperature
+    // (same seed, same Philox row/step => same noise; only tau differs).
+    let prompts: [Vec<i32>; 2] = [vec![3, 14, 15], vec![9, 26, 53]];
+    let run = |taus: [f32; 2]| -> Option<Vec<i32>> {
+        let mut e = engine(EngineConfig::default())?;
+        for (i, (prompt, tau)) in prompts.iter().zip(taus).enumerate() {
+            e.submit(Request {
+                id: i as u64,
+                prompt: prompt.clone(),
+                params: SamplingParams {
+                    temperature: tau,
+                    max_new_tokens: 1,
+                    ..Default::default()
+                },
+            })
+            .unwrap();
+        }
+        let mut done = e.run_to_completion().unwrap();
+        done.sort_by_key(|c| c.id);
+        Some(done.iter().map(|c| c.tokens[0]).collect())
+    };
+    let Some(mixed) = run([0.5, 2.0]) else { return };
+    let uniform_lo = run([0.5, 0.5]).unwrap();
+    let uniform_hi = run([2.0, 2.0]).unwrap();
+    // Row 0 sampled at tau=0.5 in both the mixed and the uniform-0.5 run.
+    assert_eq!(mixed[0], uniform_lo[0], "row 0 ignored its own temperature");
+    // Row 1 sampled at tau=2.0 must match the uniform-2.0 run, NOT the
+    // uniform-0.5 run it was glued to before the fix.
+    assert_eq!(mixed[1], uniform_hi[1], "row 1 ignored its own temperature");
+}
+
+#[test]
+fn unsupported_params_rejected_at_submit() {
+    // The fused artifacts carry per-row tau only (ABI v2); richer params
+    // must fail loudly at submit instead of silently sampling wrong.
+    let Some(mut e) = engine(EngineConfig::default()) else { return };
+    let err = e
+        .submit(Request {
+            id: 1,
+            prompt: vec![1, 2],
+            params: SamplingParams { top_k: Some(8), ..Default::default() },
+        })
+        .unwrap_err();
+    assert!(err.to_string().contains("top_k"), "{err}");
+    // Stop tokens and temperature ARE supported.
+    e.submit(Request {
+        id: 2,
+        prompt: vec![1, 2],
+        params: SamplingParams {
+            temperature: 0.3,
+            stop_tokens: vec![0],
+            ..Default::default()
+        },
+    })
+    .unwrap();
 }
 
 #[test]

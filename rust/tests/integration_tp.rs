@@ -68,7 +68,7 @@ fn fanout_matches_single_device_kernel() {
                 Tensor::F32(w.clone(), vec![V, D]),
                 Tensor::seed(Key::from_seed(SEED)),
                 Tensor::scalar_u32(3),
-                Tensor::scalar_f32(1.0),
+                Tensor::F32(vec![1.0; B], vec![B]),
             ],
         )
         .unwrap();
@@ -76,7 +76,7 @@ fn fanout_matches_single_device_kernel() {
 
     for n in [2usize, 4] {
         let mut orch = orchestrator(n, &w).unwrap();
-        let out = orch.step(&h, 3, 1.0, Strategy::P2pFanout).unwrap();
+        let out = orch.step(&h, 3, &[1.0; B], Strategy::P2pFanout).unwrap();
         assert_eq!(out.samples, expect, "TP{n} fan-out != single device");
         assert!(out.log_z.is_some());
         orch.shutdown().unwrap();
@@ -89,7 +89,7 @@ fn allgather_baselines_produce_valid_samples() {
     let h = randn(B * D, 3, 0.5);
     let Some(mut orch) = orchestrator(2, &w) else { return };
     for strategy in [Strategy::AllGatherMultinomial, Strategy::AllGatherGumbel] {
-        let out = orch.step(&h, 0, 1.0, strategy).unwrap();
+        let out = orch.step(&h, 0, &[1.0; B], strategy).unwrap();
         assert_eq!(out.samples.len(), B);
         assert!(out.samples.iter().all(|&s| (0..V as i32).contains(&s)));
     }
@@ -104,8 +104,8 @@ fn allgather_gumbel_matches_fanout_pathwise() {
     let w = randn(V * D, 6, 0.05);
     let h = randn(B * D, 5, 0.5);
     let Some(mut orch) = orchestrator(2, &w) else { return };
-    let a = orch.step(&h, 7, 1.0, Strategy::P2pFanout).unwrap();
-    let b = orch.step(&h, 7, 1.0, Strategy::AllGatherGumbel).unwrap();
+    let a = orch.step(&h, 7, &[1.0; B], Strategy::P2pFanout).unwrap();
+    let b = orch.step(&h, 7, &[1.0; B], Strategy::AllGatherGumbel).unwrap();
     assert_eq!(a.samples, b.samples);
     orch.shutdown().unwrap();
 }
@@ -116,8 +116,8 @@ fn wire_bytes_scale_as_paper_claims() {
     let h = randn(B * D, 7, 0.5);
     let Some(mut orch) = orchestrator(4, &w) else { return };
 
-    let fanout = orch.step(&h, 0, 1.0, Strategy::P2pFanout).unwrap();
-    let gather = orch.step(&h, 1, 1.0, Strategy::AllGatherGumbel).unwrap();
+    let fanout = orch.step(&h, 0, &[1.0; B], Strategy::P2pFanout).unwrap();
+    let gather = orch.step(&h, 1, &[1.0; B], Strategy::AllGatherGumbel).unwrap();
 
     // Fan-out: n ranks x B rows x 12 bytes.
     assert_eq!(fanout.wire_bytes, (4 * B * 12) as u64);
@@ -129,14 +129,31 @@ fn wire_bytes_scale_as_paper_claims() {
 }
 
 #[test]
+fn mixed_tau_fanout_matches_allgather_pathwise() {
+    // Per-row tau through the TP path: the rank kernels consume tau: [B],
+    // and the leader's all-gather + per-row Gumbel-Max over materialized
+    // logits draws from the same Philox streams — identical samples.
+    let w = randn(V * D, 14, 0.05);
+    let h = randn(B * D, 13, 0.5);
+    let taus = [0.5f32, 1.0, 2.0, 4.0];
+    let Some(mut orch) = orchestrator(2, &w) else { return };
+    let a = orch.step(&h, 9, &taus, Strategy::P2pFanout).unwrap();
+    let b = orch.step(&h, 9, &taus, Strategy::AllGatherGumbel).unwrap();
+    assert_eq!(a.samples, b.samples);
+    // And a batch-size mismatch in the tau vector is a hard error.
+    assert!(orch.step(&h, 10, &[1.0; 3], Strategy::P2pFanout).is_err());
+    orch.shutdown().unwrap();
+}
+
+#[test]
 fn steps_are_deterministic_and_fresh() {
     let w = randn(V * D, 10, 0.05);
     let h = randn(B * D, 9, 0.5);
     let Some(mut orch) = orchestrator(2, &w) else { return };
-    let a1 = orch.step(&h, 5, 1.0, Strategy::P2pFanout).unwrap();
-    let a2 = orch.step(&h, 5, 1.0, Strategy::P2pFanout).unwrap();
+    let a1 = orch.step(&h, 5, &[1.0; B], Strategy::P2pFanout).unwrap();
+    let a2 = orch.step(&h, 5, &[1.0; B], Strategy::P2pFanout).unwrap();
     assert_eq!(a1.samples, a2.samples); // same step => same draw
-    let b = orch.step(&h, 6, 1.0, Strategy::P2pFanout).unwrap();
+    let b = orch.step(&h, 6, &[1.0; B], Strategy::P2pFanout).unwrap();
     assert_ne!(a1.samples, b.samples); // fresh noise per step
     orch.shutdown().unwrap();
 }
@@ -146,8 +163,8 @@ fn link_stats_accumulate_per_rank() {
     let w = randn(V * D, 12, 0.05);
     let h = randn(B * D, 11, 0.5);
     let Some(mut orch) = orchestrator(2, &w) else { return };
-    orch.step(&h, 0, 1.0, Strategy::P2pFanout).unwrap();
-    orch.step(&h, 1, 1.0, Strategy::P2pFanout).unwrap();
+    orch.step(&h, 0, &[1.0; B], Strategy::P2pFanout).unwrap();
+    orch.step(&h, 1, &[1.0; B], Strategy::P2pFanout).unwrap();
     let stats = orch.link_stats();
     assert_eq!(stats.len(), 2);
     for s in stats {

@@ -9,9 +9,10 @@
 
 #[allow(unused_imports)]
 use flashsampling::sampling::ExactSampler;
+use flashsampling::coordinator::SamplingParams;
 use flashsampling::sampling::{
     self, build_sampler, distributed, grouped, gumbel, multinomial, online,
-    philox, topk, Key, RowCtx, Transform, SAMPLER_NAMES,
+    philox, topk, Key, RowCtx, SamplerSpec, Transform, SAMPLER_NAMES,
 };
 
 fn toy_logits(n: usize, seed: u64) -> Vec<f32> {
@@ -45,6 +46,114 @@ fn registry_covers_all_six_samplers() {
         .map(|s| s.name().to_string())
         .collect();
     assert_eq!(built, SAMPLER_NAMES.to_vec());
+}
+
+/// Every spec string round-trips `parse -> Display -> parse` onto the same
+/// typed value, and both parses build samplers that draw identically.
+#[test]
+fn spec_roundtrip_parse_display_parse() {
+    let logits = toy_logits(200, 7);
+    let t = Transform::default();
+    for spec_str in SPECS {
+        let spec: SamplerSpec = spec_str.parse().unwrap();
+        let rendered = spec.to_string();
+        let reparsed: SamplerSpec = rendered.parse().unwrap();
+        assert_eq!(spec, reparsed, "'{spec_str}' -> '{rendered}'");
+        let a = spec.build().unwrap();
+        let b = reparsed.build().unwrap();
+        for step in 0..10 {
+            let ctx = RowCtx { transform: &t, key: Key::new(1, 2), row: 0, step };
+            assert_eq!(a.sample_row(&logits, ctx), b.sample_row(&logits, ctx));
+        }
+    }
+}
+
+/// The `build_sampler` string shim constructs samplers identical to the
+/// typed path — legacy config strings keep working bit-for-bit.
+#[test]
+fn legacy_strings_build_identical_samplers() {
+    let logits = toy_logits(300, 8);
+    let t = Transform::default();
+    let pairs: [(&str, SamplerSpec); 4] = [
+        ("grouped:group=64", SamplerSpec::Grouped { group: 64 }),
+        ("gumbel:tile=96", SamplerSpec::Gumbel { tile: Some(96) }),
+        ("distributed:ranks=4", SamplerSpec::Distributed { ranks: 4 }),
+        (
+            "topk:k=8,p=0.9,tile=96",
+            SamplerSpec::TopK { k: 8, top_p: 0.9, tile: 96 },
+        ),
+    ];
+    for (legacy, typed) in pairs {
+        assert_eq!(legacy.parse::<SamplerSpec>().unwrap(), typed);
+        let via_string = build_sampler(legacy).unwrap();
+        let via_typed = typed.build().unwrap();
+        assert_eq!(via_string.name(), via_typed.name());
+        for step in 0..20 {
+            let ctx = RowCtx { transform: &t, key: Key::new(4, 2), row: 1, step };
+            assert_eq!(
+                via_string.sample_row(&logits, ctx),
+                via_typed.sample_row(&logits, ctx),
+                "{legacy} step {step}"
+            );
+        }
+    }
+}
+
+/// Heterogeneous batches through `sample_batch_rows`: each row keeps the
+/// exact draw it would make alone under its own transform — batching rows
+/// with different parameters changes nothing (the scheduler-coalescing
+/// exactness contract).
+#[test]
+fn heterogeneous_batch_rows_sample_independently() {
+    let vocab = 128usize;
+    let logits = toy_logits(4 * vocab, 9);
+    let key = Key::new(31, 7);
+    // Row 1 carries a per-request seed: its RowCtx key comes from
+    // SamplingParams::row_key, not the session key.
+    let seeded = SamplingParams { seed: Some(0xFEED), ..Default::default() };
+    let row_keys =
+        [key, seeded.row_key(key), key, key];
+    assert_ne!(row_keys[1], key);
+    // Four rows: two temperatures, one top-k truncation, one bias mask.
+    let masked: Vec<f32> = {
+        let mut bias = vec![f32::NEG_INFINITY; vocab];
+        for b in bias[32..64].iter_mut() {
+            *b = 0.0;
+        }
+        bias
+    };
+    let transforms: Vec<Transform> = vec![
+        Transform::with_temperature(0.5),
+        Transform::with_temperature(2.0),
+        Transform::default().truncated(&logits[2 * vocab..3 * vocab], Some(8), None),
+        Transform { temperature: 1.0, bias: Some(masked) },
+    ];
+    for spec in SPECS {
+        let s = build_sampler(spec).unwrap();
+        for step in 0..15 {
+            let ctxs: Vec<RowCtx<'_>> = transforms
+                .iter()
+                .enumerate()
+                .map(|(b, t)| RowCtx {
+                    transform: t,
+                    key: row_keys[b],
+                    row: b as u32,
+                    step,
+                })
+                .collect();
+            let batched = s.sample_batch_rows(&logits, vocab, &ctxs);
+            for (b, row) in logits.chunks_exact(vocab).enumerate() {
+                let solo = s.sample_row(row, ctxs[b]);
+                assert_eq!(batched[b], solo, "{spec} row {b} step {step}");
+            }
+            // Row 3's mask must hold through the batched path too.
+            let d = batched[3].unwrap();
+            assert!(
+                (32..64).contains(&(d.index as usize)),
+                "{spec}: masked row escaped its support"
+            );
+        }
+    }
 }
 
 /// Same spec + same Philox coordinates => identical draw, across separately
