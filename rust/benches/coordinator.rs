@@ -29,6 +29,7 @@ fn main() {
         prefill_t_buckets: vec![16, 64],
         prefill_b: 4,
         max_concurrency: 8,
+        max_tokens_per_step: 1,
     };
     let waiting = seqs(32, SeqState::Waiting);
     let running = seqs(8, SeqState::Running);

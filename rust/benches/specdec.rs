@@ -1,0 +1,142 @@
+//! Speculative-decode throughput: tokens/sec vs draft length K and
+//! acceptance rate, over the host-side `SpecDecodeLoop` (the logits-space
+//! instantiation of the engine's spec path — DESIGN.md §9).
+//!
+//! Grid: K ∈ {1, 2, 4, 8} × four drafters spanning the acceptance
+//! spectrum — the deterministic n-gram suffix drafter, the target itself
+//! as drafter (q = p ⇒ acceptance 1), a 60/40 blend of target and an
+//! independent head, and a fully independent head (mostly rejected).
+//! Each record carries the measured acceptance rate and tokens/step next
+//! to the timing, so `BENCH_specdec.json` directly feeds the
+//! `gpusim::tpot::SpecDecodeModel` operating points.  A plain sequential
+//! decode over the same target is the `drafter: "none"` reference row.
+//! Override the output path with the `BENCH_OUT` environment variable.
+
+use std::time::Duration;
+
+use flashsampling::benchutil::{
+    bench_with, black_box, json_object, json_str, write_bench_report,
+};
+use flashsampling::sampling::{Key, Transform};
+use flashsampling::specdec::{
+    baseline_generate, Blend, DraftModel, HashModel, NGramDraft, RuntimeDraft,
+    SpecDecodeLoop, SpecDecodeStats,
+};
+
+const VOCAB: usize = 2048;
+const MAX_NEW: usize = 64;
+const KS: [usize; 4] = [1, 2, 4, 8];
+const DRAFTERS: [&str; 4] = ["ngram", "runtime-self", "runtime-blend", "runtime-indep"];
+
+fn target() -> HashModel {
+    HashModel::new(VOCAB, 3, 0xBEC5)
+}
+
+/// A partly repetitive prompt so the n-gram drafter has suffix matches.
+fn prompt() -> Vec<i32> {
+    (0..16).map(|i| (i % 5) * 7 + 1).collect()
+}
+
+fn make_drafter(kind: &str) -> Box<dyn DraftModel> {
+    match kind {
+        "ngram" => Box::new(NGramDraft { n: 3, vocab: VOCAB }),
+        // The target itself at the target temperature: q == p, accept-all.
+        "runtime-self" => {
+            Box::new(RuntimeDraft::new(target(), 1.0, Key::new(0xA, 1)))
+        }
+        // Partial agreement: blend of target and an independent head.
+        "runtime-blend" => Box::new(RuntimeDraft::new(
+            Blend { a: target(), b: HashModel::new(VOCAB, 3, 0x0DD), w: 0.6 },
+            1.0,
+            Key::new(0xA, 2),
+        )),
+        // Independent head: near-zero agreement, residual path dominant.
+        _ => Box::new(RuntimeDraft::new(
+            HashModel::new(VOCAB, 3, 0x0DD),
+            1.0,
+            Key::new(0xA, 3),
+        )),
+    }
+}
+
+fn spec_run(kind: &str, k: usize, key: Key, prompt: &[i32]) -> SpecDecodeStats {
+    let t = target();
+    let mut drafter = make_drafter(kind);
+    let mut l = SpecDecodeLoop {
+        target: &t,
+        drafter: drafter.as_mut(),
+        transform: Transform::default(),
+        k,
+        key,
+    };
+    let r = l.generate(prompt, MAX_NEW, 0);
+    black_box(&r.tokens);
+    r.stats
+}
+
+fn main() {
+    let key = Key::new(0xB1, 0xB2);
+    let t = target();
+    let transform = Transform::default();
+    let prompt = prompt();
+    let mut records: Vec<String> = Vec::new();
+
+    println!("## specdec — tokens/sec vs K and acceptance (V={VOCAB}, {MAX_NEW} tokens/run)\n");
+
+    // Reference: plain sequential decode of the same budget.
+    let base = bench_with(
+        "specdec/none/sequential",
+        10,
+        Duration::from_millis(5),
+        || {
+            black_box(baseline_generate(&t, &transform, key, &prompt, MAX_NEW, 0));
+        },
+    );
+    let base_tps = MAX_NEW as f64 / base.median.as_secs_f64();
+    let mut fields = vec![
+        ("drafter", json_str("none")),
+        ("k", "0".to_string()),
+        ("vocab", VOCAB.to_string()),
+        ("max_new", MAX_NEW.to_string()),
+        ("acceptance_rate", "0".to_string()),
+        ("tokens_per_step", "1".to_string()),
+        ("tokens_per_sec", format!("{base_tps:.1}")),
+    ];
+    fields.extend(base.json_fields());
+    records.push(json_object(&fields));
+
+    for &k in &KS {
+        for kind in DRAFTERS {
+            // Accounting from one representative run (deterministic).
+            let stats = spec_run(kind, k, key, &prompt);
+            let label = format!("specdec/{kind}/K={k}");
+            let result = bench_with(&label, 10, Duration::from_millis(5), || {
+                spec_run(kind, k, key, &prompt);
+            });
+            let tps = MAX_NEW as f64 / result.median.as_secs_f64();
+            let mut fields = vec![
+                ("drafter", json_str(kind)),
+                ("k", k.to_string()),
+                ("vocab", VOCAB.to_string()),
+                ("max_new", MAX_NEW.to_string()),
+                ("acceptance_rate", format!("{:.4}", stats.acceptance_rate())),
+                ("tokens_per_step", format!("{:.3}", stats.tokens_per_step())),
+                ("tokens_per_sec", format!("{tps:.1}")),
+            ];
+            fields.extend(result.json_fields());
+            records.push(json_object(&fields));
+        }
+    }
+
+    let out = std::env::var("BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_specdec.json".to_string());
+    let path = std::path::PathBuf::from(out);
+    write_bench_report(&path, "specdec", &records).expect("writing report");
+    println!(
+        "\nwrote {} ({} records: {} drafters x {} Ks + 1 baseline)",
+        path.display(),
+        records.len(),
+        DRAFTERS.len(),
+        KS.len()
+    );
+}

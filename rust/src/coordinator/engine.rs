@@ -24,6 +24,7 @@ use crate::kvcache::{KvCacheConfig, KvCacheManager};
 use crate::metrics::ServingMetrics;
 use crate::runtime::{Runtime, Tensor};
 use crate::sampling::{Key, SamplerSpec};
+use crate::specdec::{coupled_emit_len, DraftModel, NGramDraft};
 use crate::workload::RequestSpec;
 
 /// Engine configuration.
@@ -37,14 +38,15 @@ pub struct EngineConfig {
     /// RNG seed for the whole serving session.
     pub seed: u64,
     /// Typed sampler selection — the one source of truth for which decode
-    /// artifact family runs.  The decode path is implemented by AOT
-    /// artifacts, of which there are two: [`SamplerSpec::Gumbel`] maps to
-    /// the fused FlashSampling decode artifact and
-    /// [`SamplerSpec::Multinomial`] to the baseline decode artifact (the
-    /// paper's §4.5 A/B switch).  Any other spec (grouped / online /
-    /// distributed / topk — host-side algorithms used by the TP leader,
-    /// benches, and repro tables) is rejected at engine construction
-    /// rather than silently substituted.
+    /// path runs.  [`SamplerSpec::Gumbel`] maps to the fused FlashSampling
+    /// decode artifact, [`SamplerSpec::Multinomial`] to the baseline
+    /// decode artifact (the paper's §4.5 A/B switch), and
+    /// [`SamplerSpec::SpecDecode`] to the speculative decode loop over the
+    /// fused artifact (DESIGN.md §9: n-gram drafts, Gumbel-coupled exact
+    /// verification, 1..=K+1 tokens per step).  Any other spec (grouped /
+    /// online / distributed / topk — host-side algorithms used by the TP
+    /// leader, benches, and repro tables) is rejected at engine
+    /// construction rather than silently substituted.
     pub sampler: SamplerSpec,
 }
 
@@ -74,8 +76,9 @@ impl EngineConfig {
         anyhow::ensure!(
             self.sampler.is_artifact_backed(),
             "EngineConfig::sampler = '{}': the decode path runs inside AOT \
-             artifacts, which exist only for 'gumbel' (fused FlashSampling) \
-             and 'multinomial' (baseline); '{}' is a host-side sampler \
+             artifacts, which exist only for 'gumbel' (fused FlashSampling), \
+             'multinomial' (baseline), and 'specdec' (speculative decode \
+             over the fused artifact); '{}' is a host-side sampler \
              (TP leader / benches / repro)",
             self.sampler,
             self.sampler.name()
@@ -141,6 +144,12 @@ impl Engine {
             prefill_t_buckets: model.prefill_t_buckets.clone(),
             prefill_b: model.prefill_b,
             max_concurrency: cfg.max_concurrency,
+            // Spec decode emits up to K+1 tokens per sequence per step;
+            // admission reserves that burst (see SchedulerConfig docs).
+            max_tokens_per_step: match cfg.sampler {
+                SamplerSpec::SpecDecode { k, .. } => k + 1,
+                _ => 1,
+            },
         };
         let kvmgr = KvCacheManager::new(KvCacheConfig {
             block_size: cfg.kv_block_size,
@@ -233,7 +242,13 @@ impl Engine {
         });
         let out = match p {
             Plan::Prefill { seq_ids, t_bucket } => self.do_prefill(&seq_ids, t_bucket),
-            Plan::Decode { seq_ids, b_bucket } => self.do_decode(&seq_ids, b_bucket),
+            Plan::Decode { seq_ids, b_bucket } => {
+                if let SamplerSpec::SpecDecode { k, ngram } = self.cfg.sampler {
+                    self.do_spec_decode(&seq_ids, b_bucket, k, ngram)
+                } else {
+                    self.do_decode(&seq_ids, b_bucket)
+                }
+            }
             Plan::Idle => Ok(Vec::new()),
         };
         self.metrics.bump("step_total_us", t0.elapsed().as_micros() as u64);
@@ -437,11 +452,57 @@ impl Engine {
         Ok(())
     }
 
-    fn do_decode(&mut self, seq_ids: &[u64], b_bucket: usize) -> Result<Vec<Completion>> {
-        let m = self.model().clone();
+    /// Gather the planned rows' per-sequence KV into the dense
+    /// `[L, B, H, S, Dh]` batch literals the decode artifacts consume —
+    /// the decode slow path, shared with the spec-decode inner loop.
+    fn gather_batch_kv(
+        &self,
+        rows: &[usize],
+        b_bucket: usize,
+    ) -> Result<(xla::Literal, xla::Literal)> {
+        let m = &self.rt.manifest().model;
         let row_len = m.n_heads * m.max_seq * m.head_dim();
         let kv_batch_len = m.n_layers * b_bucket * row_len;
+        let mut kv_k = vec![0.0f32; kv_batch_len];
+        let mut kv_v = vec![0.0f32; kv_batch_len];
+        for (slot, &ri) in rows.iter().enumerate() {
+            let s = &self.running[ri];
+            let kv = s.kv.as_ref().context("running sequence without KV")?;
+            for l in 0..m.n_layers {
+                let dst = (l * b_bucket + slot) * row_len;
+                let src = l * row_len;
+                kv_k[dst..dst + row_len]
+                    .copy_from_slice(&kv.k[src..src + row_len]);
+                kv_v[dst..dst + row_len]
+                    .copy_from_slice(&kv.v[src..src + row_len]);
+            }
+        }
+        let kv_shape =
+            vec![m.n_layers, b_bucket, m.n_heads, m.max_seq, m.head_dim()];
+        Ok((
+            Tensor::F32(kv_k, kv_shape.clone()).to_literal()?,
+            Tensor::F32(kv_v, kv_shape).to_literal()?,
+        ))
+    }
 
+    /// Remove finished rows from the running set (descending index keeps
+    /// positions stable), release their KV blocks, and convert them to
+    /// completions — the shared tail of both decode paths.
+    fn remove_finished(
+        &mut self,
+        mut finished: Vec<(usize, FinishReason)>,
+    ) -> Result<Vec<Completion>> {
+        finished.sort_by(|a, b| b.0.cmp(&a.0));
+        let mut completions = Vec::new();
+        for (ri, reason) in finished {
+            let s = self.running.remove(ri);
+            self.kvmgr.release(s.id)?;
+            completions.push(s.into_completion(reason));
+        }
+        Ok(completions)
+    }
+
+    fn do_decode(&mut self, seq_ids: &[u64], b_bucket: usize) -> Result<Vec<Completion>> {
         // Steady-state fast path: same batch as last step => reuse the
         // previous output literals as this step's KV inputs directly.
         let cache_hit = self
@@ -476,26 +537,7 @@ impl Engine {
             let c = self.decode_cache.take().unwrap();
             (c.kv_k, c.kv_v)
         } else {
-            let mut kv_k = vec![0.0f32; kv_batch_len];
-            let mut kv_v = vec![0.0f32; kv_batch_len];
-            for (slot, &ri) in rows.iter().enumerate() {
-                let s = &self.running[ri];
-                let kv = s.kv.as_ref().context("running sequence without KV")?;
-                for l in 0..m.n_layers {
-                    let dst = (l * b_bucket + slot) * row_len;
-                    let src = l * row_len;
-                    kv_k[dst..dst + row_len]
-                        .copy_from_slice(&kv.k[src..src + row_len]);
-                    kv_v[dst..dst + row_len]
-                        .copy_from_slice(&kv.v[src..src + row_len]);
-                }
-            }
-            let kv_shape =
-                vec![m.n_layers, b_bucket, m.n_heads, m.max_seq, m.head_dim()];
-            (
-                Tensor::F32(kv_k, kv_shape.clone()).to_literal()?,
-                Tensor::F32(kv_v, kv_shape).to_literal()?,
-            )
+            self.gather_batch_kv(&rows, b_bucket)?
         };
         self.metrics.bump("decode_pad_rows", (b_bucket - rows.len()) as u64);
         self.metrics.decode_batch_sizes.push(rows.len());
@@ -561,15 +603,209 @@ impl Engine {
             }
         }
 
-        // Remove finished rows (descending index to keep positions stable).
-        finished.sort_by(|a, b| b.0.cmp(&a.0));
-        let mut completions = Vec::new();
-        for (ri, reason) in finished {
-            let s = self.running.remove(ri);
-            self.kvmgr.release(s.id)?;
-            completions.push(s.into_completion(reason));
+        self.remove_finished(finished)
+    }
+
+    // --- speculative decode (DESIGN.md §9) -------------------------------
+
+    /// One speculative engine step over the planned decode batch.
+    ///
+    /// Draft K tokens per row with the deterministic n-gram drafter, run
+    /// `K_max`+1 coupled target passes through the fused `decode_sample`
+    /// artifact (inner pass `j` feeds draft token `j−1` and samples the
+    /// target with fresh Philox noise — the step counter bumps per pass),
+    /// then emit each row's target samples while they agree with its draft:
+    /// the Gumbel-coupled token-matching rule
+    /// ([`crate::specdec::coupled_emit_len`]).  Every emitted token is
+    /// literally a target sample conditioned on the already-emitted
+    /// prefix, so the output distribution is exactly the target model's —
+    /// the construction that makes spec decode admissible on a
+    /// sample-only artifact ABI.
+    ///
+    /// KV rollback protocol: draft positions are reserved optimistically
+    /// ([`KvCacheManager::extend`]) and rejected positions are rolled back
+    /// afterwards ([`KvCacheManager::truncate`]).  Dense KV entries past
+    /// the verified length are dead under the positional causal mask and
+    /// get rewritten by later steps.
+    fn do_spec_decode(
+        &mut self,
+        seq_ids: &[u64],
+        b_bucket: usize,
+        k: usize,
+        ngram: usize,
+    ) -> Result<Vec<Completion>> {
+        let m = self.model().clone();
+
+        // Spec steps rewrite per-sequence KV lengths after verification,
+        // so the steady-state batch cache never carries across them.
+        self.sync_cache_to_seqs()?;
+
+        let rows: Vec<usize> = seq_ids
+            .iter()
+            .map(|id| {
+                self.running
+                    .iter()
+                    .position(|s| s.id == *id)
+                    .context("planned sequence vanished")
+            })
+            .collect::<Result<_>>()?;
+
+        // 1. Draft per row, capped so the burst fits the request budget
+        //    and max_seq, then clamped to the KV blocks the pool can
+        //    actually reserve right now (a short grant = a shorter draft
+        //    this step, never a failure).
+        let mut drafter = NGramDraft { n: ngram, vocab: m.vocab };
+        let mut drafts: Vec<Vec<i32>> = Vec::with_capacity(rows.len());
+        for (slot, &ri) in rows.iter().enumerate() {
+            let s = &self.running[ri];
+            let ctx: Vec<i32> =
+                s.prompt.iter().chain(s.generated.iter()).copied().collect();
+            let budget = s
+                .params
+                .max_new_tokens
+                .saturating_sub(s.generated.len())
+                .saturating_sub(1);
+            let room = m.max_seq.saturating_sub(s.context_len() + 1);
+            let kk = k.min(budget).min(room);
+            // Real Philox coordinates per the DraftModel contract (the
+            // n-gram drafter is deterministic and ignores them, but a
+            // stochastic drafter substituted here must not collapse its
+            // noise across rows/steps).
+            drafts.push(drafter.draft(&ctx, kk, slot as u32, self.step_counter).tokens);
         }
-        Ok(completions)
+        let mut reserved = vec![0usize; rows.len()];
+        for (slot, &ri) in rows.iter().enumerate() {
+            let id = self.running[ri].id;
+            reserved[slot] = self.kvmgr.extend(id, drafts[slot].len())?;
+            drafts[slot].truncate(reserved[slot]);
+        }
+        let k_max = drafts.iter().map(|d| d.len()).max().unwrap_or(0);
+
+        // 2. Gather the batch KV once; the inner passes keep it device-
+        //    adjacent as literals, exactly like the decode fast path.
+        let (mut kvk_lit, mut kvv_lit) = self.gather_batch_kv(&rows, b_bucket)?;
+
+        let exe = self.rt.load(&format!("decode_sample_b{b_bucket}"))?;
+        let base_pos: Vec<usize> =
+            rows.iter().map(|&ri| self.running[ri].next_pos()).collect();
+        let base_tok: Vec<i32> =
+            rows.iter().map(|&ri| self.running[ri].input_token()).collect();
+        let mut taus = vec![1.0f32; b_bucket];
+        for (slot, &ri) in rows.iter().enumerate() {
+            taus[slot] = self.running[ri].params.temperature;
+        }
+        // Loop-invariant literals: the session seed and the per-row taus
+        // do not change across the inner passes.
+        let seed_lit = Tensor::seed(self.key).to_literal()?;
+        let tau_lit = Tensor::F32(taus, vec![b_bucket]).to_literal()?;
+
+        // 3. K_max+1 coupled target passes.  Rows with a shorter draft
+        //    replay their last (token, position) — a deterministic rewrite
+        //    of identical KV, i.e. a no-op — and their surplus samples are
+        //    discarded below.
+        let mut samples_per_row: Vec<Vec<i32>> = vec![Vec::new(); rows.len()];
+        for j in 0..=k_max {
+            let mut pos = vec![0i32; b_bucket];
+            let mut tok = vec![0i32; b_bucket];
+            for slot in 0..rows.len() {
+                let jj = j.min(drafts[slot].len());
+                pos[slot] = (base_pos[slot] + jj) as i32;
+                tok[slot] =
+                    if jj == 0 { base_tok[slot] } else { drafts[slot][jj - 1] };
+            }
+            let pos_lit = Tensor::I32(pos, vec![b_bucket]).to_literal()?;
+            let tok_lit = Tensor::I32(tok, vec![b_bucket]).to_literal()?;
+            let step_lit = Tensor::scalar_u32(self.bump_step()).to_literal()?;
+            let mut lits: Vec<&xla::Literal> = self.params_lit.iter().collect();
+            lits.extend([&kvk_lit, &kvv_lit, &pos_lit, &tok_lit, &seed_lit,
+                         &step_lit, &tau_lit]);
+            let mut out = exe.run_literals_raw(&lits)?;
+            anyhow::ensure!(
+                out.len() == 3,
+                "decode artifact returned {} outputs",
+                out.len()
+            );
+            let sample_lit = out.pop().unwrap();
+            kvv_lit = out.pop().unwrap();
+            kvk_lit = out.pop().unwrap();
+            let samples = Tensor::from_literal(&sample_lit)?.as_i32()?.to_vec();
+            for (slot, row_samples) in samples_per_row.iter_mut().enumerate() {
+                if j <= drafts[slot].len() {
+                    row_samples.push(samples[slot]);
+                }
+            }
+        }
+
+        // 4. Fold the final KV literals back into per-sequence storage
+        //    (positions past each row's verified length are dead data).
+        self.decode_cache = Some(DecodeCache {
+            seq_ids: seq_ids.to_vec(),
+            b_bucket,
+            kv_k: kvk_lit,
+            kv_v: kvv_lit,
+        });
+        self.sync_cache_to_seqs()?;
+
+        // 5. Coupled verification, token bookkeeping, KV rollback.
+        let now = Instant::now();
+        let mut finished: Vec<(usize, FinishReason)> = Vec::new();
+        for (slot, &ri) in rows.iter().enumerate() {
+            let draft = &drafts[slot];
+            let emit = coupled_emit_len(draft, &samples_per_row[slot]);
+            self.metrics.bump("spec_draft_tokens", draft.len() as u64);
+            self.metrics.bump("spec_accepted_tokens", (emit - 1) as u64);
+            let ctx_before = base_pos[slot] + 1; // prompt + generated so far
+            let s = &mut self.running[ri];
+            let prev = s.last_token_at;
+            let mut emitted = 0usize;
+            let mut fin: Option<FinishReason> = None;
+            for &t in &samples_per_row[slot][..emit] {
+                s.generated.push(t);
+                emitted += 1;
+                self.metrics.tokens_generated += 1;
+                if let Some(reason) = s.finished() {
+                    fin = Some(reason);
+                    break;
+                }
+            }
+            if let Some(prev) = prev {
+                // The burst lands at one wall instant: spread the
+                // inter-step latency evenly so TPOT means stay honest.
+                let per = (now - prev) / emitted.max(1) as u32;
+                for _ in 0..emitted {
+                    s.timing.token_latencies.push(per);
+                }
+            }
+            s.last_token_at = Some(now);
+            let id = s.id;
+            // Reconcile the optimistic reservation with the verified
+            // length: truncate rejected positions, or account the bonus
+            // token of a fully accepted draft.
+            let final_len = ctx_before + emitted;
+            let reserved_len = ctx_before + reserved[slot];
+            if final_len < reserved_len {
+                self.metrics.bump(
+                    "spec_rollback_tokens",
+                    (reserved_len - final_len) as u64,
+                );
+                self.kvmgr.truncate(id, final_len)?;
+            } else if final_len > reserved_len
+                && fin.is_none()
+                && !self.kvmgr.append_token(id)?
+            {
+                self.metrics.bump("preempted", 1);
+                fin = Some(FinishReason::MaxTokens);
+            }
+            self.metrics.spec_tokens_per_step.push(emitted);
+            if let Some(reason) = fin {
+                finished.push((ri, reason));
+            }
+        }
+        self.metrics.bump("spec_rounds", 1);
+        self.metrics.bump("spec_inner_passes", (k_max + 1) as u64);
+        self.metrics.decode_batch_sizes.push(rows.len());
+
+        self.remove_finished(finished)
     }
 
     fn bump_step(&mut self) -> u32 {

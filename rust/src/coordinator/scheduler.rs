@@ -42,6 +42,13 @@ pub struct SchedulerConfig {
     pub prefill_b: usize,
     /// Upper bound on concurrently running sequences.
     pub max_concurrency: usize,
+    /// Upper bound on tokens one sequence can emit in a single engine
+    /// step: 1 for ordinary decode, K+1 under speculative decode
+    /// (`specdec:k=K`).  Admission control reserves this much extra KV
+    /// headroom per admitted sequence so a freshly prefilled sequence can
+    /// always absorb a full speculative burst without immediate
+    /// preemption.
+    pub max_tokens_per_step: usize,
 }
 
 /// Pick the smallest bucket >= n (or the largest available if n exceeds all).
@@ -68,10 +75,15 @@ pub fn plan(
         let headroom = cfg.max_concurrency - running.len();
         let max_t = *cfg.prefill_t_buckets.last().unwrap();
         // FCFS scan: take prompts that fit the cache (temperature is
-        // per-row in the artifact ABI, so no grouping constraint).
+        // per-row in the artifact ABI, so no grouping constraint).  The
+        // admission probe asks for the prompt PLUS one full step's token
+        // burst (max_tokens_per_step − 1 beyond the ordinary single
+        // token), so spec-decode bursts can't strand a just-admitted
+        // sequence.
+        let burst = cfg.max_tokens_per_step.max(1) - 1;
         let mut chosen: Vec<&Sequence> = Vec::new();
         for s in waiting.iter().filter(|s| s.state == SeqState::Waiting) {
-            if s.prompt.len() > max_t || !can_admit(s.context_len()) {
+            if s.prompt.len() > max_t || !can_admit(s.context_len() + burst) {
                 continue;
             }
             chosen.push(s);
@@ -113,6 +125,7 @@ mod tests {
             prefill_t_buckets: vec![16, 64],
             prefill_b: 4,
             max_concurrency: 8,
+            max_tokens_per_step: 1,
         }
     }
 
@@ -264,5 +277,43 @@ mod tests {
     #[test]
     fn idle_when_empty() {
         assert_eq!(plan(&cfg(), &[], &[], |_| true), Plan::Idle);
+    }
+
+    #[test]
+    fn spec_decode_headroom_inflates_the_admission_probe() {
+        // Under specdec:k=4 a sequence may emit 5 tokens per step; the
+        // admission check must ask the KV manager for prompt + 4 extra
+        // slots (ordinary decode: exactly the prompt).
+        let mut c = cfg();
+        c.max_tokens_per_step = 5;
+        let waiting = vec![seq(1, 10, 1.0, SeqState::Waiting)];
+        let asked = std::cell::Cell::new(0usize);
+        let p = plan(&c, &waiting, &[], |t| {
+            asked.set(t);
+            true
+        });
+        assert!(matches!(p, Plan::Prefill { .. }));
+        assert_eq!(asked.get(), 10 + 4);
+        // Ordinary decode keeps the original probe.
+        let p = plan(&cfg(), &waiting, &[], |t| {
+            asked.set(t);
+            true
+        });
+        assert!(matches!(p, Plan::Prefill { .. }));
+        assert_eq!(asked.get(), 10);
+    }
+
+    #[test]
+    fn burst_headroom_can_defer_admission_to_decode() {
+        // 12 free token slots: a 10-token prompt is admissible for plain
+        // decode but NOT with a 5-token burst reservation.
+        let mut c = cfg();
+        c.max_tokens_per_step = 5;
+        let waiting = vec![seq(1, 10, 1.0, SeqState::Waiting)];
+        let running = vec![seq(2, 5, 1.0, SeqState::Running)];
+        let p = plan(&c, &waiting, &running, |t| t <= 12);
+        assert_eq!(p, Plan::Decode { seq_ids: vec![2], b_bucket: 1 });
+        let p = plan(&cfg(), &waiting, &running, |t| t <= 12);
+        assert!(matches!(p, Plan::Prefill { .. }));
     }
 }

@@ -140,6 +140,59 @@ impl ModelSpec {
         let flash = self.tpot(gpu, b, Method::FlashSampling);
         1.0 - flash / base
     }
+
+    /// Modeled speculative-decode TPOT (seconds/token) at batch `b`.
+    ///
+    /// One round = K draft forwards + one batched verify pass, amortized
+    /// over the expected emitted tokens.  The verify pass streams the
+    /// target weights **once** for all K+1 scored positions — the
+    /// spec-decode premise that decode is bandwidth-bound, so scoring a
+    /// short token block costs ≈ one decode step — while the LM head +
+    /// fused sampling epilogue runs at the inflated batch `b·(K+1)` (every
+    /// position of every row samples).  Draft forwards cost
+    /// `draft_cost` × one target decode step each.
+    pub fn spec_tpot(&self, gpu: &GpuSpec, b: usize, sd: SpecDecodeModel) -> f64 {
+        let draft = sd.k as f64 * sd.draft_cost * self.backbone_time(gpu, b);
+        let verify = self.backbone_time(gpu, b)
+            + self.lm_head_time(gpu, b * (sd.k + 1), Method::FlashSampling);
+        (draft + verify) / sd.expected_tokens()
+    }
+
+    /// Speedup of speculative decode over plain FlashSampling decode —
+    /// the number that says whether a (K, acceptance, draft-cost) point
+    /// pays for itself on a given GPU spec.
+    pub fn spec_tpot_speedup(
+        &self,
+        gpu: &GpuSpec,
+        b: usize,
+        sd: SpecDecodeModel,
+    ) -> f64 {
+        self.tpot(gpu, b, Method::FlashSampling) / self.spec_tpot(gpu, b, sd)
+    }
+}
+
+/// Speculative-decode operating point for the TPOT model (DESIGN.md §9):
+/// draft length K, per-token acceptance probability α (measured by
+/// `ServingMetrics::spec_acceptance_rate` / the `specdec` bench), and the
+/// draft model's relative cost.
+#[derive(Clone, Copy, Debug)]
+pub struct SpecDecodeModel {
+    /// Draft length K (`specdec:k=K`).
+    pub k: usize,
+    /// Per-token draft acceptance probability α in [0, 1].
+    pub acceptance: f64,
+    /// One draft forward as a fraction of one target decode step
+    /// (≈0 for the n-gram drafter, ~0.1–0.3 for a small model head).
+    pub draft_cost: f64,
+}
+
+impl SpecDecodeModel {
+    /// Expected emitted tokens per round under i.i.d. per-token
+    /// acceptance: `E = 1 + α + α² + … + α^K` (accepted prefix plus the
+    /// residual/bonus token) — 1 at α = 0, K+1 at α = 1.
+    pub fn expected_tokens(&self) -> f64 {
+        (0..=self.k).map(|i| self.acceptance.powi(i as i32)).sum()
+    }
 }
 
 #[cfg(test)]
@@ -191,6 +244,59 @@ mod tests {
             let a = m.tpot(&B200, 1, Method::FlashSampling);
             let b = m.tpot(&B200, 64, Method::FlashSampling);
             assert!(b > a, "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn spec_expected_tokens_formula() {
+        let e = |k, a| SpecDecodeModel { k, acceptance: a, draft_cost: 0.1 }
+            .expected_tokens();
+        assert!((e(4, 0.0) - 1.0).abs() < 1e-12); // nothing accepted
+        assert!((e(4, 1.0) - 5.0).abs() < 1e-12); // everything accepted
+        assert!((e(2, 0.5) - 1.75).abs() < 1e-12); // 1 + 1/2 + 1/4
+        // Monotone in both K and acceptance.
+        assert!(e(8, 0.8) > e(4, 0.8));
+        assert!(e(4, 0.9) > e(4, 0.5));
+    }
+
+    #[test]
+    fn spec_decode_pays_off_at_high_acceptance_only() {
+        for m in PAPER_MODELS {
+            for &b in &[1usize, 8] {
+                // Cheap drafter at good acceptance: a real win.
+                let good = SpecDecodeModel { k: 4, acceptance: 0.8, draft_cost: 0.05 };
+                let s = m.spec_tpot_speedup(&B200, b, good);
+                assert!(s > 1.0, "{} B={b}: speedup {s}", m.name);
+                // Nothing ever accepted: pure overhead, guaranteed loss.
+                let bad = SpecDecodeModel { k: 4, acceptance: 0.0, draft_cost: 0.05 };
+                let s = m.spec_tpot_speedup(&B200, b, bad);
+                assert!(s < 1.0, "{} B={b}: speedup {s}", m.name);
+            }
+        }
+    }
+
+    #[test]
+    fn spec_speedup_monotone_in_acceptance() {
+        let mk = |a| SpecDecodeModel { k: 4, acceptance: a, draft_cost: 0.1 };
+        let mut prev = 0.0;
+        for a in [0.0, 0.25, 0.5, 0.75, 0.95] {
+            let s = QWEN3_8B.spec_tpot_speedup(&B200, 8, mk(a));
+            assert!(s > prev, "acceptance {a}: {s} !> {prev}");
+            prev = s;
+        }
+    }
+
+    #[test]
+    fn expensive_drafters_erase_the_win() {
+        // At draft_cost → 1 (draft as costly as the target), even perfect
+        // acceptance barely breaks even across K forwards.
+        let sd = SpecDecodeModel { k: 4, acceptance: 0.8, draft_cost: 1.0 };
+        for m in PAPER_MODELS {
+            assert!(
+                m.spec_tpot_speedup(&B200, 8, sd) < 1.0,
+                "{}",
+                m.name
+            );
         }
     }
 

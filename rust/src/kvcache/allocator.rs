@@ -119,6 +119,12 @@ impl BlockTable {
         self.len = len;
     }
 
+    /// Remove and return the last block (speculative-decode rollback; the
+    /// caller owns the refcount bookkeeping and the `len` invariant).
+    pub(crate) fn pop(&mut self) -> Option<BlockId> {
+        self.blocks.pop()
+    }
+
     /// Map a logical token position to (block, offset) — what a paged
     /// attention kernel would consume.
     pub fn locate(&self, pos: usize) -> Option<(BlockId, usize)> {

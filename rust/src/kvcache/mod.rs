@@ -97,6 +97,46 @@ impl KvCacheManager {
         Ok(true)
     }
 
+    /// Roll a sequence back to `new_len` tokens, releasing whole blocks
+    /// past the boundary — speculative decode's rejection rollback
+    /// (DESIGN.md §9): draft positions are reserved optimistically via
+    /// [`Self::extend`], then truncated away when the verifier rejects.
+    /// `new_len` must stay in `1..=len` (a live sequence never shrinks to
+    /// zero tokens).
+    pub fn truncate(&mut self, seq_id: u64, new_len: usize) -> Result<()> {
+        let Some(table) = self.tables.get_mut(&seq_id) else {
+            bail!("sequence {seq_id} not registered");
+        };
+        if new_len == 0 || new_len > table.len() {
+            bail!(
+                "truncate({seq_id}) to {new_len} outside 1..={}",
+                table.len()
+            );
+        }
+        let keep = new_len.div_ceil(self.config.block_size);
+        while table.num_blocks() > keep {
+            let b = table.pop().expect("num_blocks > keep >= 1");
+            self.allocator.free(b)?;
+        }
+        table.set_len(new_len);
+        Ok(())
+    }
+
+    /// Optimistically extend a sequence by up to `n` tokens, stopping
+    /// early when the pool runs dry; returns how many tokens were
+    /// granted.  Speculative decode reserves its draft positions this
+    /// way, then [`Self::truncate`]s back to the verified length — a
+    /// partially granted burst just means a shorter draft this step, not
+    /// a failure.
+    pub fn extend(&mut self, seq_id: u64, n: usize) -> Result<usize> {
+        for granted in 0..n {
+            if !self.append_token(seq_id)? {
+                return Ok(granted);
+            }
+        }
+        Ok(n)
+    }
+
     /// Release all blocks of a finished/preempted sequence.
     pub fn release(&mut self, seq_id: u64) -> Result<()> {
         let Some(table) = self.tables.remove(&seq_id) else {
@@ -208,6 +248,97 @@ mod tests {
         assert_eq!(m.utilization(), 0.0);
         m.register(1, 20).unwrap(); // 5 blocks
         assert!((m.utilization() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn truncate_releases_whole_blocks_past_the_boundary() {
+        let mut m = mgr(16); // block_size = 4
+        m.register(1, 10).unwrap(); // 3 blocks
+        assert_eq!(m.free_blocks(), 13);
+        // Shrinking within the same block frees nothing.
+        m.truncate(1, 9).unwrap();
+        assert_eq!(m.free_blocks(), 13);
+        assert_eq!(m.table(1).unwrap().len(), 9);
+        // Crossing block boundaries frees the tail blocks.
+        m.truncate(1, 4).unwrap();
+        assert_eq!(m.free_blocks(), 15);
+        assert_eq!(m.table(1).unwrap().num_blocks(), 1);
+        m.truncate(1, 1).unwrap();
+        assert_eq!(m.table(1).unwrap().num_blocks(), 1);
+        // Errors: growth, zero length, unknown sequence.
+        assert!(m.truncate(1, 2).is_err());
+        assert!(m.truncate(1, 0).is_err());
+        assert!(m.truncate(99, 1).is_err());
+        m.release(1).unwrap();
+        assert_eq!(m.free_blocks(), 16);
+    }
+
+    #[test]
+    fn extend_then_truncate_is_the_spec_decode_reservation_protocol() {
+        let mut m = mgr(4); // 16 token capacity
+        m.register(1, 4).unwrap(); // 1 block full
+        // Reserve a K=6 draft burst: grows to 10 tokens / 3 blocks.
+        assert_eq!(m.extend(1, 6).unwrap(), 6);
+        assert_eq!(m.table(1).unwrap().len(), 10);
+        assert_eq!(m.table(1).unwrap().num_blocks(), 3);
+        // Verifier accepted 1 of 6: roll back to 5 tokens.
+        m.truncate(1, 5).unwrap();
+        assert_eq!(m.table(1).unwrap().len(), 5);
+        assert_eq!(m.table(1).unwrap().num_blocks(), 2);
+        assert_eq!(m.free_blocks(), 2);
+        m.release(1).unwrap();
+        assert_eq!(m.free_blocks(), 4);
+    }
+
+    #[test]
+    fn extend_grants_partially_when_the_pool_runs_dry() {
+        let mut m = mgr(2); // 8 token capacity
+        m.register(1, 6).unwrap(); // 2 blocks, 2 slack slots
+        assert_eq!(m.extend(1, 5).unwrap(), 2); // only the slack fits
+        assert_eq!(m.table(1).unwrap().len(), 8);
+        // A zero grant is fine too — and changes nothing.
+        assert_eq!(m.extend(1, 3).unwrap(), 0);
+        assert_eq!(m.table(1).unwrap().len(), 8);
+        assert!(m.extend(99, 1).is_err());
+    }
+
+    #[test]
+    fn truncate_respects_copy_on_write_refcounts() {
+        let mut m = mgr(8);
+        m.register(1, 8).unwrap(); // 2 blocks
+        m.fork(1, 2).unwrap(); // shares both blocks
+        assert_eq!(m.free_blocks(), 6);
+        // Parent rolls back past a shared block: the block stays alive for
+        // the child (refcount), nothing returns to the pool yet.
+        m.truncate(1, 2).unwrap();
+        assert_eq!(m.free_blocks(), 6);
+        m.release(2).unwrap();
+        assert_eq!(m.free_blocks(), 7); // child's refs gone, tail block freed
+        m.release(1).unwrap();
+        assert_eq!(m.free_blocks(), 8);
+    }
+
+    #[test]
+    fn prop_extend_truncate_never_leaks() {
+        testutil::cases(64, 0x5DEC, |g| {
+            let mut m = mgr(32);
+            m.register(0, g.usize_in(1, 12)).unwrap();
+            for _ in 0..g.usize_in(1, 40) {
+                if g.bool(0.5) {
+                    let _ = m.extend(0, g.usize_in(0, 9)).unwrap();
+                } else {
+                    let len = m.table(0).unwrap().len();
+                    let target = g.usize_in(1, len);
+                    m.truncate(0, target).unwrap();
+                }
+                // Invariant: blocks exactly cover the logical length.
+                let t = m.table(0).unwrap();
+                assert!(t.num_blocks() * 4 >= t.len());
+                assert!((t.num_blocks() - 1) * 4 < t.len().max(1));
+            }
+            m.release(0).unwrap();
+            assert_eq!(m.free_blocks(), 32, "leaked blocks");
+        });
     }
 
     #[test]

@@ -39,6 +39,16 @@
 //! the repro tables all select algorithms through that one seam.  Per-row
 //! sampling parameters travel via [`coordinator::SamplingParams`] and the
 //! `ExactSampler::sample_batch_rows` entry point.
+//!
+//! # Speculative decoding
+//!
+//! The [`specdec`] subsystem (DESIGN.md §9) adds an alternative decode
+//! path: a [`specdec::DraftModel`] proposes K tokens, an exact verifier
+//! (accept with `min(1, p/q)`, Gumbel-argmax residual resample — or the
+//! Gumbel-coupled token-matching rule on the sample-only artifact path)
+//! keeps the output provably distributed as the target model, and the
+//! engine emits 1..=K+1 tokens per step.  Selected by
+//! `sampler = specdec:k=4,ngram=3`; verified by `repro specdec-chisq`.
 
 pub mod benchutil;
 pub mod config;
@@ -50,6 +60,7 @@ pub mod metrics;
 pub mod repro;
 pub mod runtime;
 pub mod sampling;
+pub mod specdec;
 pub mod testutil;
 pub mod tp;
 pub mod workload;

@@ -24,7 +24,7 @@ fn usage() -> ! {
         "usage: flashsampling <serve|repro|bench-kernel|selfcheck> [args]\n\
          \n\
          serve        --config FILE | --set key=value ...\n\
-         repro        <table1|table4|...|fig6|chisq|hetero-chisq|e2e-quality|all|stats> [--out DIR]\n\
+         repro        <table1|table4|...|fig6|chisq|hetero-chisq|specdec-chisq|e2e-quality|all|stats> [--out DIR]\n\
          bench-kernel [--set key=value ...]\n\
          selfcheck    [--set key=value ...]"
     );
@@ -75,7 +75,16 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
     gen.prompt_len = flashsampling::workload::LengthDist::Uniform(8, 48);
     gen.output_len = flashsampling::workload::LengthDist::Fixed(cfg.max_new_tokens);
     let reqs = gen.generate(cfg.num_requests);
-    let sampler_desc = if cfg.engine_config().uses_baseline_artifact() {
+    let sampler_desc = if let flashsampling::sampling::SamplerSpec::SpecDecode {
+        k,
+        ngram,
+    } = cfg.engine_config().sampler
+    {
+        format!(
+            "speculative decode (coupled verification over decode_sample, \
+             K={k}, n-gram order {ngram})"
+        )
+    } else if cfg.engine_config().uses_baseline_artifact() {
         "baseline multinomial (decode_baseline artifact)".to_string()
     } else {
         format!("FlashSampling (decode_sample artifact, spec `{}`)", cfg.sampler)
@@ -100,6 +109,19 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
         m.median_tpot().map(|d| d.as_secs_f64() * 1e3).unwrap_or(f64::NAN),
         m.mean_batch()
     );
+    if !m.spec_tokens_per_step.is_empty() {
+        // Acceptance is None when the drafter never proposed (e.g. no
+        // suffix repeats); the spec path still ran, so still report it.
+        let acc = m
+            .spec_acceptance_rate()
+            .map_or("n/a (no drafts)".to_string(), |a| {
+                format!("{:.1}%", a * 100.0)
+            });
+        println!(
+            "[serve] spec decode: acceptance {acc} | {:.2} tokens/step",
+            m.mean_spec_tokens_per_step()
+        );
+    }
     for (k, v) in &m.counters {
         println!("[serve] counter {k} = {v}");
     }

@@ -93,6 +93,10 @@ pub struct ServingMetrics {
     pub tpot: Vec<Duration>,
     /// Per-step decode batch sizes (batch-efficiency diagnostics).
     pub decode_batch_sizes: Vec<usize>,
+    /// Per-sequence tokens emitted in one speculative-decode engine step
+    /// (1..=K+1).  The ordinary decode path emits exactly 1 and records
+    /// nothing here; spec decode pushes one entry per (sequence, step).
+    pub spec_tokens_per_step: Vec<usize>,
     /// Wall-clock span of the run.
     pub wall: Duration,
     /// Named counters (preemptions, bucket padding waste, ...).
@@ -127,6 +131,31 @@ impl ServingMetrics {
         }
         self.decode_batch_sizes.iter().sum::<usize>() as f64
             / self.decode_batch_sizes.len() as f64
+    }
+
+    /// Mean tokens emitted per sequence per spec-decode engine step —
+    /// the speculative speedup currency (1.0 = no better than ordinary
+    /// decode, K+1 = every draft accepted).  0 when spec decode never ran.
+    pub fn mean_spec_tokens_per_step(&self) -> f64 {
+        if self.spec_tokens_per_step.is_empty() {
+            return 0.0;
+        }
+        self.spec_tokens_per_step.iter().sum::<usize>() as f64
+            / self.spec_tokens_per_step.len() as f64
+    }
+
+    /// Fraction of drafted tokens the verifier accepted, from the
+    /// `spec_draft_tokens` / `spec_accepted_tokens` counters; `None` when
+    /// nothing was drafted (spec decode off, or the drafter never
+    /// proposed).
+    pub fn spec_acceptance_rate(&self) -> Option<f64> {
+        let drafted = self.counters.get("spec_draft_tokens").copied().unwrap_or(0);
+        if drafted == 0 {
+            return None;
+        }
+        let accepted =
+            self.counters.get("spec_accepted_tokens").copied().unwrap_or(0);
+        Some(accepted as f64 / drafted as f64)
     }
 }
 
@@ -188,5 +217,19 @@ mod tests {
         assert_eq!(m.counters["preempted"], 3);
         m.decode_batch_sizes = vec![2, 4, 6];
         assert!((m.mean_batch() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn spec_decode_metrics() {
+        let mut m = ServingMetrics::default();
+        // Nothing recorded: neutral values, no division by zero.
+        assert_eq!(m.mean_spec_tokens_per_step(), 0.0);
+        assert_eq!(m.spec_acceptance_rate(), None);
+        // 3 spec steps emitting 5, 1, 3 tokens; 12 drafted, 6 accepted.
+        m.spec_tokens_per_step = vec![5, 1, 3];
+        m.bump("spec_draft_tokens", 12);
+        m.bump("spec_accepted_tokens", 6);
+        assert!((m.mean_spec_tokens_per_step() - 3.0).abs() < 1e-9);
+        assert!((m.spec_acceptance_rate().unwrap() - 0.5).abs() < 1e-9);
     }
 }

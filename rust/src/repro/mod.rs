@@ -4,8 +4,9 @@
 //! CSV) under `out_dir` — the DESIGN.md §5 experiment index maps ids to
 //! paper artifacts.  Simulator-backed experiments (tables 1/4/5/6/7/8/9,
 //! figures 2/3/4/5/6) use `gpusim`; statistical experiments (`chisq`,
-//! `hetero-chisq`, `e2e-quality`) run *real* sampling through the native
-//! samplers and, when artifacts are present, the serving engine.
+//! `hetero-chisq`, `specdec-chisq`, `e2e-quality`) run *real* sampling
+//! through the native samplers and, when artifacts are present, the
+//! serving engine.
 
 pub mod quality;
 pub mod tables;
@@ -21,7 +22,8 @@ pub const ALL: [&str; 13] = [
 
 /// Statistical experiments (run real sampling; `e2e-quality` needs
 /// artifacts and a few minutes).
-pub const STATS: [&str; 3] = ["chisq", "hetero-chisq", "e2e-quality"];
+pub const STATS: [&str; 4] =
+    ["chisq", "hetero-chisq", "specdec-chisq", "e2e-quality"];
 
 /// Regenerate one experiment into `out_dir`; returns the markdown.
 pub fn run(id: &str, out_dir: &Path) -> Result<String> {
@@ -42,6 +44,7 @@ pub fn run(id: &str, out_dir: &Path) -> Result<String> {
         "fig6" => tables::fig6(),
         "chisq" => quality::chisq()?,
         "hetero-chisq" => quality::hetero_chisq()?,
+        "specdec-chisq" => quality::specdec_chisq()?,
         "e2e-quality" => quality::e2e_quality(None)?,
         other => anyhow::bail!("unknown experiment id '{other}'"),
     };

@@ -226,6 +226,94 @@ pub fn hetero_chisq() -> Result<String> {
     Ok(md)
 }
 
+/// `specdec-chisq` — speculative decoding's exactness certificate
+/// (DESIGN.md §9, the acceptance criterion of the spec-decode subsystem).
+///
+/// Protocol: fix one context and its target distribution `p` (the
+/// **probs-space oracle**: f64 softmax of the target logits — computed
+/// independently of the verifier's arithmetic).  Run 10k independent
+/// verify rounds (fresh Philox step each), every round drafting K tokens
+/// with a drafter and running the full accept/reject recurrence
+/// (`specdec::Verifier`), and tally the FIRST emitted token.  Whatever
+/// the drafter — one-hot n-gram proposals, a same-head drafter at a
+/// different temperature, an independent head — the accept branch and the
+/// Gumbel-argmax residual branch must compose to exactly `p`, which the
+/// chi-squared GoF checks per drafter.  (Greedy token-for-token identity
+/// with the baseline decode path is the companion check, asserted by
+/// `tests/specdec.rs`.)
+pub fn specdec_chisq() -> Result<String> {
+    use crate::specdec::{
+        DraftModel, HashModel, LogitModel, NGramDraft, RuntimeDraft, Verifier,
+    };
+    const VS: usize = 256;
+    const K: usize = 2;
+    let target = HashModel::new(VS, 3, 0x5DEC);
+    // A context with internal repetition so the n-gram drafter proposes.
+    let ctx: Vec<i32> = vec![17, 42, 9, 17, 42, 9, 17, 42];
+    let t = Transform::default();
+    let logits = target.logits(&ctx);
+    let oracle = multinomial::probs(&logits, &t); // probs-space oracle
+    let verifier = Verifier { key: Key::new(0xD1, 0xD2) };
+
+    let mut md = String::from(
+        "## specdec — spec-decode exactness, chi-squared GoF of the first \
+         emitted token vs the probs-space oracle (V=256, K=2, 10k verify \
+         rounds per drafter)\n\n\
+         | drafter | acceptance | p-value | verdict |\n|---|---|---|---|\n",
+    );
+    let drafters: Vec<(&str, Box<dyn DraftModel>)> = vec![
+        ("n-gram suffix (one-hot q)", Box::new(NGramDraft { n: 2, vocab: VS })),
+        (
+            "runtime draft, same head at tau=2 (partial agreement)",
+            Box::new(RuntimeDraft::new(
+                HashModel::new(VS, 3, 0x5DEC),
+                2.0,
+                Key::new(0xD3, 0xD4),
+            )),
+        ),
+        (
+            "runtime draft, independent head (mostly rejected)",
+            Box::new(RuntimeDraft::new(
+                HashModel::new(VS, 3, 0xBEEF),
+                1.0,
+                Key::new(0xD5, 0xD6),
+            )),
+        ),
+    ];
+    for (name, mut drafter) in drafters {
+        let mut counts = vec![0u64; VS];
+        let mut drafted = 0u64;
+        let mut accepted = 0u64;
+        for s in 0..N_SAMPLES {
+            let proposal = drafter.draft(&ctx, K, 0, s);
+            let mut prefixes: Vec<Vec<i32>> =
+                Vec::with_capacity(proposal.len() + 1);
+            prefixes.push(ctx.clone());
+            for &x in &proposal.tokens {
+                let mut next = prefixes.last().unwrap().clone();
+                next.push(x);
+                prefixes.push(next);
+            }
+            let target_logits = target.logits_batch(&prefixes);
+            let out = verifier.verify_row(&target_logits, &t, &proposal, 0, s);
+            counts[out.tokens[0] as usize] += 1;
+            drafted += proposal.len() as u64;
+            accepted += out.accepted as u64;
+        }
+        let p = stats::chi_squared_pvalue(&counts, &oracle, N_SAMPLES as u64);
+        let acc = if drafted == 0 {
+            0.0
+        } else {
+            accepted as f64 / drafted as f64
+        };
+        // The acceptance bar: spec decode must be statistically
+        // indistinguishable from direct target sampling at p > 0.01.
+        let verdict = if p > 0.01 { "exact (not rejected)" } else { "REJECTED" };
+        md.push_str(&format!("| {name} | {acc:.2} | {p:.4} | {verdict} |\n"));
+    }
+    Ok(md)
+}
+
 /// Deterministic per-completion "correctness" checker: a synthetic task
 /// whose success probability is identical under any exact sampler (the
 /// §4.6 claim is that FlashSampling does not shift task accuracy).
@@ -315,5 +403,12 @@ mod tests {
         let md = super::hetero_chisq().unwrap();
         assert!(!md.contains("REJECTED"), "{md}");
         assert_eq!(md.matches("exact (not rejected)").count(), 7);
+    }
+
+    #[test]
+    fn specdec_chisq_matches_the_probs_space_oracle() {
+        let md = super::specdec_chisq().unwrap();
+        assert!(!md.contains("REJECTED"), "{md}");
+        assert_eq!(md.matches("exact (not rejected)").count(), 3);
     }
 }

@@ -33,8 +33,11 @@
 //!
 //! Recognised parameters: `tile` ([`gumbel`], [`topk`]), `group`
 //! ([`grouped`], [`online`]), `ranks` ([`distributed`]), `k` and `p`
-//! ([`topk`]).  Unknown names or parameters are errors, so config typos
-//! fail fast.
+//! ([`topk`]), `k` and `ngram` (`specdec` — the speculative-decode engine
+//! path, [`SamplerSpec::SpecDecode`]; parses and validates like any spec
+//! but is dispatched by the coordinator rather than built into an
+//! [`ExactSampler`]).  Unknown names or parameters are errors, so config
+//! typos fail fast.
 //!
 //! Exactness contract across the trait boundary: a sampler built from a
 //! spec draws from exactly the same Philox streams as the underlying

@@ -31,6 +31,18 @@ pub const STREAM_GUMBEL: u32 = 0;
 pub const STREAM_ROW_UNIFORM: u32 = 1;
 /// Stream id of the grouped/distributed outer selection draws.
 pub const STREAM_GROUP_SELECT: u32 = 2;
+/// Stream id of the speculative-decode accept/reject uniforms (counter
+/// `i` = draft position, so one verify round consumes at most K uniforms
+/// at `(0..K, row, step)` — see `crate::specdec::verify`).
+pub const STREAM_SPEC_ACCEPT: u32 = 16;
+/// Base stream id of a speculative drafter's own Gumbel draws: draft
+/// position `j` draws its vocab-indexed Gumbels on stream
+/// `STREAM_SPEC_DRAFT + j`.  Keeping the drafter on its own stream family
+/// makes the proposal independent of the verifier's accept uniforms AND of
+/// the target's own [`STREAM_GUMBEL`] epilogue draws at the same
+/// `(row, step)` — the independence the Chen et al. accept/reject proof
+/// requires.
+pub const STREAM_SPEC_DRAFT: u32 = 32;
 
 #[inline(always)]
 fn mulhilo(a: u32, b: u32) -> (u32, u32) {
@@ -358,5 +370,13 @@ mod tests {
         let c = uniform_at(key, 42, 7, STREAM_GROUP_SELECT, 0);
         assert_ne!(a, b);
         assert_ne!(b, c);
+        // The spec-decode streams are disjoint from the sampler streams
+        // and from each other across draft positions.
+        let d = uniform_at(key, 42, 7, STREAM_SPEC_ACCEPT, 0);
+        let e = uniform_at(key, 42, 7, STREAM_SPEC_DRAFT, 0);
+        let f = uniform_at(key, 42, 7, STREAM_SPEC_DRAFT + 1, 0);
+        assert_ne!(a, d);
+        assert_ne!(d, e);
+        assert_ne!(e, f);
     }
 }

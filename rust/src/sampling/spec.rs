@@ -42,6 +42,13 @@ pub enum SamplerSpec {
     /// Gumbel-Top-k candidate reduction (App. D.6), with nucleus mass
     /// `top_p` applied on the reduced candidate set.
     TopK { k: usize, top_p: f32, tile: usize },
+    /// Speculative decoding (DESIGN.md §9): draft `k` tokens with the
+    /// order-`ngram` deterministic suffix drafter, verify them against the
+    /// fused decode artifact with the Gumbel-coupled exact rule.  An
+    /// **engine decode path**, not a per-row sampler — [`SamplerSpec::build`]
+    /// rejects it; the coordinator dispatches on it instead
+    /// (`coordinator::engine`).  Spec string: `specdec:k=4,ngram=3`.
+    SpecDecode { k: usize, ngram: usize },
 }
 
 impl Default for SamplerSpec {
@@ -61,6 +68,7 @@ impl SamplerSpec {
             SamplerSpec::Online { .. } => "online",
             SamplerSpec::Distributed { .. } => "distributed",
             SamplerSpec::TopK { .. } => "topk",
+            SamplerSpec::SpecDecode { .. } => "specdec",
         }
     }
 
@@ -83,6 +91,15 @@ impl SamplerSpec {
                 }
                 if !(top_p > 0.0 && top_p <= 1.0) {
                     bail!("sampler spec 'topk': p must be in (0, 1], got {top_p}");
+                }
+                Ok(())
+            }
+            SamplerSpec::SpecDecode { k, ngram } => {
+                if k == 0 || ngram == 0 {
+                    bail!("sampler spec 'specdec': k and ngram must be >= 1");
+                }
+                if k > 64 {
+                    bail!("sampler spec 'specdec': k must be <= 64, got {k}");
                 }
                 Ok(())
             }
@@ -110,15 +127,25 @@ impl SamplerSpec {
             SamplerSpec::TopK { k, top_p, tile } => {
                 Box::new(topk::GumbelTopKSampler { k, top_p, tile_v: tile })
             }
+            SamplerSpec::SpecDecode { .. } => bail!(
+                "sampler spec 'specdec' selects the engine's speculative \
+                 decode path (coordinator), not a per-row ExactSampler"
+            ),
         })
     }
 
-    /// Is this spec served by an AOT decode artifact?  Only the fused
+    /// Is this spec served by an AOT decode artifact?  The fused
     /// FlashSampling path (`gumbel`) and the materialized-logits baseline
-    /// (`multinomial`) have `decode_*` executables; the other four are
-    /// host-side algorithms (TP leader, benches, repro).
+    /// (`multinomial`) have `decode_*` executables, and `specdec` runs the
+    /// fused `decode_sample` artifact inside its coupled verify loop; the
+    /// other four are host-side algorithms (TP leader, benches, repro).
     pub fn is_artifact_backed(&self) -> bool {
-        matches!(self, SamplerSpec::Gumbel { .. } | SamplerSpec::Multinomial)
+        matches!(
+            self,
+            SamplerSpec::Gumbel { .. }
+                | SamplerSpec::Multinomial
+                | SamplerSpec::SpecDecode { .. }
+        )
     }
 
     /// Does this spec select the baseline (materialized-logits) decode
@@ -142,6 +169,9 @@ impl fmt::Display for SamplerSpec {
             }
             SamplerSpec::TopK { k, top_p, tile } => {
                 write!(f, "topk:k={k},p={top_p},tile={tile}")
+            }
+            SamplerSpec::SpecDecode { k, ngram } => {
+                write!(f, "specdec:k={k},ngram={ngram}")
             }
         }
     }
@@ -260,8 +290,19 @@ impl FromStr for SamplerSpec {
                     tile: p.get_usize("tile", topk::DEFAULT_TILE_V)?,
                 }
             }
+            "specdec" => {
+                p.check_known(&["k", "ngram"])?;
+                SamplerSpec::SpecDecode {
+                    k: p.get_usize("k", crate::specdec::DEFAULT_K)?,
+                    ngram: p.get_usize("ngram", crate::specdec::DEFAULT_NGRAM)?,
+                }
+            }
+            // `specdec` is appended by hand: it is a valid spec name but
+            // deliberately NOT in SAMPLER_NAMES (that list enumerates the
+            // buildable per-row ExactSamplers; specdec never build()s —
+            // the coordinator dispatches on it instead).
             other => bail!(
-                "unknown sampler '{other}' (known: {})",
+                "unknown sampler '{other}' (known: {}, specdec)",
                 super::SAMPLER_NAMES.join(", ")
             ),
         };
@@ -289,6 +330,9 @@ mod tests {
             "topk",
             "topk:k=4,p=0.9",
             "topk:k=8,p=0.95,tile=128",
+            "specdec",
+            "specdec:k=8",
+            "specdec:k=2,ngram=5",
         ] {
             let a: SamplerSpec = s.parse().unwrap();
             let b: SamplerSpec = a.to_string().parse().unwrap();
@@ -304,6 +348,43 @@ mod tests {
         // Bare names render their defaults explicitly once parameters exist.
         let t: SamplerSpec = "topk".parse().unwrap();
         assert_eq!(t.to_string(), "topk:k=8,p=1,tile=2048");
+        let s: SamplerSpec = "specdec".parse().unwrap();
+        assert_eq!(s, SamplerSpec::SpecDecode { k: 4, ngram: 3 });
+        assert_eq!(s.to_string(), "specdec:k=4,ngram=3");
+    }
+
+    /// Satellite: property-style round-trip over a generated grid of specs
+    /// — every variant × parameter corners, `parse(display(s)) == s`.
+    #[test]
+    fn prop_roundtrip_over_generated_spec_grid() {
+        let corners: [usize; 6] = [1, 2, 7, 63, 64, 2048];
+        let masses: [f32; 5] = [0.1, 0.5, 0.9, 0.999, 1.0];
+        crate::testutil::cases(256, 0x5EC5, |g| {
+            let spec = match g.u32_in(0, 7) {
+                0 => SamplerSpec::Gumbel { tile: None },
+                1 => SamplerSpec::Gumbel { tile: Some(*g.choose(&corners)) },
+                2 => SamplerSpec::Multinomial,
+                3 => SamplerSpec::Grouped { group: *g.choose(&corners) },
+                4 => SamplerSpec::Online { group: *g.choose(&corners) },
+                5 => SamplerSpec::Distributed { ranks: *g.choose(&corners) },
+                6 => SamplerSpec::TopK {
+                    k: *g.choose(&corners),
+                    top_p: *g.choose(&masses),
+                    tile: *g.choose(&corners),
+                },
+                _ => SamplerSpec::SpecDecode {
+                    k: *g.choose(&[1usize, 2, 7, 63, 64]),
+                    ngram: *g.choose(&corners),
+                },
+            };
+            spec.validate().expect("grid specs are in range");
+            let rendered = spec.to_string();
+            let reparsed: SamplerSpec =
+                rendered.parse().unwrap_or_else(|e| {
+                    panic!("'{rendered}' failed to re-parse: {e}")
+                });
+            assert_eq!(spec, reparsed, "round-trip broke for '{rendered}'");
+        });
     }
 
     #[test]
@@ -315,6 +396,10 @@ mod tests {
         assert!(!SamplerSpec::Grouped { group: 64 }.is_artifact_backed());
         assert!(!SamplerSpec::TopK { k: 8, top_p: 1.0, tile: 2048 }
             .is_artifact_backed());
+        // specdec runs the fused decode artifact inside its verify loop.
+        let sd = SamplerSpec::SpecDecode { k: 4, ngram: 3 };
+        assert!(sd.is_artifact_backed());
+        assert!(!sd.uses_baseline_artifact());
     }
 
     #[test]
@@ -325,5 +410,20 @@ mod tests {
         assert!(SamplerSpec::TopK { k: 1, top_p: 0.0, tile: 1 }.build().is_err());
         assert!(SamplerSpec::Gumbel { tile: Some(0) }.build().is_err());
         assert!(SamplerSpec::Gumbel { tile: None }.build().is_ok());
+    }
+
+    #[test]
+    fn specdec_spec_parses_validates_and_never_builds() {
+        assert!("specdec:k=0".parse::<SamplerSpec>().is_err());
+        assert!("specdec:ngram=0".parse::<SamplerSpec>().is_err());
+        assert!("specdec:k=65".parse::<SamplerSpec>().is_err());
+        assert!("specdec:wat=1".parse::<SamplerSpec>().is_err());
+        let sd: SamplerSpec = "specdec:k=6,ngram=2".parse().unwrap();
+        assert_eq!(sd, SamplerSpec::SpecDecode { k: 6, ngram: 2 });
+        assert_eq!(sd.name(), "specdec");
+        assert!(sd.validate().is_ok());
+        // An engine decode path, not a per-row sampler.
+        let err = sd.build().unwrap_err();
+        assert!(err.to_string().contains("speculative"), "{err}");
     }
 }

@@ -1,0 +1,236 @@
+//! The speculative decode loop: draft → one batched target pass → exact
+//! verify, repeated until the budget is spent.
+//!
+//! This is the logits-space instantiation of the loop (host backends /
+//! [`LogitModel`]); `coordinator::engine::Engine` runs the same
+//! round structure against the sample-only AOT artifacts with the coupled
+//! verification rule (`crate::specdec::verify::coupled_emit_len`) — see
+//! DESIGN.md §9 for why both emit exactly the target distribution.
+
+use super::draft::DraftModel;
+use super::model::LogitModel;
+use super::verify::Verifier;
+use crate::sampling::philox::Key;
+use crate::sampling::{gumbel, Transform};
+
+/// Spec-decode accounting: enough to derive the two headline rates.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SpecDecodeStats {
+    /// Engine rounds (one draft + one batched verify each).
+    pub rounds: u64,
+    /// Tokens drafted in total.
+    pub drafted: u64,
+    /// Drafted tokens accepted by the verifier.
+    pub accepted: u64,
+    /// Tokens emitted (accepted + resample/bonus, clipped to the budget).
+    pub emitted: u64,
+    /// Rounds in which every draft survived and a bonus token was drawn.
+    pub bonus: u64,
+}
+
+impl SpecDecodeStats {
+    /// Fraction of drafted tokens accepted (0 when nothing was drafted).
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.drafted == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.drafted as f64
+        }
+    }
+
+    /// Mean tokens emitted per round — the spec-decode speedup currency
+    /// (1 ⇒ no better than ordinary decode, K+1 ⇒ every draft accepted).
+    pub fn tokens_per_step(&self) -> f64 {
+        if self.rounds == 0 {
+            0.0
+        } else {
+            self.emitted as f64 / self.rounds as f64
+        }
+    }
+}
+
+/// One generated sequence plus its accounting.
+#[derive(Clone, Debug)]
+pub struct SpecDecodeResult {
+    pub tokens: Vec<i32>,
+    pub stats: SpecDecodeStats,
+}
+
+/// The speculative decode loop over a [`LogitModel`] target.
+pub struct SpecDecodeLoop<'a> {
+    pub target: &'a dyn LogitModel,
+    pub drafter: &'a mut dyn DraftModel,
+    /// Target logit transform (temperature; bias folds in as anywhere
+    /// else).
+    pub transform: Transform,
+    /// Maximum draft length per round (the K of `specdec:k=K`).
+    pub k: usize,
+    /// Verifier key — plays the role of the engine session seed.
+    pub key: Key,
+}
+
+impl SpecDecodeLoop<'_> {
+    /// Generate exactly `max_new` tokens continuing `prompt`.  `row` is
+    /// the Philox row coordinate (batch slot); `step` starts at 0 and
+    /// advances once per round, so a generation replays exactly from
+    /// `(key, row)`.
+    pub fn generate(&mut self, prompt: &[i32], max_new: usize, row: u32) -> SpecDecodeResult {
+        let verifier = Verifier { key: self.key };
+        let mut generated: Vec<i32> = Vec::with_capacity(max_new);
+        let mut stats = SpecDecodeStats::default();
+        let mut step = 0u32;
+        while generated.len() < max_new {
+            let mut ctx: Vec<i32> =
+                Vec::with_capacity(prompt.len() + generated.len());
+            ctx.extend_from_slice(prompt);
+            ctx.extend_from_slice(&generated);
+            // Never draft past the budget: the verifier always emits the
+            // accepted prefix plus one, so at most remaining−1 drafts.
+            let k = self.k.min(max_new - generated.len() - 1);
+            let proposal = self.drafter.draft(&ctx, k, row, step);
+            // THE batched target pass: score all K+1 draft prefixes at
+            // once (on a real backend this is one forward over the
+            // drafted tokens, not K+1 sequential decodes).
+            let mut prefixes: Vec<Vec<i32>> =
+                Vec::with_capacity(proposal.len() + 1);
+            prefixes.push(ctx);
+            for &x in &proposal.tokens {
+                let mut next = prefixes.last().unwrap().clone();
+                next.push(x);
+                prefixes.push(next);
+            }
+            let target_logits = self.target.logits_batch(&prefixes);
+            let out =
+                verifier.verify_row(&target_logits, &self.transform, &proposal, row, step);
+            stats.rounds += 1;
+            stats.drafted += proposal.len() as u64;
+            stats.accepted += out.accepted as u64;
+            stats.bonus += u64::from(out.bonus);
+            for t in out.tokens {
+                if generated.len() == max_new {
+                    break;
+                }
+                generated.push(t);
+                stats.emitted += 1;
+            }
+            step += 1;
+        }
+        SpecDecodeResult { tokens: generated, stats }
+    }
+}
+
+/// The non-speculative reference: one target Gumbel draw per step, `step`
+/// advancing once per token.  Spec decode must match this in distribution
+/// — and token-for-token in the greedy (`tau → 0`) limit, where noise
+/// cannot flip any argmax (asserted by `tests/specdec.rs`).
+pub fn baseline_generate(
+    target: &dyn LogitModel,
+    transform: &Transform,
+    key: Key,
+    prompt: &[i32],
+    max_new: usize,
+    row: u32,
+) -> Vec<i32> {
+    let mut generated: Vec<i32> = Vec::with_capacity(max_new);
+    for step in 0..max_new as u32 {
+        let mut ctx: Vec<i32> = Vec::with_capacity(prompt.len() + generated.len());
+        ctx.extend_from_slice(prompt);
+        ctx.extend_from_slice(&generated);
+        let logits = target.logits(&ctx);
+        let d = gumbel::sample_row(&logits, transform, key, row, step)
+            .expect("target distribution has support");
+        generated.push(d.index as i32);
+    }
+    generated
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::specdec::model::HashModel;
+    use crate::specdec::ngram::NGramDraft;
+    use crate::specdec::runtime_draft::RuntimeDraft;
+
+    const V: usize = 64;
+
+    #[test]
+    fn generates_exactly_the_budget_and_consistent_stats() {
+        let target = HashModel::new(V, 3, 0x70);
+        let mut drafter = RuntimeDraft::new(HashModel::new(V, 3, 0x71), 1.0, Key::new(5, 6));
+        let mut l = SpecDecodeLoop {
+            target: &target,
+            drafter: &mut drafter,
+            transform: Transform::default(),
+            k: 4,
+            key: Key::new(9, 9),
+        };
+        for budget in [1usize, 2, 5, 33] {
+            let r = l.generate(&[3, 1, 4], budget, 0);
+            assert_eq!(r.tokens.len(), budget);
+            assert!(r.tokens.iter().all(|&t| (0..V as i32).contains(&t)));
+            assert_eq!(r.stats.emitted, budget as u64);
+            // Each round emits accepted+1 (clipping only drops tokens, so
+            // emitted <= accepted + rounds).
+            assert!(r.stats.emitted <= r.stats.accepted + r.stats.rounds);
+            assert!(r.stats.rounds >= 1);
+            assert!(r.stats.accepted <= r.stats.drafted);
+        }
+    }
+
+    #[test]
+    fn replays_exactly_from_the_key() {
+        let target = HashModel::new(V, 2, 0x72);
+        let run = || {
+            let mut drafter = NGramDraft { n: 3, vocab: V };
+            let mut l = SpecDecodeLoop {
+                target: &target,
+                drafter: &mut drafter,
+                transform: Transform::with_temperature(1.3),
+                k: 3,
+                key: Key::new(2, 8),
+            };
+            l.generate(&[7, 7, 7], 24, 1)
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.tokens, b.tokens);
+        assert_eq!(a.stats, b.stats);
+    }
+
+    #[test]
+    fn self_drafting_accepts_everything() {
+        // Draft with the target itself at the SAME temperature: q == p, so
+        // min(1, p/q) = 1 and every draft is accepted — acceptance 1.0 and
+        // K+1 tokens per round (modulo the budget tail).
+        let target = HashModel::new(V, 3, 0x73);
+        let mut drafter = RuntimeDraft::new(target, 1.0, Key::new(4, 4));
+        let mut l = SpecDecodeLoop {
+            target: &target,
+            drafter: &mut drafter,
+            transform: Transform::default(),
+            k: 4,
+            key: Key::new(6, 1),
+        };
+        let r = l.generate(&[2, 4, 6], 25, 0); // 5 full rounds of K+1
+        assert_eq!(r.tokens.len(), 25);
+        assert!((r.stats.acceptance_rate() - 1.0).abs() < 1e-12, "{:?}", r.stats);
+        assert!((r.stats.tokens_per_step() - 5.0).abs() < 1e-12, "{:?}", r.stats);
+    }
+
+    #[test]
+    fn stats_rates_handle_empty_denominators() {
+        let s = SpecDecodeStats::default();
+        assert_eq!(s.acceptance_rate(), 0.0);
+        assert_eq!(s.tokens_per_step(), 0.0);
+    }
+
+    #[test]
+    fn baseline_is_deterministic_and_step_indexed() {
+        let target = HashModel::new(V, 3, 0x74);
+        let t = Transform::default();
+        let a = baseline_generate(&target, &t, Key::new(1, 2), &[5, 5], 16, 0);
+        let b = baseline_generate(&target, &t, Key::new(1, 2), &[5, 5], 16, 0);
+        assert_eq!(a, b);
+        let c = baseline_generate(&target, &t, Key::new(1, 3), &[5, 5], 16, 0);
+        assert_ne!(a, c);
+    }
+}

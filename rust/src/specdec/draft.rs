@@ -1,0 +1,86 @@
+//! The drafting side of speculative decoding: the [`DraftModel`] trait and
+//! the proposal type it returns.
+//!
+//! A drafter proposes up to K continuation tokens for a context, together
+//! with the distribution each token was drawn from — `q_i` in the Chen et
+//! al. accept/reject recurrence.  Two built-in drafters implement the
+//! trait: the deterministic suffix drafter (`crate::specdec::NGramDraft`,
+//! one-hot `q`) and the model-backed drafter
+//! (`crate::specdec::RuntimeDraft`, `q = softmax` of a smaller head's
+//! logits).
+
+/// Up to K drafted tokens plus, for each, the draft distribution it was
+/// drawn from.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct DraftProposal {
+    /// Proposed continuation tokens `x_1..x_k` (possibly fewer than asked).
+    pub tokens: Vec<i32>,
+    /// `logits[i]` is the **final** draft distribution token `i` was drawn
+    /// from (any draft temperature already folded in):
+    /// `q_i = softmax(logits[i])`.  `-inf` marks zero support;
+    /// `logits[i][tokens[i]]` must be finite — a drafter may only propose
+    /// tokens its own distribution could produce (the accept ratio
+    /// `p/q` is undefined at `q = 0`).
+    pub logits: Vec<Vec<f32>>,
+}
+
+impl DraftProposal {
+    /// Number of drafted tokens.
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    /// Append one drafted token and the distribution it came from.
+    pub fn push(&mut self, token: i32, logits: Vec<f32>) {
+        debug_assert!(
+            logits
+                .get(token as usize)
+                .is_some_and(|l| l.is_finite()),
+            "drafted token must lie in its own support"
+        );
+        self.tokens.push(token);
+        self.logits.push(logits);
+    }
+}
+
+/// A draft model: proposes candidate continuations for the verifier to
+/// accept or reject.
+///
+/// Exactness contract: the *output* distribution of spec decode never
+/// depends on the drafter (only the acceptance rate does), provided the
+/// proposal satisfies the [`DraftProposal::logits`] support invariant and
+/// any drafter randomness is independent of the verifier's streams.
+/// Sampling drafters draw position `j` on Philox stream
+/// `crate::sampling::philox::STREAM_SPEC_DRAFT + j`; deterministic
+/// drafters ignore the coordinates entirely.
+pub trait DraftModel: Send {
+    /// Drafter name (metrics / bench labels).
+    fn name(&self) -> &'static str;
+
+    /// Propose up to `k` tokens continuing `ctx`.  `row`/`step` are the
+    /// Philox coordinates of the enclosing engine step.  Returning fewer
+    /// than `k` tokens (or none) is allowed — the round then degenerates
+    /// toward ordinary one-token decode.
+    fn draft(&mut self, ctx: &[i32], k: usize, row: u32, step: u32) -> DraftProposal;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn proposal_bookkeeping() {
+        let mut p = DraftProposal::default();
+        assert!(p.is_empty());
+        p.push(2, vec![f32::NEG_INFINITY, 0.0, 1.0]);
+        p.push(1, vec![0.5, 0.25, -1.0]);
+        assert_eq!(p.len(), 2);
+        assert!(!p.is_empty());
+        assert_eq!(p.tokens, vec![2, 1]);
+        assert_eq!(p.logits.len(), 2);
+    }
+}

@@ -1,0 +1,66 @@
+//! Speculative decoding with Gumbel-coupled **exact** verification
+//! (DESIGN.md §9).
+//!
+//! Spec decode (Chen et al., *Accelerating Large Language Model Decoding
+//! with Speculative Sampling*) hides decode latency by letting a cheap
+//! **drafter** propose K tokens, then verifying all K in one batched
+//! target pass: accepted prefixes cost one target step for up to K+1
+//! tokens.  The whole scheme is only admissible here because FlashSampling
+//! makes the verification *exact*: every accept/reject uniform, residual
+//! resample, and bonus draw is a deterministic function of Philox
+//! coordinates, so the output is provably distributed as the target model
+//! — and replayable token-for-token from `(seed, row, step)`.  The
+//! `repro specdec-chisq` experiment (`crate::repro::quality::specdec_chisq`)
+//! checks the claim with the same chi-squared machinery as the mixed-tau
+//! batches.
+//!
+//! # Layout
+//!
+//! | Module | Contents |
+//! |---|---|
+//! | [`model`] | [`LogitModel`] abstraction + deterministic test models |
+//! | [`draft`] | [`DraftModel`] trait, [`DraftProposal`] (tokens + q) |
+//! | [`ngram`] | [`NGramDraft`] — deterministic suffix drafter, one-hot q |
+//! | [`runtime_draft`] | [`RuntimeDraft`] — smaller-head drafter, q = softmax |
+//! | [`verify`] | [`Verifier`] accept/reject + [`coupled_emit_len`] |
+//! | [`decode`] | [`SpecDecodeLoop`], [`baseline_generate`], stats |
+//!
+//! # The two verifier instantiations
+//!
+//! * **Logits path** ([`Verifier::verify_row`]): accept draft `x_i` with
+//!   probability `min(1, p_i(x_i)/q_i(x_i))`; on first rejection resample
+//!   from the residual `(p_i − q_i)₊` by Gumbel argmax on the adjusted
+//!   logits — the standard recurrence, with all noise on dedicated Philox
+//!   streams (`STREAM_SPEC_ACCEPT`, `STREAM_SPEC_DRAFT + j`).
+//! * **Sample path** ([`coupled_emit_len`]): the AOT decode artifacts emit
+//!   samples, never logits, so `coordinator::engine` instead
+//!   samples the target once per drafted prefix (fresh noise each inner
+//!   pass) and emits the target's own samples while they agree with the
+//!   draft — Gumbel coupling through the shared deterministic noise makes
+//!   every emitted token an exact target sample given its prefix.
+//!
+//! Both constructions emit 1..=K+1 tokens per round and leave the output
+//! distribution identical to non-speculative decoding; the drafter only
+//! moves the acceptance rate.  Engine selection:
+//! `sampler = specdec:k=4,ngram=3` (a `SamplerSpec` variant — see
+//! `crate::sampling::SamplerSpec::SpecDecode`).
+
+pub mod decode;
+pub mod draft;
+pub mod model;
+pub mod ngram;
+pub mod runtime_draft;
+pub mod verify;
+
+pub use decode::{baseline_generate, SpecDecodeLoop, SpecDecodeResult, SpecDecodeStats};
+pub use draft::{DraftModel, DraftProposal};
+pub use model::{Blend, HashModel, LogitModel};
+pub use ngram::NGramDraft;
+pub use runtime_draft::RuntimeDraft;
+pub use verify::{coupled_emit_len, Verifier, VerifyOutcome};
+
+/// Default draft length K (`specdec:k=4`): the sweet spot of the modeled
+/// TPOT curve at moderate acceptance (`gpusim::tpot::SpecDecodeModel`).
+pub const DEFAULT_K: usize = 4;
+/// Default n-gram drafter order (`specdec:ngram=3`).
+pub const DEFAULT_NGRAM: usize = 3;

@@ -1,0 +1,170 @@
+//! Target/draft model abstraction for speculative decoding.
+//!
+//! The spec-decode core is written against [`LogitModel`] — anything that
+//! can produce next-token logits for a token context.  On the serving path
+//! the "model" is the fused decode artifact (which emits *samples*, not
+//! logits — see `crate::specdec::verify::coupled_emit_len` for the
+//! verification rule that works there); on the host paths (the
+//! `specdec-chisq` repro experiment, `benches/specdec.rs`, the greedy
+//! identity integration test) it is one of the deterministic models below:
+//!
+//! * [`HashModel`] — a synthetic LM whose next-token distribution depends
+//!   on the recent context through Philox hashing.  Deterministic,
+//!   context-sensitive, and cheap — the standard target/drafter fixture.
+//! * [`Blend`] — log-space interpolation of two models; benchmarks dial
+//!   the draft/target agreement (and therefore the acceptance rate) with
+//!   the blend weight.
+
+use crate::sampling::philox::{self, Key};
+
+/// Anything that can score token contexts with next-token logits.
+pub trait LogitModel: Send + Sync {
+    /// Vocabulary size (the length of every logits row).
+    fn vocab(&self) -> usize;
+
+    /// Next-token logits `[V]` given the context (prompt + generated).
+    fn logits(&self, ctx: &[i32]) -> Vec<f32>;
+
+    /// Score many contexts at once — the verifier's single batched target
+    /// pass over the K+1 draft prefixes.  The default maps [`Self::logits`];
+    /// batched backends (a real model executing one `[K+1, T]` scoring
+    /// pass) override it.
+    fn logits_batch(&self, ctxs: &[Vec<i32>]) -> Vec<Vec<f32>> {
+        ctxs.iter().map(|c| self.logits(c)).collect()
+    }
+}
+
+/// Deterministic synthetic LM: the last [`order`](HashModel::order) context
+/// tokens are Philox-hashed into a stream selector, and every vocabulary
+/// entry draws its logit from that stream — so the next-token distribution
+/// genuinely depends on the context (an n-gram-ish language) while staying
+/// reproducible from `(seed, ctx)` alone.
+#[derive(Clone, Copy, Debug)]
+pub struct HashModel {
+    pub vocab: usize,
+    /// How many trailing context tokens enter the hash.
+    pub order: usize,
+    /// Logit spread: logits are uniform in `(-scale/2, scale/2)`.
+    pub scale: f32,
+    pub key: Key,
+}
+
+impl HashModel {
+    pub fn new(vocab: usize, order: usize, seed: u64) -> Self {
+        Self { vocab, order, scale: 3.0, key: Key::from_seed(seed) }
+    }
+
+    /// Hash the last `order` context tokens into a 2-word stream selector.
+    fn ctx_hash(&self, ctx: &[i32]) -> [u32; 2] {
+        let mut h = [0x243F_6A88u32, 0x85A3_08D3];
+        for &t in ctx.iter().rev().take(self.order) {
+            let out = philox::philox4x32_10(
+                [t as u32, h[0], h[1], 0x5EED],
+                [self.key.lo, self.key.hi],
+            );
+            h = [out[0], out[1]];
+        }
+        h
+    }
+}
+
+impl LogitModel for HashModel {
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn logits(&self, ctx: &[i32]) -> Vec<f32> {
+        let h = self.ctx_hash(ctx);
+        (0..self.vocab)
+            .map(|v| {
+                let r = philox::philox4x32_10(
+                    [v as u32, h[0], h[1], 0x10D5],
+                    [self.key.lo, self.key.hi],
+                )[0];
+                self.scale * (philox::uniform_open01(r) - 0.5)
+            })
+            .collect()
+    }
+}
+
+/// Log-space interpolation of two models: `w·a + (1-w)·b` per logit.
+/// `w = 1` is model `a` exactly; lowering `w` degrades a drafter's
+/// agreement with the target — the acceptance-rate dial the spec-decode
+/// bench sweeps.
+#[derive(Clone, Copy, Debug)]
+pub struct Blend<A, B> {
+    pub a: A,
+    pub b: B,
+    pub w: f32,
+}
+
+impl<A: LogitModel, B: LogitModel> LogitModel for Blend<A, B> {
+    fn vocab(&self) -> usize {
+        let v = self.a.vocab();
+        assert_eq!(v, self.b.vocab(), "blended models must share a vocab");
+        v
+    }
+
+    fn logits(&self, ctx: &[i32]) -> Vec<f32> {
+        let la = self.a.logits(ctx);
+        let lb = self.b.logits(ctx);
+        la.iter()
+            .zip(&lb)
+            .map(|(&x, &y)| self.w * x + (1.0 - self.w) * y)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hash_model_is_deterministic_and_context_sensitive() {
+        let m = HashModel::new(64, 3, 7);
+        let a = m.logits(&[1, 2, 3]);
+        assert_eq!(a.len(), 64);
+        assert_eq!(a, m.logits(&[1, 2, 3]));
+        // A different trailing token changes the distribution.
+        assert_ne!(a, m.logits(&[1, 2, 4]));
+        // Tokens beyond the hash window are ignored (order-3 language).
+        assert_eq!(a, m.logits(&[9, 9, 1, 2, 3]));
+        // A different seed is a different language.
+        assert_ne!(a, HashModel::new(64, 3, 8).logits(&[1, 2, 3]));
+    }
+
+    #[test]
+    fn logits_stay_in_the_documented_range() {
+        let m = HashModel::new(128, 2, 3);
+        for l in m.logits(&[5]) {
+            assert!(l > -1.5 && l < 1.5, "{l}");
+        }
+    }
+
+    #[test]
+    fn batch_default_matches_single_calls() {
+        let m = HashModel::new(32, 2, 11);
+        let ctxs = vec![vec![1], vec![1, 2], vec![3, 4, 5]];
+        let batch = m.logits_batch(&ctxs);
+        for (c, row) in ctxs.iter().zip(&batch) {
+            assert_eq!(row, &m.logits(c));
+        }
+    }
+
+    #[test]
+    fn blend_endpoints_reproduce_the_parts() {
+        let a = HashModel::new(16, 2, 1);
+        let b = HashModel::new(16, 2, 2);
+        let ctx = [4, 2];
+        let full = Blend { a, b, w: 1.0 };
+        assert_eq!(full.vocab(), 16);
+        assert_eq!(full.logits(&ctx), a.logits(&ctx));
+        let none = Blend { a, b, w: 0.0 };
+        assert_eq!(none.logits(&ctx), b.logits(&ctx));
+        let mid = Blend { a, b, w: 0.5 };
+        let (la, lb, lm) = (a.logits(&ctx), b.logits(&ctx), mid.logits(&ctx));
+        for i in 0..16 {
+            assert!((lm[i] - 0.5 * (la[i] + lb[i])).abs() < 1e-6);
+        }
+    }
+}

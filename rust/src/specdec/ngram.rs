@@ -1,0 +1,113 @@
+//! Deterministic n-gram / suffix-match drafter.
+//!
+//! The cheapest useful drafter (the "prompt lookup decoding" family): find
+//! the longest suffix of the context, up to order `n`, that reoccurs
+//! earlier in the context, and propose whatever followed its most recent
+//! earlier occurrence; repeat on the extended context for up to K tokens.
+//! Needs no model, no weights, and no randomness — its proposal
+//! distribution is a point mass (one-hot `q`), which makes the accept
+//! ratio simply `p(x)` and keeps the engine's coupled verification exact
+//! without any drafter noise bookkeeping.
+//!
+//! Great on repetitive continuations (code, tables, quoted spans), useless
+//! on fresh text — exactly the acceptance-rate spread the spec-decode
+//! bench and the TPOT model explore.
+
+use super::draft::{DraftModel, DraftProposal};
+
+/// Suffix-match drafter of maximum order `n` over a vocabulary of size
+/// `vocab` (needed to shape the one-hot proposal distributions).
+#[derive(Clone, Copy, Debug)]
+pub struct NGramDraft {
+    /// Maximum suffix order to try (longest match wins).
+    pub n: usize,
+    pub vocab: usize,
+}
+
+impl NGramDraft {
+    /// The continuation after the most recent earlier occurrence of the
+    /// longest reoccurring suffix (order `n` down to 1); `None` when no
+    /// suffix reoccurs.
+    fn continuation(&self, ctx: &[i32]) -> Option<i32> {
+        let max_order = self.n.min(ctx.len().saturating_sub(1));
+        for order in (1..=max_order).rev() {
+            let suffix = &ctx[ctx.len() - order..];
+            for start in (0..ctx.len() - order).rev() {
+                if &ctx[start..start + order] == suffix {
+                    return Some(ctx[start + order]);
+                }
+            }
+        }
+        None
+    }
+}
+
+impl DraftModel for NGramDraft {
+    fn name(&self) -> &'static str {
+        "ngram"
+    }
+
+    fn draft(&mut self, ctx: &[i32], k: usize, _row: u32, _step: u32) -> DraftProposal {
+        let mut ext = ctx.to_vec();
+        let mut out = DraftProposal::default();
+        for _ in 0..k {
+            let Some(t) = self.continuation(&ext) else { break };
+            if t < 0 || t as usize >= self.vocab {
+                break; // out-of-vocab context token: stop drafting
+            }
+            let mut logits = vec![f32::NEG_INFINITY; self.vocab];
+            logits[t as usize] = 0.0;
+            ext.push(t);
+            out.push(t, logits);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn draft(ctx: &[i32], n: usize, k: usize) -> DraftProposal {
+        NGramDraft { n, vocab: 100 }.draft(ctx, k, 0, 0)
+    }
+
+    #[test]
+    fn repeating_context_proposes_the_continuation() {
+        // ... 7 3 | 7 3 ⇒ suffix [7, 3] last seen at 0..2, followed by 7.
+        let p = draft(&[7, 3, 7, 3], 2, 3);
+        assert_eq!(p.tokens, vec![7, 3, 7]); // period-2 loop extends itself
+        // One-hot proposal distributions on the proposed tokens.
+        for (i, &t) in p.tokens.iter().enumerate() {
+            assert_eq!(p.logits[i][t as usize], 0.0);
+            let live = p.logits[i].iter().filter(|l| l.is_finite()).count();
+            assert_eq!(live, 1);
+        }
+    }
+
+    #[test]
+    fn fresh_context_proposes_nothing() {
+        assert!(draft(&[1, 2, 3, 4, 5], 3, 4).is_empty());
+        assert!(draft(&[], 3, 4).is_empty());
+        assert!(draft(&[9], 3, 4).is_empty());
+    }
+
+    #[test]
+    fn longest_suffix_order_wins() {
+        // Suffix [5]: most recent earlier 5 is followed by 8.
+        // Suffix [2, 5]: earlier occurrence followed by 6.  Order 2 must win.
+        let ctx = [2, 5, 6, 5, 8, 2, 5];
+        assert_eq!(draft(&ctx, 2, 1).tokens, vec![6]);
+        // Capping the order at 1 falls back to the unigram continuation.
+        assert_eq!(draft(&ctx, 1, 1).tokens, vec![8]);
+    }
+
+    #[test]
+    fn respects_k_and_extends_its_own_proposals() {
+        let p = draft(&[1, 2, 1, 2], 2, 8);
+        assert_eq!(p.len(), 8);
+        // Period-2 context keeps alternating.
+        assert_eq!(p.tokens, vec![1, 2, 1, 2, 1, 2, 1, 2]);
+        assert!(draft(&[1, 2, 1, 2], 2, 0).is_empty());
+    }
+}

@@ -1,0 +1,263 @@
+//! Exact verification of drafted tokens — both constructions (DESIGN.md
+//! §9):
+//!
+//! * [`Verifier::verify_row`] — the Chen et al. accept/reject recurrence
+//!   over materialized target logits: accept draft token `x_i` with
+//!   probability `min(1, p_i(x_i) / q_i(x_i))`; on the first rejection,
+//!   resample from the residual `(p_i − q_i)₊` via **Gumbel argmax on the
+//!   adjusted logits** `ln (p_i − q_i)₊`, then stop; if all K drafts
+//!   survive, draw the bonus token from `p_{K+1}` with the target's
+//!   ordinary Gumbel draw.  Every random decision is a deterministic
+//!   function of Philox coordinates, so runs replay exactly from
+//!   `(key, row, step)`.
+//! * [`coupled_emit_len`] — the Gumbel-coupled token-matching rule for
+//!   sample-only backends (the AOT decode artifacts emit samples, never
+//!   logits): the target is sampled once per drafted prefix with fresh
+//!   noise, the emitted tokens are the target's own samples, and the draft
+//!   merely gates how many of those speculated samples were conditioned on
+//!   the right prefix.  Output tokens are literally target samples given
+//!   their prefixes, so exactness is immediate from the chain rule.
+//!
+//! Stream layout per `(row, step)`: accept uniforms on
+//! [`philox::STREAM_SPEC_ACCEPT`] at counter `i` = draft position; the
+//! residual resample and the bonus draw share the target's
+//! `STREAM_GUMBEL` coordinates `(·, row, step)` — at most one of the two
+//! occurs per verify round, so they never collide.
+
+use super::draft::DraftProposal;
+use crate::sampling::philox::{self, Key};
+use crate::sampling::{gumbel, multinomial, Transform};
+
+/// The accept/reject verifier (host logits path).
+#[derive(Clone, Copy, Debug)]
+pub struct Verifier {
+    /// Verifier RNG key — the serving session key on the engine path.
+    pub key: Key,
+}
+
+/// Outcome of one verify round.
+#[derive(Clone, Debug, PartialEq)]
+pub struct VerifyOutcome {
+    /// Emitted tokens: the accepted draft prefix plus one more token (the
+    /// residual resample on rejection, the bonus draw on full acceptance).
+    /// Always non-empty; `tokens.len() == accepted + 1`.
+    pub tokens: Vec<i32>,
+    /// How many drafted tokens were accepted.
+    pub accepted: usize,
+    /// All drafts accepted ⇒ the last token is the bonus draw from the
+    /// K+1-th target distribution.
+    pub bonus: bool,
+}
+
+impl Verifier {
+    /// Run the accept/reject recurrence for one row.
+    ///
+    /// `target_logits` holds K+1 rows of raw target logits: row `i` is the
+    /// target distribution after accepting `i` draft tokens (the batched
+    /// target pass over the draft prefixes), row K feeds the bonus draw.
+    /// `target` is the row's logit transform (temperature / bias);
+    /// `proposal.logits` are final draft logits (`q_i = softmax`, no
+    /// further transform — see [`DraftProposal::logits`]).
+    ///
+    /// Panics if the target distribution has no support (all `-inf` row) —
+    /// the same contract as `ExactSampler` callers treating `None` as an
+    /// error.
+    pub fn verify_row(
+        &self,
+        target_logits: &[Vec<f32>],
+        target: &Transform,
+        proposal: &DraftProposal,
+        row: u32,
+        step: u32,
+    ) -> VerifyOutcome {
+        assert_eq!(
+            target_logits.len(),
+            proposal.len() + 1,
+            "verify needs K+1 target rows for K drafted tokens"
+        );
+        let ident = Transform::default();
+        let mut tokens = Vec::with_capacity(proposal.len() + 1);
+        for (i, &x) in proposal.tokens.iter().enumerate() {
+            let p = multinomial::probs(&target_logits[i], target);
+            let q = multinomial::probs(&proposal.logits[i], &ident);
+            let (px, qx) = (p[x as usize], q[x as usize]);
+            debug_assert!(qx > 0.0, "draft token outside its own support");
+            let u = philox::uniform_at(
+                self.key,
+                i as u32,
+                row,
+                philox::STREAM_SPEC_ACCEPT,
+                step,
+            ) as f64;
+            // u <= min(1, px/qx)  ⇔  u·qx <= px   (qx > 0).
+            if u * qx <= px {
+                tokens.push(x);
+                continue;
+            }
+            // First rejection: Gumbel-argmax the adjusted logits
+            // ln (p − q)₊ — the residual distribution of the coupling.
+            let resid: Vec<f32> = p
+                .iter()
+                .zip(&q)
+                .map(|(&pv, &qv)| {
+                    let r = pv - qv;
+                    if r > 0.0 { r.ln() as f32 } else { f32::NEG_INFINITY }
+                })
+                .collect();
+            let draw = gumbel::sample_row(&resid, &ident, self.key, row, step)
+                // Numerically-empty residual (p == q to f64 precision yet
+                // the ratio test rejected): fall back to the plain target
+                // draw, which is the correct limit of the residual as
+                // q → p.
+                .or_else(|| {
+                    gumbel::sample_row(&target_logits[i], target, self.key, row, step)
+                })
+                .expect("target distribution has support");
+            tokens.push(draw.index as i32);
+            return VerifyOutcome { accepted: i, tokens, bonus: false };
+        }
+        // Every draft accepted: bonus token from the K+1-th distribution,
+        // drawn exactly as the target's ordinary decode draw at this
+        // (row, step) would be.
+        let k = proposal.len();
+        let draw = gumbel::sample_row(&target_logits[k], target, self.key, row, step)
+            .expect("target distribution has support");
+        tokens.push(draw.index as i32);
+        VerifyOutcome { accepted: k, tokens, bonus: true }
+    }
+}
+
+/// Gumbel-coupled token-matching verification for sample-only backends
+/// (the engine's AOT decode artifacts): given the target's sampled token
+/// `y_j` at each drafted prefix (fresh noise per position), the emitted
+/// tokens are `y_0..y_m` where `m` is the first index with
+/// `y_m != draft[m]` (all K matched ⇒ K+1 tokens).  Returns how many
+/// leading `target_samples` to emit — always in `1..=draft.len() + 1`.
+pub fn coupled_emit_len(draft: &[i32], target_samples: &[i32]) -> usize {
+    assert_eq!(
+        target_samples.len(),
+        draft.len() + 1,
+        "coupled verification needs one target sample per drafted prefix"
+    );
+    let mut m = 0;
+    while m < draft.len() && target_samples[m] == draft[m] {
+        m += 1;
+    }
+    m + 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampling::stats;
+
+    const V: usize = 16;
+
+    fn peaked(argmax: usize) -> Vec<f32> {
+        let mut l = vec![-20.0f32; V];
+        l[argmax] = 20.0;
+        l
+    }
+
+    fn one_hot_proposal(token: i32) -> DraftProposal {
+        let mut logits = vec![f32::NEG_INFINITY; V];
+        logits[token as usize] = 0.0;
+        let mut p = DraftProposal::default();
+        p.push(token, logits);
+        p
+    }
+
+    #[test]
+    fn coupled_emit_len_rules() {
+        assert_eq!(coupled_emit_len(&[], &[9]), 1);
+        assert_eq!(coupled_emit_len(&[5], &[5, 7]), 2);
+        assert_eq!(coupled_emit_len(&[5], &[6, 7]), 1);
+        assert_eq!(coupled_emit_len(&[1, 2, 3], &[1, 2, 3, 4]), 4);
+        assert_eq!(coupled_emit_len(&[1, 2, 3], &[1, 9, 3, 4]), 2);
+    }
+
+    #[test]
+    fn matching_one_hot_draft_is_always_accepted() {
+        // q one-hot on the target's ~certain token: accept prob ≈ 1.
+        let v = Verifier { key: Key::new(8, 9) };
+        let t = Transform::default();
+        let target = vec![peaked(3), peaked(5)];
+        for step in 0..50 {
+            let out = v.verify_row(&target, &t, &one_hot_proposal(3), 0, step);
+            assert_eq!(out.accepted, 1);
+            assert!(out.bonus);
+            assert_eq!(out.tokens[0], 3);
+            assert_eq!(out.tokens[1], 5); // bonus from the peaked row 1
+        }
+    }
+
+    #[test]
+    fn wrong_one_hot_draft_is_rejected_and_resampled_off_itself() {
+        // q one-hot on a ~zero-probability token: reject, and the residual
+        // (p − q)₊ has zero mass at the drafted token, so the resample can
+        // never return it.
+        let v = Verifier { key: Key::new(4, 7) };
+        let t = Transform::default();
+        let target = vec![peaked(3), peaked(5)];
+        for step in 0..50 {
+            let out = v.verify_row(&target, &t, &one_hot_proposal(9), 0, step);
+            assert_eq!(out.accepted, 0);
+            assert!(!out.bonus);
+            assert_eq!(out.tokens.len(), 1);
+            assert_ne!(out.tokens[0], 9);
+            assert_eq!(out.tokens[0], 3); // the peaked target's mass
+        }
+    }
+
+    #[test]
+    fn empty_proposal_degenerates_to_one_target_draw() {
+        let v = Verifier { key: Key::new(1, 2) };
+        let t = Transform::default();
+        let out =
+            v.verify_row(&[peaked(7)], &t, &DraftProposal::default(), 0, 0);
+        assert_eq!(out.tokens, vec![7]);
+        assert_eq!(out.accepted, 0);
+        assert!(out.bonus);
+    }
+
+    #[test]
+    fn deterministic_in_the_philox_coordinates() {
+        let v = Verifier { key: Key::new(21, 12) };
+        let t = Transform::default();
+        let logits: Vec<f32> = (0..V).map(|i| (i as f32 * 0.37).sin()).collect();
+        let target = vec![logits.clone(), logits];
+        let p = one_hot_proposal(2);
+        let a = v.verify_row(&target, &t, &p, 3, 11);
+        let b = v.verify_row(&target, &t, &p, 3, 11);
+        assert_eq!(a, b);
+    }
+
+    /// Marginal exactness of the first emitted token: whatever the (fixed)
+    /// one-hot proposal, accept + residual must compose to exactly `p` —
+    /// chi-squared against the probs-space oracle.
+    #[test]
+    fn first_token_marginal_matches_target_distribution() {
+        let v = Verifier { key: Key::new(0x5E, 0xC7) };
+        let t = Transform::default();
+        let key = Key::new(0xAB, 0xCD);
+        let logits: Vec<f32> = (0..V)
+            .map(|i| 2.0 * (philox::uniform_at(key, i as u32, 0, 3, 0) - 0.5))
+            .collect();
+        let oracle = multinomial::probs(&logits, &t);
+        let n = 6000u32;
+        // Draft a mid-probability token so both branches fire often.
+        let drafted = 5i32;
+        let mut counts = vec![0u64; V];
+        for step in 0..n {
+            let target = vec![logits.clone(), logits.clone()];
+            let out =
+                v.verify_row(&target, &t, &one_hot_proposal(drafted), 0, step);
+            counts[out.tokens[0] as usize] += 1;
+        }
+        let p = stats::chi_squared_pvalue(&counts, &oracle, n as u64);
+        assert!(p > 0.001, "accept/reject distorts the marginal: p = {p}");
+        // Both branches actually fired.
+        assert!(counts[drafted as usize] > 0);
+        assert!(counts.iter().enumerate().any(|(i, &c)| i != drafted as usize && c > 0));
+    }
+}

@@ -109,7 +109,7 @@ fn baseline_sampler_ab_switch_works() {
 }
 
 #[test]
-fn eos_token_stops_generation() {
+fn stop_token_stops_generation() {
     let Some(mut e) = engine(EngineConfig::default()) else { return };
     e.submit(Request {
         id: 1,
@@ -133,6 +133,53 @@ fn eos_token_stops_generation() {
     let done2 = e2.run_to_completion().unwrap();
     assert_eq!(done2[0].tokens, vec![first]);
     assert_eq!(done2[0].finish, FinishReason::StopToken);
+}
+
+#[test]
+fn spec_decode_engine_path_completes_deterministically() {
+    // The speculative decode path (DESIGN.md §9) through the real fused
+    // artifacts: exact budgets despite 1..=K+1 token bursts, burst sizes
+    // within bounds, acceptance metrics recorded, and bitwise replay from
+    // the session seed.
+    let spec_cfg = || EngineConfig {
+        sampler: SamplerSpec::SpecDecode { k: 4, ngram: 3 },
+        ..Default::default()
+    };
+    let submit_all = |e: &mut Engine| {
+        for i in 0..4u64 {
+            // Repetitive prompts give the n-gram drafter matches.
+            let p = 2 + i as i32;
+            e.submit(Request {
+                id: i,
+                prompt: vec![p, 3, p, 3, p],
+                params: SamplingParams { max_new_tokens: 9, ..Default::default() },
+            })
+            .unwrap();
+        }
+    };
+    let Some(mut a) = engine(spec_cfg()) else { return };
+    submit_all(&mut a);
+    let mut da = a.run_to_completion().unwrap();
+    da.sort_by_key(|c| c.id);
+    assert_eq!(da.len(), 4);
+    let vocab = a.runtime().manifest().model.vocab as i32;
+    for c in &da {
+        assert_eq!(c.tokens.len(), 9, "burst overshot the budget");
+        assert!(c.tokens.iter().all(|&t| (0..vocab).contains(&t)));
+    }
+    assert!(a.metrics.counters.contains_key("spec_rounds"));
+    assert!(!a.metrics.spec_tokens_per_step.is_empty());
+    for &n in &a.metrics.spec_tokens_per_step {
+        assert!((1..=5).contains(&n), "burst of {n} outside 1..=K+1");
+    }
+    // Replay: same seed, same artifacts => identical tokens.
+    let Some(mut b) = engine(spec_cfg()) else { return };
+    submit_all(&mut b);
+    let mut db = b.run_to_completion().unwrap();
+    db.sort_by_key(|c| c.id);
+    for (x, y) in da.iter().zip(&db) {
+        assert_eq!(x.tokens, y.tokens, "spec decode must replay exactly");
+    }
 }
 
 #[test]

@@ -1,0 +1,159 @@
+//! Speculative-decode integration: the acceptance criteria of the
+//! subsystem (DESIGN.md §9), runnable without artifacts.
+//!
+//! * **Greedy identity** — with tau → 0 for drafter and verifier, spec
+//!   decode must be token-for-token identical to the baseline sequential
+//!   decode path, for every drafter and every K.  The target model below
+//!   is built so this is a theorem, not a flaky observation: its logits
+//!   are a permutation of an evenly spaced grid, so the top-2 logit gap
+//!   is exactly `3/V` at every context, and at tau = 1e-4 the scaled gap
+//!   (`≈ 117`) towers over both the Gumbel noise spread (≲ 12) and the
+//!   smallest representable accept uniform — no draw can ever flip an
+//!   argmax, accept a wrong draft, or reject a right one.
+//! * **Exactness under a hostile drafter** — an independent-model drafter
+//!   whose proposals are almost always rejected must still produce the
+//!   identical greedy output (the residual path reconstructs the target).
+
+use flashsampling::sampling::philox::{self, Key};
+use flashsampling::sampling::Transform;
+use flashsampling::specdec::{
+    baseline_generate, LogitModel, NGramDraft, RuntimeDraft, SpecDecodeLoop,
+};
+
+const V: usize = 256;
+const TAU: f32 = 1e-4;
+
+/// Deterministic target whose logits at every context are a permutation
+/// of `{0, 3/V, 6/V, …}` — uniform gaps by construction (see module docs).
+#[derive(Clone, Copy)]
+struct GapModel {
+    key: Key,
+}
+
+impl LogitModel for GapModel {
+    fn vocab(&self) -> usize {
+        V
+    }
+
+    fn logits(&self, ctx: &[i32]) -> Vec<f32> {
+        let mut h: u32 = 0x9E37_79B9;
+        for &t in ctx.iter().rev().take(4) {
+            h = philox::philox4x32_10(
+                [t as u32, h, 0, 0xA11],
+                [self.key.lo, self.key.hi],
+            )[0];
+        }
+        // v -> (h ^ v) & (V-1) is a bijection on 0..V (V is a power of
+        // two), so the logits are a context-dependent permutation of the
+        // evenly spaced grid.
+        let mask = (V - 1) as u32;
+        (0..V as u32)
+            .map(|v| ((h ^ v) & mask) as f32 * (3.0 / V as f32))
+            .collect()
+    }
+}
+
+fn greedy_baseline(target: &GapModel, key: Key, prompt: &[i32], n: usize) -> Vec<i32> {
+    baseline_generate(
+        target,
+        &Transform::with_temperature(TAU),
+        key,
+        prompt,
+        n,
+        0,
+    )
+}
+
+#[test]
+fn greedy_spec_decode_is_token_for_token_identical_to_baseline() {
+    let target = GapModel { key: Key::new(1, 2) };
+    let key = Key::new(7, 9);
+    let prompt = vec![3, 1, 4, 1, 5, 9, 2, 6];
+    let base = greedy_baseline(&target, key, &prompt, 48);
+    assert_eq!(base.len(), 48);
+
+    for k in [1usize, 2, 4, 8] {
+        // Deterministic n-gram drafter (one-hot proposals).
+        let mut ngram = NGramDraft { n: 3, vocab: V };
+        let mut l = SpecDecodeLoop {
+            target: &target,
+            drafter: &mut ngram,
+            transform: Transform::with_temperature(TAU),
+            k,
+            key,
+        };
+        let r = l.generate(&prompt, 48, 0);
+        assert_eq!(r.tokens, base, "ngram drafter diverged at K={k}");
+
+        // Same-model greedy drafter: q == p point masses ⇒ accept-all.
+        let mut same = RuntimeDraft::new(target, TAU, Key::new(5, 5));
+        let mut l = SpecDecodeLoop {
+            target: &target,
+            drafter: &mut same,
+            transform: Transform::with_temperature(TAU),
+            k,
+            key,
+        };
+        let r = l.generate(&prompt, 48, 0);
+        assert_eq!(r.tokens, base, "self drafter diverged at K={k}");
+        assert!(
+            (r.stats.acceptance_rate() - 1.0).abs() < 1e-12,
+            "greedy self-drafting must accept everything: {:?}",
+            r.stats
+        );
+        // Every full round emits K+1 tokens.
+        assert!(
+            (r.stats.tokens_per_step() - (48.0 / r.stats.rounds as f64)).abs()
+                < 1e-9
+        );
+    }
+}
+
+#[test]
+fn hostile_drafter_is_rejected_but_output_stays_exact() {
+    // A drafter speaking a DIFFERENT language (independent permutation):
+    // its greedy proposals match the target's argmax only by 1/V chance,
+    // so nearly every round walks the rejection/residual path — and the
+    // emitted tokens must still equal the baseline greedy output exactly.
+    let target = GapModel { key: Key::new(1, 2) };
+    let key = Key::new(7, 9);
+    let prompt = vec![3, 1, 4, 1, 5, 9, 2, 6];
+    let base = greedy_baseline(&target, key, &prompt, 40);
+
+    let mut hostile = RuntimeDraft::new(GapModel { key: Key::new(8, 8) }, TAU, Key::new(6, 6));
+    let mut l = SpecDecodeLoop {
+        target: &target,
+        drafter: &mut hostile,
+        transform: Transform::with_temperature(TAU),
+        k: 4,
+        key,
+    };
+    let r = l.generate(&prompt, 40, 0);
+    assert_eq!(r.tokens, base, "rejection path broke greedy identity");
+    assert!(
+        r.stats.acceptance_rate() < 0.3,
+        "independent drafter accepted suspiciously often: {:?}",
+        r.stats
+    );
+    // Mostly-rejected drafts ⇒ close to one token per round.
+    assert!(r.stats.tokens_per_step() < 2.0, "{:?}", r.stats);
+}
+
+#[test]
+fn spec_decode_replays_and_varies_with_the_session_key() {
+    let target = GapModel { key: Key::new(3, 3) };
+    let prompt = vec![1, 2, 1, 2, 1];
+    let run = |key: Key| {
+        let mut ngram = NGramDraft { n: 2, vocab: V };
+        let mut l = SpecDecodeLoop {
+            target: &target,
+            drafter: &mut ngram,
+            transform: Transform::default(), // tau = 1: genuinely stochastic
+            k: 3,
+            key,
+        };
+        l.generate(&prompt, 32, 0).tokens
+    };
+    assert_eq!(run(Key::new(1, 1)), run(Key::new(1, 1)));
+    assert_ne!(run(Key::new(1, 1)), run(Key::new(2, 2)));
+}
