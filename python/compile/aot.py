@@ -297,6 +297,30 @@ def build_model_artifacts(b: Builder, cfg: model_lib.ModelConfig):
             {"B": PREFILL_B, "T": t, "D": cfg.d_model, "V": cfg.vocab},
         )
 
+        # Prefix-cached suffix prefill (DESIGN.md §10): positions offset
+        # per row, attention over restored cached KV + in-suffix causal.
+        # Bitwise-identical to full prefill on XLA CPU
+        # (python/tests/test_prefix_cache.py), so the engine's prefix
+        # caching is exact, not approximate.
+        def pre_cached(*args, _t=t):
+            params = dict(zip(cfg.param_order(), args[:n_params]))
+            kv_k, kv_v, offset, tokens, lengths = args[n_params:]
+            return model_lib.prefill_cached(
+                cfg, params, kv_k, kv_v, offset, tokens, lengths
+            )
+
+        b.add(
+            f"prefill_cached_b{PREFILL_B}_t{t}",
+            "prefill_cached",
+            pre_cached,
+            param_specs
+            + [kv_spec(PREFILL_B), kv_spec(PREFILL_B), i32(PREFILL_B),
+               i32(PREFILL_B, t), i32(PREFILL_B)],
+            list(cfg.param_order())
+            + ["kv_k", "kv_v", "offset", "tokens", "lengths"],
+            {"B": PREFILL_B, "T": t, "D": cfg.d_model, "V": cfg.vocab},
+        )
+
     # First-token sampler (hidden -> token) shared across prefill buckets.
     # tau: [B] — each prompt's own temperature (the prefill first-token
     # bug fix rides on this).

@@ -227,6 +227,85 @@ def prefill(cfg: ModelConfig, params, tokens, lengths):
     return jnp.stack(kv_k), jnp.stack(kv_v), last
 
 
+def prefill_cached(cfg: ModelConfig, params, kv_k, kv_v, offset, tokens, lengths):
+    """Suffix prefill over a prefix-cached KV state (automatic prefix
+    caching, DESIGN.md §10).
+
+    Per row `b`, positions `[0, offset[b])` of `kv_k`/`kv_v` already hold
+    the KV of a cached prompt prefix (byte-identical to what full prefill
+    would compute — the prefix cache restores the original bytes); `tokens`
+    carries only the uncached suffix.  Each suffix position is embedded at
+    its *absolute* position `offset + i` (RoPE), its K/V is scattered into
+    the cache there, and attention spans every cache slot `<=` its absolute
+    position — the cached prefix plus the in-suffix causal triangle.
+
+    Exactness: in exact arithmetic this is literally full prefill with the
+    prefix computation replaced by its stored result; on XLA CPU the
+    outputs are **bitwise identical** to `prefill` for the same prompts
+    (asserted by python/tests/test_prefix_cache.py, including across T
+    buckets and at offset == 0), which is what makes the engine's
+    caching-on/off token identity exact rather than approximate.
+
+    Args:
+      kv_k, kv_v: [L, B, H, S, Dh] caches carrying the cached prefixes.
+      offset: [B] i32 cached prefix lengths (0 = no cached prefix).
+      tokens: [B, T] i32 suffix tokens, padded beyond lengths.
+      lengths: [B] i32 true suffix lengths (>= 1).
+
+    Returns (kv_k', kv_v' [L, B, H, S, Dh], hidden [B, D] at the last real
+    suffix position — the state the first output token samples from).
+    """
+    b, t = tokens.shape
+    s = cfg.max_seq
+    x = params["embed"][tokens]  # [B, T, D]
+    positions = offset[:, None] + jnp.arange(t)[None, :]  # [B, T] absolute
+    new_k, new_v = [], []
+    for l in range(cfg.n_layers):
+        p = f"layers.{l}."
+        h = rmsnorm(x, params[p + "ln1"])
+        q = (h @ params[p + "wq"]).reshape(b, t, cfg.n_heads, cfg.head_dim)
+        k = (h @ params[p + "wk"]).reshape(b, t, cfg.n_heads, cfg.head_dim)
+        v = (h @ params[p + "wv"]).reshape(b, t, cfg.n_heads, cfg.head_dim)
+        q = rope(q, positions, cfg.rope_base)
+        k = rope(k, positions, cfg.rope_base)
+
+        # Scatter the suffix K/V into the cache at [offset, offset + T).
+        # Padded positions beyond lengths land at dead slots: they sit past
+        # every real query's span this call, and later decode steps
+        # overwrite slot `pos` before reading it (same argument as
+        # prefill's padding note).
+        def put(cache, val):
+            # cache: [B, H, S, Dh]; val: [B, T, H, Dh]
+            def upd(c, vv, off):
+                return jax.lax.dynamic_update_slice(
+                    c, jnp.transpose(vv, (1, 0, 2)).astype(c.dtype), (0, off, 0)
+                )
+            return jax.vmap(upd)(cache, val, offset)
+
+        kc = put(kv_k[l], k)
+        vc = put(kv_v[l], v)
+        new_k.append(kc)
+        new_v.append(vc)
+
+        # Query at absolute position p_i attends to every cache slot
+        # j <= p_i: cached prefix slots plus the causal in-suffix span.
+        scores = jnp.einsum("bqhd,bhsd->bhqs", q, kc) / np.sqrt(cfg.head_dim)
+        span = jnp.arange(s)[None, None, None, :] <= positions[:, None, :, None]
+        scores = jnp.where(span, scores, -jnp.inf)
+        attn = jax.nn.softmax(scores, axis=-1)
+        o = jnp.einsum("bhqs,bhsd->bqhd", attn, vc).reshape(b, t, cfg.d_model)
+        x = x + o @ params[p + "wo"]
+        h2 = rmsnorm(x, params[p + "ln2"])
+        x = x + (
+            jax.nn.silu(h2 @ params[p + "w_gate"]) * (h2 @ params[p + "w_up"])
+        ) @ params[p + "w_down"]
+    hidden_all = rmsnorm(x, params["final_norm"])  # [B, T, D]
+    last = jnp.take_along_axis(
+        hidden_all, (lengths - 1)[:, None, None].astype(jnp.int32), axis=1
+    )[:, 0]
+    return jnp.stack(new_k), jnp.stack(new_v), last
+
+
 def decode_and_sample(cfg: ModelConfig, params, kv_k, kv_v, pos, token, seed, step,
                       temperature, tile_v=fs.DEFAULT_TILE_V):
     """Fused decode step + FlashSampling LM head (the serving hot path).

@@ -1,0 +1,184 @@
+"""Prefix-cache exactness: `prefill_cached` (suffix prefill over restored
+prefix KV) must be **bitwise identical** to full `prefill` — the property
+that makes the serving engine's automatic prefix caching exact rather than
+approximate (DESIGN.md §10).
+
+These tests run at the SERVE configuration (`ModelConfig()` — the shapes
+the AOT artifacts are lowered at), not the miniature test config: bitwise
+equality across two different XLA programs is an empirical property of the
+backend's reduction/vectorization choices at specific shapes, and the
+serve shapes are the ones the engine's caching-on/off token identity
+rides on.  (At tiny shapes, e.g. d_model=32, XLA CPU picks different
+reduction orders for the two programs and the outputs differ in the last
+bit — exact in distribution, not in bits.)  If a backend upgrade ever
+breaks these assertions, prefix caching degrades from bit-exact to
+FP-perturbation-exact and the Rust engine A/B (`repro prefix-identity`)
+will report the same — this file is the early alarm.
+
+Four identities, each asserted at the bit level (uint32 views, no
+tolerances):
+
+  1. split == full:  prefill(prefix) -> prefill_cached(suffix at offset)
+     reproduces prefill(whole prompt) exactly (hidden + live KV slots);
+  2. mixed offsets:  one batch mixing hit rows (offset > 0) and miss rows
+     (offset 0, zero cache) — exactly what the engine packs;
+  3. T-invariance:   the same suffix through the t=16 and t=64 buckets is
+     identical (the engine picks the smallest bucket that fits the
+     longest suffix — the TTFT win must be free);
+  4. decode handoff: a decode step from the cached-prefill KV state is
+     bitwise the decode step from the full-prefill state.
+
+Run alongside the other kernel tests: `cd python && pytest tests/ -q`.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from compile import model as M
+
+# The serve configuration — what aot.py lowers (see aot.SERVE_CFG).
+CFG = M.ModelConfig()
+B = 4
+# kv block size the Rust engine uses; engine offsets are block multiples.
+BLOCK = 16
+
+_full_jit = jax.jit(M.prefill, static_argnums=0)
+_cached_jit = jax.jit(M.prefill_cached, static_argnums=0)
+_step_jit = jax.jit(M.decode_step, static_argnums=0)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, seed=0)
+
+
+def _bits(x):
+    return np.asarray(x, np.float32).view(np.uint32)
+
+
+def _pad(rows, t):
+    out = np.zeros((len(rows), t), np.int32)
+    for i, r in enumerate(rows):
+        out[i, : len(r)] = r
+    return out
+
+
+def _prompts(rng, lengths):
+    return [rng.randint(0, CFG.vocab, size=n).astype(np.int32) for n in lengths]
+
+
+def _assert_live_kv_equal(a, b, lens):
+    for row, n in enumerate(lens):
+        assert np.array_equal(
+            _bits(np.asarray(a)[:, row, :, :n, :]),
+            _bits(np.asarray(b)[:, row, :, :n, :]),
+        ), f"row {row}: KV diverged in the first {n} slots"
+
+
+def test_cached_suffix_prefill_is_bitwise_identical(params):
+    rng = np.random.RandomState(7)
+    lens = [48, 48, 40, 37]
+    prompts = _prompts(rng, lens)
+    # Rows 0 and 1 share a 32-token prefix (two cache blocks).
+    prompts[1][:32] = prompts[0][:32]
+    t = 64
+    full_k, full_v, full_h = _full_jit(
+        CFG, params, _pad(prompts, t), np.array(lens, np.int32)
+    )
+
+    off = 32  # two full blocks cached per row
+    pre_k, pre_v, _ = _full_jit(
+        CFG, params, _pad([p[:off] for p in prompts], t),
+        np.full(B, off, np.int32),
+    )
+    suffixes = [p[off:] for p in prompts]
+    got_k, got_v, got_h = _cached_jit(
+        CFG, params, pre_k, pre_v, np.full(B, off, np.int32),
+        _pad(suffixes, t), np.array([len(s) for s in suffixes], np.int32),
+    )
+    assert np.array_equal(_bits(full_h), _bits(got_h))
+    _assert_live_kv_equal(full_k, got_k, lens)
+    _assert_live_kv_equal(full_v, got_v, lens)
+
+
+def test_per_row_offsets_mix_hits_and_misses(params):
+    rng = np.random.RandomState(11)
+    lens = [60, 40, 25, 18]
+    prompts = _prompts(rng, lens)
+    offs = np.array([2 * BLOCK, BLOCK, 0, 0], np.int32)
+    t = 64
+    full_k, _, full_h = _full_jit(
+        CFG, params, _pad(prompts, t), np.array(lens, np.int32)
+    )
+    pre_k, pre_v, _ = _full_jit(
+        CFG, params,
+        _pad([p[:o] if o else p[:1] for p, o in zip(prompts, offs)], t),
+        np.maximum(offs, 1),
+    )
+    # Miss rows (offset 0) carry no cached prefix: the engine restores
+    # nothing there, so their cache rows are zero.
+    pre_k = np.asarray(pre_k).copy()
+    pre_v = np.asarray(pre_v).copy()
+    for b, o in enumerate(offs):
+        if o == 0:
+            pre_k[:, b] = 0.0
+            pre_v[:, b] = 0.0
+    suffixes = [p[o:] for p, o in zip(prompts, offs)]
+    got_k, _, got_h = _cached_jit(
+        CFG, params, pre_k, pre_v, offs,
+        _pad(suffixes, t), np.array([len(s) for s in suffixes], np.int32),
+    )
+    assert np.array_equal(_bits(full_h), _bits(got_h))
+    _assert_live_kv_equal(full_k, got_k, lens)
+
+
+def test_same_suffix_identical_across_t_buckets(params):
+    """t=16 vs t=64 executables must not perturb a single bit."""
+    rng = np.random.RandomState(17)
+    off = 2 * BLOCK
+    lens = [off + n for n in (14, 10, 7, 1)]
+    prompts = _prompts(rng, lens)
+    pre_k, pre_v, _ = _full_jit(
+        CFG, params, _pad([p[:off] for p in prompts], 64),
+        np.full(B, off, np.int32),
+    )
+    suffixes = [p[off:] for p in prompts]
+    slens = np.array([len(s) for s in suffixes], np.int32)
+    offs = np.full(B, off, np.int32)
+    k16, v16, h16 = _cached_jit(
+        CFG, params, pre_k, pre_v, offs, _pad(suffixes, 16), slens
+    )
+    k64, v64, h64 = _cached_jit(
+        CFG, params, pre_k, pre_v, offs, _pad(suffixes, 64), slens
+    )
+    assert np.array_equal(_bits(h16), _bits(h64))
+    _assert_live_kv_equal(k16, k64, lens)
+    _assert_live_kv_equal(v16, v64, lens)
+
+
+def test_decode_continues_a_cached_prefill_seamlessly(params):
+    rng = np.random.RandomState(19)
+    lens = [40, 36, 33, 34]
+    prompts = _prompts(rng, lens)
+    t = 64
+    full_k, full_v, _ = _full_jit(
+        CFG, params, _pad(prompts, t), np.array(lens, np.int32)
+    )
+    off = BLOCK
+    pre_k, pre_v, _ = _full_jit(
+        CFG, params, _pad([p[:off] for p in prompts], t),
+        np.full(B, off, np.int32),
+    )
+    suffixes = [p[off:] for p in prompts]
+    got_k, got_v, _ = _cached_jit(
+        CFG, params, pre_k, pre_v, np.full(B, off, np.int32),
+        _pad(suffixes, t), np.array([len(s) for s in suffixes], np.int32),
+    )
+    pos = np.array(lens, np.int32)
+    tok = np.array([5, 6, 7, 8], np.int32)
+    ka, va, ha = _step_jit(CFG, params, full_k, full_v, pos, tok)
+    kb, vb, hb = _step_jit(CFG, params, got_k, got_v, pos, tok)
+    assert np.array_equal(_bits(ha), _bits(hb))
+    _assert_live_kv_equal(ka, kb, [n + 1 for n in lens])
+    _assert_live_kv_equal(va, vb, [n + 1 for n in lens])

@@ -34,15 +34,20 @@ fn main() {
     let waiting = seqs(32, SeqState::Waiting);
     let running = seqs(8, SeqState::Running);
     bench("scheduler/plan/32waiting_8running", || {
-        black_box(plan(&cfg, &waiting, &running, |_| true));
+        black_box(plan(&cfg, &waiting, &running, |_, _| true, |_| 0));
     });
     let no_waiting: Vec<Sequence> = Vec::new();
     bench("scheduler/plan/decode_only", || {
-        black_box(plan(&cfg, &no_waiting, &running, |_| true));
+        black_box(plan(&cfg, &no_waiting, &running, |_, _| true, |_| 0));
     });
 
+    let kv_cfg = KvCacheConfig {
+        block_size: 16,
+        num_blocks: 512,
+        prefix_caching: false,
+    };
     bench("kvcache/register_release_seq64toks", || {
-        let mut m = KvCacheManager::new(KvCacheConfig { block_size: 16, num_blocks: 512 });
+        let mut m = KvCacheManager::new(kv_cfg);
         for id in 0..32u64 {
             m.register(id, 64).unwrap();
         }
@@ -52,7 +57,7 @@ fn main() {
         black_box(m.free_blocks());
     });
     bench("kvcache/append_token_x256", || {
-        let mut m = KvCacheManager::new(KvCacheConfig { block_size: 16, num_blocks: 512 });
+        let mut m = KvCacheManager::new(kv_cfg);
         m.register(0, 16).unwrap();
         for _ in 0..256 {
             m.append_token(0).unwrap();

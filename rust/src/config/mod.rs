@@ -35,6 +35,10 @@ pub struct Config {
     pub kv_blocks: usize,
     pub kv_block_size: usize,
     pub seed: u64,
+    /// Automatic prefix caching (radix-tree KV reuse across requests,
+    /// DESIGN.md §10).  Exact — identical outputs on or off — so it
+    /// defaults on; `prefix_caching = false` is the A/B switch.
+    pub prefix_caching: bool,
     /// Typed sampler selection (`SamplerSpec::Gumbel { .. }` = fused
     /// FlashSampling, `SamplerSpec::Multinomial` = baseline artifact).
     /// Parsed once from the `sampler` config key.
@@ -67,6 +71,7 @@ impl Default for Config {
             kv_blocks: 512,
             kv_block_size: 16,
             seed: 42,
+            prefix_caching: true,
             sampler: SamplerSpec::default(),
             baseline_override: false,
             temperature: 1.0,
@@ -98,6 +103,7 @@ impl Config {
                 "kv_blocks" => self.kv_blocks = v.parse()?,
                 "kv_block_size" => self.kv_block_size = v.parse()?,
                 "seed" => self.seed = v.parse()?,
+                "prefix_caching" => self.prefix_caching = v.parse()?,
                 // Deprecated: pre-typed boolean A/B switch, preserved
                 // with its original `bool || spec` semantics (see the
                 // `baseline_override` field docs).
@@ -148,6 +154,7 @@ impl Config {
             kv_blocks: self.kv_blocks,
             kv_block_size: self.kv_block_size,
             seed: self.seed,
+            prefix_caching: self.prefix_caching,
             // The deprecated bool forces the baseline artifact; otherwise
             // the typed spec stands (the old `bool || spec` A/B rule).
             sampler: if self.baseline_override {
@@ -265,6 +272,21 @@ mod tests {
         // The baseline artifact can be selected by spec alone.
         c.apply_pairs(parse_pairs("sampler = multinomial").unwrap()).unwrap();
         assert!(c.engine_config().uses_baseline_artifact());
+    }
+
+    #[test]
+    fn prefix_caching_key_parses_and_defaults_on() {
+        let mut c = Config::default();
+        assert!(c.prefix_caching);
+        assert!(c.engine_config().prefix_caching);
+        c.apply_pairs(parse_pairs("prefix_caching = false").unwrap()).unwrap();
+        assert!(!c.prefix_caching);
+        assert!(!c.engine_config().prefix_caching);
+        c.apply_pairs(parse_pairs("prefix_caching = true").unwrap()).unwrap();
+        assert!(c.engine_config().prefix_caching);
+        assert!(c
+            .apply_pairs(parse_pairs("prefix_caching = maybe").unwrap())
+            .is_err());
     }
 
     #[test]

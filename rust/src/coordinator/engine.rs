@@ -19,9 +19,10 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use super::request::{Completion, FinishReason, Request, SeqKv, SeqState, Sequence};
-use super::scheduler::{plan, Plan, SchedulerConfig};
-use crate::kvcache::{KvCacheConfig, KvCacheManager};
+use super::scheduler::{pick_bucket, plan, Plan, SchedulerConfig};
+use crate::kvcache::{KvCacheConfig, KvCacheManager, PrefixAttach};
 use crate::metrics::ServingMetrics;
+use crate::prefixcache::BlockKv;
 use crate::runtime::{Runtime, Tensor};
 use crate::sampling::{Key, SamplerSpec};
 use crate::specdec::{coupled_emit_len, DraftModel, NGramDraft};
@@ -37,6 +38,14 @@ pub struct EngineConfig {
     pub kv_block_size: usize,
     /// RNG seed for the whole serving session.
     pub seed: u64,
+    /// Automatic prefix caching (DESIGN.md §10): reuse KV blocks across
+    /// requests whose prompts share a full-block token prefix, and run
+    /// prefill on the uncached suffix only (`prefill_cached` artifacts).
+    /// Exact by construction — cached KV bytes are byte-identical to
+    /// recomputation and the first-token Philox coordinates are unchanged
+    /// — so this defaults ON; flip off for A/B runs
+    /// (`repro prefix-identity` asserts the on/off identity).
+    pub prefix_caching: bool,
     /// Typed sampler selection — the one source of truth for which decode
     /// path runs.  [`SamplerSpec::Gumbel`] maps to the fused FlashSampling
     /// decode artifact, [`SamplerSpec::Multinomial`] to the baseline
@@ -57,6 +66,7 @@ impl Default for EngineConfig {
             kv_blocks: 512,
             kv_block_size: 16,
             seed: 0xF1A5_4_5A3,
+            prefix_caching: true,
             sampler: SamplerSpec::default(),
         }
     }
@@ -111,6 +121,11 @@ pub struct Engine {
     /// Index of "lm_head" within the canonical order (first-token sampling).
     lm_head_idx: usize,
     kvmgr: KvCacheManager,
+    /// Does the artifact set carry the `prefill_cached_*` executables?
+    /// Older artifact dirs don't; the engine then still *accounts* prefix
+    /// hits (admission, metrics) but computes every prefill in full —
+    /// output-identical either way, just without the suffix-only speedup.
+    cached_prefill_available: bool,
     waiting: VecDeque<Sequence>,
     running: Vec<Sequence>,
     /// Monotonic decode-step counter — the Philox `step` input, so every
@@ -154,6 +169,12 @@ impl Engine {
         let kvmgr = KvCacheManager::new(KvCacheConfig {
             block_size: cfg.kv_block_size,
             num_blocks: cfg.kv_blocks,
+            prefix_caching: cfg.prefix_caching,
+        });
+        let cached_prefill_available = model.prefill_t_buckets.iter().all(|t| {
+            rt.manifest()
+                .find(&format!("prefill_cached_b{}_t{t}", model.prefill_b))
+                .is_ok()
         });
         let key = Key::from_seed(cfg.seed);
         Ok(Self {
@@ -163,6 +184,7 @@ impl Engine {
             params_lit,
             lm_head_idx,
             kvmgr,
+            cached_prefill_available,
             waiting: VecDeque::new(),
             running: Vec::new(),
             step_counter: 0,
@@ -174,6 +196,18 @@ impl Engine {
 
     pub fn runtime(&self) -> &Runtime {
         &self.rt
+    }
+
+    /// Free KV blocks right now (leak diagnostics: after every request
+    /// completes, `kv_blocks - free` must equal exactly the prefix cache's
+    /// resident blocks).
+    pub fn kv_free_blocks(&self) -> usize {
+        self.kvmgr.free_blocks()
+    }
+
+    /// Blocks resident in the automatic prefix cache (0 with caching off).
+    pub fn prefix_cached_blocks(&self) -> usize {
+        self.kvmgr.prefix_cached_blocks()
     }
 
     fn model(&self) -> &crate::runtime::ModelInfo {
@@ -237,9 +271,19 @@ impl Engine {
     pub fn step(&mut self) -> Result<Vec<Completion>> {
         let t0 = Instant::now();
         let waiting: Vec<Sequence> = self.waiting.iter().cloned().collect();
-        let p = plan(&self.sched, &waiting, &self.running, |tokens| {
-            self.kvmgr.can_allocate(tokens)
-        });
+        // Cache-aware admission: only uncached prefill blocks are charged
+        // against the budget (plus the decode-burst headroom), with a
+        // per-batch tally ([`crate::kvcache::BatchAdmission`], shared with
+        // the `repro prefix-identity` sim) so the plan never
+        // oversubscribes.
+        let mut admission = self.kvmgr.batch_admission();
+        let p = plan(
+            &self.sched,
+            &waiting,
+            &self.running,
+            |s, burst| admission.admit(&self.kvmgr, &s.prompt, burst),
+            |s| self.kvmgr.cached_prefix_tokens(&s.prompt),
+        );
         let out = match p {
             Plan::Prefill { seq_ids, t_bucket } => self.do_prefill(&seq_ids, t_bucket),
             Plan::Decode { seq_ids, b_bucket } => {
@@ -326,9 +370,11 @@ impl Engine {
 
     // --- prefill ---------------------------------------------------------
 
-    fn do_prefill(&mut self, seq_ids: &[u64], t_bucket: usize) -> Result<Vec<Completion>> {
+    fn do_prefill(&mut self, seq_ids: &[u64], _t_bucket: usize) -> Result<Vec<Completion>> {
         let m = self.model().clone();
         let b = m.prefill_b;
+        let bs = self.cfg.kv_block_size;
+        let dh = m.head_dim();
         // Pull the chosen sequences out of the waiting queue (keep order).
         let mut seqs: Vec<Sequence> = Vec::with_capacity(seq_ids.len());
         for id in seq_ids {
@@ -340,30 +386,121 @@ impl Engine {
             seqs.push(self.waiting.remove(idx).unwrap());
         }
 
-        // Register KV accounting now that admission is final.
-        for s in &seqs {
-            self.kvmgr.register(s.id, s.context_len())?;
+        // Register KV accounting now that admission is final; with prefix
+        // caching on this attaches each prompt's cached full-block prefix
+        // copy-on-write and hands back the blocks' physical KV payloads.
+        // Backstop: if the pool raced below the plan's estimate (shared
+        // evictable headroom), re-queue the victim at the front instead of
+        // failing the step — it re-plans next iteration.
+        let mut attaches: Vec<PrefixAttach> = Vec::with_capacity(seqs.len());
+        let mut admitted: Vec<Sequence> = Vec::with_capacity(seqs.len());
+        let mut requeue: Vec<Sequence> = Vec::new();
+        for s in seqs {
+            match self.kvmgr.register_with_prefix(s.id, &s.prompt) {
+                Ok(a) => {
+                    attaches.push(a);
+                    admitted.push(s);
+                }
+                Err(_) => {
+                    self.metrics.bump("prefill_admission_retries", 1);
+                    requeue.push(s);
+                }
+            }
+        }
+        for s in requeue.into_iter().rev() {
+            self.waiting.push_front(s);
+        }
+        let seqs = admitted;
+        if seqs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let attached_tokens: u64 =
+            attaches.iter().map(|a| a.cached_tokens as u64).sum();
+        // Without the prefill_cached artifacts the hit still pays for
+        // admission headroom, but the compute path stays full-prefill.
+        let use_cached = self.cached_prefill_available && attached_tokens > 0;
+        if use_cached {
+            // Only count tokens whose prefill compute was actually
+            // skipped — `prefix_hit_rate()` must never advertise a TTFT
+            // win the artifact fallback did not deliver.
+            self.metrics.cached_prefill_tokens += attached_tokens;
+        } else if attached_tokens > 0 {
+            self.metrics.bump("prefix_attached_unskipped_tokens", attached_tokens);
         }
 
-        // Pack the padded token matrix [B, T] + lengths [B].
+        // Fixed-shape bucket: the cached path packs only each prompt's
+        // uncached suffix, so hit-heavy batches drop into smaller prefill
+        // executables (the scheduler's plan bucket is recomputed here from
+        // the attach results, which are authoritative).
+        let longest = seqs
+            .iter()
+            .zip(&attaches)
+            .map(|(s, a)| s.prompt.len() - if use_cached { a.cached_tokens } else { 0 })
+            .max()
+            .expect("prefill plan is never empty");
+        let t_bucket = pick_bucket(&m.prefill_t_buckets, longest);
+
+        // Pack the padded (suffix) token matrix [B, T] + lengths [B]
+        // (+ per-row prefix offsets for the cached path).
         let mut tokens = vec![0i32; b * t_bucket];
         let mut lengths = vec![1i32; b]; // pad rows: length 1 of token 0
+        let mut offsets = vec![0i32; b];
         for (row, s) in seqs.iter().enumerate() {
-            lengths[row] = s.prompt.len() as i32;
-            tokens[row * t_bucket..row * t_bucket + s.prompt.len()]
-                .copy_from_slice(&s.prompt);
+            let cached = if use_cached { attaches[row].cached_tokens } else { 0 };
+            let suffix = &s.prompt[cached..];
+            lengths[row] = suffix.len() as i32;
+            offsets[row] = cached as i32;
+            tokens[row * t_bucket..row * t_bucket + suffix.len()]
+                .copy_from_slice(suffix);
         }
         let pad_rows = b - seqs.len();
         self.metrics.bump("prefill_pad_rows", pad_rows as u64);
 
-        let name = format!("prefill_b{b}_t{t_bucket}");
-        let exe = self.rt.load(&name)?;
-        let tok_lit = Tensor::I32(tokens, vec![b, t_bucket]).to_literal()?;
-        let len_lit = Tensor::I32(lengths, vec![b]).to_literal()?;
-        let mut lits: Vec<&xla::Literal> = self.params_lit.iter().collect();
-        lits.push(&tok_lit);
-        lits.push(&len_lit);
-        let out = exe.run_literals(&lits)?;
+        let out = if use_cached {
+            // Restore the attached prefix KV byte-identically into the
+            // batch cache literals and run ONLY the suffix through the
+            // cached-prefill artifact (positions offset per row; attends
+            // over restored prefix + in-suffix causal — DESIGN.md §10).
+            let row_len = m.n_heads * m.max_seq * dh;
+            let kv_batch_len = m.n_layers * b * row_len;
+            let mut kvk = vec![0.0f32; kv_batch_len];
+            let mut kvv = vec![0.0f32; kv_batch_len];
+            for (row, a) in attaches.iter().enumerate() {
+                for (j, blk) in a.kv.iter().enumerate() {
+                    // Payload [L, H, bs, Dh] -> batch [L, B, H, S, Dh] at
+                    // positions [j*bs, (j+1)*bs).
+                    for l in 0..m.n_layers {
+                        for h in 0..m.n_heads {
+                            let src = (l * m.n_heads + h) * bs * dh;
+                            let dst = (((l * b + row) * m.n_heads + h) * m.max_seq + j * bs) * dh;
+                            kvk[dst..dst + bs * dh].copy_from_slice(&blk.k[src..src + bs * dh]);
+                            kvv[dst..dst + bs * dh].copy_from_slice(&blk.v[src..src + bs * dh]);
+                        }
+                    }
+                }
+            }
+            let kv_shape = vec![m.n_layers, b, m.n_heads, m.max_seq, dh];
+            let kvk_lit = Tensor::F32(kvk, kv_shape.clone()).to_literal()?;
+            let kvv_lit = Tensor::F32(kvv, kv_shape).to_literal()?;
+            let name = format!("prefill_cached_b{b}_t{t_bucket}");
+            let exe = self.rt.load(&name)?;
+            let off_lit = Tensor::I32(offsets, vec![b]).to_literal()?;
+            let tok_lit = Tensor::I32(tokens, vec![b, t_bucket]).to_literal()?;
+            let len_lit = Tensor::I32(lengths, vec![b]).to_literal()?;
+            let mut lits: Vec<&xla::Literal> = self.params_lit.iter().collect();
+            lits.extend([&kvk_lit, &kvv_lit, &off_lit, &tok_lit, &len_lit]);
+            self.metrics.bump("prefill_cached_runs", 1);
+            exe.run_literals(&lits)?
+        } else {
+            let name = format!("prefill_b{b}_t{t_bucket}");
+            let exe = self.rt.load(&name)?;
+            let tok_lit = Tensor::I32(tokens, vec![b, t_bucket]).to_literal()?;
+            let len_lit = Tensor::I32(lengths, vec![b]).to_literal()?;
+            let mut lits: Vec<&xla::Literal> = self.params_lit.iter().collect();
+            lits.push(&tok_lit);
+            lits.push(&len_lit);
+            exe.run_literals(&lits)?
+        };
         let kv_k = out[0].as_f32()?;
         let kv_v = out[1].as_f32()?;
         let hidden = out[2].clone();
@@ -391,7 +528,7 @@ impl Engine {
         let first_tokens = first[0].as_i32()?.to_vec();
 
         // Slice each row's KV out of the [L, B, H, S, Dh] batch tensors.
-        let row_len = m.n_heads * m.max_seq * m.head_dim();
+        let row_len = m.n_heads * m.max_seq * dh;
         let now = Instant::now();
         let mut completions = Vec::new();
         for (row, mut s) in seqs.into_iter().enumerate() {
@@ -404,21 +541,53 @@ impl Engine {
                 v[dst..dst + row_len].copy_from_slice(&kv_v[src..src + row_len]);
             }
             s.kv = Some(SeqKv { k, v });
+            if self.cfg.prefix_caching {
+                // Publish the prompt's full blocks (prefix + the just-
+                // computed remainder) so later shared-prefix requests hit.
+                // Payload layout [L, H, bs, Dh], sliced from the per-seq
+                // dense [L, H, S, Dh] KV; runs only for new cache nodes.
+                let kv = s.kv.as_ref().expect("set above");
+                let (n_layers, n_heads, max_seq) = (m.n_layers, m.n_heads, m.max_seq);
+                self.kvmgr.insert_prefix(s.id, &s.prompt, |j| {
+                    let mut pk = vec![0.0f32; n_layers * n_heads * bs * dh];
+                    let mut pv = vec![0.0f32; n_layers * n_heads * bs * dh];
+                    for l in 0..n_layers {
+                        for h in 0..n_heads {
+                            let src = ((l * n_heads + h) * max_seq + j * bs) * dh;
+                            let dst = (l * n_heads + h) * bs * dh;
+                            pk[dst..dst + bs * dh].copy_from_slice(&kv.k[src..src + bs * dh]);
+                            pv[dst..dst + bs * dh].copy_from_slice(&kv.v[src..src + bs * dh]);
+                        }
+                    }
+                    BlockKv { k: pk, v: pv }
+                })?;
+            }
             s.generated.push(first_tokens[row]);
             s.state = SeqState::Running;
             s.first_token_at = Some(now);
             s.last_token_at = Some(now);
             s.timing.ttft = Some(now - s.arrived);
-            self.kvmgr.append_token(s.id)?;
             self.metrics.tokens_generated += 1;
             self.metrics.prefill_tokens += s.prompt.len() as u64;
             if let Some(reason) = s.finished() {
                 self.kvmgr.release(s.id)?;
                 completions.push(s.into_completion(reason));
+            } else if !self.kvmgr.append_token(s.id)? {
+                // KV pool exhausted even after cache eviction: preempt —
+                // the same exhaustion handling as the decode path.  (The
+                // old `?`-only call dropped this signal and let the block
+                // table fall one token behind the sequence's context.)
+                self.metrics.bump("preempted", 1);
+                self.kvmgr.release(s.id)?;
+                completions.push(s.into_completion(FinishReason::MaxTokens));
             } else {
                 self.running.push(s);
             }
         }
+        self.metrics.counters.insert(
+            "prefix_evicted_blocks".to_string(),
+            self.kvmgr.evicted_blocks(),
+        );
         Ok(completions)
     }
 

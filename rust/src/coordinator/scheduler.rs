@@ -23,7 +23,10 @@ use super::request::{SeqState, Sequence};
 #[derive(Clone, Debug, PartialEq)]
 pub enum Plan {
     /// Prefill these waiting sequences (indices into the waiting queue)
-    /// using the `t_bucket` prefill artifact.
+    /// using the `t_bucket` prefill artifact.  `t_bucket` is the
+    /// planner's estimate from the cache probe; the engine recomputes the
+    /// final bucket from its authoritative prefix-attach results (which
+    /// may have shifted by then), so treat this value as advisory.
     Prefill { seq_ids: Vec<u64>, t_bucket: usize },
     /// Decode these running sequences using the `b_bucket` artifact.
     Decode { seq_ids: Vec<u64>, b_bucket: usize },
@@ -62,13 +65,27 @@ pub fn pick_bucket(buckets: &[usize], n: usize) -> usize {
 
 /// Plan the next engine iteration.
 ///
-/// `can_admit(tokens)` reports whether the KV manager can hold a new
-/// sequence of that many tokens (admission control).
+/// `can_admit(seq, burst)` reports whether the KV manager can hold the
+/// sequence's prompt plus `burst` extra decode-step tokens (admission
+/// control; the engine backs it with the cache-aware
+/// [`crate::kvcache::KvCacheManager::prefill_blocks_needed`] /
+/// [`crate::kvcache::KvCacheManager::prefill_headroom`] pair, which
+/// charges only *uncached* prefill blocks against the budget).  The
+/// probe is `FnMut` and is called once per chosen candidate in batch
+/// order, so the engine's closure can reserve blocks for earlier
+/// candidates of the same batch — without that running tally a batch of
+/// individually-admissible prompts could oversubscribe the pool.
+/// `cached_tokens(seq)` reports the prompt prefix the KV prefix cache
+/// would serve (0 with caching off) — prefill only computes the suffix,
+/// so the T bucket is picked by the longest *suffix*, not the longest
+/// prompt, letting hit-heavy batches drop into smaller prefill
+/// executables (the TTFT win, DESIGN.md §10).
 pub fn plan(
     cfg: &SchedulerConfig,
     waiting: &[Sequence],
     running: &[Sequence],
-    can_admit: impl Fn(usize) -> bool,
+    mut can_admit: impl FnMut(&Sequence, usize) -> bool,
+    cached_tokens: impl Fn(&Sequence) -> usize,
 ) -> Plan {
     // --- Prefill-priority: batch waiting prompts while capacity allows.
     if running.len() < cfg.max_concurrency {
@@ -83,7 +100,7 @@ pub fn plan(
         let burst = cfg.max_tokens_per_step.max(1) - 1;
         let mut chosen: Vec<&Sequence> = Vec::new();
         for s in waiting.iter().filter(|s| s.state == SeqState::Waiting) {
-            if s.prompt.len() > max_t || !can_admit(s.context_len() + burst) {
+            if s.prompt.len() > max_t || !can_admit(s, burst) {
                 continue;
             }
             chosen.push(s);
@@ -92,7 +109,16 @@ pub fn plan(
             }
         }
         if !chosen.is_empty() {
-            let longest = chosen.iter().map(|s| s.prompt.len()).max().unwrap();
+            // Bucket by the longest uncached suffix (== longest prompt
+            // when caching is off; the cap keeps a non-empty suffix even
+            // if the probe claims the whole prompt).
+            let longest = chosen
+                .iter()
+                .map(|&s| {
+                    s.prompt.len() - cached_tokens(s).min(s.prompt.len().saturating_sub(1))
+                })
+                .max()
+                .unwrap();
             return Plan::Prefill {
                 seq_ids: chosen.iter().map(|s| s.id).collect(),
                 t_bucket: pick_bucket(&cfg.prefill_t_buckets, longest),
@@ -147,11 +173,19 @@ mod tests {
         assert_eq!(pick_bucket(&[1, 2, 4, 8], 20), 8); // clamp to largest
     }
 
+    /// The cache-blind closure pair most tests use.
+    fn always(_: &Sequence, _: usize) -> bool {
+        true
+    }
+    fn uncached(_: &Sequence) -> usize {
+        0
+    }
+
     #[test]
     fn prefill_takes_priority() {
         let waiting = vec![seq(1, 10, 1.0, SeqState::Waiting)];
         let running = vec![seq(2, 5, 1.0, SeqState::Running)];
-        let p = plan(&cfg(), &waiting, &running, |_| true);
+        let p = plan(&cfg(), &waiting, &running, always, uncached);
         assert_eq!(
             p,
             Plan::Prefill { seq_ids: vec![1], t_bucket: 16 }
@@ -164,7 +198,7 @@ mod tests {
             seq(1, 10, 1.0, SeqState::Waiting),
             seq(2, 40, 1.0, SeqState::Waiting),
         ];
-        match plan(&cfg(), &waiting, &[], |_| true) {
+        match plan(&cfg(), &waiting, &[], always, uncached) {
             Plan::Prefill { seq_ids, t_bucket } => {
                 assert_eq!(seq_ids, vec![1, 2]);
                 assert_eq!(t_bucket, 64);
@@ -174,12 +208,37 @@ mod tests {
     }
 
     #[test]
+    fn cached_prefixes_shrink_the_t_bucket() {
+        // A 40-token prompt with 32 tokens cached prefills only its
+        // 8-token suffix: the batch drops from the t=64 bucket to t=16.
+        let waiting = vec![
+            seq(1, 10, 1.0, SeqState::Waiting),
+            seq(2, 40, 1.0, SeqState::Waiting),
+        ];
+        let cached = |s: &Sequence| if s.id == 2 { 32 } else { 0 };
+        match plan(&cfg(), &waiting, &[], always, cached) {
+            Plan::Prefill { seq_ids, t_bucket } => {
+                assert_eq!(seq_ids, vec![1, 2]);
+                assert_eq!(t_bucket, 16);
+            }
+            p => panic!("expected prefill, got {p:?}"),
+        }
+        // An overclaiming probe (cached >= prompt) is capped: at least one
+        // suffix token always remains to prefill.
+        let overclaim = |_: &Sequence| 1000usize;
+        match plan(&cfg(), &waiting, &[], always, overclaim) {
+            Plan::Prefill { t_bucket, .. } => assert_eq!(t_bucket, 16),
+            p => panic!("{p:?}"),
+        }
+    }
+
+    #[test]
     fn oversized_prompt_skipped() {
         let waiting = vec![
             seq(1, 100, 1.0, SeqState::Waiting), // > max T bucket
             seq(2, 10, 1.0, SeqState::Waiting),
         ];
-        match plan(&cfg(), &waiting, &[], |_| true) {
+        match plan(&cfg(), &waiting, &[], always, uncached) {
             Plan::Prefill { seq_ids, .. } => assert_eq!(seq_ids, vec![2]),
             p => panic!("{p:?}"),
         }
@@ -189,11 +248,27 @@ mod tests {
     fn admission_control_blocks_prefill() {
         let waiting = vec![seq(1, 10, 1.0, SeqState::Waiting)];
         let running = vec![seq(2, 5, 1.0, SeqState::Running)];
-        let p = plan(&cfg(), &waiting, &running, |_| false);
+        let p = plan(&cfg(), &waiting, &running, |_, _| false, uncached);
         assert_eq!(
             p,
             Plan::Decode { seq_ids: vec![2], b_bucket: 1 }
         );
+    }
+
+    #[test]
+    fn cache_aware_admission_sees_the_sequence() {
+        // The admission probe receives the SEQUENCE (so the engine can
+        // charge only uncached blocks), not a bare token count: a probe
+        // that admits exactly the cached-prefix prompt proves the plumbing.
+        let waiting = vec![
+            seq(1, 40, 1.0, SeqState::Waiting),
+            seq(2, 40, 1.0, SeqState::Waiting),
+        ];
+        let admit_cached_only = |s: &Sequence, _burst: usize| s.id == 2;
+        match plan(&cfg(), &waiting, &[], admit_cached_only, uncached) {
+            Plan::Prefill { seq_ids, .. } => assert_eq!(seq_ids, vec![2]),
+            p => panic!("{p:?}"),
+        }
     }
 
     #[test]
@@ -205,7 +280,7 @@ mod tests {
             seq(2, 5, 0.7, SeqState::Running),
             seq(3, 5, 1.0, SeqState::Running),
         ];
-        match plan(&cfg(), &[], &running, |_| true) {
+        match plan(&cfg(), &[], &running, always, uncached) {
             Plan::Decode { seq_ids, b_bucket } => {
                 assert_eq!(seq_ids, vec![1, 2, 3]); // FCFS, tau-blind
                 assert_eq!(b_bucket, 4);
@@ -223,7 +298,7 @@ mod tests {
         let running: Vec<Sequence> = (0..8)
             .map(|i| seq(i, 5, 0.25 * (1 + i % 4) as f32, SeqState::Running))
             .collect();
-        match plan(&cfg(), &[], &running, |_| true) {
+        match plan(&cfg(), &[], &running, always, uncached) {
             Plan::Decode { seq_ids, b_bucket } => {
                 assert_eq!(seq_ids.len(), 8);
                 assert_eq!(b_bucket, 8);
@@ -240,7 +315,7 @@ mod tests {
             seq(2, 10, 0.5, SeqState::Waiting),
             seq(3, 10, 2.0, SeqState::Waiting),
         ];
-        match plan(&cfg(), &waiting, &[], |_| true) {
+        match plan(&cfg(), &waiting, &[], always, uncached) {
             Plan::Prefill { seq_ids, t_bucket } => {
                 assert_eq!(seq_ids, vec![1, 2, 3]);
                 assert_eq!(t_bucket, 16);
@@ -253,7 +328,7 @@ mod tests {
     fn decode_respects_largest_bucket() {
         let running: Vec<Sequence> =
             (0..12).map(|i| seq(i, 5, 1.0, SeqState::Running)).collect();
-        match plan(&cfg(), &[], &running, |_| true) {
+        match plan(&cfg(), &[], &running, always, uncached) {
             Plan::Decode { seq_ids, b_bucket } => {
                 assert_eq!(seq_ids.len(), 8);
                 assert_eq!(b_bucket, 8);
@@ -268,7 +343,7 @@ mod tests {
         let running: Vec<Sequence> =
             (0..8).map(|i| seq(i, 5, 1.0, SeqState::Running)).collect();
         // at capacity: no prefill even though prompts wait
-        match plan(&cfg(), &waiting, &running, |_| true) {
+        match plan(&cfg(), &waiting, &running, always, uncached) {
             Plan::Decode { .. } => {}
             p => panic!("{p:?}"),
         }
@@ -276,7 +351,7 @@ mod tests {
 
     #[test]
     fn idle_when_empty() {
-        assert_eq!(plan(&cfg(), &[], &[], |_| true), Plan::Idle);
+        assert_eq!(plan(&cfg(), &[], &[], always, uncached), Plan::Idle);
     }
 
     #[test]
@@ -288,17 +363,15 @@ mod tests {
         c.max_tokens_per_step = 5;
         let waiting = vec![seq(1, 10, 1.0, SeqState::Waiting)];
         let asked = std::cell::Cell::new(0usize);
-        let p = plan(&c, &waiting, &[], |t| {
-            asked.set(t);
+        let probe = |s: &Sequence, burst: usize| {
+            asked.set(s.context_len() + burst);
             true
-        });
+        };
+        let p = plan(&c, &waiting, &[], probe, uncached);
         assert!(matches!(p, Plan::Prefill { .. }));
         assert_eq!(asked.get(), 10 + 4);
         // Ordinary decode keeps the original probe.
-        let p = plan(&cfg(), &waiting, &[], |t| {
-            asked.set(t);
-            true
-        });
+        let p = plan(&cfg(), &waiting, &[], probe, uncached);
         assert!(matches!(p, Plan::Prefill { .. }));
         assert_eq!(asked.get(), 10);
     }
@@ -311,9 +384,10 @@ mod tests {
         c.max_tokens_per_step = 5;
         let waiting = vec![seq(1, 10, 1.0, SeqState::Waiting)];
         let running = vec![seq(2, 5, 1.0, SeqState::Running)];
-        let p = plan(&c, &waiting, &running, |t| t <= 12);
+        let fits = |s: &Sequence, burst: usize| s.context_len() + burst <= 12;
+        let p = plan(&c, &waiting, &running, fits, uncached);
         assert_eq!(p, Plan::Decode { seq_ids: vec![2], b_bucket: 1 });
-        let p = plan(&cfg(), &waiting, &running, |t| t <= 12);
+        let p = plan(&cfg(), &waiting, &running, fits, uncached);
         assert!(matches!(p, Plan::Prefill { .. }));
     }
 }

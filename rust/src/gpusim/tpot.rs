@@ -82,6 +82,10 @@ const GQA_KV_FRACTION: f64 = 0.25;
 /// gather, logits processors, python sampler crossing) per engine step.
 /// FlashSampling eliminates it: sampling happens inside the LM-head graph.
 const SAMPLER_HOST_OVERHEAD: f64 = 80.0e-6;
+/// Model-FLOPs utilization of the prefill matmuls (prefill is
+/// compute-bound, unlike decode; dense serving stacks typically sustain
+/// 40-60% of peak on prompt processing).
+const PREFILL_MFU: f64 = 0.5;
 
 impl ModelSpec {
     /// LM-head parameter count (excluded from the per-layer stream term).
@@ -139,6 +143,63 @@ impl ModelSpec {
         let base = self.tpot(gpu, b, Method::Fi1); // vLLM default sampler path
         let flash = self.tpot(gpu, b, Method::FlashSampling);
         1.0 - flash / base
+    }
+
+    /// Modeled prefill (prompt-processing) time for one request of
+    /// `prompt_tokens`, of which a `cached_fraction` is served by the
+    /// automatic prefix cache (DESIGN.md §10) and never recomputed.
+    ///
+    /// Prefill is compute-bound: `2 · params · uncached_tokens` FLOPs at
+    /// [`PREFILL_MFU`], floored by one streaming pass over the weights
+    /// (tiny uncached suffixes still read every layer once) plus the
+    /// per-layer dispatch chain and host overhead — the irreducible TTFT
+    /// term a 100% hit rate converges to.
+    pub fn prefill_time(
+        &self,
+        gpu: &GpuSpec,
+        prompt_tokens: usize,
+        cached_fraction: f64,
+    ) -> f64 {
+        let uncached =
+            prompt_tokens as f64 * (1.0 - cached_fraction.clamp(0.0, 1.0));
+        let flops = 2.0 * self.params * uncached / self.tp as f64;
+        let compute = flops / (gpu.bf16_flops * PREFILL_MFU);
+        let weight_stream =
+            self.params * 2.0 / self.tp as f64 / (gpu.hbm_bw * gpu.bw_efficiency);
+        let dispatch =
+            self.n_layers as f64 * KERNELS_PER_LAYER * gpu.launch_overhead;
+        compute.max(weight_stream) + dispatch + HOST_OVERHEAD
+    }
+
+    /// Modeled time-to-first-token: prefill of the uncached prompt
+    /// remainder, plus one LM-head + sampling pass for the first output
+    /// token (at prefill batch `b`).
+    pub fn ttft(
+        &self,
+        gpu: &GpuSpec,
+        b: usize,
+        prompt_tokens: usize,
+        cached_fraction: f64,
+        method: Method,
+    ) -> f64 {
+        self.prefill_time(gpu, prompt_tokens, cached_fraction)
+            + self.lm_head_time(gpu, b, method)
+    }
+
+    /// TTFT reduction from prefix caching at a given hit fraction
+    /// (`1 - ttft(cached) / ttft(uncached)`), the headline of
+    /// `BENCH_prefixcache.json`.
+    pub fn ttft_reduction(
+        &self,
+        gpu: &GpuSpec,
+        b: usize,
+        prompt_tokens: usize,
+        cached_fraction: f64,
+    ) -> f64 {
+        let base = self.ttft(gpu, b, prompt_tokens, 0.0, Method::FlashSampling);
+        let hit =
+            self.ttft(gpu, b, prompt_tokens, cached_fraction, Method::FlashSampling);
+        1.0 - hit / base
     }
 
     /// Modeled speculative-decode TPOT (seconds/token) at batch `b`.
@@ -245,6 +306,55 @@ mod tests {
             let b = m.tpot(&B200, 64, Method::FlashSampling);
             assert!(b > a, "{}", m.name);
         }
+    }
+
+    #[test]
+    fn ttft_monotone_decreasing_in_cached_fraction() {
+        for m in PAPER_MODELS {
+            // Strictly decreasing while the uncached suffix stays
+            // compute-bound (B200 roofline crossover ~165 tokens)...
+            let mut prev = f64::INFINITY;
+            for f in [0.0, 0.25, 0.5, 0.75, 0.9] {
+                let t = m.ttft(&B200, 4, 2048, f, Method::FlashSampling);
+                assert!(t < prev, "{} cached={f}: {t} !< {prev}", m.name);
+                assert!(t > 0.0);
+                prev = t;
+            }
+            // ...then plateaus at the weight-stream floor (never rises).
+            let t = m.ttft(&B200, 4, 2048, 1.0, Method::FlashSampling);
+            assert!(t <= prev, "{}: {t} above the 0.9 point {prev}", m.name);
+        }
+    }
+
+    #[test]
+    fn ttft_magnitudes_and_floor_are_plausible() {
+        // 2k-token prompt on Qwen3-8B/B200: ~15 ms modeled prefill at
+        // MFU 0.5 (2 * 8.2e9 * 2048 / (2250e12 * 0.5)); the fully-cached
+        // floor keeps the weight-stream + dispatch + host terms.
+        let cold = QWEN3_8B.prefill_time(&B200, 2048, 0.0);
+        assert!((5e-3..50e-3).contains(&cold), "cold: {cold}");
+        let floor = QWEN3_8B.prefill_time(&B200, 2048, 1.0);
+        assert!(floor > 0.0 && floor < cold / 3.0, "floor: {floor}");
+        // The floor never depends on the prompt length.
+        assert!(
+            (QWEN3_8B.prefill_time(&B200, 64, 1.0) - floor).abs() < 1e-12
+        );
+    }
+
+    #[test]
+    fn ttft_reduction_tracks_the_cached_share() {
+        // Long prompts are compute-dominated, so a 90% hit rate recovers
+        // most (but never more) of the prefill term.
+        for m in PAPER_MODELS {
+            let r = m.ttft_reduction(&B200, 4, 4096, 0.9);
+            assert!(r > 0.5, "{}: {r}", m.name);
+            assert!(r < 0.9 + 1e-9, "{}: {r}", m.name);
+            assert!(m.ttft_reduction(&B200, 4, 4096, 0.0).abs() < 1e-12);
+        }
+        // Short prompts amortize less: the overhead floor dominates.
+        let short = QWEN3_8B.ttft_reduction(&B200, 4, 128, 0.9);
+        let long = QWEN3_8B.ttft_reduction(&B200, 4, 4096, 0.9);
+        assert!(short < long, "{short} !< {long}");
     }
 
     #[test]

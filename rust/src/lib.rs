@@ -49,6 +49,19 @@
 //! keeps the output provably distributed as the target model, and the
 //! engine emits 1..=K+1 tokens per step.  Selected by
 //! `sampler = specdec:k=4,ngram=3`; verified by `repro specdec-chisq`.
+//!
+//! # Automatic prefix caching
+//!
+//! The [`prefixcache`] subsystem (DESIGN.md §10) removes redundant prefill
+//! for shared-prefix traffic (system prompts, few-shot templates,
+//! multi-turn histories): a chain-hashed radix tree maps full-block token
+//! prefixes to refcounted KV blocks, the scheduler charges only uncached
+//! tokens against admission, and the engine restores cached KV
+//! byte-identically and prefills the suffix only (`prefill_cached`
+//! artifacts).  Output is token-for-token identical with caching on or
+//! off — `repro prefix-identity` and `rust/tests/prefixcache.rs` assert
+//! it — and `cargo bench --bench prefixcache` measures the cached-token
+//! reduction and the modeled TTFT win on shared-prefix workloads.
 
 pub mod benchutil;
 pub mod config;
@@ -57,6 +70,7 @@ pub mod gpusim;
 pub mod json;
 pub mod kvcache;
 pub mod metrics;
+pub mod prefixcache;
 pub mod repro;
 pub mod runtime;
 pub mod sampling;

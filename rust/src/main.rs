@@ -24,7 +24,7 @@ fn usage() -> ! {
         "usage: flashsampling <serve|repro|bench-kernel|selfcheck> [args]\n\
          \n\
          serve        --config FILE | --set key=value ...\n\
-         repro        <table1|table4|...|fig6|chisq|hetero-chisq|specdec-chisq|e2e-quality|all|stats> [--out DIR]\n\
+         repro        <table1|table4|...|fig6|chisq|hetero-chisq|specdec-chisq|prefix-identity|e2e-quality|all|stats> [--out DIR]\n\
          bench-kernel [--set key=value ...]\n\
          selfcheck    [--set key=value ...]"
     );
@@ -109,6 +109,15 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
         m.median_tpot().map(|d| d.as_secs_f64() * 1e3).unwrap_or(f64::NAN),
         m.mean_batch()
     );
+    if let Some(rate) = m.prefix_hit_rate() {
+        println!(
+            "[serve] prefix cache: {:.1}% token hit rate ({} of {} prefill \
+             tokens served from cache)",
+            rate * 100.0,
+            m.cached_prefill_tokens,
+            m.prefill_tokens
+        );
+    }
     if !m.spec_tokens_per_step.is_empty() {
         // Acceptance is None when the drafter never proposed (e.g. no
         // suffix repeats); the spec path still ran, so still report it.
@@ -128,6 +137,18 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
     Ok(())
 }
 
+/// Statistical reports flag failures with these sentinels; the CLI exits
+/// nonzero when one appears so CI's repro smoke step fails the workflow on
+/// a statistical regression, not just the testbed.
+fn check_repro_verdicts(id: &str, md: &str) -> Result<()> {
+    for sentinel in ["REJECTED", "MISMATCH", "SIGNIFICANT DIFFERENCE"] {
+        if md.contains(sentinel) {
+            bail!("repro {id} reports {sentinel} — statistical regression");
+        }
+    }
+    Ok(())
+}
+
 fn cmd_repro(cfg: &Config, what: &str) -> Result<()> {
     match what {
         "all" => flashsampling::repro::run_all(&cfg.out_dir)?,
@@ -135,11 +156,13 @@ fn cmd_repro(cfg: &Config, what: &str) -> Result<()> {
             for id in flashsampling::repro::STATS {
                 let md = flashsampling::repro::run(id, &cfg.out_dir)?;
                 println!("=== {id} ===\n{md}");
+                check_repro_verdicts(id, &md)?;
             }
         }
         id => {
             let md = flashsampling::repro::run(id, &cfg.out_dir)?;
             println!("{md}");
+            check_repro_verdicts(id, &md)?;
         }
     }
     println!("[repro] wrote results under {}", cfg.out_dir.display());

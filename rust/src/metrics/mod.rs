@@ -89,6 +89,9 @@ pub struct ServingMetrics {
     pub requests_completed: u64,
     pub tokens_generated: u64,
     pub prefill_tokens: u64,
+    /// Prefill tokens served from the automatic prefix cache instead of
+    /// being recomputed (DESIGN.md §10); always `<= prefill_tokens`.
+    pub cached_prefill_tokens: u64,
     pub ttft: Vec<Duration>,
     pub tpot: Vec<Duration>,
     /// Per-step decode batch sizes (batch-efficiency diagnostics).
@@ -157,6 +160,78 @@ impl ServingMetrics {
             self.counters.get("spec_accepted_tokens").copied().unwrap_or(0);
         Some(accepted as f64 / drafted as f64)
     }
+
+    /// Token-level prefix-cache hit rate: the fraction of prefill tokens
+    /// served from cached KV blocks instead of recomputed.  `None` before
+    /// any prefill ran.
+    pub fn prefix_hit_rate(&self) -> Option<f64> {
+        if self.prefill_tokens == 0 {
+            return None;
+        }
+        Some(self.cached_prefill_tokens as f64 / self.prefill_tokens as f64)
+    }
+
+    /// Plain-text Prometheus exposition-format dump: counters, gauges, and
+    /// TTFT/TPOT summaries, deterministically ordered (named counters
+    /// sorted by name) so scrapes — and the format-stability unit test —
+    /// see a stable layout.
+    pub fn render_prometheus(&self) -> String {
+        fn quantile_s(xs: &[Duration], q: f64) -> f64 {
+            let mut v: Vec<Duration> = xs.to_vec();
+            v.sort_unstable();
+            let idx = ((v.len() - 1) as f64 * q).round() as usize;
+            v[idx].as_secs_f64()
+        }
+        let mut out = String::new();
+        for (name, v) in [
+            ("requests_completed", self.requests_completed),
+            ("tokens_generated", self.tokens_generated),
+            ("prefill_tokens", self.prefill_tokens),
+            ("cached_prefill_tokens", self.cached_prefill_tokens),
+        ] {
+            out.push_str(&format!(
+                "# TYPE flashsampling_{name} counter\n\
+                 flashsampling_{name} {v}\n"
+            ));
+        }
+        out.push_str("# TYPE flashsampling_prefix_hit_rate gauge\n");
+        out.push_str(&format!(
+            "flashsampling_prefix_hit_rate {:.6}\n",
+            self.prefix_hit_rate().unwrap_or(0.0)
+        ));
+        out.push_str("# TYPE flashsampling_throughput_tokens_per_second gauge\n");
+        out.push_str(&format!(
+            "flashsampling_throughput_tokens_per_second {:.6}\n",
+            self.throughput_tps()
+        ));
+        for (name, xs) in [("ttft", &self.ttft), ("tpot", &self.tpot)] {
+            out.push_str(&format!(
+                "# TYPE flashsampling_{name}_seconds summary\n"
+            ));
+            if !xs.is_empty() {
+                for q in [0.5, 0.9, 0.99] {
+                    out.push_str(&format!(
+                        "flashsampling_{name}_seconds{{quantile=\"{q}\"}} {:.6}\n",
+                        quantile_s(xs, q)
+                    ));
+                }
+            }
+            out.push_str(&format!(
+                "flashsampling_{name}_seconds_count {}\n",
+                xs.len()
+            ));
+        }
+        let mut names: Vec<&String> = self.counters.keys().collect();
+        names.sort();
+        out.push_str("# TYPE flashsampling_counter counter\n");
+        for name in names {
+            out.push_str(&format!(
+                "flashsampling_counter{{name=\"{name}\"}} {}\n",
+                self.counters[name]
+            ));
+        }
+        out
+    }
 }
 
 fn median(xs: &[Duration]) -> Option<Duration> {
@@ -217,6 +292,68 @@ mod tests {
         assert_eq!(m.counters["preempted"], 3);
         m.decode_batch_sizes = vec![2, 4, 6];
         assert!((m.mean_batch() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prefix_hit_rate_is_cached_over_total() {
+        let mut m = ServingMetrics::default();
+        assert_eq!(m.prefix_hit_rate(), None);
+        m.prefill_tokens = 200;
+        m.cached_prefill_tokens = 150;
+        assert!((m.prefix_hit_rate().unwrap() - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prometheus_rendering_is_format_stable() {
+        // Exact-output check: scrape consumers (and this test) rely on the
+        // exposition layout not drifting.
+        let mut m = ServingMetrics::default();
+        m.requests_completed = 3;
+        m.tokens_generated = 40;
+        m.prefill_tokens = 100;
+        m.cached_prefill_tokens = 50;
+        m.wall = Duration::from_secs(2);
+        m.ttft = vec![
+            Duration::from_millis(10),
+            Duration::from_millis(20),
+            Duration::from_millis(30),
+        ];
+        m.tpot = vec![Duration::from_millis(5)];
+        m.bump("preempted", 2);
+        m.bump("decode_cache_hits", 7);
+        let expect = "\
+# TYPE flashsampling_requests_completed counter
+flashsampling_requests_completed 3
+# TYPE flashsampling_tokens_generated counter
+flashsampling_tokens_generated 40
+# TYPE flashsampling_prefill_tokens counter
+flashsampling_prefill_tokens 100
+# TYPE flashsampling_cached_prefill_tokens counter
+flashsampling_cached_prefill_tokens 50
+# TYPE flashsampling_prefix_hit_rate gauge
+flashsampling_prefix_hit_rate 0.500000
+# TYPE flashsampling_throughput_tokens_per_second gauge
+flashsampling_throughput_tokens_per_second 20.000000
+# TYPE flashsampling_ttft_seconds summary
+flashsampling_ttft_seconds{quantile=\"0.5\"} 0.020000
+flashsampling_ttft_seconds{quantile=\"0.9\"} 0.030000
+flashsampling_ttft_seconds{quantile=\"0.99\"} 0.030000
+flashsampling_ttft_seconds_count 3
+# TYPE flashsampling_tpot_seconds summary
+flashsampling_tpot_seconds{quantile=\"0.5\"} 0.005000
+flashsampling_tpot_seconds{quantile=\"0.9\"} 0.005000
+flashsampling_tpot_seconds{quantile=\"0.99\"} 0.005000
+flashsampling_tpot_seconds_count 1
+# TYPE flashsampling_counter counter
+flashsampling_counter{name=\"decode_cache_hits\"} 7
+flashsampling_counter{name=\"preempted\"} 2
+";
+        assert_eq!(m.render_prometheus(), expect);
+        // Empty metrics still render (no quantile lines, zero counts).
+        let empty = ServingMetrics::default().render_prometheus();
+        assert!(empty.contains("flashsampling_ttft_seconds_count 0"));
+        assert!(empty.contains("flashsampling_prefix_hit_rate 0.000000"));
+        assert!(!empty.contains("quantile"));
     }
 
     #[test]

@@ -1,0 +1,38 @@
+//! Automatic prefix caching: radix-tree KV reuse across requests
+//! (DESIGN.md §10).
+//!
+//! FlashSampling makes sampling a free epilogue of the LM head; for
+//! multi-user serving the next dominant cost is **redundant prefill** —
+//! system prompts, few-shot templates, and multi-turn histories are
+//! re-embedded for every request even when their KV state is
+//! byte-identical.  This subsystem removes that cost without touching the
+//! exactness story: reusing KV blocks for an identical token prefix feeds
+//! bit-identical hidden states into the fused sample kernel, and the
+//! first-token Philox coordinates are unchanged, so every statistical
+//! certificate (`repro chisq` et al.) holds with caching on or off —
+//! checked end-to-end by `repro prefix-identity`.
+//!
+//! Pieces:
+//!
+//! * [`RadixTree`] — the index: full-block granularity, chain-hashed keys
+//!   (a node commits to its whole prefix), token-verified lookups, LRU
+//!   eviction of unpinned leaves only.
+//! * [`BlockKv`] — the physical payload: the `[L, H, block_size, Dh]` K/V
+//!   slices of one cached block (the stand-in for the block's HBM page in
+//!   the dense-KV substitution, DESIGN.md §2).
+//! * [`crate::kvcache::KvCacheManager`] owns the tree and keeps its
+//!   refcounts in lockstep with the `BlockAllocator`:
+//!   `register_with_prefix` attaches matched blocks copy-on-write (the
+//!   `fork` machinery), `insert_prefix` publishes a freshly prefilled
+//!   prompt, `release` detaches, and allocation pressure evicts.
+//! * `coordinator` — the scheduler charges only uncached prefill tokens
+//!   against the admission budget and buckets by suffix length; the
+//!   engine restores cached prefix KV and runs the `prefill_cached`
+//!   artifact on the suffix only.
+//! * `gpusim::tpot` models the TTFT win as a function of the cached
+//!   fraction; `workload` generates shared-prefix / multi-turn traffic so
+//!   the win is measurable end-to-end (`cargo bench --bench prefixcache`).
+
+pub mod radix;
+
+pub use radix::{BlockKv, RadixTree};

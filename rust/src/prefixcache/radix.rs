@@ -1,0 +1,484 @@
+//! Chain-hashed radix tree over full KV blocks — the prefix-cache index.
+//!
+//! Granularity is one **full** allocator block (`block_size` token
+//! positions): a prompt's reusable prefix is its longest chain of full
+//! blocks that some earlier sequence already computed.  Each tree node
+//! stands for exactly one such block and is keyed by a *chain hash* that
+//! commits to the node's entire token prefix — `hash(parent_hash, block
+//! tokens)` — so two prefixes sharing a block's tokens but differing
+//! earlier can never alias (DESIGN.md §10).  Because exactness is the
+//! repo's contract, a hash is never trusted alone: every node stores its
+//! block's tokens and a lookup only matches on token equality, so even a
+//! 64-bit collision degrades to a cache miss, not a wrong reuse.
+//!
+//! Refcount discipline (kept in lockstep with the `BlockAllocator` by
+//! [`crate::kvcache::KvCacheManager`]):
+//!
+//! * node exists            ⇒ the cache holds ONE allocator ref on `block`
+//!   (taken at insert, released at eviction);
+//! * `refs` counts live sequences attached through the node — each of
+//!   those holds its OWN allocator ref per block (the `fork` machinery);
+//! * eviction is LRU over **unpinned leaves only** (`refs == 0`, no
+//!   children), so an interior node outlives every cached extension of it
+//!   and an attached node can never be pulled out from under a sequence.
+
+use std::collections::HashMap;
+
+use crate::kvcache::BlockId;
+
+/// Physical KV payload of one cached block: the `[L, H, block_size, Dh]`
+/// f32 slices for K and V that the engine captured after prefill.  On a
+/// real device these bytes would simply stay resident in the block's HBM
+/// page; in this repro's dense-KV substitution (DESIGN.md §2) the cache
+/// carries them so a hit can restore the prefix KV byte-identically.
+/// Accounting-only users (benches, property tests) leave both empty.
+#[derive(Clone, Debug, Default)]
+pub struct BlockKv {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+/// One cached full block.
+struct Node {
+    /// Chain hash committing to the whole prefix up to and including this
+    /// block (the key under which the parent indexes this child).
+    hash: u64,
+    /// This block's tokens — compared on every lookup so a hash collision
+    /// is a miss, never a false hit.
+    tokens: Vec<i32>,
+    block: BlockId,
+    kv: BlockKv,
+    parent: Option<usize>,
+    children: HashMap<u64, usize>,
+    /// Live sequences currently attached through this node.
+    refs: u32,
+    /// LRU tick of the last attach/insert touching this node.
+    last_used: u64,
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+/// Root sentinel "parent hash" — the chain anchor for first blocks.
+const ROOT_HASH: u64 = FNV_OFFSET;
+
+fn fnv(mut h: u64, bytes: impl Iterator<Item = u8>) -> u64 {
+    for b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// `hash(parent_hash, tokens)` — FNV-1a over the parent hash then the
+/// block's token bytes, so a node's key commits to its whole prefix.
+fn chain_hash(parent: u64, tokens: &[i32]) -> u64 {
+    let h = fnv(FNV_OFFSET, parent.to_le_bytes().into_iter());
+    fnv(h, tokens.iter().flat_map(|t| t.to_le_bytes()))
+}
+
+/// The radix tree: a slab of nodes plus the first-block index.
+pub struct RadixTree {
+    block_size: usize,
+    nodes: Vec<Option<Node>>,
+    free: Vec<usize>,
+    roots: HashMap<u64, usize>,
+    tick: u64,
+    live: usize,
+}
+
+impl RadixTree {
+    pub fn new(block_size: usize) -> Self {
+        assert!(block_size > 0, "block_size must be >= 1");
+        Self {
+            block_size,
+            nodes: Vec::new(),
+            free: Vec::new(),
+            roots: HashMap::new(),
+            tick: 0,
+            live: 0,
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    /// Number of cached blocks (= live nodes).
+    pub fn cached_blocks(&self) -> usize {
+        self.live
+    }
+
+    fn node(&self, id: usize) -> &Node {
+        self.nodes[id].as_ref().expect("stale node id")
+    }
+
+    fn node_mut(&mut self, id: usize) -> &mut Node {
+        self.nodes[id].as_mut().expect("stale node id")
+    }
+
+    pub fn node_block(&self, id: usize) -> BlockId {
+        self.node(id).block
+    }
+
+    pub fn node_kv(&self, id: usize) -> &BlockKv {
+        &self.node(id).kv
+    }
+
+    /// Walk the longest cached full-block chain matching `prompt`, capped
+    /// at `max_blocks` blocks.  Read-only; returns node ids in chain order.
+    fn walk(&self, prompt: &[i32], max_blocks: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        let mut map = &self.roots;
+        let mut parent_hash = ROOT_HASH;
+        for chunk in prompt.chunks_exact(self.block_size).take(max_blocks) {
+            let h = chain_hash(parent_hash, chunk);
+            match map.get(&h) {
+                Some(&id) if self.node(id).tokens.as_slice() == chunk => {
+                    out.push(id);
+                    parent_hash = h;
+                    map = &self.node(id).children;
+                }
+                _ => break,
+            }
+        }
+        out
+    }
+
+    /// Longest cached prefix of `prompt` in tokens (full blocks only,
+    /// capped at `max_blocks`).  Pure probe: no refcounts, no LRU bump —
+    /// safe for admission-control queries.
+    pub fn probe_tokens(&self, prompt: &[i32], max_blocks: usize) -> usize {
+        self.walk(prompt, max_blocks).len() * self.block_size
+    }
+
+    /// Attach a sequence to the longest cached prefix: bumps each matched
+    /// node's `refs` and LRU tick, returns the node ids in chain order.
+    /// The caller must take one allocator ref per returned block and later
+    /// [`Self::detach`] exactly these ids.
+    pub fn attach(&mut self, prompt: &[i32], max_blocks: usize) -> Vec<usize> {
+        let ids = self.walk(prompt, max_blocks);
+        self.tick += 1;
+        let tick = self.tick;
+        for &id in &ids {
+            let n = self.node_mut(id);
+            n.refs += 1;
+            n.last_used = tick;
+        }
+        ids
+    }
+
+    /// Drop a sequence's attachment refs (the inverse of [`Self::attach`]).
+    pub fn detach(&mut self, ids: &[usize]) {
+        for &id in ids {
+            let n = self.node_mut(id);
+            debug_assert!(n.refs > 0, "detach without attach");
+            n.refs = n.refs.saturating_sub(1);
+        }
+    }
+
+    /// Insert `prompt`'s full blocks, backed by the sequence's `blocks`
+    /// (ordered block table); `payload(j)` supplies the physical KV of
+    /// block `j` and is only called for blocks not already cached.
+    /// Returns the block ids newly referenced by the cache — the caller
+    /// must take one allocator ref on each.
+    pub fn insert(
+        &mut self,
+        prompt: &[i32],
+        blocks: &[BlockId],
+        mut payload: impl FnMut(usize) -> BlockKv,
+    ) -> Vec<BlockId> {
+        let full = (prompt.len() / self.block_size).min(blocks.len());
+        let mut new_blocks = Vec::new();
+        self.tick += 1;
+        let tick = self.tick;
+        let mut parent: Option<usize> = None;
+        let mut parent_hash = ROOT_HASH;
+        for j in 0..full {
+            let chunk = &prompt[j * self.block_size..(j + 1) * self.block_size];
+            let h = chain_hash(parent_hash, chunk);
+            let existing = match parent {
+                None => self.roots.get(&h).copied(),
+                Some(p) => self.node(p).children.get(&h).copied(),
+            };
+            let id = match existing {
+                Some(id) if self.node(id).tokens.as_slice() == chunk => {
+                    self.node_mut(id).last_used = tick;
+                    id
+                }
+                // A 64-bit chain-hash collision between different token
+                // blocks: leave the incumbent alone and stop extending —
+                // correctness never depends on the hash (lookups compare
+                // tokens), only this prefix stays uncached.
+                Some(_) => break,
+                None => {
+                    let node = Node {
+                        hash: h,
+                        tokens: chunk.to_vec(),
+                        block: blocks[j],
+                        kv: payload(j),
+                        parent,
+                        children: HashMap::new(),
+                        refs: 0,
+                        last_used: tick,
+                    };
+                    let id = self.alloc_node(node);
+                    match parent {
+                        None => {
+                            self.roots.insert(h, id);
+                        }
+                        Some(p) => {
+                            self.node_mut(p).children.insert(h, id);
+                        }
+                    }
+                    new_blocks.push(blocks[j]);
+                    id
+                }
+            };
+            parent = Some(id);
+            parent_hash = h;
+        }
+        new_blocks
+    }
+
+    fn alloc_node(&mut self, node: Node) -> usize {
+        self.live += 1;
+        match self.free.pop() {
+            Some(id) => {
+                self.nodes[id] = Some(node);
+                id
+            }
+            None => {
+                self.nodes.push(Some(node));
+                self.nodes.len() - 1
+            }
+        }
+    }
+
+    /// Evict the least-recently-used unpinned leaf (`refs == 0`, no
+    /// children).  Returns the freed node's block id — the caller must
+    /// release the cache's allocator ref on it.  `None` when nothing is
+    /// evictable (every leaf is attached).
+    pub fn evict_lru(&mut self) -> Option<BlockId> {
+        let mut best: Option<(u64, usize)> = None;
+        for (id, slot) in self.nodes.iter().enumerate() {
+            if let Some(n) = slot {
+                if n.refs == 0
+                    && n.children.is_empty()
+                    && best.is_none_or(|(t, _)| n.last_used < t)
+                {
+                    best = Some((n.last_used, id));
+                }
+            }
+        }
+        let (_, id) = best?;
+        let node = self.nodes[id].take().expect("picked a live node");
+        match node.parent {
+            None => {
+                self.roots.remove(&node.hash);
+            }
+            Some(p) => {
+                self.node_mut(p).children.remove(&node.hash);
+            }
+        }
+        self.free.push(id);
+        self.live -= 1;
+        Some(node.block)
+    }
+
+    /// Blocks that eviction could actually return to the free list right
+    /// now: nodes whose subtree contains no attached (`refs > 0`) node —
+    /// those can all be peeled off leaf-first — AND whose block the cache
+    /// is the sole holder of (`reclaims(block)`; a block a live sequence
+    /// still references survives its node's eviction, freeing nothing).
+    /// The admission plan counts these as reclaimable headroom next to the
+    /// allocator's free list, so the count must never overstate what
+    /// [`Self::evict_lru`] can deliver.
+    pub fn evictable(&self, reclaims: impl Fn(BlockId) -> bool) -> usize {
+        fn visit(
+            tree: &RadixTree,
+            id: usize,
+            count: &mut usize,
+            reclaims: &impl Fn(BlockId) -> bool,
+        ) -> bool {
+            let n = tree.node(id);
+            let mut pinned = n.refs > 0;
+            for &c in n.children.values() {
+                // Note: every child is visited even under a pinned parent
+                // (children order is irrelevant to the count).
+                pinned |= visit(tree, c, count, reclaims);
+            }
+            if !pinned && reclaims(n.block) {
+                *count += 1;
+            }
+            pinned
+        }
+        let mut count = 0;
+        for &id in self.roots.values() {
+            visit(self, id, &mut count, &reclaims);
+        }
+        count
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(xs: &[i32]) -> Vec<i32> {
+        xs.to_vec()
+    }
+
+    #[test]
+    fn insert_then_probe_matches_full_blocks_only() {
+        let mut t = RadixTree::new(4);
+        // 10 tokens = 2 full blocks + a 2-token tail (never cached).
+        let p = toks(&[1, 2, 3, 4, 5, 6, 7, 8, 9, 10]);
+        let added = t.insert(&p, &[7, 8, 9], |_| BlockKv::default());
+        assert_eq!(added, vec![7, 8]); // tail block 9 is not full
+        assert_eq!(t.cached_blocks(), 2);
+        assert_eq!(t.probe_tokens(&p, usize::MAX), 8);
+        // A shorter prompt sharing the first block matches one block.
+        assert_eq!(t.probe_tokens(&[1, 2, 3, 4, 99], usize::MAX), 4);
+        // Cap limits the match.
+        assert_eq!(t.probe_tokens(&p, 1), 4);
+        // A different first token misses entirely.
+        assert_eq!(t.probe_tokens(&[9, 2, 3, 4, 5, 6, 7, 8], usize::MAX), 0);
+    }
+
+    #[test]
+    fn chain_hash_commits_to_the_whole_prefix() {
+        let mut t = RadixTree::new(2);
+        // Two prompts whose SECOND block has identical tokens but whose
+        // first blocks differ: the second blocks must be distinct nodes.
+        t.insert(&[1, 1, 5, 5], &[0, 1], |_| BlockKv::default());
+        t.insert(&[2, 2, 5, 5], &[2, 3], |_| BlockKv::default());
+        assert_eq!(t.cached_blocks(), 4);
+        assert_eq!(t.probe_tokens(&[1, 1, 5, 5], usize::MAX), 4);
+        assert_eq!(t.probe_tokens(&[2, 2, 5, 5], usize::MAX), 4);
+        // The [5, 5] block under prefix [1, 1] maps to block 1, under
+        // [2, 2] to block 3 — prefix-committed, never shared.
+        let a = t.attach(&[1, 1, 5, 5], usize::MAX);
+        let b = t.attach(&[2, 2, 5, 5], usize::MAX);
+        assert_eq!(t.node_block(a[1]), 1);
+        assert_eq!(t.node_block(b[1]), 3);
+    }
+
+    #[test]
+    fn shared_prefix_deduplicates_nodes() {
+        let mut t = RadixTree::new(4);
+        t.insert(&[1, 2, 3, 4, 5, 6, 7, 8], &[0, 1], |_| BlockKv::default());
+        // Same first block, different second block: only one new node.
+        let added =
+            t.insert(&[1, 2, 3, 4, 9, 9, 9, 9], &[0, 2], |_| BlockKv::default());
+        assert_eq!(added, vec![2]);
+        assert_eq!(t.cached_blocks(), 3);
+    }
+
+    #[test]
+    fn payload_roundtrips_through_attach() {
+        let mut t = RadixTree::new(2);
+        t.insert(&[4, 5, 6, 7], &[10, 11], |j| BlockKv {
+            k: vec![j as f32; 2],
+            v: vec![-(j as f32); 2],
+        });
+        let ids = t.attach(&[4, 5, 6, 7], usize::MAX);
+        assert_eq!(ids.len(), 2);
+        assert_eq!(t.node_kv(ids[1]).k, vec![1.0; 2]);
+        assert_eq!(t.node_kv(ids[1]).v, vec![-1.0; 2]);
+        t.detach(&ids);
+    }
+
+    #[test]
+    fn eviction_is_lru_over_unpinned_leaves() {
+        let mut t = RadixTree::new(2);
+        t.insert(&[1, 1], &[0], |_| BlockKv::default()); // oldest
+        t.insert(&[2, 2], &[1], |_| BlockKv::default());
+        t.insert(&[3, 3], &[2], |_| BlockKv::default()); // newest
+        // Touch [1, 1] so [2, 2] becomes the LRU leaf.
+        t.attach(&[1, 1], usize::MAX);
+        // [1,1] is pinned (attached); LRU among {2,2},{3,3} is {2,2}.
+        assert_eq!(t.evict_lru(), Some(1));
+        assert_eq!(t.evict_lru(), Some(2));
+        // Only the pinned node remains: nothing evictable.
+        assert_eq!(t.evict_lru(), None);
+        assert_eq!(t.cached_blocks(), 1);
+    }
+
+    #[test]
+    fn interior_nodes_evict_only_after_their_children() {
+        let mut t = RadixTree::new(2);
+        t.insert(&[1, 1, 2, 2, 3, 3], &[0, 1, 2], |_| BlockKv::default());
+        assert_eq!(t.evictable(|_| true), 3);
+        // A block still held elsewhere frees nothing when its node goes.
+        assert_eq!(t.evictable(|b| b != 1), 2);
+        // Leaf-first: deepest block (2) goes first, then 1, then 0.
+        assert_eq!(t.evict_lru(), Some(2));
+        assert_eq!(t.evict_lru(), Some(1));
+        assert_eq!(t.evict_lru(), Some(0));
+        assert_eq!(t.evict_lru(), None);
+    }
+
+    #[test]
+    fn attached_descendants_pin_the_whole_chain() {
+        let mut t = RadixTree::new(2);
+        t.insert(&[1, 1, 2, 2], &[0, 1], |_| BlockKv::default());
+        t.insert(&[1, 1, 9, 9], &[0, 2], |_| BlockKv::default());
+        let ids = t.attach(&[1, 1, 2, 2], usize::MAX);
+        // The [9, 9] branch is evictable; the attached chain is not.
+        assert_eq!(t.evictable(|_| true), 1);
+        assert_eq!(t.evict_lru(), Some(2));
+        assert_eq!(t.evict_lru(), None);
+        t.detach(&ids);
+        assert_eq!(t.evictable(|_| true), 2);
+        assert_eq!(t.evict_lru(), Some(1));
+        assert_eq!(t.evict_lru(), Some(0));
+    }
+
+    #[test]
+    fn reinsert_after_eviction_reuses_slab_slots() {
+        let mut t = RadixTree::new(2);
+        t.insert(&[1, 1], &[0], |_| BlockKv::default());
+        assert_eq!(t.evict_lru(), Some(0));
+        let added = t.insert(&[2, 2], &[5], |_| BlockKv::default());
+        assert_eq!(added, vec![5]);
+        assert_eq!(t.cached_blocks(), 1);
+        assert_eq!(t.probe_tokens(&[2, 2], usize::MAX), 2);
+        assert_eq!(t.probe_tokens(&[1, 1], usize::MAX), 0);
+    }
+
+    #[test]
+    fn prop_insert_probe_agree_with_a_naive_map() {
+        // Model: a set of inserted full-block prefixes; probe must return
+        // the longest chain of inserted prefixes of the query.
+        use std::collections::HashSet;
+        crate::testutil::cases(48, 0x9AD1, |g| {
+            let bs = g.usize_in(1, 4);
+            let mut t = RadixTree::new(bs);
+            let mut model: HashSet<Vec<i32>> = HashSet::new();
+            let mut next_block: BlockId = 0;
+            for _ in 0..g.usize_in(1, 24) {
+                let len = g.usize_in(1, 12);
+                let p: Vec<i32> =
+                    (0..len).map(|_| g.u32_in(0, 3) as i32).collect();
+                let nblocks = len.div_ceil(bs);
+                let blocks: Vec<BlockId> =
+                    (0..nblocks).map(|i| next_block + i as u32).collect();
+                next_block += nblocks as u32;
+                t.insert(&p, &blocks, |_| BlockKv::default());
+                for j in 1..=len / bs {
+                    model.insert(p[..j * bs].to_vec());
+                }
+                // Probe a random other prompt against the model.
+                let qlen = g.usize_in(1, 12);
+                let q: Vec<i32> =
+                    (0..qlen).map(|_| g.u32_in(0, 3) as i32).collect();
+                let expect = (1..=qlen / bs)
+                    .take_while(|&j| model.contains(&q[..j * bs]))
+                    .count()
+                    * bs;
+                assert_eq!(t.probe_tokens(&q, usize::MAX), expect, "query {q:?}");
+            }
+            assert_eq!(t.cached_blocks(), model.len());
+        });
+    }
+}

@@ -21,9 +21,11 @@ pub const ALL: [&str; 13] = [
 ];
 
 /// Statistical experiments (run real sampling; `e2e-quality` needs
-/// artifacts and a few minutes).
-pub const STATS: [&str; 4] =
-    ["chisq", "hetero-chisq", "specdec-chisq", "e2e-quality"];
+/// artifacts and a few minutes, the rest — including the prefix-cache
+/// on/off identity check — are fast and deterministic, so CI runs them
+/// as a smoke gate after `cargo test`).
+pub const STATS: [&str; 5] =
+    ["chisq", "hetero-chisq", "specdec-chisq", "prefix-identity", "e2e-quality"];
 
 /// Regenerate one experiment into `out_dir`; returns the markdown.
 pub fn run(id: &str, out_dir: &Path) -> Result<String> {
@@ -45,6 +47,7 @@ pub fn run(id: &str, out_dir: &Path) -> Result<String> {
         "chisq" => quality::chisq()?,
         "hetero-chisq" => quality::hetero_chisq()?,
         "specdec-chisq" => quality::specdec_chisq()?,
+        "prefix-identity" => quality::prefix_identity()?,
         "e2e-quality" => quality::e2e_quality(None)?,
         other => anyhow::bail!("unknown experiment id '{other}'"),
     };

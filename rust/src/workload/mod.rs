@@ -41,6 +41,30 @@ impl LengthDist {
     }
 }
 
+/// Shared-prefix / multi-turn traffic shape (the workload automatic
+/// prefix caching exists for, DESIGN.md §10): `num_prefixes` distinct
+/// system prompts served to `users` concurrent users, each user pinned to
+/// one system prompt and holding a growing conversation history.
+///
+/// Request `i` belongs to user `i % users` at turn `i / users`; its prompt
+/// is `system prompt ++ turns 0..=turn of that user's history`, so
+/// consecutive turns of one user share the *entire* previous prompt as a
+/// prefix, and users of the same system prompt share at least
+/// `prefix_len` tokens — both reusable block-for-block by the prefix
+/// cache.
+#[derive(Clone, Debug)]
+pub struct SharedPrefix {
+    /// Distinct system prompts (deterministic token content per index).
+    pub num_prefixes: usize,
+    /// Tokens per system prompt.
+    pub prefix_len: usize,
+    /// Concurrent users; user `u` is pinned to system prompt
+    /// `u % num_prefixes`.
+    pub users: usize,
+    /// Tokens each conversation turn appends to the user's history.
+    pub turn_len: LengthDist,
+}
+
 /// Open-loop Poisson workload generator (deterministic via Philox).
 #[derive(Clone, Debug)]
 pub struct WorkloadGen {
@@ -55,6 +79,11 @@ pub struct WorkloadGen {
     /// set instead of using `temperature` — models a mixed client
     /// population (the workload the per-row tau ABI exists for).
     pub temperature_choices: Vec<f32>,
+    /// `Some`: prompts follow the shared-prefix / multi-turn shape
+    /// instead of drawing `prompt_len` of i.i.d. tokens (arrivals, output
+    /// budgets, and temperatures keep their usual streams, so flipping
+    /// this on changes prompt *content* only).
+    pub prefix_mode: Option<SharedPrefix>,
 }
 
 impl WorkloadGen {
@@ -67,11 +96,37 @@ impl WorkloadGen {
             vocab,
             temperature: 1.0,
             temperature_choices: Vec::new(),
+            prefix_mode: None,
         }
     }
 
     fn u(&self, stream: u32, i: u32, b: u32) -> f32 {
         philox::uniform_at(self.key, i, b, stream, 0)
+    }
+
+    fn token(&self, stream: u32, i: u32, j: u32) -> i32 {
+        (self.u(stream, i, j) * self.vocab as f32) as i32 % self.vocab as i32
+    }
+
+    /// The shared-prefix prompt of request `i` (see [`SharedPrefix`]).
+    /// Streams 20/21/22 keep these draws disjoint from the default mode's.
+    fn shared_prefix_prompt(&self, sp: &SharedPrefix, i: u32) -> Vec<i32> {
+        let user = i as usize % sp.users.max(1);
+        let turn = i as usize / sp.users.max(1);
+        let sys = (user % sp.num_prefixes.max(1)) as u32;
+        let mut prompt: Vec<i32> = (0..sp.prefix_len as u32)
+            .map(|j| self.token(20, sys, j))
+            .collect();
+        for t in 0..=turn {
+            // Per-(user, turn) history chunk; the counter packs user and
+            // turn so every chunk draws an independent stream.
+            let idx = (user as u32) * 1024 + t as u32;
+            let chunk = sp.turn_len.draw(self.u(22, idx, 0)).max(1);
+            for j in 0..chunk as u32 {
+                prompt.push(self.token(21, idx, j));
+            }
+        }
+        prompt
     }
 
     /// Generate `n` requests with exponential inter-arrival gaps
@@ -83,14 +138,14 @@ impl WorkloadGen {
             // Exponential gap: -ln(u)/rate.
             let gap = -(self.u(10, i, 0) as f64).ln() / self.rate;
             t += gap;
-            let plen = self.prompt_len.draw(self.u(11, i, 0)).max(1);
             let olen = self.output_len.draw(self.u(12, i, 0)).max(1);
-            let prompt: Vec<i32> = (0..plen as u32)
-                .map(|j| {
-                    (self.u(13, i, j) * self.vocab as f32) as i32
-                        % self.vocab as i32
-                })
-                .collect();
+            let prompt: Vec<i32> = match &self.prefix_mode {
+                Some(sp) => self.shared_prefix_prompt(sp, i),
+                None => {
+                    let plen = self.prompt_len.draw(self.u(11, i, 0)).max(1);
+                    (0..plen as u32).map(|j| self.token(13, i, j)).collect()
+                }
+            };
             let temperature = if self.temperature_choices.is_empty() {
                 self.temperature
             } else {
@@ -127,10 +182,14 @@ impl Trace {
         }
     }
 
+    /// Serialize as CSV.  Arrival times use Rust's shortest-round-trip
+    /// f64 `Display` (NOT a fixed precision), so `from_csv(to_csv(t))`
+    /// reproduces every entry **exactly** — replayed traces are
+    /// bit-identical to recorded ones.
     pub fn to_csv(&self) -> String {
         let mut s = String::from("arrival_s,prompt_len,output_len\n");
         for (a, p, o) in &self.entries {
-            s.push_str(&format!("{a:.6},{p},{o}\n"));
+            s.push_str(&format!("{a},{p},{o}\n"));
         }
         s
     }
@@ -226,11 +285,92 @@ mod tests {
         let g = WorkloadGen::new(5, 2.0, 64);
         let t = Trace::from_requests(&g.generate(20));
         let back = Trace::from_csv(&t.to_csv()).unwrap();
-        assert_eq!(t.entries.len(), back.entries.len());
-        for (a, b) in t.entries.iter().zip(&back.entries) {
-            assert!((a.0 - b.0).abs() < 1e-5);
-            assert_eq!(a.1, b.1);
-            assert_eq!(a.2, b.2);
+        assert_eq!(t.entries, back.entries); // exact, including arrivals
+    }
+
+    fn shared_mode() -> SharedPrefix {
+        SharedPrefix {
+            num_prefixes: 3,
+            prefix_len: 32,
+            users: 4,
+            turn_len: LengthDist::Uniform(4, 12),
         }
+    }
+
+    #[test]
+    fn shared_prefix_mode_shares_system_prompts_and_histories() {
+        let mut g = WorkloadGen::new(9, 5.0, 512);
+        g.prefix_mode = Some(shared_mode());
+        let reqs = g.generate(24); // 4 users x 6 turns
+        // Tokens stay in vocab; arrivals strictly increase.
+        for r in &reqs {
+            assert!(r.prompt.iter().all(|&t| (0..512).contains(&t)));
+        }
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival_s > w[0].arrival_s);
+        }
+        // Users with the same system prompt share the 32-token prefix:
+        // user 0 and user 3 both map to system prompt 0.
+        assert_eq!(reqs[0].prompt[..32], reqs[3].prompt[..32]);
+        // Distinct system prompts differ.
+        assert_ne!(reqs[0].prompt[..32], reqs[1].prompt[..32]);
+        // Multi-turn: a user's next turn extends their previous prompt —
+        // the ENTIRE previous prompt is a prefix of the next one.
+        for u in 0..4usize {
+            for turn in 0..5usize {
+                let prev = &reqs[u + 4 * turn].prompt;
+                let next = &reqs[u + 4 * (turn + 1)].prompt;
+                assert!(next.len() > prev.len());
+                assert_eq!(&next[..prev.len()], &prev[..], "user {u} turn {turn}");
+            }
+        }
+        // Deterministic given the seed.
+        let mut g2 = WorkloadGen::new(9, 5.0, 512);
+        g2.prefix_mode = Some(shared_mode());
+        let reqs2 = g2.generate(24);
+        for (a, b) in reqs.iter().zip(&reqs2) {
+            assert_eq!(a.prompt, b.prompt);
+            assert_eq!(a.arrival_s, b.arrival_s);
+        }
+    }
+
+    #[test]
+    fn shared_prefix_mode_leaves_arrivals_and_budgets_unchanged() {
+        // Flipping the mode on changes prompt CONTENT only: arrivals and
+        // output budgets come from the same streams either way.
+        let base = WorkloadGen::new(13, 3.0, 256).generate(16);
+        let mut g = WorkloadGen::new(13, 3.0, 256);
+        g.prefix_mode = Some(shared_mode());
+        let shared = g.generate(16);
+        for (a, b) in base.iter().zip(&shared) {
+            assert_eq!(a.arrival_s, b.arrival_s);
+            assert_eq!(a.max_new_tokens, b.max_new_tokens);
+            assert_eq!(a.temperature, b.temperature);
+        }
+    }
+
+    #[test]
+    fn prop_trace_csv_roundtrip_is_exact() {
+        // Exact f64/usize round-trip over randomized traces — including
+        // arrivals with long decimal expansions and the shared-prefix
+        // workload shape.
+        crate::testutil::cases(32, 0x7ACE, |g| {
+            let mut entries = Vec::new();
+            let mut t = 0.0f64;
+            for _ in 0..g.usize_in(0, 40) {
+                // Sums of f32-derived gaps give f64s with messy digits.
+                t += g.f32_in(1e-6, 10.0) as f64 / 3.0;
+                entries.push((t, g.usize_in(1, 4096), g.usize_in(1, 4096)));
+            }
+            let trace = Trace { entries };
+            let back = Trace::from_csv(&trace.to_csv()).unwrap();
+            assert_eq!(trace.entries, back.entries);
+        });
+        // And over a generated shared-prefix trace.
+        let mut g = WorkloadGen::new(3, 7.0, 128);
+        g.prefix_mode = Some(shared_mode());
+        let trace = Trace::from_requests(&g.generate(40));
+        let back = Trace::from_csv(&trace.to_csv()).unwrap();
+        assert_eq!(trace.entries, back.entries);
     }
 }
