@@ -4,11 +4,11 @@ use flashsampling::coordinator::{Engine, EngineConfig, Request, SamplingParams};
 fn main() -> anyhow::Result<()> {
     let mut engine = Engine::new("artifacts", EngineConfig::default())?;
     for i in 0..8u64 {
-        engine.submit(Request {
-            id: i,
-            prompt: vec![1 + i as i32; 8],
-            params: SamplingParams { max_new_tokens: 200, ..Default::default() },
-        })?;
+        engine.submit(Request::new(
+            i,
+            vec![1 + i as i32; 8],
+            SamplingParams { max_new_tokens: 200, ..Default::default() },
+        ))?;
     }
     for _ in 0..2 { engine.step()?; } // prefill
     let mut times = Vec::new();

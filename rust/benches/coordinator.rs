@@ -11,11 +11,11 @@ use flashsampling::workload::WorkloadGen;
 fn seqs(n: usize, state: SeqState) -> Vec<Sequence> {
     (0..n)
         .map(|i| {
-            let mut s = Sequence::new(Request {
-                id: i as u64,
-                prompt: vec![1; 16],
-                params: SamplingParams::default(),
-            });
+            let mut s = Sequence::new(Request::new(
+                i as u64,
+                vec![1; 16],
+                SamplingParams::default(),
+            ));
             s.state = state;
             s
         })
@@ -30,15 +30,16 @@ fn main() {
         prefill_b: 4,
         max_concurrency: 8,
         max_tokens_per_step: 1,
+        aging_steps: 32,
     };
     let waiting = seqs(32, SeqState::Waiting);
     let running = seqs(8, SeqState::Running);
     bench("scheduler/plan/32waiting_8running", || {
-        black_box(plan(&cfg, &waiting, &running, |_, _| true, |_| 0));
+        black_box(plan(&cfg, &waiting, &running, |_, _| true, |_| 0, 100));
     });
     let no_waiting: Vec<Sequence> = Vec::new();
     bench("scheduler/plan/decode_only", || {
-        black_box(plan(&cfg, &no_waiting, &running, |_, _| true, |_| 0));
+        black_box(plan(&cfg, &no_waiting, &running, |_, _| true, |_| 0, 100));
     });
 
     let kv_cfg = KvCacheConfig {

@@ -52,14 +52,14 @@ fn main() {
                 .unwrap();
         for i in 0..8u64 {
             engine
-                .submit(Request {
-                    id: i,
-                    prompt: vec![1 + i as i32; 8],
-                    params: SamplingParams {
+                .submit(Request::new(
+                    i,
+                    vec![1 + i as i32; 8],
+                    SamplingParams {
                         max_new_tokens: 200, // keep decoding through the bench window
                         ..Default::default()
                     },
-                })
+                ))
                 .unwrap();
         }
         // Prefill everything first.

@@ -24,7 +24,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-use crate::coordinator::EngineConfig;
+use crate::coordinator::{EngineConfig, Priority};
 use crate::sampling::SamplerSpec;
 
 /// Full launcher configuration.
@@ -59,6 +59,14 @@ pub struct Config {
     /// Open-loop arrival rate (req/s) for `serve`.
     pub request_rate: f64,
     pub num_requests: usize,
+    /// Anti-starvation aging for priority scheduling (engine steps per
+    /// promoted priority class; 0 disables aging — DESIGN.md §11).
+    pub priority_aging_steps: u64,
+    /// Non-empty: `serve` draws each request's priority uniformly from
+    /// this set (comma-separated `low|normal|high` in the config file) —
+    /// mixed-SLO traffic for the priority scheduler.  Empty: all
+    /// `normal` (identity-neutral).
+    pub priority_choices: Vec<Priority>,
     /// Output directory for `repro`.
     pub out_dir: PathBuf,
 }
@@ -79,6 +87,8 @@ impl Default for Config {
             max_new_tokens: 32,
             request_rate: 8.0,
             num_requests: 32,
+            priority_aging_steps: 32,
+            priority_choices: Vec::new(),
             out_dir: "results".into(),
         }
     }
@@ -132,6 +142,14 @@ impl Config {
                 "max_new_tokens" => self.max_new_tokens = v.parse()?,
                 "request_rate" => self.request_rate = v.parse()?,
                 "num_requests" => self.num_requests = v.parse()?,
+                "priority_aging_steps" => self.priority_aging_steps = v.parse()?,
+                "priority_choices" => {
+                    self.priority_choices = v
+                        .split(',')
+                        .filter(|s| !s.trim().is_empty())
+                        .map(|s| s.parse::<Priority>())
+                        .collect::<Result<Vec<Priority>>>()?;
+                }
                 "out_dir" => self.out_dir = v.into(),
                 other => bail!("unknown config key '{other}'"),
             }
@@ -162,6 +180,7 @@ impl Config {
             } else {
                 self.sampler.clone()
             },
+            priority_aging_steps: self.priority_aging_steps,
         }
     }
 }
@@ -306,6 +325,31 @@ mod tests {
             .unwrap();
         c.apply_pairs(parse_pairs("temperature_choices =").unwrap()).unwrap();
         assert!(c.temperature_choices.is_empty());
+    }
+
+    #[test]
+    fn priority_keys_parse_and_flow_to_the_engine() {
+        let mut c = Config::default();
+        assert_eq!(c.priority_aging_steps, 32);
+        assert_eq!(c.engine_config().priority_aging_steps, 32);
+        assert!(c.priority_choices.is_empty());
+        c.apply_pairs(parse_pairs("priority_aging_steps = 0").unwrap()).unwrap();
+        assert_eq!(c.engine_config().priority_aging_steps, 0);
+        c.apply_pairs(parse_pairs("priority_choices = low, normal,high").unwrap())
+            .unwrap();
+        assert_eq!(
+            c.priority_choices,
+            vec![Priority::Low, Priority::Normal, Priority::High]
+        );
+        // Empty value clears the set; bad names are rejected.
+        c.apply_pairs(parse_pairs("priority_choices =").unwrap()).unwrap();
+        assert!(c.priority_choices.is_empty());
+        assert!(c
+            .apply_pairs(parse_pairs("priority_choices = urgent").unwrap())
+            .is_err());
+        assert!(c
+            .apply_pairs(parse_pairs("priority_aging_steps = x").unwrap())
+            .is_err());
     }
 
     #[test]

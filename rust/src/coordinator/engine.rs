@@ -4,22 +4,35 @@
 //! One `Engine` owns a PJRT runtime, the cached weight literals, the paged
 //! KV accounting, and the waiting/running sequence sets.  `step()` executes
 //! exactly one scheduler plan (a prefill batch or a decode batch) — the
-//! granularity at which vLLM's engine loop operates — and `serve()` replays
-//! an open-loop workload against the wall clock, producing the §4.5-style
-//! TPOT/TTFT metrics.
+//! granularity at which vLLM's engine loop operates.
+//!
+//! The request lifecycle is a vLLM-style submission/streaming split
+//! (DESIGN.md §11): `submit()` validates and returns a [`RequestHandle`]
+//! that yields per-token [`RequestOutput`] events over an internal event
+//! queue as `step()` produces them; `abort()` cancels mid-flight with
+//! zero-leak KV and prefix-cache release; and the public boundary
+//! (`submit` / `step` / `abort`) reports typed [`EngineError`]s instead of
+//! stringly failures.  `serve()` survives as a thin batch-compatibility
+//! shim over the same machinery — handles are created, events flow, and
+//! the returned completions are the streams' terminal artifacts — with
+//! byte-identical token streams (same Philox coordinates) to the
+//! pre-streaming engine.
 //!
 //! The decode hot path never touches Python and never materializes logits:
 //! `decode_sample_b{B}` runs (transformer step → LM-head matmul → fused
 //! Gumbel epilogue → tile reduction) inside a single XLA executable.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::path::Path;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 
+use super::error::EngineError;
 use super::request::{Completion, FinishReason, Request, SeqKv, SeqState, Sequence};
 use super::scheduler::{pick_bucket, plan, Plan, SchedulerConfig};
+use super::stream::{RequestHandle, RequestOutput, SharedStream, StreamState};
 use crate::kvcache::{KvCacheConfig, KvCacheManager, PrefixAttach};
 use crate::metrics::ServingMetrics;
 use crate::prefixcache::BlockKv;
@@ -57,6 +70,12 @@ pub struct EngineConfig {
     /// leader, benches, and repro tables) is rejected at engine
     /// construction rather than silently substituted.
     pub sampler: SamplerSpec,
+    /// Anti-starvation aging for priority scheduling (DESIGN.md §11):
+    /// a waiting request gains one priority class of effective rank per
+    /// this many logical engine steps (0 disables aging).  Neutral — and
+    /// therefore stream-identical — when every request carries the
+    /// default `Normal` priority.
+    pub priority_aging_steps: u64,
 }
 
 impl Default for EngineConfig {
@@ -68,6 +87,7 @@ impl Default for EngineConfig {
             seed: 0xF1A5_4_5A3,
             prefix_caching: true,
             sampler: SamplerSpec::default(),
+            priority_aging_steps: 32,
         }
     }
 }
@@ -131,9 +151,50 @@ pub struct Engine {
     /// Monotonic decode-step counter — the Philox `step` input, so every
     /// scheduler iteration draws fresh noise.
     step_counter: u32,
+    /// Logical step clock: one tick per `step()` call.  This is the
+    /// streaming API's timestamp domain (TTFT/TPOT in steps — exactly
+    /// replayable, unlike the wall clock) and the aging rule's "now".
+    /// Distinct from `step_counter`, which advances per artifact
+    /// invocation (several per engine step under spec decode) and feeds
+    /// Philox.
+    clock: u64,
+    /// Event queues of live streams, by request id.  Entries are removed
+    /// at completion (the handle keeps its queue alive), so membership
+    /// here doubles as the duplicate-id check for `submit`.
+    streams: HashMap<u64, SharedStream>,
     key: Key,
     decode_cache: Option<DecodeCache>,
     pub metrics: ServingMetrics,
+}
+
+/// Push one per-token streaming event (free function: callers hold
+/// disjoint field borrows of the engine).
+fn emit_token(
+    streams: &HashMap<u64, SharedStream>,
+    s: &mut Sequence,
+    token: i32,
+    step: u64,
+) {
+    let index = s.generated.len() - 1; // called right after the push
+    let ttft_steps = (index == 0).then(|| step.saturating_sub(s.submitted_step));
+    let inter_token_steps = s.last_token_step.map(|p| step.saturating_sub(p));
+    s.last_token_step = Some(step);
+    // Skip event construction when every handle is gone (strong count 1 =
+    // the engine's own clone): batch shims drop their handles, and the
+    // decode hot path should not pay per-token allocation + mutex traffic
+    // for queues nobody will ever drain.
+    if let Some(st) = streams.get(&s.id).filter(|st| Arc::strong_count(st) > 1) {
+        st.lock().expect("stream mutex").queue.push_back(RequestOutput {
+            request_id: s.id,
+            token: Some(token),
+            index,
+            text_len: index + 1,
+            step,
+            ttft_steps,
+            inter_token_steps,
+            finish: None,
+        });
+    }
 }
 
 impl Engine {
@@ -165,6 +226,7 @@ impl Engine {
                 SamplerSpec::SpecDecode { k, .. } => k + 1,
                 _ => 1,
             },
+            aging_steps: cfg.priority_aging_steps,
         };
         let kvmgr = KvCacheManager::new(KvCacheConfig {
             block_size: cfg.kv_block_size,
@@ -188,6 +250,8 @@ impl Engine {
             waiting: VecDeque::new(),
             running: Vec::new(),
             step_counter: 0,
+            clock: 0,
+            streams: HashMap::new(),
             key,
             decode_cache: None,
             metrics: ServingMetrics::default(),
@@ -221,56 +285,169 @@ impl Engine {
     }
 
     /// Submit a request (validated against model limits and the decode
-    /// artifacts' capabilities).
-    pub fn submit(&mut self, req: Request) -> Result<()> {
+    /// artifacts' capabilities) and return the [`RequestHandle`] that
+    /// streams its per-token [`RequestOutput`] events.
+    ///
+    /// Typed failures ([`EngineError`]): duplicate live request ids,
+    /// invalid/artifact-unsupported sampling params, and prompts this
+    /// engine can never admit.
+    pub fn submit(&mut self, req: Request) -> Result<RequestHandle, EngineError> {
+        let id = req.id;
+        // Id collisions were previously silent until the scheduler-side
+        // `register` tripped over them mid-step; they are a typed submit
+        // error now.  Every waiting/running sequence holds a live stream
+        // entry (inserted below, removed only in `complete_seq`), so the
+        // map membership IS the liveness check.  Finished ids may be
+        // reused.
+        if self.streams.contains_key(&id) {
+            return Err(EngineError::DuplicateRequestId { id });
+        }
         let m = self.model();
-        req.params.validate(m.vocab)?;
+        if let Err(e) = req.params.validate(m.vocab) {
+            return Err(EngineError::UnsupportedParams { id, detail: e.to_string() });
+        }
         // Reject params the fused ABI cannot honor rather than silently
         // ignoring them; host-side paths (`sample_batch_rows`) carry the
         // full set, the artifacts carry per-row tau + stop handling.
         let missing = req.params.artifact_unsupported();
         if !missing.is_empty() {
-            bail!(
-                "request {}: the decode artifacts (ABI v{}) carry per-row \
-                 temperature only; unsupported params: {}",
-                req.id,
-                crate::runtime::TAU_ABI_VERSION,
-                missing.join(", ")
-            );
+            return Err(EngineError::UnsupportedParams {
+                id,
+                detail: format!(
+                    "the decode artifacts (ABI v{}) carry per-row temperature \
+                     only; unsupported params: {}",
+                    crate::runtime::TAU_ABI_VERSION,
+                    missing.join(", ")
+                ),
+            });
         }
+        let reject = |reason: String| EngineError::AdmissionRejected { id, reason };
         if req.prompt.is_empty() {
-            bail!("empty prompt");
+            return Err(reject("empty prompt".into()));
         }
         let max_t = *m.prefill_t_buckets.last().unwrap();
         if req.prompt.len() > max_t {
-            bail!(
+            return Err(reject(format!(
                 "prompt of {} tokens exceeds the largest prefill bucket {max_t}",
                 req.prompt.len()
-            );
+            )));
         }
         if req.prompt.len() + req.params.max_new_tokens > m.max_seq {
-            bail!(
+            return Err(reject(format!(
                 "prompt {} + budget {} exceeds max_seq {}",
                 req.prompt.len(),
                 req.params.max_new_tokens,
                 m.max_seq
-            );
+            )));
         }
         if req.prompt.iter().any(|&t| t < 0 || t as usize >= m.vocab) {
-            bail!("prompt token out of vocab range");
+            return Err(reject("prompt token out of vocab range".into()));
         }
-        self.waiting.push_back(Sequence::new(req));
-        Ok(())
+        let mut seq = Sequence::new(req);
+        seq.submitted_step = self.clock;
+        let state = Arc::new(Mutex::new(StreamState::default()));
+        self.streams.insert(id, state.clone());
+        self.waiting.push_back(seq);
+        Ok(RequestHandle::new(id, state))
+    }
+
+    /// Cancel a request mid-flight: drop it from the waiting queue or the
+    /// running set, release its KV blocks and prefix-cache attachments
+    /// (zero leaks — the abort test suite asserts pool balance), push the
+    /// terminal `Aborted` event on its stream, and return the partial
+    /// [`Completion`].  [`EngineError::UnknownRequest`] if the id is not
+    /// live.
+    pub fn abort(&mut self, request_id: u64) -> Result<Completion, EngineError> {
+        if let Some(idx) = self.waiting.iter().position(|s| s.id == request_id) {
+            let s = self.waiting.remove(idx).expect("position is in range");
+            return Ok(self.complete_seq(s, FinishReason::Aborted));
+        }
+        if let Some(idx) = self.running.iter().position(|s| s.id == request_id) {
+            // The steady-state decode cache may hold this sequence's KV as
+            // device literals; fold the batch back into per-sequence
+            // storage first so the survivors lose nothing.
+            if self
+                .decode_cache
+                .as_ref()
+                .is_some_and(|c| c.seq_ids.contains(&request_id))
+            {
+                self.sync_cache_to_seqs()?;
+            }
+            let s = self.running.remove(idx);
+            self.kvmgr.release(s.id)?;
+            return Ok(self.complete_seq(s, FinishReason::Aborted));
+        }
+        Err(EngineError::UnknownRequest { id: request_id })
+    }
+
+    /// Finish a sequence: build the [`Completion`], record streaming
+    /// metrics, and deliver the terminal event to the request's stream
+    /// (removing it from the live-stream map — the handle keeps the queue
+    /// alive for draining).
+    fn complete_seq(&mut self, s: Sequence, reason: FinishReason) -> Completion {
+        let c = s.into_completion(reason);
+        self.metrics.requests_completed += 1;
+        if let Some(t) = c.timing.ttft {
+            self.metrics.ttft.push(t);
+        }
+        if let Some(t) = c.timing.tpot() {
+            self.metrics.tpot.push(t);
+        }
+        self.metrics
+            .inter_token
+            .extend(c.timing.token_latencies.iter().copied());
+        if reason == FinishReason::Aborted {
+            self.metrics.bump("aborted", 1);
+        }
+        if let Some(st) = self.streams.remove(&c.id) {
+            // As in `emit_token`: with every handle dropped (the batch
+            // shims), skip the terminal event and the Completion clone —
+            // removal from the map is what matters (id becomes reusable).
+            if Arc::strong_count(&st) > 1 {
+                let mut g = st.lock().expect("stream mutex");
+                g.queue.push_back(RequestOutput::terminal(
+                    c.id,
+                    c.tokens.len(),
+                    self.clock,
+                    reason,
+                ));
+                g.finished = Some(reason);
+                g.completion = Some(c.clone());
+            }
+        }
+        c
     }
 
     pub fn pending(&self) -> usize {
         self.waiting.len() + self.running.len()
     }
 
-    /// One scheduler iteration.  Returns completions finished this step.
-    pub fn step(&mut self) -> Result<Vec<Completion>> {
+    /// The logical step clock: `step()` calls so far.  Streaming events
+    /// timestamp against this domain.
+    pub fn clock(&self) -> u64 {
+        self.clock
+    }
+
+    /// Pool-balance diagnostic: KV blocks neither free nor prefix-cache-
+    /// resident.  With no requests in flight this must equal 0 — the
+    /// zero-leak invariant the abort suite asserts after every schedule.
+    pub fn kv_unaccounted_blocks(&self) -> usize {
+        self.kvmgr.unaccounted_blocks()
+    }
+
+    /// One scheduler iteration.  Returns completions finished this step
+    /// (each also delivered as a terminal stream event); per-token events
+    /// land on the corresponding [`RequestHandle`]s.
+    pub fn step(&mut self) -> Result<Vec<Completion>, EngineError> {
         let t0 = Instant::now();
-        let waiting: Vec<Sequence> = self.waiting.iter().cloned().collect();
+        // Tick the logical step clock first: events of this step carry
+        // the new value, TTFT-in-steps >= 1.
+        self.clock += 1;
+        // The planner reads the waiting queue as one slice (no clone —
+        // a backed-up queue would otherwise pay a deep per-step copy of
+        // every pending prompt).
+        self.waiting.make_contiguous();
+        let (waiting, _) = self.waiting.as_slices();
         // Cache-aware admission: only uncached prefill blocks are charged
         // against the budget (plus the decode-burst headroom), with a
         // per-batch tally ([`crate::kvcache::BatchAdmission`], shared with
@@ -279,10 +456,11 @@ impl Engine {
         let mut admission = self.kvmgr.batch_admission();
         let p = plan(
             &self.sched,
-            &waiting,
+            waiting,
             &self.running,
             |s, burst| admission.admit(&self.kvmgr, &s.prompt, burst),
             |s| self.kvmgr.cached_prefix_tokens(&s.prompt),
+            self.clock,
         );
         let out = match p {
             Plan::Prefill { seq_ids, t_bucket } => self.do_prefill(&seq_ids, t_bucket),
@@ -299,20 +477,36 @@ impl Engine {
         out
     }
 
-    /// Drain everything currently submitted.
-    pub fn run_to_completion(&mut self) -> Result<Vec<Completion>> {
+    /// Backstop for open-loop drivers: when a step produced nothing and
+    /// nothing is running, the head of the waiting queue can never be
+    /// admitted on this engine — reject it (terminal `Rejected` stream
+    /// event + completion) so driver loops always make progress instead
+    /// of spinning on `Plan::Idle` forever.  Returns `None` (and changes
+    /// nothing) while work is still running — a busy pool may yet free
+    /// the blocks the head needs.
+    pub fn reject_unschedulable(&mut self) -> Option<Completion> {
+        if !self.running.is_empty() {
+            return None;
+        }
+        let seq = self.waiting.pop_front()?;
+        Some(self.complete_seq(seq, FinishReason::Rejected))
+    }
+
+    /// Drain everything currently submitted (batch-compatibility shim
+    /// over the handle API: completions are the streams' terminal
+    /// artifacts).
+    pub fn run_to_completion(&mut self) -> Result<Vec<Completion>, EngineError> {
         let mut done = Vec::new();
         while self.pending() > 0 {
-            let before = self.pending();
-            done.extend(self.step()?);
-            if self.pending() == before && done.is_empty() && self.running.is_empty()
-            {
+            let stepped = self.step()?;
+            let no_progress = stepped.is_empty() && self.running.is_empty();
+            done.extend(stepped);
+            if no_progress {
                 // Waiting sequences that can never be admitted => reject.
-                if let Some(seq) = self.waiting.pop_front() {
-                    done.push(seq.into_completion(FinishReason::Rejected));
-                    continue;
+                match self.reject_unschedulable() {
+                    Some(c) => done.push(c),
+                    None => break,
                 }
-                break;
             }
         }
         Ok(done)
@@ -320,7 +514,16 @@ impl Engine {
 
     /// Open-loop serve: admit requests at their arrival offsets (wall
     /// clock), run until all complete.  Returns per-run metrics.
-    pub fn serve(&mut self, mut specs: Vec<RequestSpec>) -> Result<Vec<Completion>> {
+    ///
+    /// Batch-compatibility shim over the handle API — each spec is
+    /// submitted through [`Engine::submit`] (handles created, events
+    /// streamed) and the returned completions are the terminal artifacts
+    /// of those streams, byte-identical to the pre-streaming engine.  For
+    /// a continuously streaming driver see `main.rs serve`.
+    pub fn serve(
+        &mut self,
+        mut specs: Vec<RequestSpec>,
+    ) -> Result<Vec<Completion>, EngineError> {
         specs.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
         let start = Instant::now();
         let mut next = 0usize;
@@ -330,6 +533,8 @@ impl Engine {
             let now = start.elapsed().as_secs_f64();
             while next < specs.len() && specs[next].arrival_s <= now {
                 let s = &specs[next];
+                // The shim drops its handles: completions carry the
+                // result, and streams never block the engine.
                 self.submit(Request {
                     id: s.id,
                     prompt: s.prompt.clone(),
@@ -338,6 +543,7 @@ impl Engine {
                         max_new_tokens: s.max_new_tokens,
                         ..Default::default()
                     },
+                    priority: s.priority,
                 })?;
                 next += 1;
             }
@@ -353,24 +559,28 @@ impl Engine {
                 }
                 continue;
             }
-            done.extend(self.step()?);
+            let stepped = self.step()?;
+            let no_progress = stepped.is_empty() && self.running.is_empty();
+            done.extend(stepped);
+            if no_progress {
+                // Same backstop as run_to_completion: a never-admittable
+                // head becomes Rejected instead of spinning on Idle.
+                if let Some(c) = self.reject_unschedulable() {
+                    done.push(c);
+                }
+            }
         }
         self.metrics.wall = start.elapsed();
-        for c in &done {
-            if let Some(t) = c.timing.ttft {
-                self.metrics.ttft.push(t);
-            }
-            if let Some(t) = c.timing.tpot() {
-                self.metrics.tpot.push(t);
-            }
-        }
-        self.metrics.requests_completed += done.len() as u64;
         Ok(done)
     }
 
     // --- prefill ---------------------------------------------------------
 
-    fn do_prefill(&mut self, seq_ids: &[u64], _t_bucket: usize) -> Result<Vec<Completion>> {
+    fn do_prefill(
+        &mut self,
+        seq_ids: &[u64],
+        _t_bucket: usize,
+    ) -> Result<Vec<Completion>, EngineError> {
         let m = self.model().clone();
         let b = m.prefill_b;
         let bs = self.cfg.kv_block_size;
@@ -483,7 +693,7 @@ impl Engine {
             let kvk_lit = Tensor::F32(kvk, kv_shape.clone()).to_literal()?;
             let kvv_lit = Tensor::F32(kvv, kv_shape).to_literal()?;
             let name = format!("prefill_cached_b{b}_t{t_bucket}");
-            let exe = self.rt.load(&name)?;
+            let exe = self.rt.load(&name).map_err(|e| EngineError::artifact(&name, e))?;
             let off_lit = Tensor::I32(offsets, vec![b]).to_literal()?;
             let tok_lit = Tensor::I32(tokens, vec![b, t_bucket]).to_literal()?;
             let len_lit = Tensor::I32(lengths, vec![b]).to_literal()?;
@@ -493,7 +703,7 @@ impl Engine {
             exe.run_literals(&lits)?
         } else {
             let name = format!("prefill_b{b}_t{t_bucket}");
-            let exe = self.rt.load(&name)?;
+            let exe = self.rt.load(&name).map_err(|e| EngineError::artifact(&name, e))?;
             let tok_lit = Tensor::I32(tokens, vec![b, t_bucket]).to_literal()?;
             let len_lit = Tensor::I32(lengths, vec![b]).to_literal()?;
             let mut lits: Vec<&xla::Literal> = self.params_lit.iter().collect();
@@ -508,7 +718,10 @@ impl Engine {
         // First output token comes from the prefill hidden state through the
         // fused FlashSampling LM head.
         let sample_name = format!("sample_hidden_b{b}");
-        let sampler = self.rt.load(&sample_name)?;
+        let sampler = self
+            .rt
+            .load(&sample_name)
+            .map_err(|e| EngineError::artifact(&sample_name, e))?;
         let hid_lit = hidden.to_literal()?;
         let seed_lit = Tensor::seed(self.key).to_literal()?;
         let step_lit = Tensor::scalar_u32(self.bump_step()).to_literal()?;
@@ -530,6 +743,7 @@ impl Engine {
         // Slice each row's KV out of the [L, B, H, S, Dh] batch tensors.
         let row_len = m.n_heads * m.max_seq * dh;
         let now = Instant::now();
+        let clock = self.clock;
         let mut completions = Vec::new();
         for (row, mut s) in seqs.into_iter().enumerate() {
             let mut k = vec![0.0f32; self.kv_len()];
@@ -569,9 +783,10 @@ impl Engine {
             s.timing.ttft = Some(now - s.arrived);
             self.metrics.tokens_generated += 1;
             self.metrics.prefill_tokens += s.prompt.len() as u64;
+            emit_token(&self.streams, &mut s, first_tokens[row], clock);
             if let Some(reason) = s.finished() {
                 self.kvmgr.release(s.id)?;
-                completions.push(s.into_completion(reason));
+                completions.push(self.complete_seq(s, reason));
             } else if !self.kvmgr.append_token(s.id)? {
                 // KV pool exhausted even after cache eviction: preempt —
                 // the same exhaustion handling as the decode path.  (The
@@ -579,7 +794,7 @@ impl Engine {
                 // table fall one token behind the sequence's context.)
                 self.metrics.bump("preempted", 1);
                 self.kvmgr.release(s.id)?;
-                completions.push(s.into_completion(FinishReason::MaxTokens));
+                completions.push(self.complete_seq(s, FinishReason::MaxTokens));
             } else {
                 self.running.push(s);
             }
@@ -660,18 +875,22 @@ impl Engine {
     fn remove_finished(
         &mut self,
         mut finished: Vec<(usize, FinishReason)>,
-    ) -> Result<Vec<Completion>> {
+    ) -> Result<Vec<Completion>, EngineError> {
         finished.sort_by(|a, b| b.0.cmp(&a.0));
         let mut completions = Vec::new();
         for (ri, reason) in finished {
             let s = self.running.remove(ri);
             self.kvmgr.release(s.id)?;
-            completions.push(s.into_completion(reason));
+            completions.push(self.complete_seq(s, reason));
         }
         Ok(completions)
     }
 
-    fn do_decode(&mut self, seq_ids: &[u64], b_bucket: usize) -> Result<Vec<Completion>> {
+    fn do_decode(
+        &mut self,
+        seq_ids: &[u64],
+        b_bucket: usize,
+    ) -> Result<Vec<Completion>, EngineError> {
         // Steady-state fast path: same batch as last step => reuse the
         // previous output literals as this step's KV inputs directly.
         let cache_hit = self
@@ -718,7 +937,7 @@ impl Engine {
             "decode_sample"
         };
         let name = format!("{kind}_b{b_bucket}");
-        let exe = self.rt.load(&name)?;
+        let exe = self.rt.load(&name).map_err(|e| EngineError::artifact(&name, e))?;
         let t_lit = Instant::now();
         let pos_lit = Tensor::I32(pos, vec![b_bucket]).to_literal()?;
         let tok_lit = Tensor::I32(tok, vec![b_bucket]).to_literal()?;
@@ -738,7 +957,12 @@ impl Engine {
         let t_exec = Instant::now();
         let mut out = exe.run_literals_raw(&lits)?;
         self.metrics.bump("decode_exec_us", t_exec.elapsed().as_micros() as u64);
-        anyhow::ensure!(out.len() == 3, "decode artifact returned {} outputs", out.len());
+        if out.len() != 3 {
+            return Err(EngineError::artifact(
+                &name,
+                anyhow::anyhow!("decode artifact returned {} outputs", out.len()),
+            ));
+        }
         let sample_lit = out.pop().unwrap();
         let new_v = out.pop().unwrap();
         let new_k = out.pop().unwrap();
@@ -754,6 +978,7 @@ impl Engine {
 
         // Token bookkeeping + completions.
         let now = Instant::now();
+        let clock = self.clock;
         let mut finished: Vec<(usize, FinishReason)> = Vec::new();
         for (slot, &ri) in rows.iter().enumerate() {
             let s = &mut self.running[ri];
@@ -762,6 +987,7 @@ impl Engine {
                 s.timing.token_latencies.push(now - prev);
             }
             s.last_token_at = Some(now);
+            emit_token(&self.streams, s, samples[slot], clock);
             self.metrics.tokens_generated += 1;
             if let Some(reason) = s.finished() {
                 finished.push((ri, reason));
@@ -802,7 +1028,7 @@ impl Engine {
         b_bucket: usize,
         k: usize,
         ngram: usize,
-    ) -> Result<Vec<Completion>> {
+    ) -> Result<Vec<Completion>, EngineError> {
         let m = self.model().clone();
 
         // Spec steps rewrite per-sequence KV lengths after verification,
@@ -854,7 +1080,11 @@ impl Engine {
         //    adjacent as literals, exactly like the decode fast path.
         let (mut kvk_lit, mut kvv_lit) = self.gather_batch_kv(&rows, b_bucket)?;
 
-        let exe = self.rt.load(&format!("decode_sample_b{b_bucket}"))?;
+        let exe_name = format!("decode_sample_b{b_bucket}");
+        let exe = self
+            .rt
+            .load(&exe_name)
+            .map_err(|e| EngineError::artifact(&exe_name, e))?;
         let base_pos: Vec<usize> =
             rows.iter().map(|&ri| self.running[ri].next_pos()).collect();
         let base_tok: Vec<i32> =
@@ -889,11 +1119,12 @@ impl Engine {
             lits.extend([&kvk_lit, &kvv_lit, &pos_lit, &tok_lit, &seed_lit,
                          &step_lit, &tau_lit]);
             let mut out = exe.run_literals_raw(&lits)?;
-            anyhow::ensure!(
-                out.len() == 3,
-                "decode artifact returned {} outputs",
-                out.len()
-            );
+            if out.len() != 3 {
+                return Err(EngineError::artifact(
+                    &exe_name,
+                    anyhow::anyhow!("decode artifact returned {} outputs", out.len()),
+                ));
+            }
             let sample_lit = out.pop().unwrap();
             kvv_lit = out.pop().unwrap();
             kvk_lit = out.pop().unwrap();
@@ -917,6 +1148,7 @@ impl Engine {
 
         // 5. Coupled verification, token bookkeeping, KV rollback.
         let now = Instant::now();
+        let clock = self.clock;
         let mut finished: Vec<(usize, FinishReason)> = Vec::new();
         for (slot, &ri) in rows.iter().enumerate() {
             let draft = &drafts[slot];
@@ -931,6 +1163,7 @@ impl Engine {
             for &t in &samples_per_row[slot][..emit] {
                 s.generated.push(t);
                 emitted += 1;
+                emit_token(&self.streams, s, t, clock);
                 self.metrics.tokens_generated += 1;
                 if let Some(reason) = s.finished() {
                     fin = Some(reason);

@@ -1,0 +1,126 @@
+//! Typed engine errors — the public API boundary of the serving
+//! front-end (DESIGN.md §11).
+//!
+//! `Engine::submit`, `Engine::step`, and `Engine::abort` return
+//! [`EngineError`] instead of stringly `anyhow` errors, so clients (the
+//! serve CLI, the repro harness, a future RPC front-end) can branch on
+//! the failure class: retry later on admission trouble, fix the request
+//! on parameter trouble, surface operator alerts on artifact trouble.
+//! Anything that is not a request-level failure (runtime I/O, accounting
+//! invariants) is wrapped verbatim in [`EngineError::Internal`] — nothing
+//! is lost, it is just no longer the *only* shape an error can take.
+//!
+//! Interop: `EngineError` implements `std::error::Error`, so `?` in an
+//! `anyhow::Result` context converts it via the blanket `From`; the
+//! reverse `From<anyhow::Error>` lands internal failures in
+//! [`EngineError::Internal`], which is what lets the engine's private
+//! helpers keep their `anyhow` plumbing.
+
+use std::fmt;
+
+/// A typed failure at the engine's public request-lifecycle boundary.
+#[derive(Debug)]
+pub enum EngineError {
+    /// `submit` — the request id is already live in this engine
+    /// (waiting, running, or holding an open stream).  Ids of *finished*
+    /// requests may be reused.
+    DuplicateRequestId { id: u64 },
+    /// `submit` — the request can never be admitted by this engine:
+    /// empty prompt, prompt longer than the largest prefill bucket,
+    /// prompt + budget beyond `max_seq`, or out-of-vocab tokens.
+    AdmissionRejected { id: u64, reason: String },
+    /// `submit` — the sampling parameters are invalid, or carry fields
+    /// the fused artifact ABI cannot honor (`detail` names them).
+    UnsupportedParams { id: u64, detail: String },
+    /// `abort` — no such request is live (never submitted, or already
+    /// finished).
+    UnknownRequest { id: u64 },
+    /// `step` — the artifact set does not match what the planned batch
+    /// needs (missing executable for a bucket, wrong output arity, ...).
+    ArtifactMismatch { artifact: String, detail: String },
+    /// Anything else: runtime execution or accounting failures, wrapped
+    /// verbatim.
+    Internal(anyhow::Error),
+}
+
+impl EngineError {
+    /// Wrap an artifact load/shape failure with the artifact's name.
+    pub(crate) fn artifact(name: &str, err: anyhow::Error) -> Self {
+        Self::ArtifactMismatch { artifact: name.to_string(), detail: format!("{err:?}") }
+    }
+}
+
+impl fmt::Display for EngineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::DuplicateRequestId { id } => write!(
+                f,
+                "request id {id} is already live in this engine \
+                 (waiting, running, or streaming)"
+            ),
+            Self::AdmissionRejected { id, reason } => {
+                write!(f, "request {id} can never be admitted: {reason}")
+            }
+            Self::UnsupportedParams { id, detail } => {
+                write!(f, "request {id}: unsupported sampling params: {detail}")
+            }
+            Self::UnknownRequest { id } => write!(
+                f,
+                "unknown request id {id} (never submitted, or already finished)"
+            ),
+            Self::ArtifactMismatch { artifact, detail } => {
+                write!(f, "artifact '{artifact}' mismatch: {detail}")
+            }
+            // `{e:?}` keeps the vendored-anyhow "Caused by:" chain visible
+            // (plain `{e}` would print the outermost message only).
+            Self::Internal(e) => write!(f, "engine internal error: {e:?}"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+impl From<anyhow::Error> for EngineError {
+    fn from(e: anyhow::Error) -> Self {
+        Self::Internal(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_names_the_failure_class() {
+        let e = EngineError::DuplicateRequestId { id: 7 };
+        assert!(e.to_string().contains("already live"), "{e}");
+        let e = EngineError::UnsupportedParams { id: 1, detail: "top_k".into() };
+        assert!(e.to_string().contains("top_k"), "{e}");
+        let e = EngineError::AdmissionRejected { id: 2, reason: "empty prompt".into() };
+        assert!(e.to_string().contains("empty prompt"), "{e}");
+        let e = EngineError::UnknownRequest { id: 3 };
+        assert!(e.to_string().contains("unknown request id 3"), "{e}");
+        let e = EngineError::artifact("decode_sample_b8", anyhow::anyhow!("4 outputs"));
+        assert!(e.to_string().contains("decode_sample_b8"), "{e}");
+    }
+
+    #[test]
+    fn converts_both_ways_with_anyhow() {
+        // anyhow -> EngineError (the engine's internal `?` plumbing).
+        fn inner() -> Result<(), EngineError> {
+            let r: anyhow::Result<()> = Err(anyhow::anyhow!("kv accounting"));
+            r?;
+            Ok(())
+        }
+        match inner().unwrap_err() {
+            EngineError::Internal(e) => assert_eq!(e.to_string(), "kv accounting"),
+            other => panic!("expected Internal, got {other:?}"),
+        }
+        // EngineError -> anyhow (callers in anyhow contexts keep `?`).
+        fn outer() -> anyhow::Result<()> {
+            Err(EngineError::UnknownRequest { id: 9 })?;
+            Ok(())
+        }
+        assert!(outer().unwrap_err().to_string().contains("unknown request id 9"));
+    }
+}

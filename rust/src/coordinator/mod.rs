@@ -10,10 +10,24 @@
 //! the artifacts (`tau: [B]`, ABI v2), so sampling parameters never
 //! fragment batches.
 
+//! The request lifecycle is a vLLM-style submission/streaming split
+//! (DESIGN.md §11): [`Engine::submit`] returns a [`RequestHandle`] that
+//! yields per-token [`RequestOutput`] events, [`Engine::abort`] cancels
+//! mid-flight with zero-leak KV release, per-request [`Priority`] +
+//! anti-starvation aging order the scheduler, and the public boundary
+//! reports typed [`EngineError`]s.  The legacy batch entry points
+//! (`run_to_completion`, `serve`) are thin shims over the same machinery.
+
 pub mod engine;
+pub mod error;
 pub mod request;
 pub mod scheduler;
+pub mod stream;
 
 pub use engine::{Engine, EngineConfig};
-pub use request::{Completion, FinishReason, Request, SamplingParams, Sequence};
+pub use error::EngineError;
+pub use request::{
+    Completion, FinishReason, Priority, Request, SamplingParams, Sequence,
+};
 pub use scheduler::{Plan, SchedulerConfig};
+pub use stream::{RequestHandle, RequestOutput};

@@ -7,6 +7,60 @@ use anyhow::{bail, Result};
 use crate::metrics::RequestTiming;
 use crate::sampling::{Key, Transform};
 
+/// Scheduling priority of a request (DESIGN.md §11).
+///
+/// Higher priorities are planned first; ties break FCFS by queue order.
+/// An anti-starvation aging rule (`SchedulerConfig::aging_steps`, config
+/// key `priority_aging_steps`) promotes a waiting request one priority
+/// class worth of rank for every `aging_steps` logical engine steps it
+/// has waited, so a saturated high-priority stream can delay but never
+/// permanently starve low-priority work.  Priority ordering engages only
+/// when a candidate set actually mixes priority classes; a
+/// uniform-priority workload is never reordered — exactly the legacy
+/// FCFS, byte-identical token streams, same Philox coordinates.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    Low,
+    #[default]
+    Normal,
+    High,
+}
+
+impl Priority {
+    /// Numeric rank (higher = more urgent) — the base the aging rule
+    /// adds to.
+    pub fn rank(self) -> i64 {
+        match self {
+            Priority::Low => 0,
+            Priority::Normal => 1,
+            Priority::High => 2,
+        }
+    }
+}
+
+impl std::str::FromStr for Priority {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s.trim() {
+            "low" => Ok(Priority::Low),
+            "normal" => Ok(Priority::Normal),
+            "high" => Ok(Priority::High),
+            other => bail!("unknown priority '{other}' (expected low|normal|high)"),
+        }
+    }
+}
+
+impl std::fmt::Display for Priority {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Priority::Low => "low",
+            Priority::Normal => "normal",
+            Priority::High => "high",
+        })
+    }
+}
+
 /// Per-request sampling configuration (vLLM `SamplingParams` analogue).
 ///
 /// Temperature is carried per row through the artifact ABI (`tau: [B]`,
@@ -171,6 +225,16 @@ pub struct Request {
     pub id: u64,
     pub prompt: Vec<i32>,
     pub params: SamplingParams,
+    /// Scheduling priority (see [`Priority`]; `Normal` preserves legacy
+    /// FCFS exactly).
+    pub priority: Priority,
+}
+
+impl Request {
+    /// A `Normal`-priority request — the common construction.
+    pub fn new(id: u64, prompt: Vec<i32>, params: SamplingParams) -> Self {
+        Self { id, prompt, params, priority: Priority::default() }
+    }
 }
 
 /// Why a sequence stopped.
@@ -182,6 +246,10 @@ pub enum FinishReason {
     StopToken,
     /// Dropped because the prompt can never fit (prompt + budget > max_seq).
     Rejected,
+    /// Cancelled mid-flight by [`Engine::abort`](super::Engine::abort):
+    /// KV blocks and prefix-cache attachments released, partial tokens
+    /// preserved on the completion.
+    Aborted,
 }
 
 /// A finished generation.
@@ -223,11 +291,18 @@ pub struct Sequence {
     pub prompt: Vec<i32>,
     pub generated: Vec<i32>,
     pub params: SamplingParams,
+    pub priority: Priority,
     pub state: SeqState,
     pub kv: Option<SeqKv>,
     pub arrived: Instant,
     pub first_token_at: Option<Instant>,
     pub last_token_at: Option<Instant>,
+    /// Logical engine step at submission (the step-clock TTFT anchor and
+    /// the aging rule's reference point; 0 outside an engine).
+    pub submitted_step: u64,
+    /// Logical engine step of this sequence's most recent token (drives
+    /// the per-event `inter_token_steps`).
+    pub last_token_step: Option<u64>,
     pub timing: RequestTiming,
 }
 
@@ -238,11 +313,14 @@ impl Sequence {
             prompt: req.prompt,
             generated: Vec::new(),
             params: req.params,
+            priority: req.priority,
             state: SeqState::Waiting,
             kv: None,
             arrived: Instant::now(),
             first_token_at: None,
             last_token_at: None,
+            submitted_step: 0,
+            last_token_step: None,
             timing: RequestTiming::default(),
         }
     }
@@ -293,14 +371,11 @@ mod tests {
     use super::*;
 
     fn req(prompt: Vec<i32>, max_new: usize) -> Request {
-        Request {
-            id: 1,
+        Request::new(
+            1,
             prompt,
-            params: SamplingParams {
-                max_new_tokens: max_new,
-                ..Default::default()
-            },
-        }
+            SamplingParams { max_new_tokens: max_new, ..Default::default() },
+        )
     }
 
     #[test]
@@ -324,15 +399,15 @@ mod tests {
         s.generated.push(9);
         assert_eq!(s.finished(), Some(FinishReason::MaxTokens));
 
-        let mut s = Sequence::new(Request {
-            id: 2,
-            prompt: vec![1],
-            params: SamplingParams {
+        let mut s = Sequence::new(Request::new(
+            2,
+            vec![1],
+            SamplingParams {
                 max_new_tokens: 100,
                 stop_tokens: vec![0, 7],
                 ..Default::default()
             },
-        });
+        ));
         s.generated.push(3);
         assert_eq!(s.finished(), None);
         s.generated.push(7); // any stop token ends generation
@@ -409,6 +484,22 @@ mod tests {
         };
         let t = bad.transform(4);
         assert_eq!(t.bias.as_ref().unwrap(), &vec![0.0f32; 4]);
+    }
+
+    #[test]
+    fn priority_ranks_parse_and_default() {
+        assert_eq!(Priority::default(), Priority::Normal);
+        assert!(Priority::Low.rank() < Priority::Normal.rank());
+        assert!(Priority::Normal.rank() < Priority::High.rank());
+        for p in [Priority::Low, Priority::Normal, Priority::High] {
+            let back: Priority = p.to_string().parse().unwrap();
+            assert_eq!(back, p);
+        }
+        assert!(" high ".parse::<Priority>().is_ok()); // trimmed
+        assert!("urgent".parse::<Priority>().is_err());
+        // New requests default to Normal.
+        assert_eq!(req(vec![1], 1).priority, Priority::Normal);
+        assert_eq!(Sequence::new(req(vec![1], 1)).priority, Priority::Normal);
     }
 
     #[test]

@@ -16,6 +16,17 @@
 //! Fixed-shape executables mean the batch is padded up to a bucket —
 //! exactly how GPU serving stacks pad to CUDA-graph capture sizes; padding
 //! waste is surfaced in metrics as `pad_slots`.
+//!
+//! Priority (DESIGN.md §11): when a candidate set spans multiple
+//! priority classes, it is ordered by *effective rank* — the request's
+//! [`Priority`](super::request::Priority) rank plus an anti-starvation
+//! aging bonus of one rank per `aging_steps` logical engine steps waited
+//! — with FCFS (queue-order) tiebreak via a stable sort.  A
+//! uniform-priority candidate set is never reordered at all (see
+//! `sort_by_effective_rank`), so priority-free workloads reproduce the
+//! legacy FCFS plan exactly, preserving byte-identical token streams.
+
+use std::cmp::Reverse;
 
 use super::request::{SeqState, Sequence};
 
@@ -52,6 +63,45 @@ pub struct SchedulerConfig {
     /// always absorb a full speculative burst without immediate
     /// preemption.
     pub max_tokens_per_step: usize,
+    /// Anti-starvation aging: a waiting/running sequence gains one
+    /// priority-class worth of effective rank per `aging_steps` logical
+    /// engine steps since submission (0 disables aging).  Neutral under
+    /// uniform priorities — see the module docs.
+    pub aging_steps: u64,
+}
+
+/// Effective scheduling rank: base priority plus the aging bonus.
+fn effective_rank(s: &Sequence, now_step: u64, aging_steps: u64) -> i64 {
+    let mut rank = s.priority.rank();
+    if aging_steps > 0 {
+        rank += (now_step.saturating_sub(s.submitted_step) / aging_steps) as i64;
+    }
+    rank
+}
+
+/// Order candidates by effective rank — but ONLY when the set actually
+/// spans multiple priority classes.  A uniform-priority candidate set
+/// keeps its exact queue order untouched: this is what makes the
+/// redesign bit-for-bit identical to the legacy FCFS scheduler for
+/// priority-free workloads even in corners where the queue order drifts
+/// from submission order (e.g. the engine's prefill requeue backstop
+/// push-fronts a raced candidate), where an unconditional aging sort
+/// could otherwise reorder equal-priority requests by age and move
+/// Philox (row, step) coordinates.  Aging is anti-starvation machinery
+/// *for priority scheduling*; without priorities in play there is
+/// nothing to starve.
+fn sort_by_effective_rank(
+    candidates: &mut [&Sequence],
+    cfg: &SchedulerConfig,
+    now_step: u64,
+) {
+    let mixed = candidates
+        .first()
+        .is_some_and(|f| candidates.iter().any(|s| s.priority != f.priority));
+    if mixed {
+        candidates
+            .sort_by_key(|s| Reverse(effective_rank(s, now_step, cfg.aging_steps)));
+    }
 }
 
 /// Pick the smallest bucket >= n (or the largest available if n exceeds all).
@@ -80,26 +130,32 @@ pub fn pick_bucket(buckets: &[usize], n: usize) -> usize {
 /// so the T bucket is picked by the longest *suffix*, not the longest
 /// prompt, letting hit-heavy batches drop into smaller prefill
 /// executables (the TTFT win, DESIGN.md §10).
+/// `now_step` is the engine's logical step clock, the aging rule's "now".
 pub fn plan(
     cfg: &SchedulerConfig,
     waiting: &[Sequence],
     running: &[Sequence],
     mut can_admit: impl FnMut(&Sequence, usize) -> bool,
     cached_tokens: impl Fn(&Sequence) -> usize,
+    now_step: u64,
 ) -> Plan {
     // --- Prefill-priority: batch waiting prompts while capacity allows.
     if running.len() < cfg.max_concurrency {
         let headroom = cfg.max_concurrency - running.len();
         let max_t = *cfg.prefill_t_buckets.last().unwrap();
-        // FCFS scan: take prompts that fit the cache (temperature is
-        // per-row in the artifact ABI, so no grouping constraint).  The
-        // admission probe asks for the prompt PLUS one full step's token
-        // burst (max_tokens_per_step − 1 beyond the ordinary single
-        // token), so spec-decode bursts can't strand a just-admitted
-        // sequence.
+        // Priority-then-FCFS scan: take prompts that fit the cache
+        // (temperature is per-row in the artifact ABI, so no grouping
+        // constraint).  The stable sort keeps submission order within
+        // equal effective rank.  The admission probe asks for the prompt
+        // PLUS one full step's token burst (max_tokens_per_step − 1
+        // beyond the ordinary single token), so spec-decode bursts can't
+        // strand a just-admitted sequence.
         let burst = cfg.max_tokens_per_step.max(1) - 1;
+        let mut queue: Vec<&Sequence> =
+            waiting.iter().filter(|s| s.state == SeqState::Waiting).collect();
+        sort_by_effective_rank(&mut queue, cfg, now_step);
         let mut chosen: Vec<&Sequence> = Vec::new();
-        for s in waiting.iter().filter(|s| s.state == SeqState::Waiting) {
+        for s in queue {
             if s.prompt.len() > max_t || !can_admit(s, burst) {
                 continue;
             }
@@ -126,14 +182,18 @@ pub fn plan(
         }
     }
 
-    // --- Decode: FCFS over running sequences, whatever their params.
-    let decodable: Vec<&Sequence> = running
+    // --- Decode: priority-then-FCFS over running sequences, whatever
+    // their params (mixed-priority-gated stable sort again — uniform
+    // priorities decode in the exact legacy running order, same batch
+    // slots, same Philox rows).
+    let mut decodable: Vec<&Sequence> = running
         .iter()
         .filter(|s| s.state == SeqState::Running)
         .collect();
     if decodable.is_empty() {
         return Plan::Idle;
     }
+    sort_by_effective_rank(&mut decodable, cfg, now_step);
     let max_b = *cfg.decode_buckets.last().unwrap();
     let group: Vec<u64> = decodable.iter().take(max_b).map(|s| s.id).collect();
     let bucket = pick_bucket(&cfg.decode_buckets, group.len());
@@ -152,16 +212,30 @@ mod tests {
             prefill_b: 4,
             max_concurrency: 8,
             max_tokens_per_step: 1,
+            aging_steps: 0,
         }
     }
 
     fn seq(id: u64, prompt_len: usize, tau: f32, state: SeqState) -> Sequence {
-        let mut s = Sequence::new(Request {
+        let mut s = Sequence::new(Request::new(
             id,
-            prompt: vec![1; prompt_len],
-            params: SamplingParams { temperature: tau, ..Default::default() },
-        });
+            vec![1; prompt_len],
+            SamplingParams { temperature: tau, ..Default::default() },
+        ));
         s.state = state;
+        s
+    }
+
+    /// `seq` with an explicit priority and submission step.
+    fn pseq(
+        id: u64,
+        prio: crate::coordinator::request::Priority,
+        submitted_step: u64,
+        state: SeqState,
+    ) -> Sequence {
+        let mut s = seq(id, 8, 1.0, state);
+        s.priority = prio;
+        s.submitted_step = submitted_step;
         s
     }
 
@@ -185,7 +259,7 @@ mod tests {
     fn prefill_takes_priority() {
         let waiting = vec![seq(1, 10, 1.0, SeqState::Waiting)];
         let running = vec![seq(2, 5, 1.0, SeqState::Running)];
-        let p = plan(&cfg(), &waiting, &running, always, uncached);
+        let p = plan(&cfg(), &waiting, &running, always, uncached, 0);
         assert_eq!(
             p,
             Plan::Prefill { seq_ids: vec![1], t_bucket: 16 }
@@ -198,7 +272,7 @@ mod tests {
             seq(1, 10, 1.0, SeqState::Waiting),
             seq(2, 40, 1.0, SeqState::Waiting),
         ];
-        match plan(&cfg(), &waiting, &[], always, uncached) {
+        match plan(&cfg(), &waiting, &[], always, uncached, 0) {
             Plan::Prefill { seq_ids, t_bucket } => {
                 assert_eq!(seq_ids, vec![1, 2]);
                 assert_eq!(t_bucket, 64);
@@ -216,7 +290,7 @@ mod tests {
             seq(2, 40, 1.0, SeqState::Waiting),
         ];
         let cached = |s: &Sequence| if s.id == 2 { 32 } else { 0 };
-        match plan(&cfg(), &waiting, &[], always, cached) {
+        match plan(&cfg(), &waiting, &[], always, cached, 0) {
             Plan::Prefill { seq_ids, t_bucket } => {
                 assert_eq!(seq_ids, vec![1, 2]);
                 assert_eq!(t_bucket, 16);
@@ -226,7 +300,7 @@ mod tests {
         // An overclaiming probe (cached >= prompt) is capped: at least one
         // suffix token always remains to prefill.
         let overclaim = |_: &Sequence| 1000usize;
-        match plan(&cfg(), &waiting, &[], always, overclaim) {
+        match plan(&cfg(), &waiting, &[], always, overclaim, 0) {
             Plan::Prefill { t_bucket, .. } => assert_eq!(t_bucket, 16),
             p => panic!("{p:?}"),
         }
@@ -238,7 +312,7 @@ mod tests {
             seq(1, 100, 1.0, SeqState::Waiting), // > max T bucket
             seq(2, 10, 1.0, SeqState::Waiting),
         ];
-        match plan(&cfg(), &waiting, &[], always, uncached) {
+        match plan(&cfg(), &waiting, &[], always, uncached, 0) {
             Plan::Prefill { seq_ids, .. } => assert_eq!(seq_ids, vec![2]),
             p => panic!("{p:?}"),
         }
@@ -248,7 +322,7 @@ mod tests {
     fn admission_control_blocks_prefill() {
         let waiting = vec![seq(1, 10, 1.0, SeqState::Waiting)];
         let running = vec![seq(2, 5, 1.0, SeqState::Running)];
-        let p = plan(&cfg(), &waiting, &running, |_, _| false, uncached);
+        let p = plan(&cfg(), &waiting, &running, |_, _| false, uncached, 0);
         assert_eq!(
             p,
             Plan::Decode { seq_ids: vec![2], b_bucket: 1 }
@@ -265,7 +339,7 @@ mod tests {
             seq(2, 40, 1.0, SeqState::Waiting),
         ];
         let admit_cached_only = |s: &Sequence, _burst: usize| s.id == 2;
-        match plan(&cfg(), &waiting, &[], admit_cached_only, uncached) {
+        match plan(&cfg(), &waiting, &[], admit_cached_only, uncached, 0) {
             Plan::Prefill { seq_ids, .. } => assert_eq!(seq_ids, vec![2]),
             p => panic!("{p:?}"),
         }
@@ -280,7 +354,7 @@ mod tests {
             seq(2, 5, 0.7, SeqState::Running),
             seq(3, 5, 1.0, SeqState::Running),
         ];
-        match plan(&cfg(), &[], &running, always, uncached) {
+        match plan(&cfg(), &[], &running, always, uncached, 0) {
             Plan::Decode { seq_ids, b_bucket } => {
                 assert_eq!(seq_ids, vec![1, 2, 3]); // FCFS, tau-blind
                 assert_eq!(b_bucket, 4);
@@ -298,7 +372,7 @@ mod tests {
         let running: Vec<Sequence> = (0..8)
             .map(|i| seq(i, 5, 0.25 * (1 + i % 4) as f32, SeqState::Running))
             .collect();
-        match plan(&cfg(), &[], &running, always, uncached) {
+        match plan(&cfg(), &[], &running, always, uncached, 0) {
             Plan::Decode { seq_ids, b_bucket } => {
                 assert_eq!(seq_ids.len(), 8);
                 assert_eq!(b_bucket, 8);
@@ -315,7 +389,7 @@ mod tests {
             seq(2, 10, 0.5, SeqState::Waiting),
             seq(3, 10, 2.0, SeqState::Waiting),
         ];
-        match plan(&cfg(), &waiting, &[], always, uncached) {
+        match plan(&cfg(), &waiting, &[], always, uncached, 0) {
             Plan::Prefill { seq_ids, t_bucket } => {
                 assert_eq!(seq_ids, vec![1, 2, 3]);
                 assert_eq!(t_bucket, 16);
@@ -328,7 +402,7 @@ mod tests {
     fn decode_respects_largest_bucket() {
         let running: Vec<Sequence> =
             (0..12).map(|i| seq(i, 5, 1.0, SeqState::Running)).collect();
-        match plan(&cfg(), &[], &running, always, uncached) {
+        match plan(&cfg(), &[], &running, always, uncached, 0) {
             Plan::Decode { seq_ids, b_bucket } => {
                 assert_eq!(seq_ids.len(), 8);
                 assert_eq!(b_bucket, 8);
@@ -343,7 +417,7 @@ mod tests {
         let running: Vec<Sequence> =
             (0..8).map(|i| seq(i, 5, 1.0, SeqState::Running)).collect();
         // at capacity: no prefill even though prompts wait
-        match plan(&cfg(), &waiting, &running, always, uncached) {
+        match plan(&cfg(), &waiting, &running, always, uncached, 0) {
             Plan::Decode { .. } => {}
             p => panic!("{p:?}"),
         }
@@ -351,7 +425,7 @@ mod tests {
 
     #[test]
     fn idle_when_empty() {
-        assert_eq!(plan(&cfg(), &[], &[], always, uncached), Plan::Idle);
+        assert_eq!(plan(&cfg(), &[], &[], always, uncached, 0), Plan::Idle);
     }
 
     #[test]
@@ -367,13 +441,133 @@ mod tests {
             asked.set(s.context_len() + burst);
             true
         };
-        let p = plan(&c, &waiting, &[], probe, uncached);
+        let p = plan(&c, &waiting, &[], probe, uncached, 0);
         assert!(matches!(p, Plan::Prefill { .. }));
         assert_eq!(asked.get(), 10 + 4);
         // Ordinary decode keeps the original probe.
-        let p = plan(&cfg(), &waiting, &[], probe, uncached);
+        let p = plan(&cfg(), &waiting, &[], probe, uncached, 0);
         assert!(matches!(p, Plan::Prefill { .. }));
         assert_eq!(asked.get(), 10);
+    }
+
+    #[test]
+    fn high_priority_jumps_the_prefill_queue() {
+        use crate::coordinator::request::Priority;
+        let mut c = cfg();
+        c.aging_steps = 0;
+        // Submission order: 1 (normal), 2 (high), 3 (low), 4 (normal).
+        let waiting = vec![
+            pseq(1, Priority::Normal, 0, SeqState::Waiting),
+            pseq(2, Priority::High, 0, SeqState::Waiting),
+            pseq(3, Priority::Low, 0, SeqState::Waiting),
+            pseq(4, Priority::Normal, 0, SeqState::Waiting),
+        ];
+        match plan(&c, &waiting, &[], always, uncached, 0) {
+            // High first, then normals FCFS, then low.
+            Plan::Prefill { seq_ids, .. } => assert_eq!(seq_ids, vec![2, 1, 4, 3]),
+            p => panic!("{p:?}"),
+        }
+        // Uniform priorities: exact legacy FCFS, aging on or off.
+        let uniform = vec![
+            pseq(1, Priority::Normal, 0, SeqState::Waiting),
+            pseq(2, Priority::Normal, 1, SeqState::Waiting),
+            pseq(3, Priority::Normal, 2, SeqState::Waiting),
+        ];
+        for aging in [0u64, 16] {
+            let mut c = cfg();
+            c.aging_steps = aging;
+            match plan(&c, &uniform, &[], always, uncached, 100) {
+                Plan::Prefill { seq_ids, .. } => {
+                    assert_eq!(seq_ids, vec![1, 2, 3], "aging={aging}")
+                }
+                p => panic!("{p:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_priority_queue_order_survives_aging_even_when_scrambled() {
+        // Regression: the engine's prefill requeue backstop can push a
+        // later-submitted sequence to the FRONT of the waiting queue.
+        // Under uniform priority the scheduler must keep that queue
+        // order bit-for-bit (legacy FCFS semantics) — an unconditional
+        // aging sort would move the older request ahead once its age
+        // bonus ticks over, shifting Philox coordinates.
+        let mut c = cfg();
+        c.aging_steps = 8;
+        // Queue order [B(submitted 50), A(submitted 0)]: A is much older.
+        let waiting = vec![
+            pseq(7, Priority::Normal, 50, SeqState::Waiting), // requeued B
+            pseq(3, Priority::Normal, 0, SeqState::Waiting),  // older A
+        ];
+        match plan(&c, &waiting, &[], always, uncached, 100) {
+            Plan::Prefill { seq_ids, .. } => {
+                assert_eq!(seq_ids, vec![7, 3], "uniform priority reordered");
+            }
+            p => panic!("{p:?}"),
+        }
+        // Same queue with mixed priorities: ranking (with aging) engages.
+        let mixed = vec![
+            pseq(7, Priority::Normal, 50, SeqState::Waiting), // rank 1+6=7
+            pseq(3, Priority::Low, 0, SeqState::Waiting),     // rank 0+12=12
+        ];
+        match plan(&c, &mixed, &[], always, uncached, 100) {
+            Plan::Prefill { seq_ids, .. } => assert_eq!(seq_ids, vec![3, 7]),
+            p => panic!("{p:?}"),
+        }
+    }
+
+    #[test]
+    fn aging_prevents_low_priority_starvation() {
+        use crate::coordinator::request::Priority;
+        let mut c = cfg();
+        c.prefill_b = 1; // one admission per step: contention
+        c.aging_steps = 8;
+        // A low-priority request submitted at step 0; a high-priority
+        // stream submitted at step 30.
+        let waiting = vec![
+            pseq(1, Priority::Low, 0, SeqState::Waiting),
+            pseq(2, Priority::High, 30, SeqState::Waiting),
+        ];
+        // At step 30 the low-priority request has aged 30/8 = 3 classes
+        // (effective rank 0 + 3 = 3) while the fresh high-priority one
+        // sits at rank 2 — the starving request overtakes.
+        match plan(&c, &waiting, &[], always, uncached, 30) {
+            Plan::Prefill { seq_ids, .. } => assert_eq!(seq_ids, vec![1]),
+            p => panic!("{p:?}"),
+        }
+        // Shortly after submission (step 8), low has aged only 1 class
+        // (rank 1) and the high-priority request still wins.
+        let fresh = vec![
+            pseq(1, Priority::Low, 0, SeqState::Waiting),
+            pseq(2, Priority::High, 6, SeqState::Waiting),
+        ];
+        match plan(&c, &fresh, &[], always, uncached, 8) {
+            Plan::Prefill { seq_ids, .. } => assert_eq!(seq_ids, vec![2]),
+            p => panic!("{p:?}"),
+        }
+    }
+
+    #[test]
+    fn decode_orders_by_priority_with_stable_fcfs_ties() {
+        use crate::coordinator::request::Priority;
+        let mut c = cfg();
+        c.decode_buckets = vec![1, 2];
+        // 3 running, bucket capacity 2: the low-priority one is left out,
+        // and the two normals keep their running order (batch slots are
+        // Philox rows — ties must stay stable).
+        let running = vec![
+            pseq(1, Priority::Normal, 0, SeqState::Running),
+            pseq(2, Priority::Low, 0, SeqState::Running),
+            pseq(3, Priority::Normal, 0, SeqState::Running),
+        ];
+        match plan(&c, &[], &running, always, uncached, 0) {
+            Plan::Decode { seq_ids, b_bucket } => {
+                assert_eq!(seq_ids, vec![1, 3]);
+                assert_eq!(b_bucket, 2);
+            }
+            p => panic!("{p:?}"),
+        }
     }
 
     #[test]
@@ -385,9 +579,9 @@ mod tests {
         let waiting = vec![seq(1, 10, 1.0, SeqState::Waiting)];
         let running = vec![seq(2, 5, 1.0, SeqState::Running)];
         let fits = |s: &Sequence, burst: usize| s.context_len() + burst <= 12;
-        let p = plan(&c, &waiting, &running, fits, uncached);
+        let p = plan(&c, &waiting, &running, fits, uncached, 0);
         assert_eq!(p, Plan::Decode { seq_ids: vec![2], b_bucket: 1 });
-        let p = plan(&cfg(), &waiting, &running, fits, uncached);
+        let p = plan(&cfg(), &waiting, &running, fits, uncached, 0);
         assert!(matches!(p, Plan::Prefill { .. }));
     }
 }

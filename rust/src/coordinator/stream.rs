@@ -1,0 +1,183 @@
+//! Streaming request lifecycle: per-token events over an internal event
+//! queue, consumed through a [`RequestHandle`] (DESIGN.md §11).
+//!
+//! `Engine::submit` returns a handle at admission time; every scheduler
+//! iteration that produces tokens for the request pushes one
+//! [`RequestOutput`] per token into the handle's queue, and completion
+//! (stop token, budget, rejection, or [`Engine::abort`]) pushes a final
+//! terminal event carrying the [`FinishReason`] plus the assembled
+//! [`Completion`].  The engine is single-threaded — events appear between
+//! [`Engine::step`] calls, never concurrently with them — but the queue
+//! is `Arc<Mutex<..>>` so handles are `Send` and can be polled from a
+//! different thread than the one driving the engine loop.
+//!
+//! Timing is reported on the engine's **logical step clock** (one tick
+//! per `Engine::step`), which makes TTFT/TPOT measurements deterministic
+//! and replayable — the wall-clock counterparts stay on
+//! [`Completion::timing`] as before.
+//!
+//! [`Engine::submit`]: super::Engine::submit
+//! [`Engine::step`]: super::Engine::step
+//! [`Engine::abort`]: super::Engine::abort
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+use super::request::{Completion, FinishReason};
+
+/// One streaming event: a generated token, or the terminal
+/// finish notification.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RequestOutput {
+    pub request_id: u64,
+    /// The sampled token; `None` on the terminal event.
+    pub token: Option<i32>,
+    /// 0-based index of this token within the generated text; on the
+    /// terminal event, the final generated length.
+    pub index: usize,
+    /// Cumulative generated text length including this token.
+    pub text_len: usize,
+    /// Logical engine step (the step clock) at which this event fired.
+    pub step: u64,
+    /// Steps from submission to this token — set on the first token only
+    /// (the logical-clock TTFT).
+    pub ttft_steps: Option<u64>,
+    /// Steps since this request's previous token — `None` on the first
+    /// token (the logical-clock inter-token latency; its mean is the
+    /// logical TPOT).
+    pub inter_token_steps: Option<u64>,
+    /// Set on the terminal event only.
+    pub finish: Option<FinishReason>,
+}
+
+impl RequestOutput {
+    /// The terminal event: no token, final length, finish reason.
+    pub(crate) fn terminal(
+        request_id: u64,
+        text_len: usize,
+        step: u64,
+        finish: FinishReason,
+    ) -> Self {
+        Self {
+            request_id,
+            token: None,
+            index: text_len,
+            text_len,
+            step,
+            ttft_steps: None,
+            inter_token_steps: None,
+            finish: Some(finish),
+        }
+    }
+}
+
+/// Shared state between the engine and one request's handle.
+#[derive(Debug, Default)]
+pub(crate) struct StreamState {
+    pub(crate) queue: VecDeque<RequestOutput>,
+    pub(crate) finished: Option<FinishReason>,
+    pub(crate) completion: Option<Completion>,
+}
+
+/// The engine's side of one stream (the handle holds the other clone).
+pub(crate) type SharedStream = Arc<Mutex<StreamState>>;
+
+/// Handle to one in-flight request: poll per-token events, observe
+/// completion.  Cheap to clone (an `Arc` bump); dropping every clone
+/// discards any undrained events but never blocks the engine.
+#[derive(Clone, Debug)]
+pub struct RequestHandle {
+    id: u64,
+    state: Arc<Mutex<StreamState>>,
+}
+
+impl RequestHandle {
+    pub(crate) fn new(id: u64, state: Arc<Mutex<StreamState>>) -> Self {
+        Self { id, state }
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Pop the next pending event, if any (non-blocking — the engine is
+    /// driven by the caller, so "no event" means "call `step` again").
+    pub fn try_next(&self) -> Option<RequestOutput> {
+        self.state.lock().expect("stream mutex").queue.pop_front()
+    }
+
+    /// Drain every pending event in order.
+    pub fn drain(&self) -> Vec<RequestOutput> {
+        self.state.lock().expect("stream mutex").queue.drain(..).collect()
+    }
+
+    /// Why the request finished — `None` while still in flight.
+    pub fn finish_reason(&self) -> Option<FinishReason> {
+        self.state.lock().expect("stream mutex").finished
+    }
+
+    /// Has the engine finished (completed, rejected, or aborted) the
+    /// request?  Events may still be queued for draining.
+    pub fn is_finished(&self) -> bool {
+        self.finish_reason().is_some()
+    }
+
+    /// The final [`Completion`], once finished (a clone; also returned by
+    /// the batch-style engine entry points).
+    pub fn completion(&self) -> Option<Completion> {
+        self.state.lock().expect("stream mutex").completion.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handle_drains_in_order_and_reports_finish() {
+        let state = Arc::new(Mutex::new(StreamState::default()));
+        let h = RequestHandle::new(3, state.clone());
+        assert_eq!(h.id(), 3);
+        assert!(h.try_next().is_none());
+        assert!(!h.is_finished());
+        {
+            let mut g = state.lock().unwrap();
+            for (i, tok) in [11, 12].into_iter().enumerate() {
+                g.queue.push_back(RequestOutput {
+                    request_id: 3,
+                    token: Some(tok),
+                    index: i,
+                    text_len: i + 1,
+                    step: (i + 1) as u64,
+                    ttft_steps: (i == 0).then_some(1),
+                    inter_token_steps: (i > 0).then_some(1),
+                    finish: None,
+                });
+            }
+            g.queue.push_back(RequestOutput::terminal(
+                3,
+                2,
+                2,
+                FinishReason::MaxTokens,
+            ));
+            g.finished = Some(FinishReason::MaxTokens);
+        }
+        assert!(h.is_finished());
+        let evs = h.drain();
+        assert_eq!(evs.len(), 3);
+        assert_eq!(evs[0].token, Some(11));
+        assert_eq!(evs[0].ttft_steps, Some(1));
+        assert_eq!(evs[1].inter_token_steps, Some(1));
+        assert_eq!(evs[2].token, None);
+        assert_eq!(evs[2].finish, Some(FinishReason::MaxTokens));
+        assert_eq!(evs[2].text_len, 2);
+        assert!(h.try_next().is_none()); // drained
+        assert_eq!(h.finish_reason(), Some(FinishReason::MaxTokens));
+    }
+
+    #[test]
+    fn handles_are_send_and_clone() {
+        fn assert_send<T: Send + Clone>() {}
+        assert_send::<RequestHandle>();
+    }
+}

@@ -460,6 +460,30 @@ impl KvCacheManager {
         self.allocator.free_blocks()
     }
 
+    /// Physical pool size.
+    pub fn total_blocks(&self) -> usize {
+        self.config.num_blocks
+    }
+
+    /// Pool-balance diagnostic: blocks neither free nor resident in the
+    /// prefix cache.  While sequences are live this counts their private
+    /// blocks; once every sequence has been released or aborted it must
+    /// be 0 — the zero-leak invariant the abort test suites assert (a
+    /// nonzero value at quiescence means a release path dropped a ref or
+    /// the cache and allocator refcounts fell out of lockstep).
+    pub fn unaccounted_blocks(&self) -> usize {
+        self.config.num_blocks
+            - self.allocator.free_blocks()
+            - self.prefix_cached_blocks()
+    }
+
+    /// Sequence-attachment refs currently held on prefix-cache nodes
+    /// (see [`crate::prefixcache::RadixTree::attached_refs`]); 0 whenever
+    /// no sequence is attached — aborts must drop theirs.
+    pub fn prefix_attached_refs(&self) -> usize {
+        self.prefix.as_ref().map_or(0, |t| t.attached_refs())
+    }
+
     /// Fraction of physical blocks in use.
     pub fn utilization(&self) -> f64 {
         1.0 - self.allocator.free_blocks() as f64 / self.config.num_blocks as f64

@@ -50,6 +50,20 @@
 //! engine emits 1..=K+1 tokens per step.  Selected by
 //! `sampler = specdec:k=4,ngram=3`; verified by `repro specdec-chisq`.
 //!
+//! # Streaming serving front-end
+//!
+//! The engine's request lifecycle is a vLLM-style submission/streaming
+//! split (DESIGN.md §11): [`coordinator::Engine::submit`] returns a
+//! [`coordinator::RequestHandle`] that yields per-token
+//! [`coordinator::RequestOutput`] events (token, position, logical-step
+//! TTFT/inter-token timing), [`coordinator::Engine::abort`] cancels
+//! mid-flight with zero-leak KV + prefix-cache release, requests carry a
+//! [`coordinator::Priority`] with an anti-starvation aging rule, and the
+//! public boundary reports typed [`coordinator::EngineError`]s.  The
+//! legacy batch entry points survive as shims with byte-identical token
+//! streams — `repro stream-identity` and `rust/tests/streaming.rs` are
+//! the certificate.
+//!
 //! # Automatic prefix caching
 //!
 //! The [`prefixcache`] subsystem (DESIGN.md §10) removes redundant prefill

@@ -14,7 +14,7 @@ use std::collections::BTreeMap;
 use anyhow::{bail, Context, Result};
 
 use flashsampling::config::{parse_pairs, Config};
-use flashsampling::coordinator::Engine;
+use flashsampling::coordinator::{Engine, Request, RequestHandle, SamplingParams};
 use flashsampling::runtime::{Runtime, Tensor};
 use flashsampling::sampling::Key;
 use flashsampling::workload::WorkloadGen;
@@ -24,7 +24,7 @@ fn usage() -> ! {
         "usage: flashsampling <serve|repro|bench-kernel|selfcheck> [args]\n\
          \n\
          serve        --config FILE | --set key=value ...\n\
-         repro        <table1|table4|...|fig6|chisq|hetero-chisq|specdec-chisq|prefix-identity|e2e-quality|all|stats> [--out DIR]\n\
+         repro        <table1|table4|...|fig6|chisq|hetero-chisq|specdec-chisq|prefix-identity|stream-identity|e2e-quality|all|stats> [--out DIR]\n\
          bench-kernel [--set key=value ...]\n\
          selfcheck    [--set key=value ...]"
     );
@@ -72,9 +72,9 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
     let mut gen = WorkloadGen::new(cfg.seed, cfg.request_rate, vocab);
     gen.temperature = cfg.temperature;
     gen.temperature_choices = cfg.temperature_choices.clone();
+    gen.priority_choices = cfg.priority_choices.clone();
     gen.prompt_len = flashsampling::workload::LengthDist::Uniform(8, 48);
     gen.output_len = flashsampling::workload::LengthDist::Fixed(cfg.max_new_tokens);
-    let reqs = gen.generate(cfg.num_requests);
     let sampler_desc = if let flashsampling::sampling::SamplerSpec::SpecDecode {
         k,
         ngram,
@@ -90,23 +90,106 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
         format!("FlashSampling (decode_sample artifact, spec `{}`)", cfg.sampler)
     };
     println!(
-        "[serve] {} requests, Poisson rate {}/s, sampler = {sampler_desc}",
-        reqs.len(),
-        cfg.request_rate,
+        "[serve] open-loop streaming: {} requests, Poisson rate {}/s, \
+         sampler = {sampler_desc}",
+        cfg.num_requests, cfg.request_rate,
     );
-    let done = engine.serve(reqs)?;
+
+    // Streaming drive of the handle API (DESIGN.md §11): submit each
+    // request at its Poisson arrival offset, step the engine
+    // continuously, and consume per-token events from the handles as
+    // they appear — the per-token latency percentiles below come from
+    // this live stream, not from post-hoc completion records.
+    let start = std::time::Instant::now();
+    let mut arrivals = gen.arrivals().take(cfg.num_requests).peekable();
+    // Only in-flight handles are polled; a handle is dropped from the
+    // active set once its terminal event arrives.
+    let mut active: Vec<RequestHandle> = Vec::new();
+    let mut submitted = 0usize;
+    let mut streamed_tokens = 0u64;
+    let mut finished = 0usize;
+    while submitted < cfg.num_requests || engine.pending() > 0 {
+        let now = start.elapsed().as_secs_f64();
+        while arrivals.peek().is_some_and(|s| s.arrival_s <= now) {
+            let s = arrivals.next().expect("peeked");
+            active.push(engine.submit(Request {
+                id: s.id,
+                prompt: s.prompt,
+                params: SamplingParams {
+                    temperature: s.temperature,
+                    max_new_tokens: s.max_new_tokens,
+                    ..Default::default()
+                },
+                priority: s.priority,
+            })?);
+            submitted += 1;
+        }
+        if engine.pending() == 0 {
+            if let Some(next) = arrivals.peek() {
+                let wait = next.arrival_s - start.elapsed().as_secs_f64();
+                if wait > 0.0 {
+                    std::thread::sleep(std::time::Duration::from_secs_f64(
+                        wait.min(0.05),
+                    ));
+                }
+            }
+            continue;
+        }
+        let completions = engine.step()?;
+        let mut progressed = !completions.is_empty();
+        active.retain(|h| {
+            let mut done = false;
+            for ev in h.drain() {
+                progressed = true;
+                if ev.token.is_some() {
+                    streamed_tokens += 1;
+                }
+                if ev.finish.is_some() {
+                    finished += 1;
+                    done = true;
+                }
+            }
+            !done
+        });
+        if !progressed {
+            // Nothing ran and nothing streamed: the waiting head can
+            // never be admitted on this engine — reject it instead of
+            // spinning on Plan::Idle forever (no-op while work runs).
+            // The completion is consumed via the handle's terminal event.
+            let _ = engine.reject_unschedulable();
+        }
+    }
+    // Terminal events queued by a final rejection land here.
+    for h in &active {
+        for ev in h.drain() {
+            if ev.token.is_some() {
+                streamed_tokens += 1;
+            }
+            if ev.finish.is_some() {
+                finished += 1;
+            }
+        }
+    }
+    engine.metrics.wall = start.elapsed();
     let m = &engine.metrics;
     println!(
-        "[serve] completed {} requests | {} tokens | wall {:.2}s | {:.1} tok/s",
-        done.len(),
-        m.tokens_generated,
+        "[serve] completed {} requests | {} streamed tokens | wall {:.2}s | \
+         {:.1} tok/s",
+        finished,
+        streamed_tokens,
         m.wall.as_secs_f64(),
         m.throughput_tps()
     );
+    let ms = |d: Option<std::time::Duration>| {
+        d.map(|d| d.as_secs_f64() * 1e3).unwrap_or(f64::NAN)
+    };
     println!(
-        "[serve] median TTFT {:.1} ms | median TPOT {:.2} ms | mean batch {:.2}",
-        m.median_ttft().map(|d| d.as_secs_f64() * 1e3).unwrap_or(f64::NAN),
-        m.median_tpot().map(|d| d.as_secs_f64() * 1e3).unwrap_or(f64::NAN),
+        "[serve] TTFT p50 {:.1} ms | TTFT p99 {:.1} ms | inter-token p99 \
+         {:.2} ms | median TPOT {:.2} ms | mean batch {:.2}",
+        ms(m.ttft_quantile(0.5)),
+        ms(m.ttft_quantile(0.99)),
+        ms(m.inter_token_quantile(0.99)),
+        ms(m.median_tpot()),
         m.mean_batch()
     );
     if let Some(rate) = m.prefix_hit_rate() {

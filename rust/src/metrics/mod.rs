@@ -94,6 +94,11 @@ pub struct ServingMetrics {
     pub cached_prefill_tokens: u64,
     pub ttft: Vec<Duration>,
     pub tpot: Vec<Duration>,
+    /// Every inter-token (decode) latency across all requests — the
+    /// streaming-latency pool behind `inter-token p99` (per-request means
+    /// live in `tpot`; this is the raw population, so tail percentiles
+    /// reflect individual slow steps, not slow requests).
+    pub inter_token: Vec<Duration>,
     /// Per-step decode batch sizes (batch-efficiency diagnostics).
     pub decode_batch_sizes: Vec<usize>,
     /// Per-sequence tokens emitted in one speculative-decode engine step
@@ -117,6 +122,23 @@ impl ServingMetrics {
 
     pub fn median_ttft(&self) -> Option<Duration> {
         median(&self.ttft)
+    }
+
+    /// TTFT quantile (0.0..=1.0) — the streaming serve driver reports
+    /// p50/p99.
+    pub fn ttft_quantile(&self, q: f64) -> Option<Duration> {
+        duration_quantile(&self.ttft, q)
+    }
+
+    /// Per-request TPOT quantile.
+    pub fn tpot_quantile(&self, q: f64) -> Option<Duration> {
+        duration_quantile(&self.tpot, q)
+    }
+
+    /// Inter-token latency quantile over the raw population (p99 is the
+    /// streaming tail-latency headline).
+    pub fn inter_token_quantile(&self, q: f64) -> Option<Duration> {
+        duration_quantile(&self.inter_token, q)
     }
 
     /// Decode throughput in tokens/s over the run.
@@ -176,12 +198,6 @@ impl ServingMetrics {
     /// sorted by name) so scrapes — and the format-stability unit test —
     /// see a stable layout.
     pub fn render_prometheus(&self) -> String {
-        fn quantile_s(xs: &[Duration], q: f64) -> f64 {
-            let mut v: Vec<Duration> = xs.to_vec();
-            v.sort_unstable();
-            let idx = ((v.len() - 1) as f64 * q).round() as usize;
-            v[idx].as_secs_f64()
-        }
         let mut out = String::new();
         for (name, v) in [
             ("requests_completed", self.requests_completed),
@@ -204,15 +220,20 @@ impl ServingMetrics {
             "flashsampling_throughput_tokens_per_second {:.6}\n",
             self.throughput_tps()
         ));
-        for (name, xs) in [("ttft", &self.ttft), ("tpot", &self.tpot)] {
+        for (name, xs) in [
+            ("ttft", &self.ttft),
+            ("tpot", &self.tpot),
+            ("inter_token", &self.inter_token),
+        ] {
             out.push_str(&format!(
                 "# TYPE flashsampling_{name}_seconds summary\n"
             ));
             if !xs.is_empty() {
                 for q in [0.5, 0.9, 0.99] {
+                    let v = duration_quantile(xs, q).expect("non-empty");
                     out.push_str(&format!(
                         "flashsampling_{name}_seconds{{quantile=\"{q}\"}} {:.6}\n",
-                        quantile_s(xs, q)
+                        v.as_secs_f64()
                     ));
                 }
             }
@@ -241,6 +262,18 @@ fn median(xs: &[Duration]) -> Option<Duration> {
     let mut v = xs.to_vec();
     v.sort_unstable();
     Some(v[v.len() / 2])
+}
+
+/// Exact quantile by nearest-rank (the same rule the Prometheus summary
+/// rows and `LatencyHistogram::quantile` use).
+fn duration_quantile(xs: &[Duration], q: f64) -> Option<Duration> {
+    if xs.is_empty() {
+        return None;
+    }
+    let mut v = xs.to_vec();
+    v.sort_unstable();
+    let idx = ((v.len() - 1) as f64 * q).round() as usize;
+    Some(v[idx])
 }
 
 #[cfg(test)]
@@ -319,6 +352,7 @@ mod tests {
             Duration::from_millis(30),
         ];
         m.tpot = vec![Duration::from_millis(5)];
+        m.inter_token = vec![Duration::from_millis(4), Duration::from_millis(6)];
         m.bump("preempted", 2);
         m.bump("decode_cache_hits", 7);
         let expect = "\
@@ -344,6 +378,11 @@ flashsampling_tpot_seconds{quantile=\"0.5\"} 0.005000
 flashsampling_tpot_seconds{quantile=\"0.9\"} 0.005000
 flashsampling_tpot_seconds{quantile=\"0.99\"} 0.005000
 flashsampling_tpot_seconds_count 1
+# TYPE flashsampling_inter_token_seconds summary
+flashsampling_inter_token_seconds{quantile=\"0.5\"} 0.006000
+flashsampling_inter_token_seconds{quantile=\"0.9\"} 0.006000
+flashsampling_inter_token_seconds{quantile=\"0.99\"} 0.006000
+flashsampling_inter_token_seconds_count 2
 # TYPE flashsampling_counter counter
 flashsampling_counter{name=\"decode_cache_hits\"} 7
 flashsampling_counter{name=\"preempted\"} 2
@@ -354,6 +393,21 @@ flashsampling_counter{name=\"preempted\"} 2
         assert!(empty.contains("flashsampling_ttft_seconds_count 0"));
         assert!(empty.contains("flashsampling_prefix_hit_rate 0.000000"));
         assert!(!empty.contains("quantile"));
+    }
+
+    #[test]
+    fn streaming_quantiles_use_nearest_rank() {
+        let mut m = ServingMetrics::default();
+        assert_eq!(m.ttft_quantile(0.5), None);
+        assert_eq!(m.inter_token_quantile(0.99), None);
+        m.ttft = (1..=100).map(Duration::from_millis).collect();
+        m.inter_token = (1..=100).map(Duration::from_millis).collect();
+        m.tpot = vec![Duration::from_millis(7)];
+        // Nearest-rank over 100 samples: idx = round(99q).
+        assert_eq!(m.ttft_quantile(0.5), Some(Duration::from_millis(51)));
+        assert_eq!(m.ttft_quantile(0.99), Some(Duration::from_millis(99)));
+        assert_eq!(m.inter_token_quantile(1.0), Some(Duration::from_millis(100)));
+        assert_eq!(m.tpot_quantile(0.99), Some(Duration::from_millis(7)));
     }
 
     #[test]

@@ -108,6 +108,18 @@ impl RadixTree {
         self.live
     }
 
+    /// Total sequence-attachment refs across all nodes — the
+    /// abort/release consistency audit (DESIGN.md §11): whenever no
+    /// sequence is attached through the tree this must be 0, i.e. every
+    /// abort or release detached exactly the refs its attach took.
+    pub fn attached_refs(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter_map(|n| n.as_ref())
+            .map(|n| n.refs as usize)
+            .sum()
+    }
+
     fn node(&self, id: usize) -> &Node {
         self.nodes[id].as_ref().expect("stale node id")
     }

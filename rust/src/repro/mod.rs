@@ -22,10 +22,17 @@ pub const ALL: [&str; 13] = [
 
 /// Statistical experiments (run real sampling; `e2e-quality` needs
 /// artifacts and a few minutes, the rest — including the prefix-cache
-/// on/off identity check — are fast and deterministic, so CI runs them
-/// as a smoke gate after `cargo test`).
-pub const STATS: [&str; 5] =
-    ["chisq", "hetero-chisq", "specdec-chisq", "prefix-identity", "e2e-quality"];
+/// on/off identity check and the streaming-front-end identity/abort
+/// certificate — are fast and deterministic, so CI runs them as a smoke
+/// gate after `cargo test`).
+pub const STATS: [&str; 6] = [
+    "chisq",
+    "hetero-chisq",
+    "specdec-chisq",
+    "prefix-identity",
+    "stream-identity",
+    "e2e-quality",
+];
 
 /// Regenerate one experiment into `out_dir`; returns the markdown.
 pub fn run(id: &str, out_dir: &Path) -> Result<String> {
@@ -48,6 +55,7 @@ pub fn run(id: &str, out_dir: &Path) -> Result<String> {
         "hetero-chisq" => quality::hetero_chisq()?,
         "specdec-chisq" => quality::specdec_chisq()?,
         "prefix-identity" => quality::prefix_identity()?,
+        "stream-identity" => quality::stream_identity()?,
         "e2e-quality" => quality::e2e_quality(None)?,
         other => anyhow::bail!("unknown experiment id '{other}'"),
     };

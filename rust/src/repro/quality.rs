@@ -314,10 +314,12 @@ pub fn specdec_chisq() -> Result<String> {
     Ok(md)
 }
 
-/// Engine-mirroring accounting simulation for [`prefix_identity`]: the
-/// real scheduler + KV manager driven over a workload, tracking the
-/// Philox step accounting exactly as the engine does (one step per
-/// prefill batch — the `sample_hidden` call — and one per decode batch).
+/// Engine-mirroring accounting simulation for [`prefix_identity`] and
+/// [`stream_identity`]: the real scheduler + KV manager driven over a
+/// workload, tracking the Philox step accounting exactly as the engine
+/// does (one step per prefill batch — the `sample_hidden` call — and one
+/// per decode batch), with optional mid-flight aborts mirroring
+/// `Engine::abort` (drop from waiting, or release from running).
 #[derive(Debug, Default, PartialEq)]
 struct PrefixSimOut {
     /// Philox step coordinate at which each request sampled its first
@@ -329,12 +331,25 @@ struct PrefixSimOut {
     prefill_plans: u32,
     /// Leaked blocks after all releases + cache drain (must be 0).
     leaked: usize,
+    /// Prefix-cache attachment refs left after the run (must be 0).
+    dangling_refs: usize,
+    /// Requests actually aborted mid-flight.
+    aborted: usize,
     /// Prefill tokens total / served from cache.
     prefill_tokens: u64,
     cached_tokens: u64,
 }
 
-fn prefix_sim(specs: &[crate::workload::RequestSpec], caching: bool) -> PrefixSimOut {
+/// `aborts` is a `(request_id, at_step)` schedule: before planning step
+/// `at_step`, the request is cancelled exactly the way `Engine::abort`
+/// does it — dropped from the waiting queue (no KV yet) or released from
+/// the running set (blocks + prefix-cache refs).
+fn prefix_sim(
+    specs: &[crate::workload::RequestSpec],
+    caching: bool,
+    aging_steps: u64,
+    aborts: &[(u64, u32)],
+) -> PrefixSimOut {
     use crate::coordinator::request::{SeqState, Sequence};
     use crate::coordinator::scheduler::{plan, Plan, SchedulerConfig};
     use crate::kvcache::{KvCacheConfig, KvCacheManager};
@@ -347,6 +362,7 @@ fn prefix_sim(specs: &[crate::workload::RequestSpec], caching: bool) -> PrefixSi
         prefill_b: 4,
         max_concurrency: 8,
         max_tokens_per_step: 1,
+        aging_steps,
     };
     let mut kv = KvCacheManager::new(KvCacheConfig {
         block_size: 16,
@@ -364,12 +380,29 @@ fn prefix_sim(specs: &[crate::workload::RequestSpec], caching: bool) -> PrefixSi
                     max_new_tokens: s.max_new_tokens,
                     ..Default::default()
                 },
+                priority: s.priority,
             })
         })
         .collect();
     let mut running: Vec<Sequence> = Vec::new();
     let mut out = PrefixSimOut::default();
     loop {
+        // Mid-flight aborts scheduled for this step (Engine::abort's two
+        // phases: waiting = no KV registered yet; running = release
+        // blocks AND prefix-cache attachment refs).
+        for &(id, at) in aborts {
+            if at != out.steps {
+                continue;
+            }
+            if let Some(i) = waiting.iter().position(|s| s.id == id) {
+                waiting.remove(i);
+                out.aborted += 1;
+            } else if let Some(i) = running.iter().position(|s| s.id == id) {
+                let s = running.remove(i);
+                kv.release(s.id).expect("running sequence is registered");
+                out.aborted += 1;
+            }
+        }
         // Engine-identical batch admission: the SAME `BatchAdmission`
         // rule `Engine::step` uses, so the certificate can never drift
         // from the engine's real admission logic.
@@ -380,6 +413,7 @@ fn prefix_sim(specs: &[crate::workload::RequestSpec], caching: bool) -> PrefixSi
             &running,
             |s, burst| admission.admit(&kv, &s.prompt, burst),
             |s| kv.cached_prefix_tokens(&s.prompt),
+            out.steps as u64,
         );
         match p {
             Plan::Prefill { seq_ids, .. } => {
@@ -447,9 +481,11 @@ fn prefix_sim(specs: &[crate::workload::RequestSpec], caching: bool) -> PrefixSi
             break;
         }
     }
-    // Refcount balance: every resident block must be cache-held, and
-    // draining the cache must return the pool to pristine.
-    out.leaked = TOTAL_BLOCKS - kv.free_blocks() - kv.prefix_cached_blocks();
+    // Refcount balance: every resident block must be cache-held, every
+    // attachment ref must be detached, and draining the cache must
+    // return the pool to pristine.
+    out.leaked = kv.unaccounted_blocks();
+    out.dangling_refs = kv.prefix_attached_refs();
     kv.clear_prefix_cache();
     out.leaked += TOTAL_BLOCKS - kv.free_blocks();
     out
@@ -489,8 +525,8 @@ pub fn prefix_identity() -> Result<String> {
     gen.output_len = LengthDist::Uniform(4, 9);
     let specs = gen.generate(24);
 
-    let on = prefix_sim(&specs, true);
-    let off = prefix_sim(&specs, false);
+    let on = prefix_sim(&specs, true, 32, &[]);
+    let off = prefix_sim(&specs, false, 32, &[]);
 
     let coords_identical = on.first_token_step == off.first_token_step
         && on.steps == off.steps
@@ -569,6 +605,7 @@ pub fn prefix_identity() -> Result<String> {
                         max_new_tokens: s.max_new_tokens,
                         ..Default::default()
                     },
+                    priority: s.priority,
                 })?;
             }
             let mut done = e.run_to_completion()?;
@@ -587,6 +624,186 @@ pub fn prefix_identity() -> Result<String> {
         md.push_str(
             "\nEngine A/B: skipped (no artifacts; run `make artifacts` for \
              the end-to-end token identity)\n",
+        );
+    }
+    Ok(md)
+}
+
+/// `stream-identity` — the streaming front-end's exactness certificate
+/// (DESIGN.md §11): the handle API must not move a single Philox
+/// coordinate relative to the legacy batch path, and any abort schedule
+/// must leave the block allocator and the prefix-cache refcounts
+/// balanced.
+///
+/// Three layers, the first two always runnable (CPU-only):
+///
+/// 1. **Priority-machinery neutrality** — the same mixed-tau
+///    shared-prefix workload scheduled with aging disabled vs the
+///    default aging, all requests at `Normal` priority: step counts,
+///    prefill plans, and every first-token Philox step coordinate must
+///    be identical (the stable-sort FCFS-tiebreak argument, checked).
+/// 2. **Abort balance** — deterministic abort schedules covering the
+///    prefill-pending, mid-decode, and prefix-shared-tail phases: after
+///    the run, zero leaked blocks and zero dangling attachment refs.
+/// 3. **Engine A/B (when artifacts exist)** — the same workload through
+///    two real engines: one consumed via `run_to_completion`
+///    completions, one driven step-by-step with every token taken from
+///    the `RequestHandle` streams; concatenated streams must equal the
+///    batch outputs token-for-token.
+pub fn stream_identity() -> Result<String> {
+    use crate::workload::{LengthDist, SharedPrefix, WorkloadGen};
+
+    // Mixed-tau shared-prefix workload (the satellite's required shape).
+    let make_gen = || {
+        let mut gen = WorkloadGen::new(0x57E4, 1000.0, 2048);
+        gen.prefix_mode = Some(SharedPrefix {
+            num_prefixes: 2,
+            prefix_len: 32,
+            users: 4,
+            turn_len: LengthDist::Fixed(4),
+        });
+        gen.output_len = LengthDist::Uniform(4, 9);
+        gen.temperature_choices = vec![0.5, 1.0, 2.0];
+        gen
+    };
+    let specs = make_gen().generate(24);
+
+    // 1. Priority machinery must be a no-op at uniform Normal priority.
+    let plain = prefix_sim(&specs, true, 0, &[]);
+    let aged = prefix_sim(&specs, true, 32, &[]);
+    let neutral = plain.first_token_step == aged.first_token_step
+        && plain.steps == aged.steps
+        && plain.prefill_plans == aged.prefill_plans;
+
+    let verdict = |ok: bool| if ok { "IDENTICAL" } else { "MISMATCH" };
+    let mut md = format!(
+        "## stream-identity — streaming front-end exactness certificate \
+         ({} requests, mixed tau, shared prefixes)\n\n\
+         ### Priority/aging neutrality at uniform priority\n\n\
+         | check | aging off | aging 32 | verdict |\n|---|---|---|---|\n\
+         | engine steps | {} | {} | {} |\n\
+         | prefill batches | {} | {} | {} |\n\
+         | first-token Philox step coordinates | {} requests | {} requests | {} |\n",
+        specs.len(),
+        plain.steps,
+        aged.steps,
+        verdict(plain.steps == aged.steps),
+        plain.prefill_plans,
+        aged.prefill_plans,
+        verdict(plain.prefill_plans == aged.prefill_plans),
+        plain.first_token_step.len(),
+        aged.first_token_step.len(),
+        verdict(plain.first_token_step == aged.first_token_step),
+    );
+    if !neutral {
+        md.push_str(
+            "\n**MISMATCH — priority scheduling moved Philox coordinates \
+             under uniform priority.**\n",
+        );
+        return Ok(md);
+    }
+
+    // 2. Abort-balance sweep over the lifecycle phases.
+    let schedules: [(&str, Vec<(u64, u32)>); 4] = [
+        // Step 0: nothing planned yet — these die in the waiting queue.
+        ("prefill-pending", vec![(5, 0), (11, 0)]),
+        // A few steps in: victims are mid-decode with live KV.
+        ("mid-decode", vec![(0, 3), (6, 5), (13, 9)]),
+        // Late multi-turn requests share cached prefix chains — aborting
+        // them must drop attachment refs without touching siblings.
+        ("prefix-shared tail", vec![(20, 12), (21, 12), (22, 14)]),
+        // A burst across all phases at once.
+        (
+            "burst (every 3rd request)",
+            (0..24u64).step_by(3).map(|i| (i, (i % 11) as u32)).collect(),
+        ),
+    ];
+    md.push_str(
+        "\n### Abort balance (zero-leak release of KV blocks and \
+         prefix-cache refs)\n\n\
+         | schedule | scheduled | aborted mid-flight | leaked blocks | \
+         dangling refs | verdict |\n|---|---|---|---|---|---|\n",
+    );
+    let mut aborts_ok = true;
+    for (name, sched) in &schedules {
+        let out = prefix_sim(&specs, true, 32, sched);
+        let ok = out.leaked == 0 && out.dangling_refs == 0;
+        aborts_ok &= ok;
+        md.push_str(&format!(
+            "| {name} | {} | {} | {} | {} | {} |\n",
+            sched.len(),
+            out.aborted,
+            out.leaked,
+            out.dangling_refs,
+            if ok { "BALANCED" } else { "MISMATCH: leak" },
+        ));
+    }
+    if !aborts_ok {
+        md.push_str("\n**MISMATCH — an abort schedule leaked blocks or refs.**\n");
+        return Ok(md);
+    }
+
+    // 3. Engine A/B through real artifacts: handle streams vs batch.
+    let dir = std::path::PathBuf::from("artifacts");
+    if dir.join("manifest.json").exists() {
+        let engine_specs = |e: &Engine| {
+            let vocab = e.runtime().manifest().model.vocab;
+            let mut g = make_gen();
+            g.vocab = vocab;
+            g.generate(12)
+        };
+        let request = |s: &crate::workload::RequestSpec| Request {
+            id: s.id,
+            prompt: s.prompt.clone(),
+            params: SamplingParams {
+                temperature: s.temperature,
+                max_new_tokens: s.max_new_tokens,
+                ..Default::default()
+            },
+            priority: s.priority,
+        };
+        // Batch path: completions only.
+        let mut batch = Engine::new(&dir, EngineConfig::default())?;
+        for s in &engine_specs(&batch) {
+            batch.submit(request(s))?;
+        }
+        let mut done = batch.run_to_completion()?;
+        done.sort_by_key(|c| c.id);
+        let batch_tokens: Vec<(u64, Vec<i32>)> =
+            done.into_iter().map(|c| (c.id, c.tokens)).collect();
+        // Streaming path: every token consumed from handle events.
+        let mut stream = Engine::new(&dir, EngineConfig::default())?;
+        let mut handles = Vec::new();
+        for s in &engine_specs(&stream) {
+            handles.push(stream.submit(request(s))?);
+        }
+        while stream.pending() > 0 {
+            if stream.step()?.is_empty() {
+                // No-progress backstop (same as run_to_completion's): a
+                // never-admittable head must become a Rejected terminal
+                // event, not an infinite Plan::Idle spin.  No-op while
+                // work is still running.
+                let _ = stream.reject_unschedulable();
+            }
+        }
+        let mut stream_tokens: Vec<(u64, Vec<i32>)> = handles
+            .iter()
+            .map(|h| {
+                let toks = h.drain().iter().filter_map(|ev| ev.token).collect();
+                (h.id(), toks)
+            })
+            .collect();
+        stream_tokens.sort_by_key(|(id, _)| *id);
+        let same = batch_tokens == stream_tokens;
+        md.push_str(&format!(
+            "\nEngine A/B (real artifacts, 12 mixed-tau shared-prefix \
+             requests): handle-stream vs batch tokens {}\n",
+            verdict(same)
+        ));
+    } else {
+        md.push_str(
+            "\nEngine A/B: skipped (no artifacts; run `make artifacts` for \
+             the end-to-end stream/batch token identity)\n",
         );
     }
     Ok(md)
@@ -634,6 +851,7 @@ pub fn e2e_quality(artifacts_dir: Option<&std::path::Path>) -> Result<String> {
                     max_new_tokens: s.max_new_tokens,
                     ..Default::default()
                 },
+                priority: s.priority,
             })?;
         }
         let mut done = engine.run_to_completion()?;
@@ -688,6 +906,19 @@ mod tests {
         let md = super::specdec_chisq().unwrap();
         assert!(!md.contains("REJECTED"), "{md}");
         assert_eq!(md.matches("exact (not rejected)").count(), 3);
+    }
+
+    #[test]
+    fn stream_identity_is_neutral_and_abort_balanced() {
+        let md = super::stream_identity().unwrap();
+        assert!(!md.contains("MISMATCH"), "{md}");
+        // Neutrality table: steps, prefill batches, first-token coords.
+        assert!(md.matches("IDENTICAL").count() >= 3, "{md}");
+        // Every abort schedule balances, and aborts actually happened —
+        // the step-0 schedule cancels its 2 victims while they wait, so
+        // its mid-flight abort count is exactly 2 by construction.
+        assert_eq!(md.matches("BALANCED").count(), 4, "{md}");
+        assert!(md.contains("| prefill-pending | 2 | 2 | 0 | 0 |"), "{md}");
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //! serve` with `--request-rate=B` Poisson arrivals and AIME-style
 //! long-generation prompts).
 
+use crate::coordinator::request::Priority;
 use crate::sampling::philox::{self, Key};
 
 /// One synthetic request: arrival offset + prompt + output budget.
@@ -14,6 +15,9 @@ pub struct RequestSpec {
     pub prompt: Vec<i32>,
     pub max_new_tokens: usize,
     pub temperature: f32,
+    /// Scheduling priority (uniform `Normal` unless
+    /// [`WorkloadGen::priority_choices`] is set).
+    pub priority: Priority,
 }
 
 /// Length distribution of prompts/outputs.
@@ -79,6 +83,10 @@ pub struct WorkloadGen {
     /// set instead of using `temperature` — models a mixed client
     /// population (the workload the per-row tau ABI exists for).
     pub temperature_choices: Vec<f32>,
+    /// Non-empty: each request draws its scheduling priority uniformly
+    /// from this set (stream 15) — models mixed-SLO traffic for the
+    /// priority scheduler.  Empty: uniform `Normal` (identity-neutral).
+    pub priority_choices: Vec<Priority>,
     /// `Some`: prompts follow the shared-prefix / multi-turn shape
     /// instead of drawing `prompt_len` of i.i.d. tokens (arrivals, output
     /// budgets, and temperatures keep their usual streams, so flipping
@@ -96,6 +104,7 @@ impl WorkloadGen {
             vocab,
             temperature: 1.0,
             temperature_choices: Vec::new(),
+            priority_choices: Vec::new(),
             prefix_mode: None,
         }
     }
@@ -129,39 +138,77 @@ impl WorkloadGen {
         prompt
     }
 
+    /// Request `i` of the arrival process; `t` carries the running
+    /// arrival clock (the exponential gaps accumulate across calls).
+    fn spec_at(&self, i: u32, t: &mut f64) -> RequestSpec {
+        // Exponential gap: -ln(u)/rate.
+        let gap = -(self.u(10, i, 0) as f64).ln() / self.rate;
+        *t += gap;
+        let olen = self.output_len.draw(self.u(12, i, 0)).max(1);
+        let prompt: Vec<i32> = match &self.prefix_mode {
+            Some(sp) => self.shared_prefix_prompt(sp, i),
+            None => {
+                let plen = self.prompt_len.draw(self.u(11, i, 0)).max(1);
+                (0..plen as u32).map(|j| self.token(13, i, j)).collect()
+            }
+        };
+        let temperature = if self.temperature_choices.is_empty() {
+            self.temperature
+        } else {
+            let n = self.temperature_choices.len();
+            let j = ((self.u(14, i, 0) * n as f32) as usize).min(n - 1);
+            self.temperature_choices[j]
+        };
+        let priority = if self.priority_choices.is_empty() {
+            Priority::default()
+        } else {
+            let n = self.priority_choices.len();
+            let j = ((self.u(15, i, 0) * n as f32) as usize).min(n - 1);
+            self.priority_choices[j]
+        };
+        RequestSpec {
+            id: i as u64,
+            arrival_s: *t,
+            prompt,
+            max_new_tokens: olen,
+            temperature,
+            priority,
+        }
+    }
+
     /// Generate `n` requests with exponential inter-arrival gaps
     /// (a Poisson process at `self.rate`).
     pub fn generate(&self, n: usize) -> Vec<RequestSpec> {
-        let mut out = Vec::with_capacity(n);
         let mut t = 0.0f64;
-        for i in 0..n as u32 {
-            // Exponential gap: -ln(u)/rate.
-            let gap = -(self.u(10, i, 0) as f64).ln() / self.rate;
-            t += gap;
-            let olen = self.output_len.draw(self.u(12, i, 0)).max(1);
-            let prompt: Vec<i32> = match &self.prefix_mode {
-                Some(sp) => self.shared_prefix_prompt(sp, i),
-                None => {
-                    let plen = self.prompt_len.draw(self.u(11, i, 0)).max(1);
-                    (0..plen as u32).map(|j| self.token(13, i, j)).collect()
-                }
-            };
-            let temperature = if self.temperature_choices.is_empty() {
-                self.temperature
-            } else {
-                let n = self.temperature_choices.len();
-                let j = ((self.u(14, i, 0) * n as f32) as usize).min(n - 1);
-                self.temperature_choices[j]
-            };
-            out.push(RequestSpec {
-                id: i as u64,
-                arrival_s: t,
-                prompt,
-                max_new_tokens: olen,
-                temperature,
-            });
-        }
-        out
+        (0..n as u32).map(|i| self.spec_at(i, &mut t)).collect()
+    }
+
+    /// Endless open-loop arrival stream — the driver for a continuously
+    /// streaming `serve` loop.  Deterministic given the seed, and
+    /// prefix-stable: `arrivals().take(n)` equals `generate(n)` exactly,
+    /// so a streaming run replays the same traffic as a batch run.
+    pub fn arrivals(&self) -> Arrivals<'_> {
+        Arrivals { workload: self, i: 0, t: 0.0 }
+    }
+}
+
+/// Iterator over the open-loop Poisson arrival process (see
+/// [`WorkloadGen::arrivals`]); never terminates — cap with `take` or by
+/// arrival time.
+#[derive(Clone, Debug)]
+pub struct Arrivals<'a> {
+    workload: &'a WorkloadGen,
+    i: u32,
+    t: f64,
+}
+
+impl Iterator for Arrivals<'_> {
+    type Item = RequestSpec;
+
+    fn next(&mut self) -> Option<RequestSpec> {
+        let s = self.workload.spec_at(self.i, &mut self.t);
+        self.i = self.i.wrapping_add(1);
+        Some(s)
     }
 }
 
@@ -277,6 +324,51 @@ mod tests {
                 reqs.iter().any(|r| r.temperature == *want),
                 "temperature {want} never drawn"
             );
+        }
+    }
+
+    #[test]
+    fn arrivals_iterator_is_prefix_stable_with_generate() {
+        let mut g = WorkloadGen::new(21, 6.0, 512);
+        g.temperature_choices = vec![0.5, 1.0];
+        g.priority_choices =
+            vec![Priority::Low, Priority::Normal, Priority::High];
+        let batch = g.generate(40);
+        let streamed: Vec<RequestSpec> = g.arrivals().take(40).collect();
+        assert_eq!(batch.len(), streamed.len());
+        for (a, b) in batch.iter().zip(&streamed) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.arrival_s, b.arrival_s);
+            assert_eq!(a.prompt, b.prompt);
+            assert_eq!(a.max_new_tokens, b.max_new_tokens);
+            assert_eq!(a.temperature, b.temperature);
+            assert_eq!(a.priority, b.priority);
+        }
+        // The stream keeps going past any batch horizon.
+        assert!(g.arrivals().nth(100).is_some());
+    }
+
+    #[test]
+    fn priority_choices_mix_the_population_independently() {
+        let mut g = WorkloadGen::new(17, 5.0, 128);
+        // Default: uniform Normal.
+        assert!(g.generate(20).iter().all(|r| r.priority == Priority::Normal));
+        g.priority_choices = vec![Priority::Low, Priority::High];
+        let reqs = g.generate(80);
+        for want in &g.priority_choices {
+            assert!(
+                reqs.iter().any(|r| r.priority == *want),
+                "priority {want} never drawn"
+            );
+        }
+        // Stream 15 is its own draw: flipping priorities on must not
+        // perturb arrivals, prompts, budgets, or temperatures.
+        let base = WorkloadGen::new(17, 5.0, 128).generate(80);
+        for (a, b) in base.iter().zip(&reqs) {
+            assert_eq!(a.arrival_s, b.arrival_s);
+            assert_eq!(a.prompt, b.prompt);
+            assert_eq!(a.max_new_tokens, b.max_new_tokens);
+            assert_eq!(a.temperature, b.temperature);
         }
     }
 

@@ -4,7 +4,7 @@
 //! Requires `make artifacts`; tests no-op (pass) with a note otherwise.
 
 use flashsampling::coordinator::{
-    Engine, EngineConfig, FinishReason, Request, SamplingParams,
+    Engine, EngineConfig, FinishReason, Priority, Request, SamplingParams,
 };
 use flashsampling::sampling::SamplerSpec;
 use flashsampling::workload::WorkloadGen;
@@ -24,11 +24,11 @@ fn engine(cfg: EngineConfig) -> Option<Engine> {
 }
 
 fn simple_request(id: u64, prompt: Vec<i32>, max_new: usize) -> Request {
-    Request {
+    Request::new(
         id,
         prompt,
-        params: SamplingParams { max_new_tokens: max_new, ..Default::default() },
-    }
+        SamplingParams { max_new_tokens: max_new, ..Default::default() },
+    )
 }
 
 #[test]
@@ -115,6 +115,7 @@ fn stop_token_stops_generation() {
         id: 1,
         prompt: vec![4, 2],
         params: SamplingParams { max_new_tokens: 4, ..Default::default() },
+        priority: Priority::default(),
     })
     .unwrap();
     let done = e.run_to_completion().unwrap();
@@ -128,6 +129,7 @@ fn stop_token_stops_generation() {
             max_new_tokens: 4,
             ..SamplingParams::with_eos(first)
         },
+        priority: Priority::default(),
     })
     .unwrap();
     let done2 = e2.run_to_completion().unwrap();
@@ -153,6 +155,7 @@ fn spec_decode_engine_path_completes_deterministically() {
                 id: i,
                 prompt: vec![p, 3, p, 3, p],
                 params: SamplingParams { max_new_tokens: 9, ..Default::default() },
+                priority: Priority::default(),
             })
             .unwrap();
         }
@@ -220,6 +223,7 @@ fn mixed_temperatures_complete_in_one_engine() {
                 max_new_tokens: 3,
                 ..Default::default()
             },
+            priority: Priority::default(),
         })
         .unwrap();
     }
@@ -246,6 +250,7 @@ fn mixed_temperatures_fill_one_decode_bucket() {
                 max_new_tokens: 6,
                 ..Default::default()
             },
+            priority: Priority::default(),
         })
         .unwrap();
     }
@@ -275,6 +280,7 @@ fn prefill_applies_per_row_temperature() {
                     max_new_tokens: 1,
                     ..Default::default()
                 },
+                priority: Priority::default(),
             })
             .unwrap();
         }
@@ -302,6 +308,7 @@ fn unsupported_params_rejected_at_submit() {
             id: 1,
             prompt: vec![1, 2],
             params: SamplingParams { top_k: Some(8), ..Default::default() },
+            priority: Priority::default(),
         })
         .unwrap_err();
     assert!(err.to_string().contains("top_k"), "{err}");
@@ -314,6 +321,7 @@ fn unsupported_params_rejected_at_submit() {
             stop_tokens: vec![0],
             ..Default::default()
         },
+        priority: Priority::default(),
     })
     .unwrap();
 }

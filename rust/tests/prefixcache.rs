@@ -41,13 +41,15 @@ fn shared_prefix_requests(vocab: usize, n: usize) -> Vec<Request> {
     g.output_len = LengthDist::Uniform(3, 7);
     g.generate(n)
         .into_iter()
-        .map(|s| Request {
-            id: s.id,
-            prompt: s.prompt,
-            params: SamplingParams {
-                max_new_tokens: s.max_new_tokens,
-                ..Default::default()
-            },
+        .map(|s| {
+            Request::new(
+                s.id,
+                s.prompt,
+                SamplingParams {
+                    max_new_tokens: s.max_new_tokens,
+                    ..Default::default()
+                },
+            )
         })
         .collect()
 }
@@ -111,14 +113,11 @@ fn repeated_identical_prompts_replay_exactly_and_hit() {
         })?;
         let mut outs = Vec::new();
         for id in 0..3u64 {
-            e.submit(Request {
+            e.submit(Request::new(
                 id,
-                prompt: prompt.clone(),
-                params: SamplingParams {
-                    max_new_tokens: 5,
-                    ..Default::default()
-                },
-            })
+                prompt.clone(),
+                SamplingParams { max_new_tokens: 5, ..Default::default() },
+            ))
             .unwrap();
             let done = e.run_to_completion().unwrap();
             assert_eq!(done.len(), 1);

@@ -1,0 +1,518 @@
+//! Streaming serving front-end (DESIGN.md §11): handle events, typed
+//! errors, mid-flight abort accounting, priority scheduling, and the
+//! stream/batch identity guarantee.
+//!
+//! The abort-balance property test is CPU-only and always runs: it
+//! drives the REAL scheduler + KV manager (the same `plan` /
+//! `BatchAdmission` / `register_with_prefix` / `extend`+`truncate`
+//! machinery the engine uses) through randomized workloads and abort
+//! schedules — prefill-pending, mid-decode, spec-decode bursts, and
+//! prefix-shared tails — and asserts the allocator and the radix-tree
+//! refcounts balance to zero leaks.  The engine-level suites are
+//! artifact-gated like the other integration tests.
+
+use flashsampling::coordinator::scheduler::{plan, Plan, SchedulerConfig};
+use flashsampling::coordinator::{
+    Engine, EngineConfig, EngineError, FinishReason, Priority, Request,
+    RequestHandle, RequestOutput, SamplingParams, Sequence,
+};
+use flashsampling::kvcache::{KvCacheConfig, KvCacheManager};
+use flashsampling::prefixcache::BlockKv;
+use flashsampling::sampling::SamplerSpec;
+use flashsampling::testutil;
+use flashsampling::workload::{LengthDist, SharedPrefix, WorkloadGen};
+
+// ---------------------------------------------------------------------
+// CPU-only: abort-balance property test over the real scheduler + KV
+// manager (no artifacts needed).
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_any_abort_schedule_leaves_the_pool_balanced() {
+    testutil::cases(48, 0xAB07, |g| {
+        // Prompt pool with shared prefixes (2 "system prompts" of 8
+        // tokens = 2 full blocks at block_size 4) so aborts hit
+        // prefix-shared tails and attached chains.
+        let prompts: Vec<Vec<i32>> = (0..6)
+            .map(|p| {
+                let sys = (p % 2) as i32 * 1000;
+                let len = 9 + 2 * p; // 9..19 tokens, > 2 blocks
+                (0..len as i32)
+                    .map(|i| if i < 8 { sys + i } else { sys + 100 * p as i32 + i })
+                    .collect()
+            })
+            .collect();
+        const TOTAL: usize = 96;
+        let mut kv = KvCacheManager::new(KvCacheConfig {
+            block_size: 4,
+            num_blocks: TOTAL,
+            prefix_caching: true,
+        });
+        let spec_burst = g.usize_in(0, 4); // 0 = plain decode
+        let sched = SchedulerConfig {
+            decode_buckets: vec![1, 2, 4, 8],
+            prefill_t_buckets: vec![16, 64],
+            prefill_b: 4,
+            max_concurrency: 8,
+            max_tokens_per_step: spec_burst + 1,
+            aging_steps: g.usize_in(0, 16) as u64,
+        };
+        let mut waiting: Vec<Sequence> = (0..g.usize_in(4, 14) as u64)
+            .map(|i| {
+                let mut r = Request::new(
+                    i,
+                    g.choose(&prompts).clone(),
+                    SamplingParams {
+                        max_new_tokens: g.usize_in(1, 10),
+                        ..Default::default()
+                    },
+                );
+                r.priority =
+                    *g.choose(&[Priority::Low, Priority::Normal, Priority::High]);
+                Sequence::new(r)
+            })
+            .collect();
+        let mut running: Vec<Sequence> = Vec::new();
+        let mut step = 0u64;
+        loop {
+            step += 1;
+            assert!(step < 10_000, "sim stalled");
+            // Random mid-flight abort: prefill-pending (waiting, no KV
+            // yet) or mid-decode / prefix-shared (running, full release).
+            if g.bool(0.25) && !(waiting.is_empty() && running.is_empty()) {
+                if !waiting.is_empty() && (running.is_empty() || g.bool(0.5)) {
+                    let idx = g.usize_in(0, waiting.len() - 1);
+                    waiting.remove(idx);
+                } else if !running.is_empty() {
+                    let idx = g.usize_in(0, running.len() - 1);
+                    let s = running.remove(idx);
+                    kv.release(s.id).unwrap();
+                }
+            }
+            let mut admission = kv.batch_admission();
+            let p = plan(
+                &sched,
+                &waiting,
+                &running,
+                |s, burst| admission.admit(&kv, &s.prompt, burst),
+                |s| kv.cached_prefix_tokens(&s.prompt),
+                step,
+            );
+            match p {
+                Plan::Prefill { seq_ids, .. } => {
+                    // Mirror Engine::do_prefill: register+attach all rows,
+                    // then publish, then first token + append/release.
+                    // Engine backstop mirrored too: if the pool raced
+                    // below the plan's estimate (shared evictable
+                    // headroom), the victim re-queues at the front
+                    // instead of failing.
+                    let mut batch: Vec<Sequence> = Vec::new();
+                    let mut requeue: Vec<Sequence> = Vec::new();
+                    for id in &seq_ids {
+                        let idx = waiting
+                            .iter()
+                            .position(|s| s.id == *id)
+                            .expect("planned sequence vanished");
+                        let s = waiting.remove(idx);
+                        match kv.register_with_prefix(s.id, &s.prompt) {
+                            Ok(_) => batch.push(s),
+                            Err(_) => requeue.push(s),
+                        }
+                    }
+                    let all_failed = batch.is_empty() && !requeue.is_empty();
+                    for s in requeue.into_iter().rev() {
+                        waiting.insert(0, s);
+                    }
+                    if all_failed {
+                        // No registration landed: drop the head so the
+                        // randomized sim always makes progress (a pure
+                        // reject — nothing was allocated, nothing leaks).
+                        waiting.remove(0);
+                    }
+                    for mut s in batch {
+                        kv.insert_prefix(s.id, &s.prompt, |_| BlockKv::default())
+                            .unwrap();
+                        s.generated.push(0);
+                        s.state =
+                            flashsampling::coordinator::request::SeqState::Running;
+                        if s.generated.len() >= s.params.max_new_tokens
+                            || !kv.append_token(s.id).unwrap()
+                        {
+                            kv.release(s.id).unwrap(); // finished or preempted
+                        } else {
+                            running.push(s);
+                        }
+                    }
+                }
+                Plan::Decode { seq_ids, .. } => {
+                    let mut finished: Vec<usize> = Vec::new();
+                    for id in &seq_ids {
+                        let ri = running
+                            .iter()
+                            .position(|s| s.id == *id)
+                            .expect("planned sequence vanished");
+                        let s = &mut running[ri];
+                        // Spec-decode reservation protocol: optimistic
+                        // extend, emit 1..=granted+1, truncate or append
+                        // (exactly Engine::do_spec_decode's rollback).
+                        let ctx_before = s.prompt.len() + s.generated.len();
+                        let granted = kv.extend(s.id, spec_burst).unwrap();
+                        let budget_rem =
+                            s.params.max_new_tokens - s.generated.len();
+                        let emitted =
+                            g.usize_in(1, granted + 1).min(budget_rem);
+                        for _ in 0..emitted {
+                            s.generated.push(0);
+                        }
+                        let final_len = ctx_before + emitted;
+                        let reserved_len = ctx_before + granted;
+                        let mut fin =
+                            s.generated.len() >= s.params.max_new_tokens;
+                        if final_len < reserved_len {
+                            kv.truncate(s.id, final_len).unwrap();
+                        } else if final_len > reserved_len
+                            && !fin
+                            && !kv.append_token(s.id).unwrap()
+                        {
+                            fin = true; // preempted
+                        }
+                        if fin {
+                            finished.push(ri);
+                        }
+                    }
+                    finished.sort_unstable_by(|a, b| b.cmp(a));
+                    for ri in finished {
+                        let s = running.remove(ri);
+                        kv.release(s.id).unwrap();
+                    }
+                }
+                Plan::Idle => {
+                    // Never-admittable head => reject (run_to_completion's
+                    // backstop); Idle with nothing waiting => done.
+                    if waiting.is_empty() {
+                        break;
+                    }
+                    waiting.remove(0);
+                }
+            }
+            assert!(
+                kv.free_blocks() + kv.prefix_cached_blocks() <= TOTAL,
+                "over-committed pool"
+            );
+            if waiting.is_empty() && running.is_empty() {
+                break;
+            }
+        }
+        // Quiescent balance: zero leaked blocks, zero dangling refs, and
+        // draining the cache returns the pool to pristine.
+        assert_eq!(kv.unaccounted_blocks(), 0, "leaked blocks after aborts");
+        assert_eq!(kv.prefix_attached_refs(), 0, "dangling radix refs");
+        kv.clear_prefix_cache();
+        assert_eq!(kv.free_blocks(), TOTAL, "cache held phantom refs");
+    });
+}
+
+// ---------------------------------------------------------------------
+// Artifact-gated engine suites.
+// ---------------------------------------------------------------------
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("NOTE: artifacts/ missing; run `make artifacts`");
+        None
+    }
+}
+
+fn engine(cfg: EngineConfig) -> Option<Engine> {
+    artifacts_dir().map(|d| Engine::new(d, cfg).unwrap())
+}
+
+/// Mixed-tau shared-prefix requests (the identity workload).
+fn mixed_tau_shared_prefix(vocab: usize, n: usize) -> Vec<Request> {
+    let mut g = WorkloadGen::new(0x51D3, 1000.0, vocab);
+    g.prefix_mode = Some(SharedPrefix {
+        num_prefixes: 2,
+        prefix_len: 32,
+        users: 4,
+        turn_len: LengthDist::Fixed(4),
+    });
+    g.output_len = LengthDist::Uniform(3, 8);
+    g.temperature_choices = vec![0.5, 1.0, 2.0];
+    g.generate(n)
+        .into_iter()
+        .map(|s| {
+            Request::new(
+                s.id,
+                s.prompt,
+                SamplingParams {
+                    temperature: s.temperature,
+                    max_new_tokens: s.max_new_tokens,
+                    ..Default::default()
+                },
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn handle_streams_equal_batch_output_token_for_token() {
+    // THE identity guarantee: the handle API's concatenated streams must
+    // equal the legacy batch path's completions, token for token, on a
+    // mixed-tau shared-prefix workload (same seed => same Philox
+    // coordinates).
+    let Some(mut batch) = engine(EngineConfig::default()) else { return };
+    let vocab = batch.runtime().manifest().model.vocab;
+    for r in mixed_tau_shared_prefix(vocab, 16) {
+        batch.submit(r).unwrap();
+    }
+    let mut done = batch.run_to_completion().unwrap();
+    done.sort_by_key(|c| c.id);
+    assert_eq!(done.len(), 16);
+
+    let mut stream = engine(EngineConfig::default()).unwrap();
+    let handles: Vec<RequestHandle> = mixed_tau_shared_prefix(vocab, 16)
+        .into_iter()
+        .map(|r| stream.submit(r).unwrap())
+        .collect();
+    while stream.pending() > 0 {
+        if stream.step().unwrap().is_empty() {
+            // Same no-progress backstop as run_to_completion: a stuck
+            // head becomes a Rejected terminal event instead of a hang.
+            let _ = stream.reject_unschedulable();
+        }
+    }
+    let mut streamed: Vec<(u64, Vec<i32>)> = handles
+        .iter()
+        .map(|h| {
+            let evs = h.drain();
+            // Terminal event is last and carries the finish reason.
+            assert!(evs.last().unwrap().finish.is_some());
+            let toks: Vec<i32> = evs.iter().filter_map(|e| e.token).collect();
+            // The handle's completion matches its own stream.
+            assert_eq!(h.completion().unwrap().tokens, toks);
+            (h.id(), toks)
+        })
+        .collect();
+    streamed.sort_by_key(|(id, _)| *id);
+    let batch_tokens: Vec<(u64, Vec<i32>)> =
+        done.into_iter().map(|c| (c.id, c.tokens)).collect();
+    assert_eq!(
+        batch_tokens, streamed,
+        "handle streams diverged from the batch path"
+    );
+}
+
+#[test]
+fn per_token_events_carry_step_clock_timing() {
+    let Some(mut e) = engine(EngineConfig::default()) else { return };
+    let h = e
+        .submit(Request::new(
+            1,
+            vec![3, 14, 15, 9],
+            SamplingParams { max_new_tokens: 5, ..Default::default() },
+        ))
+        .unwrap();
+    assert!(!h.is_finished());
+    e.run_to_completion().unwrap();
+    assert!(h.is_finished());
+    let evs: Vec<RequestOutput> = h.drain();
+    assert_eq!(evs.len(), 6); // 5 tokens + terminal
+    for (i, ev) in evs[..5].iter().enumerate() {
+        assert_eq!(ev.request_id, 1);
+        assert_eq!(ev.index, i);
+        assert_eq!(ev.text_len, i + 1);
+        assert!(ev.token.is_some());
+        assert!(ev.finish.is_none());
+        assert_eq!(ev.ttft_steps.is_some(), i == 0, "ttft only on first");
+        assert_eq!(ev.inter_token_steps.is_some(), i > 0);
+        assert!(ev.step >= 1, "clock ticks before planning");
+    }
+    assert!(evs[0].ttft_steps.unwrap() >= 1);
+    // Steps are monotone over one request's stream.
+    for w in evs[..5].windows(2) {
+        assert!(w[1].step > w[0].step, "one token per ordinary decode step");
+    }
+    let terminal = &evs[5];
+    assert_eq!(terminal.token, None);
+    assert_eq!(terminal.finish, Some(FinishReason::MaxTokens));
+    assert_eq!(terminal.text_len, 5);
+    assert_eq!(h.finish_reason(), Some(FinishReason::MaxTokens));
+    assert_eq!(h.completion().unwrap().tokens.len(), 5);
+    assert!(e.clock() >= 5);
+}
+
+#[test]
+fn typed_errors_at_the_public_boundary() {
+    let Some(mut e) = engine(EngineConfig::default()) else { return };
+    let ok = |id: u64| {
+        Request::new(
+            id,
+            vec![1, 2, 3],
+            SamplingParams { max_new_tokens: 2, ..Default::default() },
+        )
+    };
+    // Duplicate live id is a typed, pre-scheduler error.
+    e.submit(ok(1)).unwrap();
+    assert!(matches!(
+        e.submit(ok(1)),
+        Err(EngineError::DuplicateRequestId { id: 1 })
+    ));
+    // Unsupported params.
+    let mut bad = ok(2);
+    bad.params.top_p = Some(0.9);
+    assert!(matches!(
+        e.submit(bad),
+        Err(EngineError::UnsupportedParams { id: 2, .. })
+    ));
+    // Admission-impossible prompts.
+    assert!(matches!(
+        e.submit(Request::new(3, vec![], Default::default())),
+        Err(EngineError::AdmissionRejected { id: 3, .. })
+    ));
+    assert!(matches!(
+        e.submit(Request::new(4, vec![1; 4096], Default::default())),
+        Err(EngineError::AdmissionRejected { id: 4, .. })
+    ));
+    // Unknown abort target.
+    assert!(matches!(
+        e.abort(99),
+        Err(EngineError::UnknownRequest { id: 99 })
+    ));
+    // Failed submits left no stream behind: finishing request 1 frees its
+    // id for reuse.
+    e.run_to_completion().unwrap();
+    e.submit(ok(1)).unwrap();
+    e.run_to_completion().unwrap();
+}
+
+#[test]
+fn abort_releases_kv_and_prefix_refs_mid_flight() {
+    let Some(mut e) = engine(EngineConfig::default()) else { return };
+    let vocab = e.runtime().manifest().model.vocab;
+    let mut handles: Vec<RequestHandle> = Vec::new();
+    for mut r in mixed_tau_shared_prefix(vocab, 8) {
+        r.params.max_new_tokens = 12; // long enough to abort mid-decode
+        handles.push(e.submit(r).unwrap());
+    }
+    // One prefill step: some requests now run (their handles have a
+    // token), the rest still wait.
+    e.step().unwrap();
+    let mut running_events: Vec<(u64, usize)> = Vec::new(); // (id, tokens so far)
+    let mut waiting_ids: Vec<u64> = Vec::new();
+    for h in &handles {
+        let n = h.drain().iter().filter(|ev| ev.token.is_some()).count();
+        if n > 0 {
+            running_events.push((h.id(), n));
+        } else {
+            waiting_ids.push(h.id());
+        }
+    }
+    assert!(!running_events.is_empty(), "prefill produced no tokens");
+    assert!(!waiting_ids.is_empty(), "everything prefilled at once");
+
+    // Abort one prefill-pending request: no KV was registered.
+    let w = waiting_ids[0];
+    let c = e.abort(w).unwrap();
+    assert_eq!(c.finish, FinishReason::Aborted);
+    assert!(c.tokens.is_empty());
+
+    // Decode a couple of steps, then abort one running request mid-decode.
+    e.step().unwrap();
+    e.step().unwrap();
+    let r = running_events[0].0;
+    let c = e.abort(r).unwrap();
+    assert_eq!(c.finish, FinishReason::Aborted);
+    assert!(!c.tokens.is_empty(), "mid-decode abort keeps partial tokens");
+    // Double-abort is a typed error.
+    assert!(matches!(e.abort(r), Err(EngineError::UnknownRequest { .. })));
+
+    // Aborted handles got their terminal events.
+    for h in &handles {
+        if h.id() == w || h.id() == r {
+            assert_eq!(h.finish_reason(), Some(FinishReason::Aborted));
+            let evs = h.drain();
+            assert_eq!(evs.last().unwrap().finish, Some(FinishReason::Aborted));
+        }
+    }
+
+    // Everyone else still completes, and the pool balances to zero leaks
+    // (all resident blocks are prefix-cache-held).
+    let done = e.run_to_completion().unwrap();
+    assert_eq!(done.len(), 6);
+    assert_eq!(e.pending(), 0);
+    assert_eq!(e.kv_unaccounted_blocks(), 0, "abort leaked KV blocks");
+    assert_eq!(e.metrics.counters.get("aborted").copied(), Some(2));
+}
+
+#[test]
+fn abort_during_spec_decode_burst_stays_balanced() {
+    // Spec decode reserves draft blocks optimistically; aborting between
+    // steps must leave no reservation behind.
+    let Some(mut e) = engine(EngineConfig {
+        sampler: SamplerSpec::SpecDecode { k: 4, ngram: 3 },
+        ..Default::default()
+    }) else {
+        return;
+    };
+    for i in 0..4u64 {
+        let p = 2 + i as i32;
+        e.submit(Request::new(
+            i,
+            vec![p, 3, p, 3, p],
+            SamplingParams { max_new_tokens: 16, ..Default::default() },
+        ))
+        .unwrap();
+    }
+    e.step().unwrap(); // prefill
+    e.step().unwrap(); // one spec-decode burst
+    e.abort(1).unwrap();
+    e.abort(3).unwrap();
+    let done = e.run_to_completion().unwrap();
+    assert_eq!(done.len(), 2);
+    assert_eq!(e.kv_unaccounted_blocks(), 0, "spec abort leaked blocks");
+}
+
+#[test]
+fn high_priority_overtakes_under_load() {
+    // Concurrency 2 forces queueing: a high-priority request submitted
+    // LAST must reach its first token no later than the normal-priority
+    // requests queued ahead of it.
+    let Some(mut e) = engine(EngineConfig {
+        max_concurrency: 2,
+        ..Default::default()
+    }) else {
+        return;
+    };
+    let req = |id: u64, prio: Priority| {
+        let mut r = Request::new(
+            id,
+            vec![1 + id as i32; 4],
+            SamplingParams { max_new_tokens: 4, ..Default::default() },
+        );
+        r.priority = prio;
+        r
+    };
+    let mut handles = Vec::new();
+    for i in 0..4u64 {
+        handles.push(e.submit(req(i, Priority::Normal)).unwrap());
+    }
+    let high = e.submit(req(99, Priority::High)).unwrap();
+    e.run_to_completion().unwrap();
+    let first_step = |h: &RequestHandle| {
+        h.drain()
+            .iter()
+            .find(|ev| ev.token.is_some())
+            .expect("no tokens streamed")
+            .step
+    };
+    let high_step = first_step(&high);
+    // The two head-of-line normals prefill first (FCFS within the first
+    // wave), but the high-priority request beats every later normal.
+    assert!(
+        high_step <= first_step(&handles[2]) && high_step <= first_step(&handles[3]),
+        "high priority failed to overtake the queue"
+    );
+}
