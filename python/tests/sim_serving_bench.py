@@ -1,0 +1,220 @@
+"""Offline accounting simulation of `cargo bench --bench serving`.
+
+Reproduces, bit-for-bit, the DETERMINISTIC fields of the bench's
+`BENCH_serving.json` records: the open-loop drive of the Rust scheduler
+(`coordinator::scheduler::plan`) through `testutil::schedsim`, in the
+bench's regime — a KV pool far larger than the live set (admission always
+passes, registration never fails), prefix caching off, no swaps or faults.
+In that regime the schedule is a pure function of the scheduler's
+prefill-priority / chunk-window / interleave / decode rules and the
+arrival script, so this mirror reimplements exactly those rules and the
+simulator's token-weighted clock (prefill of T tokens costs T, a chunk
+window costs its take, decode and idle steps cost 1).
+
+Token VALUES are irrelevant to latency, so no Philox mirroring is needed
+here (contrast `sim_prefixcache_bench.py`).
+
+Timing fields (`median_ns` etc.) are bench-only: running `cargo bench
+--bench serving` on a toolbox overwrites this snapshot with `source:
+"bench"` records that add them (the shared fields must not change — if
+they do, the mirror or the Rust code regressed).
+
+Usage:  cd python && python tests/sim_serving_bench.py [out.json]
+"""
+
+import json
+import sys
+
+REQUESTS = 48
+LONG_PROMPT = 60
+MAX_CONCURRENCY = 8
+PREFILL_B = 4
+MAX_T = 64  # largest prefill T bucket
+DECODE_MAX_B = 8  # largest decode bucket
+
+
+def prompt_len(i):
+    return LONG_PROMPT if i % 8 == 3 else 6 + (i * 5) % 19
+
+
+def gen_len(i):
+    return 2 + (i * 3) % 7
+
+
+class Seq:
+    def __init__(self, rid):
+        self.id = rid
+        self.plen = prompt_len(rid)
+        self.max_new = gen_len(rid)
+        self.prefilled = 0
+        self.times = []  # weighted timestamp of each emitted token
+
+
+def plan(waiting, running, chunk, interleave, now):
+    """Mirror of scheduler::plan for uniform priority, zero cached prefix,
+    and an admission probe that always passes."""
+    deferred = None
+    if len(running) < MAX_CONCURRENCY:
+        headroom = MAX_CONCURRENCY - len(running)
+        chunk_eff = min(chunk, MAX_T)
+        if chunk_eff > 0 and waiting:
+            head = waiting[0]
+            remaining = (
+                head.plen - head.prefilled if head.prefilled > 0 else head.plen
+            )
+            if remaining > chunk_eff:
+                if interleave and now % 2 == 1:
+                    deferred = head
+                else:
+                    return ("chunk", head)
+        chosen = []
+        for s in waiting:
+            if deferred is not None and s.id == deferred.id:
+                continue
+            if s.prefilled > 0:
+                if s.plen - s.prefilled > chunk_eff:
+                    continue
+            elif s.plen > MAX_T:
+                continue
+            chosen.append(s)
+            if len(chosen) == min(PREFILL_B, headroom):
+                break
+        if chosen:
+            return ("prefill", chosen)
+    if not running:
+        if deferred is not None:
+            return ("chunk", deferred)
+        return ("idle", None)
+    return ("decode", running[:DECODE_MAX_B])
+
+
+def drive(interval, chunk, interleave):
+    arrivals = [(i * interval, Seq(i)) for i in range(REQUESTS)]
+    waiting, running, done = [], [], []
+    clock = wtime = 0
+    nxt = 0
+    chunk_windows = 0
+    steps = 0
+    while nxt < len(arrivals) or waiting or running:
+        while nxt < len(arrivals) and arrivals[nxt][0] <= clock:
+            waiting.append(arrivals[nxt][1])
+            nxt += 1
+        if not waiting and not running:
+            clock += 1
+            wtime += 1
+            continue
+        clock += 1
+        kind, what = plan(waiting, running, chunk, interleave, clock)
+        if kind == "chunk":
+            s = what
+            waiting.remove(s)
+            take = min(min(chunk, MAX_T), max(0, s.plen - 1 - s.prefilled))
+            s.prefilled += take
+            chunk_windows += 1
+            wtime += max(take, 1)
+            waiting.insert(0, s)
+        elif kind == "prefill":
+            for s in what:
+                waiting.remove(s)
+            longest = max(
+                (s.plen - s.prefilled if s.prefilled > 0 else s.plen)
+                for s in what
+            )
+            wtime += max(longest, 1)
+            for s in what:
+                s.times.append(wtime)
+                if len(s.times) >= s.max_new:
+                    done.append(s)
+                else:
+                    running.append(s)
+        elif kind == "decode":
+            wtime += 1
+            retired = []
+            for s in what:
+                s.times.append(wtime)
+                if len(s.times) >= s.max_new:
+                    retired.append(s)
+            for s in retired:
+                running.remove(s)
+                done.append(s)
+        else:  # idle — unreachable in the big-pool regime
+            raise AssertionError("idle step with work pending")
+        steps += 1
+        assert steps <= 20_000, "starvation guard"
+    return done, chunk_windows
+
+
+def pct(sorted_vals, q):
+    return sorted_vals[min(int(len(sorted_vals) * q), len(sorted_vals) - 1)]
+
+
+def record(interval, name, chunk, interleave):
+    done, windows = drive(interval, chunk, interleave)
+    assert len(done) == REQUESTS
+    ttft, short_ttft, itl, makespan = [], [], [], 0
+    for s in done:
+        assert len(s.times) == s.max_new, f"request {s.id} token budget"
+        ttft.append(s.times[0])
+        if s.plen < 32:
+            short_ttft.append(s.times[0])
+        itl.extend(b - a for a, b in zip(s.times, s.times[1:]))
+        makespan = max(makespan, s.times[-1])
+    ttft.sort()
+    short_ttft.sort()
+    itl.sort()
+    return {
+        "scenario": name,
+        "source": "accounting-sim",
+        "arrival_interval": interval,
+        "chunk": chunk,
+        "interleave": interleave,
+        "requests": REQUESTS,
+        "completed": len(done),
+        "ttft_p50_w": pct(ttft, 0.5),
+        "ttft_p95_w": pct(ttft, 0.95),
+        "short_ttft_p95_w": pct(short_ttft, 0.95),
+        "itl_p50_w": pct(itl, 0.5),
+        "itl_p95_w": pct(itl, 0.95),
+        "makespan_w": makespan,
+        "chunk_windows": windows,
+    }
+
+
+def main():
+    records = []
+    for interval in (1, 2, 4):
+        pair = []
+        for name, chunk, interleave in (
+            ("whole", 0, False),
+            ("chunked-interleave", 16, True),
+        ):
+            r = record(interval, name, chunk, interleave)
+            pair.append(r)
+            records.append(r)
+            print(
+                f"interval {interval} {name:<18} "
+                f"ttft p50/p95 {r['ttft_p50_w']:>4}/{r['ttft_p95_w']:>4} | "
+                f"short p95 {r['short_ttft_p95_w']:>4} | "
+                f"itl p50/p95 {r['itl_p50_w']:>2}/{r['itl_p95_w']:>3} | "
+                f"makespan {r['makespan_w']:>5} | windows {r['chunk_windows']}"
+            )
+        # The bench's regression bar, checked here too.
+        assert pair[1]["short_ttft_p95_w"] <= pair[0]["short_ttft_p95_w"], (
+            f"interval {interval}: chunked short p95 regressed"
+        )
+
+    out = sys.argv[1] if len(sys.argv) > 1 else "BENCH_serving.json"
+    body = ",\n".join(
+        "    " + json.dumps(r, separators=(", ", ": ")) for r in records
+    )
+    text = (
+        '{\n  "bench": "serving",\n  "schema_version": 1,\n'
+        '  "results": [\n' + body + "\n  ]\n}\n"
+    )
+    with open(out, "w") as f:
+        f.write(text)
+    print(f"\nwrote {out} ({len(records)} records)")
+
+
+if __name__ == "__main__":
+    main()

@@ -31,6 +31,8 @@ fn main() {
         max_concurrency: 8,
         max_tokens_per_step: 1,
         aging_steps: 32,
+        prefill_chunk_tokens: 0,
+        chunk_interleave: false,
     };
     let waiting = seqs(32, SeqState::Waiting);
     let running = seqs(8, SeqState::Running);

@@ -1,0 +1,212 @@
+//! Open-loop serving latency bench (ROADMAP item 5 tail): TTFT / ITL
+//! percentiles vs arrival rate, with chunked prefill off and on — the
+//! standing regression scenario for the continuous-batching work of
+//! DESIGN.md §12.
+//!
+//! This is an *accounting-level* bench like `benches/coordinator.rs` and
+//! `benches/prefixcache.rs`: it drives the REAL scheduler (`plan`) and the
+//! REAL `KvCacheManager` through `testutil::schedsim`, so no AOT artifacts
+//! are needed and it runs on any box.  Latencies are reported in the
+//! simulator's token-weighted units (a prefill of T tokens costs T, a
+//! chunk window costs its take, a decode or idle step costs 1) — the same
+//! cost model the TTFT-under-load regression test in
+//! `rust/tests/chunked_prefill.rs` asserts against.
+//!
+//! The workload is a fixed deterministic mix — every 8th request is a
+//! 60-token "monopolist" prompt, the rest are shorts — swept across
+//! arrival intervals (open loop: arrival i lands at step `i * interval`,
+//! regardless of service progress).  The chunked leg runs
+//! `prefill_chunk_tokens = 16` with `chunk_interleave = true`, the
+//! configuration whose odd steps yield to shorts and decode.
+//!
+//! Writes `BENCH_serving.json` (override with `BENCH_OUT`).  The
+//! deterministic fields (completion counts, weighted TTFT/ITL percentiles,
+//! makespan, window counts) are reproduced bit-for-bit by the offline
+//! accounting simulation in `python/tests/sim_serving_bench.py` — the
+//! committed snapshot's provenance when no Rust toolchain is at hand
+//! (`source` field), exactly like `BENCH_prefixcache.json`.
+//!
+//! Acceptance bars asserted here (the bench doubles as a check): every
+//! request completes its full token budget in both legs, the chunked leg
+//! actually opens windows, and at the densest arrival rate the shorts'
+//! p95 TTFT with chunking+interleave is no worse than without.
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use flashsampling::benchutil::{
+    bench_with, black_box, json_object, json_str, write_bench_report,
+};
+use flashsampling::testutil::schedsim::{
+    run, Finish, SimConfig, SimOutcome, SimRequest,
+};
+
+const REQUESTS: u64 = 48;
+/// Every 8th prompt is the long monopolist (fits the 64 bucket, so the
+/// unchunked leg serves it too — in one 60-weight step).
+const LONG_PROMPT: usize = 60;
+
+fn prompt_len(i: u64) -> usize {
+    if i % 8 == 3 {
+        LONG_PROMPT
+    } else {
+        6 + ((i * 5) % 19) as usize
+    }
+}
+
+fn gen_len(i: u64) -> usize {
+    2 + ((i * 3) % 7) as usize
+}
+
+fn script(interval: u64) -> Vec<SimRequest> {
+    (0..REQUESTS)
+        .map(|i| SimRequest {
+            id: i,
+            prompt_len: prompt_len(i),
+            max_new_tokens: gen_len(i),
+            arrival_step: i * interval,
+        })
+        .collect()
+}
+
+fn sim_cfg(chunk: usize, interleave: bool) -> SimConfig {
+    // 4096 blocks x 16 tokens: far above the live set, so admission never
+    // constrains the schedule — this bench measures scheduling latency,
+    // not memory pressure (the swap tier has its own tests).
+    let mut cfg = SimConfig::small(4096);
+    cfg.sched.prefill_chunk_tokens = chunk;
+    cfg.sched.chunk_interleave = interleave;
+    cfg
+}
+
+/// `sorted[floor(len * q)]`, clamped — the same truncating percentile the
+/// python mirror implements.
+fn pct(sorted: &[u64], q: f64) -> u64 {
+    sorted[((sorted.len() as f64 * q) as usize).min(sorted.len() - 1)]
+}
+
+struct Stats {
+    completed: usize,
+    ttft_p50: u64,
+    ttft_p95: u64,
+    short_ttft_p95: u64,
+    itl_p50: u64,
+    itl_p95: u64,
+    makespan: u64,
+}
+
+fn stats(out: &HashMap<u64, SimOutcome>) -> Stats {
+    let mut ttft: Vec<u64> = Vec::new();
+    let mut short_ttft: Vec<u64> = Vec::new();
+    let mut itl: Vec<u64> = Vec::new();
+    let mut makespan = 0u64;
+    let mut completed = 0usize;
+    for (&id, o) in out {
+        assert_eq!(o.finish, Some(Finish::Done), "request {id} did not finish");
+        assert_eq!(o.tokens.len(), gen_len(id), "request {id} token budget");
+        completed += 1;
+        let t0 = o.ttft_weighted.expect("completed => first token");
+        ttft.push(t0);
+        if prompt_len(id) < 32 {
+            short_ttft.push(t0);
+        }
+        for w in o.token_times.windows(2) {
+            itl.push(w[1] - w[0]);
+        }
+        makespan = makespan.max(*o.token_times.last().unwrap());
+    }
+    ttft.sort_unstable();
+    short_ttft.sort_unstable();
+    itl.sort_unstable();
+    Stats {
+        completed,
+        ttft_p50: pct(&ttft, 0.5),
+        ttft_p95: pct(&ttft, 0.95),
+        short_ttft_p95: pct(&short_ttft, 0.95),
+        itl_p50: pct(&itl, 0.5),
+        itl_p95: pct(&itl, 0.95),
+        makespan,
+    }
+}
+
+fn main() {
+    println!("## serving — open-loop TTFT/ITL vs arrival rate (weighted units)\n");
+    let mut records: Vec<String> = Vec::new();
+    let legs: [(&str, usize, bool); 2] =
+        [("whole", 0, false), ("chunked-interleave", 16, true)];
+
+    for interval in [1u64, 2, 4] {
+        let reqs = script(interval);
+        let mut short_p95_by_leg: Vec<u64> = Vec::new();
+        for (name, chunk, interleave) in legs {
+            let mut sim = flashsampling::testutil::schedsim::Sim::new(
+                sim_cfg(chunk, interleave),
+            );
+            sim.drive(&reqs);
+            let s = stats(&sim.outcomes);
+            assert_eq!(s.completed as u64, REQUESTS);
+            if chunk > 0 {
+                assert!(
+                    sim.chunk_windows > 0,
+                    "chunked leg must open windows for the 60-token prompts"
+                );
+            }
+            short_p95_by_leg.push(s.short_ttft_p95);
+
+            println!(
+                "interval {interval} {name:<18} ttft p50/p95 {:>4}/{:>4} | \
+                 short p95 {:>4} | itl p50/p95 {:>2}/{:>3} | makespan {:>5} \
+                 | windows {}",
+                s.ttft_p50,
+                s.ttft_p95,
+                s.short_ttft_p95,
+                s.itl_p50,
+                s.itl_p95,
+                s.makespan,
+                sim.chunk_windows,
+            );
+
+            // Hot-path timing: the full open-loop drive (scheduler + KV
+            // bookkeeping for 48 requests).
+            let label = format!("serving/drive/interval{interval}/{name}");
+            let cfg = sim_cfg(chunk, interleave);
+            let timing = bench_with(&label, 10, Duration::from_millis(5), || {
+                black_box(run(cfg.clone(), &reqs).len());
+            });
+
+            let mut fields = vec![
+                ("scenario", json_str(name)),
+                ("source", json_str("bench")),
+                ("arrival_interval", interval.to_string()),
+                ("chunk", chunk.to_string()),
+                ("interleave", interleave.to_string()),
+                ("requests", REQUESTS.to_string()),
+                ("completed", s.completed.to_string()),
+                ("ttft_p50_w", s.ttft_p50.to_string()),
+                ("ttft_p95_w", s.ttft_p95.to_string()),
+                ("short_ttft_p95_w", s.short_ttft_p95.to_string()),
+                ("itl_p50_w", s.itl_p50.to_string()),
+                ("itl_p95_w", s.itl_p95.to_string()),
+                ("makespan_w", s.makespan.to_string()),
+                ("chunk_windows", sim.chunk_windows.to_string()),
+            ];
+            fields.extend(timing.json_fields());
+            records.push(json_object(&fields));
+        }
+        // The regression bar: under load, chunking+interleave must not
+        // worsen the shorts' tail TTFT (at the densest rate it improves
+        // it — the committed snapshot records the separation).
+        assert!(
+            short_p95_by_leg[1] <= short_p95_by_leg[0],
+            "interval {interval}: chunked short p95 {} > whole {}",
+            short_p95_by_leg[1],
+            short_p95_by_leg[0],
+        );
+    }
+
+    let out = std::env::var("BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_serving.json".to_string());
+    let path = std::path::PathBuf::from(out);
+    write_bench_report(&path, "serving", &records).expect("writing report");
+    println!("\nwrote {} ({} records)", path.display(), records.len());
+}

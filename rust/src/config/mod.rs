@@ -25,6 +25,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::{EngineConfig, Priority};
+use crate::gpusim::iomodel::SwapPolicy;
 use crate::sampling::SamplerSpec;
 
 /// Full launcher configuration.
@@ -67,6 +68,17 @@ pub struct Config {
     /// mixed-SLO traffic for the priority scheduler.  Empty: all
     /// `normal` (identity-neutral).
     pub priority_choices: Vec<Priority>,
+    /// Chunked-prefill window in prompt tokens (DESIGN.md §12); 0
+    /// disables chunking.
+    pub prefill_chunk_tokens: usize,
+    /// Interleave chunk windows with other work on odd steps (bounded
+    /// TTFT, replay identity traded away; see EngineConfig docs).
+    pub chunk_interleave: bool,
+    /// Host-side swap ledger capacity in KV blocks; 0 disables the swap
+    /// tier.
+    pub swap_blocks: usize,
+    /// Swap-vs-recompute preemption policy: `auto` | `always` | `never`.
+    pub swap_policy: SwapPolicy,
     /// Output directory for `repro`.
     pub out_dir: PathBuf,
 }
@@ -89,6 +101,10 @@ impl Default for Config {
             num_requests: 32,
             priority_aging_steps: 32,
             priority_choices: Vec::new(),
+            prefill_chunk_tokens: 0,
+            chunk_interleave: false,
+            swap_blocks: 0,
+            swap_policy: SwapPolicy::Auto,
             out_dir: "results".into(),
         }
     }
@@ -150,6 +166,15 @@ impl Config {
                         .map(|s| s.parse::<Priority>())
                         .collect::<Result<Vec<Priority>>>()?;
                 }
+                "prefill_chunk_tokens" => self.prefill_chunk_tokens = v.parse()?,
+                "chunk_interleave" => self.chunk_interleave = v.parse()?,
+                "swap_blocks" => self.swap_blocks = v.parse()?,
+                "swap_policy" => {
+                    self.swap_policy = v
+                        .parse()
+                        .map_err(|e: String| anyhow::anyhow!(e))
+                        .with_context(|| format!("config key 'swap_policy' = '{v}'"))?;
+                }
                 "out_dir" => self.out_dir = v.into(),
                 other => bail!("unknown config key '{other}'"),
             }
@@ -181,6 +206,10 @@ impl Config {
                 self.sampler.clone()
             },
             priority_aging_steps: self.priority_aging_steps,
+            prefill_chunk_tokens: self.prefill_chunk_tokens,
+            chunk_interleave: self.chunk_interleave,
+            swap_blocks: self.swap_blocks,
+            swap_policy: self.swap_policy,
         }
     }
 }
@@ -350,6 +379,42 @@ mod tests {
         assert!(c
             .apply_pairs(parse_pairs("priority_aging_steps = x").unwrap())
             .is_err());
+    }
+
+    #[test]
+    fn chunking_and_swap_keys_flow_to_the_engine() {
+        let mut c = Config::default();
+        // Both subsystems default off: byte-identical legacy behavior.
+        assert_eq!(c.prefill_chunk_tokens, 0);
+        assert!(!c.chunk_interleave);
+        assert_eq!(c.swap_blocks, 0);
+        assert_eq!(c.swap_policy, SwapPolicy::Auto);
+        c.apply_pairs(
+            parse_pairs(
+                "prefill_chunk_tokens = 16\nchunk_interleave = true\n\
+                 swap_blocks = 64\nswap_policy = always",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let e = c.engine_config();
+        assert_eq!(e.prefill_chunk_tokens, 16);
+        assert!(e.chunk_interleave);
+        assert_eq!(e.swap_blocks, 64);
+        assert_eq!(e.swap_policy, SwapPolicy::Always);
+        assert!(c
+            .apply_pairs(parse_pairs("swap_policy = sometimes").unwrap())
+            .is_err());
+        assert!(c
+            .apply_pairs(parse_pairs("prefill_chunk_tokens = -1").unwrap())
+            .is_err());
+        assert!(c
+            .apply_pairs(parse_pairs("chunk_interleave = maybe").unwrap())
+            .is_err());
+        // Failed applies never clobber prior values.
+        assert_eq!(c.swap_policy, SwapPolicy::Always);
+        c.apply_pairs(parse_pairs("swap_policy = never").unwrap()).unwrap();
+        assert_eq!(c.engine_config().swap_policy, SwapPolicy::Never);
     }
 
     #[test]

@@ -33,6 +33,7 @@ use super::error::EngineError;
 use super::request::{Completion, FinishReason, Request, SeqKv, SeqState, Sequence};
 use super::scheduler::{pick_bucket, plan, Plan, SchedulerConfig};
 use super::stream::{RequestHandle, RequestOutput, SharedStream, StreamState};
+use crate::gpusim::iomodel::{choose, PcieModel, PreemptAction, SwapPolicy};
 use crate::kvcache::{KvCacheConfig, KvCacheManager, PrefixAttach};
 use crate::metrics::ServingMetrics;
 use crate::prefixcache::BlockKv;
@@ -76,6 +77,27 @@ pub struct EngineConfig {
     /// therefore stream-identical — when every request carries the
     /// default `Normal` priority.
     pub priority_aging_steps: u64,
+    /// Chunked prefill window in prompt tokens (DESIGN.md §12); 0
+    /// disables chunking (byte-identical to the pre-chunking engine).
+    /// Requires the `prefill_cached` artifacts (chunk windows run prompt
+    /// slices through them with per-row offsets); silently forced to 0 on
+    /// artifact sets without them.  Also lifts the submit-time rejection
+    /// of prompts beyond the largest prefill T bucket — windows cover any
+    /// prompt that fits `max_seq`.
+    pub prefill_chunk_tokens: usize,
+    /// Alternate chunk windows with other work (decode, short prefills)
+    /// on odd logical steps — bounds short-request TTFT under an
+    /// adversarial long prompt at the cost of replay identity vs the
+    /// unchunked baseline (the sampled distribution is unchanged).  Off:
+    /// "sticky" windows, bit-identical completed-request streams.
+    pub chunk_interleave: bool,
+    /// Host-side swap ledger capacity in KV blocks (DESIGN.md §12); 0
+    /// disables the swap tier and preemption falls back to finish-early.
+    pub swap_blocks: usize,
+    /// Swap-vs-recompute preemption policy, priced by
+    /// [`crate::gpusim::iomodel::PcieModel`] (`Auto`), or forced
+    /// (`Always` / `Never`).
+    pub swap_policy: SwapPolicy,
 }
 
 impl Default for EngineConfig {
@@ -88,6 +110,10 @@ impl Default for EngineConfig {
             prefix_caching: true,
             sampler: SamplerSpec::default(),
             priority_aging_steps: 32,
+            prefill_chunk_tokens: 0,
+            chunk_interleave: false,
+            swap_blocks: 0,
+            swap_policy: SwapPolicy::Auto,
         }
     }
 }
@@ -148,6 +174,12 @@ pub struct Engine {
     cached_prefill_available: bool,
     waiting: VecDeque<Sequence>,
     running: Vec<Sequence>,
+    /// Sequences parked in the host-side swap tier (DESIGN.md §12), FCFS.
+    /// Their private KV blocks live in the [`KvCacheManager`] swap ledger;
+    /// prefix-cache-attached blocks stay pinned on-device so radix
+    /// identity survives the round trip.  Resumed by `swap_in_ready`
+    /// ahead of the waiting queue as soon as pool + concurrency allow.
+    swapped: Vec<Sequence>,
     /// Monotonic decode-step counter — the Philox `step` input, so every
     /// scheduler iteration draws fresh noise.
     step_counter: u32,
@@ -166,6 +198,13 @@ pub struct Engine {
     decode_cache: Option<DecodeCache>,
     pub metrics: ServingMetrics,
 }
+
+/// Calibrated prefill throughput for the swap-vs-recompute policy
+/// (`SwapPolicy::Auto`): what one prompt token of recompute costs on this
+/// testbed, in µs.  Order-of-magnitude is what matters — the PCIe transfer
+/// of a KV block is ~10 µs while recomputing a block's worth of context is
+/// ~1 ms, so `Auto` swaps for all but trivially short contexts.
+const PREFILL_US_PER_TOKEN: f64 = 50.0;
 
 /// Push one per-token streaming event (free function: callers hold
 /// disjoint field borrows of the engine).
@@ -215,6 +254,11 @@ impl Engine {
             .iter()
             .position(|n| n == "lm_head")
             .context("lm_head missing from param order")?;
+        let cached_prefill_available = model.prefill_t_buckets.iter().all(|t| {
+            rt.manifest()
+                .find(&format!("prefill_cached_b{}_t{t}", model.prefill_b))
+                .is_ok()
+        });
         let sched = SchedulerConfig {
             decode_buckets: model.decode_buckets.clone(),
             prefill_t_buckets: model.prefill_t_buckets.clone(),
@@ -227,17 +271,22 @@ impl Engine {
                 _ => 1,
             },
             aging_steps: cfg.priority_aging_steps,
+            // Chunk windows run prompt slices through the prefill_cached
+            // artifacts (per-row offsets); without them chunking silently
+            // degrades to whole-prompt prefill.
+            prefill_chunk_tokens: if cached_prefill_available {
+                cfg.prefill_chunk_tokens
+            } else {
+                0
+            },
+            chunk_interleave: cfg.chunk_interleave,
         };
-        let kvmgr = KvCacheManager::new(KvCacheConfig {
+        let mut kvmgr = KvCacheManager::new(KvCacheConfig {
             block_size: cfg.kv_block_size,
             num_blocks: cfg.kv_blocks,
             prefix_caching: cfg.prefix_caching,
         });
-        let cached_prefill_available = model.prefill_t_buckets.iter().all(|t| {
-            rt.manifest()
-                .find(&format!("prefill_cached_b{}_t{t}", model.prefill_b))
-                .is_ok()
-        });
+        kvmgr.set_swap_capacity(cfg.swap_blocks);
         let key = Key::from_seed(cfg.seed);
         Ok(Self {
             rt,
@@ -249,6 +298,7 @@ impl Engine {
             cached_prefill_available,
             waiting: VecDeque::new(),
             running: Vec::new(),
+            swapped: Vec::new(),
             step_counter: 0,
             clock: 0,
             streams: HashMap::new(),
@@ -272,6 +322,28 @@ impl Engine {
     /// Blocks resident in the automatic prefix cache (0 with caching off).
     pub fn prefix_cached_blocks(&self) -> usize {
         self.kvmgr.prefix_cached_blocks()
+    }
+
+    /// Live prefix-cache attachment references across all registered
+    /// sequences (the radix-identity balance the abort suite asserts).
+    pub fn prefix_attached_refs(&self) -> usize {
+        self.kvmgr.prefix_attached_refs()
+    }
+
+    /// The effective chunk window after artifact gating (0 when chunking
+    /// is off or the artifact set lacks `prefill_cached_*`).
+    pub fn prefill_chunk_tokens(&self) -> usize {
+        self.sched.prefill_chunk_tokens
+    }
+
+    /// KV blocks currently parked in the host-side swap ledger.
+    pub fn swapped_blocks(&self) -> usize {
+        self.kvmgr.swapped_blocks()
+    }
+
+    /// Sequences currently parked in the swap tier.
+    pub fn swapped_sequences(&self) -> usize {
+        self.swapped.len()
     }
 
     fn model(&self) -> &crate::runtime::ModelInfo {
@@ -325,8 +397,10 @@ impl Engine {
         if req.prompt.is_empty() {
             return Err(reject("empty prompt".into()));
         }
+        // Chunked prefill lifts the T-bucket ceiling: windows cover any
+        // prompt that fits max_seq, one largest-bucket slice at a time.
         let max_t = *m.prefill_t_buckets.last().unwrap();
-        if req.prompt.len() > max_t {
+        if self.sched.prefill_chunk_tokens == 0 && req.prompt.len() > max_t {
             return Err(reject(format!(
                 "prompt of {} tokens exceeds the largest prefill bucket {max_t}",
                 req.prompt.len()
@@ -360,6 +434,18 @@ impl Engine {
     pub fn abort(&mut self, request_id: u64) -> Result<Completion, EngineError> {
         if let Some(idx) = self.waiting.iter().position(|s| s.id == request_id) {
             let s = self.waiting.remove(idx).expect("position is in range");
+            // A partially-prefilled queue head IS registered (chunk start
+            // allocated its full prompt); release or the blocks leak.
+            if s.prefilled_tokens > 0 {
+                self.kvmgr.release(s.id)?;
+            }
+            return Ok(self.complete_seq(s, FinishReason::Aborted));
+        }
+        if let Some(idx) = self.swapped.iter().position(|s| s.id == request_id) {
+            let s = self.swapped.remove(idx);
+            // `release` drops the on-device attached chain AND clears the
+            // swap-ledger entry for this sequence's parked blocks.
+            self.kvmgr.release(s.id)?;
             return Ok(self.complete_seq(s, FinishReason::Aborted));
         }
         if let Some(idx) = self.running.iter().position(|s| s.id == request_id) {
@@ -419,7 +505,7 @@ impl Engine {
     }
 
     pub fn pending(&self) -> usize {
-        self.waiting.len() + self.running.len()
+        self.waiting.len() + self.running.len() + self.swapped.len()
     }
 
     /// The logical step clock: `step()` calls so far.  Streaming events
@@ -443,6 +529,10 @@ impl Engine {
         // Tick the logical step clock first: events of this step carry
         // the new value, TTFT-in-steps >= 1.
         self.clock += 1;
+        // Resume swapped-out sequences ahead of fresh admissions: their
+        // tokens are sunk cost and their attached prefix blocks are
+        // already pinned on-device.
+        self.swap_in_ready()?;
         // The planner reads the waiting queue as one slice (no clone —
         // a backed-up queue would otherwise pay a deep per-step copy of
         // every pending prompt).
@@ -463,6 +553,7 @@ impl Engine {
             self.clock,
         );
         let out = match p {
+            Plan::ChunkPrefill { seq_id } => self.do_chunk_prefill(seq_id),
             Plan::Prefill { seq_ids, t_bucket } => self.do_prefill(&seq_ids, t_bucket),
             Plan::Decode { seq_ids, b_bucket } => {
                 if let SamplerSpec::SpecDecode { k, ngram } = self.cfg.sampler {
@@ -488,8 +579,29 @@ impl Engine {
         if !self.running.is_empty() {
             return None;
         }
-        let seq = self.waiting.pop_front()?;
-        Some(self.complete_seq(seq, FinishReason::Rejected))
+        // A partially-prefilled head is schedulable by construction — its
+        // blocks are already held and the next chunk window needs no
+        // admission; an idle step around it is transient (e.g. interleave
+        // parity), never a dead end.
+        if self.waiting.front().is_some_and(|s| s.prefilled_tokens > 0) {
+            return None;
+        }
+        if let Some(seq) = self.waiting.pop_front() {
+            return Some(self.complete_seq(seq, FinishReason::Rejected));
+        }
+        // Waiting empty but swap tier occupied and swap-in starved (a
+        // newer sequence pinned the pool and finished — but e.g. the
+        // prefix cache holds everything): abandon the oldest victim so
+        // drivers cannot livelock on a tier nothing will ever drain.
+        if !self.swapped.is_empty() {
+            let s = self.swapped.remove(0);
+            if self.kvmgr.release(s.id).is_err() {
+                return None;
+            }
+            self.metrics.bump("swap_abandoned", 1);
+            return Some(self.complete_seq(s, FinishReason::MaxTokens));
+        }
+        None
     }
 
     /// Drain everything currently submitted (batch-compatibility shim
@@ -505,7 +617,20 @@ impl Engine {
                 // Waiting sequences that can never be admitted => reject.
                 match self.reject_unschedulable() {
                     Some(c) => done.push(c),
-                    None => break,
+                    None => {
+                        // Latent progress: a partially-prefilled head or a
+                        // swapped-out sequence will advance on a later
+                        // step (interleave parity / pool drain) — keep
+                        // stepping instead of abandoning the drain.
+                        let latent = self
+                            .waiting
+                            .front()
+                            .is_some_and(|s| s.prefilled_tokens > 0)
+                            || !self.swapped.is_empty();
+                        if !latent {
+                            break;
+                        }
+                    }
                 }
             }
         }
@@ -574,6 +699,247 @@ impl Engine {
         Ok(done)
     }
 
+    // --- swap tier (DESIGN.md §12) ---------------------------------------
+
+    /// Resume swapped-out sequences (FCFS) while the pool and the
+    /// concurrency budget allow.  Runs at the top of every step, ahead of
+    /// the planner — resumed rows rejoin the running set and decode this
+    /// very step.
+    fn swap_in_ready(&mut self) -> Result<(), EngineError> {
+        while !self.swapped.is_empty()
+            && self.running.len() < self.cfg.max_concurrency
+        {
+            let id = self.swapped[0].id;
+            match self.kvmgr.swap_in(id)? {
+                Some(blocks) => {
+                    self.metrics.swap_in_blocks += blocks as u64;
+                    let mut s = self.swapped.remove(0);
+                    // Reconcile the one-token accounting deficit every
+                    // preempt site leaves behind: the token that triggered
+                    // preemption was emitted but its KV slot never
+                    // appended, so the block table trails the context by
+                    // at most one token.
+                    let table_len =
+                        self.kvmgr.table(id).map_or(0, |t| t.len());
+                    debug_assert!(
+                        s.context_len() >= table_len
+                            && s.context_len() - table_len <= 1
+                    );
+                    let mut ok = true;
+                    for _ in table_len..s.context_len() {
+                        if !self.kvmgr.append_token(id)? {
+                            ok = false;
+                            break;
+                        }
+                    }
+                    if ok {
+                        s.state = SeqState::Running;
+                        self.running.push(s);
+                    } else {
+                        // The pool refilled under us: park the sequence
+                        // again — the ledger capacity this swap-in just
+                        // vacated guarantees the swap-out lands.
+                        let n = self
+                            .kvmgr
+                            .swap_out(id)?
+                            .expect("ledger capacity was just vacated");
+                        self.metrics.swap_out_blocks += n as u64;
+                        self.swapped.insert(0, s);
+                        break;
+                    }
+                }
+                None => break, // transient pool exhaustion; retry next step
+            }
+        }
+        Ok(())
+    }
+
+    /// Try to park a preemption victim in the swap tier instead of
+    /// finishing it early.  Prices the PCIe round trip of the victim's
+    /// *private* blocks (prefix-cache-attached blocks stay on-device)
+    /// against recomputing its context, per `swap_policy`.  `Ok(None)`
+    /// means the caller falls back to legacy finish-early preemption:
+    /// swap disabled, policy says recompute, or the ledger is full.
+    fn swap_preempt(
+        &mut self,
+        id: u64,
+        context_len: usize,
+    ) -> Result<Option<usize>, EngineError> {
+        if self.kvmgr.swap_capacity() == 0 || self.kvmgr.is_swapped(id) {
+            return Ok(None);
+        }
+        let Some(table) = self.kvmgr.table(id) else {
+            return Ok(None);
+        };
+        let private =
+            table.num_blocks() - self.kvmgr.seq_attached_nodes(id).len();
+        let (n_layers, n_heads, dh) = {
+            let m = self.model();
+            (m.n_layers, m.n_heads, m.head_dim())
+        };
+        let pcie = PcieModel::default();
+        let bytes = private
+            * PcieModel::kv_block_bytes(
+                n_layers,
+                n_heads,
+                dh,
+                self.cfg.kv_block_size,
+            );
+        let swap_us = 2.0 * pcie.transfer_us(bytes); // out + back in
+        let recompute_us =
+            pcie.recompute_us(context_len, PREFILL_US_PER_TOKEN);
+        if choose(self.cfg.swap_policy, swap_us, recompute_us)
+            == PreemptAction::Recompute
+        {
+            self.metrics.bump("swap_declined_by_policy", 1);
+            return Ok(None);
+        }
+        match self.kvmgr.swap_out(id)? {
+            Some(n) => {
+                self.metrics.bump("swapped_out_seqs", 1);
+                Ok(Some(n))
+            }
+            None => Ok(None), // ledger full
+        }
+    }
+
+    // --- chunked prefill (DESIGN.md §12) ---------------------------------
+
+    /// One chunk window over the queue head's prompt: restore the KV built
+    /// so far into batch row 0, run the next `prefill_chunk_tokens` prompt
+    /// tokens through the cached-prefill artifact (per-row offset = tokens
+    /// already resident), and scatter the grown KV back.  Intermediate
+    /// chunks are pure KV builds — no `sample_hidden`, no Philox step — so
+    /// a chunked prompt's first token draws exactly the same coordinates
+    /// as whole-prompt prefill: once the remainder fits one window the
+    /// head falls through to the normal prefill scan (`Plan::Prefill`),
+    /// batches companions, and samples there.
+    fn do_chunk_prefill(
+        &mut self,
+        seq_id: u64,
+    ) -> Result<Vec<Completion>, EngineError> {
+        let m = self.model().clone();
+        let b = m.prefill_b;
+        let bs = self.cfg.kv_block_size;
+        let dh = m.head_dim();
+        let idx = self
+            .waiting
+            .iter()
+            .position(|s| s.id == seq_id)
+            .context("planned sequence vanished")?;
+        let mut s = self.waiting.remove(idx).unwrap();
+        if s.prefilled_tokens == 0 {
+            // Chunk start: allocate the FULL prompt's blocks up front (the
+            // plan's admission probe covered them) and seed per-sequence
+            // KV with any prefix-cache hit.
+            let a = match self.kvmgr.register_with_prefix(s.id, &s.prompt) {
+                Ok(a) => a,
+                Err(_) => {
+                    // The pool raced below the plan's estimate (shared
+                    // evictable headroom): re-queue and re-plan, exactly
+                    // as `do_prefill` does.
+                    self.metrics.bump("prefill_admission_retries", 1);
+                    self.waiting.push_front(s);
+                    return Ok(Vec::new());
+                }
+            };
+            let mut k = vec![0.0f32; self.kv_len()];
+            let mut v = vec![0.0f32; self.kv_len()];
+            for (j, blk) in a.kv.iter().enumerate() {
+                // Payload [L, H, bs, Dh] -> dense [L, H, S, Dh] at
+                // positions [j*bs, (j+1)*bs).
+                for l in 0..m.n_layers {
+                    for h in 0..m.n_heads {
+                        let src = (l * m.n_heads + h) * bs * dh;
+                        let dst =
+                            ((l * m.n_heads + h) * m.max_seq + j * bs) * dh;
+                        k[dst..dst + bs * dh]
+                            .copy_from_slice(&blk.k[src..src + bs * dh]);
+                        v[dst..dst + bs * dh]
+                            .copy_from_slice(&blk.v[src..src + bs * dh]);
+                    }
+                }
+            }
+            s.kv = Some(SeqKv { k, v });
+            s.prefilled_tokens = a.cached_tokens;
+            if a.cached_tokens > 0 {
+                self.metrics.cached_prefill_tokens += a.cached_tokens as u64;
+            }
+        }
+        let chunk = self
+            .sched
+            .prefill_chunk_tokens
+            .min(*m.prefill_t_buckets.last().unwrap());
+        // Always leave >= 1 token for the sampling final chunk.
+        let take = chunk.min(
+            s.prompt
+                .len()
+                .saturating_sub(1)
+                .saturating_sub(s.prefilled_tokens),
+        );
+        if take == 0 {
+            self.waiting.push_front(s);
+            return Ok(Vec::new());
+        }
+        let row_len = m.n_heads * m.max_seq * dh;
+        let kv_batch_len = m.n_layers * b * row_len;
+        let mut kvk = vec![0.0f32; kv_batch_len];
+        let mut kvv = vec![0.0f32; kv_batch_len];
+        {
+            let kv = s.kv.as_ref().context("chunking sequence without KV")?;
+            for l in 0..m.n_layers {
+                let src = l * row_len;
+                let dst = l * b * row_len;
+                kvk[dst..dst + row_len]
+                    .copy_from_slice(&kv.k[src..src + row_len]);
+                kvv[dst..dst + row_len]
+                    .copy_from_slice(&kv.v[src..src + row_len]);
+            }
+        }
+        let t_bucket = pick_bucket(&m.prefill_t_buckets, take);
+        let mut tokens = vec![0i32; b * t_bucket];
+        let mut lengths = vec![1i32; b]; // pad rows: length 1 of token 0
+        let mut offsets = vec![0i32; b];
+        tokens[..take].copy_from_slice(
+            &s.prompt[s.prefilled_tokens..s.prefilled_tokens + take],
+        );
+        lengths[0] = take as i32;
+        offsets[0] = s.prefilled_tokens as i32;
+        let kv_shape = vec![m.n_layers, b, m.n_heads, m.max_seq, dh];
+        let kvk_lit = Tensor::F32(kvk, kv_shape.clone()).to_literal()?;
+        let kvv_lit = Tensor::F32(kvv, kv_shape).to_literal()?;
+        let name = format!("prefill_cached_b{b}_t{t_bucket}");
+        let exe =
+            self.rt.load(&name).map_err(|e| EngineError::artifact(&name, e))?;
+        let off_lit = Tensor::I32(offsets, vec![b]).to_literal()?;
+        let tok_lit = Tensor::I32(tokens, vec![b, t_bucket]).to_literal()?;
+        let len_lit = Tensor::I32(lengths, vec![b]).to_literal()?;
+        let mut lits: Vec<&xla::Literal> = self.params_lit.iter().collect();
+        lits.extend([&kvk_lit, &kvv_lit, &off_lit, &tok_lit, &len_lit]);
+        let out = exe.run_literals(&lits)?;
+        let kv_k = out[0].as_f32()?;
+        let kv_v = out[1].as_f32()?;
+        {
+            let kv = s.kv.as_mut().context("chunking sequence without KV")?;
+            for l in 0..m.n_layers {
+                let src = l * b * row_len;
+                let dst = l * row_len;
+                kv.k[dst..dst + row_len]
+                    .copy_from_slice(&kv_k[src..src + row_len]);
+                kv.v[dst..dst + row_len]
+                    .copy_from_slice(&kv_v[src..src + row_len]);
+            }
+        }
+        s.prefilled_tokens += take;
+        self.metrics.chunked_prefill_steps += 1;
+        self.metrics.bump("prefill_cached_runs", 1);
+        self.metrics.bump("prefill_pad_rows", (b - 1) as u64);
+        // The head stays Waiting at the queue front: the next window (or
+        // the sampling final chunk) picks it up by priority order.
+        self.waiting.push_front(s);
+        Ok(Vec::new())
+    }
+
     // --- prefill ---------------------------------------------------------
 
     fn do_prefill(
@@ -603,12 +969,30 @@ impl Engine {
         // evictable headroom), re-queue the victim at the front instead of
         // failing the step — it re-plans next iteration.
         let mut attaches: Vec<PrefixAttach> = Vec::with_capacity(seqs.len());
+        // Rows whose "cached prefix" is their OWN partial KV from earlier
+        // chunk windows (already registered; restored from `s.kv`, not
+        // from prefix-cache payloads).
+        let mut own_restore: Vec<bool> = Vec::with_capacity(seqs.len());
         let mut admitted: Vec<Sequence> = Vec::with_capacity(seqs.len());
         let mut requeue: Vec<Sequence> = Vec::new();
         for s in seqs {
+            if s.prefilled_tokens > 0 {
+                // Final chunk of a partially-prefilled head: blocks were
+                // allocated at chunk start, KV restored below from the
+                // sequence's own storage.  Synthetic attach carries the
+                // offset only.
+                attaches.push(PrefixAttach {
+                    cached_tokens: s.prefilled_tokens,
+                    kv: Vec::new(),
+                });
+                own_restore.push(true);
+                admitted.push(s);
+                continue;
+            }
             match self.kvmgr.register_with_prefix(s.id, &s.prompt) {
                 Ok(a) => {
                     attaches.push(a);
+                    own_restore.push(false);
                     admitted.push(s);
                 }
                 Err(_) => {
@@ -624,11 +1008,21 @@ impl Engine {
         if seqs.is_empty() {
             return Ok(Vec::new());
         }
-        let attached_tokens: u64 =
-            attaches.iter().map(|a| a.cached_tokens as u64).sum();
+        // Prefix-cache hits only (partial rows' restored tokens were
+        // counted when their chunk windows ran).
+        let attached_tokens: u64 = attaches
+            .iter()
+            .zip(&own_restore)
+            .filter(|(_, &own)| !own)
+            .map(|(a, _)| a.cached_tokens as u64)
+            .sum();
+        let any_partial = own_restore.iter().any(|&own| own);
         // Without the prefill_cached artifacts the hit still pays for
         // admission headroom, but the compute path stays full-prefill.
-        let use_cached = self.cached_prefill_available && attached_tokens > 0;
+        // (Partial rows exist only when chunking is on, which is itself
+        // gated on those artifacts.)
+        let use_cached =
+            self.cached_prefill_available && (attached_tokens > 0 || any_partial);
         if use_cached {
             // Only count tokens whose prefill compute was actually
             // skipped — `prefix_hit_rate()` must never advertise a TTFT
@@ -675,7 +1069,26 @@ impl Engine {
             let kv_batch_len = m.n_layers * b * row_len;
             let mut kvk = vec![0.0f32; kv_batch_len];
             let mut kvv = vec![0.0f32; kv_batch_len];
-            for (row, a) in attaches.iter().enumerate() {
+            for (row, (a, &own)) in
+                attaches.iter().zip(&own_restore).enumerate()
+            {
+                if own {
+                    // Partial row: its prefix is its own chunk-built KV,
+                    // dense [L, H, S, Dh] -> batch row verbatim.
+                    let kv = seqs[row]
+                        .kv
+                        .as_ref()
+                        .context("partial sequence without KV")?;
+                    for l in 0..m.n_layers {
+                        let src = l * row_len;
+                        let dst = (l * b + row) * row_len;
+                        kvk[dst..dst + row_len]
+                            .copy_from_slice(&kv.k[src..src + row_len]);
+                        kvv[dst..dst + row_len]
+                            .copy_from_slice(&kv.v[src..src + row_len]);
+                    }
+                    continue;
+                }
                 for (j, blk) in a.kv.iter().enumerate() {
                     // Payload [L, H, bs, Dh] -> batch [L, B, H, S, Dh] at
                     // positions [j*bs, (j+1)*bs).
@@ -792,9 +1205,21 @@ impl Engine {
                 // the same exhaustion handling as the decode path.  (The
                 // old `?`-only call dropped this signal and let the block
                 // table fall one token behind the sequence's context.)
-                self.metrics.bump("preempted", 1);
-                self.kvmgr.release(s.id)?;
-                completions.push(self.complete_seq(s, FinishReason::MaxTokens));
+                // The swap tier, when priced in, parks the victim instead
+                // of finishing it early.
+                match self.swap_preempt(s.id, s.context_len())? {
+                    Some(n) => {
+                        self.metrics.swap_out_blocks += n as u64;
+                        s.state = SeqState::Preempted;
+                        self.swapped.push(s);
+                    }
+                    None => {
+                        self.metrics.bump("preempted", 1);
+                        self.kvmgr.release(s.id)?;
+                        completions
+                            .push(self.complete_seq(s, FinishReason::MaxTokens));
+                    }
+                }
             } else {
                 self.running.push(s);
             }
@@ -869,19 +1294,30 @@ impl Engine {
         ))
     }
 
-    /// Remove finished rows from the running set (descending index keeps
-    /// positions stable), release their KV blocks, and convert them to
-    /// completions — the shared tail of both decode paths.
-    fn remove_finished(
+    /// Remove retired rows from the running set (descending index keeps
+    /// positions stable) — the shared tail of both decode paths.
+    /// `Some(reason)` rows release their KV blocks and complete; `None`
+    /// rows move to the swap tier (their private blocks were already
+    /// parked by `swap_preempt`; per-sequence KV must be current — the
+    /// callers sync the decode cache first when swaps are pending).
+    fn retire_rows(
         &mut self,
-        mut finished: Vec<(usize, FinishReason)>,
+        mut retired: Vec<(usize, Option<FinishReason>)>,
     ) -> Result<Vec<Completion>, EngineError> {
-        finished.sort_by(|a, b| b.0.cmp(&a.0));
+        retired.sort_by(|a, b| b.0.cmp(&a.0));
         let mut completions = Vec::new();
-        for (ri, reason) in finished {
-            let s = self.running.remove(ri);
-            self.kvmgr.release(s.id)?;
-            completions.push(self.complete_seq(s, reason));
+        for (ri, reason) in retired {
+            let mut s = self.running.remove(ri);
+            match reason {
+                Some(reason) => {
+                    self.kvmgr.release(s.id)?;
+                    completions.push(self.complete_seq(s, reason));
+                }
+                None => {
+                    s.state = SeqState::Preempted;
+                    self.swapped.push(s);
+                }
+            }
         }
         Ok(completions)
     }
@@ -979,7 +1415,10 @@ impl Engine {
         // Token bookkeeping + completions.
         let now = Instant::now();
         let clock = self.clock;
-        let mut finished: Vec<(usize, FinishReason)> = Vec::new();
+        let mut retired: Vec<(usize, Option<FinishReason>)> = Vec::new();
+        // Pool-exhausted rows: the swap-vs-recompute decision needs `&mut
+        // self` (ledger + policy), so collect here and decide post-loop.
+        let mut swap_candidates: Vec<(usize, u64, usize)> = Vec::new();
         for (slot, &ri) in rows.iter().enumerate() {
             let s = &mut self.running[ri];
             s.generated.push(samples[slot]);
@@ -990,15 +1429,31 @@ impl Engine {
             emit_token(&self.streams, s, samples[slot], clock);
             self.metrics.tokens_generated += 1;
             if let Some(reason) = s.finished() {
-                finished.push((ri, reason));
+                retired.push((ri, Some(reason)));
             } else if !self.kvmgr.append_token(s.id)? {
-                // KV pool exhausted: preempt (release blocks, back to queue).
-                self.metrics.bump("preempted", 1);
-                finished.push((ri, FinishReason::MaxTokens));
+                swap_candidates.push((ri, s.id, s.context_len()));
             }
         }
+        for (ri, id, ctx) in swap_candidates {
+            match self.swap_preempt(id, ctx)? {
+                Some(n) => {
+                    self.metrics.swap_out_blocks += n as u64;
+                    retired.push((ri, None));
+                }
+                None => {
+                    // KV pool exhausted, no swap: legacy finish-early.
+                    self.metrics.bump("preempted", 1);
+                    retired.push((ri, Some(FinishReason::MaxTokens)));
+                }
+            }
+        }
+        // A swap victim leaves the batch with this step's KV only in the
+        // decode-cache literals; fold them back before it departs.
+        if retired.iter().any(|(_, r)| r.is_none()) {
+            self.sync_cache_to_seqs()?;
+        }
 
-        self.remove_finished(finished)
+        self.retire_rows(retired)
     }
 
     // --- speculative decode (DESIGN.md §9) -------------------------------
@@ -1149,7 +1604,10 @@ impl Engine {
         // 5. Coupled verification, token bookkeeping, KV rollback.
         let now = Instant::now();
         let clock = self.clock;
-        let mut finished: Vec<(usize, FinishReason)> = Vec::new();
+        let mut retired: Vec<(usize, Option<FinishReason>)> = Vec::new();
+        // As in `do_decode`: swap decisions need `&mut self`, so collect
+        // pool-exhausted rows and decide after the borrow ends.
+        let mut swap_candidates: Vec<(usize, u64, usize)> = Vec::new();
         for (slot, &ri) in rows.iter().enumerate() {
             let draft = &drafts[slot];
             let emit = coupled_emit_len(draft, &samples_per_row[slot]);
@@ -1195,19 +1653,32 @@ impl Engine {
                 && fin.is_none()
                 && !self.kvmgr.append_token(id)?
             {
-                self.metrics.bump("preempted", 1);
-                fin = Some(FinishReason::MaxTokens);
+                swap_candidates.push((ri, id, final_len));
             }
             self.metrics.spec_tokens_per_step.push(emitted);
             if let Some(reason) = fin {
-                finished.push((ri, reason));
+                retired.push((ri, Some(reason)));
             }
         }
+        for (ri, id, ctx) in swap_candidates {
+            match self.swap_preempt(id, ctx)? {
+                Some(n) => {
+                    self.metrics.swap_out_blocks += n as u64;
+                    retired.push((ri, None));
+                }
+                None => {
+                    self.metrics.bump("preempted", 1);
+                    retired.push((ri, Some(FinishReason::MaxTokens)));
+                }
+            }
+        }
+        // Per-sequence KV is already current here: step 4 folded the
+        // final inner-pass literals back, so swap victims depart whole.
         self.metrics.bump("spec_rounds", 1);
         self.metrics.bump("spec_inner_passes", (k_max + 1) as u64);
         self.metrics.decode_batch_sizes.push(rows.len());
 
-        self.remove_finished(finished)
+        self.retire_rows(retired)
     }
 
     fn bump_step(&mut self) -> u32 {

@@ -265,11 +265,15 @@ pub struct Completion {
 /// Lifecycle state of a sequence inside the engine.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SeqState {
-    /// Admitted, prompt not yet prefetched into the KV cache.
+    /// Admitted, prompt not yet (fully) prefetched into the KV cache.  A
+    /// chunked prefill in progress keeps the sequence `Waiting` with
+    /// [`Sequence::prefilled_tokens`] > 0 at the head of the queue.
     Waiting,
     /// KV cache holds the prompt; decoding.
     Running,
-    /// Preempted under memory pressure; must re-prefill.
+    /// Preempted under memory pressure: either swapped out to the host
+    /// ledger (KV parked, resumes via `swap_in`) or finished early for
+    /// recompute, per the `swap_policy` decision (DESIGN.md §12).
     Preempted,
 }
 
@@ -303,6 +307,12 @@ pub struct Sequence {
     /// Logical engine step of this sequence's most recent token (drives
     /// the per-event `inter_token_steps`).
     pub last_token_step: Option<u64>,
+    /// Prompt tokens already resident in the KV cache from completed
+    /// prefill chunks (counts prefix-cache-attached tokens too).  0 until
+    /// the first chunk lands; a partially-prefilled sequence waits at the
+    /// queue head with this nonzero until the final chunk samples its
+    /// first token (DESIGN.md §12).
+    pub prefilled_tokens: usize,
     pub timing: RequestTiming,
 }
 
@@ -321,6 +331,7 @@ impl Sequence {
             last_token_at: None,
             submitted_step: 0,
             last_token_step: None,
+            prefilled_tokens: 0,
             timing: RequestTiming::default(),
         }
     }

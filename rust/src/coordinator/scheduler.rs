@@ -2,10 +2,13 @@
 //! continuous batching over fixed-shape executables.
 //!
 //! Policy (vLLM-v1-like, prefill-prioritized):
-//!   1. If waiting sequences exist and KV blocks are available, plan a
+//!   1. With chunked prefill on (`prefill_chunk_tokens > 0`) and the
+//!      queue head holding more than one window of uncomputed suffix,
+//!      plan ONE chunk window for it ([`Plan::ChunkPrefill`]).
+//!   2. If waiting sequences exist and KV blocks are available, plan a
 //!      prefill batch: up to `prefill_b` prompts that fit the smallest
-//!      viable T bucket.
-//!   2. Otherwise plan a decode batch: up to the largest decode bucket of
+//!      viable T bucket (a partial head's final chunk batches here).
+//!   3. Otherwise plan a decode batch: up to the largest decode bucket of
 //!      running sequences, FCFS.
 //!
 //! Sampling parameters never fragment batches: the artifact ABI carries
@@ -39,6 +42,14 @@ pub enum Plan {
     /// final bucket from its authoritative prefix-attach results (which
     /// may have shifted by then), so treat this value as advisory.
     Prefill { seq_ids: Vec<u64>, t_bucket: usize },
+    /// Run ONE intermediate prefill chunk (`prefill_chunk_tokens` prompt
+    /// tokens, never the last one) for the queue-head sequence — chunked
+    /// prefill, DESIGN.md §12.  Intermediate chunks build KV only and
+    /// consume no Philox steps; the *final* chunk of a partial head is
+    /// deliberately NOT planned here — it falls through to the normal
+    /// [`Plan::Prefill`] scan so it batches companions and samples
+    /// exactly as the unchunked baseline would.
+    ChunkPrefill { seq_id: u64 },
     /// Decode these running sequences using the `b_bucket` artifact.
     Decode { seq_ids: Vec<u64>, b_bucket: usize },
     /// Nothing to do.
@@ -68,6 +79,22 @@ pub struct SchedulerConfig {
     /// engine steps since submission (0 disables aging).  Neutral under
     /// uniform priorities — see the module docs.
     pub aging_steps: u64,
+    /// Chunked prefill (DESIGN.md §12): split a long prompt's prefill
+    /// into windows of at most this many tokens so one adversarial
+    /// prompt cannot monopolize a step.  0 disables chunking — the plan
+    /// stream is then byte-identical to the pre-chunking scheduler.
+    /// Values above the largest prefill T bucket are clamped to it
+    /// (chunk windows run through the fixed-shape prefill executables).
+    pub prefill_chunk_tokens: usize,
+    /// Interleave chunk windows with other work on alternating steps
+    /// (even logical steps chunk, odd steps run the normal scan/decode) —
+    /// the TTFT-under-load lever.  Off (the default, "sticky" mode),
+    /// chunk windows run back-to-back, which keeps completed requests'
+    /// Philox coordinates bit-identical to the unchunked baseline;
+    /// interleaving trades that replay identity (the distribution is
+    /// unchanged — every draw still uses fresh counters) for bounded
+    /// short-request TTFT.
+    pub chunk_interleave: bool,
 }
 
 /// Effective scheduling rank: base priority plus the aging bonus.
@@ -139,6 +166,12 @@ pub fn plan(
     cached_tokens: impl Fn(&Sequence) -> usize,
     now_step: u64,
 ) -> Plan {
+    // An interleave-parity-skipped chunk window, kept as the fallback of
+    // last resort: yielding the odd step to other work must never turn
+    // into Idle starvation (run_to_completion's no-progress backstop
+    // would reject a still-fresh head).
+    let mut deferred_window: Option<&Sequence> = None;
+    let burst = cfg.max_tokens_per_step.max(1) - 1;
     // --- Prefill-priority: batch waiting prompts while capacity allows.
     if running.len() < cfg.max_concurrency {
         let headroom = cfg.max_concurrency - running.len();
@@ -150,13 +183,61 @@ pub fn plan(
         // PLUS one full step's token burst (max_tokens_per_step − 1
         // beyond the ordinary single token), so spec-decode bursts can't
         // strand a just-admitted sequence.
-        let burst = cfg.max_tokens_per_step.max(1) - 1;
         let mut queue: Vec<&Sequence> =
             waiting.iter().filter(|s| s.state == SeqState::Waiting).collect();
         sort_by_effective_rank(&mut queue, cfg, now_step);
+        // Chunk windows run through the fixed-shape prefill executables,
+        // so the window size is capped by the largest T bucket.
+        let chunk = cfg.prefill_chunk_tokens.min(max_t);
+        // --- Chunked prefill window (DESIGN.md §12): when the queue head
+        // still has more than one chunk of uncomputed suffix, open ONE
+        // window for it instead of a batch.  In interleave mode windows
+        // only run on even logical steps, leaving odd steps to the
+        // normal scan (other shorts prefill) and decode.
+        if chunk > 0 {
+            if let Some(&head) = queue.first() {
+                let remaining = if head.prefilled_tokens > 0 {
+                    // Partial head: its own restored KV covers what prior
+                    // windows built; blocks are already held, so no
+                    // admission probe.
+                    head.prompt.len() - head.prefilled_tokens
+                } else {
+                    head.prompt.len()
+                        - cached_tokens(head)
+                            .min(head.prompt.len().saturating_sub(1))
+                };
+                if remaining > chunk {
+                    if cfg.chunk_interleave && now_step % 2 == 1 {
+                        // Yield this step to the scan/decode below; the
+                        // admission probe is deferred with it so the
+                        // scan's budget tally is untouched.
+                        deferred_window = Some(head);
+                    } else if head.prefilled_tokens > 0
+                        || can_admit(head, burst)
+                    {
+                        return Plan::ChunkPrefill { seq_id: head.id };
+                    }
+                }
+            }
+        }
         let mut chosen: Vec<&Sequence> = Vec::new();
         for s in queue {
-            if s.prompt.len() > max_t || !can_admit(s, burst) {
+            // A deferred head yielded its window to this scan — it must
+            // not sneak into the batch WHOLE instead (that would turn
+            // interleave mode into whole prefill for any head that fits
+            // the largest bucket, un-yielding the very step being ceded).
+            if deferred_window.is_some_and(|d| d.id == s.id) {
+                continue;
+            }
+            if s.prefilled_tokens > 0 {
+                // A partial head's FINAL chunk (suffix now <= one window)
+                // batches here like any prefill; with a longer suffix it
+                // waits for its next window (interleave mode reaches this
+                // scan on odd steps with the window still open).
+                if s.prompt.len() - s.prefilled_tokens > chunk {
+                    continue;
+                }
+            } else if s.prompt.len() > max_t || !can_admit(s, burst) {
                 continue;
             }
             chosen.push(s);
@@ -167,11 +248,18 @@ pub fn plan(
         if !chosen.is_empty() {
             // Bucket by the longest uncached suffix (== longest prompt
             // when caching is off; the cap keeps a non-empty suffix even
-            // if the probe claims the whole prompt).
+            // if the probe claims the whole prompt).  Partial heads
+            // charge only their unprefilled suffix.
             let longest = chosen
                 .iter()
                 .map(|&s| {
-                    s.prompt.len() - cached_tokens(s).min(s.prompt.len().saturating_sub(1))
+                    if s.prefilled_tokens > 0 {
+                        s.prompt.len() - s.prefilled_tokens
+                    } else {
+                        s.prompt.len()
+                            - cached_tokens(s)
+                                .min(s.prompt.len().saturating_sub(1))
+                    }
                 })
                 .max()
                 .unwrap();
@@ -191,6 +279,14 @@ pub fn plan(
         .filter(|s| s.state == SeqState::Running)
         .collect();
     if decodable.is_empty() {
+        // Nothing else ran this step: an interleave-deferred window takes
+        // the step after all rather than idling (and rather than exposing
+        // a fresh head to the no-progress reject backstop).
+        if let Some(head) = deferred_window {
+            if head.prefilled_tokens > 0 || can_admit(head, burst) {
+                return Plan::ChunkPrefill { seq_id: head.id };
+            }
+        }
         return Plan::Idle;
     }
     sort_by_effective_rank(&mut decodable, cfg, now_step);
@@ -213,6 +309,8 @@ mod tests {
             max_concurrency: 8,
             max_tokens_per_step: 1,
             aging_steps: 0,
+            prefill_chunk_tokens: 0,
+            chunk_interleave: false,
         }
     }
 
@@ -565,6 +663,152 @@ mod tests {
             Plan::Decode { seq_ids, b_bucket } => {
                 assert_eq!(seq_ids, vec![1, 3]);
                 assert_eq!(b_bucket, 2);
+            }
+            p => panic!("{p:?}"),
+        }
+    }
+
+    /// `cfg()` with chunking enabled at the given window size.
+    fn ccfg(chunk: usize) -> SchedulerConfig {
+        SchedulerConfig { prefill_chunk_tokens: chunk, ..cfg() }
+    }
+
+    #[test]
+    fn chunk_window_opens_for_a_long_fresh_head() {
+        // 40-token head with a 16-token window: more than one chunk of
+        // suffix remains, so the plan is a single window, not a batch.
+        let waiting = vec![
+            seq(1, 40, 1.0, SeqState::Waiting),
+            seq(2, 10, 1.0, SeqState::Waiting),
+        ];
+        let p = plan(&ccfg(16), &waiting, &[], always, uncached, 0);
+        assert_eq!(p, Plan::ChunkPrefill { seq_id: 1 });
+        // chunk = 0 must replay the legacy batch plan byte-identically.
+        let p = plan(&cfg(), &waiting, &[], always, uncached, 0);
+        assert_eq!(p, Plan::Prefill { seq_ids: vec![1, 2], t_bucket: 64 });
+        // A window larger than the whole prompt: no chunking needed.
+        let p = plan(&ccfg(64), &waiting, &[], always, uncached, 0);
+        assert_eq!(p, Plan::Prefill { seq_ids: vec![1, 2], t_bucket: 64 });
+    }
+
+    #[test]
+    fn partial_head_final_chunk_batches_with_companions() {
+        // Head has prefilled 32 of 40 tokens: 8 remaining <= 16-token
+        // window, so it falls through to the normal scan and batches with
+        // the short companion — exactly the baseline's batch shape.
+        let mut head = seq(1, 40, 1.0, SeqState::Waiting);
+        head.prefilled_tokens = 32;
+        let waiting = vec![head, seq(2, 10, 1.0, SeqState::Waiting)];
+        match plan(&ccfg(16), &waiting, &[], always, uncached, 0) {
+            Plan::Prefill { seq_ids, t_bucket } => {
+                assert_eq!(seq_ids, vec![1, 2]);
+                // Bucket charges the head's 8-token suffix, not 40.
+                assert_eq!(t_bucket, 16);
+            }
+            p => panic!("{p:?}"),
+        }
+    }
+
+    #[test]
+    fn partial_head_with_long_suffix_keeps_its_window_open() {
+        let mut head = seq(1, 60, 1.0, SeqState::Waiting);
+        head.prefilled_tokens = 16;
+        let waiting = vec![head, seq(2, 10, 1.0, SeqState::Waiting)];
+        // 44 tokens remain > 16: another window, and NO admission probe
+        // (the partial head already holds its blocks).
+        let p = plan(&ccfg(16), &waiting, &[], |_, _| false, uncached, 0);
+        assert_eq!(p, Plan::ChunkPrefill { seq_id: 1 });
+    }
+
+    #[test]
+    fn chunking_admits_prompts_beyond_the_largest_t_bucket() {
+        // A 100-token prompt exceeds t=64 and is unservable unchunked
+        // (oversized_prompt_skipped above) — but windows of 16 cover it.
+        let waiting = vec![seq(1, 100, 1.0, SeqState::Waiting)];
+        let p = plan(&ccfg(16), &waiting, &[], always, uncached, 0);
+        assert_eq!(p, Plan::ChunkPrefill { seq_id: 1 });
+        // The window size itself is clamped to the largest bucket: the
+        // executables are fixed-shape.
+        let p = plan(&ccfg(1000), &waiting, &[], always, uncached, 0);
+        assert_eq!(p, Plan::ChunkPrefill { seq_id: 1 });
+        // Once partially prefilled down to a final suffix <= window, it
+        // batches even though prompt.len() > max_t.
+        let mut head = seq(1, 100, 1.0, SeqState::Waiting);
+        head.prefilled_tokens = 96;
+        match plan(&ccfg(16), &[head], &[], always, uncached, 0) {
+            Plan::Prefill { seq_ids, t_bucket } => {
+                assert_eq!(seq_ids, vec![1]);
+                assert_eq!(t_bucket, 16);
+            }
+            p => panic!("{p:?}"),
+        }
+    }
+
+    #[test]
+    fn interleave_alternates_windows_with_other_work() {
+        let mut head = seq(1, 60, 1.0, SeqState::Waiting);
+        head.prefilled_tokens = 16; // 44 remaining: window stays open
+        let waiting = vec![head, seq(2, 10, 1.0, SeqState::Waiting)];
+        let running = vec![seq(3, 5, 1.0, SeqState::Running)];
+        let mut c = ccfg(16);
+        c.chunk_interleave = true;
+        // Even step: the head's window runs.
+        let p = plan(&c, &waiting, &running, always, uncached, 0);
+        assert_eq!(p, Plan::ChunkPrefill { seq_id: 1 });
+        // Odd step: the partial head is skipped (suffix > window) and the
+        // short companion prefills instead — that's the TTFT lever.
+        match plan(&c, &waiting, &running, always, uncached, 1) {
+            Plan::Prefill { seq_ids, .. } => assert_eq!(seq_ids, vec![2]),
+            p => panic!("{p:?}"),
+        }
+        // Odd step with nothing else waiting: decode proceeds.
+        let solo = vec![waiting[0].clone()];
+        let p = plan(&c, &solo, &running, always, uncached, 1);
+        assert_eq!(p, Plan::Decode { seq_ids: vec![3], b_bucket: 1 });
+        // Sticky mode never yields the window: odd steps still chunk.
+        let p = plan(&ccfg(16), &waiting, &running, always, uncached, 1);
+        assert_eq!(p, Plan::ChunkPrefill { seq_id: 1 });
+        // Odd step, interleave, solo head, NOTHING else to run: the
+        // deferred window fires instead of Idle — otherwise the engine's
+        // no-progress backstop would reject a perfectly servable head.
+        let p = plan(&c, &solo, &[], always, uncached, 1);
+        assert_eq!(p, Plan::ChunkPrefill { seq_id: 1 });
+        let fresh = vec![seq(4, 60, 1.0, SeqState::Waiting)];
+        let p = plan(&c, &fresh, &[], always, uncached, 1);
+        assert_eq!(p, Plan::ChunkPrefill { seq_id: 4 });
+        // A FRESH long head on an odd step is deferred, not batched whole
+        // (60 fits the 64 bucket, so without the exclusion the scan would
+        // whole-prefill it and interleave mode would never open windows):
+        // the short companion prefills alone.
+        let fresh2 = vec![
+            seq(4, 60, 1.0, SeqState::Waiting),
+            seq(5, 10, 1.0, SeqState::Waiting),
+        ];
+        match plan(&c, &fresh2, &running, always, uncached, 1) {
+            Plan::Prefill { seq_ids, .. } => assert_eq!(seq_ids, vec![5]),
+            p => panic!("{p:?}"),
+        }
+    }
+
+    #[test]
+    fn chunk_window_respects_admission_and_cached_prefix() {
+        // Fresh head denied admission: no window, companion prefills.
+        let waiting = vec![
+            seq(1, 40, 1.0, SeqState::Waiting),
+            seq(2, 10, 1.0, SeqState::Waiting),
+        ];
+        let admit = |s: &Sequence, _: usize| s.id == 2;
+        match plan(&ccfg(16), &waiting, &[], admit, uncached, 0) {
+            Plan::Prefill { seq_ids, .. } => assert_eq!(seq_ids, vec![2]),
+            p => panic!("{p:?}"),
+        }
+        // A cached prefix shrinks the fresh head's effective suffix below
+        // the window: no chunking, straight to a normal batch.
+        let cached = |s: &Sequence| if s.id == 1 { 32 } else { 0 };
+        match plan(&ccfg(16), &waiting, &[], always, cached, 0) {
+            Plan::Prefill { seq_ids, t_bucket } => {
+                assert_eq!(seq_ids, vec![1, 2]);
+                assert_eq!(t_bucket, 16);
             }
             p => panic!("{p:?}"),
         }

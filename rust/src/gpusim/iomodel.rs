@@ -1,4 +1,6 @@
-//! The paper's §3.3 IO cost model, verbatim.
+//! The paper's §3.3 IO cost model, verbatim — plus the host-interconnect
+//! (PCIe) transfer model the serving layer's swap-vs-recompute preemption
+//! policy prices against (DESIGN.md §12).
 //!
 //! Counts HBM element movement for the baseline (materialize logits, read
 //! them back) and the fused kernel (no logits round-trip), in *elements*
@@ -51,6 +53,120 @@ pub fn logits_store_overhead_modeled(w: Workload) -> f64 {
     pred / 0.7 + 0.004 / (1.0 + w.batch as f64 / 16.0)
 }
 
+// ---------------------------------------------------------------------
+// PCIe transfer model + swap-vs-recompute policy (DESIGN.md §12)
+// ---------------------------------------------------------------------
+
+/// Effective host-link bandwidth of a PCIe Gen5 x16 slot in GB/s.
+pub const PCIE_GEN5_X16_GBS: f64 = 64.0;
+
+/// First-order host-interconnect model: fixed launch/doorbell latency plus
+/// bytes over sustained bandwidth.  Deliberately ignores contention — the
+/// policy only needs relative magnitudes (a KV block is ~100s of KB, a
+/// prefill chunk ~100s of µs), not a bus simulator.
+#[derive(Clone, Copy, Debug)]
+pub struct PcieModel {
+    /// Sustained bandwidth in GB/s.
+    pub bw_gbs: f64,
+    /// Per-transfer fixed latency in µs (DMA setup + completion).
+    pub latency_us: f64,
+}
+
+impl Default for PcieModel {
+    fn default() -> Self {
+        Self { bw_gbs: PCIE_GEN5_X16_GBS, latency_us: 10.0 }
+    }
+}
+
+impl PcieModel {
+    /// Bytes of one paged-KV block: K and V, all layers, FP32 (the
+    /// simulator's storage dtype).
+    pub fn kv_block_bytes(
+        n_layers: usize,
+        n_heads: usize,
+        head_dim: usize,
+        block_size: usize,
+    ) -> usize {
+        2 * n_layers * n_heads * head_dim * block_size * 4
+    }
+
+    /// One-way transfer time in µs for `bytes` over the link.
+    /// GB/s = bytes/ns, so bytes / (bw * 1e3) gives µs.
+    pub fn transfer_us(&self, bytes: usize) -> f64 {
+        self.latency_us + bytes as f64 / (self.bw_gbs * 1e3)
+    }
+
+    /// Cost of re-running prefill over `tokens` at a calibrated per-token
+    /// rate — the alternative the swap transfer competes with.
+    pub fn recompute_us(&self, tokens: usize, prefill_us_per_token: f64) -> f64 {
+        tokens as f64 * prefill_us_per_token
+    }
+}
+
+/// Operator-facing preemption policy knob (`swap_policy` config key).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum SwapPolicy {
+    /// Price swap (PCIe round-trip) against recompute and pick the
+    /// cheaper side.
+    #[default]
+    Auto,
+    /// Always prefer the swap tier when ledger capacity allows.
+    Always,
+    /// Never swap — legacy finish-early preemption only.
+    Never,
+}
+
+impl std::str::FromStr for SwapPolicy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "auto" => Ok(Self::Auto),
+            "always" => Ok(Self::Always),
+            "never" => Ok(Self::Never),
+            other => Err(format!(
+                "unknown swap_policy {other:?} (auto|always|never)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for SwapPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Self::Auto => "auto",
+            Self::Always => "always",
+            Self::Never => "never",
+        })
+    }
+}
+
+/// What the engine does with a preemption victim.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PreemptAction {
+    /// Park private KV blocks in the host ledger; resume later.
+    Swap,
+    /// Drop the sequence's work (finish early / recompute on resubmit).
+    Recompute,
+}
+
+/// Policy decision: swap out-and-back costs `swap_us` (already a round
+/// trip if the caller priced one), recomputing the context costs
+/// `recompute_us`.
+pub fn choose(policy: SwapPolicy, swap_us: f64, recompute_us: f64) -> PreemptAction {
+    match policy {
+        SwapPolicy::Always => PreemptAction::Swap,
+        SwapPolicy::Never => PreemptAction::Recompute,
+        SwapPolicy::Auto => {
+            if swap_us <= recompute_us {
+                PreemptAction::Swap
+            } else {
+                PreemptAction::Recompute
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -101,5 +217,49 @@ mod tests {
             assert!(meas > pred);
             assert!(meas < pred * 1.5 + 0.01, "B={b}: {meas} vs {pred}");
         }
+    }
+
+    #[test]
+    fn pcie_transfer_time_is_monotone_in_bytes_and_bandwidth() {
+        let m = PcieModel::default();
+        assert!(m.transfer_us(0) >= m.latency_us);
+        assert!(m.transfer_us(1 << 20) < m.transfer_us(1 << 24));
+        let fast = PcieModel { bw_gbs: 128.0, ..m };
+        assert!(fast.transfer_us(1 << 24) < m.transfer_us(1 << 24));
+        // A 2-layer 4-head dh=8 bs=16 block: 2*2*4*8*16*4 = 8192 bytes.
+        assert_eq!(PcieModel::kv_block_bytes(2, 4, 8, 16), 8192);
+        // Sanity magnitude: 8 KiB over 64 GB/s ≈ latency-dominated.
+        assert!(m.transfer_us(8192) < m.latency_us + 1.0);
+    }
+
+    #[test]
+    fn swap_policy_parses_and_roundtrips() {
+        for p in [SwapPolicy::Auto, SwapPolicy::Always, SwapPolicy::Never] {
+            assert_eq!(p.to_string().parse::<SwapPolicy>().unwrap(), p);
+        }
+        assert!("sometimes".parse::<SwapPolicy>().is_err());
+        assert_eq!(SwapPolicy::default(), SwapPolicy::Auto);
+    }
+
+    #[test]
+    fn auto_policy_picks_the_cheaper_side() {
+        assert_eq!(choose(SwapPolicy::Auto, 50.0, 100.0), PreemptAction::Swap);
+        assert_eq!(
+            choose(SwapPolicy::Auto, 100.0, 50.0),
+            PreemptAction::Recompute
+        );
+        assert_eq!(choose(SwapPolicy::Always, 1e9, 0.0), PreemptAction::Swap);
+        assert_eq!(
+            choose(SwapPolicy::Never, 0.0, 1e9),
+            PreemptAction::Recompute
+        );
+        // A long-context victim with few private blocks should swap under
+        // Auto with realistic numbers: 4 blocks of a small model vs 500
+        // tokens of recompute at 50 µs/token.
+        let m = PcieModel::default();
+        let bytes = 4 * PcieModel::kv_block_bytes(4, 8, 64, 16);
+        let swap = 2.0 * m.transfer_us(bytes); // out + back in
+        let recompute = m.recompute_us(500, 50.0);
+        assert_eq!(choose(SwapPolicy::Auto, swap, recompute), PreemptAction::Swap);
     }
 }

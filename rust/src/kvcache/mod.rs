@@ -29,6 +29,19 @@
 //! page surviving its sequence.  The *management* layer — allocation,
 //! fragmentation, eviction, utilization accounting — is the real
 //! vLLM-equivalent machinery and is what the coordinator benches exercise.
+//!
+//! **Swap tier** (DESIGN.md §12): instead of throwing a preempted
+//! sequence's KV away, [`KvCacheManager::swap_out`] moves its *private*
+//! blocks to a host-side ledger (capacity [`KvCacheManager::set_swap_capacity`],
+//! modeling pinned host memory over PCIe) and frees them device-side;
+//! [`KvCacheManager::swap_in`] re-allocates them when pressure clears.
+//! Prefix-cache attachments are deliberately NOT swapped: the attached
+//! chain stays pinned (tree refs + allocator refs held, `seq_nodes`
+//! untouched), so a swap round-trip preserves radix identity by
+//! construction — the same nodes serve the same prefixes before, during,
+//! and after the swap.  In the dense-KV substitution the physical bytes
+//! live in `Sequence.kv` either way; the ledger is the accounting truth
+//! the PCIe cost model ([`crate::gpusim::iomodel::PcieModel`]) prices.
 
 pub mod allocator;
 
@@ -101,6 +114,15 @@ impl BatchAdmission {
     }
 }
 
+/// Host-side swap ledger entry for one swapped-out sequence: how many
+/// private blocks were freed device-side and the logical token length to
+/// restore at swap-in.
+#[derive(Clone, Copy, Debug)]
+struct SwapEntry {
+    blocks: usize,
+    len: usize,
+}
+
 /// High-level cache manager: per-sequence block tables over one allocator,
 /// plus the optional prefix-cache radix tree.
 pub struct KvCacheManager {
@@ -112,6 +134,10 @@ pub struct KvCacheManager {
     /// detach; the inverse of `RadixTree::attach`).
     seq_nodes: std::collections::HashMap<u64, Vec<usize>>,
     evicted_blocks: u64,
+    /// Host-side swap ledger: seq id -> freed private blocks + length.
+    swapped: std::collections::HashMap<u64, SwapEntry>,
+    /// Ledger capacity in blocks (0 = swap tier disabled).
+    swap_capacity: usize,
 }
 
 impl KvCacheManager {
@@ -123,6 +149,8 @@ impl KvCacheManager {
             prefix: config.prefix_caching.then(|| RadixTree::new(config.block_size)),
             seq_nodes: std::collections::HashMap::new(),
             evicted_blocks: 0,
+            swapped: std::collections::HashMap::new(),
+            swap_capacity: 0,
         }
     }
 
@@ -415,11 +443,15 @@ impl KvCacheManager {
     }
 
     /// Release all blocks of a finished/preempted sequence (and its
-    /// prefix-cache attachments, if any).
+    /// prefix-cache attachments and any pending swap-ledger entry).
+    /// Aborting a swapped-out sequence lands here: the resident stub (the
+    /// pinned attached chain) frees, the attachments detach, and the
+    /// host-side entry vanishes — ledger and pool both balance.
     pub fn release(&mut self, seq_id: u64) -> Result<()> {
         let Some(table) = self.tables.remove(&seq_id) else {
             bail!("sequence {seq_id} not registered");
         };
+        self.swapped.remove(&seq_id);
         if let Some(nodes) = self.seq_nodes.remove(&seq_id) {
             if let Some(tree) = self.prefix.as_mut() {
                 tree.detach(&nodes);
@@ -429,6 +461,101 @@ impl KvCacheManager {
             self.allocator.free(*b)?;
         }
         Ok(())
+    }
+
+    // -----------------------------------------------------------------
+    // Swap tier (DESIGN.md §12)
+    // -----------------------------------------------------------------
+
+    /// Set the host-side swap ledger capacity in blocks (0 disables the
+    /// swap tier).  Models a pinned host buffer sized by the operator.
+    pub fn set_swap_capacity(&mut self, blocks: usize) {
+        self.swap_capacity = blocks;
+    }
+
+    pub fn swap_capacity(&self) -> usize {
+        self.swap_capacity
+    }
+
+    /// Blocks currently parked in the host-side ledger.
+    pub fn swapped_blocks(&self) -> usize {
+        self.swapped.values().map(|e| e.blocks).sum()
+    }
+
+    /// Sequences currently swapped out.
+    pub fn swapped_sequences(&self) -> usize {
+        self.swapped.len()
+    }
+
+    pub fn is_swapped(&self, seq_id: u64) -> bool {
+        self.swapped.contains_key(&seq_id)
+    }
+
+    /// The prefix-cache node ids `seq_id` is attached through (chain
+    /// order) — the radix-identity audit hook: a swap round-trip must
+    /// leave this list (and the nodes' blocks) bit-identical.
+    pub fn seq_attached_nodes(&self, seq_id: u64) -> Vec<usize> {
+        self.seq_nodes.get(&seq_id).cloned().unwrap_or_default()
+    }
+
+    /// Swap a preempted sequence's *private* blocks out to the host-side
+    /// ledger, freeing them device-side.  The first `attached` table
+    /// entries (its prefix-cache chain) stay resident and pinned — tree
+    /// refs, allocator refs, and `seq_nodes` are untouched, which is what
+    /// preserves radix identity across the round-trip.  Returns
+    /// `Ok(None)` when the ledger lacks capacity (the caller falls back
+    /// to finish-and-recompute), `Ok(Some(n))` with the number of blocks
+    /// parked on success.
+    pub fn swap_out(&mut self, seq_id: u64) -> Result<Option<usize>> {
+        if self.swapped.contains_key(&seq_id) {
+            bail!("sequence {seq_id} is already swapped out");
+        }
+        let attached = self.seq_nodes.get(&seq_id).map_or(0, |n| n.len());
+        let Some(table) = self.tables.get(&seq_id) else {
+            bail!("sequence {seq_id} not registered");
+        };
+        let private = table.num_blocks() - attached;
+        if self.swapped_blocks() + private > self.swap_capacity {
+            return Ok(None);
+        }
+        let len = table.len();
+        let table = self.tables.get_mut(&seq_id).expect("checked above");
+        for _ in 0..private {
+            let b = table.pop().expect("num_blocks > attached");
+            self.allocator.free(b)?;
+        }
+        if private > 0 {
+            // Invariant num_blocks == ceil(len / bs) guarantees
+            // len > attached * bs whenever a private block existed.
+            table.set_len(attached * self.config.block_size);
+        }
+        self.swapped.insert(seq_id, SwapEntry { blocks: private, len });
+        Ok(Some(private))
+    }
+
+    /// Bring a swapped-out sequence back: re-allocate its private blocks
+    /// (evicting cache LRU leaves under pressure) and restore its logical
+    /// length.  `Ok(None)` on transient exhaustion — the sequence stays
+    /// in the ledger and the caller retries later; `Ok(Some(n))` with the
+    /// blocks restored on success.
+    pub fn swap_in(&mut self, seq_id: u64) -> Result<Option<usize>> {
+        let Some(entry) = self.swapped.get(&seq_id).copied() else {
+            bail!("sequence {seq_id} is not swapped out");
+        };
+        if !self.tables.contains_key(&seq_id) {
+            bail!("sequence {seq_id} not registered");
+        }
+        if !self.ensure_free(entry.blocks) {
+            return Ok(None);
+        }
+        let blocks = self.allocator.allocate_many(entry.blocks)?;
+        let table = self.tables.get_mut(&seq_id).expect("checked above");
+        for b in blocks {
+            table.push(b);
+        }
+        table.set_len(entry.len);
+        self.swapped.remove(&seq_id);
+        Ok(Some(entry.blocks))
     }
 
     /// Fork a sequence sharing all current blocks copy-on-write (used for
@@ -938,6 +1065,214 @@ mod tests {
                 32,
                 "leaked blocks (cache/allocator refcounts out of lockstep)"
             );
+            m.clear_prefix_cache();
+            assert_eq!(m.free_blocks(), 32, "cache held phantom refs");
+        });
+    }
+
+    #[test]
+    fn swap_roundtrip_preserves_radix_identity() {
+        // A prefix-cache-attached sequence swaps out and back in: its
+        // private blocks leave and return, but the attached chain — node
+        // ids, attached refs, cached payloads — must be bit-identical.
+        let mut m = pmgr(16);
+        m.set_swap_capacity(8);
+        let prompt: Vec<i32> = (0..10).collect(); // 2 cached blocks + tail
+        m.register_with_prefix(1, &prompt).unwrap();
+        m.insert_prefix(1, &prompt, |j| BlockKv {
+            k: vec![j as f32],
+            v: vec![],
+        })
+        .unwrap();
+        m.release(1).unwrap();
+        let a = m.register_with_prefix(2, &prompt).unwrap();
+        assert_eq!(a.cached_tokens, 8);
+        for _ in 0..3 {
+            assert!(m.append_token(2).unwrap()); // len 13, 4 blocks
+        }
+        let nodes_before = m.seq_attached_nodes(2);
+        let refs_before = m.prefix_attached_refs();
+        let free_before = m.free_blocks();
+        assert_eq!(nodes_before.len(), 2);
+
+        // Out: 2 private blocks leave; the 2 attached stay pinned.
+        assert_eq!(m.swap_out(2).unwrap(), Some(2));
+        assert!(m.is_swapped(2));
+        assert_eq!(m.swapped_blocks(), 2);
+        assert_eq!(m.swapped_sequences(), 1);
+        assert_eq!(m.free_blocks(), free_before + 2);
+        assert_eq!(m.table(2).unwrap().num_blocks(), 2);
+        assert_eq!(m.table(2).unwrap().len(), 8); // attached * block_size
+        assert_eq!(m.seq_attached_nodes(2), nodes_before);
+        assert_eq!(m.prefix_attached_refs(), refs_before);
+        // Double swap-out is a caller bug.
+        assert!(m.swap_out(2).is_err());
+
+        // In: private blocks return, logical length restores, ledger
+        // empties, and the radix attachment never moved.
+        assert_eq!(m.swap_in(2).unwrap(), Some(2));
+        assert!(!m.is_swapped(2));
+        assert_eq!(m.swapped_blocks(), 0);
+        assert_eq!(m.free_blocks(), free_before);
+        assert_eq!(m.table(2).unwrap().num_blocks(), 4);
+        assert_eq!(m.table(2).unwrap().len(), 13);
+        assert_eq!(m.seq_attached_nodes(2), nodes_before);
+        assert_eq!(m.prefix_attached_refs(), refs_before);
+        // Cached payloads still served to a third sequence.
+        let a3 = m.register_with_prefix(3, &prompt).unwrap();
+        assert_eq!(a3.cached_tokens, 8);
+        assert_eq!(a3.kv[1].k, vec![1.0]);
+        assert!(m.swap_in(2).is_err()); // not swapped any more
+
+        m.release(2).unwrap();
+        m.release(3).unwrap();
+        m.clear_prefix_cache();
+        assert_eq!(m.free_blocks(), 16);
+        assert_eq!(m.unaccounted_blocks(), 0);
+    }
+
+    #[test]
+    fn swap_out_respects_ledger_capacity_and_zero_means_disabled() {
+        let mut m = mgr(16);
+        m.register(1, 12).unwrap(); // 3 private blocks
+        // Capacity 0 (default): the tier is off.
+        assert_eq!(m.swap_out(1).unwrap(), None);
+        // Capacity 2 < 3 private blocks: still no.
+        m.set_swap_capacity(2);
+        assert_eq!(m.swap_out(1).unwrap(), None);
+        assert_eq!(m.swapped_sequences(), 0);
+        assert_eq!(m.free_blocks(), 13); // refused swap changed nothing
+        // Capacity 3: fits exactly; a second victim then finds it full.
+        m.set_swap_capacity(3);
+        assert_eq!(m.swap_out(1).unwrap(), Some(3));
+        m.register(2, 4).unwrap();
+        assert_eq!(m.swap_out(2).unwrap(), None, "ledger already full");
+        assert_eq!(m.swap_capacity(), 3);
+        assert!(m.swap_out(99).is_err()); // unknown sequence
+        m.release(1).unwrap();
+        m.release(2).unwrap();
+        assert_eq!(m.free_blocks(), 16);
+    }
+
+    #[test]
+    fn swap_in_reports_transient_exhaustion_and_retries() {
+        let mut m = mgr(4);
+        m.set_swap_capacity(4);
+        m.register(1, 12).unwrap(); // 3 blocks
+        assert_eq!(m.swap_out(1).unwrap(), Some(3));
+        m.register(2, 8).unwrap(); // stranger takes 2 of the 3 freed
+        assert_eq!(m.free_blocks(), 2);
+        // Only 2 free but 3 needed: stays in the ledger for a later retry.
+        assert_eq!(m.swap_in(1).unwrap(), None);
+        assert!(m.is_swapped(1));
+        assert_eq!(m.free_blocks(), 2); // failed attempt allocated nothing
+        m.release(2).unwrap();
+        assert_eq!(m.swap_in(1).unwrap(), Some(3));
+        assert_eq!(m.table(1).unwrap().len(), 12);
+        m.release(1).unwrap();
+        assert_eq!(m.free_blocks(), 4);
+    }
+
+    #[test]
+    fn abort_while_swapped_clears_the_ledger() {
+        let mut m = pmgr(16);
+        m.set_swap_capacity(8);
+        let prompt: Vec<i32> = (0..10).collect();
+        m.register_with_prefix(1, &prompt).unwrap();
+        m.insert_prefix(1, &prompt, |_| BlockKv::default()).unwrap();
+        // The publisher holds plain allocator refs (no attachments), so all
+        // 3 of its blocks count as private; the 2 cache-shared ones stay
+        // alive cache-side on the tree's own refs.
+        m.swap_out(1).unwrap().unwrap();
+        assert_eq!(m.swapped_blocks(), 3);
+        // Abort lands in release(): resident stub freed, attachments
+        // detached, ledger entry gone.
+        m.release(1).unwrap();
+        assert_eq!(m.swapped_blocks(), 0);
+        assert_eq!(m.swapped_sequences(), 0);
+        assert_eq!(m.prefix_attached_refs(), 0);
+        assert_eq!(m.unaccounted_blocks(), 0);
+        m.clear_prefix_cache();
+        assert_eq!(m.free_blocks(), 16);
+    }
+
+    #[test]
+    fn prop_swap_ledger_and_pool_stay_balanced() {
+        // Random interleaving of registrations, appends, swap-outs,
+        // swap-ins, and releases (some while swapped): at every step
+        // free + cached <= total and the ledger only holds live swapped
+        // sequences; at quiescence the pool is pristine and the ledger
+        // empty.
+        testutil::cases(48, 0x54A9, |g| {
+            let mut m = pmgr(32);
+            m.set_swap_capacity(g.usize_in(0, 16));
+            let prompts: Vec<Vec<i32>> = (0..3)
+                .map(|p| {
+                    let len = 6 + 5 * p;
+                    (0..len as i32).map(|i| i + 200 * p as i32).collect()
+                })
+                .collect();
+            let mut live: Vec<u64> = Vec::new(); // resident
+            let mut parked: Vec<u64> = Vec::new(); // swapped out
+            let mut next_id = 0u64;
+            for _ in 0..g.usize_in(1, 60) {
+                let roll = g.f32_in(0.0, 1.0);
+                if live.is_empty() && parked.is_empty() || roll < 0.35 {
+                    let p = g.usize_in(0, prompts.len() - 1);
+                    if m.can_allocate_prefill(&prompts[p], 0) {
+                        m.register_with_prefix(next_id, &prompts[p]).unwrap();
+                        if g.bool(0.5) {
+                            m.insert_prefix(next_id, &prompts[p], |_| {
+                                BlockKv::default()
+                            })
+                            .unwrap();
+                        }
+                        live.push(next_id);
+                        next_id += 1;
+                    }
+                } else if roll < 0.5 && !live.is_empty() {
+                    let id = *g.choose(&live);
+                    let _ = m.append_token(id).unwrap();
+                } else if roll < 0.65 && !live.is_empty() {
+                    let idx = g.usize_in(0, live.len() - 1);
+                    let id = live[idx];
+                    if m.swap_out(id).unwrap().is_some() {
+                        live.swap_remove(idx);
+                        parked.push(id);
+                    }
+                } else if roll < 0.8 && !parked.is_empty() {
+                    let idx = g.usize_in(0, parked.len() - 1);
+                    let id = parked[idx];
+                    if m.swap_in(id).unwrap().is_some() {
+                        parked.swap_remove(idx);
+                        live.push(id);
+                    }
+                } else if !live.is_empty() || !parked.is_empty() {
+                    // Release — sometimes a swapped sequence (abort path).
+                    let from_parked = !parked.is_empty()
+                        && (live.is_empty() || g.bool(0.4));
+                    let id = if from_parked {
+                        let idx = g.usize_in(0, parked.len() - 1);
+                        parked.swap_remove(idx)
+                    } else {
+                        let idx = g.usize_in(0, live.len() - 1);
+                        live.swap_remove(idx)
+                    };
+                    m.release(id).unwrap();
+                }
+                assert!(
+                    m.free_blocks() + m.prefix_cached_blocks() <= 32,
+                    "over-committed pool"
+                );
+                assert_eq!(m.swapped_sequences(), parked.len());
+                assert!(m.swapped_blocks() <= m.swap_capacity());
+            }
+            for id in live.into_iter().chain(parked) {
+                m.release(id).unwrap();
+            }
+            assert_eq!(m.swapped_blocks(), 0);
+            assert_eq!(m.num_sequences(), 0);
+            assert_eq!(m.unaccounted_blocks(), 0, "leaked blocks");
             m.clear_prefix_cache();
             assert_eq!(m.free_blocks(), 32, "cache held phantom refs");
         });

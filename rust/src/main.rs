@@ -24,7 +24,7 @@ fn usage() -> ! {
         "usage: flashsampling <serve|repro|bench-kernel|selfcheck> [args]\n\
          \n\
          serve        --config FILE | --set key=value ...\n\
-         repro        <table1|table4|...|fig6|chisq|hetero-chisq|specdec-chisq|prefix-identity|stream-identity|e2e-quality|all|stats> [--out DIR]\n\
+         repro        <table1|table4|...|fig6|chisq|hetero-chisq|specdec-chisq|prefix-identity|stream-identity|chunk-identity|e2e-quality|all|stats> [--out DIR]\n\
          bench-kernel [--set key=value ...]\n\
          selfcheck    [--set key=value ...]"
     );

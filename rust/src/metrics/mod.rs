@@ -92,6 +92,15 @@ pub struct ServingMetrics {
     /// Prefill tokens served from the automatic prefix cache instead of
     /// being recomputed (DESIGN.md §10); always `<= prefill_tokens`.
     pub cached_prefill_tokens: u64,
+    /// Intermediate chunk windows executed by chunked prefill
+    /// (DESIGN.md §12).  Sampling final chunks run as ordinary prefill
+    /// batches and are not counted here.
+    pub chunked_prefill_steps: u64,
+    /// KV blocks moved into the host-side swap ledger on preemption.
+    pub swap_out_blocks: u64,
+    /// KV blocks restored from the swap ledger on resume; at quiescence
+    /// `<= swap_out_blocks` (aborted-while-swapped blocks never return).
+    pub swap_in_blocks: u64,
     pub ttft: Vec<Duration>,
     pub tpot: Vec<Duration>,
     /// Every inter-token (decode) latency across all requests — the
@@ -204,6 +213,9 @@ impl ServingMetrics {
             ("tokens_generated", self.tokens_generated),
             ("prefill_tokens", self.prefill_tokens),
             ("cached_prefill_tokens", self.cached_prefill_tokens),
+            ("chunked_prefill_steps", self.chunked_prefill_steps),
+            ("swap_out_blocks", self.swap_out_blocks),
+            ("swap_in_blocks", self.swap_in_blocks),
         ] {
             out.push_str(&format!(
                 "# TYPE flashsampling_{name} counter\n\
@@ -345,6 +357,9 @@ mod tests {
         m.tokens_generated = 40;
         m.prefill_tokens = 100;
         m.cached_prefill_tokens = 50;
+        m.chunked_prefill_steps = 4;
+        m.swap_out_blocks = 6;
+        m.swap_in_blocks = 5;
         m.wall = Duration::from_secs(2);
         m.ttft = vec![
             Duration::from_millis(10),
@@ -364,6 +379,12 @@ flashsampling_tokens_generated 40
 flashsampling_prefill_tokens 100
 # TYPE flashsampling_cached_prefill_tokens counter
 flashsampling_cached_prefill_tokens 50
+# TYPE flashsampling_chunked_prefill_steps counter
+flashsampling_chunked_prefill_steps 4
+# TYPE flashsampling_swap_out_blocks counter
+flashsampling_swap_out_blocks 6
+# TYPE flashsampling_swap_in_blocks counter
+flashsampling_swap_in_blocks 5
 # TYPE flashsampling_prefix_hit_rate gauge
 flashsampling_prefix_hit_rate 0.500000
 # TYPE flashsampling_throughput_tokens_per_second gauge

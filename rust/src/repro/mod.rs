@@ -22,15 +22,17 @@ pub const ALL: [&str; 13] = [
 
 /// Statistical experiments (run real sampling; `e2e-quality` needs
 /// artifacts and a few minutes, the rest — including the prefix-cache
-/// on/off identity check and the streaming-front-end identity/abort
+/// on/off identity check, the streaming-front-end identity/abort
+/// certificate, and the chunked-prefill/swap-tier replay-identity
 /// certificate — are fast and deterministic, so CI runs them as a smoke
 /// gate after `cargo test`).
-pub const STATS: [&str; 6] = [
+pub const STATS: [&str; 7] = [
     "chisq",
     "hetero-chisq",
     "specdec-chisq",
     "prefix-identity",
     "stream-identity",
+    "chunk-identity",
     "e2e-quality",
 ];
 
@@ -56,6 +58,7 @@ pub fn run(id: &str, out_dir: &Path) -> Result<String> {
         "specdec-chisq" => quality::specdec_chisq()?,
         "prefix-identity" => quality::prefix_identity()?,
         "stream-identity" => quality::stream_identity()?,
+        "chunk-identity" => quality::chunk_identity()?,
         "e2e-quality" => quality::e2e_quality(None)?,
         other => anyhow::bail!("unknown experiment id '{other}'"),
     };

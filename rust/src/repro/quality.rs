@@ -363,6 +363,8 @@ fn prefix_sim(
         max_concurrency: 8,
         max_tokens_per_step: 1,
         aging_steps,
+        prefill_chunk_tokens: 0,
+        chunk_interleave: false,
     };
     let mut kv = KvCacheManager::new(KvCacheConfig {
         block_size: 16,
@@ -474,6 +476,9 @@ fn prefix_sim(
                     let s = running.remove(ri);
                     kv.release(s.id).expect("registered");
                 }
+            }
+            Plan::ChunkPrefill { .. } => {
+                unreachable!("prefix_sim runs with chunking disabled")
             }
             Plan::Idle => break,
         }
@@ -809,6 +814,166 @@ pub fn stream_identity() -> Result<String> {
     Ok(md)
 }
 
+/// `chunk-identity` — chunked prefill's exactness certificate (DESIGN.md
+/// §12, the acceptance criterion of the chunked-prefill + swap-tier
+/// subsystem): sticky chunk windows run the prompt through the cached-
+/// prefill artifact *without sampling*, so the final chunk's batch sees
+/// the same rows and the same Philox step counter as an unchunked
+/// prefill — no coordinate may move.
+///
+/// The certificate drives the REAL scheduler + KV manager through the
+/// engine-mirroring [`crate::testutil::schedsim`] harness:
+///
+/// 1. **Replay identity** — deterministic and randomized closed-loop
+///    scripts, chunked vs unchunked: token coordinates, first-token
+///    (row, Philox step), and finish state must be identical for every
+///    request.  (`ttft_weighted` is excluded — chunking reshapes *time*,
+///    never coordinates.)
+/// 2. **Capability** — a prompt beyond the largest prefill T bucket is
+///    unservable without chunking (submit-time rejection) and must
+///    complete with it.
+/// 3. **Swap balance** — forced mid-decode preemptions to the swap tier:
+///    every swapped-out block must swap back in, and the run must drain
+///    with zero leaks (the harness panics on any per-step ledger
+///    imbalance).
+pub fn chunk_identity() -> Result<String> {
+    use crate::testutil::schedsim::{self, Finish, Sim, SimConfig, SimRequest};
+    use crate::testutil::Gen;
+
+    fn script(prompts: &[usize], gen_len: usize) -> Vec<SimRequest> {
+        prompts
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| SimRequest {
+                id: i as u64,
+                prompt_len: p,
+                max_new_tokens: gen_len,
+                arrival_step: 0,
+            })
+            .collect()
+    }
+
+    /// Outcome equality modulo `ttft_weighted`.
+    fn identical(base: &SimConfig, chunk: usize, reqs: &[SimRequest]) -> bool {
+        let mut off = base.clone();
+        off.sched.prefill_chunk_tokens = 0;
+        let mut on = base.clone();
+        on.sched.prefill_chunk_tokens = chunk;
+        on.sched.chunk_interleave = false;
+        let a = schedsim::run(off, reqs);
+        let b = schedsim::run(on, reqs);
+        a.len() == b.len()
+            && a.iter().all(|(id, x)| {
+                b.get(id).is_some_and(|y| {
+                    x.tokens == y.tokens
+                        && x.first_token == y.first_token
+                        && x.finish == y.finish
+                })
+            })
+    }
+
+    let base = SimConfig::small(2048);
+    let verdict = |ok: bool| if ok { "IDENTICAL" } else { "MISMATCH" };
+    let mut all_ok = true;
+    let mut md = String::from(
+        "## chunk-identity — chunked prefill exactness certificate \
+         (engine-mirroring scheduler sim, real plan() + KV manager)\n\n\
+         ### Replay identity: chunked (sticky) vs unchunked\n\n\
+         | scenario | chunk | requests | verdict |\n|---|---|---|---|\n",
+    );
+
+    // 1a. Deterministic scenarios.
+    let fixed: [(&str, usize, Vec<SimRequest>); 3] = [
+        ("uniform shorts", 16, script(&[24; 6], 6)),
+        ("long head + companions", 16, script(&[60, 20, 20, 20], 4)),
+        ("window-free (chunk = max bucket)", 64, script(&[60, 24], 5)),
+    ];
+    for (name, chunk, reqs) in &fixed {
+        let ok = identical(&base, *chunk, reqs);
+        all_ok &= ok;
+        md.push_str(&format!(
+            "| {name} | {chunk} | {} | {} |\n",
+            reqs.len(),
+            verdict(ok)
+        ));
+    }
+
+    // 1b. Randomized closed-loop scripts (replayable: seed/case printed
+    // on mismatch via the table row).
+    for case in 0..20u32 {
+        let mut g = Gen::new(0xC11D, case);
+        let n = g.usize_in(2, 10);
+        let reqs: Vec<SimRequest> = (0..n)
+            .map(|i| SimRequest {
+                id: i as u64,
+                prompt_len: g.usize_in(4, 64),
+                max_new_tokens: g.usize_in(1, 8),
+                arrival_step: 0,
+            })
+            .collect();
+        let chunk = *g.choose(&[8usize, 16, 32]);
+        let ok = identical(&base, chunk, &reqs);
+        all_ok &= ok;
+        if !ok || case < 3 {
+            md.push_str(&format!(
+                "| randomized case {case} (seed 0xC11D) | {chunk} | {n} | {} |\n",
+                verdict(ok)
+            ));
+        }
+    }
+    md.push_str("| randomized cases 3..20 | mixed | mixed | elided unless MISMATCH |\n");
+
+    // 2. Capability: beyond-bucket prompts are only servable chunked.
+    let oversized = script(&[100], 3);
+    let rejected = schedsim::run(base.clone(), &oversized)[&0].finish
+        == Some(Finish::Rejected);
+    let mut on = base.clone();
+    on.sched.prefill_chunk_tokens = 16;
+    let served = {
+        let o = &schedsim::run(on, &oversized)[&0];
+        o.finish == Some(Finish::Done) && o.tokens.len() == 3
+    };
+    all_ok &= rejected && served;
+    md.push_str(&format!(
+        "\n### Capability (prompt 100 > largest t bucket 64)\n\n\
+         | mode | outcome | verdict |\n|---|---|---|\n\
+         | chunking off | submit-time rejection | {} |\n\
+         | chunk 16 | completes (3 tokens) | {} |\n",
+        if rejected { "OK" } else { "MISMATCH: admitted" },
+        if served { "OK" } else { "MISMATCH: not served" },
+    ));
+
+    // 3. Swap-tier balance under forced preemption.
+    let mut swap_cfg = base.clone();
+    swap_cfg.swap_blocks = 64;
+    swap_cfg.force_preempt = vec![(3, 0), (5, 1)];
+    let mut sim = Sim::new(swap_cfg);
+    sim.drive(&script(&[20, 20, 20], 12));
+    let balanced = sim.swap_out_blocks == sim.swap_in_blocks
+        && sim.swap_out_blocks > 0
+        && sim
+            .outcomes
+            .values()
+            .all(|o| o.finish == Some(Finish::Done) && o.tokens.len() == 12);
+    all_ok &= balanced;
+    md.push_str(&format!(
+        "\n### Swap-tier balance (forced preemption mid-decode)\n\n\
+         | swapped-out blocks | swapped-in blocks | verdict |\n|---|---|---|\n\
+         | {} | {} | {} |\n",
+        sim.swap_out_blocks,
+        sim.swap_in_blocks,
+        if balanced { "BALANCED" } else { "MISMATCH: swap ledger" },
+    ));
+
+    if !all_ok {
+        md.push_str(
+            "\n**MISMATCH — chunked prefill moved Philox coordinates or \
+             the swap tier broke the block ledger.**\n",
+        );
+    }
+    Ok(md)
+}
+
 /// Deterministic per-completion "correctness" checker: a synthetic task
 /// whose success probability is identical under any exact sampler (the
 /// §4.6 claim is that FlashSampling does not shift task accuracy).
@@ -919,6 +1084,17 @@ mod tests {
         // its mid-flight abort count is exactly 2 by construction.
         assert_eq!(md.matches("BALANCED").count(), 4, "{md}");
         assert!(md.contains("| prefill-pending | 2 | 2 | 0 | 0 |"), "{md}");
+    }
+
+    #[test]
+    fn chunk_identity_holds_and_swaps_balance() {
+        let md = super::chunk_identity().unwrap();
+        assert!(!md.contains("MISMATCH"), "{md}");
+        // 3 deterministic + 3 shown randomized identity rows.
+        assert!(md.matches("IDENTICAL").count() >= 6, "{md}");
+        // Both capability rows and the swap ledger row.
+        assert_eq!(md.matches("| OK |").count(), 2, "{md}");
+        assert!(md.contains("| BALANCED |"), "{md}");
     }
 
     #[test]

@@ -59,6 +59,659 @@ impl Gen {
     }
 }
 
+/// Engine-mirroring scheduler simulation: the reusable property-test
+/// harness behind the chunked-prefill / swap-tier certification suite
+/// (rust/tests/chunked_prefill.rs, `repro chunk-identity`).
+///
+/// Drives the REAL [`crate::coordinator::scheduler::plan`] and the REAL
+/// [`crate::kvcache::KvCacheManager`] (admission, registration, swap
+/// ledger) through randomized arrival/abort/preempt schedules — only the
+/// artifact execution is replaced by Philox *coordinate accounting*: each
+/// "sampled token" is a Philox draw over (batch row, consumption step,
+/// request id), where the consumption step advances exactly when the
+/// engine would bump its Philox step counter (once per sampling prefill
+/// batch, once per decode batch — chunk windows advance nothing).  Two
+/// schedules with equal outcome maps would therefore produce bit-identical
+/// token streams on the real engine; that equality is the replay-identity
+/// certificate `assert_chunk_identity` checks.
+///
+/// Scope note: sticky-chunk identity is certified for closed-loop scripts
+/// (all arrivals before the first step).  A mid-window arrival changes the
+/// final chunk's batch companions — exactly like `chunk_interleave`, that
+/// reshapes coordinates without changing the sampled distribution — so
+/// open-loop scripts assert the balance/starvation invariants only.
+pub mod schedsim {
+    use std::collections::{HashMap, VecDeque};
+
+    use crate::coordinator::request::{
+        Request, SamplingParams, SeqState, Sequence,
+    };
+    use crate::coordinator::scheduler::{plan, Plan, SchedulerConfig};
+    use crate::kvcache::{KvCacheConfig, KvCacheManager};
+    use crate::sampling::philox::{self, Key};
+
+    /// One scripted request.
+    #[derive(Clone, Debug)]
+    pub struct SimRequest {
+        pub id: u64,
+        pub prompt_len: usize,
+        pub max_new_tokens: usize,
+        /// Logical step at which the request is submitted (0 = before the
+        /// first step).
+        pub arrival_step: u64,
+    }
+
+    /// How a simulated request ended.
+    #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+    pub enum Finish {
+        Done,
+        Aborted,
+        Rejected,
+        /// Finish-early preemption: pool exhausted, no swap capacity.
+        Preempted,
+        /// Swap tier drained by the livelock guard.
+        Abandoned,
+    }
+
+    /// Outcome certificate of one request.
+    #[derive(Clone, Debug, PartialEq)]
+    pub struct SimOutcome {
+        /// Philox coordinate draws standing in for sampled tokens.
+        pub tokens: Vec<u32>,
+        /// (batch row, consumption step) of the first token.
+        pub first_token: Option<(usize, u32)>,
+        /// Token-weighted time of the first token: a prefill of T tokens
+        /// costs T units, a chunk window costs its window, decode and
+        /// idle steps cost 1 — the cost model behind the TTFT-under-load
+        /// regression test.
+        pub ttft_weighted: Option<u64>,
+        /// Token-weighted timestamp of EVERY emitted token (first entry ==
+        /// `ttft_weighted`); consecutive differences are the inter-token
+        /// latencies the serving bench reports.
+        pub token_times: Vec<u64>,
+        pub finish: Option<Finish>,
+    }
+
+    /// Simulator configuration: the REAL scheduler config + pool shape +
+    /// scripted fault events.
+    #[derive(Clone, Debug)]
+    pub struct SimConfig {
+        pub sched: SchedulerConfig,
+        pub kv_blocks: usize,
+        pub kv_block_size: usize,
+        /// Swap-ledger capacity in blocks (0 = swap tier off).
+        pub swap_blocks: usize,
+        pub seed: u64,
+        /// Step-count guard: exceeding it fails the run (starvation /
+        /// livelock).
+        pub max_steps: u64,
+        /// Forced preemptions (clock step, request id): swap the victim
+        /// out mid-flight when ledger capacity allows.
+        pub force_preempt: Vec<(u64, u64)>,
+        /// Forced aborts (clock step, request id): cancel wherever the
+        /// request currently lives (waiting / partial / running /
+        /// swapped).
+        pub force_abort: Vec<(u64, u64)>,
+    }
+
+    impl SimConfig {
+        /// Default testbed mirroring the test artifact shapes
+        /// (buckets [1,2,4,8] / t [16,64] / prefill_b 4).
+        pub fn small(kv_blocks: usize) -> Self {
+            Self {
+                sched: SchedulerConfig {
+                    decode_buckets: vec![1, 2, 4, 8],
+                    prefill_t_buckets: vec![16, 64],
+                    prefill_b: 4,
+                    max_concurrency: 8,
+                    max_tokens_per_step: 1,
+                    aging_steps: 0,
+                    prefill_chunk_tokens: 0,
+                    chunk_interleave: false,
+                },
+                kv_blocks,
+                kv_block_size: 16,
+                swap_blocks: 0,
+                seed: 0x5C4E_D514,
+                max_steps: 20_000,
+                force_preempt: Vec::new(),
+                force_abort: Vec::new(),
+            }
+        }
+    }
+
+    /// Philox coordinate stand-in for one sampled token: any change to
+    /// the (row, consumption-step) coordinates a request samples at shows
+    /// up as a different value, so outcome-map equality certifies replay
+    /// identity.
+    fn coord(key: [u32; 2], row: usize, cstep: u32, id: u64) -> u32 {
+        philox::philox4x32_10([row as u32, cstep, 0x57E9, id as u32], key)[0]
+    }
+
+    pub struct Sim {
+        cfg: SimConfig,
+        kv: KvCacheManager,
+        key: [u32; 2],
+        waiting: VecDeque<Sequence>,
+        running: Vec<Sequence>,
+        swapped: Vec<Sequence>,
+        clock: u64,
+        /// Mirror of the engine's Philox step counter (consumption steps).
+        cstep: u32,
+        /// Token-weighted clock (see [`SimOutcome::ttft_weighted`]).
+        wtime: u64,
+        pub outcomes: HashMap<u64, SimOutcome>,
+        pub chunk_windows: u64,
+        pub swap_out_blocks: u64,
+        pub swap_in_blocks: u64,
+    }
+
+    /// Run a script to quiescence and return the outcome map.  Panics on
+    /// any invariant violation (block-ledger imbalance, swap-ledger
+    /// desync, leak at quiescence, starvation guard).
+    pub fn run(
+        cfg: SimConfig,
+        requests: &[SimRequest],
+    ) -> HashMap<u64, SimOutcome> {
+        let mut sim = Sim::new(cfg);
+        sim.drive(requests);
+        sim.outcomes
+    }
+
+    impl Sim {
+        pub fn new(cfg: SimConfig) -> Self {
+            let mut kv = KvCacheManager::new(KvCacheConfig {
+                block_size: cfg.kv_block_size,
+                num_blocks: cfg.kv_blocks,
+                prefix_caching: false,
+            });
+            kv.set_swap_capacity(cfg.swap_blocks);
+            let k = Key::from_seed(cfg.seed);
+            Self {
+                key: [k.lo, k.hi],
+                cfg,
+                kv,
+                waiting: VecDeque::new(),
+                running: Vec::new(),
+                swapped: Vec::new(),
+                clock: 0,
+                cstep: 0,
+                wtime: 0,
+                outcomes: HashMap::new(),
+                chunk_windows: 0,
+                swap_out_blocks: 0,
+                swap_in_blocks: 0,
+            }
+        }
+
+        fn pending(&self) -> usize {
+            self.waiting.len() + self.running.len() + self.swapped.len()
+        }
+
+        pub fn drive(&mut self, requests: &[SimRequest]) {
+            let mut reqs: Vec<SimRequest> = requests.to_vec();
+            reqs.sort_by_key(|r| r.arrival_step);
+            let mut next = 0usize;
+            let mut steps = 0u64;
+            while next < reqs.len() || self.pending() > 0 {
+                while next < reqs.len()
+                    && reqs[next].arrival_step <= self.clock
+                {
+                    self.submit(&reqs[next]);
+                    next += 1;
+                }
+                if self.pending() == 0 {
+                    // Idle until the next arrival.
+                    self.clock += 1;
+                    self.wtime += 1;
+                    continue;
+                }
+                let progressed = self.step();
+                if !progressed && self.running.is_empty() {
+                    self.reject_unschedulable();
+                }
+                self.assert_balance();
+                steps += 1;
+                assert!(
+                    steps <= self.cfg.max_steps,
+                    "no-starvation guard tripped after {steps} steps \
+                     (pending={})",
+                    self.pending()
+                );
+            }
+            // Quiescence: zero leaks, empty swap tier.
+            assert_eq!(
+                self.kv.unaccounted_blocks(),
+                0,
+                "leaked KV blocks at quiescence"
+            );
+            assert_eq!(self.kv.swapped_blocks(), 0, "stranded swap ledger");
+            assert!(self.swapped.is_empty());
+        }
+
+        fn submit(&mut self, r: &SimRequest) {
+            self.outcomes.insert(
+                r.id,
+                SimOutcome {
+                    tokens: Vec::new(),
+                    first_token: None,
+                    ttft_weighted: None,
+                    token_times: Vec::new(),
+                    finish: None,
+                },
+            );
+            // Mirror of the engine's submit-time rejection: oversized
+            // prompts are only servable with chunking on.
+            let max_t = *self.cfg.sched.prefill_t_buckets.last().unwrap();
+            if self.cfg.sched.prefill_chunk_tokens == 0 && r.prompt_len > max_t
+            {
+                self.outcomes.get_mut(&r.id).unwrap().finish =
+                    Some(Finish::Rejected);
+                return;
+            }
+            let mut s = Sequence::new(Request::new(
+                r.id,
+                vec![(r.id % 97) as i32 + 1; r.prompt_len],
+                SamplingParams {
+                    max_new_tokens: r.max_new_tokens,
+                    ..Default::default()
+                },
+            ));
+            s.submitted_step = self.clock;
+            self.waiting.push_back(s);
+        }
+
+        /// One engine step; returns whether any token/completion landed.
+        fn step(&mut self) -> bool {
+            self.clock += 1;
+            self.forced_aborts();
+            self.swap_in_ready();
+            self.forced_preempts();
+            self.waiting.make_contiguous();
+            let (waiting, _) = self.waiting.as_slices();
+            let mut admission = self.kv.batch_admission();
+            let p = plan(
+                &self.cfg.sched,
+                waiting,
+                &self.running,
+                |s, burst| admission.admit(&self.kv, &s.prompt, burst),
+                |s| self.kv.cached_prefix_tokens(&s.prompt),
+                self.clock,
+            );
+            match p {
+                Plan::ChunkPrefill { seq_id } => {
+                    self.do_chunk(seq_id);
+                    false
+                }
+                Plan::Prefill { seq_ids, .. } => self.do_prefill(&seq_ids),
+                Plan::Decode { seq_ids, .. } => self.do_decode(&seq_ids),
+                Plan::Idle => {
+                    self.wtime += 1;
+                    false
+                }
+            }
+        }
+
+        fn forced_aborts(&mut self) {
+            let clock = self.clock;
+            let ids: Vec<u64> = self
+                .cfg
+                .force_abort
+                .iter()
+                .filter(|(at, _)| *at == clock)
+                .map(|(_, id)| *id)
+                .collect();
+            for id in ids {
+                self.abort(id);
+            }
+        }
+
+        fn abort(&mut self, id: u64) {
+            if let Some(i) = self.waiting.iter().position(|s| s.id == id) {
+                let s = self.waiting.remove(i).unwrap();
+                // A partial head IS registered — release or leak.
+                if s.prefilled_tokens > 0 {
+                    self.kv.release(s.id).expect("partial head registered");
+                }
+                self.finish(s, Finish::Aborted);
+            } else if let Some(i) =
+                self.running.iter().position(|s| s.id == id)
+            {
+                let s = self.running.remove(i);
+                self.kv.release(s.id).expect("running seq registered");
+                self.finish(s, Finish::Aborted);
+            } else if let Some(i) =
+                self.swapped.iter().position(|s| s.id == id)
+            {
+                let s = self.swapped.remove(i);
+                self.kv.release(s.id).expect("swapped seq registered");
+                self.finish(s, Finish::Aborted);
+            }
+        }
+
+        fn forced_preempts(&mut self) {
+            let clock = self.clock;
+            let ids: Vec<u64> = self
+                .cfg
+                .force_preempt
+                .iter()
+                .filter(|(at, _)| *at == clock)
+                .map(|(_, id)| *id)
+                .collect();
+            for id in ids {
+                let Some(ri) = self.running.iter().position(|s| s.id == id)
+                else {
+                    continue;
+                };
+                if let Ok(Some(n)) = self.kv.swap_out(id) {
+                    self.swap_out_blocks += n as u64;
+                    let mut s = self.running.remove(ri);
+                    s.state = SeqState::Preempted;
+                    self.swapped.push(s);
+                }
+            }
+        }
+
+        /// Mirror of `Engine::swap_in_ready`, including the one-token
+        /// deficit reconcile and the park-it-back fallback.
+        fn swap_in_ready(&mut self) {
+            while !self.swapped.is_empty()
+                && self.running.len() < self.cfg.sched.max_concurrency
+            {
+                let id = self.swapped[0].id;
+                match self.kv.swap_in(id).expect("ledger consistent") {
+                    Some(n) => {
+                        self.swap_in_blocks += n as u64;
+                        let mut s = self.swapped.remove(0);
+                        let table_len =
+                            self.kv.table(id).map_or(0, |t| t.len());
+                        let mut ok = true;
+                        for _ in table_len..s.context_len() {
+                            if !self.kv.append_token(id).expect("registered")
+                            {
+                                ok = false;
+                                break;
+                            }
+                        }
+                        if ok {
+                            s.state = SeqState::Running;
+                            self.running.push(s);
+                        } else {
+                            let n = self
+                                .kv
+                                .swap_out(id)
+                                .expect("registered")
+                                .expect("capacity was just vacated");
+                            self.swap_out_blocks += n as u64;
+                            self.swapped.insert(0, s);
+                            break;
+                        }
+                    }
+                    None => break,
+                }
+            }
+        }
+
+        fn do_chunk(&mut self, seq_id: u64) {
+            let idx = self
+                .waiting
+                .iter()
+                .position(|s| s.id == seq_id)
+                .expect("planned head vanished");
+            let mut s = self.waiting.remove(idx).unwrap();
+            if s.prefilled_tokens == 0 {
+                match self.kv.register_with_prefix(s.id, &s.prompt) {
+                    Ok(a) => s.prefilled_tokens = a.cached_tokens,
+                    Err(_) => {
+                        self.waiting.push_front(s);
+                        return;
+                    }
+                }
+            }
+            let max_t = *self.cfg.sched.prefill_t_buckets.last().unwrap();
+            let chunk = self.cfg.sched.prefill_chunk_tokens.min(max_t);
+            let take = chunk.min(
+                s.prompt
+                    .len()
+                    .saturating_sub(1)
+                    .saturating_sub(s.prefilled_tokens),
+            );
+            s.prefilled_tokens += take;
+            self.chunk_windows += 1;
+            self.wtime += take.max(1) as u64;
+            // No consumption step: chunk windows draw no Philox noise.
+            self.waiting.push_front(s);
+        }
+
+        fn emit(
+            outcomes: &mut HashMap<u64, SimOutcome>,
+            wtime: u64,
+            s: &mut Sequence,
+            tok: u32,
+            row: usize,
+            cstep: u32,
+        ) {
+            s.generated.push(tok as i32);
+            let o = outcomes.get_mut(&s.id).expect("submitted");
+            o.tokens.push(tok);
+            o.token_times.push(wtime);
+            if o.first_token.is_none() {
+                o.first_token = Some((row, cstep));
+                o.ttft_weighted = Some(wtime);
+            }
+        }
+
+        fn finish(&mut self, s: Sequence, f: Finish) {
+            self.outcomes.get_mut(&s.id).expect("submitted").finish = Some(f);
+        }
+
+        /// Append-failure handling shared by prefill and decode: swap the
+        /// victim when the ledger takes it, finish early otherwise.
+        fn preempt_or_finish(&mut self, mut s: Sequence) {
+            match self.kv.swap_out(s.id).expect("registered") {
+                Some(n) => {
+                    self.swap_out_blocks += n as u64;
+                    s.state = SeqState::Preempted;
+                    self.swapped.push(s);
+                }
+                None => {
+                    self.kv.release(s.id).expect("registered");
+                    self.finish(s, Finish::Preempted);
+                }
+            }
+        }
+
+        fn do_prefill(&mut self, seq_ids: &[u64]) -> bool {
+            let mut seqs: Vec<Sequence> = Vec::with_capacity(seq_ids.len());
+            for id in seq_ids {
+                let idx = self
+                    .waiting
+                    .iter()
+                    .position(|s| s.id == *id)
+                    .expect("planned sequence vanished");
+                seqs.push(self.waiting.remove(idx).unwrap());
+            }
+            let mut admitted: Vec<Sequence> = Vec::new();
+            let mut cached: Vec<usize> = Vec::new();
+            let mut requeue: Vec<Sequence> = Vec::new();
+            for s in seqs {
+                if s.prefilled_tokens > 0 {
+                    cached.push(s.prefilled_tokens);
+                    admitted.push(s);
+                    continue;
+                }
+                match self.kv.register_with_prefix(s.id, &s.prompt) {
+                    Ok(a) => {
+                        cached.push(a.cached_tokens);
+                        admitted.push(s);
+                    }
+                    Err(_) => requeue.push(s),
+                }
+            }
+            for s in requeue.into_iter().rev() {
+                self.waiting.push_front(s);
+            }
+            if admitted.is_empty() {
+                return false;
+            }
+            let longest = admitted
+                .iter()
+                .zip(&cached)
+                .map(|(s, &c)| {
+                    s.prompt.len() - c.min(s.prompt.len().saturating_sub(1))
+                })
+                .max()
+                .unwrap();
+            self.wtime += longest.max(1) as u64;
+            // One sample_hidden per prefill batch: one consumption step,
+            // shared by every row.
+            let cstep = self.cstep;
+            self.cstep += 1;
+            let key = self.key;
+            for (row, mut s) in admitted.into_iter().enumerate() {
+                let tok = coord(key, row, cstep, s.id);
+                Self::emit(&mut self.outcomes, self.wtime, &mut s, tok, row, cstep);
+                if s.generated.len() >= s.params.max_new_tokens {
+                    self.kv.release(s.id).expect("registered");
+                    self.finish(s, Finish::Done);
+                } else if !self.kv.append_token(s.id).expect("registered") {
+                    self.preempt_or_finish(s);
+                } else {
+                    s.state = SeqState::Running;
+                    self.running.push(s);
+                }
+            }
+            true
+        }
+
+        fn do_decode(&mut self, seq_ids: &[u64]) -> bool {
+            let rows: Vec<usize> = seq_ids
+                .iter()
+                .map(|id| {
+                    self.running
+                        .iter()
+                        .position(|s| s.id == *id)
+                        .expect("planned sequence vanished")
+                })
+                .collect();
+            self.wtime += 1;
+            let cstep = self.cstep;
+            self.cstep += 1;
+            let key = self.key;
+            let wtime = self.wtime;
+            let mut retired: Vec<(usize, Option<Finish>)> = Vec::new();
+            for (slot, &ri) in rows.iter().enumerate() {
+                let s = &mut self.running[ri];
+                let tok = coord(key, slot, cstep, s.id);
+                Self::emit(&mut self.outcomes, wtime, s, tok, slot, cstep);
+                if s.generated.len() >= s.params.max_new_tokens {
+                    retired.push((ri, Some(Finish::Done)));
+                } else if !self.kv.append_token(s.id).expect("registered") {
+                    retired.push((ri, None));
+                }
+            }
+            retired.sort_by(|a, b| b.0.cmp(&a.0));
+            for (ri, f) in retired {
+                let s = self.running.remove(ri);
+                match f {
+                    Some(f) => {
+                        self.kv.release(s.id).expect("registered");
+                        self.finish(s, f);
+                    }
+                    None => self.preempt_or_finish(s),
+                }
+            }
+            true
+        }
+
+        /// Mirror of `Engine::reject_unschedulable`, with the partial-head
+        /// exemption and the swap-tier livelock guard.
+        fn reject_unschedulable(&mut self) {
+            if !self.running.is_empty() {
+                return;
+            }
+            if self.waiting.front().is_some_and(|s| s.prefilled_tokens > 0) {
+                return;
+            }
+            if let Some(s) = self.waiting.pop_front() {
+                self.finish(s, Finish::Rejected);
+                return;
+            }
+            if !self.swapped.is_empty() {
+                let s = self.swapped.remove(0);
+                self.kv.release(s.id).expect("registered");
+                self.finish(s, Finish::Abandoned);
+            }
+        }
+
+        /// Per-step ledger invariants: every non-free block is owned by a
+        /// registered live sequence (KV balance), and the swap ledger
+        /// tracks the swapped set exactly.
+        fn assert_balance(&self) {
+            let held: usize = self
+                .waiting
+                .iter()
+                .filter(|s| s.prefilled_tokens > 0)
+                .chain(self.running.iter())
+                .chain(self.swapped.iter())
+                .map(|s| self.kv.table(s.id).map_or(0, |t| t.num_blocks()))
+                .sum();
+            assert_eq!(
+                self.kv.unaccounted_blocks(),
+                held,
+                "KV block ledger out of balance at step {}",
+                self.clock
+            );
+            assert!(
+                self.kv.swapped_blocks() <= self.cfg.swap_blocks,
+                "swap ledger over capacity"
+            );
+            assert_eq!(
+                self.kv.swapped_sequences(),
+                self.swapped.len(),
+                "swap ledger desynced from the swapped set"
+            );
+        }
+    }
+
+    /// Replay-identity certificate: run the script with sticky chunking
+    /// at `chunk` and with chunking off, and assert every request's
+    /// outcome — token values, first-token coordinates, finish — is
+    /// identical.  (`ttft_weighted` is excluded: chunking legitimately
+    /// reshapes time, never coordinates.)  Scripts must be closed-loop
+    /// (`arrival_step == 0`); see the module docs.
+    pub fn assert_chunk_identity(
+        base: &SimConfig,
+        chunk: usize,
+        reqs: &[SimRequest],
+    ) {
+        assert!(
+            reqs.iter().all(|r| r.arrival_step == 0),
+            "identity certificates require closed-loop scripts"
+        );
+        let mut unchunked = base.clone();
+        unchunked.sched.prefill_chunk_tokens = 0;
+        let mut chunked = base.clone();
+        chunked.sched.prefill_chunk_tokens = chunk;
+        chunked.sched.chunk_interleave = false;
+        let a = run(unchunked, reqs);
+        let b = run(chunked, reqs);
+        assert_eq!(a.len(), b.len());
+        for (id, oa) in &a {
+            let ob = &b[id];
+            assert_eq!(
+                oa.tokens, ob.tokens,
+                "request {id}: token stream diverged under chunk={chunk}"
+            );
+            assert_eq!(
+                oa.first_token, ob.first_token,
+                "request {id}: first-token coordinates moved"
+            );
+            assert_eq!(oa.finish, ob.finish, "request {id}: finish diverged");
+        }
+    }
+}
+
 /// Run `n` randomized cases; panics identify the failing case id so it can
 /// be replayed with `Gen::new(seed, case)`.
 pub fn cases(n: u32, seed: u64, f: impl Fn(&mut Gen)) {
@@ -106,5 +759,90 @@ mod tests {
             count.fetch_add(1, Ordering::SeqCst);
         });
         assert_eq!(count.load(Ordering::SeqCst), 17);
+    }
+
+    mod schedsim {
+        use crate::testutil::schedsim::*;
+
+        fn script(n: u64, prompt: usize, gen: usize) -> Vec<SimRequest> {
+            (0..n)
+                .map(|id| SimRequest {
+                    id,
+                    prompt_len: prompt,
+                    max_new_tokens: gen,
+                    arrival_step: 0,
+                })
+                .collect()
+        }
+
+        #[test]
+        fn sim_is_deterministic_and_completes() {
+            let cfg = SimConfig::small(256);
+            let a = run(cfg.clone(), &script(5, 24, 6));
+            let b = run(cfg, &script(5, 24, 6));
+            assert_eq!(a, b);
+            for o in a.values() {
+                assert_eq!(o.finish, Some(Finish::Done));
+                assert_eq!(o.tokens.len(), 6);
+                assert!(o.first_token.is_some());
+            }
+        }
+
+        #[test]
+        fn chunked_run_opens_windows_and_matches_baseline() {
+            let mut cfg = SimConfig::small(256);
+            cfg.sched.prefill_chunk_tokens = 16;
+            let mut sim = Sim::new(cfg.clone());
+            sim.drive(&script(3, 60, 4));
+            assert!(
+                sim.chunk_windows > 0,
+                "a 60-token prompt must chunk under chunk=16"
+            );
+            assert_chunk_identity(&SimConfig::small(256), 16, &script(3, 60, 4));
+        }
+
+        #[test]
+        fn oversized_prompt_rejected_without_chunking_served_with_it() {
+            // 100 > max t bucket (64): submit-time rejection mirror.
+            let a = run(SimConfig::small(256), &script(1, 100, 3));
+            assert_eq!(a[&0].finish, Some(Finish::Rejected));
+            let mut cfg = SimConfig::small(256);
+            cfg.sched.prefill_chunk_tokens = 16;
+            let b = run(cfg, &script(1, 100, 3));
+            assert_eq!(b[&0].finish, Some(Finish::Done));
+            assert_eq!(b[&0].tokens.len(), 3);
+        }
+
+        #[test]
+        fn forced_preempt_swaps_out_and_back_in() {
+            let mut cfg = SimConfig::small(256);
+            cfg.swap_blocks = 64;
+            cfg.force_preempt = vec![(3, 0)];
+            let mut sim = Sim::new(cfg);
+            sim.drive(&script(2, 20, 12));
+            assert!(sim.swap_out_blocks > 0, "victim never swapped out");
+            assert_eq!(
+                sim.swap_out_blocks, sim.swap_in_blocks,
+                "every swapped-out block must come back"
+            );
+            for o in sim.outcomes.values() {
+                assert_eq!(o.finish, Some(Finish::Done));
+                assert_eq!(o.tokens.len(), 12);
+            }
+        }
+
+        #[test]
+        fn abort_mid_chunk_releases_partial_prefill() {
+            let mut cfg = SimConfig::small(256);
+            cfg.sched.prefill_chunk_tokens = 16;
+            // Step 1 opens the head's first window; abort at step 2 hits
+            // a registered-but-partial head.  drive() asserts the zero-
+            // leak invariant at quiescence.
+            cfg.force_abort = vec![(2, 0)];
+            let out = run(cfg, &script(2, 60, 4));
+            assert_eq!(out[&0].finish, Some(Finish::Aborted));
+            assert!(out[&0].tokens.is_empty());
+            assert_eq!(out[&1].finish, Some(Finish::Done));
+        }
     }
 }

@@ -92,6 +92,15 @@ pub struct WorkloadGen {
     /// budgets, and temperatures keep their usual streams, so flipping
     /// this on changes prompt *content* only).
     pub prefix_mode: Option<SharedPrefix>,
+    /// `Some((every, len))`: every `every`-th request (those with
+    /// `i % every == every - 1`) gets a fixed `len`-token "monopolist"
+    /// prompt — the adversarial long-prompt traffic chunked prefill
+    /// exists for (DESIGN.md §12).  All other requests draw exactly what
+    /// they would with the knob off (counter-based Philox streams, so the
+    /// skipped length draw shifts nothing), and arrivals, output budgets,
+    /// temperatures, and priorities are untouched for every request.
+    /// Ignored in `prefix_mode`.
+    pub long_prompt_every: Option<(usize, usize)>,
 }
 
 impl WorkloadGen {
@@ -106,6 +115,7 @@ impl WorkloadGen {
             temperature_choices: Vec::new(),
             priority_choices: Vec::new(),
             prefix_mode: None,
+            long_prompt_every: None,
         }
     }
 
@@ -148,7 +158,14 @@ impl WorkloadGen {
         let prompt: Vec<i32> = match &self.prefix_mode {
             Some(sp) => self.shared_prefix_prompt(sp, i),
             None => {
-                let plen = self.prompt_len.draw(self.u(11, i, 0)).max(1);
+                let plen = match self.long_prompt_every {
+                    Some((every, len))
+                        if every > 0 && i as usize % every == every - 1 =>
+                    {
+                        len.max(1)
+                    }
+                    _ => self.prompt_len.draw(self.u(11, i, 0)).max(1),
+                };
                 (0..plen as u32).map(|j| self.token(13, i, j)).collect()
             }
         };
@@ -369,6 +386,28 @@ mod tests {
             assert_eq!(a.prompt, b.prompt);
             assert_eq!(a.max_new_tokens, b.max_new_tokens);
             assert_eq!(a.temperature, b.temperature);
+        }
+    }
+
+    #[test]
+    fn long_prompt_every_injects_monopolists_without_perturbing_the_rest() {
+        let base = WorkloadGen::new(19, 4.0, 256).generate(24);
+        let mut g = WorkloadGen::new(19, 4.0, 256);
+        g.long_prompt_every = Some((8, 300));
+        let spiked = g.generate(24);
+        for (i, (a, b)) in base.iter().zip(&spiked).enumerate() {
+            // Arrivals / budgets / temperatures come from their own
+            // streams: identical for EVERY request.
+            assert_eq!(a.arrival_s, b.arrival_s);
+            assert_eq!(a.max_new_tokens, b.max_new_tokens);
+            assert_eq!(a.temperature, b.temperature);
+            if i % 8 == 7 {
+                assert_eq!(b.prompt.len(), 300, "request {i} is the long one");
+                assert!(b.prompt.iter().all(|&t| (0..256).contains(&t)));
+            } else {
+                // Non-designated prompts are bit-identical.
+                assert_eq!(a.prompt, b.prompt, "request {i} perturbed");
+            }
         }
     }
 

@@ -1,0 +1,438 @@
+//! Chunked prefill + swap-tier preemption (DESIGN.md §12).
+//!
+//! The headline test is the acceptance criterion of the subsystem:
+//! byte-identical engine output (same seeds, same `SamplerSpec`) with
+//! chunked prefill at chunk 16 / 64 / beyond-prompt-length vs. whole
+//! prefill — through the REAL AOT artifacts, so the multi-window
+//! `prefill_cached` path, the partial-KV restore, and the Philox step
+//! accounting all get exercised.  Artifact-gated like the other
+//! integration suites; the accounting-level certificates run everywhere
+//! through the `testutil::schedsim` harness (and in CI via
+//! `repro chunk-identity`).
+//!
+//! CI matrix contract: `FS_TEST_PREFIX_CACHING` (`0` disables) and
+//! `FS_TEST_CHUNK` (a single chunk size; unset sweeps the default set)
+//! narrow the engine suites to one matrix leg.
+
+use flashsampling::coordinator::{
+    Engine, EngineConfig, EngineError, Request, SamplingParams,
+};
+use flashsampling::gpusim::iomodel::SwapPolicy;
+use flashsampling::testutil::schedsim::{
+    self, Finish, SimConfig, SimRequest,
+};
+use flashsampling::testutil;
+use flashsampling::workload::{LengthDist, SharedPrefix, WorkloadGen};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("NOTE: artifacts/ missing; run `make artifacts`");
+        None
+    }
+}
+
+fn engine(cfg: EngineConfig) -> Option<Engine> {
+    artifacts_dir().map(|d| Engine::new(d, cfg).unwrap())
+}
+
+/// CI matrix override: prefix caching on unless `FS_TEST_PREFIX_CACHING=0`.
+fn cfg_prefix_caching() -> bool {
+    std::env::var("FS_TEST_PREFIX_CACHING").map_or(true, |v| v != "0")
+}
+
+/// CI matrix override: one chunk size from `FS_TEST_CHUNK`, else the
+/// default sweep (16 = multi-window, 64 = one max-bucket window, 256 =
+/// beyond every prompt, i.e. window-free).
+fn cfg_chunks() -> Vec<usize> {
+    match std::env::var("FS_TEST_CHUNK").ok().and_then(|v| v.parse().ok()) {
+        Some(c) => vec![c],
+        None => vec![16, 64, 256],
+    }
+}
+
+/// Shared-prefix multi-turn requests within the t=64 prefill bucket.
+fn shared_prefix_requests(vocab: usize, n: usize) -> Vec<Request> {
+    let mut g = WorkloadGen::new(0xC41F, 1000.0, vocab);
+    g.prefix_mode = Some(SharedPrefix {
+        num_prefixes: 2,
+        prefix_len: 32,
+        users: 4,
+        turn_len: LengthDist::Fixed(4),
+    });
+    g.output_len = LengthDist::Uniform(3, 7);
+    g.generate(n)
+        .into_iter()
+        .map(|s| {
+            Request::new(
+                s.id,
+                s.prompt,
+                SamplingParams {
+                    max_new_tokens: s.max_new_tokens,
+                    ..Default::default()
+                },
+            )
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// CPU-only certificates through the schedsim harness (always run).
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_chunked_schedules_replay_identically() {
+    // Randomized closed-loop scripts: chunked (sticky) vs unchunked must
+    // agree on every token coordinate, first-token (row, Philox step),
+    // and finish state.  The harness also asserts per-step KV balance,
+    // swap-ledger balance, and the no-starvation step guard on BOTH runs.
+    let chunks = cfg_chunks();
+    testutil::cases(24, 0x1DE7, |g| {
+        let n = g.usize_in(2, 10);
+        let reqs: Vec<SimRequest> = (0..n)
+            .map(|i| SimRequest {
+                id: i as u64,
+                prompt_len: g.usize_in(4, 64),
+                max_new_tokens: g.usize_in(1, 8),
+                arrival_step: 0,
+            })
+            .collect();
+        let chunk = *g.choose(&chunks);
+        schedsim::assert_chunk_identity(&SimConfig::small(2048), chunk, &reqs);
+    });
+}
+
+#[test]
+fn prop_open_loop_schedules_with_faults_stay_balanced_and_starvation_free() {
+    // Open-loop arrivals + random aborts + forced swap preemptions: the
+    // harness panics on any per-step ledger imbalance, any swap-ledger
+    // desync, any leak at quiescence, or a tripped starvation guard.
+    testutil::cases(24, 0x0B5E, |g| {
+        let n = g.usize_in(3, 12);
+        let reqs: Vec<SimRequest> = (0..n)
+            .map(|i| SimRequest {
+                id: i as u64,
+                prompt_len: g.usize_in(4, 100),
+                max_new_tokens: g.usize_in(1, 10),
+                arrival_step: g.usize_in(0, 12) as u64,
+            })
+            .collect();
+        let mut cfg = SimConfig::small(g.usize_in(48, 256));
+        cfg.sched.prefill_chunk_tokens = *g.choose(&[0usize, 8, 16]);
+        cfg.sched.chunk_interleave = g.bool(0.5);
+        cfg.swap_blocks = *g.choose(&[0usize, 16, 64]);
+        for _ in 0..g.usize_in(0, 3) {
+            cfg.force_abort
+                .push((g.usize_in(1, 20) as u64, g.usize_in(0, n - 1) as u64));
+        }
+        for _ in 0..g.usize_in(0, 3) {
+            cfg.force_preempt
+                .push((g.usize_in(2, 20) as u64, g.usize_in(0, n - 1) as u64));
+        }
+        let out = schedsim::run(cfg, &reqs);
+        // Every submitted request reached a terminal state.
+        assert_eq!(out.len(), n);
+        assert!(out.values().all(|o| o.finish.is_some()));
+    });
+}
+
+#[test]
+fn chunking_bounds_ttft_under_a_long_prompt_monopolist() {
+    // The TTFT-under-load regression (satellite of DESIGN.md §12): short
+    // prompts arriving behind a max-bucket prompt must reach their first
+    // token sooner with interleaved chunking than behind an atomic whole
+    // prefill.  Token-weighted time: a prefill of T tokens costs T.
+    let script: Vec<SimRequest> = std::iter::once(SimRequest {
+        id: 0,
+        prompt_len: 64,
+        max_new_tokens: 4,
+        arrival_step: 0,
+    })
+    .chain((1..=3).map(|i| SimRequest {
+        id: i,
+        prompt_len: 8,
+        max_new_tokens: 4,
+        arrival_step: 1,
+    }))
+    .collect();
+
+    let short_ttft = |cfg: SimConfig| {
+        let out = schedsim::run(cfg, &script);
+        assert!(out.values().all(|o| o.finish == Some(Finish::Done)));
+        (1..=3)
+            .map(|i| out[&i].ttft_weighted.expect("short request streamed"))
+            .max()
+            .unwrap()
+    };
+
+    let whole = short_ttft(SimConfig::small(2048));
+    let mut chunked_cfg = SimConfig::small(2048);
+    chunked_cfg.sched.prefill_chunk_tokens = 16;
+    chunked_cfg.sched.chunk_interleave = true;
+    let chunked = short_ttft(chunked_cfg);
+
+    // Whole prefill makes the shorts pay the monopolist's 64-token bill
+    // first; interleaved chunking bounds the head-of-line blocking to one
+    // 16-token window.
+    assert!(
+        chunked * 2 <= whole,
+        "chunking failed to separate TTFT: chunked {chunked} vs whole {whole}"
+    );
+}
+
+#[test]
+fn randomized_interleave_is_served_exactly_even_if_not_replay_identical() {
+    // `chunk_interleave` intentionally trades replay identity for TTFT
+    // (DESIGN.md §12): outcomes stay distributionally exact but
+    // coordinates may move.  Serving-level guarantees must still hold —
+    // every request completes with its full token budget.
+    testutil::cases(12, 0x171E, |g| {
+        let n = g.usize_in(2, 8);
+        let reqs: Vec<SimRequest> = (0..n)
+            .map(|i| SimRequest {
+                id: i as u64,
+                prompt_len: g.usize_in(4, 64),
+                max_new_tokens: g.usize_in(1, 6),
+                arrival_step: 0,
+            })
+            .collect();
+        let mut cfg = SimConfig::small(2048);
+        cfg.sched.prefill_chunk_tokens = 16;
+        cfg.sched.chunk_interleave = true;
+        let out = schedsim::run(cfg, &reqs);
+        for r in &reqs {
+            let o = &out[&r.id];
+            assert_eq!(o.finish, Some(Finish::Done));
+            assert_eq!(o.tokens.len(), r.max_new_tokens);
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// Artifact-gated engine suites.
+// ---------------------------------------------------------------------
+
+#[test]
+fn chunk_on_off_byte_identity_on_shared_prefix_workload() {
+    // THE acceptance criterion: for every chunk size, engine output is
+    // byte-identical to whole prefill — same ids, same token bytes.
+    let prefix_caching = cfg_prefix_caching();
+    let run = |chunk: usize| -> Option<(Vec<(u64, Vec<i32>)>, u64)> {
+        let mut e = engine(EngineConfig {
+            prefix_caching,
+            prefill_chunk_tokens: chunk,
+            ..Default::default()
+        })?;
+        if chunk > 0 && e.prefill_chunk_tokens() == 0 {
+            eprintln!("NOTE: no cached-prefill artifact; chunking gated off");
+            return None;
+        }
+        let vocab = e.runtime().manifest().model.vocab;
+        for r in shared_prefix_requests(vocab, 16) {
+            e.submit(r).unwrap();
+        }
+        let mut done = e.run_to_completion().unwrap();
+        done.sort_by_key(|c| c.id);
+        assert_eq!(done.len(), 16);
+        assert_eq!(e.kv_unaccounted_blocks(), 0);
+        Some((
+            done.into_iter().map(|c| (c.id, c.tokens)).collect(),
+            e.metrics.chunked_prefill_steps,
+        ))
+    };
+    let Some((whole, zero_windows)) = run(0) else { return };
+    assert_eq!(zero_windows, 0);
+    for chunk in cfg_chunks() {
+        let Some((chunked, windows)) = run(chunk) else { return };
+        assert_eq!(
+            whole, chunked,
+            "chunk={chunk} changed sampled tokens — exactness broken"
+        );
+        // Multi-window chunks must actually take the window path; the
+        // beyond-prompt size must not (and chunk 0 — the CI matrix's
+        // chunking-off leg — trivially opens none).
+        if chunk > 0 && chunk < 64 {
+            assert!(windows > 0, "chunk={chunk} never opened a window");
+        }
+        if chunk > 64 {
+            assert_eq!(windows, 0, "chunk={chunk} cannot exceed the t bucket");
+        }
+    }
+}
+
+#[test]
+fn chunking_serves_prompts_beyond_the_largest_prefill_bucket() {
+    // Without chunking a 100-token prompt overflows every prefill T
+    // bucket and is rejected at submit; with windows it must complete.
+    let prompt: Vec<i32> = (0..100).map(|i| (i * 11 + 5) % 512).collect();
+    let req = || {
+        Request::new(
+            7,
+            prompt.clone(),
+            SamplingParams { max_new_tokens: 4, ..Default::default() },
+        )
+    };
+    let Some(mut plain) = engine(EngineConfig {
+        prefix_caching: cfg_prefix_caching(),
+        ..Default::default()
+    }) else {
+        return;
+    };
+    assert!(matches!(
+        plain.submit(req()),
+        Err(EngineError::AdmissionRejected { id: 7, .. })
+    ));
+    let mut chunked = engine(EngineConfig {
+        prefix_caching: cfg_prefix_caching(),
+        prefill_chunk_tokens: 16,
+        ..Default::default()
+    })
+    .unwrap();
+    if chunked.prefill_chunk_tokens() == 0 {
+        eprintln!("NOTE: no cached-prefill artifact; chunking gated off");
+        return;
+    }
+    chunked.submit(req()).unwrap();
+    let done = chunked.run_to_completion().unwrap();
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].tokens.len(), 4);
+    assert!(chunked.metrics.chunked_prefill_steps >= 3, "100 tokens / 16");
+    assert_eq!(chunked.kv_unaccounted_blocks(), 0);
+}
+
+#[test]
+fn abort_mid_chunked_prefill_releases_partial_kv() {
+    let Some(mut e) = engine(EngineConfig {
+        prefix_caching: cfg_prefix_caching(),
+        prefill_chunk_tokens: 16,
+        ..Default::default()
+    }) else {
+        return;
+    };
+    if e.prefill_chunk_tokens() == 0 {
+        eprintln!("NOTE: no cached-prefill artifact; chunking gated off");
+        return;
+    }
+    let prompt: Vec<i32> = (0..60).map(|i| (i * 3 + 1) % 512).collect();
+    e.submit(Request::new(
+        1,
+        prompt,
+        SamplingParams { max_new_tokens: 8, ..Default::default() },
+    ))
+    .unwrap();
+    e.submit(Request::new(
+        2,
+        vec![4, 5, 6, 7],
+        SamplingParams { max_new_tokens: 3, ..Default::default() },
+    ))
+    .unwrap();
+    // One step opens the head's first chunk window: request 1 now OWNS
+    // registered KV while still sitting in the waiting queue.
+    e.step().unwrap();
+    assert!(e.metrics.chunked_prefill_steps >= 1, "no window opened");
+    let c = e.abort(1).unwrap();
+    assert_eq!(
+        c.finish,
+        flashsampling::coordinator::FinishReason::Aborted
+    );
+    assert!(c.tokens.is_empty(), "no token sampled mid-window");
+    // The companion still completes; nothing leaked, no dangling refs.
+    let done = e.run_to_completion().unwrap();
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].id, 2);
+    assert_eq!(e.kv_unaccounted_blocks(), 0, "mid-chunk abort leaked KV");
+    assert_eq!(e.prefix_attached_refs(), 0, "dangling radix refs");
+}
+
+#[test]
+fn swap_tier_preempts_and_resumes_without_losing_tokens() {
+    // A pool sized to prefill three 40-token prompts (3 blocks each, 10
+    // total) but NOT their decode growth (each needs a 4th block at
+    // context 49): two victims must preempt to the swap tier, resume,
+    // and still deliver their full 12 tokens.
+    let Some(mut e) = engine(EngineConfig {
+        kv_blocks: 10,
+        kv_block_size: 16,
+        prefix_caching: false,
+        swap_blocks: 32,
+        swap_policy: SwapPolicy::Always,
+        ..Default::default()
+    }) else {
+        return;
+    };
+    for id in 0..3u64 {
+        let prompt: Vec<i32> = (0..40).map(|i| (i * 7 + id as i32) % 512).collect();
+        e.submit(Request::new(
+            id,
+            prompt,
+            SamplingParams { max_new_tokens: 12, ..Default::default() },
+        ))
+        .unwrap();
+    }
+    let mut done = e.run_to_completion().unwrap();
+    done.sort_by_key(|c| c.id);
+    assert_eq!(done.len(), 3);
+    for c in &done {
+        assert_eq!(
+            c.tokens.len(),
+            12,
+            "request {} lost tokens across the swap round-trip",
+            c.id
+        );
+    }
+    assert!(
+        e.metrics.swap_out_blocks > 0,
+        "pool pressure never reached the swap tier"
+    );
+    assert_eq!(
+        e.metrics.swap_out_blocks, e.metrics.swap_in_blocks,
+        "swapped-out blocks did not all return"
+    );
+    assert!(
+        e.metrics.counters.get("swapped_out_seqs").copied().unwrap_or(0) >= 1
+    );
+    assert_eq!(e.swapped_sequences(), 0);
+    assert_eq!(e.swapped_blocks(), 0);
+    assert_eq!(e.kv_unaccounted_blocks(), 0);
+}
+
+#[test]
+fn swap_policy_never_falls_back_to_finish_early() {
+    // Same pressure shape as above, but the policy refuses to swap: the
+    // engine must fall back to the legacy finish-early preemption and
+    // still drain cleanly (fewer tokens, zero leaks).
+    let Some(mut e) = engine(EngineConfig {
+        kv_blocks: 10,
+        kv_block_size: 16,
+        prefix_caching: false,
+        swap_blocks: 32,
+        swap_policy: SwapPolicy::Never,
+        ..Default::default()
+    }) else {
+        return;
+    };
+    for id in 0..3u64 {
+        let prompt: Vec<i32> = (0..40).map(|i| (i * 7 + id as i32) % 512).collect();
+        e.submit(Request::new(
+            id,
+            prompt,
+            SamplingParams { max_new_tokens: 12, ..Default::default() },
+        ))
+        .unwrap();
+    }
+    let done = e.run_to_completion().unwrap();
+    assert_eq!(done.len(), 3);
+    assert_eq!(e.metrics.swap_out_blocks, 0, "policy Never must not swap");
+    assert!(
+        e.metrics
+            .counters
+            .get("swap_declined_by_policy")
+            .copied()
+            .unwrap_or(0)
+            >= 1,
+        "decline path never exercised"
+    );
+    assert_eq!(e.kv_unaccounted_blocks(), 0);
+}

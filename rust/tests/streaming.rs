@@ -56,6 +56,8 @@ fn prop_any_abort_schedule_leaves_the_pool_balanced() {
             max_concurrency: 8,
             max_tokens_per_step: spec_burst + 1,
             aging_steps: g.usize_in(0, 16) as u64,
+            prefill_chunk_tokens: 0,
+            chunk_interleave: false,
         };
         let mut waiting: Vec<Sequence> = (0..g.usize_in(4, 14) as u64)
             .map(|i| {
@@ -99,6 +101,9 @@ fn prop_any_abort_schedule_leaves_the_pool_balanced() {
                 step,
             );
             match p {
+                Plan::ChunkPrefill { .. } => {
+                    unreachable!("chunking disabled in this schedule")
+                }
                 Plan::Prefill { seq_ids, .. } => {
                     // Mirror Engine::do_prefill: register+attach all rows,
                     // then publish, then first token + append/release.
@@ -207,6 +212,235 @@ fn prop_any_abort_schedule_leaves_the_pool_balanced() {
         // draining the cache returns the pool to pristine.
         assert_eq!(kv.unaccounted_blocks(), 0, "leaked blocks after aborts");
         assert_eq!(kv.prefix_attached_refs(), 0, "dangling radix refs");
+        kv.clear_prefix_cache();
+        assert_eq!(kv.free_blocks(), TOTAL, "cache held phantom refs");
+    });
+}
+
+#[test]
+fn prop_chunked_windows_and_swap_preempts_stay_balanced() {
+    // DESIGN.md §12 companion to the abort-balance property above: the
+    // same real scheduler + KV manager, now with chunked prefill windows
+    // (partially prefilled heads OWN registered KV while still in the
+    // waiting queue) and a swap tier (preempted victims hold a ledger
+    // entry and keep their prefix-attached blocks pinned).  Randomized
+    // aborts hit every lifecycle phase — mid-chunk, mid-decode, and
+    // swapped-out — and the pool, the radix refcounts, and the swap
+    // ledger must all balance to zero at quiescence.
+    testutil::cases(32, 0xC4A9, |g| {
+        let prompts: Vec<Vec<i32>> = (0..6)
+            .map(|p| {
+                let sys = (p % 2) as i32 * 1000;
+                let len = 9 + 2 * p; // 9..19 tokens, > 2 blocks
+                (0..len as i32)
+                    .map(|i| if i < 8 { sys + i } else { sys + 100 * p as i32 + i })
+                    .collect()
+            })
+            .collect();
+        const TOTAL: usize = 96;
+        let mut kv = KvCacheManager::new(KvCacheConfig {
+            block_size: 4,
+            num_blocks: TOTAL,
+            prefix_caching: true,
+        });
+        kv.set_swap_capacity(g.usize_in(8, 32));
+        let chunk = g.usize_in(2, 8);
+        let sched = SchedulerConfig {
+            decode_buckets: vec![1, 2, 4, 8],
+            prefill_t_buckets: vec![16, 64],
+            prefill_b: 4,
+            max_concurrency: 8,
+            max_tokens_per_step: 1,
+            aging_steps: 0,
+            prefill_chunk_tokens: chunk,
+            chunk_interleave: g.bool(0.5),
+        };
+        let mut waiting: Vec<Sequence> = (0..g.usize_in(4, 12) as u64)
+            .map(|i| {
+                Sequence::new(Request::new(
+                    i,
+                    g.choose(&prompts).clone(),
+                    SamplingParams {
+                        max_new_tokens: g.usize_in(1, 8),
+                        ..Default::default()
+                    },
+                ))
+            })
+            .collect();
+        let mut running: Vec<Sequence> = Vec::new();
+        let mut swapped: Vec<Sequence> = Vec::new();
+        let mut step = 0u64;
+        loop {
+            step += 1;
+            assert!(step < 10_000, "sim stalled");
+            // Swap-in mirror: resume the FCFS head when the pool allows.
+            if !swapped.is_empty() && running.len() < sched.max_concurrency {
+                let id = swapped[0].id;
+                if kv.swap_in(id).unwrap().is_some() {
+                    running.push(swapped.remove(0));
+                }
+            }
+            // Random mid-flight abort across every phase — including a
+            // partially prefilled (chunk-registered) head, which owns KV
+            // despite still sitting in the waiting queue.
+            if g.bool(0.2) {
+                let total = waiting.len() + running.len() + swapped.len();
+                if total > 0 {
+                    let k = g.usize_in(0, total - 1);
+                    if k < waiting.len() {
+                        let s = waiting.remove(k);
+                        if s.prefilled_tokens > 0 {
+                            kv.release(s.id).unwrap();
+                        }
+                    } else if k < waiting.len() + running.len() {
+                        let s = running.remove(k - waiting.len());
+                        kv.release(s.id).unwrap();
+                    } else {
+                        let s =
+                            swapped.remove(k - waiting.len() - running.len());
+                        // Aborting a swapped victim clears its ledger entry.
+                        kv.release(s.id).unwrap();
+                    }
+                }
+            }
+            // Random preempt-to-swap of a running victim (its table is
+            // consistent between steps, exactly when the engine swaps).
+            if !running.is_empty() && g.bool(0.15) {
+                let idx = g.usize_in(0, running.len() - 1);
+                if kv.swap_out(running[idx].id).unwrap().is_some() {
+                    swapped.push(running.remove(idx));
+                }
+            }
+            let mut admission = kv.batch_admission();
+            let p = plan(
+                &sched,
+                &waiting,
+                &running,
+                |s, burst| admission.admit(&kv, &s.prompt, burst),
+                |s| kv.cached_prefix_tokens(&s.prompt),
+                step,
+            );
+            match p {
+                Plan::ChunkPrefill { seq_id } => {
+                    // Engine::do_chunk_prefill mirror: register on the
+                    // first window, advance the window, stay at the front
+                    // of the queue.
+                    let idx = waiting
+                        .iter()
+                        .position(|s| s.id == seq_id)
+                        .expect("planned head vanished");
+                    let mut s = waiting.remove(idx);
+                    if s.prefilled_tokens == 0 {
+                        match kv.register_with_prefix(s.id, &s.prompt) {
+                            Ok(a) => s.prefilled_tokens = a.cached_tokens,
+                            Err(_) => {
+                                waiting.insert(0, s);
+                                continue;
+                            }
+                        }
+                    }
+                    let take = chunk.min(
+                        s.prompt
+                            .len()
+                            .saturating_sub(1)
+                            .saturating_sub(s.prefilled_tokens),
+                    );
+                    s.prefilled_tokens += take;
+                    waiting.insert(0, s);
+                }
+                Plan::Prefill { seq_ids, .. } => {
+                    let mut batch: Vec<Sequence> = Vec::new();
+                    let mut requeue: Vec<Sequence> = Vec::new();
+                    for id in &seq_ids {
+                        let idx = waiting
+                            .iter()
+                            .position(|s| s.id == *id)
+                            .expect("planned sequence vanished");
+                        let s = waiting.remove(idx);
+                        // Partial heads already own their registration.
+                        if s.prefilled_tokens > 0 {
+                            batch.push(s);
+                            continue;
+                        }
+                        match kv.register_with_prefix(s.id, &s.prompt) {
+                            Ok(_) => batch.push(s),
+                            Err(_) => requeue.push(s),
+                        }
+                    }
+                    let all_failed = batch.is_empty() && !requeue.is_empty();
+                    for s in requeue.into_iter().rev() {
+                        waiting.insert(0, s);
+                    }
+                    if all_failed {
+                        let s = waiting.remove(0);
+                        if s.prefilled_tokens > 0 {
+                            kv.release(s.id).unwrap();
+                        }
+                    }
+                    for mut s in batch {
+                        kv.insert_prefix(s.id, &s.prompt, |_| BlockKv::default())
+                            .unwrap();
+                        s.generated.push(0);
+                        s.state =
+                            flashsampling::coordinator::request::SeqState::Running;
+                        if s.generated.len() >= s.params.max_new_tokens
+                            || !kv.append_token(s.id).unwrap()
+                        {
+                            kv.release(s.id).unwrap();
+                        } else {
+                            running.push(s);
+                        }
+                    }
+                }
+                Plan::Decode { seq_ids, .. } => {
+                    let mut finished: Vec<usize> = Vec::new();
+                    for id in &seq_ids {
+                        let ri = running
+                            .iter()
+                            .position(|s| s.id == *id)
+                            .expect("planned sequence vanished");
+                        let s = &mut running[ri];
+                        s.generated.push(0);
+                        if s.generated.len() >= s.params.max_new_tokens
+                            || !kv.append_token(s.id).unwrap()
+                        {
+                            finished.push(ri);
+                        }
+                    }
+                    finished.sort_unstable_by(|a, b| b.cmp(a));
+                    for ri in finished {
+                        let s = running.remove(ri);
+                        kv.release(s.id).unwrap();
+                    }
+                }
+                Plan::Idle => {
+                    if !waiting.is_empty() {
+                        // A fresh unadmittable head mirrors
+                        // reject_unschedulable.  (A partial head never
+                        // idles: the deferred-window fallback always
+                        // chunks it, so the else-branch no-op is purely
+                        // defensive.)
+                        if waiting[0].prefilled_tokens == 0 {
+                            waiting.remove(0);
+                        }
+                    } else if running.is_empty() && !swapped.is_empty() {
+                        // Engine's swap-abandon livelock guard.
+                        let s = swapped.remove(0);
+                        kv.release(s.id).unwrap();
+                    } else if running.is_empty() && swapped.is_empty() {
+                        break;
+                    }
+                }
+            }
+            if waiting.is_empty() && running.is_empty() && swapped.is_empty() {
+                break;
+            }
+        }
+        // Quiescent balance across ALL THREE ledgers: the block pool, the
+        // radix attachment refs, and the swap ledger.
+        assert_eq!(kv.unaccounted_blocks(), 0, "leaked blocks");
+        assert_eq!(kv.prefix_attached_refs(), 0, "dangling radix refs");
+        assert_eq!(kv.swapped_blocks(), 0, "stranded swap ledger");
         kv.clear_prefix_cache();
         assert_eq!(kv.free_blocks(), TOTAL, "cache held phantom refs");
     });
