@@ -75,8 +75,16 @@ BENCH_SHAPES = (
 )
 
 # Tensor-parallel shard kernels (vocab sharding) for the tp runtime.
+# One shape per decode bucket: the engine's TP decode seam
+# (EngineConfig::tp) fans every decode batch out through the orchestrator,
+# so each bucket's batch size needs its shard executables.
 TP_DEGREES = (2, 4)
-TP_SHAPES = ((4, 256, 2048, 512),)
+TP_SHAPES = (
+    (1, 256, 2048, 512),
+    (2, 256, 2048, 512),
+    (4, 256, 2048, 512),
+    (8, 256, 2048, 512),
+)
 
 
 def _dt(x) -> str:
@@ -281,6 +289,26 @@ def build_model_artifacts(b: Builder, cfg: model_lib.ModelConfig):
         b.add(f"decode_sample_b{bsz}", "decode_sample", fused, specs, names, meta)
         b.add(f"decode_baseline_b{bsz}", "decode_baseline", baseline, specs,
               names, meta)
+
+        # TP decode seam (DESIGN.md §13): the transformer step WITHOUT the
+        # sampling epilogue — returns the final hidden states so the TP
+        # orchestrator can fan the LM head out across vocab shards.  No
+        # seed/step/tau inputs: sampling happens rank-side with the same
+        # Philox (row, counter-step) coordinates the fused artifact uses,
+        # which is what keeps shard count out of the token stream.
+        def hidden_only(*args, _b=bsz):
+            params = dict(zip(cfg.param_order(), args[:n_params]))
+            kv_k, kv_v, pos, token = args[n_params:]
+            return model_lib.decode_step(cfg, params, kv_k, kv_v, pos, token)
+
+        b.add(
+            f"decode_hidden_b{bsz}",
+            "decode_hidden",
+            hidden_only,
+            param_specs + [kv_spec(bsz), kv_spec(bsz), i32(bsz), i32(bsz)],
+            list(cfg.param_order()) + ["kv_k", "kv_v", "pos", "token"],
+            meta,
+        )
 
     for t in PREFILL_T_BUCKETS:
         def pre(*args, _t=t):

@@ -1,0 +1,391 @@
+"""Offline accounting simulation of `cargo bench --bench router`.
+
+Reproduces, bit-for-bit, the DETERMINISTIC fields of the bench's
+`BENCH_router.json` records: the closed-loop drive of the multi-replica
+`Router` over `SimReplica` backends (`rust/src/router/sim.rs`), in the
+bench's regime — a KV pool far larger than the live set (prefix-cache
+eviction never engages, free blocks are the exact probe headroom), no
+aborts, no swaps.  In that regime every routing decision is a pure
+function of the replica probes (`pick_replica` in
+`rust/src/router/policy.rs`, ported verbatim below, including the
+FNV-1a chain hash that seeds cold-start prefix affinity) and every
+replica schedule is the FIFO continuous-batching mirror with the
+token-weighted cost model (a prefill batch costs its longest uncached
+suffix, a decode step costs 1).  This file therefore reimplements, in
+lockstep with the Rust source:
+
+  * the radix prefix cache as full-block chain lookups plus the
+    allocator refcounts that drive `free_blocks()` (the least-loaded
+    tiebreak) — `Kv` below mirrors `kvcache::KvCacheManager`;
+  * `SimReplica.step()` — admission, batch cost, decode sweep, and the
+    weighted submit→completion latency each record's percentiles are
+    computed from;
+  * `Router.submit()` — probe, home hash, policy pick, and the
+    round-robin cursor that advances only on accepted submissions.
+
+Token VALUES are irrelevant to every recorded field, so the sim-token
+formula is not mirrored (only counts and weighted times are).
+
+Timing fields (`median_ns` etc.) are bench-only: running `cargo bench
+--bench router` on a toolbox overwrites this snapshot with `source:
+"bench"` records that add them (the shared fields must not change — if
+they do, the mirror or the Rust code regressed).
+
+Usage:  cd python && python tests/sim_router_bench.py [out.json]
+"""
+
+import json
+import struct
+import sys
+from collections import deque
+
+SESSIONS = 12
+TURNS = 4
+REQUESTS = SESSIONS * TURNS
+NUM_SYS = 6
+MAX_NEW = 4
+
+BLOCK_SIZE = 16
+NUM_BLOCKS = 4096
+MAX_CONCURRENCY = 8
+PREFILL_B = 4
+DECODE_MAX_B = 8
+
+# policy.rs: pending-count slack before affinity spills to least-loaded.
+SPILL_PENDING_MARGIN = 4
+
+FNV_OFFSET = 0xCBF29CE484222325
+FNV_PRIME = 0x100000001B3
+U64 = (1 << 64) - 1
+
+
+def fnv(h, data):
+    for b in data:
+        h ^= b
+        h = (h * FNV_PRIME) & U64
+    return h
+
+
+def prefix_home_hash(prompt):
+    """prefixcache::prefix_home_hash — the chain hash of the prompt's
+    first full block (parent = the ROOT_HASH sentinel = FNV_OFFSET)."""
+    if len(prompt) < BLOCK_SIZE:
+        return None
+    h = fnv(FNV_OFFSET, FNV_OFFSET.to_bytes(8, "little"))
+    return fnv(
+        h, b"".join(struct.pack("<i", t) for t in prompt[:BLOCK_SIZE])
+    )
+
+
+def session_prompt(session, turn):
+    sys_id = session % NUM_SYS
+    p = [(sys_id * 97 + j * 13 + 5) % 2048 for j in range(32)]
+    for t in range(turn + 1):
+        p.extend(
+            (session * 59 + t * 31 + j * 7 + 11) % 2048 for j in range(16)
+        )
+    return p
+
+
+class Kv:
+    """Refcount mirror of `kvcache::KvCacheManager` in the bench regime.
+
+    The radix tree reduces to full-block chain-prefix lookups (every
+    insert publishes a contiguous chain from the root, so presence of a
+    length-k chain implies all its prefixes); blocks are refcounted ids
+    whose only observable is the free-block count the probes report."""
+
+    def __init__(self):
+        self.free = NUM_BLOCKS
+        self.cache = {}  # chain prefix (tuple of tokens) -> block id
+        self.ref = {}  # block id -> refcount
+        self.tables = {}  # seq id -> [block ids]
+        self.lens = {}  # seq id -> logical token length
+        self.next_block = 0
+
+    def _alloc(self):
+        assert self.free > 0, "pool sized so exhaustion is unreachable"
+        self.free -= 1
+        b = self.next_block
+        self.next_block += 1
+        self.ref[b] = 1
+        return b
+
+    def cached_prefix_tokens(self, prompt):
+        # Capped below the prompt length: prefill keeps >= 1 suffix token.
+        cap = (len(prompt) - 1) // BLOCK_SIZE
+        k = 0
+        while k < cap and tuple(prompt[: (k + 1) * BLOCK_SIZE]) in self.cache:
+            k += 1
+        return k * BLOCK_SIZE
+
+    def prefill_blocks_needed(self, prompt):
+        matched = self.cached_prefix_tokens(prompt) // BLOCK_SIZE
+        return -(-len(prompt) // BLOCK_SIZE) - matched
+
+    def can_allocate_prefill(self, prompt):
+        # prefill_headroom = free + evictable - matched >= free in the
+        # no-eviction regime; free alone is exact here.
+        return self.free >= self.prefill_blocks_needed(prompt)
+
+    def register_with_prefix(self, seq, prompt):
+        matched_tokens = self.cached_prefix_tokens(prompt)
+        table = []
+        for k in range(1, matched_tokens // BLOCK_SIZE + 1):
+            b = self.cache[tuple(prompt[: k * BLOCK_SIZE])]
+            self.ref[b] += 1  # copy-on-write attach
+            table.append(b)
+        for _ in range(self.prefill_blocks_needed(prompt)):
+            table.append(self._alloc())
+        self.tables[seq] = table
+        self.lens[seq] = len(prompt)
+        return matched_tokens
+
+    def insert_prefix(self, seq, prompt):
+        # Publish the prompt's full blocks; the cache takes one ref per
+        # newly inserted block (already-cached chains are left alone).
+        for j in range(len(prompt) // BLOCK_SIZE):
+            key = tuple(prompt[: (j + 1) * BLOCK_SIZE])
+            if key not in self.cache:
+                b = self.tables[seq][j]
+                self.cache[key] = b
+                self.ref[b] += 1
+
+    def append_token(self, seq):
+        table, length = self.tables[seq], self.lens[seq]
+        if length == len(table) * BLOCK_SIZE:
+            table.append(self._alloc())  # block boundary
+        elif self.ref[table[-1]] > 1:
+            # Copy-on-write into a shared tail — unreachable in this
+            # workload (prompts are block-aligned, so the decode tail is
+            # always private), mirrored for allocator lockstep anyway.
+            old = table.pop()
+            self.ref[old] -= 1
+            table.append(self._alloc())
+        self.lens[seq] = length + 1
+
+    def release(self, seq):
+        for b in self.tables.pop(seq):
+            self.ref[b] -= 1
+            if self.ref[b] == 0:  # cache-held blocks keep their ref
+                del self.ref[b]
+                self.free += 1
+        del self.lens[seq]
+
+
+class Seq:
+    __slots__ = ("id", "prompt", "generated", "submit_w")
+
+    def __init__(self, rid, prompt, submit_w):
+        self.id = rid
+        self.prompt = prompt
+        self.generated = 0
+        self.submit_w = submit_w
+
+
+class SimReplica:
+    """FIFO continuous-batching mirror of `router::sim::SimReplica`."""
+
+    def __init__(self):
+        self.kv = Kv()
+        self.waiting = deque()
+        self.running = []
+        self.wtime = 0
+        self.prefill_tokens = 0
+        self.cached_prefill_tokens = 0
+        self.completions = []  # (id, weighted submit->completion latency)
+
+    def submit(self, rid, prompt):
+        self.waiting.append(Seq(rid, prompt, self.wtime))
+
+    def pending(self):
+        return len(self.waiting) + len(self.running)
+
+    def _complete(self, s):
+        self.kv.release(s.id)
+        self.completions.append((s.id, self.wtime - s.submit_w))
+
+    def step(self):
+        can_prefill = (
+            len(self.running) < MAX_CONCURRENCY
+            and self.waiting
+            and self.kv.can_allocate_prefill(self.waiting[0].prompt)
+        )
+        progressed = False
+        if can_prefill:
+            batch = []
+            while (
+                len(batch) < PREFILL_B
+                and len(self.running) + len(batch) < MAX_CONCURRENCY
+                and self.waiting
+                and self.kv.can_allocate_prefill(self.waiting[0].prompt)
+            ):
+                batch.append(self.waiting.popleft())
+            cost = 1
+            for s in batch:
+                cached = self.kv.register_with_prefix(s.id, s.prompt)
+                self.prefill_tokens += len(s.prompt)
+                self.cached_prefill_tokens += cached
+                cost = max(cost, len(s.prompt) - cached)
+                self.kv.insert_prefix(s.id, s.prompt)
+                s.generated = 1  # first token samples at prefill
+            self.wtime += cost
+            for s in batch:
+                if s.generated >= MAX_NEW:
+                    self._complete(s)
+                else:
+                    self.running.append(s)
+            progressed = True
+        elif self.running:
+            self.wtime += 1
+            for s in self.running[: min(len(self.running), DECODE_MAX_B)]:
+                self.kv.append_token(s.id)
+                s.generated += 1
+            retired = [s for s in self.running if s.generated >= MAX_NEW]
+            for s in retired:
+                self.running.remove(s)
+                self._complete(s)
+            progressed = True
+        return progressed
+
+
+def least_loaded(probes):
+    best = 0
+    for i in range(1, len(probes)):
+        p, b = probes[i], probes[best]
+        if (p[0], -p[1]) < (b[0], -b[1]):  # (pending, Reverse(headroom))
+            best = i
+    return best
+
+
+def pick_replica(policy, rr_next, probes, home):
+    """Verbatim port of `router::policy::pick_replica`.  A probe is the
+    tuple (pending, headroom, blocks_needed, cached_tokens)."""
+    n = len(probes)
+    if policy == "round-robin":
+        return rr_next % n
+    if policy == "least-loaded":
+        return least_loaded(probes)
+    warm = [i for i in range(n) if probes[i][3] > 0]
+    if warm:
+        chosen = min(warm, key=lambda i: (-probes[i][3], probes[i][0], i))
+    elif home is not None:
+        chosen = home % n
+    else:
+        return least_loaded(probes)
+    pending, headroom, needed, _ = probes[chosen]
+    min_pending = min(p[0] for p in probes)
+    if headroom < needed or pending > min_pending + SPILL_PENDING_MARGIN:
+        return least_loaded(probes)
+    return chosen
+
+
+def drive(n, policy):
+    reps = [SimReplica() for _ in range(n)]
+    rr_next = 0
+    for turn in range(TURNS):
+        # Rotated submission order (arrival jitter): session (turn + k) %
+        # SESSIONS arrives k-th.  Without it, least-loaded's position-based
+        # alternation is accidentally session-stable across drained waves
+        # and ties affinity on cache reuse; with it, sessions flip replicas
+        # under least-loaded while affinity follows the warm cache.
+        for k in range(SESSIONS):
+            session = (turn + k) % SESSIONS
+            rid = turn * SESSIONS + session
+            prompt = session_prompt(session, turn)
+            probes = [
+                (
+                    r.pending(),
+                    r.kv.free,
+                    r.kv.prefill_blocks_needed(prompt),
+                    r.kv.cached_prefix_tokens(prompt),
+                )
+                for r in reps
+            ]
+            idx = pick_replica(policy, rr_next, probes, prefix_home_hash(prompt))
+            reps[idx].submit(rid, prompt)
+            rr_next += 1
+        idle = 0
+        while any(r.pending() for r in reps):
+            progressed = False
+            for r in reps:
+                progressed |= r.step()
+            idle = 0 if progressed else idle + 1
+            assert idle < 64, "router mirror livelock"
+    return reps
+
+
+def pct(sorted_vals, q):
+    return sorted_vals[min(int(len(sorted_vals) * q), len(sorted_vals) - 1)]
+
+
+def record(n, policy):
+    reps = drive(n, policy)
+    latency = [c for r in reps for c in r.completions]
+    assert len(latency) == REQUESTS, f"r{n}/{policy}: dropped requests"
+    lat = sorted(w for _, w in latency)
+    warm = sorted(w for rid, w in latency if rid >= SESSIONS)
+    per_replica = [len(r.completions) for r in reps]
+    return {
+        "scenario": policy,
+        "source": "accounting-sim",
+        "replicas": n,
+        "requests": REQUESTS,
+        "completed": len(latency),
+        "prefill_tokens": sum(r.prefill_tokens for r in reps),
+        "cached_prefill_tokens": sum(r.cached_prefill_tokens for r in reps),
+        "latency_p50_w": pct(lat, 0.5),
+        "latency_p95_w": pct(lat, 0.95),
+        "warm_latency_p95_w": pct(warm, 0.95),
+        "makespan_w": max(r.wtime for r in reps),
+        "tokens_generated": REQUESTS * MAX_NEW,
+        "min_replica_completed": min(per_replica),
+    }
+
+
+def main():
+    records = []
+    for n in (1, 2, 4):
+        by_policy = []
+        for policy in ("round-robin", "least-loaded", "prefix-affinity"):
+            r = record(n, policy)
+            by_policy.append(r)
+            records.append(r)
+            print(
+                f"replicas {n} {policy:<16} "
+                f"lat p50/p95 {r['latency_p50_w']:>4}/{r['latency_p95_w']:>4} | "
+                f"warm p95 {r['warm_latency_p95_w']:>4} | "
+                f"cached/prefill {r['cached_prefill_tokens']:>5}/"
+                f"{r['prefill_tokens']:>5} | "
+                f"makespan {r['makespan_w']:>4} | "
+                f"min-replica {r['min_replica_completed']}"
+            )
+        # The bench's acceptance bars, checked here too.
+        assert all(
+            r["prefill_tokens"] == by_policy[0]["prefill_tokens"]
+            for r in by_policy
+        ), f"replicas {n}: prefill totals diverged"
+        if n >= 2:
+            aff, ll = by_policy[2], by_policy[1]
+            assert (
+                aff["cached_prefill_tokens"] > ll["cached_prefill_tokens"]
+            ), f"replicas {n}: affinity did not beat least-loaded"
+            assert aff["min_replica_completed"] > 0, (
+                f"replicas {n}: prefix affinity starved a replica"
+            )
+
+    out = sys.argv[1] if len(sys.argv) > 1 else "BENCH_router.json"
+    body = ",\n".join(
+        "    " + json.dumps(r, separators=(", ", ": ")) for r in records
+    )
+    text = (
+        '{\n  "bench": "router",\n  "schema_version": 1,\n'
+        '  "results": [\n' + body + "\n  ]\n}\n"
+    )
+    with open(out, "w") as f:
+        f.write(text)
+    print(f"\nwrote {out} ({len(records)} records)")
+
+
+if __name__ == "__main__":
+    main()

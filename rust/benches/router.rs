@@ -1,0 +1,237 @@
+//! Multi-replica router bench (DESIGN.md §13): aggregate throughput and
+//! tail latency vs replica count × dispatch policy, on a multi-turn
+//! session workload over shared system prompts — the traffic shape
+//! prefix-affinity routing exists for.
+//!
+//! Accounting-level like `benches/serving.rs`: it drives the REAL
+//! `Router` over `SimReplica` backends (real `KvCacheManager` + radix
+//! prefix cache, real dispatch function), so no AOT artifacts are needed
+//! and it runs on any box.  Latencies are the sim's token-weighted units
+//! (a prefill batch costs its longest uncached suffix, a decode step
+//! costs 1); a request's latency is its owner replica's weighted time
+//! from submission to completion, and the makespan is the largest
+//! per-replica weighted time — aggregate throughput is
+//! `tokens_generated / makespan_w`.
+//!
+//! Workload: 12 sessions × 4 turns (48 requests), each session opening
+//! with one of 6 shared 32-token system prompts and growing by a
+//! 16-token turn chunk per wave; waves are submitted together and
+//! drained to quiescence (closed loop), so dispatch — not arrival
+//! timing — is the only variable across policies.  Within each wave the
+//! sessions are submitted in rotated order `(turn + k) % SESSIONS`:
+//! with a fixed order and full drains, least-loaded's deterministic
+//! tiebreaks send every session to the same replica every turn (perfect
+//! accidental affinity), and the comparison measures nothing.  Rotation
+//! models arrival jitter — any real open-loop trace perturbs the order —
+//! and makes the policies separate.
+//!
+//! Writes `BENCH_router.json` (override with `BENCH_OUT`).  The
+//! deterministic fields are reproduced bit-for-bit by
+//! `python/tests/sim_router_bench.py` — the committed snapshot's
+//! provenance when no Rust toolchain is at hand (`source` field),
+//! exactly like `BENCH_serving.json`.
+//!
+//! Acceptance bars asserted here (the bench doubles as a check): every
+//! request completes its token budget under every grid point, prefill
+//! token totals are placement-invariant, and at 2+ replicas
+//! prefix-affinity achieves strictly more cached prefill tokens than
+//! least-loaded without starving any replica.
+
+use std::time::Duration;
+
+use flashsampling::benchutil::{
+    bench_with, black_box, json_object, json_str, write_bench_report,
+};
+use flashsampling::coordinator::{Request, SamplingParams};
+use flashsampling::router::{
+    sim_router, DispatchPolicy, EngineBackend, SimReplicaConfig,
+};
+
+const SESSIONS: u64 = 12;
+const TURNS: u64 = 4;
+const REQUESTS: u64 = SESSIONS * TURNS;
+const NUM_SYS: u64 = 6;
+const MAX_NEW: usize = 4;
+
+/// Session `session`'s prompt after `turn + 1` turns: a shared 32-token
+/// system prompt (one of `NUM_SYS`) plus one 16-token chunk per turn.
+/// Same integer recipe as `repro router-identity` and the Python mirror.
+fn session_prompt(session: u64, turn: u64) -> Vec<i32> {
+    let sys = session % NUM_SYS;
+    let mut p: Vec<i32> =
+        (0..32u64).map(|j| ((sys * 97 + j * 13 + 5) % 2048) as i32).collect();
+    for t in 0..=turn {
+        p.extend(
+            (0..16u64).map(|j| ((session * 59 + t * 31 + j * 7 + 11) % 2048) as i32),
+        );
+    }
+    p
+}
+
+/// `sorted[floor(len * q)]`, clamped — the same truncating percentile the
+/// serving bench and the Python mirror implement.
+fn pct(sorted: &[u64], q: f64) -> u64 {
+    sorted[((sorted.len() as f64 * q) as usize).min(sorted.len() - 1)]
+}
+
+#[derive(Default)]
+struct DriveOut {
+    /// (id, weighted submit→completion latency) per finished request.
+    latency: Vec<(u64, u64)>,
+    completed: u64,
+    tokens_generated: u64,
+    prefill_tokens: u64,
+    cached_prefill_tokens: u64,
+    makespan_w: u64,
+    per_replica_completed: Vec<u64>,
+}
+
+fn drive(n: usize, policy: DispatchPolicy) -> DriveOut {
+    let mut r = sim_router(n, policy, SimReplicaConfig::default());
+    let mut out = DriveOut::default();
+    for turn in 0..TURNS {
+        // Rotated submission order (see module docs): the id is derived
+        // from the session, not the position, so ids stay stable.
+        for k in 0..SESSIONS {
+            let session = (turn + k) % SESSIONS;
+            let id = turn * SESSIONS + session;
+            let req = Request::new(
+                id,
+                session_prompt(session, turn),
+                SamplingParams { max_new_tokens: MAX_NEW, ..Default::default() },
+            );
+            r.submit(req).expect("submit");
+        }
+        let mut idle = 0u32;
+        while r.pending() > 0 {
+            let step = r.step().expect("sim step");
+            if step.is_empty() {
+                idle += 1;
+                assert!(idle < 64, "router bench livelock");
+            } else {
+                idle = 0;
+            }
+            for c in step {
+                out.completed += 1;
+                out.tokens_generated += c.tokens.len() as u64;
+                let w = c.timing.ttft.expect("completed with tokens");
+                out.latency.push((c.id, w.as_micros() as u64));
+            }
+        }
+    }
+    for e in r.replicas() {
+        out.prefill_tokens += e.metrics.prefill_tokens;
+        out.cached_prefill_tokens += e.metrics.cached_prefill_tokens;
+        out.makespan_w = out.makespan_w.max(e.wtime());
+        out.per_replica_completed.push(e.metrics.requests_completed);
+    }
+    out
+}
+
+fn main() {
+    println!(
+        "## router — session throughput/latency vs replicas x dispatch \
+         policy (weighted units)\n"
+    );
+    let mut records: Vec<String> = Vec::new();
+    let policies = [
+        DispatchPolicy::RoundRobin,
+        DispatchPolicy::LeastLoaded,
+        DispatchPolicy::PrefixAffinity,
+    ];
+
+    for n in [1usize, 2, 4] {
+        let mut cached_by_policy: Vec<u64> = Vec::new();
+        let mut prefill_by_policy: Vec<u64> = Vec::new();
+        for policy in policies {
+            let out = drive(n, policy);
+            assert_eq!(out.completed, REQUESTS, "r{n}/{policy}: dropped requests");
+            assert_eq!(
+                out.tokens_generated,
+                REQUESTS * MAX_NEW as u64,
+                "r{n}/{policy}: token budget"
+            );
+            let mut lat: Vec<u64> = out.latency.iter().map(|&(_, w)| w).collect();
+            let mut warm: Vec<u64> = out
+                .latency
+                .iter()
+                .filter(|&&(id, _)| id >= SESSIONS)
+                .map(|&(_, w)| w)
+                .collect();
+            lat.sort_unstable();
+            warm.sort_unstable();
+            let min_completed =
+                *out.per_replica_completed.iter().min().expect(">=1 replica");
+            cached_by_policy.push(out.cached_prefill_tokens);
+            prefill_by_policy.push(out.prefill_tokens);
+
+            println!(
+                "replicas {n} {policy:<16} lat p50/p95 {:>4}/{:>4} | warm p95 \
+                 {:>4} | cached/prefill {:>5}/{:>5} | makespan {:>4} | \
+                 per-replica {:?}",
+                pct(&lat, 0.5),
+                pct(&lat, 0.95),
+                pct(&warm, 0.95),
+                out.cached_prefill_tokens,
+                out.prefill_tokens,
+                out.makespan_w,
+                out.per_replica_completed,
+            );
+
+            // Hot-path timing: the full closed-loop drive (dispatch + KV
+            // + radix bookkeeping for 48 requests across n replicas).
+            let label = format!("router/drive/r{n}/{policy}");
+            let timing = bench_with(&label, 10, Duration::from_millis(5), || {
+                black_box(drive(n, policy).completed);
+            });
+
+            let mut fields = vec![
+                ("scenario", json_str(&policy.to_string())),
+                ("source", json_str("bench")),
+                ("replicas", n.to_string()),
+                ("requests", REQUESTS.to_string()),
+                ("completed", out.completed.to_string()),
+                ("prefill_tokens", out.prefill_tokens.to_string()),
+                ("cached_prefill_tokens", out.cached_prefill_tokens.to_string()),
+                ("latency_p50_w", pct(&lat, 0.5).to_string()),
+                ("latency_p95_w", pct(&lat, 0.95).to_string()),
+                ("warm_latency_p95_w", pct(&warm, 0.95).to_string()),
+                ("makespan_w", out.makespan_w.to_string()),
+                ("tokens_generated", out.tokens_generated.to_string()),
+                ("min_replica_completed", min_completed.to_string()),
+            ];
+            fields.extend(timing.json_fields());
+            records.push(json_object(&fields));
+
+            if policy == DispatchPolicy::PrefixAffinity && n >= 2 {
+                assert!(
+                    min_completed > 0,
+                    "replicas {n}: prefix affinity starved a replica"
+                );
+            }
+        }
+        // Prefill totals are placement-invariant (every prompt prefills
+        // exactly once), so cached-token counts compare hit rates.
+        assert!(
+            prefill_by_policy.iter().all(|&p| p == prefill_by_policy[0]),
+            "replicas {n}: prefill totals diverged {prefill_by_policy:?}"
+        );
+        // The acceptance bar: at 2+ replicas affinity routing must beat
+        // least-loaded on cache reuse (the committed snapshot records the
+        // separation).
+        if n >= 2 {
+            assert!(
+                cached_by_policy[2] > cached_by_policy[1],
+                "replicas {n}: affinity cached {} <= least-loaded {}",
+                cached_by_policy[2],
+                cached_by_policy[1],
+            );
+        }
+    }
+
+    let out = std::env::var("BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_router.json".to_string());
+    let path = std::path::PathBuf::from(out);
+    write_bench_report(&path, "router", &records).expect("writing report");
+    println!("\nwrote {} ({} records)", path.display(), records.len());
+}

@@ -26,6 +26,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::coordinator::{EngineConfig, Priority};
 use crate::gpusim::iomodel::SwapPolicy;
+use crate::router::DispatchPolicy;
 use crate::sampling::SamplerSpec;
 
 /// Full launcher configuration.
@@ -79,6 +80,14 @@ pub struct Config {
     pub swap_blocks: usize,
     /// Swap-vs-recompute preemption policy: `auto` | `always` | `never`.
     pub swap_policy: SwapPolicy,
+    /// Serving replicas behind the router (DESIGN.md §13).  1 (default)
+    /// serves through a bare engine — byte-identical to the pre-router
+    /// stack; N >= 2 fans requests out by `dispatch_policy`.
+    pub replicas: usize,
+    /// Router dispatch policy: `round-robin` | `least-loaded` |
+    /// `prefix-affinity` (default — cache-aware session routing).
+    /// Inert at `replicas = 1`, where every policy picks replica 0.
+    pub dispatch_policy: DispatchPolicy,
     /// Output directory for `repro`.
     pub out_dir: PathBuf,
 }
@@ -105,6 +114,8 @@ impl Default for Config {
             chunk_interleave: false,
             swap_blocks: 0,
             swap_policy: SwapPolicy::Auto,
+            replicas: 1,
+            dispatch_policy: DispatchPolicy::default(),
             out_dir: "results".into(),
         }
     }
@@ -175,6 +186,12 @@ impl Config {
                         .map_err(|e: String| anyhow::anyhow!(e))
                         .with_context(|| format!("config key 'swap_policy' = '{v}'"))?;
                 }
+                "replicas" => self.replicas = v.parse()?,
+                "dispatch_policy" => {
+                    self.dispatch_policy = v
+                        .parse()
+                        .with_context(|| format!("config key 'dispatch_policy' = '{v}'"))?;
+                }
                 "out_dir" => self.out_dir = v.into(),
                 other => bail!("unknown config key '{other}'"),
             }
@@ -187,6 +204,9 @@ impl Config {
         }
         if self.max_concurrency == 0 {
             bail!("max_concurrency must be >= 1");
+        }
+        if self.replicas == 0 {
+            bail!("replicas must be >= 1");
         }
         Ok(())
     }
@@ -210,6 +230,10 @@ impl Config {
             chunk_interleave: self.chunk_interleave,
             swap_blocks: self.swap_blocks,
             swap_policy: self.swap_policy,
+            // TP-sharded replicas are constructed programmatically
+            // (`EngineConfig::tp`); the config file drives the router
+            // shape via `replicas` / `dispatch_policy` only.
+            tp: None,
         }
     }
 }
@@ -415,6 +439,28 @@ mod tests {
         assert_eq!(c.swap_policy, SwapPolicy::Always);
         c.apply_pairs(parse_pairs("swap_policy = never").unwrap()).unwrap();
         assert_eq!(c.engine_config().swap_policy, SwapPolicy::Never);
+    }
+
+    #[test]
+    fn router_keys_parse_and_validate() {
+        let mut c = Config::default();
+        // Defaults: 1 replica (bare-engine identity), prefix-affinity.
+        assert_eq!(c.replicas, 1);
+        assert_eq!(c.dispatch_policy, DispatchPolicy::PrefixAffinity);
+        c.apply_pairs(
+            parse_pairs("replicas = 4\ndispatch_policy = least-loaded").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.replicas, 4);
+        assert_eq!(c.dispatch_policy, DispatchPolicy::LeastLoaded);
+        assert!(c.apply_pairs(parse_pairs("replicas = 0").unwrap()).is_err());
+        assert!(c
+            .apply_pairs(parse_pairs("dispatch_policy = random").unwrap())
+            .is_err());
+        // Failed applies never clobber prior values.
+        assert_eq!(c.dispatch_policy, DispatchPolicy::LeastLoaded);
+        // The config-file shape never reaches the engine as TP.
+        assert!(c.engine_config().tp.is_none());
     }
 
     #[test]

@@ -40,7 +40,26 @@ use crate::prefixcache::BlockKv;
 use crate::runtime::{Runtime, Tensor};
 use crate::sampling::{Key, SamplerSpec};
 use crate::specdec::{coupled_emit_len, DraftModel, NGramDraft};
+use crate::tp::{Strategy, TpConfig, TpOrchestrator};
 use crate::workload::RequestSpec;
+
+/// Tensor-parallel decode configuration (DESIGN.md §13).  With
+/// `EngineConfig::tp = Some(..)` the replica's decode step runs the
+/// `decode_hidden_b{B}` transformer artifact (no fused sampling epilogue),
+/// then fans the hidden states out through [`crate::tp::TpOrchestrator`]:
+/// each rank scores its vocab shard and the leader merges per-rank
+/// summaries over the `gpusim` interconnect model.  Exact by the paper's
+/// hierarchical factorization — the distributed merge consumes the same
+/// Philox `(row, counter-step)` coordinates as the fused single-device
+/// kernel, so shard count never shows in the token stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TpDecode {
+    /// Tensor-parallel degree (>= 2; the model vocab must divide evenly).
+    pub n_ranks: usize,
+    /// Interconnect strategy: P2P summary fan-out (FlashSampling) or the
+    /// all-gather materialized-logits baselines.
+    pub strategy: Strategy,
+}
 
 /// Engine configuration.
 #[derive(Clone, Debug)]
@@ -98,6 +117,12 @@ pub struct EngineConfig {
     /// [`crate::gpusim::iomodel::PcieModel`] (`Auto`), or forced
     /// (`Always` / `Never`).
     pub swap_policy: SwapPolicy,
+    /// Tensor-parallel decode (DESIGN.md §13): `None` (default) keeps the
+    /// single-shard fused decode artifacts; `Some` routes every decode
+    /// step through [`TpDecode`]'s sharded LM-head fan-out.  Requires the
+    /// fused Gumbel sampler, `n_ranks >= 2`, and the `decode_hidden` +
+    /// shard artifacts — validated at construction, never at decode time.
+    pub tp: Option<TpDecode>,
 }
 
 impl Default for EngineConfig {
@@ -114,6 +139,7 @@ impl Default for EngineConfig {
             chunk_interleave: false,
             swap_blocks: 0,
             swap_policy: SwapPolicy::Auto,
+            tp: None,
         }
     }
 }
@@ -161,6 +187,9 @@ struct DecodeCache {
 pub struct Engine {
     rt: Runtime,
     cfg: EngineConfig,
+    /// Artifact directory, kept for the lazy per-bucket TP orchestrator
+    /// spawns (each rank thread opens its own PJRT runtime over it).
+    artifacts_dir: std::path::PathBuf,
     sched: SchedulerConfig,
     /// Weight literals in canonical order (uploaded once).
     params_lit: Vec<xla::Literal>,
@@ -196,6 +225,10 @@ pub struct Engine {
     streams: HashMap<u64, SharedStream>,
     key: Key,
     decode_cache: Option<DecodeCache>,
+    /// TP orchestrators by decode bucket, spawned lazily on the first
+    /// decode at that batch size (`cfg.tp` replicas only; empty otherwise).
+    /// Rank threads and their PJRT runtimes are paid once per bucket.
+    tp_orch: HashMap<usize, TpOrchestrator>,
     pub metrics: ServingMetrics,
 }
 
@@ -240,10 +273,50 @@ impl Engine {
     pub fn new(artifacts_dir: impl AsRef<Path>, cfg: EngineConfig) -> Result<Self> {
         // Fail fast on sampler specs the decode artifacts cannot honor.
         cfg.validate_sampler()?;
+        let artifacts_dir = artifacts_dir.as_ref().to_path_buf();
         // Runtime::new refuses scalar-tau (v1) artifact sets, so the
         // per-row tau vectors below always match the executables.
-        let rt = Runtime::new(artifacts_dir)?;
+        let rt = Runtime::new(&artifacts_dir)?;
         let model = rt.manifest().model.clone();
+        if let Some(tp) = cfg.tp {
+            // TP decode validation — everything fail-fast here so the
+            // decode hot path never discovers a missing shard artifact.
+            anyhow::ensure!(
+                matches!(cfg.sampler, SamplerSpec::Gumbel { .. }),
+                "EngineConfig::tp: the TP decode path fans out the fused \
+                 FlashSampling epilogue across vocab shards; sampler must \
+                 be 'gumbel' (got '{}')",
+                cfg.sampler
+            );
+            anyhow::ensure!(tp.n_ranks >= 2, "EngineConfig::tp: n_ranks must be >= 2");
+            anyhow::ensure!(
+                model.vocab % tp.n_ranks == 0,
+                "EngineConfig::tp: vocab {} not divisible by {} ranks",
+                model.vocab,
+                tp.n_ranks
+            );
+            for &b in &model.decode_buckets {
+                for name in [
+                    format!("decode_hidden_b{b}"),
+                    format!(
+                        "shard_sample_b{b}_d{}_v{}_tp{}",
+                        model.d_model, model.vocab, tp.n_ranks
+                    ),
+                    format!(
+                        "shard_logits_b{b}_d{}_v{}_tp{}",
+                        model.d_model, model.vocab, tp.n_ranks
+                    ),
+                ] {
+                    rt.manifest().find(&name).with_context(|| {
+                        format!(
+                            "EngineConfig::tp = {} ranks: artifact '{name}' \
+                             missing (regenerate with `make artifacts`)",
+                            tp.n_ranks
+                        )
+                    })?;
+                }
+            }
+        }
         let params = rt.params_in_order()?;
         let params_lit: Vec<xla::Literal> = params
             .iter()
@@ -291,6 +364,7 @@ impl Engine {
         Ok(Self {
             rt,
             cfg,
+            artifacts_dir,
             sched,
             params_lit,
             lm_head_idx,
@@ -304,8 +378,40 @@ impl Engine {
             streams: HashMap::new(),
             key,
             decode_cache: None,
+            tp_orch: HashMap::new(),
             metrics: ServingMetrics::default(),
         })
+    }
+
+    /// Lazily spawn (and cache) the TP orchestrator for one decode
+    /// bucket.  The full LM-head weight is re-materialized from the
+    /// uploaded literal and sharded row-contiguously across ranks —
+    /// exactly the layout the shard artifacts were lowered for.
+    fn tp_orchestrator(
+        &mut self,
+        b_bucket: usize,
+    ) -> Result<&mut TpOrchestrator, EngineError> {
+        if !self.tp_orch.contains_key(&b_bucket) {
+            let tp = self.cfg.tp.expect("tp_orchestrator without EngineConfig::tp");
+            let model = self.rt.manifest().model.clone();
+            let w = Tensor::from_literal(&self.params_lit[self.lm_head_idx])?
+                .as_f32()?
+                .to_vec();
+            let orch = TpOrchestrator::new(
+                TpConfig {
+                    artifacts_dir: self.artifacts_dir.clone(),
+                    n_ranks: tp.n_ranks,
+                    batch: b_bucket,
+                    d_model: model.d_model,
+                    vocab: model.vocab,
+                    // Same seed => same Philox key as the fused path.
+                    seed: self.cfg.seed,
+                },
+                &w,
+            )?;
+            self.tp_orch.insert(b_bucket, orch);
+        }
+        Ok(self.tp_orch.get_mut(&b_bucket).expect("just inserted"))
     }
 
     pub fn runtime(&self) -> &Runtime {
@@ -519,6 +625,30 @@ impl Engine {
     /// zero-leak invariant the abort suite asserts after every schedule.
     pub fn kv_unaccounted_blocks(&self) -> usize {
         self.kvmgr.unaccounted_blocks()
+    }
+
+    /// KV block size in token positions (the prefix cache's granularity
+    /// and the router's affinity-key width).
+    pub fn kv_block_size(&self) -> usize {
+        self.cfg.kv_block_size
+    }
+
+    /// Router dispatch probe (DESIGN.md §13): tokens of `prompt` already
+    /// resident in this engine's radix cache.  Pure — no refcounts move.
+    pub fn cached_prefix_tokens(&self, prompt: &[i32]) -> usize {
+        self.kvmgr.cached_prefix_tokens(prompt)
+    }
+
+    /// Router dispatch probe: free + reclaimable KV blocks available to
+    /// admit `prompt` on this engine right now.
+    pub fn prefill_headroom(&self, prompt: &[i32]) -> usize {
+        self.kvmgr.prefill_headroom(prompt)
+    }
+
+    /// Router dispatch probe: new KV blocks `prompt` would need beyond
+    /// its cached prefix (what admission charges against the budget).
+    pub fn prefill_blocks_needed(&self, prompt: &[i32]) -> usize {
+        self.kvmgr.prefill_blocks_needed(prompt, 0)
     }
 
     /// One scheduler iteration.  Returns completions finished this step
@@ -1367,42 +1497,83 @@ impl Engine {
         self.metrics.decode_batch_sizes.push(rows.len());
         self.metrics.bump("decode_gather_us", t_gather.elapsed().as_micros() as u64);
 
-        let kind = if self.cfg.uses_baseline_artifact() {
-            "decode_baseline"
-        } else {
-            "decode_sample"
-        };
-        let name = format!("{kind}_b{b_bucket}");
-        let exe = self.rt.load(&name).map_err(|e| EngineError::artifact(&name, e))?;
         let t_lit = Instant::now();
         let pos_lit = Tensor::I32(pos, vec![b_bucket]).to_literal()?;
         let tok_lit = Tensor::I32(tok, vec![b_bucket]).to_literal()?;
-        let seed_lit = Tensor::seed(self.key).to_literal()?;
-        let step_lit = Tensor::scalar_u32(self.bump_step()).to_literal()?;
         // Per-row tau (ABI v2): heterogeneous temperatures share the batch.
         let mut taus = vec![1.0f32; b_bucket];
         for (slot, &ri) in rows.iter().enumerate() {
             taus[slot] = self.running[ri].params.temperature;
         }
-        let tau_lit = Tensor::F32(taus, vec![b_bucket]).to_literal()?;
 
-        let mut lits: Vec<&xla::Literal> = self.params_lit.iter().collect();
-        lits.extend([&kvk_lit, &kvv_lit, &pos_lit, &tok_lit, &seed_lit, &step_lit,
-                     &tau_lit]);
-        self.metrics.bump("decode_lit_us", t_lit.elapsed().as_micros() as u64);
-        let t_exec = Instant::now();
-        let mut out = exe.run_literals_raw(&lits)?;
-        self.metrics.bump("decode_exec_us", t_exec.elapsed().as_micros() as u64);
-        if out.len() != 3 {
-            return Err(EngineError::artifact(
-                &name,
-                anyhow::anyhow!("decode artifact returned {} outputs", out.len()),
-            ));
-        }
-        let sample_lit = out.pop().unwrap();
-        let new_v = out.pop().unwrap();
-        let new_k = out.pop().unwrap();
-        let samples = Tensor::from_literal(&sample_lit)?.as_i32()?.to_vec();
+        let (new_k, new_v, samples) = if let Some(tp) = self.cfg.tp {
+            // TP-sharded decode (DESIGN.md §13): the transformer step runs
+            // the hidden-state artifact (no sampling epilogue — it takes no
+            // seed/step/tau inputs), then the LM-head matmul + FlashSampling
+            // epilogue fan out across vocab shards through the orchestrator.
+            let name = format!("decode_hidden_b{b_bucket}");
+            let exe =
+                self.rt.load(&name).map_err(|e| EngineError::artifact(&name, e))?;
+            let mut lits: Vec<&xla::Literal> = self.params_lit.iter().collect();
+            lits.extend([&kvk_lit, &kvv_lit, &pos_lit, &tok_lit]);
+            self.metrics.bump("decode_lit_us", t_lit.elapsed().as_micros() as u64);
+            let t_exec = Instant::now();
+            let mut out = exe.run_literals_raw(&lits)?;
+            if out.len() != 3 {
+                return Err(EngineError::artifact(
+                    &name,
+                    anyhow::anyhow!("hidden decode artifact returned {} outputs",
+                                    out.len()),
+                ));
+            }
+            let hidden_lit = out.pop().unwrap();
+            let new_v = out.pop().unwrap();
+            let new_k = out.pop().unwrap();
+            let hidden = Tensor::from_literal(&hidden_lit)?.as_f32()?.to_vec();
+            // One counter bump per decode step, same position as the
+            // single-shard path: the distributed merge consumes identical
+            // Philox (row, counter-step) coordinates, so the token stream
+            // is TP-invariant (rust/tests/integration_tp.rs fan-out test).
+            let step = self.bump_step();
+            let r = {
+                let orch = self.tp_orchestrator(b_bucket)?;
+                orch.step(&hidden, step, &taus, tp.strategy)?
+            };
+            self.metrics.bump("decode_exec_us", t_exec.elapsed().as_micros() as u64);
+            self.metrics.bump("tp_wire_bytes", r.wire_bytes);
+            (new_k, new_v, r.samples)
+        } else {
+            let kind = if self.cfg.uses_baseline_artifact() {
+                "decode_baseline"
+            } else {
+                "decode_sample"
+            };
+            let name = format!("{kind}_b{b_bucket}");
+            let exe =
+                self.rt.load(&name).map_err(|e| EngineError::artifact(&name, e))?;
+            let seed_lit = Tensor::seed(self.key).to_literal()?;
+            let step_lit = Tensor::scalar_u32(self.bump_step()).to_literal()?;
+            let tau_lit = Tensor::F32(taus, vec![b_bucket]).to_literal()?;
+
+            let mut lits: Vec<&xla::Literal> = self.params_lit.iter().collect();
+            lits.extend([&kvk_lit, &kvv_lit, &pos_lit, &tok_lit, &seed_lit,
+                         &step_lit, &tau_lit]);
+            self.metrics.bump("decode_lit_us", t_lit.elapsed().as_micros() as u64);
+            let t_exec = Instant::now();
+            let mut out = exe.run_literals_raw(&lits)?;
+            self.metrics.bump("decode_exec_us", t_exec.elapsed().as_micros() as u64);
+            if out.len() != 3 {
+                return Err(EngineError::artifact(
+                    &name,
+                    anyhow::anyhow!("decode artifact returned {} outputs", out.len()),
+                ));
+            }
+            let sample_lit = out.pop().unwrap();
+            let new_v = out.pop().unwrap();
+            let new_k = out.pop().unwrap();
+            let samples = Tensor::from_literal(&sample_lit)?.as_i32()?.to_vec();
+            (new_k, new_v, samples)
+        };
 
         // The new KV lives on as next step's input (lazy per-seq sync).
         self.decode_cache = Some(DecodeCache {

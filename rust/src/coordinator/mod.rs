@@ -24,7 +24,7 @@ pub mod request;
 pub mod scheduler;
 pub mod stream;
 
-pub use engine::{Engine, EngineConfig};
+pub use engine::{Engine, EngineConfig, TpDecode};
 pub use error::EngineError;
 pub use request::{
     Completion, FinishReason, Priority, Request, SamplingParams, Sequence,

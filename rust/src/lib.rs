@@ -76,6 +76,22 @@
 //! off — `repro prefix-identity` and `rust/tests/prefixcache.rs` assert
 //! it — and `cargo bench --bench prefixcache` measures the cached-token
 //! reduction and the modeled TTFT win on shared-prefix workloads.
+//!
+//! # Multi-replica serving router
+//!
+//! The [`router`] subsystem (DESIGN.md §13) scales the serving stack past
+//! one engine: a [`router::Router`] owns N replicas behind the same
+//! handle-based front door (`serve --replicas N`), dispatching by a
+//! pluggable [`router::DispatchPolicy`] — round-robin, least-loaded (KV
+//! headroom probes), or prefix-affinity, which routes on the radix chain
+//! hash of the prompt's cacheable prefix so multi-turn sessions land on
+//! the replica whose radix tree is warm.  Replicas implement
+//! [`router::EngineBackend`]: a plain [`coordinator::Engine`], or a
+//! TP-sharded one (`EngineConfig::tp`) whose decode fans out through
+//! [`tp::TpOrchestrator`] — exact by the paper's hierarchical
+//! factorization, so shard count never shows in the token stream.
+//! `repro router-identity` and `rust/tests/router.rs` certify 1-replica
+//! byte-identity, replay-stable dispatch, and zero-leak aborts.
 
 pub mod benchutil;
 pub mod config;
@@ -86,6 +102,7 @@ pub mod kvcache;
 pub mod metrics;
 pub mod prefixcache;
 pub mod repro;
+pub mod router;
 pub mod runtime;
 pub mod sampling;
 pub mod specdec;

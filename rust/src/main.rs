@@ -15,6 +15,7 @@ use anyhow::{bail, Context, Result};
 
 use flashsampling::config::{parse_pairs, Config};
 use flashsampling::coordinator::{Engine, Request, RequestHandle, SamplingParams};
+use flashsampling::router::Router;
 use flashsampling::runtime::{Runtime, Tensor};
 use flashsampling::sampling::Key;
 use flashsampling::workload::WorkloadGen;
@@ -23,8 +24,8 @@ fn usage() -> ! {
     eprintln!(
         "usage: flashsampling <serve|repro|bench-kernel|selfcheck> [args]\n\
          \n\
-         serve        --config FILE | --set key=value ...\n\
-         repro        <table1|table4|...|fig6|chisq|hetero-chisq|specdec-chisq|prefix-identity|stream-identity|chunk-identity|e2e-quality|all|stats> [--out DIR]\n\
+         serve        [--replicas N] --config FILE | --set key=value ...\n\
+         repro        <table1|table4|...|fig6|chisq|hetero-chisq|specdec-chisq|prefix-identity|stream-identity|chunk-identity|router-identity|e2e-quality|all|stats> [--out DIR]\n\
          bench-kernel [--set key=value ...]\n\
          selfcheck    [--set key=value ...]"
     );
@@ -55,6 +56,11 @@ fn parse_overrides(args: &[String]) -> Result<(Config, Vec<String>)> {
                 pairs.insert("out_dir".into(), dir.clone());
                 i += 2;
             }
+            "--replicas" => {
+                let n = args.get(i + 1).context("--replicas needs a count")?;
+                pairs.insert("replicas".into(), n.clone());
+                i += 2;
+            }
             other if other.starts_with("--") => bail!("unknown flag {other}"),
             other => {
                 positional.push(other.to_string());
@@ -67,8 +73,19 @@ fn parse_overrides(args: &[String]) -> Result<(Config, Vec<String>)> {
 }
 
 fn cmd_serve(cfg: &Config) -> Result<()> {
-    let mut engine = Engine::new(&cfg.artifacts_dir, cfg.engine_config())?;
-    let vocab = engine.runtime().manifest().model.vocab;
+    // The serving front door is ALWAYS the router (DESIGN.md §13):
+    // `replicas = 1` (the default) degenerates to the bare engine —
+    // every policy picks replica 0 and the router adds no reordering, so
+    // token streams are byte-identical to the pre-router stack (`repro
+    // router-identity` is the certificate).  Replicas share the session
+    // seed; at N >= 2, placement shifts batch composition and per-engine
+    // step counters, so streams are exact and replay-stable rather than
+    // equal to the single-engine run.
+    let engines = (0..cfg.replicas)
+        .map(|_| Engine::new(&cfg.artifacts_dir, cfg.engine_config()))
+        .collect::<Result<Vec<_>>>()?;
+    let mut router = Router::new(engines, cfg.dispatch_policy)?;
+    let vocab = router.replicas()[0].runtime().manifest().model.vocab;
     let mut gen = WorkloadGen::new(cfg.seed, cfg.request_rate, vocab);
     gen.temperature = cfg.temperature;
     gen.temperature_choices = cfg.temperature_choices.clone();
@@ -94,6 +111,12 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
          sampler = {sampler_desc}",
         cfg.num_requests, cfg.request_rate,
     );
+    if cfg.replicas > 1 {
+        println!(
+            "[serve] router: {} replicas, dispatch = {}",
+            cfg.replicas, cfg.dispatch_policy
+        );
+    }
 
     // Streaming drive of the handle API (DESIGN.md §11): submit each
     // request at its Poisson arrival offset, step the engine
@@ -108,11 +131,11 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
     let mut submitted = 0usize;
     let mut streamed_tokens = 0u64;
     let mut finished = 0usize;
-    while submitted < cfg.num_requests || engine.pending() > 0 {
+    while submitted < cfg.num_requests || router.pending() > 0 {
         let now = start.elapsed().as_secs_f64();
         while arrivals.peek().is_some_and(|s| s.arrival_s <= now) {
             let s = arrivals.next().expect("peeked");
-            active.push(engine.submit(Request {
+            active.push(router.submit(Request {
                 id: s.id,
                 prompt: s.prompt,
                 params: SamplingParams {
@@ -124,7 +147,7 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
             })?);
             submitted += 1;
         }
-        if engine.pending() == 0 {
+        if router.pending() == 0 {
             if let Some(next) = arrivals.peek() {
                 let wait = next.arrival_s - start.elapsed().as_secs_f64();
                 if wait > 0.0 {
@@ -135,7 +158,7 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
             }
             continue;
         }
-        let completions = engine.step()?;
+        let completions = router.step()?;
         let mut progressed = !completions.is_empty();
         active.retain(|h| {
             let mut done = false;
@@ -152,11 +175,11 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
             !done
         });
         if !progressed {
-            // Nothing ran and nothing streamed: the waiting head can
-            // never be admitted on this engine — reject it instead of
+            // Nothing ran and nothing streamed: some waiting head can
+            // never be admitted on its replica — reject it instead of
             // spinning on Plan::Idle forever (no-op while work runs).
             // The completion is consumed via the handle's terminal event.
-            let _ = engine.reject_unschedulable();
+            let _ = router.reject_unschedulable();
         }
     }
     // Terminal events queued by a final rejection land here.
@@ -170,52 +193,72 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
             }
         }
     }
-    engine.metrics.wall = start.elapsed();
-    let m = &engine.metrics;
+    let wall = start.elapsed();
+    for e in router.replicas_mut() {
+        e.metrics.wall = wall;
+    }
+    let agg_tps: f64 =
+        router.replicas().iter().map(|e| e.metrics.throughput_tps()).sum();
     println!(
         "[serve] completed {} requests | {} streamed tokens | wall {:.2}s | \
          {:.1} tok/s",
         finished,
         streamed_tokens,
-        m.wall.as_secs_f64(),
-        m.throughput_tps()
+        wall.as_secs_f64(),
+        agg_tps
     );
     let ms = |d: Option<std::time::Duration>| {
         d.map(|d| d.as_secs_f64() * 1e3).unwrap_or(f64::NAN)
     };
-    println!(
-        "[serve] TTFT p50 {:.1} ms | TTFT p99 {:.1} ms | inter-token p99 \
-         {:.2} ms | median TPOT {:.2} ms | mean batch {:.2}",
-        ms(m.ttft_quantile(0.5)),
-        ms(m.ttft_quantile(0.99)),
-        ms(m.inter_token_quantile(0.99)),
-        ms(m.median_tpot()),
-        m.mean_batch()
-    );
-    if let Some(rate) = m.prefix_hit_rate() {
+    for (i, e) in router.replicas().iter().enumerate() {
+        let m = &e.metrics;
+        // Single-replica runs keep the legacy line format.
+        let tag = if cfg.replicas > 1 {
+            format!("[serve] replica {i}: ")
+        } else {
+            "[serve] ".to_string()
+        };
         println!(
-            "[serve] prefix cache: {:.1}% token hit rate ({} of {} prefill \
-             tokens served from cache)",
-            rate * 100.0,
-            m.cached_prefill_tokens,
-            m.prefill_tokens
+            "{tag}TTFT p50 {:.1} ms | TTFT p99 {:.1} ms | inter-token p99 \
+             {:.2} ms | median TPOT {:.2} ms | mean batch {:.2}",
+            ms(m.ttft_quantile(0.5)),
+            ms(m.ttft_quantile(0.99)),
+            ms(m.inter_token_quantile(0.99)),
+            ms(m.median_tpot()),
+            m.mean_batch()
+        );
+        if !m.spec_tokens_per_step.is_empty() {
+            // Acceptance is None when the drafter never proposed (e.g. no
+            // suffix repeats); the spec path still ran, so still report it.
+            let acc = m
+                .spec_acceptance_rate()
+                .map_or("n/a (no drafts)".to_string(), |a| {
+                    format!("{:.1}%", a * 100.0)
+                });
+            println!(
+                "{tag}spec decode: acceptance {acc} | {:.2} tokens/step",
+                m.mean_spec_tokens_per_step()
+            );
+        }
+        for (k, v) in &m.counters {
+            println!("{tag}counter {k} = {v}");
+        }
+    }
+    if let Some(rate) = router.prefix_hit_rate() {
+        let (cached, total) = router.replicas().iter().fold((0u64, 0u64), |a, e| {
+            (a.0 + e.metrics.cached_prefill_tokens, a.1 + e.metrics.prefill_tokens)
+        });
+        println!(
+            "[serve] prefix cache: {:.1}% token hit rate ({cached} of {total} \
+             prefill tokens served from cache)",
+            rate * 100.0
         );
     }
-    if !m.spec_tokens_per_step.is_empty() {
-        // Acceptance is None when the drafter never proposed (e.g. no
-        // suffix repeats); the spec path still ran, so still report it.
-        let acc = m
-            .spec_acceptance_rate()
-            .map_or("n/a (no drafts)".to_string(), |a| {
-                format!("{:.1}%", a * 100.0)
-            });
-        println!(
-            "[serve] spec decode: acceptance {acc} | {:.2} tokens/step",
-            m.mean_spec_tokens_per_step()
-        );
-    }
-    for (k, v) in &m.counters {
-        println!("[serve] counter {k} = {v}");
+    // Per-replica-labeled Prometheus exposition on demand (scrape-file
+    // sink; replicas=1 writes the bare-engine unlabeled format).
+    if let Ok(path) = std::env::var("FS_PROM_OUT") {
+        std::fs::write(&path, router.render_prometheus())?;
+        println!("[serve] wrote Prometheus metrics to {path}");
     }
     Ok(())
 }

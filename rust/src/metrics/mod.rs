@@ -202,12 +202,25 @@ impl ServingMetrics {
         Some(self.cached_prefill_tokens as f64 / self.prefill_tokens as f64)
     }
 
-    /// Plain-text Prometheus exposition-format dump: counters, gauges, and
-    /// TTFT/TPOT summaries, deterministically ordered (named counters
-    /// sorted by name) so scrapes — and the format-stability unit test —
-    /// see a stable layout.
-    pub fn render_prometheus(&self) -> String {
-        let mut out = String::new();
+    /// Exposition families as `(TYPE header, sample lines)` pairs, with
+    /// `label` (e.g. `replica="0"`, or `""` for none) merged into every
+    /// sample's label set.  The family list and order are fixed per
+    /// instance, which is what lets [`render_prometheus_replicas`] zip
+    /// several instances into one valid exposition (one TYPE header per
+    /// family, samples distinguished by the injected label).
+    fn prometheus_families(&self, label: &str) -> Vec<(String, String)> {
+        // Merge the instance label with a per-sample label like
+        // `quantile="0.5"`; empty pieces produce no braces at all, so the
+        // unlabeled render stays byte-identical to the historic format.
+        let lbl = |extra: &str| -> String {
+            match (label.is_empty(), extra.is_empty()) {
+                (true, true) => String::new(),
+                (true, false) => format!("{{{extra}}}"),
+                (false, true) => format!("{{{label}}}"),
+                (false, false) => format!("{{{label},{extra}}}"),
+            }
+        };
+        let mut fams = Vec::new();
         for (name, v) in [
             ("requests_completed", self.requests_completed),
             ("tokens_generated", self.tokens_generated),
@@ -217,54 +230,102 @@ impl ServingMetrics {
             ("swap_out_blocks", self.swap_out_blocks),
             ("swap_in_blocks", self.swap_in_blocks),
         ] {
-            out.push_str(&format!(
-                "# TYPE flashsampling_{name} counter\n\
-                 flashsampling_{name} {v}\n"
+            fams.push((
+                format!("# TYPE flashsampling_{name} counter\n"),
+                format!("flashsampling_{name}{} {v}\n", lbl("")),
             ));
         }
-        out.push_str("# TYPE flashsampling_prefix_hit_rate gauge\n");
-        out.push_str(&format!(
-            "flashsampling_prefix_hit_rate {:.6}\n",
-            self.prefix_hit_rate().unwrap_or(0.0)
+        fams.push((
+            "# TYPE flashsampling_prefix_hit_rate gauge\n".into(),
+            format!(
+                "flashsampling_prefix_hit_rate{} {:.6}\n",
+                lbl(""),
+                self.prefix_hit_rate().unwrap_or(0.0)
+            ),
         ));
-        out.push_str("# TYPE flashsampling_throughput_tokens_per_second gauge\n");
-        out.push_str(&format!(
-            "flashsampling_throughput_tokens_per_second {:.6}\n",
-            self.throughput_tps()
+        fams.push((
+            "# TYPE flashsampling_throughput_tokens_per_second gauge\n".into(),
+            format!(
+                "flashsampling_throughput_tokens_per_second{} {:.6}\n",
+                lbl(""),
+                self.throughput_tps()
+            ),
         ));
         for (name, xs) in [
             ("ttft", &self.ttft),
             ("tpot", &self.tpot),
             ("inter_token", &self.inter_token),
         ] {
-            out.push_str(&format!(
-                "# TYPE flashsampling_{name}_seconds summary\n"
-            ));
+            let mut body = String::new();
             if !xs.is_empty() {
                 for q in [0.5, 0.9, 0.99] {
                     let v = duration_quantile(xs, q).expect("non-empty");
-                    out.push_str(&format!(
-                        "flashsampling_{name}_seconds{{quantile=\"{q}\"}} {:.6}\n",
+                    body.push_str(&format!(
+                        "flashsampling_{name}_seconds{} {:.6}\n",
+                        lbl(&format!("quantile=\"{q}\"")),
                         v.as_secs_f64()
                     ));
                 }
             }
-            out.push_str(&format!(
-                "flashsampling_{name}_seconds_count {}\n",
+            body.push_str(&format!(
+                "flashsampling_{name}_seconds_count{} {}\n",
+                lbl(""),
                 xs.len()
+            ));
+            fams.push((
+                format!("# TYPE flashsampling_{name}_seconds summary\n"),
+                body,
             ));
         }
         let mut names: Vec<&String> = self.counters.keys().collect();
         names.sort();
-        out.push_str("# TYPE flashsampling_counter counter\n");
+        let mut body = String::new();
         for name in names {
-            out.push_str(&format!(
-                "flashsampling_counter{{name=\"{name}\"}} {}\n",
+            body.push_str(&format!(
+                "flashsampling_counter{} {}\n",
+                lbl(&format!("name=\"{name}\"")),
                 self.counters[name]
             ));
         }
-        out
+        fams.push(("# TYPE flashsampling_counter counter\n".into(), body));
+        fams
     }
+
+    /// Plain-text Prometheus exposition-format dump: counters, gauges, and
+    /// TTFT/TPOT summaries, deterministically ordered (named counters
+    /// sorted by name) so scrapes — and the format-stability unit test —
+    /// see a stable layout.
+    pub fn render_prometheus(&self) -> String {
+        self.prometheus_families("")
+            .into_iter()
+            .map(|(header, body)| header + &body)
+            .collect()
+    }
+}
+
+/// Multi-replica Prometheus exposition: each family's TYPE header appears
+/// once, followed by every replica's samples tagged `replica="i"` (the
+/// router's scrape surface — DESIGN.md §13).  A single replica renders
+/// unlabeled, byte-identical to [`ServingMetrics::render_prometheus`], so
+/// `--replicas 1` scrapes are indistinguishable from the bare engine's.
+pub fn render_prometheus_replicas(replicas: &[&ServingMetrics]) -> String {
+    if let [only] = replicas {
+        return only.render_prometheus();
+    }
+    let per: Vec<Vec<(String, String)>> = replicas
+        .iter()
+        .enumerate()
+        .map(|(i, m)| m.prometheus_families(&format!("replica=\"{i}\"")))
+        .collect();
+    let mut out = String::new();
+    let n_fams = per.first().map_or(0, Vec::len);
+    for f in 0..n_fams {
+        out.push_str(&per[0][f].0);
+        for fams in &per {
+            out.push_str(&fams[f].1);
+        }
+    }
+    out
 }
 
 fn median(xs: &[Duration]) -> Option<Duration> {
@@ -414,6 +475,35 @@ flashsampling_counter{name=\"preempted\"} 2
         assert!(empty.contains("flashsampling_ttft_seconds_count 0"));
         assert!(empty.contains("flashsampling_prefix_hit_rate 0.000000"));
         assert!(!empty.contains("quantile"));
+    }
+
+    #[test]
+    fn prometheus_replica_labels() {
+        let mut a = ServingMetrics::default();
+        a.requests_completed = 2;
+        a.ttft = vec![Duration::from_millis(10)];
+        a.bump("preempted", 1);
+        let mut b = ServingMetrics::default();
+        b.requests_completed = 5;
+        let multi = render_prometheus_replicas(&[&a, &b]);
+        // One TYPE header per family, then one labeled sample per replica.
+        assert_eq!(
+            multi.matches("# TYPE flashsampling_requests_completed counter").count(),
+            1
+        );
+        assert!(multi.contains("flashsampling_requests_completed{replica=\"0\"} 2\n"));
+        assert!(multi.contains("flashsampling_requests_completed{replica=\"1\"} 5\n"));
+        // Per-sample labels merge after the replica label.
+        assert!(multi.contains(
+            "flashsampling_ttft_seconds{replica=\"0\",quantile=\"0.5\"} 0.010000\n"
+        ));
+        assert!(multi.contains("flashsampling_ttft_seconds_count{replica=\"1\"} 0\n"));
+        assert!(multi
+            .contains("flashsampling_counter{replica=\"0\",name=\"preempted\"} 1\n"));
+        // A single replica renders unlabeled and byte-identical to the
+        // instance method — `--replicas 1` scrapes don't change shape.
+        assert_eq!(render_prometheus_replicas(&[&a]), a.render_prometheus());
+        assert!(!render_prometheus_replicas(&[&a]).contains("replica="));
     }
 
     #[test]

@@ -35,4 +35,4 @@
 
 pub mod radix;
 
-pub use radix::{BlockKv, RadixTree};
+pub use radix::{prefix_home_hash, BlockKv, RadixTree};

@@ -76,6 +76,20 @@ fn chain_hash(parent: u64, tokens: &[i32]) -> u64 {
     fnv(h, tokens.iter().flat_map(|t| t.to_le_bytes()))
 }
 
+/// Routing key for multi-replica prefix-affinity dispatch
+/// (`crate::router`): the chain hash of the prompt's FIRST full block —
+/// exactly the root key under which any cached prefix of this prompt is
+/// (or would be) indexed in a [`RadixTree`].  Pure — no tree needed — so
+/// a router can compute it before anything is cached: two prompts that
+/// share their first `block_size` tokens (multi-turn sessions over one
+/// system prompt) map to the same value and therefore to the same home
+/// replica even on a cold start.  `None` when the prompt is shorter than
+/// one full block: nothing is cacheable, so there is no affinity signal.
+pub fn prefix_home_hash(prompt: &[i32], block_size: usize) -> Option<u64> {
+    assert!(block_size > 0, "block_size must be >= 1");
+    (prompt.len() >= block_size).then(|| chain_hash(ROOT_HASH, &prompt[..block_size]))
+}
+
 /// The radix tree: a slab of nodes plus the first-block index.
 pub struct RadixTree {
     block_size: usize,

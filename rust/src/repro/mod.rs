@@ -9,6 +9,7 @@
 //! serving engine.
 
 pub mod quality;
+pub mod router_identity;
 pub mod tables;
 
 use anyhow::Result;
@@ -23,16 +24,18 @@ pub const ALL: [&str; 13] = [
 /// Statistical experiments (run real sampling; `e2e-quality` needs
 /// artifacts and a few minutes, the rest — including the prefix-cache
 /// on/off identity check, the streaming-front-end identity/abort
-/// certificate, and the chunked-prefill/swap-tier replay-identity
+/// certificate, the chunked-prefill/swap-tier replay-identity
+/// certificate, and the multi-replica router identity/balance
 /// certificate — are fast and deterministic, so CI runs them as a smoke
 /// gate after `cargo test`).
-pub const STATS: [&str; 7] = [
+pub const STATS: [&str; 8] = [
     "chisq",
     "hetero-chisq",
     "specdec-chisq",
     "prefix-identity",
     "stream-identity",
     "chunk-identity",
+    "router-identity",
     "e2e-quality",
 ];
 
@@ -59,6 +62,7 @@ pub fn run(id: &str, out_dir: &Path) -> Result<String> {
         "prefix-identity" => quality::prefix_identity()?,
         "stream-identity" => quality::stream_identity()?,
         "chunk-identity" => quality::chunk_identity()?,
+        "router-identity" => router_identity::router_identity()?,
         "e2e-quality" => quality::e2e_quality(None)?,
         other => anyhow::bail!("unknown experiment id '{other}'"),
     };

@@ -1,0 +1,386 @@
+//! `repro router-identity` — the multi-replica router's exactness and
+//! balance certificate (DESIGN.md §13).
+//!
+//! CPU-only by design: it drives [`Router<SimReplica>`], where everything
+//! above model execution is real (real KV manager + radix cache, real
+//! stream event queues, the same pure dispatch function `Router<Engine>`
+//! uses) and tokens come from the deterministic sim formula.  Claims
+//! certified:
+//!
+//! 1. **1-replica identity** — a 1-replica router is the bare replica:
+//!    identical completion order, scheduling clock, weighted time, and
+//!    prefill/cache token accounting under every dispatch policy.  (Token
+//!    *values* are placement-invariant in the sim by construction; the
+//!    scheduling trajectory is the quantity the router could perturb, so
+//!    that is what the table compares.  The artifact-gated
+//!    `rust/tests/router.rs` suite asserts the byte-level token identity
+//!    on `Router<Engine>` when a toolbox is present.)
+//! 2. **N-replica replay stability** — rerunning the same submission
+//!    sequence reproduces every placement decision and every token
+//!    stream bit-for-bit.
+//! 3. **Abort balance** — randomized abort schedules leak zero KV blocks
+//!    and zero prefix-cache refs, and every handle's event queue drains
+//!    to a terminal event.
+//! 4. **Affinity wins** — on a session workload, prefix-affinity
+//!    dispatch achieves a strictly higher aggregate prefix hit rate than
+//!    least-loaded, without starving any replica.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::coordinator::{Request, RequestHandle, SamplingParams};
+use crate::router::{
+    sim_router, DispatchPolicy, EngineBackend, Router, SimReplica,
+    SimReplicaConfig,
+};
+use crate::testutil::Gen;
+
+/// One submission wave: (id, prompt, max_new_tokens).
+type Wave = Vec<(u64, Vec<i32>, usize)>;
+
+/// Session workload over shared system prompts, all-integer-deterministic
+/// (mirrored by `python/tests/sim_router_bench.py`): `sessions` multi-turn
+/// streams, each opening with one of `num_sys` 32-token system prompts and
+/// growing by a 16-token turn chunk per wave.
+///
+/// Within each wave the sessions appear in rotated order
+/// `(turn + k) % sessions` (ids are still derived from the session): with
+/// a fixed order and drained waves, least-loaded's deterministic
+/// tiebreaks send every session to the same replica every turn —
+/// accidental perfect affinity — and section 4's comparison would
+/// measure nothing.  Rotation models the arrival jitter any open-loop
+/// trace has.
+fn session_waves(sessions: u64, turns: usize, num_sys: u64) -> Vec<Wave> {
+    let sys_prompt = |s: u64| -> Vec<i32> {
+        (0..32).map(|j| ((s * 97 + j * 13 + 5) % 2048) as i32).collect()
+    };
+    (0..turns)
+        .map(|turn| {
+            (0..sessions)
+                .map(|k| {
+                    let session = (turn as u64 + k) % sessions;
+                    let mut p = sys_prompt(session % num_sys);
+                    for t in 0..=turn as u64 {
+                        p.extend((0..16u64).map(|j| {
+                            ((session * 59 + t * 31 + j * 7 + 11) % 2048) as i32
+                        }));
+                    }
+                    (turn as u64 * sessions + session, p, 4usize)
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn req(id: u64, prompt: Vec<i32>, max_new: usize) -> Request {
+    Request::new(
+        id,
+        prompt,
+        SamplingParams { max_new_tokens: max_new, ..Default::default() },
+    )
+}
+
+/// Everything one run observes — the comparison surface of every section.
+#[derive(Default, PartialEq)]
+struct RunOut {
+    tokens: BTreeMap<u64, Vec<i32>>,
+    owners: BTreeMap<u64, usize>,
+    completion_order: Vec<u64>,
+    clock: u64,
+    wtime: u64,
+    prefill_tokens: u64,
+    cached_tokens: u64,
+    leaked: usize,
+    dangling_refs: usize,
+    events_ok: bool,
+    /// Completed requests per replica (starvation check).
+    per_replica: Vec<u64>,
+}
+
+/// Drive waves through a bare replica — no router anywhere in the call
+/// path — recording the same observables as [`drive`].  The section-1
+/// baseline: a 1-replica router must be indistinguishable from this.
+fn drive_bare(e: &mut SimReplica, waves: &[Wave]) -> RunOut {
+    let mut out = RunOut::default();
+    let mut handles: Vec<RequestHandle> = Vec::new();
+    for wave in waves {
+        for (id, prompt, max_new) in wave {
+            handles.push(e.submit(req(*id, prompt.clone(), *max_new)).expect("submit"));
+            out.owners.insert(*id, 0);
+        }
+        let mut idle = 0;
+        while e.pending() > 0 {
+            let step = e.step().expect("sim step");
+            if step.is_empty() {
+                idle += 1;
+                if idle > 8 {
+                    if let Some(c) = e.reject_unschedulable() {
+                        out.tokens.insert(c.id, c.tokens.clone());
+                        out.completion_order.push(c.id);
+                        idle = 0;
+                        continue;
+                    }
+                }
+                assert!(idle < 64, "router-identity sim livelock");
+            } else {
+                idle = 0;
+            }
+            for c in step {
+                out.tokens.insert(c.id, c.tokens.clone());
+                out.completion_order.push(c.id);
+            }
+        }
+    }
+    out.clock = e.clock();
+    out.leaked = e.kv_unaccounted_blocks();
+    out.dangling_refs = e.prefix_attached_refs();
+    out.events_ok = handles.iter().all(|h| {
+        let evs = h.drain();
+        let terminal = evs.last().map(|e| e.finish.is_some());
+        h.is_finished() && terminal == Some(true) && h.try_next().is_none()
+    });
+    out.wtime = e.wtime();
+    out.prefill_tokens = e.metrics.prefill_tokens;
+    out.cached_tokens = e.metrics.cached_prefill_tokens;
+    out.per_replica.push(e.metrics.requests_completed);
+    out
+}
+
+/// Drive waves through a router, aborting `(wave, id)` entries right
+/// after their wave is submitted, and drain to quiescence.
+fn drive(
+    r: &mut Router<SimReplica>,
+    waves: &[Wave],
+    aborts: &[(usize, u64)],
+) -> RunOut {
+    let mut out = RunOut::default();
+    let mut handles: Vec<RequestHandle> = Vec::new();
+    for (w, wave) in waves.iter().enumerate() {
+        for (id, prompt, max_new) in wave {
+            handles.push(r.submit(req(*id, prompt.clone(), *max_new)).expect("submit"));
+            out.owners.insert(*id, r.owner_of(*id).expect("owned"));
+        }
+        for &(_, id) in aborts.iter().filter(|&&(aw, _)| aw == w) {
+            if r.owner_of(id).is_some() {
+                let c = r.abort(id).expect("abort live request");
+                out.tokens.insert(c.id, c.tokens.clone());
+                out.completion_order.push(c.id);
+            }
+        }
+        let mut idle = 0;
+        while r.pending() > 0 {
+            let step = r.step().expect("sim step");
+            if step.is_empty() {
+                idle += 1;
+                if idle > 8 {
+                    if let Some(c) = r.reject_unschedulable() {
+                        out.tokens.insert(c.id, c.tokens.clone());
+                        out.completion_order.push(c.id);
+                        idle = 0;
+                        continue;
+                    }
+                }
+                assert!(idle < 64, "router-identity sim livelock");
+            } else {
+                idle = 0;
+            }
+            for c in step {
+                out.tokens.insert(c.id, c.tokens.clone());
+                out.completion_order.push(c.id);
+            }
+        }
+    }
+    out.clock = r.clock();
+    out.leaked = r.kv_unaccounted_blocks();
+    out.dangling_refs = r.prefix_attached_refs();
+    out.events_ok = handles.iter().all(|h| {
+        let evs = h.drain();
+        let terminal = evs.last().map(|e| e.finish.is_some());
+        // Finished either way; a fully-drained queue must end terminal.
+        h.is_finished() && terminal == Some(true) && h.try_next().is_none()
+    });
+    for e in r.replicas() {
+        out.wtime += e.wtime();
+        out.prefill_tokens += e.metrics.prefill_tokens;
+        out.cached_tokens += e.metrics.cached_prefill_tokens;
+        out.per_replica.push(e.metrics.requests_completed);
+    }
+    out
+}
+
+pub fn router_identity() -> Result<String> {
+    let cfg = SimReplicaConfig::default();
+    let verdict = |ok: bool| if ok { "IDENTICAL" } else { "MISMATCH" };
+    let mut md = String::from(
+        "## router-identity — multi-replica router exactness certificate \
+         (SimReplica backend: real KV/radix accounting + real event \
+         queues, deterministic tokens)\n",
+    );
+
+    // 1. A 1-replica router is the bare replica, under every policy.
+    md.push_str(
+        "\n### 1-replica identity (router vs bare replica)\n\n\
+         | policy | completions | clock | weighted time | cached/prefill \
+         tokens | verdict |\n|---|---|---|---|---|---|\n",
+    );
+    let waves = session_waves(6, 3, 4);
+    let bare = drive_bare(&mut SimReplica::new(cfg), &waves);
+    let mut ok_all = true;
+    for policy in [
+        DispatchPolicy::RoundRobin,
+        DispatchPolicy::LeastLoaded,
+        DispatchPolicy::PrefixAffinity,
+    ] {
+        let mut r = sim_router(1, policy, cfg);
+        let out = drive(&mut r, &waves, &[]);
+        let ok = out.completion_order == bare.completion_order
+            && out.tokens == bare.tokens
+            && out.clock == bare.clock
+            && out.wtime == bare.wtime
+            && out.prefill_tokens == bare.prefill_tokens
+            && out.cached_tokens == bare.cached_tokens
+            && out.owners.values().all(|&o| o == 0);
+        ok_all &= ok;
+        md.push_str(&format!(
+            "| {policy} | {} | {} | {} | {}/{} | {} |\n",
+            out.completion_order.len(),
+            out.clock,
+            out.wtime,
+            out.cached_tokens,
+            out.prefill_tokens,
+            verdict(ok),
+        ));
+    }
+
+    // 2. N-replica replay stability: same submissions => same placements
+    // and streams, for every policy at 3 replicas.
+    md.push_str(
+        "\n### Replay stability (3 replicas, run twice)\n\n\
+         | policy | requests | placements equal | streams equal | \
+         verdict |\n|---|---|---|---|---|\n",
+    );
+    for policy in [
+        DispatchPolicy::RoundRobin,
+        DispatchPolicy::LeastLoaded,
+        DispatchPolicy::PrefixAffinity,
+    ] {
+        let a = drive(&mut sim_router(3, policy, cfg), &waves, &[]);
+        let b = drive(&mut sim_router(3, policy, cfg), &waves, &[]);
+        let placements = a.owners == b.owners;
+        let streams = a.tokens == b.tokens && a.completion_order == b.completion_order;
+        ok_all &= placements && streams;
+        md.push_str(&format!(
+            "| {policy} | {} | {} | {} | {} |\n",
+            a.owners.len(),
+            placements,
+            streams,
+            verdict(placements && streams),
+        ));
+    }
+
+    // 3. Randomized abort schedules: zero leaks, drained event queues.
+    md.push_str(
+        "\n### Abort balance (randomized schedules, 2 replicas, \
+         prefix-affinity)\n\n\
+         | case | aborts | leaked blocks | dangling refs | events drained \
+         | verdict |\n|---|---|---|---|---|---|\n",
+    );
+    for case in 0..6u32 {
+        let mut g = Gen::new(0x40F7E4, case);
+        let n_aborts = g.usize_in(2, 8);
+        let aborts: Vec<(usize, u64)> = (0..n_aborts)
+            .map(|_| (g.usize_in(0, 2), g.usize_in(0, 17) as u64))
+            .collect();
+        let mut r = sim_router(2, DispatchPolicy::PrefixAffinity, cfg);
+        let out = drive(&mut r, &waves, &aborts);
+        let ok = out.leaked == 0 && out.dangling_refs == 0 && out.events_ok;
+        ok_all &= ok;
+        md.push_str(&format!(
+            "| {case} (seed 0x40F7E4) | {} | {} | {} | {} | {} |\n",
+            n_aborts,
+            out.leaked,
+            out.dangling_refs,
+            out.events_ok,
+            if ok { "BALANCED" } else { "MISMATCH: leak" },
+        ));
+    }
+
+    // 4. Affinity beats least-loaded on hit rate without starvation.
+    md.push_str(
+        "\n### Prefix-affinity vs least-loaded (session workload, 2 \
+         replicas)\n\n\
+         | policy | hit rate | per-replica completions | verdict \
+         |\n|---|---|---|---|\n",
+    );
+    let waves_big = session_waves(8, 3, 4);
+    let aff = drive(
+        &mut sim_router(2, DispatchPolicy::PrefixAffinity, cfg),
+        &waves_big,
+        &[],
+    );
+    let ll = drive(
+        &mut sim_router(2, DispatchPolicy::LeastLoaded, cfg),
+        &waves_big,
+        &[],
+    );
+    let rate = |o: &RunOut| o.cached_tokens as f64 / o.prefill_tokens as f64;
+    let no_starve = aff.per_replica.iter().all(|&c| c > 0);
+    let wins = rate(&aff) > rate(&ll) && no_starve;
+    ok_all &= wins;
+    md.push_str(&format!(
+        "| prefix-affinity | {:.4} | {:?} | {} |\n| least-loaded | {:.4} | {:?} | baseline |\n",
+        rate(&aff),
+        aff.per_replica,
+        if wins { "OK" } else { "MISMATCH: affinity did not win" },
+        rate(&ll),
+        ll.per_replica,
+    ));
+
+    md.push_str(&format!(
+        "\n**Overall: {}**\n",
+        if ok_all {
+            "IDENTICAL / BALANCED — router preserves the single-engine \
+             contract and affinity routing pays for itself"
+        } else {
+            "MISMATCH — see rows above"
+        }
+    ));
+    Ok(md)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn certificate_is_clean() {
+        let md = router_identity().unwrap();
+        assert!(!md.contains("MISMATCH"), "{md}");
+        assert!(md.contains("IDENTICAL"));
+        assert!(md.contains("BALANCED"));
+        // Four sections render tables.
+        assert!(md.matches("###").count() >= 4, "{md}");
+    }
+
+    #[test]
+    fn session_waves_are_deterministic_and_grow() {
+        let a = session_waves(4, 2, 2);
+        let b = session_waves(4, 2, 2);
+        assert_eq!(a.len(), 2);
+        assert_eq!(a[0].len(), 4);
+        // Waves are rotated, so look sessions up by id: session s has id
+        // `turn * 4 + s` in wave `turn`.  Turn 1 prompts strictly extend
+        // turn 0 prompts per session.
+        let by_id = |wave: &Wave, id: u64| -> Vec<i32> {
+            wave.iter().find(|(i, _, _)| *i == id).expect("id present").1.clone()
+        };
+        for s in 0..4u64 {
+            let p0 = by_id(&a[0], s);
+            let p1 = by_id(&a[1], 4 + s);
+            assert!(p1.starts_with(&p0));
+            assert!(p1.len() > p0.len());
+        }
+        assert_eq!(a[1][3], b[1][3]);
+    }
+}

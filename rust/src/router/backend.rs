@@ -1,0 +1,117 @@
+//! [`EngineBackend`] — the replica abstraction the router is generic
+//! over (ROADMAP item 1's unification).
+//!
+//! A replica is anything that speaks the handle-based serving protocol:
+//! `submit() → RequestHandle`, `abort()`, `step() → completions`, plus
+//! the pure admission probes dispatch policies read.  Two production
+//! shapes exist, both the SAME type:
+//!
+//! * a plain [`Engine`] (`EngineConfig::tp = None`) — single-shard
+//!   decode through the fused `decode_sample_b{B}` artifacts;
+//! * a TP-sharded engine (`EngineConfig::tp = Some(TpDecode { .. })`) —
+//!   decode runs the `decode_hidden_b{B}` transformer artifact, then
+//!   fans the hidden states out through [`crate::tp::TpOrchestrator`]
+//!   over the `gpusim` interconnect model.  Exact by the paper's
+//!   hierarchical-factorization argument: the distributed sampler
+//!   consumes the same Philox `(row, counter-step)` coordinates as the
+//!   fused single-device kernel (`rust/tests/integration_tp.rs::
+//!   fanout_matches_single_device_kernel`), so shard count is invisible
+//!   in the token stream and every stream-identity certificate carries
+//!   over.
+//!
+//! The trait exists so the router's ownership/accounting logic is
+//! testable without artifacts (a mock backend in `router::tests`) and so
+//! future replica shapes (remote engines, processes) slot in behind the
+//! same front door.
+
+use anyhow::Result;
+
+use crate::coordinator::{Completion, Engine, EngineError, Request, RequestHandle};
+use crate::metrics::ServingMetrics;
+
+use super::policy::ReplicaProbe;
+
+/// One serving replica behind the router.  Mirrors the public `Engine`
+/// surface the serving front-end already drives, plus the pure probes
+/// dispatch needs; implementors must preserve the engine's semantics —
+/// typed [`EngineError`]s, per-token events on the returned handle,
+/// terminal events at completion/abort.
+pub trait EngineBackend {
+    /// Submit a request; events stream on the returned handle.
+    fn submit(&mut self, req: Request) -> Result<RequestHandle, EngineError>;
+    /// Cancel a live request (zero-leak KV/prefix release).
+    fn abort(&mut self, request_id: u64) -> Result<Completion, EngineError>;
+    /// One scheduler iteration; returns completions finished this step.
+    fn step(&mut self) -> Result<Vec<Completion>, EngineError>;
+    /// Open-loop backstop: reject the unschedulable waiting head (see
+    /// [`Engine::reject_unschedulable`]).
+    fn reject_unschedulable(&mut self) -> Option<Completion>;
+    /// Sequences waiting, running, or swapped.
+    fn pending(&self) -> usize;
+    /// The replica's logical step clock.
+    fn clock(&self) -> u64;
+    /// KV block size in token positions (affinity-key width; the router
+    /// requires all replicas to agree).
+    fn kv_block_size(&self) -> usize;
+    /// The admission probe dispatch policies read, answered for one
+    /// prompt.  Must be pure with respect to replica state.
+    fn probe(&self, prompt: &[i32]) -> ReplicaProbe;
+    /// Serving metrics (per-replica labels in the Prometheus export).
+    fn metrics(&self) -> &ServingMetrics;
+    /// Pool-balance diagnostic: blocks neither free nor cache-resident
+    /// (0 at quiescence — the router leak test sums this over replicas).
+    fn kv_unaccounted_blocks(&self) -> usize;
+    /// Live prefix-cache attachment refs (0 at quiescence).
+    fn prefix_attached_refs(&self) -> usize;
+}
+
+impl EngineBackend for Engine {
+    fn submit(&mut self, req: Request) -> Result<RequestHandle, EngineError> {
+        Engine::submit(self, req)
+    }
+
+    fn abort(&mut self, request_id: u64) -> Result<Completion, EngineError> {
+        Engine::abort(self, request_id)
+    }
+
+    fn step(&mut self) -> Result<Vec<Completion>, EngineError> {
+        Engine::step(self)
+    }
+
+    fn reject_unschedulable(&mut self) -> Option<Completion> {
+        Engine::reject_unschedulable(self)
+    }
+
+    fn pending(&self) -> usize {
+        Engine::pending(self)
+    }
+
+    fn clock(&self) -> u64 {
+        Engine::clock(self)
+    }
+
+    fn kv_block_size(&self) -> usize {
+        Engine::kv_block_size(self)
+    }
+
+    fn probe(&self, prompt: &[i32]) -> ReplicaProbe {
+        ReplicaProbe {
+            pending: self.pending(),
+            headroom: self.prefill_headroom(prompt),
+            blocks_needed: self.prefill_blocks_needed(prompt),
+            cached_tokens: self.cached_prefix_tokens(prompt),
+        }
+    }
+
+    fn metrics(&self) -> &ServingMetrics {
+        &self.metrics
+    }
+
+    fn kv_unaccounted_blocks(&self) -> usize {
+        Engine::kv_unaccounted_blocks(self)
+    }
+
+    fn prefix_attached_refs(&self) -> usize {
+        Engine::prefix_attached_refs(self)
+    }
+}

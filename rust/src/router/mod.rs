@@ -1,0 +1,448 @@
+//! Multi-replica serving router: prefix-affinity dispatch over N engines
+//! (DESIGN.md §13; ROADMAP item 1).
+//!
+//! FlashSampling's exactness is per-engine — the fused kernel (and its
+//! TP factorization) fixes the token stream given Philox coordinates —
+//! so everything ABOVE an engine is free to scale out without touching
+//! the sampling contract.  This module is that layer: a [`Router`] owns
+//! N replicas behind the existing handle-based front door
+//! (`submit() → RequestHandle` / `abort()` / `step()`, same typed
+//! [`EngineError`]s, same per-token event semantics), which makes
+//! `serve --replicas N` a drop-in upgrade on the PR 5 serving loop.
+//!
+//! Dispatch is pluggable ([`DispatchPolicy`]): round-robin, least-loaded
+//! (by pending count + KV headroom probes), and **prefix-affinity** —
+//! route on the radix chain hash of the prompt's cacheable prefix
+//! ([`crate::prefixcache::prefix_home_hash`]) so multi-turn sessions land
+//! on the replica whose radix tree is warm, with least-loaded spillover
+//! under KV pressure or pathological imbalance.  The policy function is
+//! pure ([`policy::pick_replica`]) and mirrored bit-for-bit by the
+//! Python bench sim, so routing decisions are replay-stable and
+//! certifiable off-box (`repro router-identity`).
+//!
+//! Identity argument, in brief: the router never reorders, rewrites, or
+//! re-times anything *within* a replica — it only chooses which replica
+//! a request enters, then steps all replicas in fixed index order.  With
+//! one replica every policy degenerates to "replica 0", so a 1-replica
+//! router is the bare engine — byte-identical tokens, same Philox
+//! coordinates, same events.  With N replicas, per-request streams stay
+//! exact (each is a single-engine stream); what changes is placement,
+//! which is deterministic in (policy, submission order, probe state).
+//!
+//! Replicas are anything implementing [`EngineBackend`]: a plain
+//! [`Engine`] or a TP-sharded one (`EngineConfig::tp`) whose decode fans
+//! out through `tp::TpOrchestrator` — see `backend.rs`.
+
+pub mod backend;
+pub mod policy;
+pub mod sim;
+
+use std::collections::HashMap;
+
+use anyhow::{ensure, Result};
+
+use crate::coordinator::{Completion, Engine, EngineError, Request, RequestHandle};
+use crate::prefixcache::prefix_home_hash;
+
+pub use backend::EngineBackend;
+pub use policy::{pick_replica, DispatchPolicy, ReplicaProbe, SPILL_PENDING_MARGIN};
+pub use sim::{sim_router, sim_token, SimReplica, SimReplicaConfig};
+
+/// N serving replicas behind one handle-based front door.
+pub struct Router<B: EngineBackend = Engine> {
+    replicas: Vec<B>,
+    policy: DispatchPolicy,
+    /// Monotone successful-submission counter — the round-robin cursor
+    /// and the replay-stability anchor (advances only on accepted
+    /// requests, so a rejected submit does not shift later placements).
+    rr_next: u64,
+    /// Live request id → replica index.  Insert at submit, remove at
+    /// completion/abort/rejection; membership doubles as the
+    /// router-level duplicate-id check (an id live on replica 2 must be
+    /// refused even if replica 0 would accept it).
+    owner: HashMap<u64, usize>,
+}
+
+impl<B: EngineBackend> Router<B> {
+    /// Wrap `replicas` (>= 1) under `policy`.  All replicas must agree
+    /// on the KV block size — it is the prefix-affinity key width.
+    pub fn new(replicas: Vec<B>, policy: DispatchPolicy) -> Result<Self> {
+        ensure!(!replicas.is_empty(), "router needs >= 1 replica");
+        let bs = replicas[0].kv_block_size();
+        ensure!(
+            replicas.iter().all(|r| r.kv_block_size() == bs),
+            "replicas disagree on kv_block_size — the affinity key width"
+        );
+        Ok(Self { replicas, policy, rr_next: 0, owner: HashMap::new() })
+    }
+
+    pub fn num_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn policy(&self) -> DispatchPolicy {
+        self.policy
+    }
+
+    pub fn replicas(&self) -> &[B] {
+        &self.replicas
+    }
+
+    /// Mutable replica access (wall-clock stamping, per-replica metric
+    /// export).  Routing state (ownership map, cursor) is not exposed.
+    pub fn replicas_mut(&mut self) -> &mut [B] {
+        &mut self.replicas
+    }
+
+    /// Which replica owns live request `id` (None once finished).
+    pub fn owner_of(&self, id: u64) -> Option<usize> {
+        self.owner.get(&id).copied()
+    }
+
+    /// Sequences waiting/running/swapped across all replicas.
+    pub fn pending(&self) -> usize {
+        self.replicas.iter().map(|r| r.pending()).sum()
+    }
+
+    /// The logical step clock.  `step()` steps every replica exactly
+    /// once, so all replica clocks stay equal; replica 0's is canonical.
+    pub fn clock(&self) -> u64 {
+        self.replicas[0].clock()
+    }
+
+    /// Pool-balance diagnostic summed over replicas (0 at quiescence).
+    pub fn kv_unaccounted_blocks(&self) -> usize {
+        self.replicas.iter().map(|r| r.kv_unaccounted_blocks()).sum()
+    }
+
+    /// Prefix-cache attachment refs summed over replicas (0 at
+    /// quiescence).
+    pub fn prefix_attached_refs(&self) -> usize {
+        self.replicas.iter().map(|r| r.prefix_attached_refs()).sum()
+    }
+
+    /// Aggregate prefix-cache hit rate: cached prefill tokens over total
+    /// prefill tokens, summed across replicas (None before any
+    /// prefill).  The quantity the affinity-vs-least-loaded acceptance
+    /// bound is stated over.
+    pub fn prefix_hit_rate(&self) -> Option<f64> {
+        let (cached, total) = self.replicas.iter().fold((0u64, 0u64), |(c, t), r| {
+            let m = r.metrics();
+            (c + m.cached_prefill_tokens, t + m.prefill_tokens)
+        });
+        (total > 0).then(|| cached as f64 / total as f64)
+    }
+
+    /// Prometheus exposition over all replicas: one TYPE header per
+    /// family, samples tagged `replica="i"` (ISSUE satellite; DESIGN.md
+    /// §13).  At one replica the output is byte-identical to the bare
+    /// engine's [`crate::metrics::ServingMetrics::render_prometheus`].
+    pub fn render_prometheus(&self) -> String {
+        let ms: Vec<&crate::metrics::ServingMetrics> =
+            self.replicas.iter().map(|r| r.metrics()).collect();
+        crate::metrics::render_prometheus_replicas(&ms)
+    }
+
+    /// Route and submit one request.  The returned handle is the owning
+    /// replica's own — per-token events, terminal semantics, and typed
+    /// errors are exactly the single-engine contract.
+    pub fn submit(&mut self, req: Request) -> Result<RequestHandle, EngineError> {
+        if self.owner.contains_key(&req.id) {
+            return Err(EngineError::DuplicateRequestId { id: req.id });
+        }
+        let probes: Vec<ReplicaProbe> =
+            self.replicas.iter().map(|r| r.probe(&req.prompt)).collect();
+        let home = prefix_home_hash(&req.prompt, self.replicas[0].kv_block_size());
+        let idx = pick_replica(self.policy, self.rr_next, &probes, home);
+        let id = req.id;
+        let handle = self.replicas[idx].submit(req)?;
+        self.owner.insert(id, idx);
+        self.rr_next += 1;
+        Ok(handle)
+    }
+
+    /// Cancel a live request on whichever replica owns it.
+    pub fn abort(&mut self, request_id: u64) -> Result<Completion, EngineError> {
+        let Some(&idx) = self.owner.get(&request_id) else {
+            return Err(EngineError::UnknownRequest { id: request_id });
+        };
+        let c = self.replicas[idx].abort(request_id)?;
+        self.owner.remove(&request_id);
+        Ok(c)
+    }
+
+    /// One scheduler iteration on EVERY replica, in index order.
+    /// Returns all completions finished this step (replica order, then
+    /// each replica's own order — deterministic).
+    pub fn step(&mut self) -> Result<Vec<Completion>, EngineError> {
+        let mut done = Vec::new();
+        for r in &mut self.replicas {
+            done.extend(r.step()?);
+        }
+        for c in &done {
+            self.owner.remove(&c.id);
+        }
+        Ok(done)
+    }
+
+    /// Open-loop backstop: ask replicas in index order to reject their
+    /// unschedulable waiting head; first rejection wins.
+    pub fn reject_unschedulable(&mut self) -> Option<Completion> {
+        for r in &mut self.replicas {
+            if let Some(c) = r.reject_unschedulable() {
+                self.owner.remove(&c.id);
+                return Some(c);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::VecDeque;
+    use std::sync::{Arc, Mutex};
+
+    use super::*;
+    use crate::coordinator::stream::StreamState;
+    use crate::coordinator::{FinishReason, SamplingParams};
+    use crate::metrics::{RequestTiming, ServingMetrics};
+
+    /// Accounting-only replica: enough of the engine contract to
+    /// exercise the router's ownership, duplicate, and fan-in logic on a
+    /// CPU-only box (no artifacts).  `steps_left` drains one per step.
+    struct MockBackend {
+        bs: usize,
+        clock: u64,
+        queue: VecDeque<(u64, usize)>,
+        /// Prompt prefixes this replica pretends to have cached, as
+        /// (tokens, cached_token_count).
+        warm: Vec<(Vec<i32>, usize)>,
+        headroom: usize,
+        metrics: ServingMetrics,
+    }
+
+    impl MockBackend {
+        fn new(bs: usize) -> Self {
+            Self {
+                bs,
+                clock: 0,
+                queue: VecDeque::new(),
+                warm: Vec::new(),
+                headroom: 64,
+                metrics: ServingMetrics::default(),
+            }
+        }
+    }
+
+    fn complete(id: u64) -> Completion {
+        Completion {
+            id,
+            prompt_len: 1,
+            tokens: vec![7],
+            finish: FinishReason::MaxTokens,
+            timing: RequestTiming::default(),
+        }
+    }
+
+    impl EngineBackend for MockBackend {
+        fn submit(&mut self, req: Request) -> Result<RequestHandle, EngineError> {
+            // The router already refused router-level duplicates; mirror
+            // the engine-level check anyway.
+            if self.queue.iter().any(|&(id, _)| id == req.id) {
+                return Err(EngineError::DuplicateRequestId { id: req.id });
+            }
+            self.queue.push_back((req.id, req.params.max_new_tokens));
+            Ok(RequestHandle::new(
+                req.id,
+                Arc::new(Mutex::new(StreamState::default())),
+            ))
+        }
+
+        fn abort(&mut self, request_id: u64) -> Result<Completion, EngineError> {
+            match self.queue.iter().position(|&(id, _)| id == request_id) {
+                Some(i) => {
+                    self.queue.remove(i);
+                    Ok(Completion { finish: FinishReason::Aborted, ..complete(request_id) })
+                }
+                None => Err(EngineError::UnknownRequest { id: request_id }),
+            }
+        }
+
+        fn step(&mut self) -> Result<Vec<Completion>, EngineError> {
+            self.clock += 1;
+            for slot in self.queue.iter_mut() {
+                slot.1 = slot.1.saturating_sub(1);
+            }
+            let mut done = Vec::new();
+            let mut i = 0;
+            while i < self.queue.len() {
+                if self.queue[i].1 == 0 {
+                    let (id, _) = self.queue.remove(i).expect("index in range");
+                    done.push(complete(id));
+                } else {
+                    i += 1;
+                }
+            }
+            Ok(done)
+        }
+
+        fn reject_unschedulable(&mut self) -> Option<Completion> {
+            None
+        }
+
+        fn pending(&self) -> usize {
+            self.queue.len()
+        }
+
+        fn clock(&self) -> u64 {
+            self.clock
+        }
+
+        fn kv_block_size(&self) -> usize {
+            self.bs
+        }
+
+        fn probe(&self, prompt: &[i32]) -> ReplicaProbe {
+            let cached = self
+                .warm
+                .iter()
+                .filter(|(p, _)| prompt.starts_with(p))
+                .map(|&(_, n)| n)
+                .max()
+                .unwrap_or(0);
+            ReplicaProbe {
+                pending: self.queue.len(),
+                headroom: self.headroom,
+                blocks_needed: prompt.len().div_ceil(self.bs),
+                cached_tokens: cached,
+            }
+        }
+
+        fn metrics(&self) -> &ServingMetrics {
+            &self.metrics
+        }
+
+        fn kv_unaccounted_blocks(&self) -> usize {
+            0
+        }
+
+        fn prefix_attached_refs(&self) -> usize {
+            0
+        }
+    }
+
+    fn req(id: u64, prompt: Vec<i32>, steps: usize) -> Request {
+        Request::new(
+            id,
+            prompt,
+            SamplingParams { max_new_tokens: steps, ..Default::default() },
+        )
+    }
+
+    fn router(n: usize, policy: DispatchPolicy) -> Router<MockBackend> {
+        Router::new((0..n).map(|_| MockBackend::new(4)).collect(), policy).unwrap()
+    }
+
+    #[test]
+    fn construction_rejects_empty_and_mismatched_block_sizes() {
+        assert!(Router::<MockBackend>::new(Vec::new(), DispatchPolicy::RoundRobin).is_err());
+        let mixed = vec![MockBackend::new(4), MockBackend::new(8)];
+        assert!(Router::new(mixed, DispatchPolicy::RoundRobin).is_err());
+    }
+
+    #[test]
+    fn round_robin_spreads_submissions_and_owner_map_tracks_them() {
+        let mut r = router(3, DispatchPolicy::RoundRobin);
+        for id in 0..6u64 {
+            r.submit(req(id, vec![1, 2, 3, 4], 2)).unwrap();
+        }
+        for id in 0..6u64 {
+            assert_eq!(r.owner_of(id), Some((id % 3) as usize));
+        }
+        assert_eq!(r.pending(), 6);
+        assert_eq!(r.replicas()[0].pending(), 2);
+    }
+
+    #[test]
+    fn duplicate_ids_are_refused_across_replicas() {
+        let mut r = router(2, DispatchPolicy::RoundRobin);
+        r.submit(req(1, vec![1, 2, 3, 4], 2)).unwrap();
+        // Round-robin would place the duplicate on the OTHER replica,
+        // which would happily accept it — the router must refuse first.
+        let err = r.submit(req(1, vec![9, 9, 9, 9], 2)).unwrap_err();
+        assert!(matches!(err, EngineError::DuplicateRequestId { id: 1 }));
+        // The failed submit must not advance the round-robin cursor.
+        r.submit(req(2, vec![1, 2, 3, 4], 2)).unwrap();
+        assert_eq!(r.owner_of(2), Some(1));
+    }
+
+    #[test]
+    fn abort_routes_to_the_owning_replica() {
+        let mut r = router(2, DispatchPolicy::RoundRobin);
+        r.submit(req(1, vec![1, 2, 3, 4], 5)).unwrap();
+        r.submit(req(2, vec![1, 2, 3, 4], 5)).unwrap();
+        let c = r.abort(2).unwrap();
+        assert_eq!(c.finish, FinishReason::Aborted);
+        assert_eq!(r.owner_of(2), None);
+        assert_eq!(r.replicas()[1].pending(), 0);
+        assert_eq!(r.replicas()[0].pending(), 1);
+        assert!(matches!(r.abort(2), Err(EngineError::UnknownRequest { id: 2 })));
+    }
+
+    #[test]
+    fn step_concatenates_in_replica_order_and_frees_ids_for_reuse() {
+        let mut r = router(2, DispatchPolicy::RoundRobin);
+        r.submit(req(10, vec![1, 2, 3, 4], 1)).unwrap(); // replica 0
+        r.submit(req(11, vec![1, 2, 3, 4], 1)).unwrap(); // replica 1
+        let done = r.step().unwrap();
+        assert_eq!(done.iter().map(|c| c.id).collect::<Vec<_>>(), vec![10, 11]);
+        assert_eq!(r.pending(), 0);
+        assert_eq!(r.owner_of(10), None);
+        // Finished ids are reusable — exactly the engine's liveness rule.
+        r.submit(req(10, vec![1, 2, 3, 4], 1)).unwrap();
+    }
+
+    #[test]
+    fn prefix_affinity_keeps_a_session_on_its_warm_replica() {
+        let mut r = router(3, DispatchPolicy::PrefixAffinity);
+        r.replicas[1].warm.push((vec![5, 5, 5, 5], 4));
+        // All turns of the session (shared 4-token first block) land on
+        // the warm replica regardless of submission index.
+        for id in 0..4u64 {
+            r.submit(req(id, vec![5, 5, 5, 5, id as i32 + 1], 3)).unwrap();
+            assert_eq!(r.owner_of(id), Some(1));
+        }
+        // A KV-exhausted warm replica forfeits to least-loaded.
+        r.replicas[1].headroom = 0;
+        r.submit(req(9, vec![5, 5, 5, 5, 6], 3)).unwrap();
+        assert_ne!(r.owner_of(9), Some(1));
+    }
+
+    #[test]
+    fn clock_is_uniform_across_replicas() {
+        let mut r = router(3, DispatchPolicy::LeastLoaded);
+        r.submit(req(1, vec![1, 2, 3, 4], 2)).unwrap();
+        for _ in 0..4 {
+            r.step().unwrap();
+        }
+        assert_eq!(r.clock(), 4);
+        assert!(r.replicas().iter().all(|b| b.clock() == 4));
+    }
+
+    #[test]
+    fn prometheus_export_labels_replicas() {
+        let mut r = router(2, DispatchPolicy::RoundRobin);
+        r.replicas[0].metrics.requests_completed = 3;
+        r.replicas[1].metrics.requests_completed = 4;
+        let text = r.render_prometheus();
+        assert!(text.contains("flashsampling_requests_completed{replica=\"0\"} 3\n"));
+        assert!(text.contains("flashsampling_requests_completed{replica=\"1\"} 4\n"));
+        // One replica: unlabeled, byte-identical to the bare export.
+        let solo = router(1, DispatchPolicy::RoundRobin);
+        assert_eq!(
+            solo.render_prometheus(),
+            solo.replicas[0].metrics.render_prometheus()
+        );
+    }
+}

@@ -1,0 +1,270 @@
+//! Dispatch policies — the pure routing brain of the multi-replica
+//! router (DESIGN.md §13).
+//!
+//! `pick_replica` is a total, deterministic function of the replica
+//! probes and the request's prefix-affinity key: no clocks, no
+//! randomness, no interior state beyond the caller-held round-robin
+//! cursor.  That purity is the certification surface — the same function
+//! drives the real [`crate::router::Router`], the accounting-level
+//! [`crate::router::SimReplica`] harness, and the Python bench mirror
+//! (`python/tests/sim_router_bench.py`), so `repro router-identity` can
+//! assert replay stability and the bench numbers are reproducible
+//! bit-for-bit off-box.
+
+use anyhow::{bail, Result};
+
+/// How the router maps an incoming request onto one of N replicas.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DispatchPolicy {
+    /// Cycle through replicas in submission order.  Ignores all probes —
+    /// the baseline every other policy is benched against.
+    RoundRobin,
+    /// Send each request to the replica with the fewest pending
+    /// sequences, breaking ties toward more free+evictable KV headroom,
+    /// then lower index.  Balances load but scatters shared-prefix
+    /// sessions, so each replica re-prefills the same system prompt.
+    LeastLoaded,
+    /// Route on the radix chain hash of the request's cacheable prefix
+    /// so multi-turn sessions land where their KV is warm
+    /// (vLLM/SGLang-style cache-aware routing), spilling over to
+    /// least-loaded when the preferred replica is out of KV headroom or
+    /// pathologically behind.  The default: prefix caching defaults on,
+    /// and affinity is free when nothing is shared.
+    #[default]
+    PrefixAffinity,
+}
+
+impl std::str::FromStr for DispatchPolicy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s.trim() {
+            "round-robin" => Ok(DispatchPolicy::RoundRobin),
+            "least-loaded" => Ok(DispatchPolicy::LeastLoaded),
+            "prefix-affinity" => Ok(DispatchPolicy::PrefixAffinity),
+            other => bail!(
+                "unknown dispatch policy '{other}' (expected \
+                 round-robin|least-loaded|prefix-affinity)"
+            ),
+        }
+    }
+}
+
+impl std::fmt::Display for DispatchPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            DispatchPolicy::RoundRobin => "round-robin",
+            DispatchPolicy::LeastLoaded => "least-loaded",
+            DispatchPolicy::PrefixAffinity => "prefix-affinity",
+        })
+    }
+}
+
+/// One replica's answer to "how would this request land on you?" —
+/// everything `pick_replica` is allowed to see.  Built from the engine's
+/// existing admission probes (`prefill_headroom`, `prefill_blocks_needed`,
+/// `cached_prefix_tokens`), all pure with respect to engine state.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ReplicaProbe {
+    /// Sequences queued, running, or swapped on this replica.
+    pub pending: usize,
+    /// Free + evictable KV blocks available to admit this prompt.
+    pub headroom: usize,
+    /// New KV blocks this prompt needs beyond its cached prefix.
+    pub blocks_needed: usize,
+    /// Tokens of this prompt already resident in the replica's radix
+    /// cache (0 on a cold replica).
+    pub cached_tokens: usize,
+}
+
+/// Pending-count slack before prefix affinity abandons a warm replica:
+/// the home replica may run up to this many sequences deeper than the
+/// emptiest one before a request spills to least-loaded.  Small enough
+/// that no replica starves (the no-starvation property test), large
+/// enough that a session isn't bounced off its warm cache by ordinary
+/// queue jitter.
+pub const SPILL_PENDING_MARGIN: usize = 4;
+
+/// Index of the least-loaded replica: fewest pending, ties broken by
+/// more headroom, then lower index.
+fn least_loaded(probes: &[ReplicaProbe]) -> usize {
+    let mut best = 0;
+    for (i, p) in probes.iter().enumerate().skip(1) {
+        let b = &probes[best];
+        if (p.pending, std::cmp::Reverse(p.headroom)) < (b.pending, std::cmp::Reverse(b.headroom))
+        {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Choose the replica for one request.  Deterministic in its inputs:
+/// `rr_next` is the caller's monotone submission counter (consumed by
+/// `RoundRobin` only), `probes` has one entry per replica (must be
+/// non-empty), and `home_hash` is the request's
+/// [`crate::prefixcache::prefix_home_hash`] — `None` when the prompt is
+/// shorter than one KV block and therefore has no cacheable prefix.
+pub fn pick_replica(
+    policy: DispatchPolicy,
+    rr_next: u64,
+    probes: &[ReplicaProbe],
+    home_hash: Option<u64>,
+) -> usize {
+    assert!(!probes.is_empty(), "router needs >= 1 replica");
+    let n = probes.len();
+    match policy {
+        DispatchPolicy::RoundRobin => (rr_next % n as u64) as usize,
+        DispatchPolicy::LeastLoaded => least_loaded(probes),
+        DispatchPolicy::PrefixAffinity => {
+            // Warm path: the replica holding the longest cached prefix.
+            // Ties (several replicas cached the same shared prefix) break
+            // toward the emptiest, then lowest index.
+            let warm = (0..n)
+                .filter(|&i| probes[i].cached_tokens > 0)
+                .min_by_key(|&i| {
+                    (std::cmp::Reverse(probes[i].cached_tokens), probes[i].pending, i)
+                });
+            // Cold path: a deterministic home derived from the prefix
+            // hash, so every future request sharing this first block
+            // lands on the same replica and builds the cache there.
+            let chosen = match (warm, home_hash) {
+                (Some(i), _) => i,
+                (None, Some(h)) => (h % n as u64) as usize,
+                // No cacheable prefix at all: affinity has nothing to
+                // say; place by load.
+                (None, None) => return least_loaded(probes),
+            };
+            // Spillover: a warm or home replica that cannot admit the
+            // prompt (KV exhausted) or has fallen pathologically behind
+            // the emptiest replica forfeits the request to least-loaded
+            // — cache locality is a tiebreak, not a starvation license.
+            let min_pending = probes.iter().map(|p| p.pending).min().unwrap();
+            let c = &probes[chosen];
+            if c.headroom < c.blocks_needed
+                || c.pending > min_pending + SPILL_PENDING_MARGIN
+            {
+                least_loaded(probes)
+            } else {
+                chosen
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn probe(pending: usize, headroom: usize, needed: usize, cached: usize) -> ReplicaProbe {
+        ReplicaProbe { pending, headroom, blocks_needed: needed, cached_tokens: cached }
+    }
+
+    #[test]
+    fn policy_parses_and_round_trips() {
+        assert_eq!(DispatchPolicy::default(), DispatchPolicy::PrefixAffinity);
+        for p in [
+            DispatchPolicy::RoundRobin,
+            DispatchPolicy::LeastLoaded,
+            DispatchPolicy::PrefixAffinity,
+        ] {
+            let back: DispatchPolicy = p.to_string().parse().unwrap();
+            assert_eq!(back, p);
+        }
+        assert!(" least-loaded ".parse::<DispatchPolicy>().is_ok()); // trimmed
+        assert!("random".parse::<DispatchPolicy>().is_err());
+    }
+
+    #[test]
+    fn round_robin_cycles_regardless_of_load() {
+        let probes = vec![probe(9, 0, 1, 0), probe(0, 64, 1, 0), probe(0, 64, 1, 0)];
+        let picks: Vec<usize> = (0..6)
+            .map(|i| pick_replica(DispatchPolicy::RoundRobin, i, &probes, None))
+            .collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_loaded_prefers_fewest_pending_then_headroom_then_index() {
+        let probes = vec![probe(3, 64, 1, 0), probe(1, 2, 1, 0), probe(1, 8, 1, 0)];
+        assert_eq!(pick_replica(DispatchPolicy::LeastLoaded, 0, &probes, None), 2);
+        // Full tie falls to the lowest index.
+        let tied = vec![probe(1, 8, 1, 0), probe(1, 8, 1, 0)];
+        assert_eq!(pick_replica(DispatchPolicy::LeastLoaded, 7, &tied, None), 0);
+    }
+
+    #[test]
+    fn affinity_follows_the_warm_cache() {
+        // Replica 2 holds the longest cached prefix; load is comparable.
+        let probes =
+            vec![probe(2, 64, 4, 0), probe(1, 64, 4, 16), probe(2, 64, 2, 48)];
+        assert_eq!(
+            pick_replica(DispatchPolicy::PrefixAffinity, 0, &probes, Some(99)),
+            2
+        );
+        // Equal cached depth: the emptier warm replica wins.
+        let tied =
+            vec![probe(5, 64, 4, 32), probe(1, 64, 4, 32), probe(0, 64, 4, 0)];
+        assert_eq!(
+            pick_replica(DispatchPolicy::PrefixAffinity, 0, &tied, Some(99)),
+            1
+        );
+    }
+
+    #[test]
+    fn affinity_cold_start_routes_by_home_hash() {
+        let probes = vec![probe(0, 64, 4, 0); 3];
+        for h in [0u64, 1, 2, 3, 100] {
+            assert_eq!(
+                pick_replica(DispatchPolicy::PrefixAffinity, 0, &probes, Some(h)),
+                (h % 3) as usize
+            );
+        }
+        // No cacheable prefix at all (sub-block prompt): place by load.
+        let uneven = vec![probe(4, 64, 1, 0), probe(0, 64, 1, 0)];
+        assert_eq!(pick_replica(DispatchPolicy::PrefixAffinity, 0, &uneven, None), 1);
+    }
+
+    #[test]
+    fn affinity_spills_over_under_kv_pressure_and_imbalance() {
+        // Warm replica 0 cannot admit the prompt (headroom < needed).
+        let pressured =
+            vec![probe(1, 1, 4, 32), probe(2, 64, 4, 0), probe(3, 64, 4, 0)];
+        assert_eq!(
+            pick_replica(DispatchPolicy::PrefixAffinity, 0, &pressured, Some(0)),
+            1
+        );
+        // Warm replica 0 is more than SPILL_PENDING_MARGIN deeper than
+        // the emptiest.
+        let behind = vec![
+            probe(SPILL_PENDING_MARGIN + 1, 64, 4, 32),
+            probe(0, 64, 4, 0),
+        ];
+        assert_eq!(
+            pick_replica(DispatchPolicy::PrefixAffinity, 0, &behind, Some(0)),
+            1
+        );
+        // Exactly at the margin: affinity holds.
+        let at_margin =
+            vec![probe(SPILL_PENDING_MARGIN, 64, 4, 32), probe(0, 64, 4, 0)];
+        assert_eq!(
+            pick_replica(DispatchPolicy::PrefixAffinity, 0, &at_margin, Some(0)),
+            0
+        );
+    }
+
+    #[test]
+    fn single_replica_is_always_picked() {
+        let one = vec![probe(7, 0, 9, 0)];
+        for policy in [
+            DispatchPolicy::RoundRobin,
+            DispatchPolicy::LeastLoaded,
+            DispatchPolicy::PrefixAffinity,
+        ] {
+            for rr in 0..3 {
+                assert_eq!(pick_replica(policy, rr, &one, Some(42)), 0);
+                assert_eq!(pick_replica(policy, rr, &one, None), 0);
+            }
+        }
+    }
+}

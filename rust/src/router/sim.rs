@@ -1,0 +1,504 @@
+//! [`SimReplica`] — an accounting-level [`EngineBackend`] for CPU-only
+//! certification of the router (DESIGN.md §13).
+//!
+//! The authoring/CI boxes carry no AOT artifacts, so the router's
+//! system-level claims (replay-stable dispatch, zero KV/prefix-ref leaks
+//! under randomized aborts, affinity beating least-loaded on hit rate,
+//! drained event queues at quiescence) are certified against this
+//! replica: **everything above model execution is real** — the real
+//! [`crate::kvcache::KvCacheManager`] with the real radix prefix cache,
+//! real [`RequestHandle`] event queues, real typed [`EngineError`]s —
+//! and only the transformer step is replaced by a deterministic token
+//! formula.  `Router<SimReplica>` therefore exercises the identical
+//! router code paths that `Router<Engine>` runs on a toolbox, with the
+//! identical dispatch decisions (the policy function is pure and reads
+//! only accounting state).
+//!
+//! Scheduling is a FIFO mirror of the engine's continuous batcher, the
+//! same shape `python/tests/sim_serving_bench.py` mirrors: admit up to
+//! `prefill_b` admissible waiting heads when concurrency allows, else
+//! decode the first `decode_max_b` running sequences one token.  Cost
+//! model ("weighted time", the bench's latency unit): a prefill batch
+//! costs its longest *uncached suffix* in tokens — exactly the quantity
+//! the `prefill_cached` artifacts make the real cost proportional to —
+//! and a decode step costs 1.  The Python mirror
+//! (`python/tests/sim_router_bench.py`) reproduces this replica's
+//! accounting bit-for-bit; keep both in lockstep when editing.
+//!
+//! Probe note: `probe().headroom` answers with the allocator's free
+//! blocks.  The sim regime sizes pools so prefix-cache eviction never
+//! engages (the mirror does not model eviction), making free blocks the
+//! exact headroom; the real engine answers with free + evictable.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::coordinator::stream::{RequestHandle, RequestOutput, SharedStream, StreamState};
+use crate::coordinator::{Completion, EngineError, FinishReason, Request};
+use crate::kvcache::{KvCacheConfig, KvCacheManager};
+use crate::metrics::ServingMetrics;
+use crate::prefixcache::BlockKv;
+
+use super::backend::EngineBackend;
+use super::policy::{DispatchPolicy, ReplicaProbe};
+use super::Router;
+
+/// Shape of one simulated replica.  Defaults mirror the serving bench
+/// sim: engine-default concurrency over a pool big enough that eviction
+/// never engages (see module docs).
+#[derive(Clone, Copy, Debug)]
+pub struct SimReplicaConfig {
+    pub block_size: usize,
+    pub num_blocks: usize,
+    pub prefix_caching: bool,
+    pub max_concurrency: usize,
+    /// Max sequences per prefill batch (the engine's `prefill_b`).
+    pub prefill_b: usize,
+    /// Max sequences per decode step (the engine's largest decode bucket).
+    pub decode_max_b: usize,
+}
+
+impl Default for SimReplicaConfig {
+    fn default() -> Self {
+        Self {
+            block_size: 16,
+            num_blocks: 4096,
+            prefix_caching: true,
+            max_concurrency: 8,
+            prefill_b: 4,
+            decode_max_b: 8,
+        }
+    }
+}
+
+/// The deterministic stand-in for model execution: token `index` of
+/// request `id` (0-based over generated tokens).  Values are irrelevant
+/// to everything the sim certifies — only determinism matters (replay
+/// identity compares full token streams) — but they flow through the
+/// real KV/radix accounting like real tokens.
+pub fn sim_token(id: u64, index: usize) -> i32 {
+    (((id as i64) * 31 + (index as i64 + 1) * 7) % 2039) as i32
+}
+
+struct SimSeq {
+    id: u64,
+    prompt: Vec<i32>,
+    max_new: usize,
+    generated: Vec<i32>,
+    /// Owner-replica weighted time at submission (TTFT anchor).
+    submit_w: u64,
+}
+
+/// One simulated serving replica.
+pub struct SimReplica {
+    cfg: SimReplicaConfig,
+    kv: KvCacheManager,
+    waiting: VecDeque<SimSeq>,
+    running: Vec<SimSeq>,
+    streams: HashMap<u64, SharedStream>,
+    clock: u64,
+    /// Weighted busy time (token units — the bench's latency clock).
+    wtime: u64,
+    pub metrics: ServingMetrics,
+}
+
+impl SimReplica {
+    pub fn new(cfg: SimReplicaConfig) -> Self {
+        let kv = KvCacheManager::new(KvCacheConfig {
+            block_size: cfg.block_size,
+            num_blocks: cfg.num_blocks,
+            prefix_caching: cfg.prefix_caching,
+        });
+        Self {
+            cfg,
+            kv,
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+            streams: HashMap::new(),
+            clock: 0,
+            wtime: 0,
+            metrics: ServingMetrics::default(),
+        }
+    }
+
+    /// Weighted busy time so far (the bench's makespan component).
+    pub fn wtime(&self) -> u64 {
+        self.wtime
+    }
+
+    fn emit_token(&mut self, seq_idx_id: u64, index: usize, token: i32) {
+        if let Some(st) = self.streams.get(&seq_idx_id).filter(|st| Arc::strong_count(st) > 1)
+        {
+            st.lock().expect("stream mutex").queue.push_back(RequestOutput {
+                request_id: seq_idx_id,
+                token: Some(token),
+                index,
+                text_len: index + 1,
+                step: self.clock,
+                ttft_steps: (index == 0).then_some(self.clock),
+                inter_token_steps: (index > 0).then_some(1),
+                finish: None,
+            });
+        }
+    }
+
+    fn complete_seq(&mut self, s: SimSeq, reason: FinishReason) -> Completion {
+        let ttft = (!s.generated.is_empty())
+            .then(|| Duration::from_micros(self.wtime.saturating_sub(s.submit_w)));
+        let c = Completion {
+            id: s.id,
+            prompt_len: s.prompt.len(),
+            tokens: s.generated,
+            finish: reason,
+            timing: crate::metrics::RequestTiming {
+                ttft,
+                token_latencies: Vec::new(),
+            },
+        };
+        self.metrics.requests_completed += 1;
+        if let Some(t) = ttft {
+            self.metrics.ttft.push(t);
+        }
+        if let Some(st) = self.streams.remove(&c.id) {
+            if Arc::strong_count(&st) > 1 {
+                let mut g = st.lock().expect("stream mutex");
+                g.queue.push_back(RequestOutput::terminal(
+                    c.id,
+                    c.tokens.len(),
+                    self.clock,
+                    reason,
+                ));
+                g.finished = Some(reason);
+                g.completion = Some(c.clone());
+            }
+        }
+        c
+    }
+
+    /// Run one prefill batch: FIFO admission of up to `prefill_b`
+    /// admissible heads.  Mirrors the engine: register (attaching any
+    /// cached prefix), publish full blocks, sample the first token.
+    fn do_prefill(&mut self) -> Result<Vec<Completion>, EngineError> {
+        let mut batch = Vec::new();
+        while batch.len() < self.cfg.prefill_b
+            && self.running.len() + batch.len() < self.cfg.max_concurrency
+        {
+            let Some(head) = self.waiting.front() else { break };
+            if !self.kv.can_allocate_prefill(&head.prompt, 0) {
+                break;
+            }
+            batch.push(self.waiting.pop_front().expect("front exists"));
+        }
+        debug_assert!(!batch.is_empty(), "caller checked admissibility");
+        let mut cost = 1u64;
+        let mut done = Vec::new();
+        let mut admitted = Vec::new();
+        for mut s in batch {
+            let attach = self.kv.register_with_prefix(s.id, &s.prompt)?;
+            self.metrics.prefill_tokens += s.prompt.len() as u64;
+            self.metrics.cached_prefill_tokens += attach.cached_tokens as u64;
+            cost = cost.max((s.prompt.len() - attach.cached_tokens) as u64);
+            self.kv.insert_prefix(s.id, &s.prompt, |_| BlockKv::default())?;
+            // Prefill samples the sequence's first token (engine
+            // semantics: TTFT lands at prefill completion).
+            s.generated.push(sim_token(s.id, 0));
+            admitted.push(s);
+        }
+        self.wtime += cost;
+        for s in admitted {
+            self.emit_token(s.id, 0, s.generated[0]);
+            if s.max_new == 1 {
+                self.kv.release(s.id)?;
+                done.push(self.complete_seq(s, FinishReason::MaxTokens));
+            } else {
+                self.running.push(s);
+            }
+        }
+        Ok(done)
+    }
+
+    /// Decode one token for the first `decode_max_b` running sequences.
+    fn do_decode(&mut self) -> Result<Vec<Completion>, EngineError> {
+        let b = self.running.len().min(self.cfg.decode_max_b);
+        self.wtime += 1;
+        let mut done = Vec::new();
+        let mut emitted = Vec::new();
+        for s in self.running.iter_mut().take(b) {
+            if !self.kv.append_token(s.id)? {
+                // Pool exhausted mid-decode: the sim regime sizes pools
+                // to make this unreachable (no preemption mirror).
+                return Err(EngineError::Internal(anyhow::anyhow!(
+                    "SimReplica KV pool exhausted — size num_blocks for the workload"
+                )));
+            }
+            let idx = s.generated.len();
+            let tok = sim_token(s.id, idx);
+            s.generated.push(tok);
+            emitted.push((s.id, idx, tok));
+        }
+        for (id, idx, tok) in emitted {
+            self.emit_token(id, idx, tok);
+        }
+        let mut i = 0;
+        while i < self.running.len() {
+            if self.running[i].generated.len() >= self.running[i].max_new {
+                let s = self.running.remove(i);
+                self.kv.release(s.id)?;
+                done.push(self.complete_seq(s, FinishReason::MaxTokens));
+            } else {
+                i += 1;
+            }
+        }
+        Ok(done)
+    }
+}
+
+impl EngineBackend for SimReplica {
+    fn submit(&mut self, req: Request) -> Result<RequestHandle, EngineError> {
+        if self.streams.contains_key(&req.id) {
+            return Err(EngineError::DuplicateRequestId { id: req.id });
+        }
+        if req.prompt.is_empty() {
+            return Err(EngineError::AdmissionRejected {
+                id: req.id,
+                reason: "empty prompt".into(),
+            });
+        }
+        let id = req.id;
+        let state = Arc::new(Mutex::new(StreamState::default()));
+        self.streams.insert(id, state.clone());
+        self.waiting.push_back(SimSeq {
+            id,
+            prompt: req.prompt,
+            max_new: req.params.max_new_tokens.max(1),
+            generated: Vec::new(),
+            submit_w: self.wtime,
+        });
+        Ok(RequestHandle::new(id, state))
+    }
+
+    fn abort(&mut self, request_id: u64) -> Result<Completion, EngineError> {
+        if let Some(idx) = self.waiting.iter().position(|s| s.id == request_id) {
+            let s = self.waiting.remove(idx).expect("position in range");
+            // Waiting sim sequences are unregistered (registration
+            // happens at prefill admission) — nothing to release.
+            return Ok(self.complete_seq(s, FinishReason::Aborted));
+        }
+        if let Some(idx) = self.running.iter().position(|s| s.id == request_id) {
+            let s = self.running.remove(idx);
+            self.kv.release(s.id)?;
+            return Ok(self.complete_seq(s, FinishReason::Aborted));
+        }
+        Err(EngineError::UnknownRequest { id: request_id })
+    }
+
+    fn step(&mut self) -> Result<Vec<Completion>, EngineError> {
+        self.clock += 1;
+        let can_prefill = self.running.len() < self.cfg.max_concurrency
+            && self
+                .waiting
+                .front()
+                .is_some_and(|s| self.kv.can_allocate_prefill(&s.prompt, 0));
+        if can_prefill {
+            self.do_prefill()
+        } else if !self.running.is_empty() {
+            self.do_decode()
+        } else {
+            Ok(Vec::new())
+        }
+    }
+
+    fn reject_unschedulable(&mut self) -> Option<Completion> {
+        if !self.running.is_empty() {
+            return None;
+        }
+        let head_stuck = self
+            .waiting
+            .front()
+            .is_some_and(|s| !self.kv.can_allocate_prefill(&s.prompt, 0));
+        if head_stuck {
+            let s = self.waiting.pop_front().expect("front exists");
+            return Some(self.complete_seq(s, FinishReason::Rejected));
+        }
+        None
+    }
+
+    fn pending(&self) -> usize {
+        self.waiting.len() + self.running.len()
+    }
+
+    fn clock(&self) -> u64 {
+        self.clock
+    }
+
+    fn kv_block_size(&self) -> usize {
+        self.cfg.block_size
+    }
+
+    fn probe(&self, prompt: &[i32]) -> ReplicaProbe {
+        ReplicaProbe {
+            pending: self.pending(),
+            headroom: self.kv.free_blocks(),
+            blocks_needed: self.kv.prefill_blocks_needed(prompt, 0),
+            cached_tokens: self.kv.cached_prefix_tokens(prompt),
+        }
+    }
+
+    fn metrics(&self) -> &ServingMetrics {
+        &self.metrics
+    }
+
+    fn kv_unaccounted_blocks(&self) -> usize {
+        self.kv.unaccounted_blocks()
+    }
+
+    fn prefix_attached_refs(&self) -> usize {
+        self.kv.prefix_attached_refs()
+    }
+}
+
+/// N simulated replicas under one router — the CPU certification and
+/// bench vehicle.
+pub fn sim_router(
+    n: usize,
+    policy: DispatchPolicy,
+    cfg: SimReplicaConfig,
+) -> Router<SimReplica> {
+    Router::new((0..n).map(|_| SimReplica::new(cfg)).collect(), policy)
+        .expect("n >= 1 and uniform block size by construction")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::SamplingParams;
+
+    fn req(id: u64, prompt: Vec<i32>, max_new: usize) -> Request {
+        Request::new(
+            id,
+            prompt,
+            SamplingParams { max_new_tokens: max_new, ..Default::default() },
+        )
+    }
+
+    fn drain_all(r: &mut Router<SimReplica>) -> Vec<Completion> {
+        let mut done = Vec::new();
+        let mut idle = 0;
+        while r.pending() > 0 {
+            let step = r.step().expect("sim step");
+            if step.is_empty() {
+                idle += 1;
+                if idle > 8 {
+                    if let Some(c) = r.reject_unschedulable() {
+                        done.push(c);
+                        idle = 0;
+                        continue;
+                    }
+                }
+                assert!(idle < 64, "sim livelock");
+            } else {
+                idle = 0;
+            }
+            done.extend(step);
+        }
+        done
+    }
+
+    #[test]
+    fn sim_replica_serves_and_balances_kv() {
+        let mut r = sim_router(2, DispatchPolicy::RoundRobin, SimReplicaConfig::default());
+        let mut handles = Vec::new();
+        for id in 0..6u64 {
+            let prompt: Vec<i32> = (0..40).map(|j| (id as i32 * 3 + j) % 97).collect();
+            handles.push(r.submit(req(id, prompt, 5)).unwrap());
+        }
+        let done = drain_all(&mut r);
+        assert_eq!(done.len(), 6);
+        for c in &done {
+            assert_eq!(c.tokens.len(), 5);
+            assert_eq!(c.finish, FinishReason::MaxTokens);
+            // Token streams are the deterministic sim formula.
+            for (i, &t) in c.tokens.iter().enumerate() {
+                assert_eq!(t, sim_token(c.id, i));
+            }
+        }
+        // Zero-leak quiescence across replicas.
+        assert_eq!(r.kv_unaccounted_blocks(), 0);
+        assert_eq!(r.prefix_attached_refs(), 0);
+        // Every handle drains fully and ends terminal.
+        for h in &handles {
+            let events = h.drain();
+            assert!(!events.is_empty());
+            assert!(events.last().unwrap().finish.is_some());
+            assert!(h.is_finished());
+        }
+    }
+
+    #[test]
+    fn shared_prefix_sessions_raise_hit_rate_under_affinity() {
+        let sys: Vec<i32> = (0..32).map(|j| j * 13 % 211).collect();
+        let mk = |turn: usize, session: i32| -> Vec<i32> {
+            let mut p = sys.clone();
+            for t in 0..=turn {
+                p.extend((0..16).map(|j| session * 59 + t as i32 * 31 + j));
+            }
+            p
+        };
+        let run = |policy: DispatchPolicy| -> f64 {
+            let mut r = sim_router(2, policy, SimReplicaConfig::default());
+            for turn in 0..3u64 {
+                // Rotated arrival order: with a fixed order and drained
+                // waves, least-loaded's deterministic tiebreaks pin each
+                // session to one replica (accidental perfect affinity)
+                // and the policies tie.
+                for k in 0..6u64 {
+                    let session = (turn + k) % 6;
+                    let id = turn * 6 + session;
+                    r.submit(req(id, mk(turn as usize, session as i32), 4)).unwrap();
+                }
+                let _ = drain_all(&mut r);
+            }
+            r.prefix_hit_rate().expect("prefills ran")
+        };
+        let affinity = run(DispatchPolicy::PrefixAffinity);
+        let least = run(DispatchPolicy::LeastLoaded);
+        // Affinity routes later turns onto the replica holding their
+        // session prefix; least-loaded scatters them.
+        assert!(
+            affinity > least,
+            "affinity {affinity:.3} should beat least-loaded {least:.3}"
+        );
+    }
+
+    #[test]
+    fn abort_releases_everything_mid_flight() {
+        let mut r = sim_router(2, DispatchPolicy::PrefixAffinity, SimReplicaConfig::default());
+        for id in 0..4u64 {
+            let prompt: Vec<i32> = (0..48).map(|j| (id as i32 + j) % 89).collect();
+            r.submit(req(id, prompt, 32)).unwrap();
+        }
+        r.step().unwrap(); // prefill somewhere
+        r.step().unwrap();
+        r.abort(0).unwrap();
+        r.abort(3).unwrap();
+        let done = drain_all(&mut r);
+        assert_eq!(done.len(), 2);
+        assert_eq!(r.kv_unaccounted_blocks(), 0);
+        assert_eq!(r.prefix_attached_refs(), 0);
+    }
+
+    #[test]
+    fn reject_unschedulable_unsticks_an_oversized_head() {
+        let cfg = SimReplicaConfig { num_blocks: 4, ..Default::default() };
+        let mut r = sim_router(1, DispatchPolicy::LeastLoaded, cfg);
+        // 5 blocks worth of prompt can never fit a 4-block pool.
+        let big: Vec<i32> = (0..(16 * 5)).map(|j| j % 71).collect();
+        r.submit(req(1, big, 4)).unwrap();
+        assert!(r.step().unwrap().is_empty());
+        let c = r.reject_unschedulable().expect("head is unschedulable");
+        assert_eq!(c.finish, FinishReason::Rejected);
+        assert_eq!(r.pending(), 0);
+        assert_eq!(r.kv_unaccounted_blocks(), 0);
+    }
+}

@@ -18,6 +18,11 @@ pub struct RequestSpec {
     /// Scheduling priority (uniform `Normal` unless
     /// [`WorkloadGen::priority_choices`] is set).
     pub priority: Priority,
+    /// Stable conversation identity: every turn of one multi-turn stream
+    /// carries the same id (the session-affinity tag the router's
+    /// prefix-affinity dispatch and bench key on).  `Some(user)` in
+    /// shared-prefix mode, `None` for i.i.d. traffic.
+    pub session_id: Option<u64>,
 }
 
 /// Length distribution of prompts/outputs.
@@ -55,7 +60,9 @@ impl LengthDist {
 /// consecutive turns of one user share the *entire* previous prompt as a
 /// prefix, and users of the same system prompt share at least
 /// `prefix_len` tokens — both reusable block-for-block by the prefix
-/// cache.
+/// cache.  Every spec is tagged `session_id = Some(user)` — the stable
+/// per-conversation identity the router's prefix-affinity dispatch (and
+/// `benches/router.rs`) group turns by.
 #[derive(Clone, Debug)]
 pub struct SharedPrefix {
     /// Distinct system prompts (deterministic token content per index).
@@ -155,6 +162,13 @@ impl WorkloadGen {
         let gap = -(self.u(10, i, 0) as f64).ln() / self.rate;
         *t += gap;
         let olen = self.output_len.draw(self.u(12, i, 0)).max(1);
+        // Session-affinity tagging is free of Philox draws: the session id
+        // IS the shared-prefix user index, so turning it on (or reading it)
+        // cannot perturb any other stream.
+        let session_id = self
+            .prefix_mode
+            .as_ref()
+            .map(|sp| (i as usize % sp.users.max(1)) as u64);
         let prompt: Vec<i32> = match &self.prefix_mode {
             Some(sp) => self.shared_prefix_prompt(sp, i),
             None => {
@@ -190,6 +204,7 @@ impl WorkloadGen {
             max_new_tokens: olen,
             temperature,
             priority,
+            session_id,
         }
     }
 
@@ -462,6 +477,38 @@ mod tests {
         for (a, b) in reqs.iter().zip(&reqs2) {
             assert_eq!(a.prompt, b.prompt);
             assert_eq!(a.arrival_s, b.arrival_s);
+        }
+    }
+
+    #[test]
+    fn session_ids_are_stable_across_turns_and_absent_by_default() {
+        // Default traffic carries no session identity.
+        assert!(WorkloadGen::new(9, 5.0, 512)
+            .generate(12)
+            .iter()
+            .all(|r| r.session_id.is_none()));
+        let mut g = WorkloadGen::new(9, 5.0, 512);
+        g.prefix_mode = Some(shared_mode()); // 4 users
+        let reqs = g.generate(24);
+        for (i, r) in reqs.iter().enumerate() {
+            // The session id IS the user index: stable across every turn
+            // of one conversation.
+            assert_eq!(r.session_id, Some((i % 4) as u64), "request {i}");
+        }
+        // Same session => every later turn extends the earlier prompt;
+        // same system prompt across sessions 0 and 3 (both map to system
+        // prompt 0) but distinct session ids.
+        assert_eq!(reqs[0].prompt[..32], reqs[3].prompt[..32]);
+        assert_ne!(reqs[0].session_id, reqs[3].session_id);
+        // Tagging draws nothing from Philox: prompts and arrivals are
+        // bit-identical to the pre-tagging shared-prefix shape (the
+        // determinism test above already pins them run-to-run).
+        let mut g2 = WorkloadGen::new(9, 5.0, 512);
+        g2.prefix_mode = Some(shared_mode());
+        for (a, b) in reqs.iter().zip(&g2.generate(24)) {
+            assert_eq!(a.prompt, b.prompt);
+            assert_eq!(a.arrival_s, b.arrival_s);
+            assert_eq!(a.session_id, b.session_id);
         }
     }
 

@@ -146,6 +146,91 @@ fn mixed_tau_fanout_matches_allgather_pathwise() {
 }
 
 #[test]
+fn mixed_tau_fanout_matches_fused_kernel() {
+    // tau: [B] end-to-end: the single-device fused kernel and the TP
+    // fan-out merge consume the same per-row temperatures and the same
+    // Philox (row, cstep) coordinates — identical samples at every TP
+    // degree.  (The uniform-tau version of this is
+    // `fanout_matches_single_device_kernel`.)
+    let Some(dir) = artifacts_dir() else { return };
+    let w = randn(V * D, 16, 0.05);
+    let h = randn(B * D, 15, 0.5);
+    let taus = [0.5f32, 1.0, 2.0, 4.0];
+    let rt = Runtime::new(&dir).unwrap();
+    let single = rt
+        .run(
+            "flash_sample_b4_d256_v2048",
+            &[
+                Tensor::F32(h.clone(), vec![B, D]),
+                Tensor::F32(w.clone(), vec![V, D]),
+                Tensor::seed(Key::from_seed(SEED)),
+                Tensor::scalar_u32(11),
+                Tensor::F32(taus.to_vec(), vec![B]),
+            ],
+        )
+        .unwrap();
+    let expect = single[0].as_i32().unwrap().to_vec();
+    for n in [2usize, 4] {
+        let mut orch = orchestrator(n, &w).unwrap();
+        let out = orch.step(&h, 11, &taus, Strategy::P2pFanout).unwrap();
+        assert_eq!(out.samples, expect, "TP{n} mixed-tau fan-out != fused");
+        orch.shutdown().unwrap();
+    }
+}
+
+#[test]
+fn mixed_tau_allgather_multinomial_is_valid_deterministic_and_rowwise() {
+    // The third strategy with tau: [B]: valid samples, same-step
+    // determinism, and per-row stream independence — perturbing one
+    // row's temperature leaves every other row's draw untouched.
+    let w = randn(V * D, 18, 0.05);
+    let h = randn(B * D, 17, 0.5);
+    let taus = [0.5f32, 1.0, 2.0, 4.0];
+    let Some(mut orch) = orchestrator(2, &w) else { return };
+    let a = orch.step(&h, 3, &taus, Strategy::AllGatherMultinomial).unwrap();
+    assert_eq!(a.samples.len(), B);
+    assert!(a.samples.iter().all(|&s| (0..V as i32).contains(&s)));
+    let b = orch.step(&h, 3, &taus, Strategy::AllGatherMultinomial).unwrap();
+    assert_eq!(a.samples, b.samples, "same step + taus must replay");
+    // Row 2 gets a different temperature; rows 0, 1, 3 must not move.
+    let perturbed = [0.5f32, 1.0, 7.5, 4.0];
+    let c = orch
+        .step(&h, 3, &perturbed, Strategy::AllGatherMultinomial)
+        .unwrap();
+    for row in [0usize, 1, 3] {
+        assert_eq!(a.samples[row], c.samples[row], "row {row} perturbed");
+    }
+    // Tau-vector shape errors are hard errors here too.
+    assert!(orch
+        .step(&h, 4, &[1.0; B + 1], Strategy::AllGatherMultinomial)
+        .is_err());
+    orch.shutdown().unwrap();
+}
+
+#[test]
+fn mixed_tau_is_tp_degree_invariant() {
+    // Shard count is invisible in the token stream even with per-row
+    // temperatures, for every strategy (the EngineBackend unification
+    // leans on exactly this).
+    let w = randn(V * D, 20, 0.05);
+    let h = randn(B * D, 19, 0.5);
+    let taus = [0.25f32, 1.0, 1.5, 3.0];
+    let Some(mut o2) = orchestrator(2, &w) else { return };
+    let mut o4 = orchestrator(4, &w).unwrap();
+    for (step, strategy) in [
+        (21u32, Strategy::P2pFanout),
+        (22, Strategy::AllGatherMultinomial),
+        (23, Strategy::AllGatherGumbel),
+    ] {
+        let a = o2.step(&h, step, &taus, strategy).unwrap();
+        let b = o4.step(&h, step, &taus, strategy).unwrap();
+        assert_eq!(a.samples, b.samples, "{strategy:?} varies with TP degree");
+    }
+    o2.shutdown().unwrap();
+    o4.shutdown().unwrap();
+}
+
+#[test]
 fn steps_are_deterministic_and_fresh() {
     let w = randn(V * D, 10, 0.05);
     let h = randn(B * D, 9, 0.5);
