@@ -1,0 +1,174 @@
+#!/usr/bin/env python3
+"""Cross-language flight-recorder digest mirror.
+
+Independently reimplements the `SimReplica` mirror leg of
+`repro trace-identity` (rust/src/repro/trace_identity.rs, leg 5):
+6 closed-loop requests, `prompt_len = 24 + (id % 3) * 8`,
+`max_new = 3 + (id % 3)`, prefix cache off, `Lifecycle` trace level —
+and re-derives the canonical JSONL stream plus its FNV-1a 64 digest
+byte-for-byte (rust/src/trace/mod.rs `TraceEvent::canonical_line`).
+
+Nothing is shared with the Rust side except the two specs: the FIFO
+continuous-batcher shape (admit up to PREFILL_B admissible waiting
+heads when concurrency allows, else decode the first DECODE_MAX_B
+running rows one token) and the canonical serialization (fixed key
+order, newline-terminated lines folded through FNV-1a 64).  If either
+drifts, the digests diverge and this script fails.
+
+Usage:
+    python3 python/tests/sim_trace_bench.py [trace-identity.csv]
+
+With no argument, runs the mirror, self-checks the event count, and
+prints the digest.  With the CSV produced by
+`flashsampling repro trace-identity --out DIR` as argument, additionally
+asserts bitwise equality against the Rust-side `sim-mirror` anchor row —
+the CI cross-language gate.
+"""
+
+import sys
+
+# FNV-1a 64 (rust/src/trace/mod.rs FNV_OFFSET / FNV_PRIME).
+FNV_OFFSET = 0xCBF29CE484222325
+FNV_PRIME = 0x100000001B3
+MASK64 = (1 << 64) - 1
+
+# Mirror-leg workload + SimReplicaConfig defaults (keep in lockstep with
+# trace_identity.rs `mirror_run` and router/sim.rs `SimReplicaConfig`).
+NUM_REQUESTS = 6
+PREFILL_B = 4
+DECODE_MAX_B = 8
+MAX_CONCURRENCY = 8
+
+
+def prompt_len(rid):
+    return 24 + (rid % 3) * 8
+
+
+def max_new(rid):
+    return 3 + (rid % 3)
+
+
+def sim_token(rid, index):
+    """router/sim.rs `sim_token`: deterministic model stand-in."""
+    return (rid * 31 + (index + 1) * 7) % 2039
+
+
+class Recorder:
+    """Canonical-line serializer + incremental FNV-1a digest.
+
+    Mirrors trace/mod.rs: each event renders as
+    `{"seq":N,"step":S,"id":I,"ev":"name",<args in fixed order>}` and
+    the digest folds every line plus a trailing newline.
+    """
+
+    def __init__(self):
+        self.seq = 0
+        self.digest = FNV_OFFSET
+        self.lines = []
+
+    def emit(self, step, rid, ev, args):
+        parts = ['"seq":%d' % self.seq, '"step":%d' % step,
+                 '"id":%d' % rid, '"ev":"%s"' % ev]
+        for key, val in args:
+            if isinstance(val, str):
+                parts.append('"%s":"%s"' % (key, val))
+            else:
+                parts.append('"%s":%d' % (key, val))
+        line = "{" + ",".join(parts) + "}"
+        self.seq += 1
+        self.lines.append(line)
+        for byte in line.encode("utf-8") + b"\n":
+            self.digest = ((self.digest ^ byte) * FNV_PRIME) & MASK64
+
+
+def run_mirror():
+    """The SimReplica FIFO batcher at Lifecycle level, event-for-event.
+
+    The pool (4096 blocks x 16) is far larger than the live set, so
+    admission never blocks and no KV model is needed; with prefix
+    caching off there are no radix_attach events, and a bare replica
+    emits no dispatch events.
+    """
+    rec = Recorder()
+    clock = 0
+    cstep = 0
+    waiting = []
+    running = []
+    for rid in range(NUM_REQUESTS):
+        rec.emit(clock, rid, "submit",
+                 [("prompt_len", prompt_len(rid)), ("max_new", max_new(rid))])
+        waiting.append({"id": rid, "gen": 0})
+    while waiting or running:
+        clock += 1
+        if len(running) < MAX_CONCURRENCY and waiting:
+            batch = []
+            while (waiting and len(batch) < PREFILL_B
+                   and len(running) + len(batch) < MAX_CONCURRENCY):
+                batch.append(waiting.pop(0))
+            snap = cstep
+            cstep += 1
+            for row, seq in enumerate(batch):
+                rec.emit(clock, seq["id"], "prefill",
+                         [("prompt_len", prompt_len(seq["id"]))])
+                tok = sim_token(seq["id"], 0)
+                seq["gen"] = 1
+                rec.emit(clock, seq["id"], "first_token",
+                         [("row", row), ("cstep", snap), ("token", tok)])
+            for seq in batch:
+                if seq["gen"] >= max_new(seq["id"]):
+                    rec.emit(clock, seq["id"], "finish",
+                             [("reason", "max_tokens"), ("tokens", seq["gen"])])
+                else:
+                    running.append(seq)
+        elif running:
+            snap = cstep
+            cstep += 1
+            for row in range(min(len(running), DECODE_MAX_B)):
+                seq = running[row]
+                tok = sim_token(seq["id"], seq["gen"])
+                seq["gen"] += 1
+                rec.emit(clock, seq["id"], "decode_token",
+                         [("row", row), ("cstep", snap), ("token", tok)])
+            i = 0
+            while i < len(running):
+                if running[i]["gen"] >= max_new(running[i]["id"]):
+                    seq = running.pop(i)
+                    rec.emit(clock, seq["id"], "finish",
+                             [("reason", "max_tokens"), ("tokens", seq["gen"])])
+                else:
+                    i += 1
+        assert clock < 1000, "mirror livelock"
+    return rec
+
+
+def anchor_from_csv(path):
+    """The `sim-mirror,requests,events,digest` row of trace-identity.csv."""
+    with open(path) as f:
+        for line in f:
+            if line.startswith("sim-mirror,"):
+                cells = line.strip().split(",")
+                return int(cells[2]), int(cells[3], 16)
+    raise SystemExit("no sim-mirror row in %s" % path)
+
+
+def main():
+    rec = run_mirror()
+    # Lifecycle events only: 6 submits + 6 prefills + 6 first tokens +
+    # 6 finishes + one decode_token per remaining token.
+    expected = 24 + sum(max_new(rid) - 1 for rid in range(NUM_REQUESTS))
+    assert rec.seq == expected, "event count %d != %d" % (rec.seq, expected)
+    digest = "0x%016x" % rec.digest
+    print("sim_trace_bench: %d events, digest %s" % (rec.seq, digest))
+    if len(sys.argv) > 1:
+        events, anchor = anchor_from_csv(sys.argv[1])
+        assert events == rec.seq, (
+            "event count mismatch: rust %d, python %d" % (events, rec.seq))
+        assert anchor == rec.digest, (
+            "digest mismatch: rust 0x%016x, python %s" % (anchor, digest))
+        print("sim_trace_bench: MATCHES the Rust sim-mirror anchor")
+    else:
+        print("(pass trace-identity.csv to cross-check the Rust anchor)")
+
+
+if __name__ == "__main__":
+    main()

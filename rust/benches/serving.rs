@@ -40,6 +40,7 @@ use flashsampling::benchutil::{
 use flashsampling::testutil::schedsim::{
     run, Finish, SimConfig, SimOutcome, SimRequest,
 };
+use flashsampling::trace::TraceLevel;
 
 const REQUESTS: u64 = 48;
 /// Every 8th prompt is the long monopolist (fits the 64 bucket, so the
@@ -203,6 +204,54 @@ fn main() {
             short_p95_by_leg[0],
         );
     }
+
+    // Flight-recorder overhead guard (DESIGN.md §14): the densest-rate
+    // chunked drive at every `trace_level`.  `off` (the default) must
+    // stay free — one predictable branch per emission site — so the
+    // tracked number is the full/off median ratio in the snapshot; the
+    // assertion here is only a runaway guard against an emission site
+    // growing work outside its `trace.on()` gate.
+    println!("\n## serving — flight-recorder overhead (interval 1, chunked)\n");
+    let reqs = script(1);
+    let mut medians: Vec<u64> = Vec::new();
+    for level in [TraceLevel::Off, TraceLevel::Lifecycle, TraceLevel::Full] {
+        let mut cfg = sim_cfg(16, true);
+        cfg.trace_level = level;
+        // The gate itself: off emits nothing, on emits a bounded stream.
+        let mut probe = flashsampling::testutil::schedsim::Sim::new(cfg.clone());
+        probe.drive(&reqs);
+        let events = probe.trace.total();
+        match level {
+            TraceLevel::Off => assert_eq!(events, 0, "off leg recorded events"),
+            _ => assert!(events > 0, "{level} leg recorded nothing"),
+        }
+        let label = format!("serving/trace/{level}");
+        let timing = bench_with(&label, 10, Duration::from_millis(5), || {
+            black_box(run(cfg.clone(), &reqs).len());
+        });
+        medians.push(timing.median.as_nanos() as u64);
+        let mut fields = vec![
+            ("scenario", json_str("trace-overhead")),
+            ("source", json_str("bench")),
+            ("trace_level", json_str(level.name())),
+            ("arrival_interval", "1".to_string()),
+            ("requests", REQUESTS.to_string()),
+            ("trace_events", events.to_string()),
+        ];
+        fields.extend(timing.json_fields());
+        records.push(json_object(&fields));
+    }
+    let ratio = medians[2] as f64 / medians[0].max(1) as f64;
+    println!("\nfull/off median ratio: {ratio:.3}");
+    records.push(json_object(&[
+        ("scenario", json_str("trace-overhead-ratio")),
+        ("source", json_str("bench")),
+        ("full_over_off", format!("{ratio:.4}")),
+    ]));
+    assert!(
+        ratio < 25.0,
+        "full-level tracing blew up the drive {ratio:.1}x over off"
+    );
 
     let out = std::env::var("BENCH_OUT")
         .unwrap_or_else(|_| "BENCH_serving.json".to_string());

@@ -28,6 +28,7 @@ use crate::coordinator::{EngineConfig, Priority};
 use crate::gpusim::iomodel::SwapPolicy;
 use crate::router::DispatchPolicy;
 use crate::sampling::SamplerSpec;
+use crate::trace::TraceLevel;
 
 /// Full launcher configuration.
 #[derive(Clone, Debug, PartialEq)]
@@ -88,6 +89,9 @@ pub struct Config {
     /// `prefix-affinity` (default — cache-aware session routing).
     /// Inert at `replicas = 1`, where every policy picks replica 0.
     pub dispatch_policy: DispatchPolicy,
+    /// Flight-recorder level (DESIGN.md §14): `off` (default — one
+    /// branch per event site) | `lifecycle` | `full`.
+    pub trace_level: TraceLevel,
     /// Output directory for `repro`.
     pub out_dir: PathBuf,
 }
@@ -116,6 +120,7 @@ impl Default for Config {
             swap_policy: SwapPolicy::Auto,
             replicas: 1,
             dispatch_policy: DispatchPolicy::default(),
+            trace_level: TraceLevel::Off,
             out_dir: "results".into(),
         }
     }
@@ -187,6 +192,12 @@ impl Config {
                         .with_context(|| format!("config key 'swap_policy' = '{v}'"))?;
                 }
                 "replicas" => self.replicas = v.parse()?,
+                "trace_level" => {
+                    self.trace_level = v
+                        .parse()
+                        .map_err(|e: String| anyhow::anyhow!(e))
+                        .with_context(|| format!("config key 'trace_level' = '{v}'"))?;
+                }
                 "dispatch_policy" => {
                     self.dispatch_policy = v
                         .parse()
@@ -230,6 +241,7 @@ impl Config {
             chunk_interleave: self.chunk_interleave,
             swap_blocks: self.swap_blocks,
             swap_policy: self.swap_policy,
+            trace_level: self.trace_level,
             // TP-sharded replicas are constructed programmatically
             // (`EngineConfig::tp`); the config file drives the router
             // shape via `replicas` / `dispatch_policy` only.
@@ -461,6 +473,24 @@ mod tests {
         assert_eq!(c.dispatch_policy, DispatchPolicy::LeastLoaded);
         // The config-file shape never reaches the engine as TP.
         assert!(c.engine_config().tp.is_none());
+    }
+
+    #[test]
+    fn trace_level_key_parses_and_defaults_off() {
+        let mut c = Config::default();
+        assert_eq!(c.trace_level, TraceLevel::Off);
+        assert_eq!(c.engine_config().trace_level, TraceLevel::Off);
+        c.apply_pairs(parse_pairs("trace_level = lifecycle").unwrap()).unwrap();
+        assert_eq!(c.engine_config().trace_level, TraceLevel::Lifecycle);
+        c.apply_pairs(parse_pairs("trace_level = full").unwrap()).unwrap();
+        assert_eq!(c.trace_level, TraceLevel::Full);
+        assert!(c
+            .apply_pairs(parse_pairs("trace_level = verbose").unwrap())
+            .is_err());
+        // Failed applies never clobber prior values.
+        assert_eq!(c.trace_level, TraceLevel::Full);
+        c.apply_pairs(parse_pairs("trace_level = off").unwrap()).unwrap();
+        assert_eq!(c.engine_config().trace_level, TraceLevel::Off);
     }
 
     #[test]

@@ -41,6 +41,7 @@ use crate::runtime::{Runtime, Tensor};
 use crate::sampling::{Key, SamplerSpec};
 use crate::specdec::{coupled_emit_len, DraftModel, NGramDraft};
 use crate::tp::{Strategy, TpConfig, TpOrchestrator};
+use crate::trace::{EventKind, Trace, TraceLevel};
 use crate::workload::RequestSpec;
 
 /// Tensor-parallel decode configuration (DESIGN.md §13).  With
@@ -123,6 +124,10 @@ pub struct EngineConfig {
     /// fused Gumbel sampler, `n_ranks >= 2`, and the `decode_hidden` +
     /// shard artifacts — validated at construction, never at decode time.
     pub tp: Option<TpDecode>,
+    /// Flight-recorder verbosity (DESIGN.md §14).  `Off` (default) costs
+    /// one branch per event site; `Lifecycle` records request lifecycles;
+    /// `Full` adds scheduler plans, aging promotions, and KV deltas.
+    pub trace_level: TraceLevel,
 }
 
 impl Default for EngineConfig {
@@ -140,6 +145,7 @@ impl Default for EngineConfig {
             swap_blocks: 0,
             swap_policy: SwapPolicy::Auto,
             tp: None,
+            trace_level: TraceLevel::Off,
         }
     }
 }
@@ -230,6 +236,14 @@ pub struct Engine {
     /// Rank threads and their PJRT runtimes are paid once per bucket.
     tp_orch: HashMap<usize, TpOrchestrator>,
     pub metrics: ServingMetrics,
+    /// Flight recorder (DESIGN.md §14).  Level comes from
+    /// `EngineConfig::trace_level`; with `Off` every emission site costs
+    /// one branch, mirroring the `Arc::strong_count` trick in `stream.rs`.
+    pub trace: Trace,
+    /// KV-counter baseline for `Full`-level per-step delta events
+    /// (alloc / free / CoW / radix evictions), snapshotted at the end of
+    /// each `step()`.
+    trace_kv_base: [u64; 4],
 }
 
 /// Calibrated prefill throughput for the swap-vs-recompute policy
@@ -361,6 +375,7 @@ impl Engine {
         });
         kvmgr.set_swap_capacity(cfg.swap_blocks);
         let key = Key::from_seed(cfg.seed);
+        let trace = Trace::new(cfg.trace_level);
         Ok(Self {
             rt,
             cfg,
@@ -380,6 +395,8 @@ impl Engine {
             decode_cache: None,
             tp_orch: HashMap::new(),
             metrics: ServingMetrics::default(),
+            trace,
+            trace_kv_base: [0; 4],
         })
     }
 
@@ -499,29 +516,50 @@ impl Engine {
                 ),
             });
         }
-        let reject = |reason: String| EngineError::AdmissionRejected { id, reason };
+        // Hoist the model scalars: the reject closure below needs a
+        // mutable borrow of the trace, which a live `&self`-tied `m`
+        // would forbid.
+        let (vocab, max_seq, max_t) =
+            (m.vocab, m.max_seq, *m.prefill_t_buckets.last().unwrap());
+        let clock = self.clock;
+        let trace = &mut self.trace;
+        let mut reject = |reason: String| {
+            if trace.on() {
+                trace.emit(clock, id, EventKind::Reject { reason: reason.clone() });
+            }
+            EngineError::AdmissionRejected { id, reason }
+        };
         if req.prompt.is_empty() {
             return Err(reject("empty prompt".into()));
         }
         // Chunked prefill lifts the T-bucket ceiling: windows cover any
         // prompt that fits max_seq, one largest-bucket slice at a time.
-        let max_t = *m.prefill_t_buckets.last().unwrap();
         if self.sched.prefill_chunk_tokens == 0 && req.prompt.len() > max_t {
             return Err(reject(format!(
                 "prompt of {} tokens exceeds the largest prefill bucket {max_t}",
                 req.prompt.len()
             )));
         }
-        if req.prompt.len() + req.params.max_new_tokens > m.max_seq {
+        if req.prompt.len() + req.params.max_new_tokens > max_seq {
             return Err(reject(format!(
                 "prompt {} + budget {} exceeds max_seq {}",
                 req.prompt.len(),
                 req.params.max_new_tokens,
-                m.max_seq
+                max_seq
             )));
         }
-        if req.prompt.iter().any(|&t| t < 0 || t as usize >= m.vocab) {
+        if req.prompt.iter().any(|&t| t < 0 || t as usize >= vocab) {
             return Err(reject("prompt token out of vocab range".into()));
+        }
+        if self.trace.on() {
+            self.trace.emit(
+                self.clock,
+                id,
+                EventKind::Submit {
+                    prompt_len: req.prompt.len(),
+                    max_new: req.params.max_new_tokens,
+                },
+            );
         }
         let mut seq = Sequence::new(req);
         seq.submitted_step = self.clock;
@@ -590,6 +628,19 @@ impl Engine {
             .extend(c.timing.token_latencies.iter().copied());
         if reason == FinishReason::Aborted {
             self.metrics.bump("aborted", 1);
+        }
+        if self.trace.on() {
+            let name = match reason {
+                FinishReason::MaxTokens => "max_tokens",
+                FinishReason::StopToken => "stop_token",
+                FinishReason::Rejected => "rejected",
+                FinishReason::Aborted => "aborted",
+            };
+            self.trace.emit(
+                self.clock,
+                c.id,
+                EventKind::Finish { reason: name, tokens: c.tokens.len() as u64 },
+            );
         }
         if let Some(st) = self.streams.remove(&c.id) {
             // As in `emit_token`: with every handle dropped (the batch
@@ -682,6 +733,29 @@ impl Engine {
             |s| self.kvmgr.cached_prefix_tokens(&s.prompt),
             self.clock,
         );
+        if self.trace.full() {
+            let (outcome, batch) = match &p {
+                Plan::ChunkPrefill { .. } => ("chunk_prefill", 1),
+                Plan::Prefill { seq_ids, .. } => ("prefill", seq_ids.len()),
+                Plan::Decode { seq_ids, .. } => ("decode", seq_ids.len()),
+                Plan::Idle => ("idle", 0),
+            };
+            self.trace.emit(self.clock, 0, EventKind::Plan { outcome, batch });
+            // Aging promotions: waiting sequences whose effective rank
+            // has risen at least one class above their base priority.
+            let aging = self.sched.aging_steps;
+            if aging > 0 {
+                let promoted = self
+                    .waiting
+                    .iter()
+                    .filter(|s| self.clock.saturating_sub(s.submitted_step) >= aging)
+                    .count();
+                if promoted > 0 {
+                    self.trace
+                        .emit(self.clock, 0, EventKind::Promote { count: promoted as u64 });
+                }
+            }
+        }
         let out = match p {
             Plan::ChunkPrefill { seq_id } => self.do_chunk_prefill(seq_id),
             Plan::Prefill { seq_ids, t_bucket } => self.do_prefill(&seq_ids, t_bucket),
@@ -694,8 +768,42 @@ impl Engine {
             }
             Plan::Idle => Ok(Vec::new()),
         };
+        if self.trace.full() {
+            self.emit_kv_deltas();
+        }
         self.metrics.bump("step_total_us", t0.elapsed().as_micros() as u64);
         out
+    }
+
+    /// `Full`-level KV bookkeeping events: per-step deltas of the
+    /// monotone alloc / free / CoW-fork / radix-eviction counters against
+    /// the previous step's baseline (engine-global, request id 0).
+    fn emit_kv_deltas(&mut self) {
+        let now = [
+            self.kvmgr.stat_alloc_blocks(),
+            self.kvmgr.stat_freed_blocks(),
+            self.kvmgr.stat_cow_forks(),
+            self.kvmgr.evicted_blocks(),
+        ];
+        let d: Vec<u64> = now
+            .iter()
+            .zip(self.trace_kv_base.iter())
+            .map(|(n, b)| n.saturating_sub(*b))
+            .collect();
+        self.trace_kv_base = now;
+        for (i, kind) in [
+            EventKind::KvAlloc { blocks: d[0] },
+            EventKind::KvFree { blocks: d[1] },
+            EventKind::KvCow { blocks: d[2] },
+            EventKind::RadixEvict { blocks: d[3] },
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            if d[i] > 0 {
+                self.trace.emit(self.clock, 0, kind);
+            }
+        }
     }
 
     /// Backstop for open-loop drivers: when a step produced nothing and
@@ -843,6 +951,9 @@ impl Engine {
             match self.kvmgr.swap_in(id)? {
                 Some(blocks) => {
                     self.metrics.swap_in_blocks += blocks as u64;
+                    if self.trace.on() {
+                        self.trace.emit(self.clock, id, EventKind::SwapIn { blocks: blocks as u64 });
+                    }
                     let mut s = self.swapped.remove(0);
                     // Reconcile the one-token accounting deficit every
                     // preempt site leaves behind: the token that triggered
@@ -874,6 +985,12 @@ impl Engine {
                             .swap_out(id)?
                             .expect("ledger capacity was just vacated");
                         self.metrics.swap_out_blocks += n as u64;
+                        // Park-back, not a preemption: no `preempt` event
+                        // (and no `swapped_out_seqs` bump) — the trace
+                        // mirrors the metrics split exactly.
+                        if self.trace.on() {
+                            self.trace.emit(self.clock, id, EventKind::SwapOut { blocks: n as u64 });
+                        }
                         self.swapped.insert(0, s);
                         break;
                     }
@@ -994,6 +1111,13 @@ impl Engine {
             s.prefilled_tokens = a.cached_tokens;
             if a.cached_tokens > 0 {
                 self.metrics.cached_prefill_tokens += a.cached_tokens as u64;
+                if self.trace.on() {
+                    self.trace.emit(
+                        self.clock,
+                        s.id,
+                        EventKind::RadixAttach { tokens: a.cached_tokens as u64 },
+                    );
+                }
             }
         }
         let chunk = self
@@ -1062,6 +1186,13 @@ impl Engine {
         }
         s.prefilled_tokens += take;
         self.metrics.chunked_prefill_steps += 1;
+        if self.trace.on() {
+            self.trace.emit(
+                self.clock,
+                s.id,
+                EventKind::ChunkWindow { take, prefilled: s.prefilled_tokens },
+            );
+        }
         self.metrics.bump("prefill_cached_runs", 1);
         self.metrics.bump("prefill_pad_rows", (b - 1) as u64);
         // The head stays Waiting at the queue front: the next window (or
@@ -1158,6 +1289,17 @@ impl Engine {
             // skipped — `prefix_hit_rate()` must never advertise a TTFT
             // win the artifact fallback did not deliver.
             self.metrics.cached_prefill_tokens += attached_tokens;
+            if self.trace.on() {
+                for ((s, a), &own) in seqs.iter().zip(&attaches).zip(&own_restore) {
+                    if !own && a.cached_tokens > 0 {
+                        self.trace.emit(
+                            self.clock,
+                            s.id,
+                            EventKind::RadixAttach { tokens: a.cached_tokens as u64 },
+                        );
+                    }
+                }
+            }
         } else if attached_tokens > 0 {
             self.metrics.bump("prefix_attached_unskipped_tokens", attached_tokens);
         }
@@ -1267,7 +1409,10 @@ impl Engine {
             .map_err(|e| EngineError::artifact(&sample_name, e))?;
         let hid_lit = hidden.to_literal()?;
         let seed_lit = Tensor::seed(self.key).to_literal()?;
-        let step_lit = Tensor::scalar_u32(self.bump_step()).to_literal()?;
+        // Hoisted: the trace records each first token's Philox
+        // `(row, counter-step)` coordinates below.
+        let sample_step = self.bump_step();
+        let step_lit = Tensor::scalar_u32(sample_step).to_literal()?;
         // Per-row tau (ABI v2): each prompt's own temperature; pad rows
         // sample at tau = 1 and are discarded below.
         let taus: Vec<f32> = (0..b)
@@ -1326,6 +1471,22 @@ impl Engine {
             s.timing.ttft = Some(now - s.arrived);
             self.metrics.tokens_generated += 1;
             self.metrics.prefill_tokens += s.prompt.len() as u64;
+            if self.trace.on() {
+                self.trace.emit(
+                    clock,
+                    s.id,
+                    EventKind::Prefill { prompt_len: s.prompt.len() },
+                );
+                self.trace.emit(
+                    clock,
+                    s.id,
+                    EventKind::FirstToken {
+                        row,
+                        cstep: sample_step,
+                        token: first_tokens[row],
+                    },
+                );
+            }
             emit_token(&self.streams, &mut s, first_tokens[row], clock);
             if let Some(reason) = s.finished() {
                 self.kvmgr.release(s.id)?;
@@ -1340,11 +1501,18 @@ impl Engine {
                 match self.swap_preempt(s.id, s.context_len())? {
                     Some(n) => {
                         self.metrics.swap_out_blocks += n as u64;
+                        if self.trace.on() {
+                            self.trace.emit(clock, s.id, EventKind::Preempt { kind: "swap" });
+                            self.trace.emit(clock, s.id, EventKind::SwapOut { blocks: n as u64 });
+                        }
                         s.state = SeqState::Preempted;
                         self.swapped.push(s);
                     }
                     None => {
                         self.metrics.bump("preempted", 1);
+                        if self.trace.on() {
+                            self.trace.emit(clock, s.id, EventKind::Preempt { kind: "recompute" });
+                        }
                         self.kvmgr.release(s.id)?;
                         completions
                             .push(self.complete_seq(s, FinishReason::MaxTokens));
@@ -1506,7 +1674,7 @@ impl Engine {
             taus[slot] = self.running[ri].params.temperature;
         }
 
-        let (new_k, new_v, samples) = if let Some(tp) = self.cfg.tp {
+        let (new_k, new_v, samples, cstep) = if let Some(tp) = self.cfg.tp {
             // TP-sharded decode (DESIGN.md §13): the transformer step runs
             // the hidden-state artifact (no sampling epilogue — it takes no
             // seed/step/tau inputs), then the LM-head matmul + FlashSampling
@@ -1541,7 +1709,7 @@ impl Engine {
             };
             self.metrics.bump("decode_exec_us", t_exec.elapsed().as_micros() as u64);
             self.metrics.bump("tp_wire_bytes", r.wire_bytes);
-            (new_k, new_v, r.samples)
+            (new_k, new_v, r.samples, step)
         } else {
             let kind = if self.cfg.uses_baseline_artifact() {
                 "decode_baseline"
@@ -1552,7 +1720,9 @@ impl Engine {
             let exe =
                 self.rt.load(&name).map_err(|e| EngineError::artifact(&name, e))?;
             let seed_lit = Tensor::seed(self.key).to_literal()?;
-            let step_lit = Tensor::scalar_u32(self.bump_step()).to_literal()?;
+            // Hoisted: the trace records each token's Philox coordinates.
+            let step = self.bump_step();
+            let step_lit = Tensor::scalar_u32(step).to_literal()?;
             let tau_lit = Tensor::F32(taus, vec![b_bucket]).to_literal()?;
 
             let mut lits: Vec<&xla::Literal> = self.params_lit.iter().collect();
@@ -1572,7 +1742,7 @@ impl Engine {
             let new_v = out.pop().unwrap();
             let new_k = out.pop().unwrap();
             let samples = Tensor::from_literal(&sample_lit)?.as_i32()?.to_vec();
-            (new_k, new_v, samples)
+            (new_k, new_v, samples, step)
         };
 
         // The new KV lives on as next step's input (lazy per-seq sync).
@@ -1599,6 +1769,15 @@ impl Engine {
             s.last_token_at = Some(now);
             emit_token(&self.streams, s, samples[slot], clock);
             self.metrics.tokens_generated += 1;
+            if self.trace.on() {
+                let id = self.running[ri].id;
+                self.trace.emit(
+                    clock,
+                    id,
+                    EventKind::DecodeToken { row: slot, cstep, token: samples[slot] },
+                );
+            }
+            let s = &mut self.running[ri];
             if let Some(reason) = s.finished() {
                 retired.push((ri, Some(reason)));
             } else if !self.kvmgr.append_token(s.id)? {
@@ -1609,11 +1788,18 @@ impl Engine {
             match self.swap_preempt(id, ctx)? {
                 Some(n) => {
                     self.metrics.swap_out_blocks += n as u64;
+                    if self.trace.on() {
+                        self.trace.emit(clock, id, EventKind::Preempt { kind: "swap" });
+                        self.trace.emit(clock, id, EventKind::SwapOut { blocks: n as u64 });
+                    }
                     retired.push((ri, None));
                 }
                 None => {
                     // KV pool exhausted, no swap: legacy finish-early.
                     self.metrics.bump("preempted", 1);
+                    if self.trace.on() {
+                        self.trace.emit(clock, id, EventKind::Preempt { kind: "recompute" });
+                    }
                     retired.push((ri, Some(FinishReason::MaxTokens)));
                 }
             }
@@ -1729,6 +1915,9 @@ impl Engine {
         //    of identical KV, i.e. a no-op — and their surplus samples are
         //    discarded below.
         let mut samples_per_row: Vec<Vec<i32>> = vec![Vec::new(); rows.len()];
+        // The burst's first Philox counter-step — the trace's `cstep`
+        // anchor for this spec round (passes consume cstep0..=cstep0+k_max).
+        let cstep0 = self.step_counter;
         for j in 0..=k_max {
             let mut pos = vec![0i32; b_bucket];
             let mut tok = vec![0i32; b_bucket];
@@ -1827,6 +2016,19 @@ impl Engine {
                 swap_candidates.push((ri, id, final_len));
             }
             self.metrics.spec_tokens_per_step.push(emitted);
+            if self.trace.on() {
+                self.trace.emit(
+                    clock,
+                    id,
+                    EventKind::SpecBurst {
+                        row: slot,
+                        cstep: cstep0,
+                        drafted: draft.len() as u64,
+                        accepted: (emit - 1) as u64,
+                        emitted: emitted as u64,
+                    },
+                );
+            }
             if let Some(reason) = fin {
                 retired.push((ri, Some(reason)));
             }
@@ -1835,10 +2037,17 @@ impl Engine {
             match self.swap_preempt(id, ctx)? {
                 Some(n) => {
                     self.metrics.swap_out_blocks += n as u64;
+                    if self.trace.on() {
+                        self.trace.emit(clock, id, EventKind::Preempt { kind: "swap" });
+                        self.trace.emit(clock, id, EventKind::SwapOut { blocks: n as u64 });
+                    }
                     retired.push((ri, None));
                 }
                 None => {
                     self.metrics.bump("preempted", 1);
+                    if self.trace.on() {
+                        self.trace.emit(clock, id, EventKind::Preempt { kind: "recompute" });
+                    }
                     retired.push((ri, Some(FinishReason::MaxTokens)));
                 }
             }

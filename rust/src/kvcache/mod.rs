@@ -138,6 +138,13 @@ pub struct KvCacheManager {
     swapped: std::collections::HashMap<u64, SwapEntry>,
     /// Ledger capacity in blocks (0 = swap tier disabled).
     swap_capacity: usize,
+    /// Monotone bookkeeping counters for the flight recorder's per-step
+    /// KV delta events (DESIGN.md §14): blocks newly allocated, sequence
+    /// refs dropped (release / truncate / swap-out), and copy-on-write
+    /// tail forks.  Pure accounting — never consulted by allocation.
+    stat_alloc_blocks: u64,
+    stat_freed_blocks: u64,
+    stat_cow_forks: u64,
 }
 
 impl KvCacheManager {
@@ -151,7 +158,27 @@ impl KvCacheManager {
             evicted_blocks: 0,
             swapped: std::collections::HashMap::new(),
             swap_capacity: 0,
+            stat_alloc_blocks: 0,
+            stat_freed_blocks: 0,
+            stat_cow_forks: 0,
         }
+    }
+
+    /// Monotone count of blocks newly allocated (fresh allocations only —
+    /// prefix-cache attach refs are shares, not allocations).
+    pub fn stat_alloc_blocks(&self) -> u64 {
+        self.stat_alloc_blocks
+    }
+
+    /// Monotone count of sequence block refs dropped via release,
+    /// truncate rollback, or swap-out.
+    pub fn stat_freed_blocks(&self) -> u64 {
+        self.stat_freed_blocks
+    }
+
+    /// Monotone count of copy-on-write tail forks in [`Self::append_token`].
+    pub fn stat_cow_forks(&self) -> u64 {
+        self.stat_cow_forks
     }
 
     pub fn config(&self) -> KvCacheConfig {
@@ -268,6 +295,7 @@ impl KvCacheManager {
         let n = self.blocks_for(prompt_tokens.max(1));
         self.ensure_free(n); // best effort; allocate_many reports exhaustion
         let blocks = self.allocator.allocate_many(n)?;
+        self.stat_alloc_blocks += n as u64;
         let mut table = BlockTable::new(self.config.block_size);
         for b in blocks {
             table.push(b);
@@ -318,6 +346,7 @@ impl KvCacheManager {
         for b in self.allocator.allocate_many(needed)? {
             table.push(b);
         }
+        self.stat_alloc_blocks += needed as u64;
         table.set_len(prompt.len().max(1));
         self.tables.insert(seq_id, table);
         if !nodes.is_empty() {
@@ -373,6 +402,7 @@ impl KvCacheManager {
                 return Ok(false);
             }
             let b = self.allocator.allocate()?;
+            self.stat_alloc_blocks += 1;
             let table = self.tables.get_mut(&seq_id).expect("checked above");
             table.push(b);
             table.set_len(len + 1);
@@ -384,6 +414,8 @@ impl KvCacheManager {
                     return Ok(false);
                 }
                 let nb = self.allocator.allocate()?;
+                self.stat_alloc_blocks += 1;
+                self.stat_cow_forks += 1;
                 self.allocator.free(tail)?; // drop our ref on the shared block
                 let table =
                     self.tables.get_mut(&seq_id).expect("checked above");
@@ -422,6 +454,7 @@ impl KvCacheManager {
         while table.num_blocks() > keep {
             let b = table.pop().expect("num_blocks > keep >= 1");
             self.allocator.free(b)?;
+            self.stat_freed_blocks += 1;
         }
         table.set_len(new_len);
         Ok(())
@@ -457,6 +490,7 @@ impl KvCacheManager {
                 tree.detach(&nodes);
             }
         }
+        self.stat_freed_blocks += table.num_blocks() as u64;
         for b in table.blocks() {
             self.allocator.free(*b)?;
         }
@@ -524,6 +558,7 @@ impl KvCacheManager {
             let b = table.pop().expect("num_blocks > attached");
             self.allocator.free(b)?;
         }
+        self.stat_freed_blocks += private as u64;
         if private > 0 {
             // Invariant num_blocks == ceil(len / bs) guarantees
             // len > attached * bs whenever a private block existed.
@@ -549,6 +584,7 @@ impl KvCacheManager {
             return Ok(None);
         }
         let blocks = self.allocator.allocate_many(entry.blocks)?;
+        self.stat_alloc_blocks += entry.blocks as u64;
         let table = self.tables.get_mut(&seq_id).expect("checked above");
         for b in blocks {
             table.push(b);

@@ -92,6 +92,20 @@
 //! factorization, so shard count never shows in the token stream.
 //! `repro router-identity` and `rust/tests/router.rs` certify 1-replica
 //! byte-identity, replay-stable dispatch, and zero-leak aborts.
+//!
+//! # Flight-recorder tracing
+//!
+//! The [`trace`] subsystem (DESIGN.md §14) is a zero-dependency flight
+//! recorder: a bounded ring of typed events keyed by the logical step
+//! clock, request id, and Philox `(row, cstep)` coordinates, emitted
+//! across scheduler, KV, spec decode, and router.  `trace_level = off`
+//! (the default) costs one branch per event site; `lifecycle` records
+//! request lifecycles; `full` adds scheduler/KV internals.  Exports are
+//! Chrome trace-event JSON (Perfetto) and canonical JSONL; because no
+//! event carries wall-clock data, the trace digest is replay-stable and
+//! `repro trace-identity` certifies both that identity and that
+//! counters derived from the event log reproduce
+//! [`metrics::ServingMetrics`] exactly.
 
 pub mod benchutil;
 pub mod config;
@@ -108,6 +122,7 @@ pub mod sampling;
 pub mod specdec;
 pub mod testutil;
 pub mod tp;
+pub mod trace;
 pub mod workload;
 
 /// Crate-wide result type (library errors carry context via `anyhow`).

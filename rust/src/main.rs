@@ -3,6 +3,7 @@
 //! ```text
 //! flashsampling serve   [--config F] [--set k=v]...   open-loop serving run
 //! flashsampling repro   <id|all|stats> [--out DIR]    regenerate paper tables
+//! flashsampling trace   [--out DIR] [--replicas N]    flight-recorder demo run
 //! flashsampling bench-kernel [--set k=v]...           PJRT kernel A/B timing
 //! flashsampling selfcheck [--set k=v]...              load artifacts, smoke-run
 //! ```
@@ -22,10 +23,11 @@ use flashsampling::workload::WorkloadGen;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: flashsampling <serve|repro|bench-kernel|selfcheck> [args]\n\
+        "usage: flashsampling <serve|repro|trace|bench-kernel|selfcheck> [args]\n\
          \n\
          serve        [--replicas N] --config FILE | --set key=value ...\n\
-         repro        <table1|table4|...|fig6|chisq|hetero-chisq|specdec-chisq|prefix-identity|stream-identity|chunk-identity|router-identity|e2e-quality|all|stats> [--out DIR]\n\
+         repro        <table1|table4|...|fig6|chisq|hetero-chisq|specdec-chisq|prefix-identity|stream-identity|chunk-identity|router-identity|trace-identity|e2e-quality|all|stats> [--out DIR]\n\
+         trace        [--out DIR] [--replicas N] [--set trace_level=lifecycle|full]\n\
          bench-kernel [--set key=value ...]\n\
          selfcheck    [--set key=value ...]"
     );
@@ -295,6 +297,89 @@ fn cmd_repro(cfg: &Config, what: &str) -> Result<()> {
     Ok(())
 }
 
+/// Flight-recorder demonstration run (DESIGN.md §14): drive a
+/// deterministic multi-turn session workload through `Router<SimReplica>`
+/// — no artifacts needed — and export the event log as Chrome-trace JSON
+/// (`trace.json`, loadable at ui.perfetto.dev) plus per-replica canonical
+/// JSONL (`trace-r{i}.jsonl`).  Replays print bit-identical digests.
+fn cmd_trace(cfg: &Config) -> Result<()> {
+    use flashsampling::router::{sim_router, SimReplicaConfig};
+    use flashsampling::trace::TraceLevel;
+    // The subcommand exists to produce a trace, so `off` (the serving
+    // default) escalates to `full`; an explicit lifecycle/full sticks.
+    let level = if cfg.trace_level == TraceLevel::Off {
+        TraceLevel::Full
+    } else {
+        cfg.trace_level
+    };
+    let replicas = cfg.replicas.max(1);
+    let mut router = sim_router(
+        replicas,
+        cfg.dispatch_policy,
+        SimReplicaConfig { trace_level: level, ..Default::default() },
+    );
+    // Deterministic session workload (the router-identity shape): 6
+    // multi-turn sessions over 4 shared system prompts, 3 turns, one
+    // mid-run abort for event variety.
+    let sys = |s: u64| -> Vec<i32> {
+        (0..32).map(|j| ((s * 97 + j * 13 + 5) % 2048) as i32).collect()
+    };
+    for turn in 0..3u64 {
+        for k in 0..6u64 {
+            let session = (turn + k) % 6;
+            let mut p = sys(session % 4);
+            for t in 0..=turn {
+                p.extend((0..16u64).map(|j| {
+                    ((session * 59 + t * 31 + j * 7 + 11) % 2048) as i32
+                }));
+            }
+            let _ = router.submit(Request::new(
+                turn * 6 + session,
+                p,
+                SamplingParams { max_new_tokens: 4, ..Default::default() },
+            ))?;
+        }
+        if turn == 1 && router.owner_of(7).is_some() {
+            let _ = router.abort(7)?;
+        }
+        let mut idle = 0;
+        while router.pending() > 0 {
+            if router.step()?.is_empty() {
+                idle += 1;
+                if idle > 8 && router.reject_unschedulable().is_some() {
+                    idle = 0;
+                    continue;
+                }
+                anyhow::ensure!(idle < 64, "trace demo sim livelock");
+            } else {
+                idle = 0;
+            }
+        }
+    }
+    std::fs::create_dir_all(&cfg.out_dir)?;
+    let chrome = router.chrome_trace();
+    std::fs::write(cfg.out_dir.join("trace.json"), &chrome)?;
+    for (i, e) in router.replicas().iter().enumerate() {
+        std::fs::write(
+            cfg.out_dir.join(format!("trace-r{i}.jsonl")),
+            e.trace.to_jsonl(),
+        )?;
+        println!(
+            "[trace] replica {i}: {} events | digest {:#018x} | level {}",
+            e.trace.total(),
+            e.trace.digest(),
+            e.trace.level()
+        );
+    }
+    println!(
+        "[trace] wrote {}/trace.json ({} bytes) — load at ui.perfetto.dev \
+         or chrome://tracing — and per-replica trace-r*.jsonl",
+        cfg.out_dir.display(),
+        chrome.len()
+    );
+    Ok(())
+}
+
 /// A/B the fused vs baseline LM-head artifacts through PJRT with wall-clock
 /// timing (the measurable half of the paper's microbenchmarks; the modeled
 /// half lives in `repro`).
@@ -418,6 +503,7 @@ fn main() -> Result<()> {
             let what = positional.first().map(|s| s.as_str()).unwrap_or("all");
             cmd_repro(&cfg, what)
         }
+        "trace" => cmd_trace(&cfg),
         "bench-kernel" => cmd_bench_kernel(&cfg),
         "selfcheck" => cmd_selfcheck(&cfg),
         _ => usage(),

@@ -41,13 +41,47 @@ impl LatencyHistogram {
 
     /// Exact quantile (0.0..=1.0) in microseconds.
     pub fn quantile(&self, q: f64) -> Option<u64> {
+        self.quantiles(&[q]).map(|v| v[0])
+    }
+
+    /// Several exact quantiles from ONE sort of the sample pool — callers
+    /// wanting p50/p90/p99 together pay the `O(n log n)` once, not per
+    /// quantile.
+    pub fn quantiles(&self, qs: &[f64]) -> Option<Vec<u64>> {
         if self.samples.is_empty() {
             return None;
         }
         let mut s = self.samples.clone();
         s.sort_unstable();
-        let idx = ((s.len() - 1) as f64 * q).round() as usize;
-        Some(s[idx])
+        Some(
+            qs.iter()
+                .map(|&q| s[((s.len() - 1) as f64 * q).round() as usize])
+                .collect(),
+        )
+    }
+
+    /// Cumulative `(le, count)` pairs for the Prometheus `histogram`
+    /// exposition: one entry per finite bound plus the trailing `+Inf`
+    /// bucket (whose count equals [`Self::count`]).
+    pub fn cumulative_buckets(&self) -> Vec<(String, u64)> {
+        let mut acc = 0u64;
+        self.counts
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| {
+                acc += c;
+                let le = self
+                    .bounds
+                    .get(i)
+                    .map_or_else(|| "+Inf".to_string(), u64::to_string);
+                (le, acc)
+            })
+            .collect()
+    }
+
+    /// Sum of all recorded samples in µs (the histogram `_sum` row).
+    pub fn sum_us(&self) -> u64 {
+        self.samples.iter().sum()
     }
 
     pub fn median_us(&self) -> Option<u64> {
@@ -258,8 +292,11 @@ impl ServingMetrics {
         ] {
             let mut body = String::new();
             if !xs.is_empty() {
+                // One sort serves every quantile row of the family.
+                let mut sorted = xs.to_vec();
+                sorted.sort_unstable();
                 for q in [0.5, 0.9, 0.99] {
-                    let v = duration_quantile(xs, q).expect("non-empty");
+                    let v = sorted_quantile(&sorted, q);
                     body.push_str(&format!(
                         "flashsampling_{name}_seconds{} {:.6}\n",
                         lbl(&format!("quantile=\"{q}\"")),
@@ -277,6 +314,35 @@ impl ServingMetrics {
                 body,
             ));
         }
+        // Real Prometheus histogram over TTFT (µs): the fixed log-spaced
+        // bucket counts `LatencyHistogram` maintains, exported as the
+        // cumulative `_bucket{le=...}` series scrape backends aggregate
+        // across replicas (summaries can't be aggregated; buckets can).
+        let mut hist = LatencyHistogram::default();
+        for d in &self.ttft {
+            hist.record(*d);
+        }
+        let mut body = String::new();
+        for (le, c) in hist.cumulative_buckets() {
+            body.push_str(&format!(
+                "flashsampling_ttft_microseconds_bucket{} {c}\n",
+                lbl(&format!("le=\"{le}\""))
+            ));
+        }
+        body.push_str(&format!(
+            "flashsampling_ttft_microseconds_sum{} {}\n",
+            lbl(""),
+            hist.sum_us()
+        ));
+        body.push_str(&format!(
+            "flashsampling_ttft_microseconds_count{} {}\n",
+            lbl(""),
+            hist.count()
+        ));
+        fams.push((
+            "# TYPE flashsampling_ttft_microseconds histogram\n".into(),
+            body,
+        ));
         let mut names: Vec<&String> = self.counters.keys().collect();
         names.sort();
         let mut body = String::new();
@@ -287,6 +353,9 @@ impl ServingMetrics {
                 self.counters[name]
             ));
         }
+        // The named-counter family keeps its slot even when empty so the
+        // per-replica family lists stay zip-alignable; the renderers
+        // suppress the dangling TYPE header for empty bodies.
         fams.push(("# TYPE flashsampling_counter counter\n".into(), body));
         fams
     }
@@ -298,6 +367,7 @@ impl ServingMetrics {
     pub fn render_prometheus(&self) -> String {
         self.prometheus_families("")
             .into_iter()
+            .filter(|(_, body)| !body.is_empty())
             .map(|(header, body)| header + &body)
             .collect()
     }
@@ -320,6 +390,11 @@ pub fn render_prometheus_replicas(replicas: &[&ServingMetrics]) -> String {
     let mut out = String::new();
     let n_fams = per.first().map_or(0, Vec::len);
     for f in 0..n_fams {
+        // A family every replica leaves empty (e.g. no named counters
+        // anywhere) would expose a dangling TYPE header — skip it.
+        if per.iter().all(|fams| fams[f].1.is_empty()) {
+            continue;
+        }
         out.push_str(&per[0][f].0);
         for fams in &per {
             out.push_str(&fams[f].1);
@@ -345,8 +420,14 @@ fn duration_quantile(xs: &[Duration], q: f64) -> Option<Duration> {
     }
     let mut v = xs.to_vec();
     v.sort_unstable();
-    let idx = ((v.len() - 1) as f64 * q).round() as usize;
-    Some(v[idx])
+    Some(sorted_quantile(&v, q))
+}
+
+/// Nearest-rank quantile over an ALREADY-sorted, non-empty slice — lets
+/// the exposition renderer sort each latency pool once and read several
+/// quantiles from it.
+fn sorted_quantile(sorted: &[Duration], q: f64) -> Duration {
+    sorted[((sorted.len() - 1) as f64 * q).round() as usize]
 }
 
 #[cfg(test)]
@@ -363,7 +444,20 @@ mod tests {
         assert_eq!(h.median_us(), Some(300));
         assert_eq!(h.quantile(0.0), Some(100));
         assert_eq!(h.quantile(1.0), Some(500));
+        assert_eq!(h.quantiles(&[0.0, 0.5, 1.0]), Some(vec![100, 300, 500]));
         assert!((h.mean_us().unwrap() - 300.0).abs() < 1e-9);
+        // Cumulative exposition buckets: 100→le=128, 200→256, 300/400→512,
+        // 500→512; monotone and capped by the +Inf bucket == count.
+        let b = h.cumulative_buckets();
+        assert_eq!(b.len(), 27);
+        assert!(b.windows(2).all(|w| w[0].1 <= w[1].1));
+        assert_eq!(b.last().unwrap(), &("+Inf".to_string(), 5));
+        let at = |le: &str| b.iter().find(|(l, _)| l == le).unwrap().1;
+        assert_eq!(at("64"), 0);
+        assert_eq!(at("128"), 1);
+        assert_eq!(at("256"), 2);
+        assert_eq!(at("512"), 5);
+        assert_eq!(h.sum_us(), 1500);
     }
 
     #[test]
@@ -465,16 +559,50 @@ flashsampling_inter_token_seconds{quantile=\"0.5\"} 0.006000
 flashsampling_inter_token_seconds{quantile=\"0.9\"} 0.006000
 flashsampling_inter_token_seconds{quantile=\"0.99\"} 0.006000
 flashsampling_inter_token_seconds_count 2
+# TYPE flashsampling_ttft_microseconds histogram
+flashsampling_ttft_microseconds_bucket{le=\"1\"} 0
+flashsampling_ttft_microseconds_bucket{le=\"2\"} 0
+flashsampling_ttft_microseconds_bucket{le=\"4\"} 0
+flashsampling_ttft_microseconds_bucket{le=\"8\"} 0
+flashsampling_ttft_microseconds_bucket{le=\"16\"} 0
+flashsampling_ttft_microseconds_bucket{le=\"32\"} 0
+flashsampling_ttft_microseconds_bucket{le=\"64\"} 0
+flashsampling_ttft_microseconds_bucket{le=\"128\"} 0
+flashsampling_ttft_microseconds_bucket{le=\"256\"} 0
+flashsampling_ttft_microseconds_bucket{le=\"512\"} 0
+flashsampling_ttft_microseconds_bucket{le=\"1024\"} 0
+flashsampling_ttft_microseconds_bucket{le=\"2048\"} 0
+flashsampling_ttft_microseconds_bucket{le=\"4096\"} 0
+flashsampling_ttft_microseconds_bucket{le=\"8192\"} 0
+flashsampling_ttft_microseconds_bucket{le=\"16384\"} 1
+flashsampling_ttft_microseconds_bucket{le=\"32768\"} 3
+flashsampling_ttft_microseconds_bucket{le=\"65536\"} 3
+flashsampling_ttft_microseconds_bucket{le=\"131072\"} 3
+flashsampling_ttft_microseconds_bucket{le=\"262144\"} 3
+flashsampling_ttft_microseconds_bucket{le=\"524288\"} 3
+flashsampling_ttft_microseconds_bucket{le=\"1048576\"} 3
+flashsampling_ttft_microseconds_bucket{le=\"2097152\"} 3
+flashsampling_ttft_microseconds_bucket{le=\"4194304\"} 3
+flashsampling_ttft_microseconds_bucket{le=\"8388608\"} 3
+flashsampling_ttft_microseconds_bucket{le=\"16777216\"} 3
+flashsampling_ttft_microseconds_bucket{le=\"33554432\"} 3
+flashsampling_ttft_microseconds_bucket{le=\"+Inf\"} 3
+flashsampling_ttft_microseconds_sum 60000
+flashsampling_ttft_microseconds_count 3
 # TYPE flashsampling_counter counter
 flashsampling_counter{name=\"decode_cache_hits\"} 7
 flashsampling_counter{name=\"preempted\"} 2
 ";
         assert_eq!(m.render_prometheus(), expect);
-        // Empty metrics still render (no quantile lines, zero counts).
+        // Empty metrics still render (no quantile lines, zero counts) —
+        // except the named-counter family, whose TYPE header would dangle
+        // with no samples under it.
         let empty = ServingMetrics::default().render_prometheus();
         assert!(empty.contains("flashsampling_ttft_seconds_count 0"));
         assert!(empty.contains("flashsampling_prefix_hit_rate 0.000000"));
+        assert!(empty.contains("flashsampling_ttft_microseconds_count 0"));
         assert!(!empty.contains("quantile"));
+        assert!(!empty.contains("# TYPE flashsampling_counter counter"));
     }
 
     #[test]
@@ -498,8 +626,22 @@ flashsampling_counter{name=\"preempted\"} 2
             "flashsampling_ttft_seconds{replica=\"0\",quantile=\"0.5\"} 0.010000\n"
         ));
         assert!(multi.contains("flashsampling_ttft_seconds_count{replica=\"1\"} 0\n"));
+        // Histogram buckets carry the replica label before `le`.
+        assert!(multi.contains(
+            "flashsampling_ttft_microseconds_bucket{replica=\"0\",le=\"16384\"} 1\n"
+        ));
+        assert!(multi.contains(
+            "flashsampling_ttft_microseconds_bucket{replica=\"1\",le=\"+Inf\"} 0\n"
+        ));
         assert!(multi
             .contains("flashsampling_counter{replica=\"0\",name=\"preempted\"} 1\n"));
+        // No replica has named counters → the family header is suppressed
+        // in the zipped render too.
+        let empty_multi = render_prometheus_replicas(&[
+            &ServingMetrics::default(),
+            &ServingMetrics::default(),
+        ]);
+        assert!(!empty_multi.contains("# TYPE flashsampling_counter counter"));
         // A single replica renders unlabeled and byte-identical to the
         // instance method — `--replicas 1` scrapes don't change shape.
         assert_eq!(render_prometheus_replicas(&[&a]), a.render_prometheus());

@@ -11,6 +11,7 @@
 pub mod quality;
 pub mod router_identity;
 pub mod tables;
+pub mod trace_identity;
 
 use anyhow::Result;
 use std::path::Path;
@@ -25,10 +26,10 @@ pub const ALL: [&str; 13] = [
 /// artifacts and a few minutes, the rest — including the prefix-cache
 /// on/off identity check, the streaming-front-end identity/abort
 /// certificate, the chunked-prefill/swap-tier replay-identity
-/// certificate, and the multi-replica router identity/balance
-/// certificate — are fast and deterministic, so CI runs them as a smoke
-/// gate after `cargo test`).
-pub const STATS: [&str; 8] = [
+/// certificate, the multi-replica router identity/balance certificate,
+/// and the flight-recorder trace-vs-metrics certificate — are fast and
+/// deterministic, so CI runs them as a smoke gate after `cargo test`).
+pub const STATS: [&str; 9] = [
     "chisq",
     "hetero-chisq",
     "specdec-chisq",
@@ -36,6 +37,7 @@ pub const STATS: [&str; 8] = [
     "stream-identity",
     "chunk-identity",
     "router-identity",
+    "trace-identity",
     "e2e-quality",
 ];
 
@@ -63,6 +65,7 @@ pub fn run(id: &str, out_dir: &Path) -> Result<String> {
         "stream-identity" => quality::stream_identity()?,
         "chunk-identity" => quality::chunk_identity()?,
         "router-identity" => router_identity::router_identity()?,
+        "trace-identity" => trace_identity::trace_identity()?,
         "e2e-quality" => quality::e2e_quality(None)?,
         other => anyhow::bail!("unknown experiment id '{other}'"),
     };

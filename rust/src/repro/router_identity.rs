@@ -37,7 +37,7 @@ use crate::router::{
 use crate::testutil::Gen;
 
 /// One submission wave: (id, prompt, max_new_tokens).
-type Wave = Vec<(u64, Vec<i32>, usize)>;
+pub(crate) type Wave = Vec<(u64, Vec<i32>, usize)>;
 
 /// Session workload over shared system prompts, all-integer-deterministic
 /// (mirrored by `python/tests/sim_router_bench.py`): `sessions` multi-turn
@@ -51,7 +51,7 @@ type Wave = Vec<(u64, Vec<i32>, usize)>;
 /// accidental perfect affinity — and section 4's comparison would
 /// measure nothing.  Rotation models the arrival jitter any open-loop
 /// trace has.
-fn session_waves(sessions: u64, turns: usize, num_sys: u64) -> Vec<Wave> {
+pub(crate) fn session_waves(sessions: u64, turns: usize, num_sys: u64) -> Vec<Wave> {
     let sys_prompt = |s: u64| -> Vec<i32> {
         (0..32).map(|j| ((s * 97 + j * 13 + 5) % 2048) as i32).collect()
     };

@@ -63,6 +63,23 @@ pub trait EngineBackend {
     fn kv_unaccounted_blocks(&self) -> usize;
     /// Live prefix-cache attachment refs (0 at quiescence).
     fn prefix_attached_refs(&self) -> usize;
+    /// Router dispatch hook (DESIGN.md §14): record which policy sent a
+    /// request here and how warm the choice was.  Default no-op so
+    /// backends without a flight recorder compile unchanged.
+    fn trace_dispatch(
+        &mut self,
+        _id: u64,
+        _policy: &'static str,
+        _replica: usize,
+        _affinity_rank: usize,
+        _spill: bool,
+    ) {
+    }
+    /// The replica's flight recorder, when it has one (per-replica
+    /// tracks in the router's Chrome-trace export).
+    fn trace(&self) -> Option<&crate::trace::Trace> {
+        None
+    }
 }
 
 impl EngineBackend for Engine {
@@ -113,5 +130,26 @@ impl EngineBackend for Engine {
 
     fn prefix_attached_refs(&self) -> usize {
         Engine::prefix_attached_refs(self)
+    }
+
+    fn trace_dispatch(
+        &mut self,
+        id: u64,
+        policy: &'static str,
+        replica: usize,
+        affinity_rank: usize,
+        spill: bool,
+    ) {
+        if self.trace.on() {
+            self.trace.emit(
+                self.clock(),
+                id,
+                crate::trace::EventKind::Dispatch { policy, replica, affinity_rank, spill },
+            );
+        }
+    }
+
+    fn trace(&self) -> Option<&crate::trace::Trace> {
+        Some(&self.trace)
     }
 }

@@ -133,6 +133,19 @@ impl<B: EngineBackend> Router<B> {
         (total > 0).then(|| cached as f64 / total as f64)
     }
 
+    /// Merge every replica's flight recorder into one Chrome trace-event
+    /// JSON document (DESIGN.md §14): one `pid` per replica, one `tid`
+    /// per request.  Replicas without a recorder are skipped.
+    pub fn chrome_trace(&self) -> String {
+        let traces: Vec<(usize, &crate::trace::Trace)> = self
+            .replicas
+            .iter()
+            .enumerate()
+            .filter_map(|(i, r)| r.trace().map(|t| (i, t)))
+            .collect();
+        crate::trace::chrome_export(&traces)
+    }
+
     /// Prometheus exposition over all replicas: one TYPE header per
     /// family, samples tagged `replica="i"` (ISSUE satellite; DESIGN.md
     /// §13).  At one replica the output is byte-identical to the bare
@@ -156,6 +169,23 @@ impl<B: EngineBackend> Router<B> {
         let idx = pick_replica(self.policy, self.rr_next, &probes, home);
         let id = req.id;
         let handle = self.replicas[idx].submit(req)?;
+        // Flight-recorder dispatch record (DESIGN.md §14), landed in the
+        // chosen replica's own trace: which policy sent the request here,
+        // how many replicas were warmer (`affinity_rank` = probes with
+        // strictly more cached prefix tokens), and whether the choice
+        // spilled away from the warmest replica.
+        let policy = match self.policy {
+            DispatchPolicy::RoundRobin => "round_robin",
+            DispatchPolicy::LeastLoaded => "least_loaded",
+            DispatchPolicy::PrefixAffinity => "prefix_affinity",
+        };
+        let warmest = probes.iter().map(|p| p.cached_tokens).max().unwrap_or(0);
+        let affinity_rank = probes
+            .iter()
+            .filter(|p| p.cached_tokens > probes[idx].cached_tokens)
+            .count();
+        let spill = probes[idx].cached_tokens < warmest;
+        self.replicas[idx].trace_dispatch(id, policy, idx, affinity_rank, spill);
         self.owner.insert(id, idx);
         self.rr_next += 1;
         Ok(handle)

@@ -39,6 +39,7 @@ use crate::coordinator::{Completion, EngineError, FinishReason, Request};
 use crate::kvcache::{KvCacheConfig, KvCacheManager};
 use crate::metrics::ServingMetrics;
 use crate::prefixcache::BlockKv;
+use crate::trace::{EventKind, Trace, TraceLevel};
 
 use super::backend::EngineBackend;
 use super::policy::{DispatchPolicy, ReplicaProbe};
@@ -57,6 +58,8 @@ pub struct SimReplicaConfig {
     pub prefill_b: usize,
     /// Max sequences per decode step (the engine's largest decode bucket).
     pub decode_max_b: usize,
+    /// Flight-recorder level (`Off` by default, as in the engine config).
+    pub trace_level: TraceLevel,
 }
 
 impl Default for SimReplicaConfig {
@@ -68,6 +71,7 @@ impl Default for SimReplicaConfig {
             max_concurrency: 8,
             prefill_b: 4,
             decode_max_b: 8,
+            trace_level: TraceLevel::Off,
         }
     }
 }
@@ -101,6 +105,14 @@ pub struct SimReplica {
     /// Weighted busy time (token units — the bench's latency clock).
     wtime: u64,
     pub metrics: ServingMetrics,
+    /// Flight recorder: per-replica lifecycle events (submit / prefill /
+    /// decode / finish / dispatch), so `Router<SimReplica>` certifies the
+    /// same trace contract `Router<Engine>` exports.
+    pub trace: Trace,
+    /// Batch counter standing in for the engine's Philox step counter
+    /// (one per prefill batch, one per decode step) — the `cstep`
+    /// coordinate on this replica's token events.
+    cstep: u32,
 }
 
 impl SimReplica {
@@ -110,6 +122,7 @@ impl SimReplica {
             num_blocks: cfg.num_blocks,
             prefix_caching: cfg.prefix_caching,
         });
+        let trace = Trace::new(cfg.trace_level);
         Self {
             cfg,
             kv,
@@ -119,6 +132,8 @@ impl SimReplica {
             clock: 0,
             wtime: 0,
             metrics: ServingMetrics::default(),
+            trace,
+            cstep: 0,
         }
     }
 
@@ -160,6 +175,22 @@ impl SimReplica {
         if let Some(t) = ttft {
             self.metrics.ttft.push(t);
         }
+        if reason == FinishReason::Aborted {
+            self.metrics.bump("aborted", 1);
+        }
+        if self.trace.on() {
+            let name = match reason {
+                FinishReason::MaxTokens => "max_tokens",
+                FinishReason::StopToken => "stop_token",
+                FinishReason::Rejected => "rejected",
+                FinishReason::Aborted => "aborted",
+            };
+            self.trace.emit(
+                self.clock,
+                c.id,
+                EventKind::Finish { reason: name, tokens: c.tokens.len() as u64 },
+            );
+        }
         if let Some(st) = self.streams.remove(&c.id) {
             if Arc::strong_count(&st) > 1 {
                 let mut g = st.lock().expect("stream mutex");
@@ -194,7 +225,9 @@ impl SimReplica {
         let mut cost = 1u64;
         let mut done = Vec::new();
         let mut admitted = Vec::new();
-        for mut s in batch {
+        let cstep = self.cstep;
+        self.cstep += 1;
+        for (row, mut s) in batch.into_iter().enumerate() {
             let attach = self.kv.register_with_prefix(s.id, &s.prompt)?;
             self.metrics.prefill_tokens += s.prompt.len() as u64;
             self.metrics.cached_prefill_tokens += attach.cached_tokens as u64;
@@ -202,7 +235,30 @@ impl SimReplica {
             self.kv.insert_prefix(s.id, &s.prompt, |_| BlockKv::default())?;
             // Prefill samples the sequence's first token (engine
             // semantics: TTFT lands at prefill completion).
-            s.generated.push(sim_token(s.id, 0));
+            let tok = sim_token(s.id, 0);
+            s.generated.push(tok);
+            self.metrics.tokens_generated += 1;
+            if self.trace.on() {
+                if attach.cached_tokens > 0 {
+                    self.trace.emit(
+                        self.clock,
+                        s.id,
+                        EventKind::RadixAttach {
+                            tokens: attach.cached_tokens as u64,
+                        },
+                    );
+                }
+                self.trace.emit(
+                    self.clock,
+                    s.id,
+                    EventKind::Prefill { prompt_len: s.prompt.len() },
+                );
+                self.trace.emit(
+                    self.clock,
+                    s.id,
+                    EventKind::FirstToken { row, cstep, token: tok },
+                );
+            }
             admitted.push(s);
         }
         self.wtime += cost;
@@ -222,9 +278,11 @@ impl SimReplica {
     fn do_decode(&mut self) -> Result<Vec<Completion>, EngineError> {
         let b = self.running.len().min(self.cfg.decode_max_b);
         self.wtime += 1;
+        let cstep = self.cstep;
+        self.cstep += 1;
         let mut done = Vec::new();
         let mut emitted = Vec::new();
-        for s in self.running.iter_mut().take(b) {
+        for (row, s) in self.running.iter_mut().take(b).enumerate() {
             if !self.kv.append_token(s.id)? {
                 // Pool exhausted mid-decode: the sim regime sizes pools
                 // to make this unreachable (no preemption mirror).
@@ -235,9 +293,17 @@ impl SimReplica {
             let idx = s.generated.len();
             let tok = sim_token(s.id, idx);
             s.generated.push(tok);
-            emitted.push((s.id, idx, tok));
+            emitted.push((s.id, row, idx, tok));
         }
-        for (id, idx, tok) in emitted {
+        for (id, row, idx, tok) in emitted {
+            self.metrics.tokens_generated += 1;
+            if self.trace.on() {
+                self.trace.emit(
+                    self.clock,
+                    id,
+                    EventKind::DecodeToken { row, cstep, token: tok },
+                );
+            }
             self.emit_token(id, idx, tok);
         }
         let mut i = 0;
@@ -260,12 +326,29 @@ impl EngineBackend for SimReplica {
             return Err(EngineError::DuplicateRequestId { id: req.id });
         }
         if req.prompt.is_empty() {
+            if self.trace.on() {
+                self.trace.emit(
+                    self.clock,
+                    req.id,
+                    EventKind::Reject { reason: "empty prompt".into() },
+                );
+            }
             return Err(EngineError::AdmissionRejected {
                 id: req.id,
                 reason: "empty prompt".into(),
             });
         }
         let id = req.id;
+        if self.trace.on() {
+            self.trace.emit(
+                self.clock,
+                id,
+                EventKind::Submit {
+                    prompt_len: req.prompt.len(),
+                    max_new: req.params.max_new_tokens.max(1),
+                },
+            );
+        }
         let state = Arc::new(Mutex::new(StreamState::default()));
         self.streams.insert(id, state.clone());
         self.waiting.push_back(SimSeq {
@@ -355,6 +438,27 @@ impl EngineBackend for SimReplica {
 
     fn prefix_attached_refs(&self) -> usize {
         self.kv.prefix_attached_refs()
+    }
+
+    fn trace_dispatch(
+        &mut self,
+        id: u64,
+        policy: &'static str,
+        replica: usize,
+        affinity_rank: usize,
+        spill: bool,
+    ) {
+        if self.trace.on() {
+            self.trace.emit(
+                self.clock,
+                id,
+                EventKind::Dispatch { policy, replica, affinity_rank, spill },
+            );
+        }
+    }
+
+    fn trace(&self) -> Option<&Trace> {
+        Some(&self.trace)
     }
 }
 

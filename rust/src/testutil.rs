@@ -88,7 +88,9 @@ pub mod schedsim {
     };
     use crate::coordinator::scheduler::{plan, Plan, SchedulerConfig};
     use crate::kvcache::{KvCacheConfig, KvCacheManager};
+    use crate::metrics::ServingMetrics;
     use crate::sampling::philox::{self, Key};
+    use crate::trace::{EventKind, Trace, TraceLevel};
 
     /// One scripted request.
     #[derive(Clone, Debug)]
@@ -152,6 +154,15 @@ pub mod schedsim {
         /// request currently lives (waiting / partial / running /
         /// swapped).
         pub force_abort: Vec<(u64, u64)>,
+        /// Speculative-decode draft depth (0 = ordinary decode).  When
+        /// set, decode batches run the burst mirror: `k + 1` consumption
+        /// steps per batch, each row emitting 1..=k+1 tokens anchored at
+        /// the burst's first step — the shape behind the engine's
+        /// `SpecBurst` trace events.
+        pub spec_k: usize,
+        /// Flight-recorder level for [`Sim::trace`]; `Off` (the default)
+        /// records nothing, mirroring the engine's config key.
+        pub trace_level: TraceLevel,
     }
 
     impl SimConfig {
@@ -176,6 +187,8 @@ pub mod schedsim {
                 max_steps: 20_000,
                 force_preempt: Vec::new(),
                 force_abort: Vec::new(),
+                spec_k: 0,
+                trace_level: TraceLevel::Off,
             }
         }
     }
@@ -204,6 +217,16 @@ pub mod schedsim {
         pub chunk_windows: u64,
         pub swap_out_blocks: u64,
         pub swap_in_blocks: u64,
+        /// Engine-shaped serving counters, bumped at the same sites the
+        /// engine bumps them — the reference side of the trace-vs-metrics
+        /// certificate (`repro trace-identity`).
+        pub metrics: ServingMetrics,
+        /// Flight recorder fed at the same sites as the engine's; with
+        /// [`SimConfig::trace_level`] at `Off` every site is one branch.
+        pub trace: Trace,
+        /// Baseline for per-step KV-delta events (alloc / free / CoW /
+        /// radix-evict), as in `Engine::emit_kv_deltas`.
+        kv_base: [u64; 4],
     }
 
     /// Run a script to quiescence and return the outcome map.  Panics on
@@ -227,6 +250,7 @@ pub mod schedsim {
             });
             kv.set_swap_capacity(cfg.swap_blocks);
             let k = Key::from_seed(cfg.seed);
+            let trace = Trace::new(cfg.trace_level);
             Self {
                 key: [k.lo, k.hi],
                 cfg,
@@ -241,6 +265,9 @@ pub mod schedsim {
                 chunk_windows: 0,
                 swap_out_blocks: 0,
                 swap_in_blocks: 0,
+                metrics: ServingMetrics::default(),
+                trace,
+                kv_base: [0; 4],
             }
         }
 
@@ -301,13 +328,38 @@ pub mod schedsim {
                 },
             );
             // Mirror of the engine's submit-time rejection: oversized
-            // prompts are only servable with chunking on.
+            // prompts are only servable with chunking on.  As in the
+            // engine, a submit-time rejection traces `reject` (no
+            // `submit`, no `finish` — the request never completes).
             let max_t = *self.cfg.sched.prefill_t_buckets.last().unwrap();
             if self.cfg.sched.prefill_chunk_tokens == 0 && r.prompt_len > max_t
             {
+                if self.trace.on() {
+                    self.trace.emit(
+                        self.clock,
+                        r.id,
+                        EventKind::Reject {
+                            reason: format!(
+                                "prompt of {} tokens exceeds the largest \
+                                 prefill bucket {max_t}",
+                                r.prompt_len
+                            ),
+                        },
+                    );
+                }
                 self.outcomes.get_mut(&r.id).unwrap().finish =
                     Some(Finish::Rejected);
                 return;
+            }
+            if self.trace.on() {
+                self.trace.emit(
+                    self.clock,
+                    r.id,
+                    EventKind::Submit {
+                        prompt_len: r.prompt_len,
+                        max_new: r.max_new_tokens,
+                    },
+                );
             }
             let mut s = Sequence::new(Request::new(
                 r.id,
@@ -338,7 +390,34 @@ pub mod schedsim {
                 |s| self.kv.cached_prefix_tokens(&s.prompt),
                 self.clock,
             );
-            match p {
+            if self.trace.full() {
+                let (outcome, batch) = match &p {
+                    Plan::ChunkPrefill { .. } => ("chunk_prefill", 1),
+                    Plan::Prefill { seq_ids, .. } => ("prefill", seq_ids.len()),
+                    Plan::Decode { seq_ids, .. } => ("decode", seq_ids.len()),
+                    Plan::Idle => ("idle", 0),
+                };
+                self.trace
+                    .emit(self.clock, 0, EventKind::Plan { outcome, batch });
+                let aging = self.cfg.sched.aging_steps;
+                if aging > 0 {
+                    let promoted = self
+                        .waiting
+                        .iter()
+                        .filter(|s| {
+                            self.clock.saturating_sub(s.submitted_step) >= aging
+                        })
+                        .count();
+                    if promoted > 0 {
+                        self.trace.emit(
+                            self.clock,
+                            0,
+                            EventKind::Promote { count: promoted as u64 },
+                        );
+                    }
+                }
+            }
+            let progressed = match p {
                 Plan::ChunkPrefill { seq_id } => {
                     self.do_chunk(seq_id);
                     false
@@ -348,6 +427,40 @@ pub mod schedsim {
                 Plan::Idle => {
                     self.wtime += 1;
                     false
+                }
+            };
+            if self.trace.full() {
+                self.emit_kv_deltas();
+            }
+            progressed
+        }
+
+        /// Mirror of `Engine::emit_kv_deltas`: `Full`-level per-step
+        /// deltas of the pool's monotone bookkeeping counters.
+        fn emit_kv_deltas(&mut self) {
+            let now = [
+                self.kv.stat_alloc_blocks(),
+                self.kv.stat_freed_blocks(),
+                self.kv.stat_cow_forks(),
+                self.kv.evicted_blocks(),
+            ];
+            let d: Vec<u64> = now
+                .iter()
+                .zip(self.kv_base.iter())
+                .map(|(n, b)| n.saturating_sub(*b))
+                .collect();
+            self.kv_base = now;
+            for (i, kind) in [
+                EventKind::KvAlloc { blocks: d[0] },
+                EventKind::KvFree { blocks: d[1] },
+                EventKind::KvCow { blocks: d[2] },
+                EventKind::RadixEvict { blocks: d[3] },
+            ]
+            .into_iter()
+            .enumerate()
+            {
+                if d[i] > 0 {
+                    self.trace.emit(self.clock, 0, kind);
                 }
             }
         }
@@ -405,6 +518,20 @@ pub mod schedsim {
                 };
                 if let Ok(Some(n)) = self.kv.swap_out(id) {
                     self.swap_out_blocks += n as u64;
+                    self.metrics.swap_out_blocks += n as u64;
+                    self.metrics.bump("swapped_out_seqs", 1);
+                    if self.trace.on() {
+                        self.trace.emit(
+                            self.clock,
+                            id,
+                            EventKind::Preempt { kind: "swap" },
+                        );
+                        self.trace.emit(
+                            self.clock,
+                            id,
+                            EventKind::SwapOut { blocks: n as u64 },
+                        );
+                    }
                     let mut s = self.running.remove(ri);
                     s.state = SeqState::Preempted;
                     self.swapped.push(s);
@@ -422,6 +549,14 @@ pub mod schedsim {
                 match self.kv.swap_in(id).expect("ledger consistent") {
                     Some(n) => {
                         self.swap_in_blocks += n as u64;
+                        self.metrics.swap_in_blocks += n as u64;
+                        if self.trace.on() {
+                            self.trace.emit(
+                                self.clock,
+                                id,
+                                EventKind::SwapIn { blocks: n as u64 },
+                            );
+                        }
                         let mut s = self.swapped.remove(0);
                         let table_len =
                             self.kv.table(id).map_or(0, |t| t.len());
@@ -443,6 +578,17 @@ pub mod schedsim {
                                 .expect("registered")
                                 .expect("capacity was just vacated");
                             self.swap_out_blocks += n as u64;
+                            self.metrics.swap_out_blocks += n as u64;
+                            // Park-back, not a preemption: no `preempt`
+                            // event, no `swapped_out_seqs` bump (the
+                            // engine's split exactly).
+                            if self.trace.on() {
+                                self.trace.emit(
+                                    self.clock,
+                                    id,
+                                    EventKind::SwapOut { blocks: n as u64 },
+                                );
+                            }
                             self.swapped.insert(0, s);
                             break;
                         }
@@ -461,7 +607,22 @@ pub mod schedsim {
             let mut s = self.waiting.remove(idx).unwrap();
             if s.prefilled_tokens == 0 {
                 match self.kv.register_with_prefix(s.id, &s.prompt) {
-                    Ok(a) => s.prefilled_tokens = a.cached_tokens,
+                    Ok(a) => {
+                        s.prefilled_tokens = a.cached_tokens;
+                        if a.cached_tokens > 0 {
+                            self.metrics.cached_prefill_tokens +=
+                                a.cached_tokens as u64;
+                            if self.trace.on() {
+                                self.trace.emit(
+                                    self.clock,
+                                    s.id,
+                                    EventKind::RadixAttach {
+                                        tokens: a.cached_tokens as u64,
+                                    },
+                                );
+                            }
+                        }
+                    }
                     Err(_) => {
                         self.waiting.push_front(s);
                         return;
@@ -478,6 +639,14 @@ pub mod schedsim {
             );
             s.prefilled_tokens += take;
             self.chunk_windows += 1;
+            self.metrics.chunked_prefill_steps += 1;
+            if self.trace.on() {
+                self.trace.emit(
+                    self.clock,
+                    s.id,
+                    EventKind::ChunkWindow { take, prefilled: s.prefilled_tokens },
+                );
+            }
             self.wtime += take.max(1) as u64;
             // No consumption step: chunk windows draw no Philox noise.
             self.waiting.push_front(s);
@@ -501,7 +670,36 @@ pub mod schedsim {
             }
         }
 
+        /// Mirror of `Engine::complete_seq`'s accounting: one completion
+        /// per finish, the same counter splits, and the same `finish`
+        /// reason names the engine's trace carries.
         fn finish(&mut self, s: Sequence, f: Finish) {
+            self.metrics.requests_completed += 1;
+            let reason = match f {
+                Finish::Done => "max_tokens",
+                Finish::Aborted => {
+                    self.metrics.bump("aborted", 1);
+                    "aborted"
+                }
+                Finish::Rejected => "rejected",
+                // Finish-early preemption completes as `max_tokens` with
+                // the `preempted` counter bumped at the preempt site.
+                Finish::Preempted => "max_tokens",
+                Finish::Abandoned => {
+                    self.metrics.bump("swap_abandoned", 1);
+                    "max_tokens"
+                }
+            };
+            if self.trace.on() {
+                self.trace.emit(
+                    self.clock,
+                    s.id,
+                    EventKind::Finish {
+                        reason,
+                        tokens: s.generated.len() as u64,
+                    },
+                );
+            }
             self.outcomes.get_mut(&s.id).expect("submitted").finish = Some(f);
         }
 
@@ -511,10 +709,32 @@ pub mod schedsim {
             match self.kv.swap_out(s.id).expect("registered") {
                 Some(n) => {
                     self.swap_out_blocks += n as u64;
+                    self.metrics.swap_out_blocks += n as u64;
+                    self.metrics.bump("swapped_out_seqs", 1);
+                    if self.trace.on() {
+                        self.trace.emit(
+                            self.clock,
+                            s.id,
+                            EventKind::Preempt { kind: "swap" },
+                        );
+                        self.trace.emit(
+                            self.clock,
+                            s.id,
+                            EventKind::SwapOut { blocks: n as u64 },
+                        );
+                    }
                     s.state = SeqState::Preempted;
                     self.swapped.push(s);
                 }
                 None => {
+                    self.metrics.bump("preempted", 1);
+                    if self.trace.on() {
+                        self.trace.emit(
+                            self.clock,
+                            s.id,
+                            EventKind::Preempt { kind: "recompute" },
+                        );
+                    }
                     self.kv.release(s.id).expect("registered");
                     self.finish(s, Finish::Preempted);
                 }
@@ -542,6 +762,19 @@ pub mod schedsim {
                 }
                 match self.kv.register_with_prefix(s.id, &s.prompt) {
                     Ok(a) => {
+                        if a.cached_tokens > 0 {
+                            self.metrics.cached_prefill_tokens +=
+                                a.cached_tokens as u64;
+                            if self.trace.on() {
+                                self.trace.emit(
+                                    self.clock,
+                                    s.id,
+                                    EventKind::RadixAttach {
+                                        tokens: a.cached_tokens as u64,
+                                    },
+                                );
+                            }
+                        }
                         cached.push(a.cached_tokens);
                         admitted.push(s);
                     }
@@ -571,6 +804,20 @@ pub mod schedsim {
             for (row, mut s) in admitted.into_iter().enumerate() {
                 let tok = coord(key, row, cstep, s.id);
                 Self::emit(&mut self.outcomes, self.wtime, &mut s, tok, row, cstep);
+                self.metrics.prefill_tokens += s.prompt.len() as u64;
+                self.metrics.tokens_generated += 1;
+                if self.trace.on() {
+                    self.trace.emit(
+                        self.clock,
+                        s.id,
+                        EventKind::Prefill { prompt_len: s.prompt.len() },
+                    );
+                    self.trace.emit(
+                        self.clock,
+                        s.id,
+                        EventKind::FirstToken { row, cstep, token: tok as i32 },
+                    );
+                }
                 if s.generated.len() >= s.params.max_new_tokens {
                     self.kv.release(s.id).expect("registered");
                     self.finish(s, Finish::Done);
@@ -585,6 +832,9 @@ pub mod schedsim {
         }
 
         fn do_decode(&mut self, seq_ids: &[u64]) -> bool {
+            if self.cfg.spec_k > 0 {
+                return self.do_spec_decode(seq_ids);
+            }
             let rows: Vec<usize> = seq_ids
                 .iter()
                 .map(|id| {
@@ -599,15 +849,120 @@ pub mod schedsim {
             self.cstep += 1;
             let key = self.key;
             let wtime = self.wtime;
+            let clock = self.clock;
             let mut retired: Vec<(usize, Option<Finish>)> = Vec::new();
             for (slot, &ri) in rows.iter().enumerate() {
                 let s = &mut self.running[ri];
-                let tok = coord(key, slot, cstep, s.id);
+                let id = s.id;
+                let tok = coord(key, slot, cstep, id);
                 Self::emit(&mut self.outcomes, wtime, s, tok, slot, cstep);
-                if s.generated.len() >= s.params.max_new_tokens {
+                let done = s.generated.len() >= s.params.max_new_tokens;
+                self.metrics.tokens_generated += 1;
+                if self.trace.on() {
+                    self.trace.emit(
+                        clock,
+                        id,
+                        EventKind::DecodeToken {
+                            row: slot,
+                            cstep,
+                            token: tok as i32,
+                        },
+                    );
+                }
+                if done {
                     retired.push((ri, Some(Finish::Done)));
-                } else if !self.kv.append_token(s.id).expect("registered") {
+                } else if !self.kv.append_token(id).expect("registered") {
                     retired.push((ri, None));
+                }
+            }
+            retired.sort_by(|a, b| b.0.cmp(&a.0));
+            for (ri, f) in retired {
+                let s = self.running.remove(ri);
+                match f {
+                    Some(f) => {
+                        self.kv.release(s.id).expect("registered");
+                        self.finish(s, f);
+                    }
+                    None => self.preempt_or_finish(s),
+                }
+            }
+            true
+        }
+
+        /// Speculative-decode mirror (`spec_k > 0`): one burst per row
+        /// per decode batch.  The engine runs `k + 1` verify passes —
+        /// `k + 1` Philox consumption steps — and each row emits
+        /// `1..=k+1` tokens at coordinates anchored on the burst's first
+        /// step, so the sim advances `cstep` by `k + 1` per batch and the
+        /// accepted count is itself a deterministic Philox draw (replays
+        /// are bit-identical).  Bookkeeping mirrors the engine's:
+        /// `spec_draft_tokens` counts planned drafts, `spec_accepted` /
+        /// `emitted` count what actually landed, and each non-final token
+        /// appends KV (pool exhaustion preempts mid-burst).
+        fn do_spec_decode(&mut self, seq_ids: &[u64]) -> bool {
+            let rows: Vec<usize> = seq_ids
+                .iter()
+                .map(|id| {
+                    self.running
+                        .iter()
+                        .position(|s| s.id == *id)
+                        .expect("planned sequence vanished")
+                })
+                .collect();
+            self.wtime += 1;
+            let cstep0 = self.cstep;
+            self.cstep += self.cfg.spec_k as u32 + 1;
+            let key = self.key;
+            let wtime = self.wtime;
+            let clock = self.clock;
+            let mut retired: Vec<(usize, Option<Finish>)> = Vec::new();
+            for (slot, &ri) in rows.iter().enumerate() {
+                let (id, remaining) = {
+                    let s = &self.running[ri];
+                    (s.id, s.params.max_new_tokens - s.generated.len())
+                };
+                let drafted = self.cfg.spec_k.min(remaining.saturating_sub(1));
+                let planned = if drafted == 0 {
+                    1
+                } else {
+                    coord(key, slot, cstep0, id) as usize % (drafted + 1) + 1
+                };
+                let mut emitted = 0usize;
+                let mut fate: Option<Option<Finish>> = None;
+                for t in 0..planned {
+                    let cs = cstep0 + t as u32;
+                    let tok = coord(key, slot, cs, id);
+                    let s = &mut self.running[ri];
+                    Self::emit(&mut self.outcomes, wtime, s, tok, slot, cs);
+                    emitted += 1;
+                    if s.generated.len() >= s.params.max_new_tokens {
+                        fate = Some(Some(Finish::Done));
+                        break;
+                    }
+                    if !self.kv.append_token(id).expect("registered") {
+                        fate = Some(None);
+                        break;
+                    }
+                }
+                self.metrics.tokens_generated += emitted as u64;
+                self.metrics.spec_tokens_per_step.push(emitted);
+                self.metrics.bump("spec_draft_tokens", drafted as u64);
+                self.metrics.bump("spec_accepted_tokens", emitted as u64 - 1);
+                if self.trace.on() {
+                    self.trace.emit(
+                        clock,
+                        id,
+                        EventKind::SpecBurst {
+                            row: slot,
+                            cstep: cstep0,
+                            drafted: drafted as u64,
+                            accepted: emitted as u64 - 1,
+                            emitted: emitted as u64,
+                        },
+                    );
+                }
+                if let Some(f) = fate {
+                    retired.push((ri, f));
                 }
             }
             retired.sort_by(|a, b| b.0.cmp(&a.0));

@@ -1,0 +1,754 @@
+//! Flight-recorder tracing: a step-clock event log across the serving
+//! stack (DESIGN.md §14).
+//!
+//! The recorder is a bounded ring buffer of typed [`TraceEvent`]s keyed
+//! by the logical step clock ([`crate::coordinator::Engine::clock`]),
+//! the request id, and — for token events — the Philox `(row, cstep)`
+//! coordinate the token was sampled at.  Because the whole stack is
+//! deterministic in those coordinates, the trace is not just a debugging
+//! aid: it is a *replayable artifact*.  Two runs of the same closed-loop
+//! script produce byte-identical event streams, and `repro
+//! trace-identity` certifies both that identity and that counters
+//! derived from the event log exactly reproduce [`ServingMetrics`] —
+//! the metrics layer can no longer silently drift from what the engine
+//! actually did.
+//!
+//! Design constraints, in order:
+//!
+//! * **Off is free.**  `trace_level = off` (the default) costs one
+//!   predictable branch per event site — the same trick the token
+//!   stream uses (`Arc::strong_count` in `coordinator/stream.rs`).
+//!   Call sites are written `if trace.on() { trace.emit(..) }` (or
+//!   `trace.full()` for engine-scoped events), so the off path never
+//!   constructs an event.
+//! * **Eviction never changes the certificate.**  The ring holds the
+//!   most recent [`RING_CAP`] events for export, but the
+//!   [FNV-1a](https://en.wikipedia.org/wiki/Fowler%E2%80%93Noll%E2%80%93Vo_hash_function)
+//!   digest and the [`DerivedCounters`] are folded incrementally at
+//!   emit time over the *canonical JSONL line* of every event — the
+//!   digest equals a hash of the full stream no matter how small the
+//!   ring is.
+//! * **No wall clock anywhere.**  Events carry only logical time (the
+//!   step clock) and Philox coordinates, so every field is
+//!   deterministic and the digest is replay-stable by construction.
+//!   Wall-clock attribution stays in [`ServingMetrics`].
+//!
+//! Exporters: [`Trace::to_jsonl`] (one canonical JSON object per line)
+//! and [`Trace::to_chrome_json`] / [`chrome_export`] — Chrome
+//! trace-event JSON loadable in Perfetto (`ui.perfetto.dev`), with one
+//! track per request (`tid` = request id) and one process per replica
+//! (`pid` = replica index); `ts` is the logical step clock expressed in
+//! microseconds, so one engine step renders as 1 µs.
+//!
+//! [`ServingMetrics`]: crate::metrics::ServingMetrics
+
+use std::collections::VecDeque;
+
+/// Ring capacity (events) — small enough that an always-on lifecycle
+/// trace is bounded memory, large enough to hold the full tail of the
+/// repro scripts.  Digest and derived counters cover *all* events
+/// regardless (see module docs).
+pub const RING_CAP: usize = 4096;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// How much the recorder captures.  Parsed from the `trace_level`
+/// config key.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TraceLevel {
+    /// No events; every site costs one branch (the default).
+    #[default]
+    Off,
+    /// Request-scoped lifecycle events: submit/reject, chunk windows,
+    /// prefill, per-token decode, spec bursts, swap in/out, preempt,
+    /// finish, router dispatch.
+    Lifecycle,
+    /// Lifecycle plus engine-scoped events: scheduler plan outcomes,
+    /// aging promotions, KV alloc/free/CoW deltas, radix attach/evict.
+    Full,
+}
+
+impl TraceLevel {
+    pub fn name(self) -> &'static str {
+        match self {
+            TraceLevel::Off => "off",
+            TraceLevel::Lifecycle => "lifecycle",
+            TraceLevel::Full => "full",
+        }
+    }
+}
+
+impl std::str::FromStr for TraceLevel {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "off" => Ok(TraceLevel::Off),
+            "lifecycle" => Ok(TraceLevel::Lifecycle),
+            "full" => Ok(TraceLevel::Full),
+            other => Err(format!(
+                "unknown trace_level '{other}' (off | lifecycle | full)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for TraceLevel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One typed trace event.  Fields are named for the canonical JSONL
+/// serialization ([`TraceEvent::canonical_line`]) that both exporters
+/// and the digest are defined over; `python/tests/sim_trace_bench.py`
+/// mirrors the format byte-for-byte.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EventKind {
+    /// Request accepted into the waiting queue.
+    Submit { prompt_len: usize, max_new: usize },
+    /// Request refused at the front door (admission cause) or rejected
+    /// as unschedulable by the open-loop backstop.
+    Reject { reason: String },
+    /// One chunked-prefill window: `take` prompt tokens consumed,
+    /// `prefilled` prompt tokens resident after the window.
+    ChunkWindow { take: usize, prefilled: usize },
+    /// Whole-prompt (or final-suffix) prefill for one row of a prefill
+    /// batch.  `prompt_len` is the FULL prompt length — the quantity
+    /// `prefill_tokens` counts — even when only a suffix was computed
+    /// (the skipped prefix is a separate [`EventKind::RadixAttach`]).
+    Prefill { prompt_len: usize },
+    /// First sampled token of a request, with its Philox coordinate.
+    FirstToken { row: usize, cstep: u32, token: i32 },
+    /// One decode-step token, with its Philox coordinate.
+    DecodeToken { row: usize, cstep: u32, token: i32 },
+    /// One speculative burst for one row: `drafted` proposed tokens,
+    /// `accepted` of them kept, `emitted` total tokens released
+    /// (accepted + the corrected/bonus token).  `cstep` is the Philox
+    /// step of the burst's first inner pass.
+    SpecBurst { row: usize, cstep: u32, drafted: u64, accepted: u64, emitted: u64 },
+    /// Blocks swapped out to the host ledger for this request.
+    SwapOut { blocks: u64 },
+    /// Blocks swapped back in for this request.
+    SwapIn { blocks: u64 },
+    /// A preemption decision: `kind` is `"swap"` (victim parked in the
+    /// swap tier — paired with a [`EventKind::SwapOut`]) or
+    /// `"recompute"` (legacy finish-early).  Swap-in park-backs emit
+    /// `swap_out` WITHOUT a `preempt`, mirroring the metrics split
+    /// between `swapped_out_seqs`/`preempted` and `swap_out_blocks`.
+    Preempt { kind: &'static str },
+    /// Terminal event: finish reason plus tokens generated.
+    Finish { reason: &'static str, tokens: u64 },
+    /// Router placement decision.  `affinity_rank` counts replicas
+    /// whose probe reported strictly more cached prefix tokens than the
+    /// chosen one (0 = the warmest replica won); `spill` is true when a
+    /// warmer replica existed but was not chosen.
+    Dispatch { policy: &'static str, replica: usize, affinity_rank: usize, spill: bool },
+    /// Scheduler plan outcome for one step (full level).
+    Plan { outcome: &'static str, batch: usize },
+    /// Anti-starvation aging promotions applied this step (full level).
+    Promote { count: u64 },
+    /// KV blocks allocated this step (full level; per-step delta).
+    KvAlloc { blocks: u64 },
+    /// KV blocks freed this step (full level; per-step delta).
+    KvFree { blocks: u64 },
+    /// Copy-on-write block forks this step (full level; per-step
+    /// delta).
+    KvCow { blocks: u64 },
+    /// Prefix-cache tokens attached from the radix tree for one
+    /// request whose prefill compute was actually skipped — the
+    /// quantity `cached_prefill_tokens` counts.  Request-scoped, so
+    /// lifecycle level.
+    RadixAttach { tokens: u64 },
+    /// Radix-cache blocks evicted this step (full level; per-step
+    /// delta).
+    RadixEvict { blocks: u64 },
+}
+
+impl EventKind {
+    /// Event name in the canonical serialization.
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::Submit { .. } => "submit",
+            EventKind::Reject { .. } => "reject",
+            EventKind::ChunkWindow { .. } => "chunk_window",
+            EventKind::Prefill { .. } => "prefill",
+            EventKind::FirstToken { .. } => "first_token",
+            EventKind::DecodeToken { .. } => "decode_token",
+            EventKind::SpecBurst { .. } => "spec_burst",
+            EventKind::SwapOut { .. } => "swap_out",
+            EventKind::SwapIn { .. } => "swap_in",
+            EventKind::Preempt { .. } => "preempt",
+            EventKind::Finish { .. } => "finish",
+            EventKind::Dispatch { .. } => "dispatch",
+            EventKind::Plan { .. } => "plan",
+            EventKind::Promote { .. } => "promote",
+            EventKind::KvAlloc { .. } => "kv_alloc",
+            EventKind::KvFree { .. } => "kv_free",
+            EventKind::KvCow { .. } => "kv_cow",
+            EventKind::RadixAttach { .. } => "radix_attach",
+            EventKind::RadixEvict { .. } => "radix_evict",
+        }
+    }
+
+    /// Engine-scoped events only recorded at [`TraceLevel::Full`].
+    pub fn full_scope(&self) -> bool {
+        matches!(
+            self,
+            EventKind::Plan { .. }
+                | EventKind::Promote { .. }
+                | EventKind::KvAlloc { .. }
+                | EventKind::KvFree { .. }
+                | EventKind::KvCow { .. }
+                | EventKind::RadixEvict { .. }
+        )
+    }
+
+    /// Event-specific fields as a JSON fragment (`"k":v,...`, no
+    /// braces), appended to `out`.  Key order is fixed — it defines the
+    /// canonical line the digest runs over.
+    fn push_args(&self, out: &mut String) {
+        use std::fmt::Write as _;
+        let _ = match self {
+            EventKind::Submit { prompt_len, max_new } => {
+                write!(out, "\"prompt_len\":{prompt_len},\"max_new\":{max_new}")
+            }
+            EventKind::Reject { reason } => {
+                write!(out, "\"reason\":{}", json_str(reason))
+            }
+            EventKind::ChunkWindow { take, prefilled } => {
+                write!(out, "\"take\":{take},\"prefilled\":{prefilled}")
+            }
+            EventKind::Prefill { prompt_len } => {
+                write!(out, "\"prompt_len\":{prompt_len}")
+            }
+            EventKind::FirstToken { row, cstep, token }
+            | EventKind::DecodeToken { row, cstep, token } => {
+                write!(out, "\"row\":{row},\"cstep\":{cstep},\"token\":{token}")
+            }
+            EventKind::SpecBurst { row, cstep, drafted, accepted, emitted } => write!(
+                out,
+                "\"row\":{row},\"cstep\":{cstep},\"drafted\":{drafted},\
+                 \"accepted\":{accepted},\"emitted\":{emitted}"
+            ),
+            EventKind::SwapOut { blocks }
+            | EventKind::SwapIn { blocks }
+            | EventKind::KvAlloc { blocks }
+            | EventKind::KvFree { blocks }
+            | EventKind::KvCow { blocks }
+            | EventKind::RadixEvict { blocks } => {
+                write!(out, "\"blocks\":{blocks}")
+            }
+            EventKind::Preempt { kind } => {
+                write!(out, "\"kind\":{}", json_str(kind))
+            }
+            EventKind::Finish { reason, tokens } => {
+                write!(out, "\"reason\":{},\"tokens\":{tokens}", json_str(reason))
+            }
+            EventKind::Dispatch { policy, replica, affinity_rank, spill } => write!(
+                out,
+                "\"policy\":{},\"replica\":{replica},\
+                 \"affinity_rank\":{affinity_rank},\"spill\":{spill}",
+                json_str(policy)
+            ),
+            EventKind::Plan { outcome, batch } => {
+                write!(out, "\"outcome\":{},\"batch\":{batch}", json_str(outcome))
+            }
+            EventKind::Promote { count } => write!(out, "\"count\":{count}"),
+            EventKind::RadixAttach { tokens } => {
+                write!(out, "\"tokens\":{tokens}")
+            }
+        };
+    }
+}
+
+/// One recorded event: monotone emission index, logical step clock,
+/// request id (engine-scoped events carry the id of the affected
+/// request, or 0 when none applies), and the typed payload.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    pub seq: u64,
+    pub step: u64,
+    pub id: u64,
+    pub kind: EventKind,
+}
+
+impl TraceEvent {
+    /// The canonical JSONL serialization — the digest, the JSONL
+    /// exporter, and the Python mirror are all defined over exactly
+    /// this byte sequence (without a trailing newline).
+    pub fn canonical_line(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::with_capacity(96);
+        let _ = write!(
+            out,
+            "{{\"seq\":{},\"step\":{},\"id\":{},\"ev\":\"{}\"",
+            self.seq,
+            self.step,
+            self.id,
+            self.kind.name()
+        );
+        let mut args = String::new();
+        self.kind.push_args(&mut args);
+        if !args.is_empty() {
+            out.push(',');
+            out.push_str(&args);
+        }
+        out.push('}');
+        out
+    }
+}
+
+/// Counters folded incrementally from the event stream — the quantities
+/// `repro trace-identity` compares against [`ServingMetrics`]
+/// field-for-field (see that module for which metric each one mirrors).
+///
+/// [`ServingMetrics`]: crate::metrics::ServingMetrics
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct DerivedCounters {
+    /// `first_token` + `decode_token` + `spec_burst.emitted` — mirrors
+    /// `tokens_generated`.
+    pub tokens: u64,
+    /// Σ `prefill.prompt_len` — mirrors `prefill_tokens` (chunk windows
+    /// add nothing: the final-chunk `prefill` row carries the full
+    /// prompt length, exactly as the metric is bumped).
+    pub prefill_tokens: u64,
+    /// Σ `radix_attach.tokens` — mirrors `cached_prefill_tokens`.
+    pub cached_prefill_tokens: u64,
+    /// `chunk_window` count — mirrors `chunked_prefill_steps`.
+    pub chunk_windows: u64,
+    /// Σ `swap_out.blocks` — mirrors `swap_out_blocks`.
+    pub swap_out_blocks: u64,
+    /// Σ `swap_in.blocks` — mirrors `swap_in_blocks`.
+    pub swap_in_blocks: u64,
+    /// Σ `spec_burst.drafted` — mirrors counter `spec_draft_tokens`.
+    pub spec_drafted: u64,
+    /// Σ `spec_burst.accepted` — mirrors counter `spec_accepted_tokens`.
+    pub spec_accepted: u64,
+    /// `preempt` events — mirrors counters `preempted` +
+    /// `swapped_out_seqs` (swap-in park-backs emit `swap_out` without a
+    /// `preempt`, exactly as the metrics split them).
+    pub preemptions: u64,
+    /// `finish` events.
+    pub finishes: u64,
+    /// `reject` events.
+    pub rejects: u64,
+    /// `dispatch` events.
+    pub dispatches: u64,
+}
+
+impl DerivedCounters {
+    fn fold(&mut self, kind: &EventKind) {
+        match kind {
+            EventKind::FirstToken { .. } | EventKind::DecodeToken { .. } => {
+                self.tokens += 1;
+            }
+            EventKind::SpecBurst { drafted, accepted, emitted, .. } => {
+                self.tokens += emitted;
+                self.spec_drafted += drafted;
+                self.spec_accepted += accepted;
+            }
+            EventKind::Prefill { prompt_len } => {
+                self.prefill_tokens += *prompt_len as u64;
+            }
+            EventKind::ChunkWindow { .. } => self.chunk_windows += 1,
+            EventKind::RadixAttach { tokens } => {
+                self.cached_prefill_tokens += tokens;
+            }
+            EventKind::SwapOut { blocks } => self.swap_out_blocks += blocks,
+            EventKind::SwapIn { blocks } => self.swap_in_blocks += blocks,
+            EventKind::Preempt { .. } => self.preemptions += 1,
+            EventKind::Finish { .. } => self.finishes += 1,
+            EventKind::Reject { .. } => self.rejects += 1,
+            EventKind::Dispatch { .. } => self.dispatches += 1,
+            _ => {}
+        }
+    }
+}
+
+/// The flight recorder.  One per engine/replica; the router's dispatch
+/// events land in the chosen replica's trace so per-replica streams
+/// stay self-contained.
+#[derive(Clone, Debug)]
+pub struct Trace {
+    level: TraceLevel,
+    cap: usize,
+    ring: VecDeque<TraceEvent>,
+    seq: u64,
+    digest: u64,
+    derived: DerivedCounters,
+}
+
+impl Default for Trace {
+    fn default() -> Self {
+        Self::new(TraceLevel::Off)
+    }
+}
+
+impl Trace {
+    pub fn new(level: TraceLevel) -> Self {
+        Self::with_capacity(level, RING_CAP)
+    }
+
+    pub fn with_capacity(level: TraceLevel, cap: usize) -> Self {
+        Self {
+            level,
+            cap: cap.max(1),
+            ring: VecDeque::new(),
+            seq: 0,
+            digest: FNV_OFFSET,
+            derived: DerivedCounters::default(),
+        }
+    }
+
+    pub fn level(&self) -> TraceLevel {
+        self.level
+    }
+
+    /// The one-branch off gate: call sites wrap every emission in
+    /// `if trace.on() { .. }` so `trace_level = off` never constructs
+    /// an event.
+    #[inline(always)]
+    pub fn on(&self) -> bool {
+        self.level != TraceLevel::Off
+    }
+
+    /// Gate for engine-scoped (full-level) event sites.
+    #[inline(always)]
+    pub fn full(&self) -> bool {
+        self.level == TraceLevel::Full
+    }
+
+    /// Record one event.  Full-scope events are dropped below
+    /// [`TraceLevel::Full`]; everything is dropped at
+    /// [`TraceLevel::Off`] (belt and braces — sites gate first).
+    pub fn emit(&mut self, step: u64, id: u64, kind: EventKind) {
+        if !self.on() || (kind.full_scope() && !self.full()) {
+            return;
+        }
+        let ev = TraceEvent { seq: self.seq, step, id, kind };
+        self.seq += 1;
+        self.derived.fold(&ev.kind);
+        let line = ev.canonical_line();
+        for b in line.as_bytes() {
+            self.digest = (self.digest ^ u64::from(*b)).wrapping_mul(FNV_PRIME);
+        }
+        self.digest = (self.digest ^ u64::from(b'\n')).wrapping_mul(FNV_PRIME);
+        if self.ring.len() == self.cap {
+            self.ring.pop_front();
+        }
+        self.ring.push_back(ev);
+    }
+
+    /// Total events emitted (monotone; ring eviction does not reduce
+    /// it).
+    pub fn total(&self) -> u64 {
+        self.seq
+    }
+
+    /// Events currently held in the ring.
+    pub fn ring_len(&self) -> usize {
+        self.ring.len()
+    }
+
+    /// FNV-1a 64 digest of the canonical JSONL stream of *every* event
+    /// emitted (newline-terminated lines), independent of ring
+    /// eviction.  The replay-identity certificate compares this.
+    pub fn digest(&self) -> u64 {
+        self.digest
+    }
+
+    pub fn derived(&self) -> &DerivedCounters {
+        &self.derived
+    }
+
+    pub fn events(&self) -> impl Iterator<Item = &TraceEvent> {
+        self.ring.iter()
+    }
+
+    /// Canonical JSONL of the ring contents (the most recent
+    /// [`RING_CAP`] events), one event per line.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for ev in &self.ring {
+            out.push_str(&ev.canonical_line());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Chrome trace-event JSON for this trace alone, as replica `pid`.
+    /// See [`chrome_export`] for the multi-replica merge.
+    pub fn to_chrome_json(&self, pid: usize) -> String {
+        chrome_export(&[(pid, self)])
+    }
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Merge traces into one Chrome trace-event JSON document: one process
+/// (`pid`) per replica, one track (`tid`) per request id, engine-scoped
+/// events on `tid` 0.  `ts` is the logical step clock in microseconds
+/// (1 step = 1 µs), `dur` = 1, so Perfetto renders each step as a unit
+/// slice.  Load at `ui.perfetto.dev` or `chrome://tracing`.
+pub fn chrome_export(tracks: &[(usize, &Trace)]) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::from("{\"traceEvents\":[\n");
+    let mut first = true;
+    for &(pid, trace) in tracks {
+        let _ = write!(
+            out,
+            "{}{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{pid},\
+             \"tid\":0,\"args\":{{\"name\":\"replica {pid}\"}}}}",
+            if first { "" } else { ",\n" }
+        );
+        first = false;
+        let mut seen: Vec<u64> = Vec::new();
+        for ev in trace.events() {
+            if !seen.contains(&ev.id) {
+                seen.push(ev.id);
+                let _ = write!(
+                    out,
+                    ",\n{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{pid},\
+                     \"tid\":{id},\"args\":{{\"name\":\"req {id}\"}}}}",
+                    id = ev.id
+                );
+            }
+            let cat = if ev.kind.full_scope() { "engine" } else { "lifecycle" };
+            let mut args = String::new();
+            ev.kind.push_args(&mut args);
+            let _ = write!(
+                out,
+                ",\n{{\"name\":\"{name}\",\"cat\":\"{cat}\",\"ph\":\"X\",\
+                 \"ts\":{ts},\"dur\":1,\"pid\":{pid},\"tid\":{tid},\
+                 \"args\":{{{args}}}}}",
+                name = ev.kind.name(),
+                ts = ev.step,
+                tid = ev.id,
+            );
+        }
+    }
+    out.push_str("\n],\"displayTimeUnit\":\"ms\"}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_events(trace: &mut Trace) {
+        trace.emit(1, 7, EventKind::Submit { prompt_len: 5, max_new: 8 });
+        trace.emit(2, 7, EventKind::Prefill { prompt_len: 5 });
+        trace.emit(2, 7, EventKind::FirstToken { row: 0, cstep: 3, token: 42 });
+        trace.emit(3, 7, EventKind::DecodeToken { row: 0, cstep: 4, token: 9 });
+        trace.emit(4, 7, EventKind::Finish { reason: "max_tokens", tokens: 2 });
+    }
+
+    #[test]
+    fn off_records_nothing() {
+        let mut t = Trace::new(TraceLevel::Off);
+        assert!(!t.on() && !t.full());
+        sample_events(&mut t);
+        assert_eq!(t.total(), 0);
+        assert_eq!(t.digest(), Trace::new(TraceLevel::Off).digest());
+        assert_eq!(t.derived(), &DerivedCounters::default());
+    }
+
+    #[test]
+    fn lifecycle_drops_full_scope_events() {
+        let mut t = Trace::new(TraceLevel::Lifecycle);
+        assert!(t.on() && !t.full());
+        t.emit(1, 0, EventKind::Plan { outcome: "decode", batch: 4 });
+        t.emit(1, 0, EventKind::KvAlloc { blocks: 2 });
+        assert_eq!(t.total(), 0);
+        t.emit(1, 3, EventKind::Submit { prompt_len: 4, max_new: 2 });
+        assert_eq!(t.total(), 1);
+        let mut f = Trace::new(TraceLevel::Full);
+        f.emit(1, 0, EventKind::Plan { outcome: "decode", batch: 4 });
+        assert_eq!(f.total(), 1);
+    }
+
+    #[test]
+    fn digest_is_deterministic_and_order_sensitive() {
+        let mut a = Trace::new(TraceLevel::Full);
+        let mut b = Trace::new(TraceLevel::Full);
+        sample_events(&mut a);
+        sample_events(&mut b);
+        assert_eq!(a.digest(), b.digest());
+        assert_ne!(a.digest(), FNV_OFFSET);
+        // Swapping two events changes the digest (seq is hashed).
+        let mut c = Trace::new(TraceLevel::Full);
+        c.emit(2, 7, EventKind::Prefill { prompt_len: 5 });
+        c.emit(1, 7, EventKind::Submit { prompt_len: 5, max_new: 8 });
+        c.emit(2, 7, EventKind::FirstToken { row: 0, cstep: 3, token: 42 });
+        c.emit(3, 7, EventKind::DecodeToken { row: 0, cstep: 4, token: 9 });
+        c.emit(4, 7, EventKind::Finish { reason: "max_tokens", tokens: 2 });
+        assert_ne!(a.digest(), c.digest());
+    }
+
+    #[test]
+    fn digest_matches_fnv_over_the_jsonl_stream() {
+        // The incremental digest must equal a one-shot FNV-1a over the
+        // concatenated newline-terminated canonical lines — this is the
+        // contract the Python mirror implements.
+        let mut t = Trace::new(TraceLevel::Lifecycle);
+        sample_events(&mut t);
+        let mut h = FNV_OFFSET;
+        for b in t.to_jsonl().as_bytes() {
+            h = (h ^ u64::from(*b)).wrapping_mul(FNV_PRIME);
+        }
+        assert_eq!(t.digest(), h);
+    }
+
+    #[test]
+    fn ring_eviction_keeps_digest_and_derived_stable() {
+        let mut small = Trace::with_capacity(TraceLevel::Lifecycle, 2);
+        let mut big = Trace::with_capacity(TraceLevel::Lifecycle, 1024);
+        for step in 0..50u64 {
+            let ev = EventKind::DecodeToken {
+                row: (step % 4) as usize,
+                cstep: step as u32,
+                token: step as i32 * 3,
+            };
+            small.emit(step, 1, ev.clone());
+            big.emit(step, 1, ev);
+        }
+        assert_eq!(small.ring_len(), 2);
+        assert_eq!(small.total(), 50);
+        assert_eq!(small.digest(), big.digest());
+        assert_eq!(small.derived(), big.derived());
+        assert_eq!(small.derived().tokens, 50);
+    }
+
+    #[test]
+    fn derived_counters_fold_per_kind() {
+        let mut t = Trace::new(TraceLevel::Full);
+        t.emit(1, 1, EventKind::RadixAttach { tokens: 4 });
+        t.emit(1, 1, EventKind::ChunkWindow { take: 16, prefilled: 20 });
+        t.emit(2, 1, EventKind::ChunkWindow { take: 8, prefilled: 28 });
+        t.emit(3, 2, EventKind::RadixAttach { tokens: 2 });
+        t.emit(3, 2, EventKind::Prefill { prompt_len: 6 });
+        t.emit(3, 2, EventKind::FirstToken { row: 0, cstep: 1, token: 5 });
+        t.emit(4, 2, EventKind::SpecBurst {
+            row: 0,
+            cstep: 2,
+            drafted: 3,
+            accepted: 2,
+            emitted: 3,
+        });
+        t.emit(5, 1, EventKind::Preempt { kind: "swap" });
+        t.emit(5, 1, EventKind::SwapOut { blocks: 4 });
+        t.emit(6, 1, EventKind::SwapIn { blocks: 4 });
+        t.emit(7, 3, EventKind::Preempt { kind: "recompute" });
+        t.emit(8, 4, EventKind::Reject { reason: "kv exhausted".into() });
+        t.emit(8, 2, EventKind::Finish { reason: "max_tokens", tokens: 4 });
+        t.emit(8, 5, EventKind::Dispatch {
+            policy: "prefix_affinity",
+            replica: 1,
+            affinity_rank: 0,
+            spill: false,
+        });
+        let d = t.derived();
+        assert_eq!(d.tokens, 4);
+        // Chunk windows contribute nothing here: their row's final-chunk
+        // `prefill` event carries the full prompt length.
+        assert_eq!(d.prefill_tokens, 6);
+        assert_eq!(d.cached_prefill_tokens, 6);
+        assert_eq!(d.chunk_windows, 2);
+        assert_eq!(d.swap_out_blocks, 4);
+        assert_eq!(d.swap_in_blocks, 4);
+        assert_eq!(d.spec_drafted, 3);
+        assert_eq!(d.spec_accepted, 2);
+        assert_eq!(d.preemptions, 2);
+        assert_eq!(d.finishes, 1);
+        assert_eq!(d.rejects, 1);
+        assert_eq!(d.dispatches, 1);
+    }
+
+    #[test]
+    fn canonical_lines_are_stable_json() {
+        let ev = TraceEvent {
+            seq: 3,
+            step: 11,
+            id: 9,
+            kind: EventKind::SpecBurst {
+                row: 1,
+                cstep: 17,
+                drafted: 4,
+                accepted: 2,
+                emitted: 3,
+            },
+        };
+        assert_eq!(
+            ev.canonical_line(),
+            "{\"seq\":3,\"step\":11,\"id\":9,\"ev\":\"spec_burst\",\
+             \"row\":1,\"cstep\":17,\"drafted\":4,\"accepted\":2,\
+             \"emitted\":3}"
+        );
+        let rej = TraceEvent {
+            seq: 0,
+            step: 1,
+            id: 2,
+            kind: EventKind::Reject { reason: "a \"quoted\" cause".into() },
+        };
+        assert_eq!(
+            rej.canonical_line(),
+            "{\"seq\":0,\"step\":1,\"id\":2,\"ev\":\"reject\",\
+             \"reason\":\"a \\\"quoted\\\" cause\"}"
+        );
+    }
+
+    #[test]
+    fn chrome_export_names_tracks_and_replicas() {
+        let mut a = Trace::new(TraceLevel::Lifecycle);
+        sample_events(&mut a);
+        let mut b = Trace::new(TraceLevel::Lifecycle);
+        b.emit(1, 12, EventKind::Submit { prompt_len: 3, max_new: 1 });
+        let doc = chrome_export(&[(0, &a), (1, &b)]);
+        assert!(doc.starts_with("{\"traceEvents\":["));
+        assert!(doc.contains("\"name\":\"replica 0\""));
+        assert!(doc.contains("\"name\":\"replica 1\""));
+        assert!(doc.contains("\"name\":\"req 7\""));
+        assert!(doc.contains("\"name\":\"req 12\""));
+        assert!(doc.contains("\"ph\":\"X\""));
+        assert!(doc.contains("\"ts\":3"));
+        // Well-formed: every brace closed, document ends with the
+        // trailing metadata.
+        assert_eq!(doc.matches('{').count(), doc.matches('}').count());
+        assert!(doc.trim_end().ends_with("\"displayTimeUnit\":\"ms\"}"));
+        // Single-trace wrapper agrees with the merged exporter.
+        assert_eq!(a.to_chrome_json(0), chrome_export(&[(0, &a)]));
+    }
+
+    #[test]
+    fn trace_level_parses() {
+        assert_eq!("off".parse::<TraceLevel>().unwrap(), TraceLevel::Off);
+        assert_eq!(
+            "lifecycle".parse::<TraceLevel>().unwrap(),
+            TraceLevel::Lifecycle
+        );
+        assert_eq!("full".parse::<TraceLevel>().unwrap(), TraceLevel::Full);
+        assert!("verbose".parse::<TraceLevel>().is_err());
+        assert_eq!(TraceLevel::Full.to_string(), "full");
+        assert_eq!(TraceLevel::default(), TraceLevel::Off);
+    }
+}

@@ -18,8 +18,10 @@ use flashsampling::coordinator::{
 };
 use flashsampling::kvcache::{KvCacheConfig, KvCacheManager};
 use flashsampling::prefixcache::BlockKv;
+use flashsampling::router::{sim_router, DispatchPolicy, SimReplicaConfig};
 use flashsampling::sampling::SamplerSpec;
 use flashsampling::testutil;
+use flashsampling::trace::TraceLevel;
 use flashsampling::workload::{LengthDist, SharedPrefix, WorkloadGen};
 
 // ---------------------------------------------------------------------
@@ -443,6 +445,82 @@ fn prop_chunked_windows_and_swap_preempts_stay_balanced() {
         assert_eq!(kv.swapped_blocks(), 0, "stranded swap ledger");
         kv.clear_prefix_cache();
         assert_eq!(kv.free_blocks(), TOTAL, "cache held phantom refs");
+    });
+}
+
+#[test]
+fn prop_trace_derived_counters_balance_under_random_aborts() {
+    // Satellite to `repro trace-identity`: the flight recorder's derived
+    // counters must stay in lockstep with `ServingMetrics` under ANY
+    // abort schedule, not just the certificate's scripted scenarios.
+    // Randomized mid-flight aborts across 2 replicas sharing session
+    // prefixes under prefix-affinity — at quiescence every replica's
+    // trace re-derives its own metrics, every submission is dispatched
+    // exactly once and ends in exactly one finish, and the KV pool and
+    // radix refcounts balance to zero leaks.
+    testutil::cases(24, 0x7AACE, |g| {
+        let mut r = sim_router(
+            2,
+            DispatchPolicy::PrefixAffinity,
+            SimReplicaConfig {
+                trace_level: TraceLevel::Lifecycle,
+                ..Default::default()
+            },
+        );
+        let sys: Vec<i32> = (0..32).map(|j| j * 13 % 211).collect();
+        let n = g.usize_in(6, 12) as u64;
+        for id in 0..n {
+            let mut prompt = sys.clone();
+            prompt
+                .extend((0..g.usize_in(4, 24)).map(|j| id as i32 * 59 + j as i32));
+            r.submit(Request::new(
+                id,
+                prompt,
+                SamplingParams {
+                    max_new_tokens: g.usize_in(1, 8),
+                    ..Default::default()
+                },
+            ))
+            .unwrap();
+        }
+        let mut idle = 0;
+        while r.pending() > 0 {
+            // Random mid-flight abort of any still-live request: hits
+            // prefill-pending (waiting) and mid-decode phases alike.
+            if g.bool(0.3) {
+                let id = g.usize_in(0, n as usize - 1) as u64;
+                if r.owner_of(id).is_some() {
+                    r.abort(id).unwrap();
+                }
+            }
+            if r.step().unwrap().is_empty() {
+                idle += 1;
+                if idle > 8 && r.reject_unschedulable().is_some() {
+                    idle = 0;
+                    continue;
+                }
+                assert!(idle < 64, "sim livelock");
+            } else {
+                idle = 0;
+            }
+        }
+        let mut finishes = 0u64;
+        let mut dispatches = 0u64;
+        for e in r.replicas() {
+            let d = e.trace.derived();
+            let m = &e.metrics;
+            assert_eq!(d.tokens, m.tokens_generated, "token count drifted");
+            assert_eq!(d.prefill_tokens, m.prefill_tokens);
+            assert_eq!(d.cached_prefill_tokens, m.cached_prefill_tokens);
+            assert_eq!(d.finishes, m.requests_completed);
+            assert_eq!(d.rejects, 0, "pool is oversized — nothing rejects");
+            finishes += d.finishes;
+            dispatches += d.dispatches;
+        }
+        assert_eq!(dispatches, n, "each submission dispatched exactly once");
+        assert_eq!(finishes, n, "each submission ends in exactly one finish");
+        assert_eq!(r.kv_unaccounted_blocks(), 0, "aborts leaked KV blocks");
+        assert_eq!(r.prefix_attached_refs(), 0, "dangling radix refs");
     });
 }
 
