@@ -1,0 +1,292 @@
+#!/usr/bin/env python3
+"""Cross-language modeled-time profile digest mirror.
+
+Independently reimplements the `profile-mirror` leg of
+`repro profile-identity` (rust/src/repro/profile_identity.rs, leg 5):
+the trace-identity mirror workload — 6 closed-loop requests,
+`prompt_len = 24 + (id % 3) * 8`, `max_new = 3 + (id % 3)`, prefix
+cache off, `Lifecycle` trace level — profiled under the pinned
+canonical price table (rust/src/profile/mod.rs `PriceTable::canonical`),
+and re-derives the canonical integer summary lines plus their FNV-1a 64
+digest byte-for-byte (`Profile::canonical_lines` / `Profile::digest`).
+
+Nothing is shared with the Rust side except the specs: the FIFO
+continuous-batcher shape (same as sim_trace_bench.py), the window
+construction rules (consecutive prefill/first_token events at one step
+form one prefill window, decode tokens at one step form one decode
+window, front-door events close the open window, finishes stamp at the
+enclosing window's end), the integer price table, and the canonical
+serialization.  Every quantity is an integer, so there is no float
+replay and no tolerance: the digests are equal or the build is wrong.
+
+Usage:
+    python3 python/tests/sim_profile_bench.py [profile-identity.csv]
+
+With no argument, runs the mirror, self-checks the conservation laws
+(windows tile the makespan; per request, phases + queue == span), and
+prints the digest.  With the CSV produced by
+`flashsampling repro profile-identity --out DIR` as argument,
+additionally asserts the pinned price-table row and bitwise digest
+equality against the Rust-side `profile-mirror` anchor row — the CI
+cross-language gate.
+"""
+
+import sys
+
+# FNV-1a 64 (rust/src/profile/mod.rs FNV_OFFSET / FNV_PRIME).
+FNV_OFFSET = 0xCBF29CE484222325
+FNV_PRIME = 0x100000001B3
+MASK64 = (1 << 64) - 1
+
+# PriceTable::canonical() — integer microseconds, pinned.  The CSV's
+# `price-table` row must carry exactly these values, in this order.
+PRICES = {
+    "prefill_us_per_token": 15,
+    "prefill_stream_floor_us": 2412,
+    "window_fixed_us": 1282,
+    "decode_step_us": 3805,
+    "spec_draft_us": 360,
+    "spec_verify_us": 3805,
+    "swap_us_per_block": 84,
+    "dispatch_us": 24,
+}
+
+# Mirror-leg workload + SimReplicaConfig defaults (keep in lockstep with
+# trace_identity.rs `mirror_run` and router/sim.rs `SimReplicaConfig`).
+NUM_REQUESTS = 6
+PREFILL_B = 4
+DECODE_MAX_B = 8
+MAX_CONCURRENCY = 8
+
+
+def prompt_len(rid):
+    return 24 + (rid % 3) * 8
+
+
+def max_new(rid):
+    return 3 + (rid % 3)
+
+
+def run_mirror_events():
+    """The SimReplica FIFO batcher at Lifecycle level, event-for-event.
+
+    Returns `(step, rid, kind, payload)` tuples — the same stream
+    sim_trace_bench.py serializes, kept abstract here because the
+    profiler consumes events, not their canonical lines.
+    """
+    events = []
+    clock = 0
+    waiting = []
+    running = []
+    for rid in range(NUM_REQUESTS):
+        events.append((clock, rid, "submit", prompt_len(rid)))
+        waiting.append({"id": rid, "gen": 0})
+    while waiting or running:
+        clock += 1
+        if len(running) < MAX_CONCURRENCY and waiting:
+            batch = []
+            while (waiting and len(batch) < PREFILL_B
+                   and len(running) + len(batch) < MAX_CONCURRENCY):
+                batch.append(waiting.pop(0))
+            for seq in batch:
+                events.append((clock, seq["id"], "prefill",
+                               prompt_len(seq["id"])))
+                seq["gen"] = 1
+                events.append((clock, seq["id"], "first_token", None))
+            for seq in batch:
+                if seq["gen"] >= max_new(seq["id"]):
+                    events.append((clock, seq["id"], "finish", seq["gen"]))
+                else:
+                    running.append(seq)
+        elif running:
+            for row in range(min(len(running), DECODE_MAX_B)):
+                seq = running[row]
+                seq["gen"] += 1
+                events.append((clock, seq["id"], "decode_token", None))
+            i = 0
+            while i < len(running):
+                if running[i]["gen"] >= max_new(running[i]["id"]):
+                    seq = running.pop(i)
+                    events.append((clock, seq["id"], "finish", seq["gen"]))
+                else:
+                    i += 1
+        assert clock < 1000, "mirror livelock"
+    return events
+
+
+def price_prefill(longest_uncached):
+    return max(longest_uncached * PRICES["prefill_us_per_token"],
+               PRICES["prefill_stream_floor_us"]) + PRICES["window_fixed_us"]
+
+
+def profile(events):
+    """The window profiler over the mirror event alphabet (submit /
+    prefill / first_token / decode_token / finish — no chunk, swap,
+    spec, or dispatch events occur on a bare replica with the prefix
+    cache off).  Mirrors rust/src/profile/mod.rs `profile_trace`:
+    one cursor, windows close on class-or-step change, submits close
+    the open window, finishes stamp at the enclosing window's end.
+    """
+    cursor = 0
+    windows = []          # (start, dur, phase, participant ids)
+    reqs = {}             # id -> accumulator dict
+    open_w = None         # [phase, step, participants, longest, emits, fins]
+
+    def req(rid):
+        return reqs.setdefault(rid, {
+            "submit": 0, "prefill": 0, "decode": 0, "tokens": 0,
+            "ttft": None, "finish": None, "finish_us": None,
+        })
+
+    def close():
+        nonlocal cursor, open_w
+        if open_w is None:
+            return
+        phase, _step, parts, longest, emits, fins = open_w
+        dur = (price_prefill(longest) if phase == "prefill"
+               else PRICES["decode_step_us"])
+        end = cursor + dur
+        for rid in parts:
+            req(rid)[phase] += dur
+        for rid in emits:
+            r = req(rid)
+            r["tokens"] += 1
+            if r["ttft"] is None:
+                r["ttft"] = end
+        for rid, toks in fins:
+            r = req(rid)
+            r["finish"] = "max_tokens"
+            r["finish_us"] = end
+            assert r["tokens"] == toks, "finish token count drift"
+        windows.append((cursor, dur, phase, parts))
+        cursor = end
+        open_w = None
+
+    for step, rid, kind, payload in events:
+        if kind in ("prefill", "first_token", "decode_token"):
+            phase = "decode" if kind == "decode_token" else "prefill"
+            if open_w is None or open_w[0] != phase or open_w[1] != step:
+                close()
+                open_w = [phase, step, [], 0, [], []]
+            if rid not in open_w[2]:
+                open_w[2].append(rid)
+            if kind == "prefill":
+                # Prefix cache off: the whole prompt is uncached.
+                open_w[3] = max(open_w[3], payload)
+            else:
+                open_w[4].append(rid)
+        elif kind == "submit":
+            close()
+            req(rid)["submit"] = cursor
+        elif kind == "finish":
+            if open_w is not None:
+                open_w[5].append((rid, payload))
+            else:
+                r = req(rid)
+                r["finish"] = "max_tokens"
+                r["finish_us"] = cursor
+                assert r["tokens"] == payload, "finish token count drift"
+        else:
+            raise SystemExit("unknown event kind %s" % kind)
+    close()
+    return reqs, windows, cursor
+
+
+def canonical_lines(reqs, windows, makespan):
+    """`Profile::canonical_lines` for one replica: per-request summary
+    rows (id-sorted) plus the replica rollup, fixed key order."""
+    lines = []
+    for rid in sorted(reqs):
+        r = reqs[rid]
+        end = r["finish_us"] if r["finish_us"] is not None else makespan
+        span = end - r["submit"]
+        queue = span - r["prefill"] - r["decode"]
+        assert queue >= 0, "request %d: negative queue residual" % rid
+        lines.append(
+            '{"replica":0,"id":%d,"queue_us":%d,"prefill_us":%d,'
+            '"chunk_us":0,"swap_us":0,"spec_us":0,"decode_us":%d,'
+            '"span_us":%d,"ttft_us":%d,"tokens":%d,"finish":"%s"}'
+            % (rid, queue, r["prefill"], r["decode"], span,
+               r["ttft"] if r["ttft"] is not None else 0,
+               r["tokens"], r["finish"]))
+    lines.append('{"replica":0,"requests":%d,"windows":%d,"makespan_us":%d}'
+                 % (len(reqs), len(windows), makespan))
+    return lines
+
+
+def fnv_digest(lines):
+    digest = FNV_OFFSET
+    for line in lines:
+        for byte in line.encode("utf-8") + b"\n":
+            digest = ((digest ^ byte) * FNV_PRIME) & MASK64
+    return digest
+
+
+def self_check(reqs, windows, makespan):
+    """The conservation laws `ReplicaProfile::check` enforces."""
+    at = 0
+    for start, dur, _phase, _parts in windows:
+        assert start == at, "window gap/overlap at %d" % start
+        assert dur >= 0
+        at += dur
+    assert at == makespan, "windows sum %d != makespan %d" % (at, makespan)
+    for rid, r in reqs.items():
+        end = r["finish_us"] if r["finish_us"] is not None else makespan
+        span = end - r["submit"]
+        queue = span - r["prefill"] - r["decode"]
+        rescan = sum(
+            dur for start, dur, _phase, parts in windows
+            if start >= r["submit"] and start + dur <= end
+            and rid not in parts)
+        assert rescan == queue, (
+            "request %d: queue rescan %d != residual %d"
+            % (rid, rescan, queue))
+        assert r["tokens"] == max_new(rid), "request %d token count" % rid
+
+
+def anchors_from_csv(path):
+    """The `profile-mirror` and `price-table` rows of the report CSV."""
+    mirror = None
+    table = None
+    with open(path) as f:
+        for line in f:
+            if line.startswith("profile-mirror,"):
+                cells = line.strip().split(",")
+                mirror = (int(cells[2]), int(cells[3], 16))
+            elif line.startswith("price-table,"):
+                table = [int(c) for c in line.strip().split(",")[1:]]
+    if mirror is None or table is None:
+        raise SystemExit("no profile-mirror / price-table rows in %s" % path)
+    return mirror, table
+
+
+def main():
+    events = run_mirror_events()
+    # Lifecycle events only: 6 submits + 6 prefills + 6 first tokens +
+    # 6 finishes + one decode_token per remaining token.
+    expected = 24 + sum(max_new(rid) - 1 for rid in range(NUM_REQUESTS))
+    assert len(events) == expected, (
+        "event count %d != %d" % (len(events), expected))
+    reqs, windows, makespan = profile(events)
+    self_check(reqs, windows, makespan)
+    digest = fnv_digest(canonical_lines(reqs, windows, makespan))
+    print("sim_profile_bench: %d events, %d windows, makespan %d us, "
+          "digest 0x%016x" % (len(events), len(windows), makespan, digest))
+    if len(sys.argv) > 1:
+        (events_rs, anchor), table = anchors_from_csv(sys.argv[1])
+        assert table == list(PRICES.values()), (
+            "price table drift: rust %s, python %s"
+            % (table, list(PRICES.values())))
+        assert events_rs == len(events), (
+            "event count mismatch: rust %d, python %d"
+            % (events_rs, len(events)))
+        assert anchor == digest, (
+            "digest mismatch: rust 0x%016x, python 0x%016x"
+            % (anchor, digest))
+        print("sim_profile_bench: MATCHES the Rust profile-mirror anchor")
+    else:
+        print("(pass profile-identity.csv to cross-check the Rust anchor)")
+
+
+if __name__ == "__main__":
+    main()

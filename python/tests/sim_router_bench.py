@@ -378,8 +378,14 @@ def main():
     body = ",\n".join(
         "    " + json.dumps(r, separators=(", ", ": ")) for r in records
     )
+    config = json.dumps(
+        {"sessions": SESSIONS, "turns": TURNS, "num_sys": NUM_SYS, "max_new": MAX_NEW},
+        separators=(", ", ": "),
+    )
     text = (
-        '{\n  "bench": "router",\n  "schema_version": 1,\n'
+        '{\n  "bench": "router",\n  "schema_version": 2,\n'
+        '  "source": "accounting-sim",\n'
+        '  "config": ' + config + ",\n"
         '  "results": [\n' + body + "\n  ]\n}\n"
     )
     with open(out, "w") as f:

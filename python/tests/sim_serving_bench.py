@@ -207,8 +207,14 @@ def main():
     body = ",\n".join(
         "    " + json.dumps(r, separators=(", ", ": ")) for r in records
     )
+    config = json.dumps(
+        {"requests": REQUESTS, "long_prompt": LONG_PROMPT},
+        separators=(", ", ": "),
+    )
     text = (
-        '{\n  "bench": "serving",\n  "schema_version": 1,\n'
+        '{\n  "bench": "serving",\n  "schema_version": 2,\n'
+        '  "source": "accounting-sim",\n'
+        '  "config": ' + config + ",\n"
         '  "results": [\n' + body + "\n  ]\n}\n"
     )
     with open(out, "w") as f:

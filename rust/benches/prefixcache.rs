@@ -223,6 +223,11 @@ fn main() {
     let out = std::env::var("BENCH_OUT")
         .unwrap_or_else(|_| "BENCH_prefixcache.json".to_string());
     let path = std::path::PathBuf::from(out);
-    write_bench_report(&path, "prefixcache", &records).expect("writing report");
+    let config = [
+        ("block_size", BLOCK_SIZE.to_string()),
+        ("seed", SEED.to_string()),
+    ];
+    write_bench_report(&path, "prefixcache", "rust-bench", &config, &records)
+        .expect("writing report");
     println!("\nwrote {} ({} scenarios)", path.display(), records.len());
 }

@@ -232,6 +232,13 @@ fn main() {
     let out = std::env::var("BENCH_OUT")
         .unwrap_or_else(|_| "BENCH_router.json".to_string());
     let path = std::path::PathBuf::from(out);
-    write_bench_report(&path, "router", &records).expect("writing report");
+    let config = [
+        ("sessions", SESSIONS.to_string()),
+        ("turns", TURNS.to_string()),
+        ("num_sys", NUM_SYS.to_string()),
+        ("max_new", MAX_NEW.to_string()),
+    ];
+    write_bench_report(&path, "router", "rust-bench", &config, &records)
+        .expect("writing report");
     println!("\nwrote {} ({} records)", path.display(), records.len());
 }

@@ -120,7 +120,13 @@ fn main() {
     let out = std::env::var("BENCH_OUT")
         .unwrap_or_else(|_| "BENCH_samplers.json".to_string());
     let path = std::path::PathBuf::from(out);
-    write_bench_report(&path, "samplers", &records).expect("writing report");
+    let config = [
+        ("batches", "[1, 8]".to_string()),
+        ("vocabs", "[2048, 32768, 151936]".to_string()),
+        ("specs", SPECS.len().to_string()),
+    ];
+    write_bench_report(&path, "samplers", "rust-bench", &config, &records)
+        .expect("writing report");
     println!(
         "\nwrote {} ({} records: {} specs x {} batches x {} vocabs x 2 modes)",
         path.display(),

@@ -256,6 +256,11 @@ fn main() {
     let out = std::env::var("BENCH_OUT")
         .unwrap_or_else(|_| "BENCH_serving.json".to_string());
     let path = std::path::PathBuf::from(out);
-    write_bench_report(&path, "serving", &records).expect("writing report");
+    let config = [
+        ("requests", REQUESTS.to_string()),
+        ("long_prompt", LONG_PROMPT.to_string()),
+    ];
+    write_bench_report(&path, "serving", "rust-bench", &config, &records)
+        .expect("writing report");
     println!("\nwrote {} ({} records)", path.display(), records.len());
 }

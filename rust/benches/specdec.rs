@@ -131,7 +131,13 @@ fn main() {
     let out = std::env::var("BENCH_OUT")
         .unwrap_or_else(|_| "BENCH_specdec.json".to_string());
     let path = std::path::PathBuf::from(out);
-    write_bench_report(&path, "specdec", &records).expect("writing report");
+    let config = [
+        ("vocab", VOCAB.to_string()),
+        ("max_new", MAX_NEW.to_string()),
+        ("ks", "[1, 2, 4, 8]".to_string()),
+    ];
+    write_bench_report(&path, "specdec", "rust-bench", &config, &records)
+        .expect("writing report");
     println!(
         "\nwrote {} ({} records: {} drafters x {} Ks + 1 baseline)",
         path.display(),

@@ -134,18 +134,30 @@ pub fn json_object(fields: &[(&str, String)]) -> String {
     format!("{{{}}}", body.join(", "))
 }
 
-/// Write a `BENCH_<bench>.json` report: a versioned envelope around an
-/// array of flat per-measurement records (each an output of
-/// [`json_object`]).
+/// Write a `BENCH_<bench>.json` report: a versioned, provenance-stamped
+/// envelope around an array of flat per-measurement records (each an
+/// output of [`json_object`]).
+///
+/// Schema version 2 stamps *where the numbers came from* (`source`,
+/// e.g. `"rust-bench"` or `"accounting-sim"`) and echoes the workload
+/// `config` knobs, so `flashsampling benchdiff` can refuse to compare
+/// reports of different provenance-relevant shape while still matching
+/// records across emitters (the per-record `source` field is excluded
+/// from record identity).  Values in `config` are emitted verbatim —
+/// quote strings with [`json_str`].
 pub fn write_bench_report(
     path: &Path,
     bench: &str,
+    source: &str,
+    config: &[(&str, String)],
     records: &[String],
 ) -> std::io::Result<()> {
     let mut out = String::new();
     out.push_str("{\n");
     out.push_str(&format!("  \"bench\": {},\n", json_str(bench)));
-    out.push_str("  \"schema_version\": 1,\n");
+    out.push_str("  \"schema_version\": 2,\n");
+    out.push_str(&format!("  \"source\": {},\n", json_str(source)));
+    out.push_str(&format!("  \"config\": {},\n", json_object(config)));
     out.push_str("  \"results\": [\n");
     for (i, r) in records.iter().enumerate() {
         out.push_str("    ");
@@ -190,10 +202,19 @@ mod tests {
             json_object(&[("name", json_str("a")), ("v", "1".into())]),
             json_object(&[("name", json_str("b")), ("v", "2".into())]),
         ];
-        write_bench_report(&path, "samplers", &records).unwrap();
+        let config = [("samples", "20".to_string())];
+        write_bench_report(&path, "samplers", "rust-bench", &config, &records)
+            .unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         let v = crate::json::parse(&text).unwrap();
         assert_eq!(v.req("bench").unwrap().as_str().unwrap(), "samplers");
+        assert_eq!(
+            v.req("schema_version").unwrap().as_usize().unwrap(),
+            2
+        );
+        assert_eq!(v.req("source").unwrap().as_str().unwrap(), "rust-bench");
+        let cfg = v.req("config").unwrap();
+        assert_eq!(cfg.req("samples").unwrap().as_usize().unwrap(), 20);
         let results = v.req("results").unwrap().as_arr().unwrap();
         assert_eq!(results.len(), 2);
         assert_eq!(results[1].req("v").unwrap().as_usize().unwrap(), 2);

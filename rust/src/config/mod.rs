@@ -92,6 +92,19 @@ pub struct Config {
     /// Flight-recorder level (DESIGN.md §14): `off` (default — one
     /// branch per event site) | `lifecycle` | `full`.
     pub trace_level: TraceLevel,
+    /// Flight-recorder ring capacity in events (default 4096, min 64).
+    /// The trace digest and `DerivedCounters` are eviction-independent,
+    /// so certificates are unaffected by a small ring; the modeled-time
+    /// profiler (DESIGN.md §15) needs the full event stream, so size
+    /// this to the workload before `flashsampling profile`.
+    pub trace_ring_cap: usize,
+    /// TTFT SLO threshold in milliseconds for
+    /// `flashsampling_slo_violations_total` (DESIGN.md §15); 0 (default)
+    /// disables the classification.
+    pub slo_ttft_ms: u64,
+    /// Inter-token-latency SLO threshold in milliseconds; 0 (default)
+    /// disables the classification.
+    pub slo_itl_ms: u64,
     /// Output directory for `repro`.
     pub out_dir: PathBuf,
 }
@@ -121,6 +134,9 @@ impl Default for Config {
             replicas: 1,
             dispatch_policy: DispatchPolicy::default(),
             trace_level: TraceLevel::Off,
+            trace_ring_cap: 4096,
+            slo_ttft_ms: 0,
+            slo_itl_ms: 0,
             out_dir: "results".into(),
         }
     }
@@ -192,6 +208,9 @@ impl Config {
                         .with_context(|| format!("config key 'swap_policy' = '{v}'"))?;
                 }
                 "replicas" => self.replicas = v.parse()?,
+                "trace_ring_cap" => self.trace_ring_cap = v.parse()?,
+                "slo_ttft_ms" => self.slo_ttft_ms = v.parse()?,
+                "slo_itl_ms" => self.slo_itl_ms = v.parse()?,
                 "trace_level" => {
                     self.trace_level = v
                         .parse()
@@ -219,6 +238,9 @@ impl Config {
         if self.replicas == 0 {
             bail!("replicas must be >= 1");
         }
+        if self.trace_ring_cap < 64 {
+            bail!("trace_ring_cap must be >= 64");
+        }
         Ok(())
     }
 
@@ -242,6 +264,9 @@ impl Config {
             swap_blocks: self.swap_blocks,
             swap_policy: self.swap_policy,
             trace_level: self.trace_level,
+            trace_ring_cap: self.trace_ring_cap,
+            slo_ttft_us: self.slo_ttft_ms * 1000,
+            slo_itl_us: self.slo_itl_ms * 1000,
             // TP-sharded replicas are constructed programmatically
             // (`EngineConfig::tp`); the config file drives the router
             // shape via `replicas` / `dispatch_policy` only.
@@ -491,6 +516,47 @@ mod tests {
         assert_eq!(c.trace_level, TraceLevel::Full);
         c.apply_pairs(parse_pairs("trace_level = off").unwrap()).unwrap();
         assert_eq!(c.engine_config().trace_level, TraceLevel::Off);
+    }
+
+    #[test]
+    fn trace_ring_cap_parses_and_validates() {
+        let mut c = Config::default();
+        assert_eq!(c.trace_ring_cap, 4096);
+        assert_eq!(c.engine_config().trace_ring_cap, 4096);
+        c.apply_pairs(parse_pairs("trace_ring_cap = 128").unwrap()).unwrap();
+        assert_eq!(c.engine_config().trace_ring_cap, 128);
+        // Below the floor and unparsable values are rejected without
+        // clobbering the prior value.
+        assert!(c
+            .apply_pairs(parse_pairs("trace_ring_cap = 63").unwrap())
+            .is_err());
+        assert!(c
+            .apply_pairs(parse_pairs("trace_ring_cap = lots").unwrap())
+            .is_err());
+        assert_eq!(c.trace_ring_cap, 128);
+        c.apply_pairs(parse_pairs("trace_ring_cap = 64").unwrap()).unwrap();
+        assert_eq!(c.trace_ring_cap, 64);
+    }
+
+    #[test]
+    fn slo_keys_parse_and_flow_to_the_engine_in_microseconds() {
+        let mut c = Config::default();
+        // Default 0 = SLO accounting off (legacy-identical exposition).
+        assert_eq!(c.slo_ttft_ms, 0);
+        assert_eq!(c.slo_itl_ms, 0);
+        assert_eq!(c.engine_config().slo_ttft_us, 0);
+        assert_eq!(c.engine_config().slo_itl_us, 0);
+        c.apply_pairs(parse_pairs("slo_ttft_ms = 250\nslo_itl_ms = 40").unwrap())
+            .unwrap();
+        assert_eq!(c.engine_config().slo_ttft_us, 250_000);
+        assert_eq!(c.engine_config().slo_itl_us, 40_000);
+        assert!(c
+            .apply_pairs(parse_pairs("slo_ttft_ms = -1").unwrap())
+            .is_err());
+        assert!(c
+            .apply_pairs(parse_pairs("slo_itl_ms = soon").unwrap())
+            .is_err());
+        assert_eq!(c.slo_ttft_ms, 250);
     }
 
     #[test]

@@ -128,6 +128,20 @@ pub struct EngineConfig {
     /// one branch per event site; `Lifecycle` records request lifecycles;
     /// `Full` adds scheduler plans, aging promotions, and KV deltas.
     pub trace_level: TraceLevel,
+    /// Flight-recorder ring capacity in events (`trace_ring_cap` config
+    /// key; default 4096).  The trace digest and `DerivedCounters` are
+    /// eviction-independent; the modeled-time profiler (DESIGN.md §15)
+    /// refuses evicted rings, so size this to the workload before
+    /// profiling.
+    pub trace_ring_cap: usize,
+    /// TTFT SLO threshold in microseconds for the
+    /// `flashsampling_slo_violations_total` exposition (DESIGN.md §15);
+    /// 0 (default) disables the classification and keeps the Prometheus
+    /// render byte-identical to the pre-SLO stack.
+    pub slo_ttft_us: u64,
+    /// Inter-token-latency SLO threshold in microseconds; 0 (default)
+    /// disables the classification.
+    pub slo_itl_us: u64,
 }
 
 impl Default for EngineConfig {
@@ -146,6 +160,9 @@ impl Default for EngineConfig {
             swap_policy: SwapPolicy::Auto,
             tp: None,
             trace_level: TraceLevel::Off,
+            trace_ring_cap: 4096,
+            slo_ttft_us: 0,
+            slo_itl_us: 0,
         }
     }
 }
@@ -375,7 +392,12 @@ impl Engine {
         });
         kvmgr.set_swap_capacity(cfg.swap_blocks);
         let key = Key::from_seed(cfg.seed);
-        let trace = Trace::new(cfg.trace_level);
+        let trace = Trace::with_capacity(cfg.trace_level, cfg.trace_ring_cap);
+        let metrics = ServingMetrics {
+            slo_ttft_us: cfg.slo_ttft_us,
+            slo_itl_us: cfg.slo_itl_us,
+            ..ServingMetrics::default()
+        };
         Ok(Self {
             rt,
             cfg,
@@ -394,7 +416,7 @@ impl Engine {
             key,
             decode_cache: None,
             tp_orch: HashMap::new(),
-            metrics: ServingMetrics::default(),
+            metrics,
             trace,
             trace_kv_base: [0; 4],
         })

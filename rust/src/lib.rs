@@ -106,6 +106,25 @@
 //! `repro trace-identity` certifies both that identity and that
 //! counters derived from the event log reproduce
 //! [`metrics::ServingMetrics`] exactly.
+//!
+//! # Modeled-time profiling and the perf gate
+//!
+//! The [`profile`] subsystem (DESIGN.md §15) turns the flight recorder
+//! into an attribution instrument: it folds the trace through a
+//! [`profile::Pricer`] — the [`profile::PriceTable`] distilled from the
+//! [`gpusim`] cost models, or the step-clock pricer that reproduces the
+//! accounting sims exactly — into per-request phase breakdowns (queue /
+//! prefill / chunk / swap / spec / decode), per-replica window tilings
+//! of the makespan, a modeled-microseconds Chrome trace
+//! (`flashsampling profile`), and an integer-only FNV digest.  SLO
+//! thresholds (`slo_ttft_ms` / `slo_itl_ms`) classify violations into
+//! `flashsampling_slo_violations_total`, and
+//! [`profile::benchdiff`] (`flashsampling benchdiff OLD NEW`) gates CI
+//! on regressions in the provenance-stamped `BENCH_*.json` schema.
+//! `repro profile-identity` certifies span-balance conservation,
+//! makespan tiling, replay determinism, and profile⇔metrics agreement;
+//! `python/tests/sim_profile_bench.py` re-derives the digest
+//! cross-language.
 
 pub mod benchutil;
 pub mod config;
@@ -115,6 +134,7 @@ pub mod json;
 pub mod kvcache;
 pub mod metrics;
 pub mod prefixcache;
+pub mod profile;
 pub mod repro;
 pub mod router;
 pub mod runtime;

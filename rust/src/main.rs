@@ -4,6 +4,8 @@
 //! flashsampling serve   [--config F] [--set k=v]...   open-loop serving run
 //! flashsampling repro   <id|all|stats> [--out DIR]    regenerate paper tables
 //! flashsampling trace   [--out DIR] [--replicas N]    flight-recorder demo run
+//! flashsampling profile [--out DIR] [--replicas N]    modeled-time profile
+//! flashsampling benchdiff OLD.json NEW.json [--tolerance F]  perf gate
 //! flashsampling bench-kernel [--set k=v]...           PJRT kernel A/B timing
 //! flashsampling selfcheck [--set k=v]...              load artifacts, smoke-run
 //! ```
@@ -23,11 +25,13 @@ use flashsampling::workload::WorkloadGen;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: flashsampling <serve|repro|trace|bench-kernel|selfcheck> [args]\n\
+        "usage: flashsampling <serve|repro|trace|profile|benchdiff|bench-kernel|selfcheck> [args]\n\
          \n\
          serve        [--replicas N] --config FILE | --set key=value ...\n\
-         repro        <table1|table4|...|fig6|chisq|hetero-chisq|specdec-chisq|prefix-identity|stream-identity|chunk-identity|router-identity|trace-identity|e2e-quality|all|stats> [--out DIR]\n\
+         repro        <table1|table4|...|fig6|chisq|hetero-chisq|specdec-chisq|prefix-identity|stream-identity|chunk-identity|router-identity|trace-identity|profile-identity|e2e-quality|all|stats> [--out DIR]\n\
          trace        [--out DIR] [--replicas N] [--set trace_level=lifecycle|full]\n\
+         profile      [--out DIR] [--replicas N]\n\
+         benchdiff    OLD.json NEW.json [--tolerance FRACTION]\n\
          bench-kernel [--set key=value ...]\n\
          selfcheck    [--set key=value ...]"
     );
@@ -297,15 +301,18 @@ fn cmd_repro(cfg: &Config, what: &str) -> Result<()> {
     Ok(())
 }
 
-/// Flight-recorder demonstration run (DESIGN.md §14): drive a
-/// deterministic multi-turn session workload through `Router<SimReplica>`
-/// — no artifacts needed — and export the event log as Chrome-trace JSON
-/// (`trace.json`, loadable at ui.perfetto.dev) plus per-replica canonical
-/// JSONL (`trace-r{i}.jsonl`).  Replays print bit-identical digests.
-fn cmd_trace(cfg: &Config) -> Result<()> {
+/// Drive the deterministic multi-turn session workload (the
+/// router-identity shape: 6 sessions over 4 shared system prompts, 3
+/// turns, one mid-run abort for event variety) through
+/// `Router<SimReplica>` — no artifacts needed — with tracing on.
+/// Shared by `trace` (event-log export) and `profile` (modeled-time
+/// attribution over the same events).
+fn drive_traced_session_demo(
+    cfg: &Config,
+) -> Result<flashsampling::router::Router<flashsampling::router::SimReplica>> {
     use flashsampling::router::{sim_router, SimReplicaConfig};
     use flashsampling::trace::TraceLevel;
-    // The subcommand exists to produce a trace, so `off` (the serving
+    // These subcommands exist to consume a trace, so `off` (the serving
     // default) escalates to `full`; an explicit lifecycle/full sticks.
     let level = if cfg.trace_level == TraceLevel::Off {
         TraceLevel::Full
@@ -318,9 +325,6 @@ fn cmd_trace(cfg: &Config) -> Result<()> {
         cfg.dispatch_policy,
         SimReplicaConfig { trace_level: level, ..Default::default() },
     );
-    // Deterministic session workload (the router-identity shape): 6
-    // multi-turn sessions over 4 shared system prompts, 3 turns, one
-    // mid-run abort for event variety.
     let sys = |s: u64| -> Vec<i32> {
         (0..32).map(|j| ((s * 97 + j * 13 + 5) % 2048) as i32).collect()
     };
@@ -356,6 +360,15 @@ fn cmd_trace(cfg: &Config) -> Result<()> {
             }
         }
     }
+    Ok(router)
+}
+
+/// Flight-recorder demonstration run (DESIGN.md §14): export the demo
+/// workload's event log as Chrome-trace JSON (`trace.json`, loadable at
+/// ui.perfetto.dev) plus per-replica canonical JSONL
+/// (`trace-r{i}.jsonl`).  Replays print bit-identical digests.
+fn cmd_trace(cfg: &Config) -> Result<()> {
+    let router = drive_traced_session_demo(cfg)?;
     std::fs::create_dir_all(&cfg.out_dir)?;
     let chrome = router.chrome_trace();
     std::fs::write(cfg.out_dir.join("trace.json"), &chrome)?;
@@ -377,6 +390,94 @@ fn cmd_trace(cfg: &Config) -> Result<()> {
         cfg.out_dir.display(),
         chrome.len()
     );
+    Ok(())
+}
+
+/// Modeled-time profile of the demo workload (DESIGN.md §15): fold each
+/// replica's flight-recorder stream through the canonical `gpusim`
+/// price table and export per-request phase attribution
+/// (`profile.md`) plus a Chrome trace whose `ts`/`dur` are modeled
+/// microseconds (`profile.json`, loadable at ui.perfetto.dev).  The
+/// conservation checks (`repro profile-identity`) run inline, and the
+/// integer-only digest is replay-stable.
+fn cmd_profile(cfg: &Config) -> Result<()> {
+    use flashsampling::profile::{profile_tracks, slo_violations, PriceTable};
+    let router = drive_traced_session_demo(cfg)?;
+    let tracks: Vec<(usize, &flashsampling::trace::Trace)> = router
+        .replicas()
+        .iter()
+        .enumerate()
+        .map(|(i, e)| (i, &e.trace))
+        .collect();
+    let profile = profile_tracks(&tracks, &PriceTable::canonical())?;
+    profile.check().context("profile conservation check")?;
+    std::fs::create_dir_all(&cfg.out_dir)?;
+    let chrome = profile.chrome_json();
+    std::fs::write(cfg.out_dir.join("profile.json"), &chrome)?;
+    let md = profile.to_markdown();
+    std::fs::write(cfg.out_dir.join("profile.md"), &md)?;
+    print!("{md}");
+    if cfg.slo_ttft_ms > 0 || cfg.slo_itl_ms > 0 {
+        let (ttft, itl) = slo_violations(
+            &profile,
+            cfg.slo_ttft_ms * 1000,
+            cfg.slo_itl_ms * 1000,
+        );
+        println!(
+            "[profile] modeled SLO violations: ttft {ttft} (> {} ms) | \
+             itl {itl} (> {} ms)",
+            cfg.slo_ttft_ms, cfg.slo_itl_ms
+        );
+    }
+    println!(
+        "[profile] wrote {}/profile.json ({} bytes, modeled-µs Chrome \
+         trace — load at ui.perfetto.dev) and profile.md",
+        cfg.out_dir.display(),
+        chrome.len()
+    );
+    Ok(())
+}
+
+/// Perf-regression gate: compare two `BENCH_*.json` reports in the
+/// shared provenance-stamped schema and exit nonzero on any metric
+/// regressing beyond the noise band (DESIGN.md §15).
+fn cmd_benchdiff(args: &[String]) -> Result<()> {
+    use flashsampling::profile::benchdiff::{diff_reports, DEFAULT_TOLERANCE};
+    let mut tolerance = DEFAULT_TOLERANCE;
+    let mut files = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--tolerance" => {
+                tolerance = args
+                    .get(i + 1)
+                    .context("--tolerance needs a fraction (e.g. 0.05)")?
+                    .parse()?;
+                i += 2;
+            }
+            other if other.starts_with("--") => bail!("unknown flag {other}"),
+            f => {
+                files.push(f.to_string());
+                i += 1;
+            }
+        }
+    }
+    let [old_path, new_path] = files.as_slice() else {
+        bail!("usage: flashsampling benchdiff OLD.json NEW.json [--tolerance F]");
+    };
+    let old = std::fs::read_to_string(old_path)
+        .with_context(|| format!("reading {old_path}"))?;
+    let new = std::fs::read_to_string(new_path)
+        .with_context(|| format!("reading {new_path}"))?;
+    let diff = diff_reports(&old, &new, tolerance)?;
+    print!("{}", diff.to_markdown(tolerance));
+    if diff.is_regression() {
+        bail!(
+            "benchdiff: {} regression(s) beyond the ±{:.1}% band",
+            diff.regressions.len(),
+            tolerance * 100.0
+        );
+    }
     Ok(())
 }
 
@@ -496,6 +597,11 @@ fn cmd_selfcheck(cfg: &Config) -> Result<()> {
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = args.first() else { usage() };
+    // benchdiff takes two file paths (not config overrides) — parse its
+    // args directly.
+    if cmd == "benchdiff" {
+        return cmd_benchdiff(&args[1..]);
+    }
     let (cfg, positional) = parse_overrides(&args[1..])?;
     match cmd.as_str() {
         "serve" => cmd_serve(&cfg),
@@ -504,6 +610,7 @@ fn main() -> Result<()> {
             cmd_repro(&cfg, what)
         }
         "trace" => cmd_trace(&cfg),
+        "profile" => cmd_profile(&cfg),
         "bench-kernel" => cmd_bench_kernel(&cfg),
         "selfcheck" => cmd_selfcheck(&cfg),
         _ => usage(),

@@ -152,6 +152,13 @@ pub struct ServingMetrics {
     pub wall: Duration,
     /// Named counters (preemptions, bucket padding waste, ...).
     pub counters: HashMap<String, u64>,
+    /// TTFT SLO threshold in µs (`slo_ttft_ms` config key, DESIGN.md
+    /// §15); 0 disables the classification AND its Prometheus family,
+    /// keeping the exposition byte-identical to the pre-SLO stack.
+    pub slo_ttft_us: u64,
+    /// Inter-token-latency SLO threshold in µs (`slo_itl_ms`); 0
+    /// disables.
+    pub slo_itl_us: u64,
 }
 
 impl ServingMetrics {
@@ -224,6 +231,32 @@ impl ServingMetrics {
         let accepted =
             self.counters.get("spec_accepted_tokens").copied().unwrap_or(0);
         Some(accepted as f64 / drafted as f64)
+    }
+
+    /// Requests whose TTFT exceeded the `slo_ttft_us` threshold
+    /// (`ttft` holds one entry per completed first token, so this is a
+    /// per-request classification).  0 when the threshold is disabled.
+    pub fn slo_ttft_violations(&self) -> u64 {
+        if self.slo_ttft_us == 0 {
+            return 0;
+        }
+        self.ttft
+            .iter()
+            .filter(|d| d.as_micros() as u64 > self.slo_ttft_us)
+            .count() as u64
+    }
+
+    /// Inter-token gaps that exceeded the `slo_itl_us` threshold,
+    /// counted over the raw decode-latency population (tail stalls, not
+    /// slow-on-average requests).  0 when the threshold is disabled.
+    pub fn slo_itl_violations(&self) -> u64 {
+        if self.slo_itl_us == 0 {
+            return 0;
+        }
+        self.inter_token
+            .iter()
+            .filter(|d| d.as_micros() as u64 > self.slo_itl_us)
+            .count() as u64
     }
 
     /// Token-level prefix-cache hit rate: the fraction of prefill tokens
@@ -341,6 +374,31 @@ impl ServingMetrics {
         ));
         fams.push((
             "# TYPE flashsampling_ttft_microseconds histogram\n".into(),
+            body,
+        ));
+        // SLO violation counters (DESIGN.md §15), one sample per ENABLED
+        // threshold.  Both thresholds default 0 (off), leaving the body
+        // empty — the renderers then suppress the family entirely, so
+        // legacy scrapes stay byte-identical.  The family holds a fixed
+        // slot (before the named counters, which stay last) so the
+        // per-replica zip stays aligned.
+        let mut body = String::new();
+        if self.slo_ttft_us > 0 {
+            body.push_str(&format!(
+                "flashsampling_slo_violations_total{} {}\n",
+                lbl("kind=\"ttft\""),
+                self.slo_ttft_violations()
+            ));
+        }
+        if self.slo_itl_us > 0 {
+            body.push_str(&format!(
+                "flashsampling_slo_violations_total{} {}\n",
+                lbl("kind=\"itl\""),
+                self.slo_itl_violations()
+            ));
+        }
+        fams.push((
+            "# TYPE flashsampling_slo_violations_total counter\n".into(),
             body,
         ));
         let mut names: Vec<&String> = self.counters.keys().collect();
@@ -603,6 +661,62 @@ flashsampling_counter{name=\"preempted\"} 2
         assert!(empty.contains("flashsampling_ttft_microseconds_count 0"));
         assert!(!empty.contains("quantile"));
         assert!(!empty.contains("# TYPE flashsampling_counter counter"));
+        // SLO thresholds default off: the family must be absent so the
+        // exact-output check above (no slo lines) keeps holding.
+        assert!(!empty.contains("slo_violations"));
+        // Enabling a threshold adds exactly the new family, in its slot
+        // BEFORE the named counters, without disturbing anything else.
+        let mut slo = m.clone();
+        slo.slo_ttft_us = 15_000; // 15ms: 20ms and 30ms TTFTs violate
+        slo.slo_itl_us = 5_000; // 5ms: the 6ms inter-token gap violates
+        let rendered = slo.render_prometheus();
+        let expect_slo = "\
+# TYPE flashsampling_slo_violations_total counter
+flashsampling_slo_violations_total{kind=\"ttft\"} 2
+flashsampling_slo_violations_total{kind=\"itl\"} 1
+# TYPE flashsampling_counter counter
+";
+        assert!(rendered.contains(expect_slo));
+        assert_eq!(
+            rendered.replace(
+                "# TYPE flashsampling_slo_violations_total counter
+flashsampling_slo_violations_total{kind=\"ttft\"} 2
+flashsampling_slo_violations_total{kind=\"itl\"} 1
+",
+                ""
+            ),
+            expect
+        );
+        // One enabled threshold renders only its kind.
+        let mut ttft_only = m.clone();
+        ttft_only.slo_ttft_us = 15_000;
+        let rendered = ttft_only.render_prometheus();
+        assert!(rendered.contains("{kind=\"ttft\"} 2\n"));
+        assert!(!rendered.contains("kind=\"itl\""));
+    }
+
+    #[test]
+    fn slo_violation_counting() {
+        let mut m = ServingMetrics::default();
+        m.ttft = vec![
+            Duration::from_millis(10),
+            Duration::from_millis(20),
+            Duration::from_millis(30),
+        ];
+        m.inter_token = vec![Duration::from_millis(4), Duration::from_millis(6)];
+        // Disabled thresholds count nothing.
+        assert_eq!(m.slo_ttft_violations(), 0);
+        assert_eq!(m.slo_itl_violations(), 0);
+        // Strictly-greater-than semantics: a sample AT the threshold
+        // meets the SLO.
+        m.slo_ttft_us = 20_000;
+        m.slo_itl_us = 6_000;
+        assert_eq!(m.slo_ttft_violations(), 1);
+        assert_eq!(m.slo_itl_violations(), 0);
+        m.slo_ttft_us = 1;
+        m.slo_itl_us = 1;
+        assert_eq!(m.slo_ttft_violations(), 3);
+        assert_eq!(m.slo_itl_violations(), 2);
     }
 
     #[test]
@@ -635,6 +749,21 @@ flashsampling_counter{name=\"preempted\"} 2
         ));
         assert!(multi
             .contains("flashsampling_counter{replica=\"0\",name=\"preempted\"} 1\n"));
+        // SLO family: off everywhere → suppressed; enabled on one
+        // replica → one TYPE header, replica-labeled samples.
+        assert!(!multi.contains("slo_violations"));
+        let mut c = a.clone();
+        c.slo_ttft_us = 5_000; // 10ms TTFT violates
+        let slo_multi = render_prometheus_replicas(&[&c, &b]);
+        assert_eq!(
+            slo_multi
+                .matches("# TYPE flashsampling_slo_violations_total counter")
+                .count(),
+            1
+        );
+        assert!(slo_multi.contains(
+            "flashsampling_slo_violations_total{replica=\"0\",kind=\"ttft\"} 1\n"
+        ));
         // No replica has named counters → the family header is suppressed
         // in the zipped render too.
         let empty_multi = render_prometheus_replicas(&[

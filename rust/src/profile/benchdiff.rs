@@ -1,0 +1,391 @@
+//! Perf-regression gate over `BENCH_*.json` reports
+//! (`flashsampling benchdiff OLD.json NEW.json`).
+//!
+//! Both inputs use the shared `benchutil` schema (schema_version ≥ 1:
+//! `{"bench", "schema_version", ["source", "config",] "results": [..]}`).
+//! Records are matched by their **identity fields** — every scalar
+//! field that is not a recognized metric (and not the provenance
+//! `source` stamp) — so the gate needs no bespoke per-bench parsing:
+//! adding a metric column to a bench automatically adds it to the gate,
+//! and changing a workload knob makes the record a *different record*
+//! (reported as added/removed) instead of a bogus comparison.
+//!
+//! Metric direction is inferred from the house naming convention:
+//! `*_ns` / `*_us` / `*_w` (nanoseconds, microseconds, weighted-step
+//! latencies) are lower-is-better; the known throughput/yield counters
+//! (`completed`, `tokens_generated`, `cached_prefill_tokens`,
+//! `min_replica_completed`, `iters_per_sample`) are higher-is-better.
+//! A change beyond the relative noise band (`tolerance`, default 5%) in
+//! the bad direction is a regression; the CLI exits nonzero on any.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::json::{self, Value};
+
+/// Default relative noise band: 5%.  The accounting-sim benches are
+/// bit-deterministic, so CI could run at 0, but the default leaves
+/// headroom for wall-clock benches sharing the same schema.
+pub const DEFAULT_TOLERANCE: f64 = 0.05;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Direction {
+    LowerIsBetter,
+    HigherIsBetter,
+}
+
+/// Classify a record field as a metric (with direction) or an identity
+/// field (`None`).
+fn direction(key: &str) -> Option<Direction> {
+    const HIGHER: [&str; 5] = [
+        "completed",
+        "tokens_generated",
+        "cached_prefill_tokens",
+        "min_replica_completed",
+        "iters_per_sample",
+    ];
+    if HIGHER.contains(&key) {
+        Some(Direction::HigherIsBetter)
+    } else if key.ends_with("_ns") || key.ends_with("_us") || key.ends_with("_w")
+    {
+        Some(Direction::LowerIsBetter)
+    } else {
+        None
+    }
+}
+
+/// Canonical rendering of an identity-field value (floats that are
+/// whole numbers print as integers, matching both emitters).
+fn canon(v: &Value) -> String {
+    match v {
+        Value::Null => "null".into(),
+        Value::Bool(b) => b.to_string(),
+        Value::Num(n) if n.fract() == 0.0 && n.abs() < 1e15 => {
+            format!("{}", *n as i64)
+        }
+        Value::Num(n) => format!("{n}"),
+        Value::Str(s) => s.clone(),
+        Value::Arr(_) | Value::Obj(_) => "<nested>".into(),
+    }
+}
+
+/// A record's identity: its non-metric scalar fields, minus the
+/// provenance `source` stamp (so a sim-mirror run compares against a
+/// Rust-bench run of the same scenario).
+fn identity(record: &BTreeMap<String, Value>) -> String {
+    let mut parts: Vec<String> = record
+        .iter()
+        .filter(|(k, _)| direction(k).is_none() && *k != "source")
+        .map(|(k, v)| format!("{k}={}", canon(v)))
+        .collect();
+    parts.sort();
+    parts.join(" ")
+}
+
+struct Report {
+    bench: String,
+    records: Vec<(String, BTreeMap<String, Value>)>,
+}
+
+fn parse_report(text: &str, label: &str) -> Result<Report> {
+    let root = json::parse(text).with_context(|| format!("parsing {label}"))?;
+    let bench = root
+        .req("bench")
+        .and_then(Value::as_str)
+        .with_context(|| format!("{label}: missing 'bench' name"))?
+        .to_string();
+    root.req("schema_version")
+        .and_then(Value::as_usize)
+        .with_context(|| format!("{label}: missing 'schema_version'"))?;
+    let mut records = Vec::new();
+    for (i, rec) in root.req("results")?.as_arr()?.iter().enumerate() {
+        let obj = rec
+            .as_obj()
+            .with_context(|| format!("{label}: results[{i}]"))?;
+        records.push((identity(obj), obj.clone()));
+    }
+    Ok(Report { bench, records })
+}
+
+/// Outcome of one benchdiff run.
+#[derive(Clone, Debug, Default)]
+pub struct BenchDiff {
+    pub bench: String,
+    /// Metric comparisons performed across matched records.
+    pub compared: usize,
+    /// Metric moved beyond the noise band in the bad direction.
+    pub regressions: Vec<String>,
+    /// Metric moved beyond the noise band in the good direction.
+    pub improvements: Vec<String>,
+    /// Added/removed records, metric-set drift, and other non-gating
+    /// observations.
+    pub notes: Vec<String>,
+}
+
+impl BenchDiff {
+    pub fn is_regression(&self) -> bool {
+        !self.regressions.is_empty()
+    }
+
+    /// Markdown summary in the repro-report house style.
+    pub fn to_markdown(&self, tolerance: f64) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "## benchdiff — {} ({} comparisons, ±{:.1}% band)\n",
+            self.bench,
+            self.compared,
+            tolerance * 100.0
+        );
+        for r in &self.regressions {
+            let _ = writeln!(out, "- REGRESSION: {r}");
+        }
+        for i in &self.improvements {
+            let _ = writeln!(out, "- improvement: {i}");
+        }
+        for n in &self.notes {
+            let _ = writeln!(out, "- note: {n}");
+        }
+        if self.regressions.is_empty() {
+            let _ = writeln!(out, "\nverdict: WITHIN NOISE BAND");
+        } else {
+            let _ = writeln!(
+                out,
+                "\nverdict: REGRESSION ({} metrics)",
+                self.regressions.len()
+            );
+        }
+        out
+    }
+}
+
+/// Compare two bench reports; `tolerance` is the relative noise band.
+///
+/// Fails (Err) on malformed input or mismatched bench names — those are
+/// usage errors, not regressions.  Detected regressions are returned in
+/// the report; callers gate on [`BenchDiff::is_regression`].
+pub fn diff_reports(
+    old_text: &str,
+    new_text: &str,
+    tolerance: f64,
+) -> Result<BenchDiff> {
+    ensure!(
+        (0.0..1.0).contains(&tolerance),
+        "tolerance must be in [0, 1), got {tolerance}"
+    );
+    let old = parse_report(old_text, "OLD")?;
+    let new = parse_report(new_text, "NEW")?;
+    if old.bench != new.bench {
+        bail!(
+            "bench mismatch: OLD is '{}', NEW is '{}'",
+            old.bench,
+            new.bench
+        );
+    }
+    let mut diff = BenchDiff { bench: old.bench.clone(), ..Default::default() };
+    let old_map: BTreeMap<&str, &BTreeMap<String, Value>> =
+        old.records.iter().map(|(id, r)| (id.as_str(), r)).collect();
+    ensure!(
+        old_map.len() == old.records.len(),
+        "OLD has records with duplicate identity"
+    );
+    let mut matched = 0usize;
+    for (id, new_rec) in &new.records {
+        let Some(old_rec) = old_map.get(id.as_str()) else {
+            diff.notes.push(format!("new record [{id}] has no OLD baseline"));
+            continue;
+        };
+        matched += 1;
+        for (key, new_val) in new_rec {
+            let Some(dir) = direction(key) else { continue };
+            let Some(old_val) = old_rec.get(key) else {
+                diff.notes
+                    .push(format!("[{id}] metric '{key}' absent in OLD"));
+                continue;
+            };
+            let o = old_val.as_f64()?;
+            let n = new_val.as_f64()?;
+            diff.compared += 1;
+            let band = o.abs() * tolerance;
+            let (delta, worse) = match dir {
+                Direction::LowerIsBetter => (n - o, n > o + band),
+                Direction::HigherIsBetter => (o - n, n < o - band),
+            };
+            let better = delta < -band;
+            if worse {
+                diff.regressions.push(format!(
+                    "[{id}] {key}: {o} -> {n} ({:+.1}% vs ±{:.1}%)",
+                    pct(delta, o),
+                    tolerance * 100.0
+                ));
+            } else if better {
+                diff.improvements.push(format!(
+                    "[{id}] {key}: {o} -> {n} ({:+.1}%)",
+                    pct(delta, o)
+                ));
+            }
+        }
+        for key in old_rec.keys() {
+            if direction(key).is_some() && !new_rec.contains_key(key) {
+                diff.regressions.push(format!(
+                    "[{id}] metric '{key}' dropped from NEW"
+                ));
+            }
+        }
+    }
+    for (id, _) in &old.records {
+        if !new.records.iter().any(|(nid, _)| nid == id) {
+            diff.regressions
+                .push(format!("baseline record [{id}] missing from NEW"));
+        }
+    }
+    if matched == 0 {
+        bail!("no records matched between OLD and NEW — wrong files?");
+    }
+    Ok(diff)
+}
+
+/// Signed percent change in the *bad* direction, relative to baseline.
+fn pct(delta: f64, baseline: f64) -> f64 {
+    if baseline == 0.0 {
+        if delta == 0.0 { 0.0 } else { f64::INFINITY }
+    } else {
+        100.0 * delta / baseline.abs()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(bench: &str, recs: &[&str]) -> String {
+        format!(
+            "{{\"bench\": \"{bench}\", \"schema_version\": 2, \
+             \"source\": \"test\", \"config\": {{}}, \"results\": [{}]}}",
+            recs.join(", ")
+        )
+    }
+
+    #[test]
+    fn identical_reports_are_clean() {
+        let r = report(
+            "serving",
+            &["{\"scenario\": \"a\", \"ttft_p95_w\": 100, \
+               \"completed\": 16}"],
+        );
+        let d = diff_reports(&r, &r, DEFAULT_TOLERANCE).unwrap();
+        assert!(!d.is_regression());
+        assert_eq!(d.compared, 2);
+        assert!(d.improvements.is_empty());
+        assert!(d.to_markdown(DEFAULT_TOLERANCE).contains("WITHIN NOISE"));
+    }
+
+    #[test]
+    fn latency_regression_is_flagged_with_direction() {
+        let old = report(
+            "serving",
+            &["{\"scenario\": \"a\", \"ttft_p95_w\": 100, \
+               \"completed\": 16}"],
+        );
+        // +20% latency: regression.  +20% completed: improvement.
+        let new = report(
+            "serving",
+            &["{\"scenario\": \"a\", \"ttft_p95_w\": 120, \
+               \"completed\": 20}"],
+        );
+        let d = diff_reports(&old, &new, DEFAULT_TOLERANCE).unwrap();
+        assert_eq!(d.regressions.len(), 1);
+        assert!(d.regressions[0].contains("ttft_p95_w"));
+        assert_eq!(d.improvements.len(), 1);
+        assert!(d.improvements[0].contains("completed"));
+        // Reversed direction: lower latency is NOT a regression, lower
+        // completion count IS.
+        let d = diff_reports(&new, &old, DEFAULT_TOLERANCE).unwrap();
+        assert_eq!(d.regressions.len(), 1);
+        assert!(d.regressions[0].contains("completed"));
+    }
+
+    #[test]
+    fn within_band_changes_pass() {
+        let old =
+            report("serving", &["{\"scenario\": \"a\", \"itl_p50_w\": 100}"]);
+        let new =
+            report("serving", &["{\"scenario\": \"a\", \"itl_p50_w\": 104}"]);
+        let d = diff_reports(&old, &new, DEFAULT_TOLERANCE).unwrap();
+        assert!(!d.is_regression());
+        assert!(d.improvements.is_empty());
+    }
+
+    #[test]
+    fn identity_fields_partition_records() {
+        // Different chunk setting = different record, not a comparison.
+        let old = report(
+            "serving",
+            &["{\"scenario\": \"a\", \"chunk\": 16, \"ttft_p95_w\": 100}"],
+        );
+        let new = report(
+            "serving",
+            &[
+                "{\"scenario\": \"a\", \"chunk\": 16, \"ttft_p95_w\": 100}",
+                "{\"scenario\": \"a\", \"chunk\": 64, \"ttft_p95_w\": 500}",
+            ],
+        );
+        let d = diff_reports(&old, &new, DEFAULT_TOLERANCE).unwrap();
+        assert!(!d.is_regression());
+        assert_eq!(d.notes.len(), 1);
+        // A dropped baseline record IS a regression (silent coverage
+        // loss must fail the gate).
+        let d = diff_reports(&new, &old, DEFAULT_TOLERANCE).unwrap();
+        assert!(d.is_regression());
+        assert!(d.regressions[0].contains("missing from NEW"));
+    }
+
+    #[test]
+    fn source_stamp_is_not_identity() {
+        let old = report(
+            "serving",
+            &["{\"scenario\": \"a\", \"source\": \"accounting-sim\", \
+               \"ttft_p95_w\": 100}"],
+        );
+        let new = report(
+            "serving",
+            &["{\"scenario\": \"a\", \"source\": \"rust-bench\", \
+               \"ttft_p95_w\": 100}"],
+        );
+        let d = diff_reports(&old, &new, DEFAULT_TOLERANCE).unwrap();
+        assert_eq!(d.compared, 1);
+        assert!(!d.is_regression());
+    }
+
+    #[test]
+    fn usage_errors_bail() {
+        let a = report("serving", &["{\"scenario\": \"a\", \"x_w\": 1}"]);
+        let b = report("router", &["{\"scenario\": \"a\", \"x_w\": 1}"]);
+        assert!(diff_reports(&a, &b, DEFAULT_TOLERANCE)
+            .unwrap_err()
+            .to_string()
+            .contains("bench mismatch"));
+        assert!(diff_reports("nonsense", &a, DEFAULT_TOLERANCE).is_err());
+        let c = report("serving", &["{\"scenario\": \"other\", \"x_w\": 1}"]);
+        assert!(diff_reports(&a, &c, DEFAULT_TOLERANCE)
+            .unwrap_err()
+            .to_string()
+            .contains("no records matched"));
+    }
+
+    #[test]
+    fn dropped_metric_is_a_regression() {
+        let old = report(
+            "serving",
+            &["{\"scenario\": \"a\", \"ttft_p95_w\": 100, \
+               \"itl_p50_w\": 7}"],
+        );
+        let new =
+            report("serving", &["{\"scenario\": \"a\", \"ttft_p95_w\": 100}"]);
+        let d = diff_reports(&old, &new, DEFAULT_TOLERANCE).unwrap();
+        assert!(d.is_regression());
+        assert!(d.regressions[0].contains("dropped"));
+    }
+}

@@ -1,0 +1,1197 @@
+//! Modeled-time profiler over the flight recorder (DESIGN.md §15).
+//!
+//! The PR 8 trace (DESIGN.md §14) records *what* happened on a logical
+//! step clock; this module answers *where the modeled time goes*.  It
+//! folds a [`Trace`] event stream through a [`Pricer`] — either the
+//! [`PriceTable`] distilled from the `gpusim` cost models
+//! (`kernelchain` + `roofline` prefill pricing, `tpot` decode steps,
+//! `SpecDecodeModel`-shaped speculative bursts, `iomodel` PCIe swap
+//! traffic, `interconnect` dispatch fan-out), or the [`StepClockPricer`]
+//! that reproduces the accounting sims' weighted step clock exactly —
+//! and produces:
+//!
+//! * a per-replica **window list**: contiguous exclusive slices of the
+//!   modeled timeline, one per compute/transfer batch, that provably
+//!   tile the replica makespan (no gaps, no overlaps, no negative
+//!   durations);
+//! * a per-request **phase breakdown** (queue wait / prefill / chunk
+//!   windows / swap / spec bursts / decode) whose parts sum to the
+//!   request's span — the conservation law `repro profile-identity`
+//!   certifies;
+//! * a Chrome-trace export where `ts`/`dur` are **modeled
+//!   microseconds** instead of step ticks (`flashsampling profile`);
+//! * an FNV-1a digest over the canonical integer summary lines, exact
+//!   and replay-stable because every price is an integer microcount —
+//!   `python/tests/sim_profile_bench.py` re-derives it cross-language
+//!   with no floating point anywhere.
+//!
+//! # Exactness and determinism
+//!
+//! Three properties make the profile a *certificate* rather than an
+//! estimate of an estimate:
+//!
+//! 1. **Integer prices.**  [`PriceTable::canonical`] pins each price as
+//!    a `u64` microsecond count (rounded once, at table-construction
+//!    time, from the `gpusim` f64 models).  All downstream arithmetic
+//!    is `u64` addition/multiplication, so there is no accumulation
+//!    order to get wrong and the Python mirror needs no float replay.
+//! 2. **Replay-stable input.**  The trace digest is replay-stable
+//!    (DESIGN.md §14), so the same workload always yields the same
+//!    event stream, hence the same profile digest.
+//! 3. **Conservation by construction.**  Windows advance one cursor;
+//!    request stamps are cursor values; every attributed duration is a
+//!    whole window that lies inside the request's span.  The checks in
+//!    [`ReplicaProfile::check`] re-verify all of it from the output
+//!    alone.
+//!
+//! The profiler consumes the trace *ring*, so it requires an unevicted
+//! trace: size `trace_ring_cap` (config) to the workload, or profile
+//! per-scenario as the repro ids do.  (The trace digest itself is
+//! eviction-independent; only profiling needs the full event list.)
+
+pub mod benchdiff;
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::gpusim::iomodel::PcieModel;
+use crate::gpusim::specs::GpuSpec;
+use crate::gpusim::tpot::ModelSpec;
+use crate::gpusim::{interconnect, Method};
+use crate::trace::{EventKind, Trace};
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Round a seconds quantity from the f64 `gpusim` models to integer
+/// microseconds — the one place floating point touches the profiler.
+fn us(seconds: f64) -> u64 {
+    (seconds * 1e6 + 0.5).floor() as u64
+}
+
+/// Integer microsecond prices for every traced operation class,
+/// distilled from the `gpusim` cost models.
+///
+/// [`PriceTable::canonical`] is the frozen calibration the digest (and
+/// the Python mirror) are defined over; [`PriceTable::derive`] rebuilds
+/// the same table live from the models, and a unit test keeps the two
+/// within tolerance so a `gpusim` recalibration is flagged instead of
+/// silently shifting every certified digest.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PriceTable {
+    /// Marginal prefill compute per uncached prompt token
+    /// (`ModelSpec::prefill_time` slope in its compute-bound regime).
+    pub prefill_us_per_token: u64,
+    /// Prefill floor: one streaming pass over the weights — the
+    /// roofline memory bound tiny suffixes still pay.
+    pub prefill_stream_floor_us: u64,
+    /// Fixed per-window cost (kernel dispatch chain + host overhead),
+    /// paid by every prefill batch and every chunk window.
+    pub window_fixed_us: u64,
+    /// One decode step at the calibrated batch (backbone + fused
+    /// FlashSampling LM head, `ModelSpec::tpot`).
+    pub decode_step_us: u64,
+    /// Per drafted token: one draft-model pass (the spec-decode model's
+    /// `draft_cost` fraction of a backbone step).
+    pub spec_draft_us: u64,
+    /// One speculative verify pass (backbone + wide-batch LM head).
+    pub spec_verify_us: u64,
+    /// PCIe transfer of one paged-KV block (`PcieModel::transfer_us`).
+    pub swap_us_per_block: u64,
+    /// Router placement decision (`interconnect::fanout_barrier_time`
+    /// at fan-out 2 — one probe/ack round).
+    pub dispatch_us: u64,
+}
+
+impl PriceTable {
+    /// The frozen calibration: [`PriceTable::derive`] on
+    /// [`crate::gpusim::specs::B200`] × [`crate::gpusim::tpot::QWEN3_8B`],
+    /// rounded to integer microseconds and pinned.  Certified digests —
+    /// and `python/tests/sim_profile_bench.py` — embed exactly these
+    /// constants; see `canonical_tracks_derived_table` for the drift
+    /// tripwire.
+    pub fn canonical() -> Self {
+        Self {
+            prefill_us_per_token: 15,
+            prefill_stream_floor_us: 2412,
+            window_fixed_us: 1282,
+            decode_step_us: 3805,
+            spec_draft_us: 360,
+            spec_verify_us: 3805,
+            swap_us_per_block: 84,
+            dispatch_us: 24,
+        }
+    }
+
+    /// Rebuild the table live from the `gpusim` models (public API
+    /// only), for any GPU × model pair.
+    pub fn derive(gpu: &GpuSpec, m: &ModelSpec) -> Self {
+        // Slope of prefill_time in its compute-bound regime; the
+        // intercept at 0 tokens splits into the weight-stream floor
+        // (computable from public spec fields) plus the fixed
+        // dispatch+host term.
+        let slope =
+            (m.prefill_time(gpu, 2000, 0.0) - m.prefill_time(gpu, 1000, 0.0))
+                / 1000.0;
+        let stream_floor =
+            m.params * 2.0 / m.tp as f64 / (gpu.hbm_bw * gpu.bw_efficiency);
+        let window_fixed = m.prefill_time(gpu, 0, 0.0) - stream_floor;
+        // One draft pass is modeled at the spec-decode model's default
+        // draft_cost = 0.1 of a backbone step.
+        let backbone = m.backbone_time(gpu, 8);
+        // KV width per token: d_model / 4 is the serving model's GQA
+        // KV projection (kv_heads * head_dim = d_model / 4), FP32, at
+        // the default 16-token block.
+        let block_bytes =
+            PcieModel::kv_block_bytes(m.n_layers, 1, m.d_model / 4, 16);
+        Self {
+            prefill_us_per_token: us(slope),
+            prefill_stream_floor_us: us(stream_floor),
+            window_fixed_us: us(window_fixed),
+            decode_step_us: us(m.tpot(gpu, 8, Method::FlashSampling)),
+            spec_draft_us: us(0.1 * backbone),
+            spec_verify_us: us(
+                backbone + m.lm_head_time(gpu, 32, Method::FlashSampling),
+            ),
+            // transfer_us already returns microseconds.
+            swap_us_per_block: us(
+                PcieModel::default().transfer_us(block_bytes) * 1e-6,
+            ),
+            dispatch_us: us(interconnect::fanout_barrier_time(gpu, 2)),
+        }
+    }
+}
+
+/// Prices one window of each phase in integer microseconds.
+///
+/// Two implementations ship: [`PriceTable`] (modeled GPU time) and
+/// [`StepClockPricer`] (the accounting sims' weighted step clock —
+/// the bridge that lets `repro profile-identity` prove the profiler's
+/// window/stamp construction against `ServingMetrics` exactly).
+pub trait Pricer {
+    /// One chunked-prefill window consuming `take` prompt tokens.
+    fn chunk_window_us(&self, take: usize) -> u64;
+    /// One prefill batch whose longest uncached prompt suffix is
+    /// `longest_uncached` tokens.
+    fn prefill_us(&self, longest_uncached: usize) -> u64;
+    /// One ordinary decode step (whole batch).
+    fn decode_us(&self) -> u64;
+    /// One speculative burst batch whose widest row drafted
+    /// `max_drafted` tokens.
+    fn spec_us(&self, max_drafted: u64) -> u64;
+    /// One swap-in/out transfer of `blocks` KV blocks.
+    fn swap_us(&self, blocks: u64) -> u64;
+    /// One router placement decision.
+    fn dispatch_us(&self) -> u64;
+    /// One scheduler step that planned nothing.
+    fn idle_us(&self) -> u64;
+    /// Name recorded in reports.
+    fn name(&self) -> &'static str;
+}
+
+impl Pricer for PriceTable {
+    fn chunk_window_us(&self, take: usize) -> u64 {
+        (take as u64 * self.prefill_us_per_token)
+            .max(self.prefill_stream_floor_us)
+            + self.window_fixed_us
+    }
+
+    fn prefill_us(&self, longest_uncached: usize) -> u64 {
+        (longest_uncached as u64 * self.prefill_us_per_token)
+            .max(self.prefill_stream_floor_us)
+            + self.window_fixed_us
+    }
+
+    fn decode_us(&self) -> u64 {
+        self.decode_step_us
+    }
+
+    fn spec_us(&self, max_drafted: u64) -> u64 {
+        self.spec_verify_us + max_drafted * self.spec_draft_us
+    }
+
+    fn swap_us(&self, blocks: u64) -> u64 {
+        blocks * self.swap_us_per_block
+    }
+
+    fn dispatch_us(&self) -> u64 {
+        self.dispatch_us
+    }
+
+    /// An idle scheduler step runs nothing, so the modeled clock does
+    /// not advance (zero-duration windows are legal in the tiling).
+    fn idle_us(&self) -> u64 {
+        0
+    }
+
+    fn name(&self) -> &'static str {
+        "modeled"
+    }
+}
+
+/// Reproduces the accounting sims' weighted step clock
+/// (`testutil::schedsim` / `router::sim` `wtime`): prefill advances by
+/// the longest uncached suffix, chunk windows by their take, decode /
+/// spec / idle by one, swaps and dispatches are free.  Profiling a sim
+/// trace with this pricer must land every stamp exactly on the sim's
+/// own clock — the `repro profile-identity` agreement legs.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepClockPricer;
+
+impl Pricer for StepClockPricer {
+    fn chunk_window_us(&self, take: usize) -> u64 {
+        take.max(1) as u64
+    }
+
+    fn prefill_us(&self, longest_uncached: usize) -> u64 {
+        longest_uncached.max(1) as u64
+    }
+
+    fn decode_us(&self) -> u64 {
+        1
+    }
+
+    fn spec_us(&self, _max_drafted: u64) -> u64 {
+        1
+    }
+
+    fn swap_us(&self, _blocks: u64) -> u64 {
+        0
+    }
+
+    fn dispatch_us(&self) -> u64 {
+        0
+    }
+
+    fn idle_us(&self) -> u64 {
+        1
+    }
+
+    fn name(&self) -> &'static str {
+        "step-clock"
+    }
+}
+
+/// Phase of one profiled window / one request-breakdown bucket.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    Prefill,
+    Chunk,
+    Decode,
+    Spec,
+    Swap,
+    Dispatch,
+    Idle,
+}
+
+impl Phase {
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Prefill => "prefill",
+            Phase::Chunk => "chunk",
+            Phase::Decode => "decode",
+            Phase::Spec => "spec",
+            Phase::Swap => "swap",
+            Phase::Dispatch => "dispatch",
+            Phase::Idle => "idle",
+        }
+    }
+
+    /// Phases attributed to participating requests.  Dispatch and idle
+    /// time is nobody's compute: it lands in the requests' queue
+    /// residual, which keeps the conservation law exact.
+    fn attributed(self) -> bool {
+        !matches!(self, Phase::Dispatch | Phase::Idle)
+    }
+}
+
+/// One exclusive slice of a replica's modeled timeline.  Windows are
+/// emitted in construction order and chain contiguously:
+/// `windows[i+1].start_us == windows[i].start_us + windows[i].dur_us`.
+#[derive(Clone, Debug)]
+pub struct Window {
+    pub start_us: u64,
+    pub dur_us: u64,
+    /// Logical step clock the window's events were traced at.
+    pub step: u64,
+    pub phase: Phase,
+    /// Request ids served by this window (empty for engine-scoped idle
+    /// windows).
+    pub participants: Vec<u64>,
+}
+
+/// Per-request cost attribution: phase durations summing (with the
+/// queue residual) to the request's span.
+#[derive(Clone, Debug, Default)]
+pub struct RequestProfile {
+    pub id: u64,
+    pub submit_us: u64,
+    /// Stamp of the terminal event; `None` for requests still open at
+    /// the end of the trace (their span runs to the makespan).
+    pub finish_us: Option<u64>,
+    /// Span minus all attributed phases — scheduler queueing plus any
+    /// dispatch/idle time the request sat through.
+    pub queue_us: u64,
+    pub prefill_us: u64,
+    pub chunk_us: u64,
+    pub swap_us: u64,
+    pub spec_us: u64,
+    pub decode_us: u64,
+    pub span_us: u64,
+    /// Modeled time to first token (`None` if nothing was emitted).
+    pub ttft_us: Option<u64>,
+    /// Modeled emission time of every token (window-end stamps; spec
+    /// bursts stamp all emitted tokens at the burst window's end).
+    /// Excluded from the digest — `ttft_us` + `tokens` summarize it.
+    pub token_times_us: Vec<u64>,
+    pub tokens: u64,
+    /// Finish reason, `"rejected"` for front-door rejects, `"open"` for
+    /// requests without a terminal event.
+    pub finish: String,
+    /// Token count carried by the terminal event (conservation
+    /// cross-check against `tokens`).
+    finish_tokens: Option<u64>,
+}
+
+impl RequestProfile {
+    /// Sum of the attributed compute/transfer phases.
+    pub fn attributed_us(&self) -> u64 {
+        self.prefill_us + self.chunk_us + self.swap_us + self.spec_us
+            + self.decode_us
+    }
+}
+
+/// One replica's profile: the window tiling plus per-request rollups.
+#[derive(Clone, Debug)]
+pub struct ReplicaProfile {
+    pub replica: usize,
+    pub windows: Vec<Window>,
+    /// Sorted by request id.
+    pub requests: Vec<RequestProfile>,
+    /// Final cursor position == Σ window durations.
+    pub makespan_us: u64,
+}
+
+/// A full profile (one entry per replica) under one pricer.
+#[derive(Clone, Debug)]
+pub struct Profile {
+    pub pricer: &'static str,
+    pub replicas: Vec<ReplicaProfile>,
+}
+
+/// In-flight window being merged from consecutive same-class events.
+struct OpenWindow {
+    phase: Phase,
+    step: u64,
+    participants: Vec<u64>,
+    longest_uncached: usize,
+    max_drafted: u64,
+    take: usize,
+    blocks: u64,
+    /// `(id, tokens)` emissions stamped at window end.
+    emits: Vec<(u64, u64)>,
+    /// Terminal events deferred to the window end (finishes interleave
+    /// per-row inside prefill batches; stamping them at the enclosing
+    /// window's close keeps spans aligned to the step clock).
+    finishes: Vec<(u64, String, u64)>,
+}
+
+impl OpenWindow {
+    fn new(phase: Phase, step: u64) -> Self {
+        Self {
+            phase,
+            step,
+            participants: Vec::new(),
+            longest_uncached: 0,
+            max_drafted: 0,
+            take: 0,
+            blocks: 0,
+            emits: Vec::new(),
+            finishes: Vec::new(),
+        }
+    }
+
+    fn join(&mut self, id: u64) {
+        if !self.participants.contains(&id) {
+            self.participants.push(id);
+        }
+    }
+}
+
+#[derive(Default)]
+struct ReqBuild {
+    submit_us: Option<u64>,
+    finish: Option<(u64, String, u64)>,
+    prompt_len: usize,
+    /// Prompt tokens already resident (chunk-window progress or radix
+    /// attach) — what the next prefill window does NOT recompute.
+    resident: usize,
+    prefill_us: u64,
+    chunk_us: u64,
+    swap_us: u64,
+    spec_us: u64,
+    decode_us: u64,
+    tokens: u64,
+    token_times: Vec<u64>,
+}
+
+/// Close `w`: price it, attribute it, stamp deferred emissions and
+/// finishes at its end, and advance the cursor.
+fn close_window(
+    w: OpenWindow,
+    cursor: &mut u64,
+    windows: &mut Vec<Window>,
+    reqs: &mut BTreeMap<u64, ReqBuild>,
+    pricer: &dyn Pricer,
+) {
+    let dur = match w.phase {
+        Phase::Prefill => pricer.prefill_us(w.longest_uncached),
+        Phase::Chunk => pricer.chunk_window_us(w.take),
+        Phase::Decode => pricer.decode_us(),
+        Phase::Spec => pricer.spec_us(w.max_drafted),
+        Phase::Swap => pricer.swap_us(w.blocks),
+        Phase::Dispatch => pricer.dispatch_us(),
+        Phase::Idle => pricer.idle_us(),
+    };
+    let end = *cursor + dur;
+    if w.phase.attributed() {
+        for &id in &w.participants {
+            let r = reqs.entry(id).or_default();
+            match w.phase {
+                Phase::Prefill => r.prefill_us += dur,
+                Phase::Chunk => r.chunk_us += dur,
+                Phase::Decode => r.decode_us += dur,
+                Phase::Spec => r.spec_us += dur,
+                Phase::Swap => r.swap_us += dur,
+                Phase::Dispatch | Phase::Idle => unreachable!(),
+            }
+        }
+    }
+    for (id, n) in &w.emits {
+        let r = reqs.entry(*id).or_default();
+        r.tokens += n;
+        for _ in 0..*n {
+            r.token_times.push(end);
+        }
+    }
+    for (id, reason, toks) in w.finishes {
+        let r = reqs.entry(id).or_default();
+        r.finish = Some((end, reason, toks));
+    }
+    windows.push(Window {
+        start_us: *cursor,
+        dur_us: dur,
+        step: w.step,
+        phase: w.phase,
+        participants: w.participants,
+    });
+    *cursor = end;
+}
+
+/// Profile one replica trace under `pricer`.
+///
+/// Requires the full event stream in the ring (no eviction): partial
+/// streams cannot balance.  Size `trace_ring_cap` to the workload.
+pub fn profile_trace(
+    replica: usize,
+    trace: &Trace,
+    pricer: &dyn Pricer,
+) -> Result<ReplicaProfile> {
+    ensure!(
+        trace.total() == trace.ring_len() as u64,
+        "replica {replica}: trace ring evicted {} of {} events — \
+         profiling needs the full stream; raise trace_ring_cap",
+        trace.total() - trace.ring_len() as u64,
+        trace.total()
+    );
+    let mut cursor = 0u64;
+    let mut windows: Vec<Window> = Vec::new();
+    let mut reqs: BTreeMap<u64, ReqBuild> = BTreeMap::new();
+    let mut open: Option<OpenWindow> = None;
+    // Close the open window unconditionally / on class-or-step change.
+    macro_rules! flush {
+        () => {
+            if let Some(w) = open.take() {
+                close_window(w, &mut cursor, &mut windows, &mut reqs, pricer);
+            }
+        };
+    }
+    for ev in trace.events() {
+        // Merged-window classes: consecutive same-class events at the
+        // same step share one window (one batch = one window).
+        let merged = match &ev.kind {
+            EventKind::Prefill { .. } | EventKind::FirstToken { .. } => {
+                Some(Phase::Prefill)
+            }
+            EventKind::DecodeToken { .. } => Some(Phase::Decode),
+            EventKind::SpecBurst { .. } => Some(Phase::Spec),
+            _ => None,
+        };
+        if let Some(phase) = merged {
+            let reopen = match &open {
+                Some(w) => w.phase != phase || w.step != ev.step,
+                None => true,
+            };
+            if reopen {
+                flush!();
+                open = Some(OpenWindow::new(phase, ev.step));
+            }
+            let w = open.as_mut().expect("window just ensured");
+            w.join(ev.id);
+            match &ev.kind {
+                EventKind::Prefill { prompt_len } => {
+                    let r = reqs.entry(ev.id).or_default();
+                    r.prompt_len = *prompt_len;
+                    let uncached = prompt_len.saturating_sub(r.resident);
+                    w.longest_uncached = w.longest_uncached.max(uncached);
+                }
+                EventKind::FirstToken { .. } => w.emits.push((ev.id, 1)),
+                EventKind::SpecBurst { drafted, emitted, .. } => {
+                    w.max_drafted = w.max_drafted.max(*drafted);
+                    w.emits.push((ev.id, *emitted));
+                }
+                EventKind::DecodeToken { .. } => w.emits.push((ev.id, 1)),
+                _ => unreachable!(),
+            }
+            continue;
+        }
+        match &ev.kind {
+            // Per-event windows: one window per traced transfer /
+            // chunk / placement / idle step.
+            EventKind::ChunkWindow { take, prefilled } => {
+                flush!();
+                let mut w = OpenWindow::new(Phase::Chunk, ev.step);
+                w.join(ev.id);
+                w.take = *take;
+                close_window(w, &mut cursor, &mut windows, &mut reqs, pricer);
+                reqs.entry(ev.id).or_default().resident = *prefilled;
+            }
+            EventKind::SwapIn { blocks } | EventKind::SwapOut { blocks } => {
+                flush!();
+                let mut w = OpenWindow::new(Phase::Swap, ev.step);
+                w.join(ev.id);
+                w.blocks = *blocks;
+                close_window(w, &mut cursor, &mut windows, &mut reqs, pricer);
+            }
+            EventKind::Dispatch { .. } => {
+                flush!();
+                let mut w = OpenWindow::new(Phase::Dispatch, ev.step);
+                w.join(ev.id);
+                close_window(w, &mut cursor, &mut windows, &mut reqs, pricer);
+            }
+            EventKind::Plan { outcome, .. } if *outcome == "idle" => {
+                flush!();
+                let w = OpenWindow::new(Phase::Idle, ev.step);
+                close_window(w, &mut cursor, &mut windows, &mut reqs, pricer);
+            }
+            // Front-door events happen between steps, never inside a
+            // batch: they close the open window so their stamps land
+            // AFTER the preceding step's work.
+            EventKind::Submit { prompt_len, .. } => {
+                flush!();
+                let r = reqs.entry(ev.id).or_default();
+                r.submit_us = Some(cursor);
+                r.prompt_len = *prompt_len;
+            }
+            EventKind::Reject { reason } => {
+                flush!();
+                let r = reqs.entry(ev.id).or_default();
+                if r.submit_us.is_none() {
+                    r.submit_us = Some(cursor);
+                }
+                if r.finish.is_none() {
+                    r.finish = Some((cursor, reason.clone(), 0));
+                }
+            }
+            // Terminal events interleave per-row inside compute
+            // batches: defer the stamp to the enclosing window's end,
+            // or stamp at the cursor when none is open.
+            EventKind::Finish { reason, tokens } => match open.as_mut() {
+                Some(w) => {
+                    w.finishes.push((ev.id, reason.to_string(), *tokens));
+                }
+                None => {
+                    reqs.entry(ev.id).or_default().finish =
+                        Some((cursor, reason.to_string(), *tokens));
+                }
+            },
+            // Cache attach: the attached prefix is resident, so the
+            // next prefill window prices only the remaining suffix.
+            EventKind::RadixAttach { tokens } => {
+                let r = reqs.entry(ev.id).or_default();
+                r.resident = r.resident.saturating_add(*tokens as usize);
+            }
+            // Decisions and ledger deltas carry no modeled duration.
+            EventKind::Preempt { .. }
+            | EventKind::Promote { .. }
+            | EventKind::Plan { .. }
+            | EventKind::KvAlloc { .. }
+            | EventKind::KvFree { .. }
+            | EventKind::KvCow { .. }
+            | EventKind::RadixEvict { .. } => {}
+            EventKind::Prefill { .. }
+            | EventKind::FirstToken { .. }
+            | EventKind::DecodeToken { .. }
+            | EventKind::SpecBurst { .. } => unreachable!("merged above"),
+        }
+    }
+    flush!();
+    let makespan_us = cursor;
+    let requests = reqs
+        .into_iter()
+        .map(|(id, r)| {
+            let submit_us = r.submit_us.unwrap_or(0);
+            let (finish_us, finish, finish_tokens) = match r.finish {
+                Some((t, reason, toks)) => (Some(t), reason, Some(toks)),
+                None => (None, "open".to_string(), None),
+            };
+            let span_us =
+                finish_us.unwrap_or(makespan_us).saturating_sub(submit_us);
+            let attributed = r.prefill_us + r.chunk_us + r.swap_us + r.spec_us
+                + r.decode_us;
+            RequestProfile {
+                id,
+                submit_us,
+                finish_us,
+                queue_us: span_us.saturating_sub(attributed),
+                prefill_us: r.prefill_us,
+                chunk_us: r.chunk_us,
+                swap_us: r.swap_us,
+                spec_us: r.spec_us,
+                decode_us: r.decode_us,
+                span_us,
+                ttft_us: r.token_times.first().copied(),
+                token_times_us: r.token_times,
+                tokens: r.tokens,
+                finish,
+                finish_tokens,
+            }
+        })
+        .collect();
+    Ok(ReplicaProfile { replica, windows, requests, makespan_us })
+}
+
+/// Profile several replica traces (the `chrome_export` track shape).
+pub fn profile_tracks(
+    tracks: &[(usize, &Trace)],
+    pricer: &dyn Pricer,
+) -> Result<Profile> {
+    let replicas = tracks
+        .iter()
+        .map(|&(pid, t)| profile_trace(pid, t, pricer))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(Profile { pricer: pricer.name(), replicas })
+}
+
+impl ReplicaProfile {
+    /// Verify every invariant the profile claims, from the output
+    /// alone:
+    ///
+    /// * windows tile the makespan — contiguous from 0, no negative
+    ///   durations (zero is legal), durations sum to the makespan;
+    /// * per request, attributed phases + queue == span, with the
+    ///   queue residual independently recomputed by scanning the
+    ///   windows inside the request's span (an overlap or
+    ///   double-count would break the rescan, not just the sum);
+    /// * terminal token counts match the traced emissions, and
+    ///   `ttft_us` matches the first token stamp.
+    pub fn check(&self) -> Result<()> {
+        let mut at = 0u64;
+        for (i, w) in self.windows.iter().enumerate() {
+            ensure!(
+                w.start_us == at,
+                "replica {}: window {i} starts at {} expected {at} \
+                 (gap or overlap)",
+                self.replica,
+                w.start_us
+            );
+            at += w.dur_us;
+        }
+        ensure!(
+            at == self.makespan_us,
+            "replica {}: windows sum to {at}, makespan {}",
+            self.replica,
+            self.makespan_us
+        );
+        for r in &self.requests {
+            let end = r.finish_us.unwrap_or(self.makespan_us);
+            ensure!(
+                end >= r.submit_us,
+                "request {}: finish {end} before submit {}",
+                r.id,
+                r.submit_us
+            );
+            ensure!(
+                r.span_us == end - r.submit_us,
+                "request {}: span {} != {}",
+                r.id,
+                r.span_us,
+                end - r.submit_us
+            );
+            let total = r.attributed_us().checked_add(r.queue_us);
+            ensure!(
+                total == Some(r.span_us),
+                "request {}: phases {} + queue {} != span {}",
+                r.id,
+                r.attributed_us(),
+                r.queue_us,
+                r.span_us
+            );
+            // Independent queue rescan over the window tiling.
+            let mut rescan = 0u64;
+            for w in &self.windows {
+                let inside =
+                    w.start_us >= r.submit_us && w.start_us + w.dur_us <= end;
+                if inside
+                    && !(w.phase.attributed()
+                        && w.participants.contains(&r.id))
+                {
+                    rescan += w.dur_us;
+                }
+            }
+            ensure!(
+                rescan == r.queue_us,
+                "request {}: queue rescan {rescan} != residual {}",
+                r.id,
+                r.queue_us
+            );
+            if let Some(ft) = r.finish_tokens {
+                ensure!(
+                    ft == r.tokens,
+                    "request {}: finish event says {ft} tokens, \
+                     traced {}",
+                    r.id,
+                    r.tokens
+                );
+            }
+            ensure!(
+                r.ttft_us == r.token_times_us.first().copied(),
+                "request {}: ttft {:?} != first token stamp {:?}",
+                r.id,
+                r.ttft_us,
+                r.token_times_us.first()
+            );
+            ensure!(
+                r.tokens == r.token_times_us.len() as u64,
+                "request {}: {} tokens but {} stamps",
+                r.id,
+                r.tokens,
+                r.token_times_us.len()
+            );
+        }
+        Ok(())
+    }
+}
+
+impl Profile {
+    /// Run [`ReplicaProfile::check`] on every replica.
+    pub fn check(&self) -> Result<()> {
+        for r in &self.replicas {
+            r.check()?;
+        }
+        Ok(())
+    }
+
+    /// Canonical integer summary lines the digest folds: one per
+    /// request (replica-major, id-sorted) plus one rollup per replica.
+    /// `python/tests/sim_profile_bench.py` rebuilds these byte-for-byte.
+    pub fn canonical_lines(&self) -> Vec<String> {
+        let mut lines = Vec::new();
+        for rep in &self.replicas {
+            for r in &rep.requests {
+                lines.push(format!(
+                    "{{\"replica\":{},\"id\":{},\"queue_us\":{},\
+                     \"prefill_us\":{},\"chunk_us\":{},\"swap_us\":{},\
+                     \"spec_us\":{},\"decode_us\":{},\"span_us\":{},\
+                     \"ttft_us\":{},\"tokens\":{},\"finish\":\"{}\"}}",
+                    rep.replica,
+                    r.id,
+                    r.queue_us,
+                    r.prefill_us,
+                    r.chunk_us,
+                    r.swap_us,
+                    r.spec_us,
+                    r.decode_us,
+                    r.span_us,
+                    r.ttft_us.unwrap_or(0),
+                    r.tokens,
+                    r.finish
+                ));
+            }
+            lines.push(format!(
+                "{{\"replica\":{},\"requests\":{},\"windows\":{},\
+                 \"makespan_us\":{}}}",
+                rep.replica,
+                rep.requests.len(),
+                rep.windows.len(),
+                rep.makespan_us
+            ));
+        }
+        lines
+    }
+
+    /// FNV-1a 64 over the newline-terminated canonical lines — the
+    /// replay-stable certificate `repro profile-identity` compares and
+    /// the Python mirror re-derives.
+    pub fn digest(&self) -> u64 {
+        let mut d = FNV_OFFSET;
+        for line in self.canonical_lines() {
+            for b in line.as_bytes() {
+                d = (d ^ u64::from(*b)).wrapping_mul(FNV_PRIME);
+            }
+            d = (d ^ u64::from(b'\n')).wrapping_mul(FNV_PRIME);
+        }
+        d
+    }
+
+    /// Chrome trace-event JSON with **modeled microseconds** on the
+    /// time axis: one process per replica, one track per request
+    /// (engine-scoped idle windows on track 0), one `"X"` slice per
+    /// (window, participant).  Load at `ui.perfetto.dev`.
+    pub fn chrome_json(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::from("{\"traceEvents\":[\n");
+        let mut first = true;
+        let mut push = |s: String, first: &mut bool| {
+            if !*first {
+                out.push_str(",\n");
+            }
+            *first = false;
+            out.push_str(&s);
+        };
+        for rep in &self.replicas {
+            push(
+                format!(
+                    "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{},\
+                     \"args\":{{\"name\":\"replica {} ({})\"}}}}",
+                    rep.replica, rep.replica, self.pricer
+                ),
+                &mut first,
+            );
+            let mut tids: Vec<u64> =
+                rep.requests.iter().map(|r| r.id).collect();
+            if rep.windows.iter().any(|w| w.participants.is_empty()) {
+                tids.push(0);
+            }
+            tids.sort_unstable();
+            tids.dedup();
+            for tid in tids {
+                push(
+                    format!(
+                        "{{\"name\":\"thread_name\",\"ph\":\"M\",\
+                         \"pid\":{},\"tid\":{tid},\"args\":{{\"name\":\
+                         \"request {tid}\"}}}}",
+                        rep.replica
+                    ),
+                    &mut first,
+                );
+            }
+            for w in &rep.windows {
+                if w.participants.is_empty() {
+                    push(
+                        format!(
+                            "{{\"name\":\"{}\",\"ph\":\"X\",\"pid\":{},\
+                             \"tid\":0,\"ts\":{},\"dur\":{},\
+                             \"cat\":\"modeled\"}}",
+                            w.phase.name(),
+                            rep.replica,
+                            w.start_us,
+                            w.dur_us
+                        ),
+                        &mut first,
+                    );
+                    continue;
+                }
+                for &id in &w.participants {
+                    push(
+                        format!(
+                            "{{\"name\":\"{}\",\"ph\":\"X\",\"pid\":{},\
+                             \"tid\":{id},\"ts\":{},\"dur\":{},\
+                             \"cat\":\"modeled\",\"args\":{{\"step\":{}}}}}",
+                            w.phase.name(),
+                            rep.replica,
+                            w.start_us,
+                            w.dur_us,
+                            w.step
+                        ),
+                        &mut first,
+                    );
+                }
+            }
+        }
+        let _ = write!(out, "\n]}}\n");
+        out
+    }
+
+    /// Human-readable markdown summary (`flashsampling profile`).
+    pub fn to_markdown(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(out, "## modeled-time profile ({})\n", self.pricer);
+        for rep in &self.replicas {
+            let _ = writeln!(
+                out,
+                "### replica {} — {} windows, makespan {} µs\n",
+                rep.replica,
+                rep.windows.len(),
+                rep.makespan_us
+            );
+            let _ = writeln!(
+                out,
+                "| id | queue µs | prefill | chunk | swap | spec | decode \
+                 | span | ttft | tokens | finish |"
+            );
+            let _ = writeln!(
+                out,
+                "|---|---|---|---|---|---|---|---|---|---|---|"
+            );
+            for r in &rep.requests {
+                let _ = writeln!(
+                    out,
+                    "| {} | {} | {} | {} | {} | {} | {} | {} | {} | {} \
+                     | {} |",
+                    r.id,
+                    r.queue_us,
+                    r.prefill_us,
+                    r.chunk_us,
+                    r.swap_us,
+                    r.spec_us,
+                    r.decode_us,
+                    r.span_us,
+                    r.ttft_us.map_or("-".into(), |t| t.to_string()),
+                    r.tokens,
+                    r.finish
+                );
+            }
+            out.push('\n');
+        }
+        let _ = writeln!(out, "profile digest: {:#018x}", self.digest());
+        out
+    }
+}
+
+/// Count per-request SLO violations over a profile's modeled times:
+/// `(ttft_violations, itl_violations)` against microsecond thresholds
+/// (0 disables a threshold).  The serving-path equivalent — on measured
+/// wall time — lives in [`crate::metrics::ServingMetrics`].
+pub fn slo_violations(
+    profile: &Profile,
+    slo_ttft_us: u64,
+    slo_itl_us: u64,
+) -> (u64, u64) {
+    let mut ttft = 0u64;
+    let mut itl = 0u64;
+    for rep in &profile.replicas {
+        for r in &rep.requests {
+            if slo_ttft_us > 0 && r.ttft_us.is_some_and(|t| t > slo_ttft_us) {
+                ttft += 1;
+            }
+            if slo_itl_us > 0
+                && r.token_times_us.windows(2).any(|w| w[1] - w[0] > slo_itl_us)
+            {
+                itl += 1;
+            }
+        }
+    }
+    (ttft, itl)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::specs::B200;
+    use crate::gpusim::tpot::QWEN3_8B;
+    use crate::trace::TraceLevel;
+
+    #[test]
+    fn canonical_tracks_derived_table() {
+        // The canonical table is FROZEN (digests embed it); the live
+        // derivation must stay within tolerance so a gpusim
+        // recalibration is flagged here instead of silently diverging.
+        let c = PriceTable::canonical();
+        let d = PriceTable::derive(&B200, &QWEN3_8B);
+        for (name, canon, derived) in [
+            ("prefill_us_per_token", c.prefill_us_per_token,
+             d.prefill_us_per_token),
+            ("prefill_stream_floor_us", c.prefill_stream_floor_us,
+             d.prefill_stream_floor_us),
+            ("window_fixed_us", c.window_fixed_us, d.window_fixed_us),
+            ("decode_step_us", c.decode_step_us, d.decode_step_us),
+            ("spec_draft_us", c.spec_draft_us, d.spec_draft_us),
+            ("spec_verify_us", c.spec_verify_us, d.spec_verify_us),
+            ("swap_us_per_block", c.swap_us_per_block, d.swap_us_per_block),
+            ("dispatch_us", c.dispatch_us, d.dispatch_us),
+        ] {
+            let lo = derived as f64 * 0.7;
+            let hi = derived as f64 * 1.3;
+            assert!(
+                (canon as f64) >= lo && (canon as f64) <= hi,
+                "{name}: canonical {canon} drifted outside ±30% of \
+                 derived {derived} — re-pin PriceTable::canonical and \
+                 recertify the profile digests"
+            );
+        }
+    }
+
+    #[test]
+    fn pricing_rules() {
+        let p = PriceTable::canonical();
+        // Small suffixes hit the stream floor; large prompts scale.
+        assert_eq!(
+            p.prefill_us(1),
+            p.prefill_stream_floor_us + p.window_fixed_us
+        );
+        assert_eq!(
+            p.prefill_us(1000),
+            1000 * p.prefill_us_per_token + p.window_fixed_us
+        );
+        assert_eq!(p.chunk_window_us(16), p.prefill_us(16));
+        assert_eq!(p.spec_us(0), p.spec_verify_us);
+        assert_eq!(p.spec_us(3), p.spec_verify_us + 3 * p.spec_draft_us);
+        assert_eq!(p.swap_us(5), 5 * p.swap_us_per_block);
+        assert_eq!(p.idle_us(), 0);
+        let s = StepClockPricer;
+        assert_eq!(s.prefill_us(0), 1);
+        assert_eq!(s.prefill_us(40), 40);
+        assert_eq!(s.chunk_window_us(16), 16);
+        assert_eq!(s.decode_us(), 1);
+        assert_eq!(s.spec_us(7), 1);
+        assert_eq!(s.swap_us(9), 0);
+        assert_eq!(s.idle_us(), 1);
+    }
+
+    /// Hand-built trace: two requests batched through prefill, one
+    /// decode step, one finish mid-batch, one front-door reject.
+    fn tiny_trace() -> Trace {
+        let mut t = Trace::new(TraceLevel::Lifecycle);
+        t.emit(0, 0, EventKind::Submit { prompt_len: 8, max_new: 2 });
+        t.emit(0, 1, EventKind::Submit { prompt_len: 4, max_new: 1 });
+        t.emit(0, 2, EventKind::Reject { reason: "empty prompt".into() });
+        t.emit(1, 0, EventKind::Prefill { prompt_len: 8 });
+        t.emit(1, 0, EventKind::FirstToken { row: 0, cstep: 0, token: 5 });
+        t.emit(1, 1, EventKind::Prefill { prompt_len: 4 });
+        t.emit(1, 1, EventKind::FirstToken { row: 1, cstep: 0, token: 6 });
+        t.emit(1, 1, EventKind::Finish { reason: "max_tokens", tokens: 1 });
+        t.emit(2, 0, EventKind::DecodeToken { row: 0, cstep: 1, token: 7 });
+        t.emit(2, 0, EventKind::Finish { reason: "max_tokens", tokens: 2 });
+        t
+    }
+
+    #[test]
+    fn windows_group_and_balance() {
+        let t = tiny_trace();
+        let p = profile_trace(0, &t, &StepClockPricer).unwrap();
+        p.check().unwrap();
+        // One prefill window (both rows, longest uncached = 8) and one
+        // decode window.
+        assert_eq!(p.windows.len(), 2);
+        assert_eq!(p.windows[0].phase, Phase::Prefill);
+        assert_eq!(p.windows[0].dur_us, 8);
+        assert_eq!(p.windows[0].participants, vec![0, 1]);
+        assert_eq!(p.windows[1].phase, Phase::Decode);
+        assert_eq!(p.windows[1].dur_us, 1);
+        assert_eq!(p.makespan_us, 9);
+        let r0 = &p.requests[0];
+        assert_eq!(r0.prefill_us, 8);
+        assert_eq!(r0.decode_us, 1);
+        assert_eq!(r0.queue_us, 0);
+        assert_eq!(r0.span_us, 9);
+        assert_eq!(r0.ttft_us, Some(8));
+        assert_eq!(r0.token_times_us, vec![8, 9]);
+        // The mid-batch finish is stamped at the prefill window's end.
+        let r1 = &p.requests[1];
+        assert_eq!(r1.finish_us, Some(8));
+        assert_eq!(r1.span_us, 8);
+        assert_eq!(r1.prefill_us, 8);
+        assert_eq!(r1.queue_us, 0);
+        // Front-door reject: zero-length span, zero compute.
+        let r2 = &p.requests[2];
+        assert_eq!(r2.span_us, 0);
+        assert_eq!(r2.attributed_us(), 0);
+        assert_eq!(r2.finish, "rejected");
+        assert_eq!(r2.tokens, 0);
+    }
+
+    #[test]
+    fn modeled_pricer_balances_and_exports() {
+        let t = tiny_trace();
+        let profile =
+            profile_tracks(&[(0, &t)], &PriceTable::canonical()).unwrap();
+        profile.check().unwrap();
+        let table = PriceTable::canonical();
+        let rep = &profile.replicas[0];
+        assert_eq!(
+            rep.makespan_us,
+            table.prefill_us(8) + table.decode_step_us
+        );
+        let chrome = profile.chrome_json();
+        assert!(chrome.contains("\"name\":\"prefill\""));
+        assert!(chrome.contains("\"name\":\"decode\""));
+        assert!(chrome.contains(&format!("\"dur\":{}", table.prefill_us(8))));
+        assert!(chrome.ends_with("]}\n"));
+        let md = profile.to_markdown();
+        assert!(md.contains("profile digest:"));
+        // Replay determinism of the digest.
+        let again =
+            profile_tracks(&[(0, &t)], &PriceTable::canonical()).unwrap();
+        assert_eq!(profile.digest(), again.digest());
+    }
+
+    #[test]
+    fn chunk_and_radix_reduce_the_priced_suffix() {
+        let mut t = Trace::new(TraceLevel::Lifecycle);
+        t.emit(0, 0, EventKind::Submit { prompt_len: 40, max_new: 1 });
+        t.emit(1, 0, EventKind::ChunkWindow { take: 16, prefilled: 16 });
+        t.emit(2, 0, EventKind::ChunkWindow { take: 16, prefilled: 32 });
+        t.emit(3, 0, EventKind::Prefill { prompt_len: 40 });
+        t.emit(3, 0, EventKind::FirstToken { row: 0, cstep: 0, token: 1 });
+        t.emit(3, 0, EventKind::Finish { reason: "max_tokens", tokens: 1 });
+        t.emit(4, 1, EventKind::Submit { prompt_len: 32, max_new: 1 });
+        t.emit(5, 1, EventKind::RadixAttach { tokens: 24 });
+        t.emit(5, 1, EventKind::Prefill { prompt_len: 32 });
+        t.emit(5, 1, EventKind::FirstToken { row: 0, cstep: 1, token: 2 });
+        t.emit(5, 1, EventKind::Finish { reason: "max_tokens", tokens: 1 });
+        let p = profile_trace(0, &t, &StepClockPricer).unwrap();
+        p.check().unwrap();
+        // Chunked request: two 16-token windows, final suffix 40-32=8.
+        assert_eq!(p.windows[0].dur_us, 16);
+        assert_eq!(p.windows[1].dur_us, 16);
+        assert_eq!(p.windows[2].dur_us, 8);
+        assert_eq!(p.requests[0].chunk_us, 32);
+        assert_eq!(p.requests[0].prefill_us, 8);
+        // Cached request: only the uncached 8-token suffix is priced.
+        assert_eq!(p.windows[3].dur_us, 8);
+        assert_eq!(p.requests[1].prefill_us, 8);
+    }
+
+    #[test]
+    fn eviction_is_refused() {
+        let mut t = Trace::with_capacity(TraceLevel::Lifecycle, 2);
+        for i in 0..4 {
+            t.emit(i, i, EventKind::Submit { prompt_len: 4, max_new: 1 });
+        }
+        let err = profile_trace(0, &t, &StepClockPricer).unwrap_err();
+        assert!(err.to_string().contains("trace_ring_cap"));
+    }
+
+    #[test]
+    fn slo_violation_counting() {
+        let t = tiny_trace();
+        let profile =
+            profile_tracks(&[(0, &t)], &PriceTable::canonical()).unwrap();
+        let table = PriceTable::canonical();
+        let ttft = table.prefill_us(8);
+        // Thresholds just below the modeled TTFT / ITL trip; 0 is off.
+        assert_eq!(slo_violations(&profile, ttft - 1, 0), (2, 0));
+        assert_eq!(
+            slo_violations(&profile, 0, table.decode_step_us - 1),
+            (0, 1)
+        );
+        assert_eq!(slo_violations(&profile, 0, 0), (0, 0));
+        assert_eq!(
+            slo_violations(&profile, ttft, table.decode_step_us),
+            (0, 0)
+        );
+    }
+}

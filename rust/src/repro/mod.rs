@@ -8,6 +8,7 @@
 //! through the native samplers and, when artifacts are present, the
 //! serving engine.
 
+pub mod profile_identity;
 pub mod quality;
 pub mod router_identity;
 pub mod tables;
@@ -27,9 +28,10 @@ pub const ALL: [&str; 13] = [
 /// on/off identity check, the streaming-front-end identity/abort
 /// certificate, the chunked-prefill/swap-tier replay-identity
 /// certificate, the multi-replica router identity/balance certificate,
-/// and the flight-recorder trace-vs-metrics certificate — are fast and
+/// the flight-recorder trace-vs-metrics certificate, and the
+/// modeled-time profiler conservation certificate — are fast and
 /// deterministic, so CI runs them as a smoke gate after `cargo test`).
-pub const STATS: [&str; 9] = [
+pub const STATS: [&str; 10] = [
     "chisq",
     "hetero-chisq",
     "specdec-chisq",
@@ -38,6 +40,7 @@ pub const STATS: [&str; 9] = [
     "chunk-identity",
     "router-identity",
     "trace-identity",
+    "profile-identity",
     "e2e-quality",
 ];
 
@@ -66,6 +69,7 @@ pub fn run(id: &str, out_dir: &Path) -> Result<String> {
         "chunk-identity" => quality::chunk_identity()?,
         "router-identity" => router_identity::router_identity()?,
         "trace-identity" => trace_identity::trace_identity()?,
+        "profile-identity" => profile_identity::profile_identity()?,
         "e2e-quality" => quality::e2e_quality(None)?,
         other => anyhow::bail!("unknown experiment id '{other}'"),
     };

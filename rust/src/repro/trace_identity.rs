@@ -75,7 +75,9 @@ fn sim_balanced(d: &DerivedCounters, m: &ServingMetrics, submitted: u64) -> bool
 }
 
 /// Scenario matrix for legs 1–2: every subsystem with an emission site.
-fn scenarios() -> Vec<(&'static str, SimConfig, Vec<SimRequest>)> {
+/// Shared with `repro profile-identity`, which replays the same matrix
+/// through the modeled-time profiler.
+pub(crate) fn scenarios() -> Vec<(&'static str, SimConfig, Vec<SimRequest>)> {
     let full = |mut cfg: SimConfig| {
         cfg.trace_level = TraceLevel::Full;
         cfg
@@ -140,7 +142,7 @@ fn req(id: u64, prompt: Vec<i32>, max_new: usize) -> Request {
 
 /// Drive waves through a router (aborting `(wave, id)` entries right
 /// after their wave is submitted) and drain each wave to quiescence.
-fn drive_router(
+pub(crate) fn drive_router(
     r: &mut Router<SimReplica>,
     waves: &[Wave],
     aborts: &[(usize, u64)],
@@ -185,8 +187,10 @@ fn replica_balanced(e: &SimReplica) -> bool {
 /// event-for-event.  Keep the workload constants in lockstep with the
 /// Python file: 6 closed-loop requests, `prompt_len = 24 + (id % 3) * 8`,
 /// `max_new = 3 + (id % 3)`, prefix cache off (pool far larger than the
-/// live set), `Lifecycle` level.
-fn mirror_run() -> SimReplica {
+/// live set), `Lifecycle` level.  `repro profile-identity` profiles this
+/// same run so `python/tests/sim_profile_bench.py` can re-derive its
+/// digest from the identical event stream.
+pub(crate) fn mirror_run() -> SimReplica {
     let cfg = SimReplicaConfig {
         prefix_caching: false,
         trace_level: TraceLevel::Lifecycle,

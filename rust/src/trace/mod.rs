@@ -44,10 +44,14 @@
 
 use std::collections::VecDeque;
 
-/// Ring capacity (events) — small enough that an always-on lifecycle
-/// trace is bounded memory, large enough to hold the full tail of the
-/// repro scripts.  Digest and derived counters cover *all* events
-/// regardless (see module docs).
+/// Default ring capacity (events) — small enough that an always-on
+/// lifecycle trace is bounded memory, large enough to hold the full
+/// tail of the repro scripts.  Deployments override it with the
+/// `trace_ring_cap` config key (min 64), which reaches
+/// [`Trace::with_capacity`] through
+/// `EngineConfig::trace_ring_cap`.  Digest and derived counters cover
+/// *all* events regardless of capacity (see module docs); only the
+/// modeled-time profiler (DESIGN.md §15) needs the ring unevicted.
 pub const RING_CAP: usize = 4096;
 
 const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
