@@ -13,7 +13,7 @@ Outputs under artifacts/:
 
 Manifest schema:
   {
-    "version": ABI version int (2 = per-row tau; see TAU_ABI_VERSION),
+    "version": ABI version int (3 = tau:[B] + sub-vocab; see TAU_ABI_VERSION),
     "model": {"vocab":…, "d_model":…, "n_layers":…, "n_heads":…, "ffn":…,
               "max_seq":…, "param_order": [names…]},
     "artifacts": [
@@ -54,12 +54,24 @@ SERVE_CFG = model_lib.ModelConfig()
 # Artifact ABI version, mirrored by rust/src/runtime/manifest.rs
 # (TAU_ABI_VERSION).  v2: every sampling artifact takes `tau` as a [B]
 # per-row temperature vector instead of a scalar — the change that lets the
-# scheduler coalesce mixed-temperature requests into one batch.
-TAU_ABI_VERSION = 2
+# scheduler coalesce mixed-temperature requests into one batch.  v3 adds the
+# `decode_sample_sub_b{B}` candidate-tile artifacts (DESIGN.md §16): a
+# `tiles: [SUB_TILES]` i32 input plus (winner score, hidden norm) outputs —
+# the runtime inputs of the sub-vocabulary exactness certificate.
+TAU_ABI_VERSION = 3
 
 # Decode batch buckets: the continuous batcher pads the running batch up to
 # the nearest bucket (vLLM uses CUDA-graph capture sizes the same way).
 DECODE_BUCKETS = (1, 2, 4, 8)
+
+# Certified sub-vocabulary decode (ABI v3, DESIGN.md §16): the candidate
+# artifact takes a fixed-width tile-id list; unused slots are -1.  The vocab
+# is partitioned into SUB_TILE_V-wide tiles for candidate ranking — finer
+# than DEFAULT_TILE_V so a small budget still covers the hot head of the
+# unigram distribution (2048-vocab serving model -> 16 rankable tiles).
+# Mirrored by rust/src/subvocab/ (SUB_TILE_V, SUB_TILE_SLOTS).
+SUB_TILES = 4
+SUB_TILE_V = 128
 PREFILL_T_BUCKETS = (16, 64)
 PREFILL_B = 4  # prefill executes fixed [PREFILL_B, T] prompt batches
 
@@ -289,6 +301,29 @@ def build_model_artifacts(b: Builder, cfg: model_lib.ModelConfig):
         b.add(f"decode_sample_b{bsz}", "decode_sample", fused, specs, names, meta)
         b.add(f"decode_baseline_b{bsz}", "decode_baseline", baseline, specs,
               names, meta)
+
+        # Certified sub-vocabulary decode (DESIGN.md §16): LM head over the
+        # candidate tiles only.  One extra input — `tiles` [SUB_TILES] i32
+        # global vocab-tile ids (-1 = unused slot) — and two extra outputs:
+        # the candidate winner's perturbed score and ||h|| per row, which
+        # the Rust engine feeds into the host-side exactness certificate
+        # before accepting the skipped-tile sample.
+        def fused_sub(*args, _b=bsz):
+            params = dict(zip(cfg.param_order(), args[:n_params]))
+            kv_k, kv_v, pos, token, seed, step, tau, tiles = args[n_params:]
+            return model_lib.decode_and_sample_sub(
+                cfg, params, kv_k, kv_v, pos, token, seed, step[0], tau,
+                tiles, tile_v=SUB_TILE_V,
+            )
+
+        b.add(
+            f"decode_sample_sub_b{bsz}",
+            "decode_sample_sub",
+            fused_sub,
+            specs + [i32(SUB_TILES)],
+            names + ["tiles"],
+            {**meta, "sub_tiles": SUB_TILES, "sub_tile_v": SUB_TILE_V},
+        )
 
         # TP decode seam (DESIGN.md §13): the transformer step WITHOUT the
         # sampling epilogue — returns the final hidden states so the TP

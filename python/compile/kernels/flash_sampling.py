@@ -451,3 +451,124 @@ def shard_candidates(
     safe = jnp.where(jnp.isfinite(mx), mx, 0.0)
     lmass = safe[:, 0] + jnp.log(jnp.sum(jnp.exp(lm - safe), axis=1))
     return best, sample, lmass
+
+
+def subvocab_candidates(
+    h,
+    w,
+    tiles,
+    seed,
+    step=0,
+    temperature=1.0,
+    *,
+    tile_b: int = DEFAULT_TILE_B,
+    tile_v: int = DEFAULT_TILE_V,
+    interpret: bool = True,
+):
+    """Tile-subset variant of the fused sampler (DESIGN.md §16).
+
+    Runs Stage 1 only over the candidate vocab tiles listed in `tiles` — the
+    per-context sub-vocabulary maintained by `rust/src/subvocab/`.  The
+    certificate check (is the candidate winner provably the full-vocab
+    winner?) happens on the host against per-tile weight-norm bounds; this
+    kernel's job is to produce the candidate-side summary:
+
+      sample    [B] i32 — Gumbel-argmax over the candidate tiles (global id)
+      max_score [B] f32 — its perturbed score, compared against the bound
+      h_norm    [B] f32 — ||h||_2 per row, the hidden-side factor of the
+                           Cauchy–Schwarz bound on excluded tiles
+
+    Args:
+      tiles: [S] i32 global vocab-tile ids (tile t covers global indices
+        [t*tile_v, (t+1)*tile_v)); -1 marks an unused slot.  At least one
+        slot must be active per call.
+
+    Exactness lever: Philox positions are the *global* vocab indices of the
+    gathered rows, so every covered index sees exactly the perturbed score
+    the full pass would compute (Lemma D.5 applies verbatim to the subset).
+    The gather itself runs in XLA ahead of the kernel; on a real TPU it
+    becomes scalar-prefetch-indexed tile loads (same HBM traffic: only the
+    candidate tiles' W rows are ever read).
+    """
+    batch, d = h.shape
+    vocab, d2 = w.shape
+    assert d == d2, (d, d2)
+    tiles = jnp.asarray(tiles, jnp.int32).reshape(-1)
+    n_sel = tiles.shape[0]
+    tile_b = min(tile_b, batch)
+    nb = _ceil_div(batch, tile_b)
+
+    # Gather the candidate tiles' rows into a compact [S*tile_v, D] matrix
+    # plus the per-row *global* vocab index (-1 on inactive/overhang lanes).
+    base = tiles[:, None] * tile_v + jnp.arange(tile_v, dtype=jnp.int32)[None, :]
+    active = (tiles[:, None] >= 0) & (base < vocab)
+    gidx = jnp.where(active, base, -1)  # [S, tile_v] i32
+    rows = jnp.take(w, jnp.clip(gidx, 0, vocab - 1).reshape(-1), axis=0)
+    gflat = gidx.reshape(-1)
+
+    # h_norm from the unpadded rows — the bound's hidden-side factor.
+    h_norm = jnp.sqrt(jnp.sum(h.astype(jnp.float32) ** 2, axis=1))
+
+    pb = nb * tile_b - batch
+    if pb:
+        h = jnp.pad(h, ((0, pb), (0, 0)))
+    seed = jnp.asarray(seed, jnp.uint32).reshape(2)
+    step_arr = jnp.asarray(step, jnp.uint32).reshape(1)
+    tau_arr = jnp.broadcast_to(
+        jnp.asarray(temperature, jnp.float32).reshape(-1), (batch,)
+    )
+    if pb:
+        tau_arr = jnp.pad(tau_arr, (0, pb), constant_values=1.0)
+
+    def kernel(h_ref, w_ref, idx_in_ref, seed_ref, step_ref, tau_ref, m_ref, idx_ref):
+        bt = pl.program_id(0)
+        tb = h_ref.shape[0]
+        tv = w_ref.shape[0]
+        hh = h_ref[...].astype(jnp.float32)
+        ww = w_ref[...].astype(jnp.float32)
+        y = jax.lax.dot_general(
+            hh, ww, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        y = y / tau_ref[...][:, None]
+        idx = idx_in_ref[...]  # [tv] global vocab ids, -1 = inactive lane
+        valid = (idx >= 0)[None, :]
+        y = jnp.where(valid, y, NEG_INF)
+        i_global = jnp.where(idx >= 0, idx, 0)[None, :]
+        b_global = (bt * tb + jnp.arange(tb, dtype=jnp.int32))[:, None]
+        g = philox.gumbel_at(
+            i_global.astype(jnp.uint32),
+            jnp.broadcast_to(b_global, (tb, tv)).astype(jnp.uint32),
+            step_ref[0],
+            seed_ref[0],
+            seed_ref[1],
+        )
+        s = jnp.where(valid, y + g, NEG_INF)
+        m_ref[...] = jnp.max(s, axis=1, keepdims=True)
+        local = jnp.argmax(s, axis=1).astype(jnp.int32)
+        idx_ref[...] = jnp.take(idx, local)[:, None]
+
+    out_shapes = [
+        jax.ShapeDtypeStruct((nb * tile_b, n_sel), jnp.float32),
+        jax.ShapeDtypeStruct((nb * tile_b, n_sel), jnp.int32),
+    ]
+    spec_col = pl.BlockSpec((tile_b, 1), lambda bi, vi: (bi, vi))
+    m, idx = pl.pallas_call(
+        kernel,
+        grid=(nb, n_sel),
+        in_specs=[
+            pl.BlockSpec((tile_b, d), lambda bi, vi: (bi, 0)),
+            pl.BlockSpec((tile_v, d), lambda bi, vi: (vi, 0)),  # gathered tile
+            pl.BlockSpec((tile_v,), lambda bi, vi: (vi,)),  # its global ids
+            pl.BlockSpec((2,), lambda bi, vi: (0,)),
+            pl.BlockSpec((1,), lambda bi, vi: (0,)),
+            pl.BlockSpec((tile_b,), lambda bi, vi: (bi,)),  # tau row tile
+        ],
+        out_shape=out_shapes,
+        out_specs=[spec_col, spec_col],
+        interpret=interpret,
+    )(h, rows, gflat, seed, step_arr, tau_arr)
+
+    m = m[:batch]
+    idx = idx[:batch]
+    sample, best = stage2_reduce(m, idx)
+    return sample, best, h_norm

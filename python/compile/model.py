@@ -13,6 +13,7 @@ Everything here is build-time only.  `aot.py` lowers:
   * prefill_T{T}:        tokens -> KV cache + last hidden
   * decode_step:         (kv, pos, token) -> (kv', hidden)
   * decode_and_sample:   decode_step + flash_sample fused
+  * decode_and_sample_sub: decode_step + candidate-tile flash_sample (§16)
   * decode_and_sample_baseline: decode_step + materialized multinomial
   * lm heads / shard kernels at benchmark shapes
 
@@ -318,6 +319,25 @@ def decode_and_sample(cfg: ModelConfig, params, kv_k, kv_v, pos, token, seed, st
         hidden, params["lm_head"], seed, step, temperature, tile_v=tile_v
     )
     return kv_k, kv_v, out.sample
+
+
+def decode_and_sample_sub(cfg: ModelConfig, params, kv_k, kv_v, pos, token,
+                          seed, step, temperature, tiles,
+                          tile_v=fs.DEFAULT_TILE_V):
+    """Fused decode step + candidate-tile FlashSampling (DESIGN.md §16).
+
+    Runs the LM head only over the candidate vocab tiles in `tiles`
+    ([S] i32, -1 = unused slot) and additionally returns the candidate
+    winner's perturbed score and the per-row hidden norm — the two runtime
+    inputs of the host-side exactness certificate.  Philox coordinates are
+    global, so whenever the certificate admits the skip the sampled token is
+    bit-identical to `decode_and_sample` at the same (seed, step).
+    """
+    kv_k, kv_v, hidden = decode_step(cfg, params, kv_k, kv_v, pos, token)
+    sample, max_score, h_norm = fs.subvocab_candidates(
+        hidden, params["lm_head"], tiles, seed, step, temperature, tile_v=tile_v
+    )
+    return kv_k, kv_v, sample, max_score, h_norm
 
 
 def decode_and_sample_baseline(cfg: ModelConfig, params, kv_k, kv_v, pos, token,

@@ -1,0 +1,307 @@
+#!/usr/bin/env python3
+"""Cross-language certified sub-vocabulary decode mirror + bench.
+
+Independently reimplements the `SimReplica` subvocab mirror leg of
+`repro subvocab-identity` (rust/src/repro/subvocab_identity.rs, leg 4):
+the trace-identity mirror workload (6 closed-loop requests,
+`prompt_len = 24 + (id % 3) * 8`, `max_new = 3 + (id % 3)`, prefix
+cache off, `Lifecycle` level) with the subvocab event model on
+(router/sim.rs: one event per decode step, fallback iff the batch
+counter `cstep % 4 == 0`, attributed to the first running row, 4
+candidate tiles of 16) — and re-derives the canonical JSONL stream plus
+its FNV-1a 64 digest byte-for-byte.
+
+It then re-derives the modeled tile-skip speedup from an independent
+reimplementation of the `gpusim` kernel-chain arithmetic
+(rust/src/gpusim/kernelchain.rs `chain` / `chain_subvocab` /
+`subvocab_speedup`), prices the engine's honest fallback protocol
+(`sub + fallback_rate * full` per step), and writes `BENCH_subvocab.json`
+(schema v2) for the `flashsampling benchdiff` perf gate.
+
+Usage:
+    python3 python/tests/sim_subvocab_bench.py [BENCH_subvocab.json]
+    python3 python/tests/sim_subvocab_bench.py --check subvocab-identity.csv
+
+With `--check`, asserts bitwise digest equality against the Rust-side
+`sim-subvocab` anchor row — the CI cross-language gate.
+"""
+
+import json
+import math
+import sys
+
+# FNV-1a 64 (rust/src/trace/mod.rs FNV_OFFSET / FNV_PRIME).
+FNV_OFFSET = 0xCBF29CE484222325
+FNV_PRIME = 0x100000001B3
+MASK64 = (1 << 64) - 1
+
+# Mirror-leg workload + SimReplicaConfig defaults (keep in lockstep with
+# subvocab_identity.rs `mirror_run_subvocab` and router/sim.rs).
+NUM_REQUESTS = 6
+PREFILL_B = 4
+DECODE_MAX_B = 8
+MAX_CONCURRENCY = 8
+
+# The subvocab event rule (router/sim.rs do_decode): per decode step,
+# fallback iff cstep % 4 == 0, args active=4 / skipped=12.
+SUB_ACTIVE, SUB_SKIPPED = 4, 12
+FALLBACK_PERIOD = 4
+
+
+def prompt_len(rid):
+    return 24 + (rid % 3) * 8
+
+
+def max_new(rid):
+    return 3 + (rid % 3)
+
+
+def sim_token(rid, index):
+    """router/sim.rs `sim_token`: deterministic model stand-in."""
+    return (rid * 31 + (index + 1) * 7) % 2039
+
+
+class Recorder:
+    """Canonical-line serializer + incremental FNV-1a digest
+    (trace/mod.rs `TraceEvent::canonical_line`)."""
+
+    def __init__(self):
+        self.seq = 0
+        self.digest = FNV_OFFSET
+
+    def emit(self, step, rid, ev, args):
+        parts = ['"seq":%d' % self.seq, '"step":%d' % step,
+                 '"id":%d' % rid, '"ev":"%s"' % ev]
+        for key, val in args:
+            if isinstance(val, str):
+                parts.append('"%s":"%s"' % (key, val))
+            else:
+                parts.append('"%s":%d' % (key, val))
+        line = "{" + ",".join(parts) + "}"
+        self.seq += 1
+        for byte in line.encode("utf-8") + b"\n":
+            self.digest = ((self.digest ^ byte) * FNV_PRIME) & MASK64
+
+
+def run_mirror():
+    """The SimReplica FIFO batcher at Lifecycle level with the subvocab
+    event model on.  Returns (recorder, subvocab_steps, fallbacks)."""
+    rec = Recorder()
+    clock = 0
+    cstep = 0
+    waiting = []
+    running = []
+    sub_steps = 0
+    fallbacks = 0
+    for rid in range(NUM_REQUESTS):
+        rec.emit(clock, rid, "submit",
+                 [("prompt_len", prompt_len(rid)), ("max_new", max_new(rid))])
+        waiting.append({"id": rid, "gen": 0})
+    while waiting or running:
+        clock += 1
+        if len(running) < MAX_CONCURRENCY and waiting:
+            batch = []
+            while (waiting and len(batch) < PREFILL_B
+                   and len(running) + len(batch) < MAX_CONCURRENCY):
+                batch.append(waiting.pop(0))
+            snap = cstep
+            cstep += 1
+            for row, seq in enumerate(batch):
+                rec.emit(clock, seq["id"], "prefill",
+                         [("prompt_len", prompt_len(seq["id"]))])
+                tok = sim_token(seq["id"], 0)
+                seq["gen"] = 1
+                rec.emit(clock, seq["id"], "first_token",
+                         [("row", row), ("cstep", snap), ("token", tok)])
+            for seq in batch:
+                if seq["gen"] >= max_new(seq["id"]):
+                    rec.emit(clock, seq["id"], "finish",
+                             [("reason", "max_tokens"), ("tokens", seq["gen"])])
+                else:
+                    running.append(seq)
+        elif running:
+            snap = cstep
+            cstep += 1
+            # The subvocab event precedes the step's decode_token events
+            # (router/sim.rs emits it before the row loop).
+            sub_steps += 1
+            ev = "subvocab_skip"
+            if snap % FALLBACK_PERIOD == 0:
+                ev = "subvocab_fallback"
+                fallbacks += 1
+            rec.emit(clock, running[0]["id"], ev,
+                     [("active", SUB_ACTIVE), ("skipped", SUB_SKIPPED)])
+            for row in range(min(len(running), DECODE_MAX_B)):
+                seq = running[row]
+                tok = sim_token(seq["id"], seq["gen"])
+                seq["gen"] += 1
+                rec.emit(clock, seq["id"], "decode_token",
+                         [("row", row), ("cstep", snap), ("token", tok)])
+            i = 0
+            while i < len(running):
+                if running[i]["gen"] >= max_new(running[i]["id"]):
+                    seq = running.pop(i)
+                    rec.emit(clock, seq["id"], "finish",
+                             [("reason", "max_tokens"), ("tokens", seq["gen"])])
+                else:
+                    i += 1
+        assert clock < 1000, "mirror livelock"
+    return rec, sub_steps, fallbacks
+
+
+# --- kernel-chain arithmetic mirror (rust/src/gpusim/kernelchain.rs) ---
+
+BF16 = 2.0
+BW_EFF_TRITON = 0.78
+GAP_FUSED_STAGE2 = 1.5e-6
+FUSED_TILE_V = 2048
+
+# specs.rs B200.
+B200 = {"hbm_bw": 8.0e12, "bf16_flops": 2250e12, "launch_overhead": 4.0e-6}
+
+# Engine-side active fraction: SUB_TILE_SLOTS (4) tiles of SUB_TILE_V
+# (128) over the 2048-token toy vocab — and identically the sim event
+# model's 4-of-16 tiles.
+ACTIVE_FRAC = 0.25
+
+# Paper workload the Rust unit test prices (`Workload::small(8)`).
+BATCH, D_MODEL, VOCAB = 8, 4096, 151_936
+
+
+def compute_efficiency(batch):
+    return 0.45 * batch / (batch + 64.0)
+
+
+def triton_penalty(gpu, batch):
+    sat = min(batch / 256.0, 1.0)
+    max_loss = 0.08 if gpu["bf16_flops"] > 2e15 else 0.38
+    return 1.0 - max_loss * sat
+
+
+def gemm_time(gpu, traffic, flops, batch):
+    mem = traffic / (gpu["hbm_bw"] * BW_EFF_TRITON)
+    eff = compute_efficiency(batch) * triton_penalty(gpu, batch)
+    return max(mem, flops / (gpu["bf16_flops"] * eff))
+
+
+def fused_chain_total(gpu, batch, d, vocab, active_frac=1.0):
+    """`chain(FlashSampling)` at active_frac=1.0, `chain_subvocab` below
+    it: W-stream traffic, GEMM flops, and the candidate buffer scale with
+    the active fraction; H-stream and stage-2 structure are unchanged."""
+    frac = min(max(active_frac, 1.0 / vocab), 1.0)
+    b, d, va = float(batch), float(d), vocab * frac
+    gemm_flops = 2.0 * b * d * va
+    n_tiles = math.ceil(va / FUSED_TILE_V)
+    traffic = va * d * BF16 + b * d * BF16 + b * n_tiles * 8.0
+    total = gemm_time(gpu, traffic, gemm_flops, batch)
+    total += gpu["launch_overhead"]
+    red_bytes = b * n_tiles * 8.0 + b * 4.0
+    total += 0.3e-6 + red_bytes / (gpu["hbm_bw"] * 0.5)
+    total += GAP_FUSED_STAGE2
+    return total
+
+
+def subvocab_speedup(gpu, batch, fallback_rate):
+    """kernelchain.rs `subvocab_speedup`: the honest protocol — every
+    step pays the sub pass, a fallback step pays the full pass on top."""
+    full = fused_chain_total(gpu, batch, D_MODEL, VOCAB)
+    sub = fused_chain_total(gpu, batch, D_MODEL, VOCAB, ACTIVE_FRAC)
+    return full / (sub + min(max(fallback_rate, 0.0), 1.0) * full)
+
+
+def anchor_from_csv(path):
+    """The `sim-subvocab,requests,events,digest` row of
+    subvocab-identity.csv."""
+    with open(path) as f:
+        for line in f:
+            if line.startswith("sim-subvocab,"):
+                cells = line.strip().split(",")
+                return int(cells[2]), int(cells[3], 16)
+    raise SystemExit("no sim-subvocab row in %s" % path)
+
+
+def main():
+    rec, sub_steps, fallbacks = run_mirror()
+    rec2, _, _ = run_mirror()
+    assert rec.digest == rec2.digest, "mirror is not deterministic"
+    # Base lifecycle stream + one subvocab event per decode step.
+    base = 4 * NUM_REQUESTS + sum(max_new(r) - 1 for r in range(NUM_REQUESTS))
+    assert rec.seq == base + sub_steps, (rec.seq, base, sub_steps)
+    assert 0 < fallbacks < sub_steps, (fallbacks, sub_steps)
+    fb_rate = fallbacks / sub_steps
+    digest = "0x%016x" % rec.digest
+    print("sim_subvocab_bench: %d events, digest %s, fallback %d/%d"
+          % (rec.seq, digest, fallbacks, sub_steps))
+
+    if len(sys.argv) > 2 and sys.argv[1] == "--check":
+        events, anchor = anchor_from_csv(sys.argv[2])
+        assert events == rec.seq, (
+            "event count mismatch: rust %d, python %d" % (events, rec.seq))
+        assert anchor == rec.digest, (
+            "digest mismatch: rust 0x%016x, python %s" % (anchor, digest))
+        print("sim_subvocab_bench: MATCHES the Rust sim-subvocab anchor")
+        return
+
+    # Model sanity pinned to the Rust unit test
+    # (`subvocab_chain_models_tile_skipping`): frac=1 is the plain chain,
+    # skip-heavy decode wins, all-fallback loses.
+    full = fused_chain_total(B200, BATCH, D_MODEL, VOCAB)
+    same = fused_chain_total(B200, BATCH, D_MODEL, VOCAB, 1.0)
+    assert abs(full - same) < 1e-12
+    assert subvocab_speedup(B200, BATCH, 0.0) > 1.0
+    assert subvocab_speedup(B200, BATCH, 1.0) < 1.0
+
+    records = [{
+        "scenario": "sim-subvocab",
+        "source": "accounting-sim",
+        "requests": NUM_REQUESTS,
+        "subvocab_steps": sub_steps,
+        "fallbacks": fallbacks,
+        "events": rec.seq,
+        "digest": digest,
+    }]
+    for batch in (1, 8, 64):
+        full = fused_chain_total(B200, batch, D_MODEL, VOCAB)
+        sub = fused_chain_total(B200, batch, D_MODEL, VOCAB, ACTIVE_FRAC)
+        eff = sub + fb_rate * full
+        speedup = full / eff
+        r = {
+            "scenario": "modeled-subvocab",
+            "source": "kernel-chain-model",
+            "gpu": "B200",
+            "batch": batch,
+            "d": D_MODEL,
+            "vocab": VOCAB,
+            "active_frac_pct": int(ACTIVE_FRAC * 100),
+            "fallback_rate_pct": round(fb_rate * 100, 1),
+            "step_full_us": round(full * 1e6, 3),
+            "step_effective_us": round(eff * 1e6, 3),
+            "modeled_speedup_x1000": int(round(speedup * 1000)),
+        }
+        records.append(r)
+        print("modeled B=%-3d full %.3fus effective %.3fus speedup %.3fx"
+              % (batch, full * 1e6, eff * 1e6, speedup))
+        assert speedup > 1.0, "tile skip lost at B=%d" % batch
+
+    out = sys.argv[1] if len(sys.argv) > 1 else "BENCH_subvocab.json"
+    body = ",\n".join(
+        "    " + json.dumps(r, separators=(", ", ": ")) for r in records
+    )
+    config = json.dumps(
+        {"requests": NUM_REQUESTS, "fallback_period": FALLBACK_PERIOD,
+         "active_frac_pct": int(ACTIVE_FRAC * 100)},
+        separators=(", ", ": "),
+    )
+    text = (
+        '{\n  "bench": "subvocab",\n  "schema_version": 2,\n'
+        '  "source": "accounting-sim",\n'
+        '  "config": ' + config + ",\n"
+        '  "results": [\n' + body + "\n  ]\n}\n"
+    )
+    with open(out, "w") as f:
+        f.write(text)
+    print("\nwrote %s (%d records)" % (out, len(records)))
+
+
+if __name__ == "__main__":
+    main()

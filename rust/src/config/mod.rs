@@ -105,6 +105,16 @@ pub struct Config {
     /// Inter-token-latency SLO threshold in milliseconds; 0 (default)
     /// disables the classification.
     pub slo_itl_ms: u64,
+    /// Certified sub-vocabulary decode (DESIGN.md §16): skip cold vocab
+    /// tiles in the LM head under a per-step exactness certificate.
+    /// Off by default; token streams are bit-identical on or off.
+    pub subvocab: bool,
+    /// Candidate tile budget per decode batch
+    /// (1..=[`crate::subvocab::SUB_TILE_SLOTS`]).
+    pub subvocab_tiles: usize,
+    /// Additive certificate slack (finite, >= 0): skip only when the
+    /// candidate winner beats the excluded-tile bound by more than this.
+    pub subvocab_slack: f32,
     /// Output directory for `repro`.
     pub out_dir: PathBuf,
 }
@@ -137,6 +147,9 @@ impl Default for Config {
             trace_ring_cap: 4096,
             slo_ttft_ms: 0,
             slo_itl_ms: 0,
+            subvocab: false,
+            subvocab_tiles: crate::subvocab::SUB_TILE_SLOTS,
+            subvocab_slack: 0.0,
             out_dir: "results".into(),
         }
     }
@@ -153,7 +166,19 @@ impl Config {
     }
 
     /// Apply `key=value` CLI overrides (e.g. `--set seed=7`).
+    ///
+    /// Transactional: values are staged onto a copy and committed only
+    /// when every key parses AND the cross-field validation passes, so a
+    /// failed apply never clobbers previously-valid configuration —
+    /// whether the failure is a parse error or a range check.
     pub fn apply_pairs(&mut self, pairs: BTreeMap<String, String>) -> Result<()> {
+        let mut next = self.clone();
+        next.apply_pairs_direct(pairs)?;
+        *self = next;
+        Ok(())
+    }
+
+    fn apply_pairs_direct(&mut self, pairs: BTreeMap<String, String>) -> Result<()> {
         for (k, v) in pairs {
             match k.as_str() {
                 "artifacts_dir" => self.artifacts_dir = v.into(),
@@ -208,6 +233,9 @@ impl Config {
                         .with_context(|| format!("config key 'swap_policy' = '{v}'"))?;
                 }
                 "replicas" => self.replicas = v.parse()?,
+                "subvocab" => self.subvocab = v.parse()?,
+                "subvocab_tiles" => self.subvocab_tiles = v.parse()?,
+                "subvocab_slack" => self.subvocab_slack = v.parse()?,
                 "trace_ring_cap" => self.trace_ring_cap = v.parse()?,
                 "slo_ttft_ms" => self.slo_ttft_ms = v.parse()?,
                 "slo_itl_ms" => self.slo_itl_ms = v.parse()?,
@@ -241,6 +269,15 @@ impl Config {
         if self.trace_ring_cap < 64 {
             bail!("trace_ring_cap must be >= 64");
         }
+        if !(1..=crate::subvocab::SUB_TILE_SLOTS).contains(&self.subvocab_tiles) {
+            bail!(
+                "subvocab_tiles must be in 1..={}",
+                crate::subvocab::SUB_TILE_SLOTS
+            );
+        }
+        if !(self.subvocab_slack.is_finite() && self.subvocab_slack >= 0.0) {
+            bail!("subvocab_slack must be finite and >= 0");
+        }
         Ok(())
     }
 
@@ -267,6 +304,9 @@ impl Config {
             trace_ring_cap: self.trace_ring_cap,
             slo_ttft_us: self.slo_ttft_ms * 1000,
             slo_itl_us: self.slo_itl_ms * 1000,
+            subvocab: self.subvocab,
+            subvocab_tiles: self.subvocab_tiles,
+            subvocab_slack: self.subvocab_slack,
             // TP-sharded replicas are constructed programmatically
             // (`EngineConfig::tp`); the config file drives the router
             // shape via `replicas` / `dispatch_policy` only.
@@ -557,6 +597,46 @@ mod tests {
             .apply_pairs(parse_pairs("slo_itl_ms = soon").unwrap())
             .is_err());
         assert_eq!(c.slo_ttft_ms, 250);
+    }
+
+    #[test]
+    fn subvocab_keys_parse_validate_and_flow_to_the_engine() {
+        let mut c = Config::default();
+        // Default off with a full-slot budget and zero slack.
+        assert!(!c.subvocab);
+        assert_eq!(c.subvocab_tiles, crate::subvocab::SUB_TILE_SLOTS);
+        assert_eq!(c.subvocab_slack, 0.0);
+        assert!(!c.engine_config().subvocab);
+        c.apply_pairs(
+            parse_pairs(
+                "subvocab = true\nsubvocab_tiles = 2\nsubvocab_slack = 0.5",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let e = c.engine_config();
+        assert!(e.subvocab);
+        assert_eq!(e.subvocab_tiles, 2);
+        assert!((e.subvocab_slack - 0.5).abs() < 1e-9);
+        // Out-of-range budgets and non-finite / negative slack rejected.
+        assert!(c
+            .apply_pairs(parse_pairs("subvocab_tiles = 0").unwrap())
+            .is_err());
+        assert!(c
+            .apply_pairs(parse_pairs("subvocab_tiles = 99").unwrap())
+            .is_err());
+        assert!(c
+            .apply_pairs(parse_pairs("subvocab_slack = -1").unwrap())
+            .is_err());
+        assert!(c
+            .apply_pairs(parse_pairs("subvocab_slack = nan").unwrap())
+            .is_err());
+        assert!(c
+            .apply_pairs(parse_pairs("subvocab = maybe").unwrap())
+            .is_err());
+        // Failed applies never clobber prior values.
+        assert_eq!(c.subvocab_tiles, 2);
+        assert!((c.subvocab_slack - 0.5).abs() < 1e-9);
     }
 
     #[test]

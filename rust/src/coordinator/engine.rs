@@ -40,6 +40,7 @@ use crate::prefixcache::BlockKv;
 use crate::runtime::{Runtime, Tensor};
 use crate::sampling::{Key, SamplerSpec};
 use crate::specdec::{coupled_emit_len, DraftModel, NGramDraft};
+use crate::subvocab::{self, SubvocabConfig, SubvocabState, SUB_TILE_SLOTS};
 use crate::tp::{Strategy, TpConfig, TpOrchestrator};
 use crate::trace::{EventKind, Trace, TraceLevel};
 use crate::workload::RequestSpec;
@@ -142,6 +143,24 @@ pub struct EngineConfig {
     /// Inter-token-latency SLO threshold in microseconds; 0 (default)
     /// disables the classification.
     pub slo_itl_us: u64,
+    /// Certified sub-vocabulary decode (DESIGN.md §16): run only the hot
+    /// candidate vocab tiles through the `decode_sample_sub` artifacts and
+    /// accept the result when the per-step Cauchy–Schwarz certificate
+    /// proves the excluded tiles cannot win the Gumbel-argmax; fall back
+    /// to the full `decode_sample` pass at the same Philox coordinates
+    /// otherwise.  Token streams are bit-identical either way
+    /// (`repro subvocab-identity`).  Requires the fused 'gumbel' sampler
+    /// and no TP; silently degrades to full-vocab decode on artifact sets
+    /// without the `decode_sample_sub_*` executables (ABI v3).
+    pub subvocab: bool,
+    /// Candidate tile budget per decode batch
+    /// (1..=[`crate::subvocab::SUB_TILE_SLOTS`]; `subvocab_tiles` key).
+    pub subvocab_tiles: usize,
+    /// Additive certificate slack (>= 0, finite; `subvocab_slack` key):
+    /// skip only when the candidate winner beats the excluded bound by
+    /// more than this.  Larger slack means more fallbacks, never wrong
+    /// tokens.
+    pub subvocab_slack: f32,
 }
 
 impl Default for EngineConfig {
@@ -163,6 +182,9 @@ impl Default for EngineConfig {
             trace_ring_cap: 4096,
             slo_ttft_us: 0,
             slo_itl_us: 0,
+            subvocab: false,
+            subvocab_tiles: crate::subvocab::SUB_TILE_SLOTS,
+            subvocab_slack: 0.0,
         }
     }
 }
@@ -252,6 +274,12 @@ pub struct Engine {
     /// decode at that batch size (`cfg.tp` replicas only; empty otherwise).
     /// Rank threads and their PJRT runtimes are paid once per bucket.
     tp_orch: HashMap<usize, TpOrchestrator>,
+    /// Certified sub-vocabulary decode state (DESIGN.md §16): the
+    /// precomputed per-tile weight-norm bounds plus one candidate set per
+    /// live request.  `None` when `cfg.subvocab` is off OR the artifact
+    /// set lacks the `decode_sample_sub_*` executables (graceful
+    /// degradation, like `cached_prefill_available`).
+    subvocab: Option<SubvocabState>,
     pub metrics: ServingMetrics,
     /// Flight recorder (DESIGN.md §14).  Level comes from
     /// `EngineConfig::trace_level`; with `Off` every emission site costs
@@ -363,6 +391,57 @@ impl Engine {
                 .find(&format!("prefill_cached_b{}_t{t}", model.prefill_b))
                 .is_ok()
         });
+        let subvocab = if cfg.subvocab {
+            // Fail fast on combinations the certified decode path cannot
+            // honor, mirroring the TP validation above.
+            anyhow::ensure!(
+                matches!(cfg.sampler, SamplerSpec::Gumbel { .. }),
+                "EngineConfig::subvocab: the certified tile-skip path runs \
+                 the fused FlashSampling epilogue over candidate tiles; \
+                 sampler must be 'gumbel' (got '{}')",
+                cfg.sampler
+            );
+            anyhow::ensure!(
+                cfg.tp.is_none(),
+                "EngineConfig::subvocab: incompatible with tensor-parallel \
+                 decode (the shard artifacts carry no tile-subset variant)"
+            );
+            anyhow::ensure!(
+                (1..=SUB_TILE_SLOTS).contains(&cfg.subvocab_tiles),
+                "EngineConfig::subvocab_tiles = {} out of range 1..={}",
+                cfg.subvocab_tiles,
+                SUB_TILE_SLOTS
+            );
+            anyhow::ensure!(
+                cfg.subvocab_slack.is_finite() && cfg.subvocab_slack >= 0.0,
+                "EngineConfig::subvocab_slack = {} must be finite and >= 0",
+                cfg.subvocab_slack
+            );
+            // Graceful degradation on pre-v3 artifact layouts that still
+            // pass the manifest version gate after regeneration: no
+            // tile-subset executables, no skipping, identical tokens.
+            let available = model.decode_buckets.iter().all(|b| {
+                rt.manifest().find(&format!("decode_sample_sub_b{b}")).is_ok()
+            });
+            if available {
+                let w = Tensor::from_literal(&params_lit[lm_head_idx])?
+                    .as_f32()?
+                    .to_vec();
+                Some(SubvocabState::new(
+                    &w,
+                    model.vocab,
+                    model.d_model,
+                    SubvocabConfig {
+                        tile_budget: cfg.subvocab_tiles,
+                        slack: cfg.subvocab_slack,
+                    },
+                ))
+            } else {
+                None
+            }
+        } else {
+            None
+        };
         let sched = SchedulerConfig {
             decode_buckets: model.decode_buckets.clone(),
             prefill_t_buckets: model.prefill_t_buckets.clone(),
@@ -416,6 +495,7 @@ impl Engine {
             key,
             decode_cache: None,
             tp_orch: HashMap::new(),
+            subvocab,
             metrics,
             trace,
             trace_kv_base: [0; 4],
@@ -473,6 +553,13 @@ impl Engine {
     /// sequences (the radix-identity balance the abort suite asserts).
     pub fn prefix_attached_refs(&self) -> usize {
         self.kvmgr.prefix_attached_refs()
+    }
+
+    /// Is the certified sub-vocabulary decode path live?  False when
+    /// `EngineConfig::subvocab` is off or the artifact set lacks the
+    /// `decode_sample_sub_*` executables (graceful degradation).
+    pub fn subvocab_active(&self) -> bool {
+        self.subvocab.is_some()
     }
 
     /// The effective chunk window after artifact gating (0 when chunking
@@ -583,6 +670,11 @@ impl Engine {
                 },
             );
         }
+        // Seed the certified sub-vocab candidate set from the prompt's
+        // unigram statistics (DESIGN.md §16).
+        if let Some(sv) = self.subvocab.as_mut() {
+            sv.observe_prompt(id, &req.prompt);
+        }
         let mut seq = Sequence::new(req);
         seq.submitted_step = self.clock;
         let state = Arc::new(Mutex::new(StreamState::default()));
@@ -637,6 +729,9 @@ impl Engine {
     /// (removing it from the live-stream map — the handle keeps the queue
     /// alive for draining).
     fn complete_seq(&mut self, s: Sequence, reason: FinishReason) -> Completion {
+        if let Some(sv) = self.subvocab.as_mut() {
+            sv.release(s.id);
+        }
         let c = s.into_completion(reason);
         self.metrics.requests_completed += 1;
         if let Some(t) = c.timing.ttft {
@@ -1738,33 +1833,141 @@ impl Engine {
             } else {
                 "decode_sample"
             };
-            let name = format!("{kind}_b{b_bucket}");
-            let exe =
-                self.rt.load(&name).map_err(|e| EngineError::artifact(&name, e))?;
+            // Certified sub-vocab candidate tiles for this batch
+            // (DESIGN.md §16), merged across the batch's live candidate
+            // sets.  `None` routes straight to the full-vocab artifact.
+            let tiles: Option<Vec<i32>> = match self.subvocab.as_mut() {
+                Some(sv) if kind == "decode_sample" => {
+                    Some(sv.batch_tiles(seq_ids, SUB_TILE_SLOTS))
+                }
+                _ => None,
+            };
             let seed_lit = Tensor::seed(self.key).to_literal()?;
             // Hoisted: the trace records each token's Philox coordinates.
+            // The step bumps ONCE even when the certificate forces the
+            // full-vocab fallback below — both passes draw the same Gumbel
+            // noise, which is what makes the fallback token bit-identical.
             let step = self.bump_step();
             let step_lit = Tensor::scalar_u32(step).to_literal()?;
+            let tau_host = taus.clone();
             let tau_lit = Tensor::F32(taus, vec![b_bucket]).to_literal()?;
-
-            let mut lits: Vec<&xla::Literal> = self.params_lit.iter().collect();
-            lits.extend([&kvk_lit, &kvv_lit, &pos_lit, &tok_lit, &seed_lit,
-                         &step_lit, &tau_lit]);
             self.metrics.bump("decode_lit_us", t_lit.elapsed().as_micros() as u64);
-            let t_exec = Instant::now();
-            let mut out = exe.run_literals_raw(&lits)?;
-            self.metrics.bump("decode_exec_us", t_exec.elapsed().as_micros() as u64);
-            if out.len() != 3 {
-                return Err(EngineError::artifact(
-                    &name,
-                    anyhow::anyhow!("decode artifact returned {} outputs", out.len()),
-                ));
+
+            // Tile-subset attempt: run the candidate tiles, then evaluate
+            // the Cauchy–Schwarz certificate host-side per active row from
+            // the artifact's (winner score, hidden norm) outputs and the
+            // exact per-tile max Gumbel.  Admit the batch only when EVERY
+            // active row's winner provably beats all excluded tiles.
+            let mut sub_result: Option<(xla::Literal, xla::Literal, Vec<i32>)> =
+                None;
+            if let Some(tiles) = &tiles {
+                let name = format!("decode_sample_sub_b{b_bucket}");
+                let exe = self
+                    .rt
+                    .load(&name)
+                    .map_err(|e| EngineError::artifact(&name, e))?;
+                let tiles_lit =
+                    Tensor::I32(tiles.clone(), vec![SUB_TILE_SLOTS]).to_literal()?;
+                let mut lits: Vec<&xla::Literal> = self.params_lit.iter().collect();
+                lits.extend([&kvk_lit, &kvv_lit, &pos_lit, &tok_lit, &seed_lit,
+                             &step_lit, &tau_lit, &tiles_lit]);
+                let t_exec = Instant::now();
+                let mut out = exe.run_literals_raw(&lits)?;
+                self.metrics
+                    .bump("decode_exec_us", t_exec.elapsed().as_micros() as u64);
+                if out.len() != 5 {
+                    return Err(EngineError::artifact(
+                        &name,
+                        anyhow::anyhow!(
+                            "sub-vocab decode artifact returned {} outputs",
+                            out.len()
+                        ),
+                    ));
+                }
+                let h_norm_lit = out.pop().unwrap();
+                let score_lit = out.pop().unwrap();
+                let sample_lit = out.pop().unwrap();
+                let new_v = out.pop().unwrap();
+                let new_k = out.pop().unwrap();
+                let scores = Tensor::from_literal(&score_lit)?.as_f32()?.to_vec();
+                let h_norms = Tensor::from_literal(&h_norm_lit)?.as_f32()?.to_vec();
+                let sv = self.subvocab.as_ref().expect("tiles imply state");
+                // Active rows only: padding slots ran a dummy (pos 0,
+                // token 0) forward pass whose certificate is meaningless
+                // and whose sample is discarded anyway.
+                let admitted = (0..rows.len()).all(|slot| {
+                    let bound = subvocab::excluded_bound(
+                        &sv.norms,
+                        tiles,
+                        h_norms[slot],
+                        tau_host[slot],
+                        self.key,
+                        slot as u32,
+                        step,
+                    );
+                    scores[slot] > bound + sv.cfg.slack
+                });
+                let active = tiles.iter().filter(|&&t| t >= 0).count() as u64;
+                let skipped = sv.norms.n_tiles() as u64 - active;
+                self.metrics.bump("subvocab_steps", 1);
+                let ev_id = seq_ids[0];
+                if admitted {
+                    if self.trace.on() {
+                        self.trace.emit(
+                            self.clock,
+                            ev_id,
+                            EventKind::SubvocabSkip { active, skipped },
+                        );
+                    }
+                    let samples =
+                        Tensor::from_literal(&sample_lit)?.as_i32()?.to_vec();
+                    sub_result = Some((new_k, new_v, samples));
+                } else {
+                    // Certificate refused: fall through to the full pass
+                    // below at the SAME (seed, step, tau) — the KV outputs
+                    // there are identical (the transformer step never saw
+                    // the tile subset), and the token is the exact sample.
+                    self.metrics.bump("subvocab_fallbacks", 1);
+                    if self.trace.on() {
+                        self.trace.emit(
+                            self.clock,
+                            ev_id,
+                            EventKind::SubvocabFallback { active, skipped },
+                        );
+                    }
+                }
             }
-            let sample_lit = out.pop().unwrap();
-            let new_v = out.pop().unwrap();
-            let new_k = out.pop().unwrap();
-            let samples = Tensor::from_literal(&sample_lit)?.as_i32()?.to_vec();
-            (new_k, new_v, samples, step)
+
+            if let Some((new_k, new_v, samples)) = sub_result {
+                (new_k, new_v, samples, step)
+            } else {
+                let name = format!("{kind}_b{b_bucket}");
+                let exe = self
+                    .rt
+                    .load(&name)
+                    .map_err(|e| EngineError::artifact(&name, e))?;
+                let mut lits: Vec<&xla::Literal> = self.params_lit.iter().collect();
+                lits.extend([&kvk_lit, &kvv_lit, &pos_lit, &tok_lit, &seed_lit,
+                             &step_lit, &tau_lit]);
+                let t_exec = Instant::now();
+                let mut out = exe.run_literals_raw(&lits)?;
+                self.metrics
+                    .bump("decode_exec_us", t_exec.elapsed().as_micros() as u64);
+                if out.len() != 3 {
+                    return Err(EngineError::artifact(
+                        &name,
+                        anyhow::anyhow!(
+                            "decode artifact returned {} outputs",
+                            out.len()
+                        ),
+                    ));
+                }
+                let sample_lit = out.pop().unwrap();
+                let new_v = out.pop().unwrap();
+                let new_k = out.pop().unwrap();
+                let samples = Tensor::from_literal(&sample_lit)?.as_i32()?.to_vec();
+                (new_k, new_v, samples, step)
+            }
         };
 
         // The new KV lives on as next step's input (lazy per-seq sync).
@@ -1791,6 +1994,11 @@ impl Engine {
             s.last_token_at = Some(now);
             emit_token(&self.streams, s, samples[slot], clock);
             self.metrics.tokens_generated += 1;
+            // Fold the emission back into the request's candidate set so
+            // the hot tiles track the generation online.
+            if let Some(sv) = self.subvocab.as_mut() {
+                sv.observe_token(self.running[ri].id, samples[slot]);
+            }
             if self.trace.on() {
                 let id = self.running[ri].id;
                 self.trace.emit(

@@ -284,6 +284,57 @@ pub fn speedup(gpu: &GpuSpec, baseline: Method, w: Workload) -> f64 {
     base / flash
 }
 
+/// FlashSampling chain with the certified sub-vocabulary LM head
+/// (DESIGN.md §16): only `active_frac` of the vocab rows are streamed and
+/// scored, so the W-stream traffic, the GEMM flops, and the candidate
+/// buffer all scale with the active fraction while the H-stream and the
+/// stage-2 structure are unchanged.  The exactness certificate itself is
+/// host-side arithmetic (O(V) RNG, no matmul) and is modeled as free
+/// device time.
+pub fn chain_subvocab(gpu: &GpuSpec, w: Workload, active_frac: f64) -> ChainCost {
+    let frac = active_frac.clamp(1.0 / w.vocab as f64, 1.0);
+    let (b, d, v) = (w.batch as f64, w.d as f64, w.vocab as f64);
+    let va = v * frac;
+    let gemm_flops = 2.0 * b * d * va;
+    let n_tiles = (va / FUSED_TILE_V as f64).ceil();
+    let traffic = va * d * BF16 + b * d * BF16 + b * n_tiles * 8.0;
+    let mut kernels = vec![KernelCost {
+        name: "fused_gemm_sample_sub",
+        device_s: gemm_time(gpu, traffic, gemm_flops, w.batch, true),
+        gap_s: gpu.launch_overhead,
+        traffic_bytes: traffic,
+        flops: gemm_flops,
+        is_matmul: true,
+    }];
+    let red_bytes = b * n_tiles * 8.0 + b * 4.0;
+    kernels.push(KernelCost {
+        name: "stage2_reduce",
+        device_s: 0.3e-6 + red_bytes / (gpu.hbm_bw * 0.5),
+        gap_s: GAP_FUSED_STAGE2,
+        traffic_bytes: red_bytes,
+        flops: 0.0,
+        is_matmul: false,
+    });
+    ChainCost { method: Method::FlashSampling, kernels }
+}
+
+/// Modeled speedup of certified sub-vocab decode over full FlashSampling
+/// at the observed `fallback_rate`.  The engine's protocol prices
+/// honestly: every step pays the tile-subset pass, and a fallback step
+/// pays the full-vocabulary pass ON TOP (the certificate is evaluated
+/// after the sub pass returns), so the average step costs
+/// `sub + fallback_rate * full`.
+pub fn subvocab_speedup(
+    gpu: &GpuSpec,
+    w: Workload,
+    active_frac: f64,
+    fallback_rate: f64,
+) -> f64 {
+    let full = chain(gpu, Method::FlashSampling, w, false).total();
+    let sub = chain_subvocab(gpu, w, active_frac).total();
+    full / (sub + fallback_rate.clamp(0.0, 1.0) * full)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -389,6 +440,30 @@ mod tests {
             assert!(overhead > predicted * 0.5, "B={b}: {overhead} vs {predicted}");
             assert!(overhead < predicted * 3.0 + 0.01, "B={b}: {overhead} vs {predicted}");
         }
+    }
+
+    #[test]
+    fn subvocab_chain_models_tile_skipping() {
+        let gpu = &specs::B200;
+        let w = Workload::small(8);
+        // Full active fraction reproduces the plain FlashSampling chain.
+        let full = chain(gpu, Method::FlashSampling, w, false).total();
+        let same = chain_subvocab(gpu, w, 1.0).total();
+        assert!((full - same).abs() < 1e-12, "{full} vs {same}");
+        // Skipping most tiles shrinks the W-stream: strictly cheaper, and
+        // monotone in the active fraction.
+        let quarter = chain_subvocab(gpu, w, 0.25).total();
+        let eighth = chain_subvocab(gpu, w, 0.125).total();
+        assert!(quarter < full && eighth < quarter, "{eighth} {quarter} {full}");
+        // Speedup: > 1 when the certificate mostly admits the skip, and
+        // monotone-decreasing in the fallback rate; with every step
+        // falling back the sub pass is pure overhead (< 1).
+        let s0 = subvocab_speedup(gpu, w, 0.25, 0.0);
+        let s_mid = subvocab_speedup(gpu, w, 0.25, 0.3);
+        let s1 = subvocab_speedup(gpu, w, 0.25, 1.0);
+        assert!(s0 > 1.0, "{s0}");
+        assert!(s0 > s_mid && s_mid > s1, "{s0} {s_mid} {s1}");
+        assert!(s1 < 1.0, "{s1}");
     }
 
     #[test]

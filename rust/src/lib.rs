@@ -125,6 +125,23 @@
 //! makespan tiling, replay determinism, and profile⇔metrics agreement;
 //! `python/tests/sim_profile_bench.py` re-derives the digest
 //! cross-language.
+//!
+//! # Certified sub-vocabulary decoding
+//!
+//! The [`subvocab`] subsystem (DESIGN.md §16) skips cold vocab tiles in
+//! the decode LM head without giving up the exact-sampling contract: a
+//! per-request [`subvocab::CandidateSet`] ranks vocab tiles by
+//! frequency/recency (prompt statistics + emitted tokens), the engine
+//! runs only those tiles through the `decode_sample_sub` tile-subset
+//! artifacts (ABI v3), and a per-step certificate — the per-tile
+//! Cauchy–Schwarz weight-norm bound [`subvocab::TileNorms`] plus the
+//! exact per-tile max Gumbel — either *proves* the excluded tiles cannot
+//! win the Gumbel-argmax or forces a full-vocabulary fallback pass at
+//! the same Philox coordinates.  Tokens are bit-identical to full
+//! FlashSampling either way; `repro subvocab-identity`,
+//! `rust/tests/subvocab.rs`, and `python/tests/sim_subvocab_bench.py`
+//! are the certificate, and [`metrics::ServingMetrics`] exports the
+//! fallback rate.
 
 pub mod benchutil;
 pub mod config;
@@ -140,6 +157,7 @@ pub mod router;
 pub mod runtime;
 pub mod sampling;
 pub mod specdec;
+pub mod subvocab;
 pub mod testutil;
 pub mod tp;
 pub mod trace;

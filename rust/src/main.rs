@@ -3,8 +3,8 @@
 //! ```text
 //! flashsampling serve   [--config F] [--set k=v]...   open-loop serving run
 //! flashsampling repro   <id|all|stats> [--out DIR]    regenerate paper tables
-//! flashsampling trace   [--out DIR] [--replicas N]    flight-recorder demo run
-//! flashsampling profile [--out DIR] [--replicas N]    modeled-time profile
+//! flashsampling trace   [--out DIR] [--replicas N] [--subvocab]   flight-recorder demo run
+//! flashsampling profile [--out DIR] [--replicas N] [--subvocab]   modeled-time profile
 //! flashsampling benchdiff OLD.json NEW.json [--tolerance F]  perf gate
 //! flashsampling bench-kernel [--set k=v]...           PJRT kernel A/B timing
 //! flashsampling selfcheck [--set k=v]...              load artifacts, smoke-run
@@ -28,9 +28,9 @@ fn usage() -> ! {
         "usage: flashsampling <serve|repro|trace|profile|benchdiff|bench-kernel|selfcheck> [args]\n\
          \n\
          serve        [--replicas N] --config FILE | --set key=value ...\n\
-         repro        <table1|table4|...|fig6|chisq|hetero-chisq|specdec-chisq|prefix-identity|stream-identity|chunk-identity|router-identity|trace-identity|profile-identity|e2e-quality|all|stats> [--out DIR]\n\
-         trace        [--out DIR] [--replicas N] [--set trace_level=lifecycle|full]\n\
-         profile      [--out DIR] [--replicas N]\n\
+         repro        <table1|table4|...|fig6|chisq|hetero-chisq|specdec-chisq|prefix-identity|stream-identity|chunk-identity|router-identity|trace-identity|profile-identity|subvocab-identity|e2e-quality|all|stats> [--out DIR]\n\
+         trace        [--out DIR] [--replicas N] [--subvocab] [--set trace_level=lifecycle|full]\n\
+         profile      [--out DIR] [--replicas N] [--subvocab]\n\
          benchdiff    OLD.json NEW.json [--tolerance FRACTION]\n\
          bench-kernel [--set key=value ...]\n\
          selfcheck    [--set key=value ...]"
@@ -66,6 +66,10 @@ fn parse_overrides(args: &[String]) -> Result<(Config, Vec<String>)> {
                 let n = args.get(i + 1).context("--replicas needs a count")?;
                 pairs.insert("replicas".into(), n.clone());
                 i += 2;
+            }
+            "--subvocab" => {
+                pairs.insert("subvocab".into(), "true".into());
+                i += 1;
             }
             other if other.starts_with("--") => bail!("unknown flag {other}"),
             other => {
@@ -320,10 +324,17 @@ fn drive_traced_session_demo(
         cfg.trace_level
     };
     let replicas = cfg.replicas.max(1);
+    // `--subvocab` turns on the replica's certified sub-vocab event
+    // model, so skipped-tile / fallback spans land in the Perfetto
+    // export alongside prefill/decode.
     let mut router = sim_router(
         replicas,
         cfg.dispatch_policy,
-        SimReplicaConfig { trace_level: level, ..Default::default() },
+        SimReplicaConfig {
+            trace_level: level,
+            subvocab: cfg.subvocab,
+            ..Default::default()
+        },
     );
     let sys = |s: u64| -> Vec<i32> {
         (0..32).map(|j| ((s * 97 + j * 13 + 5) % 2048) as i32).collect()

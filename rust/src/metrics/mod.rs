@@ -152,6 +152,11 @@ pub struct ServingMetrics {
     pub wall: Duration,
     /// Named counters (preemptions, bucket padding waste, ...).
     pub counters: HashMap<String, u64>,
+    /// Named gauges (instantaneous rates/levels).  Rendered as the
+    /// `flashsampling_gauge{name="..."}` family with sorted keys;
+    /// derived rates like [`Self::subvocab_fallback_rate`] are merged in
+    /// at render time.
+    pub gauges: HashMap<String, f64>,
     /// TTFT SLO threshold in µs (`slo_ttft_ms` config key, DESIGN.md
     /// §15); 0 disables the classification AND its Prometheus family,
     /// keeping the exposition byte-identical to the pre-SLO stack.
@@ -164,6 +169,10 @@ pub struct ServingMetrics {
 impl ServingMetrics {
     pub fn bump(&mut self, name: &str, by: u64) {
         *self.counters.entry(name.to_string()).or_default() += by;
+    }
+
+    pub fn set_gauge(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
     }
 
     pub fn median_tpot(&self) -> Option<Duration> {
@@ -231,6 +240,19 @@ impl ServingMetrics {
         let accepted =
             self.counters.get("spec_accepted_tokens").copied().unwrap_or(0);
         Some(accepted as f64 / drafted as f64)
+    }
+
+    /// Fraction of sub-vocabulary decode steps whose exactness certificate
+    /// could NOT admit the tile skip and forced a full-vocabulary fallback
+    /// pass, from the `subvocab_steps` / `subvocab_fallbacks` counters
+    /// (DESIGN.md §16).  `None` when sub-vocab decoding never ran.
+    pub fn subvocab_fallback_rate(&self) -> Option<f64> {
+        let steps = self.counters.get("subvocab_steps").copied().unwrap_or(0);
+        if steps == 0 {
+            return None;
+        }
+        let fb = self.counters.get("subvocab_fallbacks").copied().unwrap_or(0);
+        Some(fb as f64 / steps as f64)
     }
 
     /// Requests whose TTFT exceeded the `slo_ttft_us` threshold
@@ -401,6 +423,27 @@ impl ServingMetrics {
             "# TYPE flashsampling_slo_violations_total counter\n".into(),
             body,
         ));
+        // Named gauges (DESIGN.md §16): explicit `set_gauge` values merged
+        // with derived rates like the sub-vocab fallback rate, sorted by
+        // name.  Like the SLO family, the slot is always pushed (empty
+        // body when nothing set) so the per-replica zip stays aligned, and
+        // the renderers suppress the dangling TYPE header.
+        let mut gauges: Vec<(String, f64)> =
+            self.gauges.iter().map(|(k, v)| (k.clone(), *v)).collect();
+        if let Some(r) = self.subvocab_fallback_rate() {
+            if !self.gauges.contains_key("subvocab_fallback_rate") {
+                gauges.push(("subvocab_fallback_rate".into(), r));
+            }
+        }
+        gauges.sort_by(|a, b| a.0.cmp(&b.0));
+        let mut body = String::new();
+        for (name, v) in &gauges {
+            body.push_str(&format!(
+                "flashsampling_gauge{} {v:.6}\n",
+                lbl(&format!("name=\"{name}\"")),
+            ));
+        }
+        fams.push(("# TYPE flashsampling_gauge gauge\n".into(), body));
         let mut names: Vec<&String> = self.counters.keys().collect();
         names.sort();
         let mut body = String::new();
@@ -693,6 +736,48 @@ flashsampling_slo_violations_total{kind=\"itl\"} 1
         let rendered = ttft_only.render_prometheus();
         assert!(rendered.contains("{kind=\"ttft\"} 2\n"));
         assert!(!rendered.contains("kind=\"itl\""));
+        // Gauge family (DESIGN.md §16): absent by default (the exact
+        // check above has no gauge lines), and when sub-vocab decode ran
+        // the derived fallback rate appears with a `# TYPE ... gauge`
+        // header, merged with explicit gauges in sorted-name order, in
+        // its slot BEFORE the named counters.
+        assert!(!m.render_prometheus().contains("flashsampling_gauge"));
+        let mut g = m.clone();
+        g.bump("subvocab_steps", 8);
+        g.bump("subvocab_fallbacks", 2);
+        g.set_gauge("kv_util", 0.5);
+        let rendered = g.render_prometheus();
+        let expect_gauge = "\
+# TYPE flashsampling_gauge gauge
+flashsampling_gauge{name=\"kv_util\"} 0.500000
+flashsampling_gauge{name=\"subvocab_fallback_rate\"} 0.250000
+# TYPE flashsampling_counter counter
+";
+        assert!(rendered.contains(expect_gauge));
+        // The subvocab counters themselves land in the named-counter
+        // family like any other bump.
+        assert!(rendered.contains("flashsampling_counter{name=\"subvocab_steps\"} 8\n"));
+        // An explicit gauge under the derived name wins (no double line).
+        g.set_gauge("subvocab_fallback_rate", 0.125);
+        assert_eq!(
+            g.render_prometheus()
+                .matches("flashsampling_gauge{name=\"subvocab_fallback_rate\"}")
+                .count(),
+            1
+        );
+        assert!(g
+            .render_prometheus()
+            .contains("flashsampling_gauge{name=\"subvocab_fallback_rate\"} 0.125000\n"));
+    }
+
+    #[test]
+    fn subvocab_fallback_rate_from_counters() {
+        let mut m = ServingMetrics::default();
+        assert_eq!(m.subvocab_fallback_rate(), None);
+        m.bump("subvocab_steps", 10);
+        assert!((m.subvocab_fallback_rate().unwrap() - 0.0).abs() < 1e-9);
+        m.bump("subvocab_fallbacks", 4);
+        assert!((m.subvocab_fallback_rate().unwrap() - 0.4).abs() < 1e-9);
     }
 
     #[test]

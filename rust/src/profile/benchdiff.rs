@@ -14,7 +14,8 @@
 //! `*_ns` / `*_us` / `*_w` (nanoseconds, microseconds, weighted-step
 //! latencies) are lower-is-better; the known throughput/yield counters
 //! (`completed`, `tokens_generated`, `cached_prefill_tokens`,
-//! `min_replica_completed`, `iters_per_sample`) are higher-is-better.
+//! `min_replica_completed`, `iters_per_sample`,
+//! `modeled_speedup_x1000`) are higher-is-better.
 //! A change beyond the relative noise band (`tolerance`, default 5%) in
 //! the bad direction is a regression; the CLI exits nonzero on any.
 
@@ -38,12 +39,13 @@ enum Direction {
 /// Classify a record field as a metric (with direction) or an identity
 /// field (`None`).
 fn direction(key: &str) -> Option<Direction> {
-    const HIGHER: [&str; 5] = [
+    const HIGHER: [&str; 6] = [
         "completed",
         "tokens_generated",
         "cached_prefill_tokens",
         "min_replica_completed",
         "iters_per_sample",
+        "modeled_speedup_x1000",
     ];
     if HIGHER.contains(&key) {
         Some(Direction::HigherIsBetter)

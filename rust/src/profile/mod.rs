@@ -623,13 +623,18 @@ pub fn profile_trace(
                 r.resident = r.resident.saturating_add(*tokens as usize);
             }
             // Decisions and ledger deltas carry no modeled duration.
+            // Subvocab skip/fallback markers ride inside the decode
+            // window they annotate (the window itself is priced by the
+            // token events), so they add no duration either.
             EventKind::Preempt { .. }
             | EventKind::Promote { .. }
             | EventKind::Plan { .. }
             | EventKind::KvAlloc { .. }
             | EventKind::KvFree { .. }
             | EventKind::KvCow { .. }
-            | EventKind::RadixEvict { .. } => {}
+            | EventKind::RadixEvict { .. }
+            | EventKind::SubvocabSkip { .. }
+            | EventKind::SubvocabFallback { .. } => {}
             EventKind::Prefill { .. }
             | EventKind::FirstToken { .. }
             | EventKind::DecodeToken { .. }

@@ -11,6 +11,7 @@
 pub mod profile_identity;
 pub mod quality;
 pub mod router_identity;
+pub mod subvocab_identity;
 pub mod tables;
 pub mod trace_identity;
 
@@ -28,10 +29,11 @@ pub const ALL: [&str; 13] = [
 /// on/off identity check, the streaming-front-end identity/abort
 /// certificate, the chunked-prefill/swap-tier replay-identity
 /// certificate, the multi-replica router identity/balance certificate,
-/// the flight-recorder trace-vs-metrics certificate, and the
-/// modeled-time profiler conservation certificate — are fast and
-/// deterministic, so CI runs them as a smoke gate after `cargo test`).
-pub const STATS: [&str; 10] = [
+/// the flight-recorder trace-vs-metrics certificate, the
+/// modeled-time profiler conservation certificate, and the certified
+/// sub-vocabulary decode certificate — are fast and deterministic, so CI
+/// runs them as a smoke gate after `cargo test`).
+pub const STATS: [&str; 11] = [
     "chisq",
     "hetero-chisq",
     "specdec-chisq",
@@ -41,6 +43,7 @@ pub const STATS: [&str; 10] = [
     "router-identity",
     "trace-identity",
     "profile-identity",
+    "subvocab-identity",
     "e2e-quality",
 ];
 
@@ -70,6 +73,7 @@ pub fn run(id: &str, out_dir: &Path) -> Result<String> {
         "router-identity" => router_identity::router_identity()?,
         "trace-identity" => trace_identity::trace_identity()?,
         "profile-identity" => profile_identity::profile_identity()?,
+        "subvocab-identity" => subvocab_identity::subvocab_identity()?,
         "e2e-quality" => quality::e2e_quality(None)?,
         other => anyhow::bail!("unknown experiment id '{other}'"),
     };

@@ -60,6 +60,12 @@ pub struct SimReplicaConfig {
     pub decode_max_b: usize,
     /// Flight-recorder level (`Off` by default, as in the engine config).
     pub trace_level: TraceLevel,
+    /// Model the certified sub-vocabulary decode head (DESIGN.md §16):
+    /// each decode step emits one deterministic skip-or-fallback event
+    /// and bumps the `subvocab_steps` / `subvocab_fallbacks` counters,
+    /// so `Router<SimReplica>` certifies the same trace/metrics contract
+    /// `Router<Engine>` exports with `subvocab = true`.
+    pub subvocab: bool,
 }
 
 impl Default for SimReplicaConfig {
@@ -72,6 +78,7 @@ impl Default for SimReplicaConfig {
             prefill_b: 4,
             decode_max_b: 8,
             trace_level: TraceLevel::Off,
+            subvocab: false,
         }
     }
 }
@@ -280,6 +287,27 @@ impl SimReplica {
         self.wtime += 1;
         let cstep = self.cstep;
         self.cstep += 1;
+        if self.cfg.subvocab {
+            // Deterministic stand-in for the certified sub-vocab head:
+            // every 4th batch counter forces a certificate fallback, the
+            // rest admit the skip; the event is attributed to the first
+            // running row (the engine attributes its batch-level event to
+            // `seq_ids[0]`) with the default tile shape, 4 candidate
+            // tiles of 16.  `python/tests/sim_subvocab_bench.py` mirrors
+            // this rule bit-for-bit — keep in lockstep.
+            let id = self.running[0].id;
+            let (active, skipped) = (4u64, 12u64);
+            self.metrics.bump("subvocab_steps", 1);
+            let ev = if cstep % 4 == 0 {
+                self.metrics.bump("subvocab_fallbacks", 1);
+                EventKind::SubvocabFallback { active, skipped }
+            } else {
+                EventKind::SubvocabSkip { active, skipped }
+            };
+            if self.trace.on() {
+                self.trace.emit(self.clock, id, ev);
+            }
+        }
         let mut done = Vec::new();
         let mut emitted = Vec::new();
         for (row, s) in self.running.iter_mut().take(b).enumerate() {
@@ -590,6 +618,70 @@ mod tests {
         assert_eq!(done.len(), 2);
         assert_eq!(r.kv_unaccounted_blocks(), 0);
         assert_eq!(r.prefix_attached_refs(), 0);
+    }
+
+    #[test]
+    fn subvocab_mode_emits_deterministic_events_and_counters() {
+        let cfg = SimReplicaConfig {
+            trace_level: TraceLevel::Lifecycle,
+            subvocab: true,
+            ..Default::default()
+        };
+        let run = || {
+            let mut r = sim_router(1, DispatchPolicy::LeastLoaded, cfg);
+            for id in 0..3u64 {
+                let prompt: Vec<i32> =
+                    (0..24).map(|j| (id as i32 * 5 + j) % 61).collect();
+                r.submit(req(id, prompt, 6)).unwrap();
+            }
+            let done = drain_all(&mut r);
+            assert_eq!(done.len(), 3);
+            // Tokens are untouched by the subvocab model (exactness).
+            for c in &done {
+                for (i, &t) in c.tokens.iter().enumerate() {
+                    assert_eq!(t, sim_token(c.id, i));
+                }
+            }
+            let rep = &r.replicas()[0];
+            let steps =
+                rep.metrics.counters.get("subvocab_steps").copied().unwrap_or(0);
+            let fb = rep
+                .metrics
+                .counters
+                .get("subvocab_fallbacks")
+                .copied()
+                .unwrap_or(0);
+            assert!(steps > 0, "decode steps ran");
+            assert!(fb < steps, "cstep % 4 rule admits most steps");
+            assert_eq!(rep.metrics.subvocab_fallback_rate(), Some(fb as f64 / steps as f64));
+            // One event per decode step, kinds matching the counters.
+            let mut skip_ev = 0u64;
+            let mut fb_ev = 0u64;
+            for e in rep.trace.events() {
+                match &e.kind {
+                    EventKind::SubvocabSkip { active, skipped } => {
+                        assert_eq!((*active, *skipped), (4, 12));
+                        skip_ev += 1;
+                    }
+                    EventKind::SubvocabFallback { .. } => fb_ev += 1,
+                    _ => {}
+                }
+            }
+            assert_eq!(skip_ev + fb_ev, steps);
+            assert_eq!(fb_ev, fb);
+            (steps, fb)
+        };
+        // Deterministic across runs.
+        assert_eq!(run(), run());
+        // And off by default: no events, no counters.
+        let mut r = sim_router(
+            1,
+            DispatchPolicy::LeastLoaded,
+            SimReplicaConfig { trace_level: TraceLevel::Lifecycle, ..Default::default() },
+        );
+        r.submit(req(9, vec![1, 2, 3], 4)).unwrap();
+        drain_all(&mut r);
+        assert!(!r.replicas()[0].metrics.counters.contains_key("subvocab_steps"));
     }
 
     #[test]

@@ -10,8 +10,11 @@ use crate::json::{self, Value};
 
 /// The artifact ABI version this runtime speaks.  v2 introduced the
 /// per-row temperature vector (`tau: [B]` instead of a scalar) across
-/// every sampling artifact; manifests without a `version` key are v1.
-pub const TAU_ABI_VERSION: u32 = 2;
+/// every sampling artifact; v3 adds the `decode_sample_sub_b{B}`
+/// candidate-tile artifacts (sub-vocabulary decode, DESIGN.md §16) with
+/// the `tiles: [S]` input and (winner score, hidden norm) outputs.
+/// Manifests without a `version` key are v1.
+pub const TAU_ABI_VERSION: u32 = 3;
 
 /// Element dtype of an artifact input/output or weight tensor.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -208,7 +211,8 @@ impl Manifest {
         anyhow::ensure!(
             self.abi_version == TAU_ABI_VERSION,
             "artifact manifest has ABI v{} but this runtime speaks v{} \
-             (tau: [B] per-row temperature) — re-run `make artifacts`",
+             (tau: [B] per-row temperature + sub-vocab decode artifacts) \
+             — re-run `make artifacts`",
             self.abi_version,
             TAU_ABI_VERSION
         );
@@ -261,7 +265,7 @@ mod tests {
     fn write_fixture(dir: &Path) {
         std::fs::create_dir_all(dir.join("weights")).unwrap();
         let manifest = r#"{
-          "version": 2,
+          "version": 3,
           "model": {"vocab": 2048, "d_model": 256, "n_layers": 4,
                     "n_heads": 4, "ffn": 512, "max_seq": 256,
                     "param_order": ["embed", "lm_head"],
@@ -312,7 +316,7 @@ mod tests {
         write_fixture(&dir);
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path).unwrap();
-        std::fs::write(&path, text.replace("\"version\": 2,", "")).unwrap();
+        std::fs::write(&path, text.replace("\"version\": 3,", "")).unwrap();
         let m = Manifest::load(&dir).unwrap();
         assert_eq!(m.abi_version, 1);
         // ...and every tau-feeding consumer must refuse it.

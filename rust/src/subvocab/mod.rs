@@ -1,0 +1,508 @@
+//! Certified sub-vocabulary LM head (DESIGN.md §16).
+//!
+//! CSV-Decode / FlashHead-style tile skipping fused into FlashSampling's
+//! tiled structure: maintain a per-context *candidate sub-vocabulary* (a
+//! small set of hot vocab tiles, ranked by frequency/recency from the
+//! prompt and the emitted tokens), run the fused LM-head kernel only over
+//! those tiles, and accept the skipped-tile sample **only when a
+//! certificate proves the excluded tiles cannot win** the Gumbel-argmax.
+//! Otherwise the engine falls back to the full-vocabulary pass at the same
+//! Philox `(row, step)` coordinates — so the token stream is bit-identical
+//! to full FlashSampling either way, and skipping is purely a speed lever.
+//!
+//! The certificate is a per-tile Cauchy–Schwarz bound.  For an excluded
+//! tile `t` with per-tile weight norm `N_t = max_{i in t} ||W_i||_2`, every
+//! excluded perturbed score obeys
+//!
+//! ```text
+//!   s_i = <W_i, h> / tau + g_i  <=  N_t * ||h||_2 / tau + max_{i in t} g_i
+//! ```
+//!
+//! `N_t` is precomputed once per artifact set from the LM-head weights
+//! ([`TileNorms`]); `||h||_2` comes back from the `decode_sample_sub`
+//! artifact (or is computed on the host path); and the per-tile max Gumbel
+//! is evaluated *exactly* from the shared Philox streams — O(V) RNG work,
+//! which is noise next to the O(V·D) matmul the skip avoids.  If the
+//! candidate winner's score strictly exceeds every excluded tile's bound
+//! (plus a configurable slack), no excluded index can tie or beat it, so
+//! the candidate argmax *is* the full-vocab argmax — exactness by
+//! construction, certified per step, never assumed.
+
+use std::collections::HashMap;
+
+use crate::sampling::philox::{self, Key};
+
+/// Width of a rankable vocab tile.  Mirrors `SUB_TILE_V` in
+/// `python/compile/aot.py` — finer than the kernel's `DEFAULT_TILE_V` so a
+/// small budget still covers the hot head of the unigram distribution.
+pub const SUB_TILE_V: usize = 128;
+
+/// Fixed slot count of the `decode_sample_sub` artifacts' `tiles` input
+/// (unused slots are -1).  Mirrors `SUB_TILES` in `python/compile/aot.py`.
+pub const SUB_TILE_SLOTS: usize = 4;
+
+/// Knobs threaded in from `EngineConfig` (config keys `subvocab_tiles`,
+/// `subvocab_slack`).
+#[derive(Clone, Copy, Debug)]
+pub struct SubvocabConfig {
+    /// Candidate tile budget per decode batch (<= [`SUB_TILE_SLOTS`]).
+    pub tile_budget: usize,
+    /// Additive safety margin on the certificate: skip only when
+    /// `winner > bound + slack`.  0.0 is already exact; positive values
+    /// trade fallback rate for numerical headroom.
+    pub slack: f32,
+}
+
+impl Default for SubvocabConfig {
+    fn default() -> Self {
+        Self { tile_budget: SUB_TILE_SLOTS, slack: 0.0 }
+    }
+}
+
+/// Per-context candidate-set maintainer: frequency/recency statistics over
+/// vocab tiles, updated online from prompt tokens and emitted tokens.
+#[derive(Clone, Debug)]
+pub struct CandidateSet {
+    tile_v: usize,
+    /// Tokens observed per tile (prompt + emissions).
+    counts: Vec<u64>,
+    /// Logical observation clock of the last token seen per tile (0 =
+    /// never observed).
+    last_seen: Vec<u64>,
+    clock: u64,
+}
+
+impl CandidateSet {
+    pub fn new(vocab: usize, tile_v: usize) -> Self {
+        assert!(tile_v > 0);
+        let n_tiles = vocab.div_ceil(tile_v);
+        Self { tile_v, counts: vec![0; n_tiles], last_seen: vec![0; n_tiles], clock: 0 }
+    }
+
+    pub fn n_tiles(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Record one observed token (emitted or prompt).
+    pub fn observe(&mut self, token: i32) {
+        if token < 0 {
+            return;
+        }
+        let t = token as usize / self.tile_v;
+        if t < self.counts.len() {
+            self.clock += 1;
+            self.counts[t] += 1;
+            self.last_seen[t] = self.clock;
+        }
+    }
+
+    /// Seed the set from the prompt's unigram statistics.
+    pub fn observe_prompt(&mut self, tokens: &[i32]) {
+        for &t in tokens {
+            self.observe(t);
+        }
+    }
+
+    /// The top-`budget` tiles by (count desc, recency desc, tile-id asc),
+    /// returned sorted ascending.  Fully deterministic: unseen tiles rank
+    /// by ascending id, so the result is well-defined even on a cold set.
+    pub fn candidates(&self, budget: usize) -> Vec<u32> {
+        let mut order: Vec<u32> = (0..self.n_tiles() as u32).collect();
+        order.sort_by(|&a, &b| {
+            let (a, b) = (a as usize, b as usize);
+            self.counts[b]
+                .cmp(&self.counts[a])
+                .then(self.last_seen[b].cmp(&self.last_seen[a]))
+                .then(a.cmp(&b))
+        });
+        order.truncate(budget.max(1).min(self.n_tiles()));
+        order.sort_unstable();
+        order
+    }
+}
+
+/// Per-tile weight-norm bounds, precomputed once per artifact set:
+/// `norms[t] = max_{i in tile t} ||W_i||_2`.
+#[derive(Clone, Debug)]
+pub struct TileNorms {
+    pub tile_v: usize,
+    pub vocab: usize,
+    pub norms: Vec<f32>,
+}
+
+impl TileNorms {
+    /// Compute from the row-major `[vocab, d]` LM-head weight.
+    pub fn from_lm_head(w: &[f32], vocab: usize, d: usize, tile_v: usize) -> Self {
+        assert_eq!(w.len(), vocab * d, "lm_head shape mismatch");
+        let n_tiles = vocab.div_ceil(tile_v);
+        let mut norms = vec![0.0f32; n_tiles];
+        for i in 0..vocab {
+            let row = &w[i * d..(i + 1) * d];
+            let n = row.iter().map(|x| x * x).sum::<f32>().sqrt();
+            let t = i / tile_v;
+            if n > norms[t] {
+                norms[t] = n;
+            }
+        }
+        Self { tile_v, vocab, norms }
+    }
+
+    pub fn n_tiles(&self) -> usize {
+        self.norms.len()
+    }
+}
+
+/// Max over all *excluded* tiles of the certificate bound
+/// `N_t * h_norm / tau + max Gumbel over the tile` at Philox coordinates
+/// `(row, step)`.  `candidates` lists the included tile ids; entries `< 0`
+/// (slot padding) are ignored.  Returns `NEG_INFINITY` when every tile is
+/// included — the skip is then trivially admissible.
+pub fn excluded_bound(
+    norms: &TileNorms,
+    candidates: &[i32],
+    h_norm: f32,
+    tau: f32,
+    key: Key,
+    row: u32,
+    step: u32,
+) -> f32 {
+    let mut included = vec![false; norms.n_tiles()];
+    for &t in candidates {
+        if t >= 0 && (t as usize) < included.len() {
+            included[t as usize] = true;
+        }
+    }
+    let mut bound = f32::NEG_INFINITY;
+    let mut gbuf = vec![0.0f32; norms.tile_v];
+    for (t, inc) in included.iter().enumerate() {
+        if *inc {
+            continue;
+        }
+        let start = t * norms.tile_v;
+        let len = norms.tile_v.min(norms.vocab - start);
+        philox::gumbel_row(key, row, step, start as u32, &mut gbuf[..len]);
+        let gmax = gbuf[..len].iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let b = norms.norms[t] * h_norm / tau + gmax;
+        if b > bound {
+            bound = b;
+        }
+    }
+    bound
+}
+
+/// Full-vocabulary Gumbel-argmax over materialized `W h` — the oracle the
+/// certificate must never disagree with.  First-max tie-breaking matches
+/// `jnp.argmax` (and hence the fused kernel's cross-tile reduce).
+pub fn full_argmax(
+    w: &[f32],
+    vocab: usize,
+    d: usize,
+    h: &[f32],
+    tau: f32,
+    key: Key,
+    row: u32,
+    step: u32,
+) -> (i32, f32) {
+    let mut best = f32::NEG_INFINITY;
+    let mut arg = 0i32;
+    for i in 0..vocab {
+        let y = dot(&w[i * d..(i + 1) * d], h) / tau;
+        let s = y + philox::gumbel_at(key, i as u32, row, step);
+        if s > best {
+            best = s;
+            arg = i as i32;
+        }
+    }
+    (arg, best)
+}
+
+/// Outcome of one certified sub-vocabulary sampling step.
+#[derive(Clone, Copy, Debug)]
+pub struct CertifiedDraw {
+    /// The sampled token — from the candidate tiles when `fallback` is
+    /// false, from the full pass otherwise.  Bit-identical to
+    /// [`full_argmax`] in both cases.
+    pub token: i32,
+    /// True when the certificate could not rule out the excluded tiles and
+    /// the full-vocabulary pass was taken.
+    pub fallback: bool,
+    /// The candidate winner's perturbed score.
+    pub winner_score: f32,
+    /// The excluded tiles' certificate bound ([`excluded_bound`]).
+    pub bound: f32,
+}
+
+/// Host-side reference of the certified decode protocol — the oracle for
+/// `repro subvocab-identity` and `rust/tests/subvocab.rs`.  The engine runs
+/// the same accept/fallback decision against the `decode_sample_sub`
+/// artifact's (sample, winner score, hidden norm) outputs.
+///
+/// `candidates` must be sorted ascending (as [`CandidateSet::candidates`]
+/// returns them) so candidate-side tie-breaking scans indices in the same
+/// order as the full pass.
+pub fn certified_sample(
+    w: &[f32],
+    vocab: usize,
+    d: usize,
+    h: &[f32],
+    tau: f32,
+    candidates: &[u32],
+    norms: &TileNorms,
+    slack: f32,
+    key: Key,
+    row: u32,
+    step: u32,
+) -> CertifiedDraw {
+    debug_assert!(candidates.windows(2).all(|p| p[0] < p[1]), "candidates must be sorted");
+    // Candidate pass: exact perturbed scores over the included tiles only.
+    let mut best = f32::NEG_INFINITY;
+    let mut arg = -1i32;
+    for &t in candidates {
+        let start = (t as usize) * norms.tile_v;
+        if start >= vocab {
+            continue;
+        }
+        let end = (start + norms.tile_v).min(vocab);
+        for i in start..end {
+            let y = dot(&w[i * d..(i + 1) * d], h) / tau;
+            let s = y + philox::gumbel_at(key, i as u32, row, step);
+            if s > best {
+                best = s;
+                arg = i as i32;
+            }
+        }
+    }
+    let h_norm = dot(h, h).sqrt();
+    let cand_i32: Vec<i32> = candidates.iter().map(|&t| t as i32).collect();
+    let bound = excluded_bound(norms, &cand_i32, h_norm, tau, key, row, step);
+    if arg >= 0 && best > bound + slack {
+        return CertifiedDraw { token: arg, fallback: false, winner_score: best, bound };
+    }
+    let (token, _) = full_argmax(w, vocab, d, h, tau, key, row, step);
+    CertifiedDraw { token, fallback: true, winner_score: best, bound }
+}
+
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Engine-side state: the precomputed tile norms plus one [`CandidateSet`]
+/// per live request.
+#[derive(Debug)]
+pub struct SubvocabState {
+    pub cfg: SubvocabConfig,
+    pub norms: TileNorms,
+    sets: HashMap<u64, CandidateSet>,
+}
+
+impl SubvocabState {
+    pub fn new(lm_head: &[f32], vocab: usize, d: usize, cfg: SubvocabConfig) -> Self {
+        let norms = TileNorms::from_lm_head(lm_head, vocab, d, SUB_TILE_V);
+        Self { cfg, norms, sets: HashMap::new() }
+    }
+
+    fn set_mut(&mut self, id: u64) -> &mut CandidateSet {
+        let (vocab, tile_v) = (self.norms.vocab, self.norms.tile_v);
+        self.sets.entry(id).or_insert_with(|| CandidateSet::new(vocab, tile_v))
+    }
+
+    /// Seed a request's candidate set from its prompt.
+    pub fn observe_prompt(&mut self, id: u64, tokens: &[i32]) {
+        self.set_mut(id).observe_prompt(tokens);
+    }
+
+    /// Fold one emitted token into the request's candidate set.
+    pub fn observe_token(&mut self, id: u64, token: i32) {
+        self.set_mut(id).observe(token);
+    }
+
+    /// Drop a finished/aborted request's state.
+    pub fn release(&mut self, id: u64) {
+        self.sets.remove(&id);
+    }
+
+    /// Merged candidate tiles for one decode batch, padded with -1 to
+    /// `slots` (the artifact's fixed `tiles` input width).  Tiles rank by
+    /// summed counts then max recency across the batch's rows — one shared
+    /// list per batch, matching the artifact's one-`tiles`-per-call ABI.
+    pub fn batch_tiles(&mut self, ids: &[u64], slots: usize) -> Vec<i32> {
+        let n_tiles = self.norms.n_tiles();
+        let mut counts = vec![0u64; n_tiles];
+        let mut recency = vec![0u64; n_tiles];
+        for &id in ids {
+            let set = self.set_mut(id);
+            for t in 0..n_tiles {
+                counts[t] += set.counts[t];
+                recency[t] = recency[t].max(set.last_seen[t]);
+            }
+        }
+        let mut order: Vec<usize> = (0..n_tiles).collect();
+        order.sort_by(|&a, &b| {
+            counts[b]
+                .cmp(&counts[a])
+                .then(recency[b].cmp(&recency[a]))
+                .then(a.cmp(&b))
+        });
+        let budget = self.cfg.tile_budget.max(1).min(slots).min(n_tiles);
+        let mut tiles: Vec<i32> = order[..budget].iter().map(|&t| t as i32).collect();
+        tiles.sort_unstable();
+        tiles.resize(slots, -1);
+        tiles
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Skew-structured toy LM head: tile 0 carries hot rows (amplitude
+    /// `a_i` in [0.45, 0.6] along the all-ones direction plus small
+    /// noise), later tiles are pure noise.  The structure matters:
+    /// random-direction rows at equal scale never admit a certified skip
+    /// — Cauchy–Schwarz is loose by ~sqrt(d) for incoherent vectors — so
+    /// an isotropic fixture would only ever exercise the fallback path.
+    /// This mirrors the Zipf-hot unigram shape the subsystem targets.
+    fn toy_head(vocab: usize, d: usize, seed: u64) -> Vec<f32> {
+        let key = Key::from_seed(seed);
+        let mut w = vec![0.0f32; vocab * d];
+        for i in 0..vocab {
+            let hot = i < SUB_TILE_V;
+            let a = 0.45
+                + 0.15 * philox::uniform_at(key, i as u32, d as u32, 5, 0);
+            for j in 0..d {
+                let n =
+                    philox::uniform_at(key, i as u32, j as u32, 5, 0) - 0.5;
+                w[i * d + j] = if hot { a + 0.25 * n } else { n };
+            }
+        }
+        w
+    }
+
+    /// Step-varying hidden state: a shared bias `b` in [-0.25, 1.25]
+    /// along the all-ones direction (the alignment knob — steps with `b`
+    /// near zero give the certificate nothing to prove and must fall
+    /// back) plus unit-scale noise.
+    fn toy_hidden(d: usize, seed: u64, step: u32) -> Vec<f32> {
+        let key = Key::from_seed(seed);
+        let b = 1.5 * philox::uniform_at(key, d as u32, 0, 6, step) - 0.25;
+        (0..d)
+            .map(|j| b + philox::uniform_at(key, j as u32, 0, 6, step) - 0.5)
+            .collect()
+    }
+
+    #[test]
+    fn candidate_ranking_is_frequency_then_recency() {
+        let mut cs = CandidateSet::new(512, 128); // 4 tiles
+        cs.observe_prompt(&[0, 1, 2, 130, 131, 260]); // t0 x3, t1 x2, t2 x1
+        assert_eq!(cs.candidates(2), vec![0, 1]);
+        // Recency breaks a count tie: push t3 to 1 observation, then t2
+        // again — both at 2 observations, t2 more recent.
+        cs.observe(390); // t3
+        cs.observe(261); // t2 -> counts t2=2, t3=1
+        assert_eq!(cs.candidates(3), vec![0, 1, 2]);
+        // Out-of-range / negative tokens are ignored, not panics.
+        cs.observe(-1);
+        cs.observe(100_000);
+        assert_eq!(cs.candidates(3), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn cold_set_is_deterministic() {
+        let cs = CandidateSet::new(1024, 128);
+        assert_eq!(cs.candidates(3), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn tile_norms_bound_every_row() {
+        let (vocab, d) = (300, 16); // ragged last tile
+        let w = toy_head(vocab, d, 7);
+        let tn = TileNorms::from_lm_head(&w, vocab, d, 128);
+        assert_eq!(tn.n_tiles(), 3);
+        for i in 0..vocab {
+            let n = w[i * d..(i + 1) * d].iter().map(|x| x * x).sum::<f32>().sqrt();
+            assert!(n <= tn.norms[i / 128] + 1e-6, "row {i}");
+        }
+    }
+
+    #[test]
+    fn all_tiles_included_never_falls_back() {
+        let (vocab, d) = (512, 32);
+        let w = toy_head(vocab, d, 1);
+        let tn = TileNorms::from_lm_head(&w, vocab, d, 128);
+        let key = Key::from_seed(9);
+        for step in 0..20 {
+            let h = toy_hidden(d, 2, step);
+            let all: Vec<u32> = (0..tn.n_tiles() as u32).collect();
+            let draw = certified_sample(&w, vocab, d, &h, 1.0, &all, &tn, 0.0, key, 0, step);
+            assert!(!draw.fallback, "step {step}");
+            let (oracle, _) = full_argmax(&w, vocab, d, &h, 1.0, key, 0, step);
+            assert_eq!(draw.token, oracle, "step {step}");
+        }
+    }
+
+    #[test]
+    fn fallback_token_is_identical_to_full_pass() {
+        let (vocab, d) = (512, 32);
+        let w = toy_head(vocab, d, 3);
+        let tn = TileNorms::from_lm_head(&w, vocab, d, 128);
+        let key = Key::from_seed(4);
+        // Huge slack forces the fallback on every step.
+        for step in 0..20 {
+            let h = toy_hidden(d, 5, step);
+            let draw =
+                certified_sample(&w, vocab, d, &h, 1.0, &[0], &tn, 1e9, key, 0, step);
+            assert!(draw.fallback);
+            let (oracle, _) = full_argmax(&w, vocab, d, &h, 1.0, key, 0, step);
+            assert_eq!(draw.token, oracle, "step {step}");
+        }
+    }
+
+    #[test]
+    fn admitted_skips_match_the_oracle() {
+        let (vocab, d) = (512, 32);
+        let w = toy_head(vocab, d, 11);
+        let tn = TileNorms::from_lm_head(&w, vocab, d, 128);
+        let key = Key::from_seed(12);
+        let mut skips = 0;
+        for step in 0..200 {
+            let h = toy_hidden(d, 13, step);
+            for budget in 1..=3usize {
+                let cands: Vec<u32> = (0..budget as u32).collect();
+                let draw =
+                    certified_sample(&w, vocab, d, &h, 0.25, &cands, &tn, 0.0, key, 0, step);
+                let (oracle, _) = full_argmax(&w, vocab, d, &h, 0.25, key, 0, step);
+                assert_eq!(draw.token, oracle, "step {step} budget {budget}");
+                if !draw.fallback {
+                    skips += 1;
+                    // The certificate's self-consistency: the winner beat
+                    // the excluded bound.
+                    assert!(draw.winner_score > draw.bound);
+                }
+            }
+        }
+        assert!(skips > 0, "certificate never admitted a skip at tau=0.25");
+    }
+
+    #[test]
+    fn batch_tiles_merges_and_pads() {
+        let (vocab, d) = (512, 8);
+        let w = toy_head(vocab, d, 21);
+        let mut st = SubvocabState::new(
+            &w,
+            vocab,
+            d,
+            SubvocabConfig { tile_budget: 2, slack: 0.0 },
+        );
+        st.observe_prompt(1, &[0, 1, 2]); // tile 0
+        st.observe_prompt(2, &[130, 131]); // tile 1
+        st.observe_token(2, 390); // tile 3
+        let tiles = st.batch_tiles(&[1, 2], SUB_TILE_SLOTS);
+        assert_eq!(tiles.len(), SUB_TILE_SLOTS);
+        assert_eq!(&tiles[..2], &[0, 1]);
+        assert_eq!(&tiles[2..], &[-1, -1]);
+        st.release(1);
+        let tiles = st.batch_tiles(&[2], SUB_TILE_SLOTS);
+        assert_eq!(&tiles[..2], &[1, 3]);
+    }
+}

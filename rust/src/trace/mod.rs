@@ -168,6 +168,15 @@ pub enum EventKind {
     /// Radix-cache blocks evicted this step (full level; per-step
     /// delta).
     RadixEvict { blocks: u64 },
+    /// One certified sub-vocabulary decode step whose skip was admitted
+    /// (DESIGN.md §16): `active` candidate tiles ran, `skipped` cold
+    /// tiles were proven unable to win the Gumbel-argmax.
+    /// Request-scoped, so lifecycle level.
+    SubvocabSkip { active: u64, skipped: u64 },
+    /// One sub-vocabulary decode step where the certificate could not
+    /// rule out the excluded tiles and the full-vocabulary pass ran at
+    /// the same Philox coordinates.  Request-scoped.
+    SubvocabFallback { active: u64, skipped: u64 },
 }
 
 impl EventKind {
@@ -193,6 +202,8 @@ impl EventKind {
             EventKind::KvCow { .. } => "kv_cow",
             EventKind::RadixAttach { .. } => "radix_attach",
             EventKind::RadixEvict { .. } => "radix_evict",
+            EventKind::SubvocabSkip { .. } => "subvocab_skip",
+            EventKind::SubvocabFallback { .. } => "subvocab_fallback",
         }
     }
 
@@ -262,6 +273,10 @@ impl EventKind {
             EventKind::Promote { count } => write!(out, "\"count\":{count}"),
             EventKind::RadixAttach { tokens } => {
                 write!(out, "\"tokens\":{tokens}")
+            }
+            EventKind::SubvocabSkip { active, skipped }
+            | EventKind::SubvocabFallback { active, skipped } => {
+                write!(out, "\"active\":{active},\"skipped\":{skipped}")
             }
         };
     }
@@ -340,6 +355,12 @@ pub struct DerivedCounters {
     pub rejects: u64,
     /// `dispatch` events.
     pub dispatches: u64,
+    /// `subvocab_skip` + `subvocab_fallback` events — mirrors counter
+    /// `subvocab_steps`.
+    pub subvocab_steps: u64,
+    /// `subvocab_fallback` events — mirrors counter
+    /// `subvocab_fallbacks`.
+    pub subvocab_fallbacks: u64,
 }
 
 impl DerivedCounters {
@@ -366,6 +387,11 @@ impl DerivedCounters {
             EventKind::Finish { .. } => self.finishes += 1,
             EventKind::Reject { .. } => self.rejects += 1,
             EventKind::Dispatch { .. } => self.dispatches += 1,
+            EventKind::SubvocabSkip { .. } => self.subvocab_steps += 1,
+            EventKind::SubvocabFallback { .. } => {
+                self.subvocab_steps += 1;
+                self.subvocab_fallbacks += 1;
+            }
             _ => {}
         }
     }
@@ -671,6 +697,8 @@ mod tests {
             affinity_rank: 0,
             spill: false,
         });
+        t.emit(9, 2, EventKind::SubvocabSkip { active: 2, skipped: 14 });
+        t.emit(9, 2, EventKind::SubvocabFallback { active: 2, skipped: 14 });
         let d = t.derived();
         assert_eq!(d.tokens, 4);
         // Chunk windows contribute nothing here: their row's final-chunk
@@ -686,6 +714,8 @@ mod tests {
         assert_eq!(d.finishes, 1);
         assert_eq!(d.rejects, 1);
         assert_eq!(d.dispatches, 1);
+        assert_eq!(d.subvocab_steps, 2);
+        assert_eq!(d.subvocab_fallbacks, 1);
     }
 
     #[test]

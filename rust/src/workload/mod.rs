@@ -50,6 +50,35 @@ impl LengthDist {
     }
 }
 
+/// Token-content distribution for generated prompt tokens.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TokenMode {
+    /// Uniform over the vocabulary (the historic default — bit-identical
+    /// draws to the pre-`TokenMode` generator).
+    Uniform,
+    /// Skewed-unigram (Zipf-ranked) emissions with exponent `s > 0`:
+    /// token id doubles as rank, so id `r` is drawn with probability
+    /// `∝ 1/(r+1)^s` — low ids are hot, concentrating traffic in the low
+    /// vocab tiles.  This is the workload shape the certified sub-vocab
+    /// decode head exists for (DESIGN.md §16): real LM unigram
+    /// distributions are Zipfian, uniform ones are its adversary.
+    Zipf { s: f64 },
+}
+
+/// Continuous bounded-Zipf inverse CDF over ranks `1..=vocab`, mapped to
+/// token ids `0..vocab`.  An O(1) approximation of the discrete Zipf draw
+/// (no per-call harmonic sums), monotone in `u` and exact at both ends.
+fn zipf_token(u: f64, vocab: usize, s: f64) -> i32 {
+    let v = vocab as f64;
+    let x = if (s - 1.0).abs() < 1e-9 {
+        // s = 1: CDF ~ ln(x)/ln(V).
+        (u * v.ln()).exp()
+    } else {
+        (u * (v.powf(1.0 - s) - 1.0) + 1.0).powf(1.0 / (1.0 - s))
+    };
+    ((x.floor() as i64) - 1).clamp(0, vocab as i64 - 1) as i32
+}
+
 /// Shared-prefix / multi-turn traffic shape (the workload automatic
 /// prefix caching exists for, DESIGN.md §10): `num_prefixes` distinct
 /// system prompts served to `users` concurrent users, each user pinned to
@@ -108,6 +137,13 @@ pub struct WorkloadGen {
     /// temperatures, and priorities are untouched for every request.
     /// Ignored in `prefix_mode`.
     pub long_prompt_every: Option<(usize, usize)>,
+    /// Prompt token-content distribution.  [`TokenMode::Uniform`]
+    /// (default) reproduces the historic generator bit-for-bit;
+    /// [`TokenMode::Zipf`] skews emissions toward low token ids.  Each
+    /// token still consumes exactly one draw from the same stream, so
+    /// flipping the mode changes token *values* only — arrivals, lengths,
+    /// budgets, temperatures, and priorities are untouched.
+    pub token_mode: TokenMode,
 }
 
 impl WorkloadGen {
@@ -123,6 +159,7 @@ impl WorkloadGen {
             priority_choices: Vec::new(),
             prefix_mode: None,
             long_prompt_every: None,
+            token_mode: TokenMode::Uniform,
         }
     }
 
@@ -131,7 +168,13 @@ impl WorkloadGen {
     }
 
     fn token(&self, stream: u32, i: u32, j: u32) -> i32 {
-        (self.u(stream, i, j) * self.vocab as f32) as i32 % self.vocab as i32
+        let u = self.u(stream, i, j);
+        match self.token_mode {
+            TokenMode::Uniform => {
+                (u * self.vocab as f32) as i32 % self.vocab as i32
+            }
+            TokenMode::Zipf { s } => zipf_token(u as f64, self.vocab, s),
+        }
     }
 
     /// The shared-prefix prompt of request `i` (see [`SharedPrefix`]).
@@ -423,6 +466,69 @@ mod tests {
                 // Non-designated prompts are bit-identical.
                 assert_eq!(a.prompt, b.prompt, "request {i} perturbed");
             }
+        }
+    }
+
+    #[test]
+    fn zipf_token_mode_skews_without_perturbing_other_streams() {
+        let base = WorkloadGen::new(23, 4.0, 2048).generate(60);
+        let mut g = WorkloadGen::new(23, 4.0, 2048);
+        g.token_mode = TokenMode::Zipf { s: 1.1 };
+        let skewed = g.generate(60);
+        let mut low = 0usize;
+        let mut total = 0usize;
+        for (a, b) in base.iter().zip(&skewed) {
+            // Token *values* are the only thing the mode may change.
+            assert_eq!(a.arrival_s, b.arrival_s);
+            assert_eq!(a.max_new_tokens, b.max_new_tokens);
+            assert_eq!(a.temperature, b.temperature);
+            assert_eq!(a.priority, b.priority);
+            assert_eq!(a.prompt.len(), b.prompt.len());
+            for &t in &b.prompt {
+                assert!((0..2048).contains(&t));
+                total += 1;
+                if t < 128 {
+                    low += 1;
+                }
+            }
+        }
+        // Under uniform draws the lowest 128-id tile holds 128/2048 =
+        // 6.25% of tokens; Zipf(s=1.1) over 2048 ranks puts the majority
+        // of mass there.  Demand a wide margin so the assertion is about
+        // skew, not noise.
+        let frac = low as f64 / total as f64;
+        assert!(frac > 0.4, "low-tile fraction {frac} not skewed");
+        // And the uniform baseline really is flat.
+        let base_low = base
+            .iter()
+            .flat_map(|r| &r.prompt)
+            .filter(|&&t| t < 128)
+            .count();
+        let base_total: usize = base.iter().map(|r| r.prompt.len()).sum();
+        assert!((base_low as f64 / base_total as f64) < 0.12);
+    }
+
+    #[test]
+    fn zipf_token_mode_is_deterministic_given_seed() {
+        let mk = || {
+            let mut g = WorkloadGen::new(29, 5.0, 512);
+            g.token_mode = TokenMode::Zipf { s: 1.3 };
+            g.generate(40)
+        };
+        let (a, b) = (mk(), mk());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival_s, y.arrival_s);
+            assert_eq!(x.prompt, y.prompt);
+        }
+        // Inverse CDF is exact at both ends and monotone in u.
+        assert_eq!(zipf_token(0.0, 2048, 1.1), 0);
+        assert_eq!(zipf_token(1.0, 2048, 1.1), 2047);
+        assert_eq!(zipf_token(0.0, 2048, 1.0), 0); // s = 1 branch
+        let mut prev = -1;
+        for k in 0..=100 {
+            let t = zipf_token(k as f64 / 100.0, 2048, 1.2);
+            assert!(t >= prev, "zipf inverse CDF not monotone");
+            prev = t;
         }
     }
 

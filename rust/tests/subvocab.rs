@@ -1,0 +1,277 @@
+//! Certified sub-vocabulary decode property suite (DESIGN.md §16).
+//!
+//! The load-bearing claim: whenever the exactness certificate admits a
+//! tile skip, the skipped-tile Gumbel-argmax equals the full-vocabulary
+//! argmax **bit-for-bit** — same Philox coordinates, same tie-breaking —
+//! and whenever it cannot, the fallback pass makes the sub-vocab head
+//! invisible.  CPU-only legs run always (host-side reference sampler);
+//! the engine leg is artifact-gated like the other integration suites.
+//!
+//! CI matrix contract: `FS_TEST_SUBVOCAB` (`0` disables) pins whether the
+//! sim/engine legs run with the sub-vocab head on — crossing on/off
+//! checks that serving output never depends on the setting (that IS the
+//! exactness contract at system level).
+
+use flashsampling::coordinator::{Engine, EngineConfig, Request, SamplingParams};
+use flashsampling::router::{EngineBackend, SimReplica, SimReplicaConfig};
+use flashsampling::sampling::{philox, Key};
+use flashsampling::subvocab::{
+    certified_sample, excluded_bound, full_argmax, CandidateSet, TileNorms,
+    SUB_TILE_V,
+};
+
+/// CI matrix override: sub-vocab head on unless `FS_TEST_SUBVOCAB=0`.
+fn subvocab_on() -> bool {
+    std::env::var("FS_TEST_SUBVOCAB").map_or(true, |v| v != "0")
+}
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("NOTE: artifacts/ missing; run `make artifacts`");
+        None
+    }
+}
+
+/// Skew-structured LM head, identical to the subvocab unit fixture:
+/// tile 0 carries hot rows (amplitude `a_i` in [0.45, 0.6] along the
+/// all-ones direction plus small noise), later tiles are pure noise.
+/// Isotropic rows would never admit a certified skip — Cauchy–Schwarz
+/// is loose by ~sqrt(d) for incoherent vectors.
+fn toy_head(vocab: usize, d: usize, seed: u64) -> Vec<f32> {
+    let key = Key::from_seed(seed);
+    let mut w = vec![0.0f32; vocab * d];
+    for i in 0..vocab {
+        let hot = i < SUB_TILE_V;
+        let a =
+            0.45 + 0.15 * philox::uniform_at(key, i as u32, d as u32, 5, 0);
+        for j in 0..d {
+            let n = philox::uniform_at(key, i as u32, j as u32, 5, 0) - 0.5;
+            w[i * d + j] = if hot { a + 0.25 * n } else { n };
+        }
+    }
+    w
+}
+
+/// Step-varying hidden state: a shared bias `b` in [-0.25, 1.25] along
+/// the all-ones direction plus unit-scale noise; steps with `b` near
+/// zero force full-vocab fallbacks.
+fn toy_hidden(d: usize, seed: u64, step: u32) -> Vec<f32> {
+    let key = Key::from_seed(seed);
+    let b = 1.5 * philox::uniform_at(key, d as u32, 0, 6, step) - 0.25;
+    (0..d)
+        .map(|j| b + philox::uniform_at(key, j as u32, 0, 6, step) - 0.5)
+        .collect()
+}
+
+/// The property in the ISSUE's words: whenever the bound admits skipping,
+/// the skipped-tile argmax equals the full-vocab argmax bit-for-bit, at
+/// unchanged Philox coordinates.  Randomized over heads, hidden states,
+/// steps, rows, temperatures, and candidate budgets; the run must
+/// actually admit a healthy number of skips or it certifies nothing.
+#[test]
+fn admitted_skips_equal_full_argmax_bit_for_bit() {
+    let (vocab, d) = (512, 32);
+    let mut skips = 0u32;
+    let mut fallbacks = 0u32;
+    for head_seed in 0..8u64 {
+        let w = toy_head(vocab, d, 1000 + head_seed);
+        let tn = TileNorms::from_lm_head(&w, vocab, d, SUB_TILE_V);
+        let key = Key::from_seed(2000 + head_seed);
+        for step in 0..60u32 {
+            let h = toy_hidden(d, 3000 + head_seed, step);
+            let row = (step % 4) as u32;
+            let tau = [0.25f32, 0.5, 1.0][(step % 3) as usize];
+            for budget in 1..=3usize {
+                let cands: Vec<u32> = (0..budget as u32).collect();
+                let draw = certified_sample(
+                    &w, vocab, d, &h, tau, &cands, &tn, 0.0, key, row, step,
+                );
+                let (oracle, best) =
+                    full_argmax(&w, vocab, d, &h, tau, key, row, step);
+                assert_eq!(
+                    draw.token, oracle,
+                    "head {head_seed} step {step} row {row} tau {tau} \
+                     budget {budget} (fallback={})",
+                    draw.fallback
+                );
+                if draw.fallback {
+                    fallbacks += 1;
+                } else {
+                    skips += 1;
+                    // An admitted skip means the candidate winner IS the
+                    // global winner — scores must agree bitwise too.
+                    assert_eq!(draw.winner_score.to_bits(), best.to_bits());
+                    assert!(draw.winner_score > draw.bound);
+                }
+            }
+        }
+    }
+    assert!(skips > 100, "only {skips} skips admitted — fixture too cold");
+    assert!(fallbacks > 0, "slack 0 never fell back — bound suspiciously loose");
+}
+
+/// The certificate bound must dominate every excluded row's perturbed
+/// score — on ragged vocabularies too (last tile shorter than
+/// `SUB_TILE_V`).
+#[test]
+fn excluded_bound_is_sound_on_ragged_vocab() {
+    let (vocab, d) = (450, 16); // 4 tiles, last one ragged
+    for trial in 0..6u64 {
+        let w = toy_head(vocab, d, 50 + trial);
+        let tn = TileNorms::from_lm_head(&w, vocab, d, SUB_TILE_V);
+        let key = Key::from_seed(60 + trial);
+        for step in 0..10u32 {
+            let h = toy_hidden(d, 70 + trial, step);
+            let h_norm = h.iter().map(|x| x * x).sum::<f32>().sqrt();
+            let included = [(trial % 4) as i32];
+            let bound =
+                excluded_bound(&tn, &included, h_norm, 0.5, key, 0, step);
+            for i in 0..vocab {
+                if (i / SUB_TILE_V) as i32 == included[0] {
+                    continue;
+                }
+                let y: f32 = w[i * d..(i + 1) * d]
+                    .iter()
+                    .zip(&h)
+                    .map(|(a, b)| a * b)
+                    .sum::<f32>()
+                    / 0.5;
+                let s = y + philox::gumbel_at(key, i as u32, 0, step);
+                assert!(
+                    s <= bound,
+                    "trial {trial} step {step} row {i}: {s} > bound {bound}"
+                );
+            }
+        }
+    }
+}
+
+/// Candidate maintenance feeds the certificate: a set mis-primed on cold
+/// tiles must fall back early (the certificate refuses — the hot tile is
+/// excluded and its norm bound dwarfs any cold winner), then online
+/// observations of its own emissions overtake the stale counts and the
+/// skip rate climbs, with every draw still equal to the oracle.
+#[test]
+fn online_candidate_set_warms_up_without_losing_exactness() {
+    let (vocab, d) = (512, 32);
+    let w = toy_head(vocab, d, 77);
+    let tn = TileNorms::from_lm_head(&w, vocab, d, SUB_TILE_V);
+    let key = Key::from_seed(78);
+    let h = toy_hidden(d, 79, 0);
+    let mut cs = CandidateSet::new(vocab, SUB_TILE_V);
+    // Stale prompt pinned on cold tiles 2 and 3: until ~step 150 the
+    // candidate list is [2, 3] and every step must fall back.
+    for _ in 0..150 {
+        cs.observe_prompt(&[260, 390]);
+    }
+    let (mut early_skips, mut late_skips) = (0u32, 0u32);
+    for step in 0..400u32 {
+        let cands = cs.candidates(2);
+        let draw = certified_sample(
+            &w, vocab, d, &h, 0.25, &cands, &tn, 0.0, key, 0, step,
+        );
+        let (oracle, _) = full_argmax(&w, vocab, d, &h, 0.25, key, 0, step);
+        assert_eq!(draw.token, oracle, "step {step}");
+        cs.observe(draw.token);
+        if step < 200 {
+            early_skips += !draw.fallback as u32;
+        } else {
+            late_skips += !draw.fallback as u32;
+        }
+    }
+    assert!(
+        late_skips >= early_skips,
+        "warm set skips ({late_skips}) fell below cold ({early_skips})"
+    );
+    assert!(late_skips > 0, "warm candidate set never admitted a skip");
+}
+
+/// System-level invariance, the `FS_TEST_SUBVOCAB` matrix leg: a
+/// `SimReplica` run with the sub-vocab event model per the env knob
+/// produces the exact token streams of a run with it off — the knob may
+/// only add trace events and counters, never change output.
+#[test]
+fn sim_replica_output_is_invariant_under_the_matrix_knob() {
+    let run = |subvocab: bool| {
+        let mut e = SimReplica::new(SimReplicaConfig {
+            subvocab,
+            ..Default::default()
+        });
+        for id in 0..5u64 {
+            let prompt: Vec<i32> =
+                (0..30).map(|j| (id as i32 * 11 + j) % 101).collect();
+            let req = Request::new(
+                id,
+                prompt,
+                SamplingParams { max_new_tokens: 4 + id as usize % 3, ..Default::default() },
+            );
+            let _ = e.submit(req).unwrap();
+        }
+        let mut done = Vec::new();
+        let mut idle = 0;
+        while e.pending() > 0 {
+            let step = e.step().unwrap();
+            if step.is_empty() {
+                idle += 1;
+                assert!(idle < 64, "sim livelock");
+            } else {
+                idle = 0;
+            }
+            done.extend(step);
+        }
+        done.sort_by_key(|c| c.id);
+        done
+    };
+    let knob = run(subvocab_on());
+    let off = run(false);
+    assert_eq!(knob.len(), off.len());
+    for (a, b) in knob.iter().zip(&off) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.tokens, b.tokens, "request {} diverged", a.id);
+        assert_eq!(a.finish, b.finish);
+    }
+}
+
+/// Engine leg (artifact-gated): serving output with the certified
+/// sub-vocab head per the matrix knob is bit-identical to the plain
+/// engine, and the fallback accounting shows up when the head is active.
+#[test]
+fn engine_tokens_are_bit_identical_with_subvocab_head() {
+    let Some(dir) = artifacts_dir() else { return };
+    let run = |subvocab: bool| {
+        let mut e = Engine::new(
+            &dir,
+            EngineConfig { subvocab, ..Default::default() },
+        )
+        .unwrap();
+        let active = e.subvocab_active();
+        for id in 0..6u64 {
+            let plen = 8 + (id as usize % 3) * 4;
+            let prompt: Vec<i32> =
+                (0..plen).map(|j| ((id as i32) * 7 + j as i32) % 50 + 1).collect();
+            e.submit(Request::new(
+                id,
+                prompt,
+                SamplingParams { max_new_tokens: 5, ..Default::default() },
+            ))
+            .unwrap();
+        }
+        let mut done = e.run_to_completion().unwrap();
+        done.sort_by_key(|c| c.id);
+        let steps = e.metrics.counters.get("subvocab_steps").copied().unwrap_or(0);
+        (done, active, steps)
+    };
+    let (base, base_active, base_steps) = run(false);
+    assert!(!base_active && base_steps == 0);
+    let (sub, sub_active, sub_steps) = run(subvocab_on());
+    for (a, b) in base.iter().zip(&sub) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.tokens, b.tokens, "request {} diverged", a.id);
+    }
+    if subvocab_on() && sub_active {
+        assert!(sub_steps > 0, "active head never took the sub path");
+    }
+}
